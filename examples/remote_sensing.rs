@@ -1,0 +1,54 @@
+//! Remote-sensing enhancement (Ali & Clausi [7]): CED as a feature
+//! extractor on noisy captures — quantified with the paper's own
+//! criteria: detection SNR (criterion 1) and localization via Pratt's
+//! FOM (criterion 2), across noise levels.
+//!
+//! Run: `cargo run --release --example remote_sensing`
+
+use canny_par::canny::{CannyParams, CannyPipeline};
+use canny_par::image::pgm;
+use canny_par::image::synth::{generate, Scene};
+use canny_par::metrics;
+use canny_par::scheduler::Pool;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let pool = Pool::new(4).unwrap();
+    let params = CannyParams { lo: 0.06, hi: 0.18, ..CannyParams::default() };
+    let (w, h) = (512, 512);
+
+    // Ground truth: the noise-free capture's edges.
+    let clean = generate(Scene::RemoteSensing { seed: 21, noise: 0.0 }, w, h);
+    let truth_out = CannyPipeline::tiled(&pool).detect(&clean, &params)?;
+    pgm::write_pgm(Path::new("target/figures/remote_clean.pgm"), &clean.to_u8())?;
+    pgm::write_pgm(
+        Path::new("target/figures/remote_truth_edges.pgm"),
+        &truth_out.edges.to_image(),
+    )?;
+
+    println!("noise σ | detection SNR | Pratt FOM | precision | recall | edges");
+    println!("--------+---------------+-----------+-----------+--------+------");
+    for noise in [0.02f32, 0.05, 0.08, 0.12] {
+        let noisy = generate(Scene::RemoteSensing { seed: 21, noise }, w, h);
+        let out = CannyPipeline::tiled(&pool).detect(&noisy, &params)?;
+        let snr = metrics::detection_snr(&out.nms_mag, &truth_out.edges);
+        let fom = metrics::pratt_fom(&out.edges, &truth_out.edges);
+        let (prec, rec) = metrics::precision_recall(&out.edges, &truth_out.edges, 1);
+        println!(
+            "  {noise:.2}  |     {snr:>6.2}    |   {fom:.3}   |   {prec:.3}   | {rec:.3}  | {}",
+            out.edges.count_edges()
+        );
+        if (noise - 0.08).abs() < 1e-6 {
+            pgm::write_pgm(Path::new("target/figures/remote_noisy.pgm"), &noisy.to_u8())?;
+            pgm::write_pgm(
+                Path::new("target/figures/remote_noisy_edges.pgm"),
+                &out.edges.to_image(),
+            )?;
+        }
+    }
+    println!("\npaper [7] claim: CED (thanks to the Gaussian stage) remains a reliable");
+    println!("feature extractor on remote-sensing images corrupted by point noise —");
+    println!("FOM/precision degrade gracefully with σ rather than collapsing.");
+    println!("images written to target/figures/remote_*.pgm");
+    Ok(())
+}

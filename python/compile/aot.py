@@ -1,0 +1,135 @@
+"""AOT bridge: lower every L2 entry point to HLO *text* + manifest.json.
+
+HLO text (NOT `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the rust `xla` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Run once at build time (`make artifacts`); the rust binary consumes
+artifacts/ and never touches python again.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.constants import GAUSS5, HALO, TAN22, TAN67
+
+# Tile configurations exported for the rust coordinator. "core" is the
+# interior the tile produces; inputs to canny_front are core + 2*HALO.
+TILE_CONFIGS = [
+    {"name": "t64", "core": [64, 64]},
+    {"name": "t128", "core": [128, 128]},
+    {"name": "t256", "core": [256, 256]},
+]
+
+# Stage artifacts are emitted for this tile only (stage-pipeline mode and
+# the per-stage benches run at one canonical size).
+STAGE_TILE = "t128"
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _f32(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jax.numpy.float32)
+
+
+def _lower_entries(core_h, core_w, stages):
+    """Yield (entry_name, lowered, input_shapes, output_shapes)."""
+    ph, pw = core_h + 2 * HALO, core_w + 2 * HALO
+    scal = _f32((1,))
+
+    yield (
+        "canny_front",
+        jax.jit(model.canny_front).lower(_f32((ph, pw)), scal, scal),
+        [[ph, pw], [1], [1]],
+        [[core_h, core_w], [core_h, core_w]],
+    )
+    if not stages:
+        return
+    # Stage shapes chain: padded -> -4 -> -2 -> -2 (matching HALO budget).
+    g_h, g_w = ph - 4, pw - 4
+    s_h, s_w = g_h - 2, g_w - 2
+    yield (
+        "gaussian_stage",
+        jax.jit(model.gaussian_stage).lower(_f32((ph, pw))),
+        [[ph, pw]],
+        [[g_h, g_w]],
+    )
+    yield (
+        "sobel_stage",
+        jax.jit(model.sobel_stage).lower(_f32((g_h, g_w))),
+        [[g_h, g_w]],
+        [[s_h, s_w], [s_h, s_w]],
+    )
+    yield (
+        "nms_stage",
+        jax.jit(model.nms_stage).lower(_f32((s_h, s_w)), _f32((s_h, s_w))),
+        [[s_h, s_w], [s_h, s_w]],
+        [[core_h, core_w]],
+    )
+    yield (
+        "threshold_stage",
+        jax.jit(model.threshold_stage).lower(_f32((core_h, core_w)), scal, scal),
+        [[core_h, core_w], [1], [1]],
+        [[core_h, core_w]],
+    )
+
+
+def build(out_dir: str, verbose: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "format": 1,
+        "halo": HALO,
+        "constants": {"gauss5": list(GAUSS5), "tan22": TAN22, "tan67": TAN67},
+        "tiles": [],
+    }
+    for cfg in TILE_CONFIGS:
+        core_h, core_w = cfg["core"]
+        tile_entry = {"name": cfg["name"], "core": cfg["core"], "entries": {}}
+        stages = cfg["name"] == STAGE_TILE
+        for name, lowered, in_shapes, out_shapes in _lower_entries(core_h, core_w, stages):
+            text = to_hlo_text(lowered)
+            fname = f"{name}_{cfg['name']}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            tile_entry["entries"][name] = {
+                "file": fname,
+                "inputs": in_shapes,
+                "outputs": out_shapes,
+                "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+            }
+            if verbose:
+                print(f"  wrote {fname}: {len(text)} chars, in={in_shapes} out={out_shapes}")
+        manifest["tiles"].append(tile_entry)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    if verbose:
+        print(f"  wrote manifest.json ({len(manifest['tiles'])} tile configs)")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+    build(args.out_dir, verbose=not args.quiet)
+
+
+if __name__ == "__main__":
+    main()

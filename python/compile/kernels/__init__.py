@@ -1,0 +1,27 @@
+"""L1: Pallas kernels for the Canny front-end hot-spots.
+
+Each kernel has a pure-jnp oracle in ref.py; pytest (python/tests/)
+asserts allclose between the two across hypothesis-generated shapes.
+"""
+
+from .constants import CLASS_NONE, CLASS_STRONG, CLASS_WEAK, GAUSS5, HALO, TAN22, TAN67
+from .gaussian import gauss_cols, gauss_rows, gaussian
+from .nms import nms
+from .sobel import sobel
+from .threshold import threshold
+
+__all__ = [
+    "CLASS_NONE",
+    "CLASS_STRONG",
+    "CLASS_WEAK",
+    "GAUSS5",
+    "HALO",
+    "TAN22",
+    "TAN67",
+    "gauss_cols",
+    "gauss_rows",
+    "gaussian",
+    "nms",
+    "sobel",
+    "threshold",
+]

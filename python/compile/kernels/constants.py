@@ -1,0 +1,40 @@
+"""Canonical numeric constants shared by the Pallas kernels, the pure-jnp
+oracle (ref.py) and the native Rust implementation (rust/src/canny/).
+
+These are THE definitions: the Rust side hardcodes the same decimal literals
+(see rust/src/canny/consts.rs); test_constants.py guards the contract.
+"""
+
+import math
+
+# --- 5-tap Gaussian, sigma = 1.4 (the classic Canny choice) ---------------
+GAUSS_SIGMA = 1.4
+
+
+def _gauss5_f32():
+    raw = [math.exp(-(k * k) / (2.0 * GAUSS_SIGMA * GAUSS_SIGMA)) for k in (-2, -1, 0, 1, 2)]
+    s = sum(raw)
+    # Round through f32 so every layer sees bit-identical taps.
+    import numpy as np
+
+    return tuple(float(np.float32(v / s)) for v in raw)
+
+
+GAUSS5 = _gauss5_f32()
+
+# --- Sobel direction quantization thresholds ------------------------------
+# bin 0 (E/W neighbours)   : |gy| <= TAN22 * |gx|
+# bin 2 (N/S neighbours)   : |gy| >  TAN67 * |gx|
+# bin 1 (NW/SE neighbours) : otherwise, gx * gy >= 0
+# bin 3 (NE/SW neighbours) : otherwise, gx * gy <  0
+TAN22 = 0.41421356  # tan(22.5 deg), f32-rounded
+TAN67 = 2.41421356  # tan(67.5 deg), f32-rounded
+
+# --- Stage halo budget -----------------------------------------------------
+# gaussian 5x5 separable -> radius 2; sobel 3x3 -> radius 1; nms -> radius 1
+HALO = 4
+
+# --- Hysteresis classes (produced by threshold kernel, consumed by rust) ---
+CLASS_NONE = 0.0
+CLASS_WEAK = 1.0
+CLASS_STRONG = 2.0

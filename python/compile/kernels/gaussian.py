@@ -1,0 +1,62 @@
+"""L1 Pallas kernels: separable 5-tap Gaussian blur (sigma = 1.4).
+
+The paper parallelizes the Gaussian noise filter with Cilk parallel
+patterns (map over pixels). On the TPU-shaped stack the same insight
+becomes: keep the tile resident in VMEM and express the filter as two
+1-D passes (rows then cols) so the inner loop is a pure VPU
+multiply-accumulate over contiguous lanes. One L3 tile == one Pallas
+block: the HBM<->VMEM schedule (which tile when) is owned by the Rust
+coordinator, so each kernel here runs grid-less on a single block.
+
+interpret=True everywhere: the CPU PJRT client cannot run Mosaic
+custom-calls; interpret mode lowers to plain HLO (see DESIGN.md).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .constants import GAUSS5
+
+
+def _gauss_rows_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    w_out = o_ref.shape[1]
+    acc = jnp.float32(GAUSS5[0]) * x[:, 0:w_out]
+    for k in range(1, 5):
+        acc = acc + jnp.float32(GAUSS5[k]) * x[:, k : k + w_out]
+    o_ref[...] = acc
+
+
+def _gauss_cols_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    h_out = o_ref.shape[0]
+    acc = jnp.float32(GAUSS5[0]) * x[0:h_out, :]
+    for k in range(1, 5):
+        acc = acc + jnp.float32(GAUSS5[k]) * x[k : k + h_out, :]
+    o_ref[...] = acc
+
+
+def gauss_rows(x):
+    """Horizontal 5-tap Gaussian pass. (H, W) -> (H, W-4)."""
+    h, w = x.shape
+    return pl.pallas_call(
+        _gauss_rows_kernel,
+        out_shape=jax.ShapeDtypeStruct((h, w - 4), x.dtype),
+        interpret=True,
+    )(x)
+
+
+def gauss_cols(x):
+    """Vertical 5-tap Gaussian pass. (H, W) -> (H-4, W)."""
+    h, w = x.shape
+    return pl.pallas_call(
+        _gauss_cols_kernel,
+        out_shape=jax.ShapeDtypeStruct((h - 4, w), x.dtype),
+        interpret=True,
+    )(x)
+
+
+def gaussian(x):
+    """Separable 5x5 Gaussian blur. (H, W) -> (H-4, W-4)."""
+    return gauss_cols(gauss_rows(x))

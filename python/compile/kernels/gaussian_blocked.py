@@ -1,0 +1,74 @@
+"""L1 Pallas kernel, gridded variant: the row-pass Gaussian with an
+explicit HBM<->VMEM schedule via BlockSpec.
+
+The single-block kernels in gaussian.py treat one L3 tile as one VMEM
+block (the Rust coordinator owns the outer schedule). This variant
+shows the other point in the design space — the kernel itself tiles a
+larger image over a 1-D grid of row blocks, the way a CUDA
+implementation would use threadblocks (DESIGN.md §Hardware-Adaptation):
+
+  * grid = ceil(H / BLOCK_ROWS)
+  * input BlockSpec: (BLOCK_ROWS, W) slabs, index_map i -> (i, 0)
+  * output BlockSpec: same slabs of the (H, W-4) result
+
+The row pass has no vertical halo, so row-slab blocking needs no
+overlap — the natural decomposition, and the reason the separable
+formulation maps well onto both threadblocks and VMEM slabs. The
+vertical pass would need a +4-row halo per slab; the production path
+keeps whole-tile blocks instead (tile + halo already fits VMEM:
+136*136*4 B = 74 KiB << 16 MiB).
+
+Used by the VMEM-budget analysis in DESIGN.md and tested against the
+same oracle as the plain kernel. Not wired into the AOT artifacts.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .constants import GAUSS5
+
+BLOCK_ROWS = 8
+
+
+def _gauss_rows_block_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    w_out = o_ref.shape[1]
+    acc = jnp.float32(GAUSS5[0]) * x[:, 0:w_out]
+    for k in range(1, 5):
+        acc = acc + jnp.float32(GAUSS5[k]) * x[:, k : k + w_out]
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=())
+def gauss_rows_blocked(x):
+    """Horizontal 5-tap Gaussian with a row-slab grid.
+
+    (H, W) -> (H, W-4); H must be a multiple of BLOCK_ROWS (the AOT
+    shapes are; arbitrary H falls back to the single-block kernel).
+    """
+    h, w = x.shape
+    if h % BLOCK_ROWS != 0:
+        from .gaussian import gauss_rows
+
+        return gauss_rows(x)
+    grid = h // BLOCK_ROWS
+    return pl.pallas_call(
+        _gauss_rows_block_kernel,
+        out_shape=jax.ShapeDtypeStruct((h, w - 4), x.dtype),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((BLOCK_ROWS, w), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, w - 4), lambda i: (i, 0)),
+        interpret=True,
+    )(x)
+
+
+def vmem_bytes_per_block(w: int, dtype_bytes: int = 4) -> int:
+    """VMEM working set of one grid step: input slab + output slab.
+
+    The DESIGN.md §Perf budget check: must stay well under ~16 MiB/core
+    on a real TPU for double-buffering headroom.
+    """
+    return BLOCK_ROWS * w * dtype_bytes + BLOCK_ROWS * (w - 4) * dtype_bytes

@@ -1,0 +1,95 @@
+"""Pure-jnp oracle for every Pallas kernel (L1) and the fused front (L2).
+
+This module is the numerical ground truth the Pallas kernels are tested
+against (python/tests/) and the contract the native Rust path mirrors.
+No pallas imports here — plain jax.numpy only.
+"""
+
+import jax.numpy as jnp
+
+from .constants import GAUSS5, TAN22, TAN67
+
+
+def gauss_rows_ref(x):
+    """Horizontal 5-tap Gaussian. (H, W) -> (H, W-4)."""
+    h, w = x.shape
+    acc = jnp.zeros((h, w - 4), dtype=x.dtype)
+    for k in range(5):
+        acc = acc + jnp.float32(GAUSS5[k]) * x[:, k : k + w - 4]
+    return acc
+
+
+def gauss_cols_ref(x):
+    """Vertical 5-tap Gaussian. (H, W) -> (H-4, W)."""
+    h, w = x.shape
+    acc = jnp.zeros((h - 4, w), dtype=x.dtype)
+    for k in range(5):
+        acc = acc + jnp.float32(GAUSS5[k]) * x[k : k + h - 4, :]
+    return acc
+
+
+def gaussian_ref(x):
+    """Separable 5x5 Gaussian blur. (H, W) -> (H-4, W-4)."""
+    return gauss_cols_ref(gauss_rows_ref(x))
+
+
+def sobel_ref(x):
+    """3x3 Sobel gradient magnitude + quantized direction.
+
+    (H, W) -> (mag, dirc) each (H-2, W-2); dirc in {0., 1., 2., 3.}:
+      0 -> compare E/W, 1 -> NW/SE, 2 -> N/S, 3 -> NE/SW.
+    """
+    h, w = x.shape
+
+    def p(di, dj):
+        return x[di : di + h - 2, dj : dj + w - 2]
+
+    gx = (p(0, 2) - p(0, 0)) + 2.0 * (p(1, 2) - p(1, 0)) + (p(2, 2) - p(2, 0))
+    gy = (p(0, 0) + 2.0 * p(0, 1) + p(0, 2)) - (p(2, 0) + 2.0 * p(2, 1) + p(2, 2))
+    mag = jnp.sqrt(gx * gx + gy * gy)
+    adx = jnp.abs(gx)
+    ady = jnp.abs(gy)
+    b0 = ady <= jnp.float32(TAN22) * adx
+    b2 = ady > jnp.float32(TAN67) * adx
+    same = gx * gy >= 0.0
+    dirc = jnp.where(b0, 0.0, jnp.where(b2, 2.0, jnp.where(same, 1.0, 3.0)))
+    return mag, dirc.astype(x.dtype)
+
+
+def nms_ref(mag, dirc):
+    """Non-maximum suppression. (H, W)x2 -> (H-2, W-2).
+
+    Keeps the centre magnitude iff it is >= both neighbours along the
+    quantized gradient direction (ties keep: deterministic + matches rust).
+    """
+    h, w = mag.shape
+    m = mag[1 : h - 1, 1 : w - 1]
+    d = dirc[1 : h - 1, 1 : w - 1]
+
+    def nb(di, dj):
+        return mag[1 + di : h - 1 + di, 1 + dj : w - 1 + dj]
+
+    n1 = jnp.where(
+        d == 0.0, nb(0, -1), jnp.where(d == 2.0, nb(-1, 0), jnp.where(d == 1.0, nb(-1, -1), nb(-1, 1)))
+    )
+    n2 = jnp.where(
+        d == 0.0, nb(0, 1), jnp.where(d == 2.0, nb(1, 0), jnp.where(d == 1.0, nb(1, 1), nb(1, -1)))
+    )
+    keep = (m >= n1) & (m >= n2)
+    return jnp.where(keep, m, 0.0).astype(mag.dtype)
+
+
+def threshold_ref(m, lo, hi):
+    """Double threshold -> class map {0: none, 1: weak, 2: strong}."""
+    return jnp.where(m >= hi, 2.0, jnp.where(m >= lo, 1.0, 0.0)).astype(m.dtype)
+
+
+def canny_front_ref(x, lo, hi):
+    """Fused Canny front-end (everything before hysteresis connectivity).
+
+    (H+8, W+8) padded tile -> (class (H, W), nms-magnitude (H, W)).
+    """
+    g = gaussian_ref(x)
+    mag, dirc = sobel_ref(g)
+    nm = nms_ref(mag, dirc)
+    return threshold_ref(nm, lo, hi), nm

@@ -1,0 +1,50 @@
+"""L1 Pallas kernel: fused 3x3 Sobel gradient + magnitude + direction
+quantization.
+
+The paper's step 2 computes (Gx, Gy), gradient strength and direction in
+parallel. Here the whole step is ONE fused kernel: nine shifted reads of
+the VMEM-resident tile, two MAC chains for gx/gy, rsqrt-free magnitude
+and a branch-free direction quantization (tangent comparisons instead of
+atan2 — deterministic and far cheaper on the VPU; see
+DESIGN.md §Hardware-Adaptation).
+
+Direction encoding (contract with nms + rust): 0 = E/W, 1 = NW/SE,
+2 = N/S, 3 = NE/SW.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .constants import TAN22, TAN67
+
+
+def _sobel_kernel(x_ref, mag_ref, dir_ref):
+    x = x_ref[...]
+    h_out, w_out = mag_ref.shape
+
+    def p(di, dj):
+        return x[di : di + h_out, dj : dj + w_out]
+
+    gx = (p(0, 2) - p(0, 0)) + 2.0 * (p(1, 2) - p(1, 0)) + (p(2, 2) - p(2, 0))
+    gy = (p(0, 0) + 2.0 * p(0, 1) + p(0, 2)) - (p(2, 0) + 2.0 * p(2, 1) + p(2, 2))
+    mag_ref[...] = jnp.sqrt(gx * gx + gy * gy)
+    adx = jnp.abs(gx)
+    ady = jnp.abs(gy)
+    b0 = ady <= jnp.float32(TAN22) * adx
+    b2 = ady > jnp.float32(TAN67) * adx
+    same = gx * gy >= 0.0
+    dir_ref[...] = jnp.where(b0, 0.0, jnp.where(b2, 2.0, jnp.where(same, 1.0, 3.0))).astype(
+        x.dtype
+    )
+
+
+def sobel(x):
+    """Fused Sobel. (H, W) -> (mag, dirc), each (H-2, W-2)."""
+    h, w = x.shape
+    out = jax.ShapeDtypeStruct((h - 2, w - 2), x.dtype)
+    return pl.pallas_call(
+        _sobel_kernel,
+        out_shape=(out, out),
+        interpret=True,
+    )(x)

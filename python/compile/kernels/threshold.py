@@ -1,0 +1,30 @@
+"""L1 Pallas kernel: double-threshold classification.
+
+Paper step 4 splits into (a) the per-pixel double threshold — trivially
+parallel, done here — and (b) the connectivity walk, which the paper
+deliberately leaves serial (Amdahl) and which lives in
+rust/src/canny/hysteresis.rs on the L3 side.
+
+Class map contract: 0 = suppressed, 1 = weak (keep iff connected to a
+strong pixel), 2 = strong.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _threshold_kernel(m_ref, lo_ref, hi_ref, o_ref):
+    m = m_ref[...]
+    lo = lo_ref[0]
+    hi = hi_ref[0]
+    o_ref[...] = jnp.where(m >= hi, 2.0, jnp.where(m >= lo, 1.0, 0.0)).astype(m.dtype)
+
+
+def threshold(m, lo, hi):
+    """Double threshold. m: (H, W); lo, hi: shape-(1,) f32 -> (H, W) classes."""
+    return pl.pallas_call(
+        _threshold_kernel,
+        out_shape=jax.ShapeDtypeStruct(m.shape, m.dtype),
+        interpret=True,
+    )(m, lo, hi)

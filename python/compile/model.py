@@ -1,0 +1,54 @@
+"""L2: the JAX compute graph for the Canny front-end, calling the L1
+Pallas kernels so everything lowers into one HLO module per entry point.
+
+Entry points (all shapes fixed at lowering time by aot.py):
+
+  canny_front(x, lo, hi)   (H+8, W+8), (1,), (1,) -> (class (H,W), nms (H,W))
+      The fused per-tile front-end the Rust hot path executes.
+  gaussian_stage(x)        (H, W) -> (H-4, W-4)
+  sobel_stage(g)           (H, W) -> (mag, dirc) each (H-2, W-2)
+  nms_stage(mag, dirc)     (H, W) x2 -> (H-2, W-2)
+  threshold_stage(m, lo, hi)  (H, W) -> (H, W)
+      Individual stages for the stage-pipeline execution mode and the
+      per-stage benches (paper §2.2.1 steps 1-4a).
+
+Hysteresis *connectivity* (step 4b) is deliberately absent: the paper
+keeps it serial on the CPU side; it lives in rust/src/canny/hysteresis.rs.
+"""
+
+from .kernels import gauss_cols, gauss_rows, nms, sobel, threshold
+
+# Total one-side halo consumed by gaussian (2) + sobel (1) + nms (1).
+HALO = 4
+
+
+def gaussian_stage(x):
+    """Separable Gaussian blur stage. (H, W) -> (H-4, W-4)."""
+    return gauss_cols(gauss_rows(x))
+
+
+def sobel_stage(g):
+    """Sobel gradient stage. (H, W) -> ((H-2, W-2) mag, (H-2, W-2) dirc)."""
+    return sobel(g)
+
+
+def nms_stage(mag, dirc):
+    """Non-maximum suppression stage. (H, W) x2 -> (H-2, W-2)."""
+    return nms(mag, dirc)
+
+
+def threshold_stage(m, lo, hi):
+    """Double-threshold stage. (H, W) -> (H, W) class map."""
+    return threshold(m, lo, hi)
+
+
+def canny_front(x, lo, hi):
+    """Fused Canny front-end over one padded tile.
+
+    x: (H+8, W+8) f32 padded tile; lo, hi: shape-(1,) f32 thresholds.
+    Returns (class_map (H, W), nms_magnitude (H, W)).
+    """
+    g = gaussian_stage(x)
+    mag, dirc = sobel_stage(g)
+    nm = nms_stage(mag, dirc)
+    return threshold_stage(nm, lo, hi), nm

@@ -1,0 +1,25 @@
+"""Shared pytest fixtures: deterministic RNG + hypothesis profile tuned
+for interpret-mode Pallas (slow per-example, so fewer examples)."""
+
+import os
+import sys
+
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, settings
+
+# Allow `pytest python/tests` from the repo root as well as `cd python`.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+settings.register_profile(
+    "pallas",
+    max_examples=12,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+settings.load_profile("pallas")
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0xC0FFEE)

@@ -1,0 +1,43 @@
+"""Guard the cross-language numeric contract (python <-> rust)."""
+
+import math
+
+import numpy as np
+
+from compile.kernels.constants import GAUSS5, HALO, TAN22, TAN67
+
+# rust/src/canny/consts.rs hardcodes these very literals; if this test
+# moves, the rust side must move with it.
+RUST_GAUSS5 = (0.11020945757627487, 0.23691201210021973, 0.3057570457458496)
+
+
+def test_gauss5_normalized():
+    assert abs(sum(GAUSS5) - 1.0) < 1e-6
+
+
+def test_gauss5_symmetric():
+    assert GAUSS5[0] == GAUSS5[4]
+    assert GAUSS5[1] == GAUSS5[3]
+
+
+def test_gauss5_values_match_rust_contract():
+    assert np.float32(GAUSS5[0]) == np.float32(RUST_GAUSS5[0])
+    assert np.float32(GAUSS5[1]) == np.float32(RUST_GAUSS5[1])
+    assert np.float32(GAUSS5[2]) == np.float32(RUST_GAUSS5[2])
+
+
+def test_gauss5_formula():
+    raw = [math.exp(-(k * k) / (2 * 1.4**2)) for k in (-2, -1, 0, 1, 2)]
+    s = sum(raw)
+    for k in range(5):
+        assert abs(GAUSS5[k] - raw[k] / s) < 1e-7
+
+
+def test_tan_thresholds():
+    assert abs(TAN22 - math.tan(math.radians(22.5))) < 1e-7
+    assert abs(TAN67 - math.tan(math.radians(67.5))) < 1e-7
+
+
+def test_halo_budget():
+    # gaussian(2) + sobel(1) + nms(1)
+    assert HALO == 4

@@ -1,0 +1,57 @@
+"""Gridded (BlockSpec) Gaussian row pass == oracle, plus VMEM budget."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given
+from hypothesis import strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import ref
+from compile.kernels.gaussian_blocked import (
+    BLOCK_ROWS,
+    gauss_rows_blocked,
+    vmem_bytes_per_block,
+)
+
+
+def test_matches_ref_on_block_multiple(rng):
+    x = jnp.asarray(rng.random((64, 96), dtype=np.float32))
+    assert_allclose(
+        np.asarray(gauss_rows_blocked(x)), np.asarray(ref.gauss_rows_ref(x)), rtol=1e-6
+    )
+
+
+def test_matches_plain_kernel(rng):
+    from compile.kernels import gauss_rows
+
+    x = jnp.asarray(rng.random((136, 136), dtype=np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(gauss_rows_blocked(x)), np.asarray(gauss_rows(x))
+    )
+
+
+def test_fallback_on_odd_height(rng):
+    x = jnp.asarray(rng.random((BLOCK_ROWS * 2 + 3, 40), dtype=np.float32))
+    assert_allclose(
+        np.asarray(gauss_rows_blocked(x)), np.asarray(ref.gauss_rows_ref(x)), rtol=1e-6
+    )
+
+
+@given(
+    hb=st.integers(min_value=1, max_value=8),
+    w=st.integers(min_value=16, max_value=160),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_blocked_prop(hb, w, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.random((hb * BLOCK_ROWS, w), dtype=np.float32))
+    assert_allclose(
+        np.asarray(gauss_rows_blocked(x)), np.asarray(ref.gauss_rows_ref(x)), rtol=1e-5
+    )
+
+
+def test_vmem_budget_for_aot_shapes():
+    # One slab of the largest AOT tile must sit far below a TPU core's
+    # ~16 MiB VMEM (leave >100x headroom for double buffering).
+    for padded_w in (72, 136, 264):
+        assert vmem_bytes_per_block(padded_w) < 16 * 1024 * 1024 / 100

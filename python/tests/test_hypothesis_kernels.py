@@ -1,0 +1,71 @@
+"""Hypothesis sweep: kernel == oracle over arbitrary shapes and value
+ranges (the mandated shape/dtype property sweep for the L1 kernels)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import gaussian, nms, sobel, threshold
+from compile.kernels import ref
+
+dims = st.integers(min_value=9, max_value=72)
+seeds = st.integers(min_value=0, max_value=2**32 - 1)
+scales = st.sampled_from([1.0, 255.0, 1e-3])
+
+
+def _img(seed, h, w, scale):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.random((h, w), dtype=np.float32) * np.float32(scale))
+
+
+@given(h=dims, w=dims, seed=seeds, scale=scales)
+def test_gaussian_prop(h, w, seed, scale):
+    x = _img(seed, h, w, scale)
+    assert_allclose(
+        np.asarray(gaussian(x)), np.asarray(ref.gaussian_ref(x)), rtol=1e-5, atol=1e-6 * scale
+    )
+
+
+@given(h=dims, w=dims, seed=seeds, scale=scales)
+def test_sobel_prop(h, w, seed, scale):
+    x = _img(seed, h, w, scale)
+    mag, dirc = sobel(x)
+    rmag, rdir = ref.sobel_ref(x)
+    assert_allclose(np.asarray(mag), np.asarray(rmag), rtol=1e-5, atol=1e-6 * scale)
+    np.testing.assert_array_equal(np.asarray(dirc), np.asarray(rdir))
+
+
+@given(h=dims, w=dims, seed=seeds)
+def test_nms_prop(h, w, seed):
+    x = _img(seed, h, w, 1.0)
+    mag, dirc = ref.sobel_ref(x)
+    assert_allclose(
+        np.asarray(nms(mag, dirc)), np.asarray(ref.nms_ref(mag, dirc)), rtol=1e-6, atol=1e-7
+    )
+
+
+@given(h=dims, w=dims, seed=seeds, lo=st.floats(0.01, 0.5), hi=st.floats(0.5, 2.0))
+def test_threshold_prop(h, w, seed, lo, hi):
+    m = _img(seed, h, w, 2.0)
+    lo_a = jnp.asarray([lo], dtype=jnp.float32)
+    hi_a = jnp.asarray([hi], dtype=jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(threshold(m, lo_a, hi_a)),
+        np.asarray(ref.threshold_ref(m, np.float32(lo), np.float32(hi))),
+    )
+
+
+@given(h=dims, w=dims, seed=seeds)
+@settings(max_examples=8)
+def test_nms_output_sparser_than_input(h, w, seed):
+    """NMS never increases the number of non-zero pixels (it suppresses)."""
+    x = _img(seed, h, w, 1.0)
+    mag, dirc = ref.sobel_ref(x)
+    out = np.asarray(nms(mag, dirc))
+    inner = np.asarray(mag)[1:-1, 1:-1]
+    assert (out > 0).sum() <= (inner > 0).sum()
+    # And every surviving value equals its input magnitude.
+    mask = out > 0
+    np.testing.assert_array_equal(out[mask], inner[mask])

@@ -1,0 +1,120 @@
+"""CORE correctness signal: every Pallas kernel == its pure-jnp oracle,
+exactly (interpret mode executes the same jnp ops, so we demand bitwise
+or near-bitwise agreement)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile.kernels import gauss_cols, gauss_rows, gaussian, nms, sobel, threshold
+from compile.kernels import ref
+
+SHAPES = [(16, 16), (24, 40), (136, 136), (33, 17)]
+
+
+def _img(rng, shape):
+    return jnp.asarray(rng.random(shape, dtype=np.float32))
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_gauss_rows_matches_ref(rng, shape):
+    x = _img(rng, shape)
+    assert_allclose(np.asarray(gauss_rows(x)), np.asarray(ref.gauss_rows_ref(x)), rtol=1e-6)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_gauss_cols_matches_ref(rng, shape):
+    x = _img(rng, shape)
+    assert_allclose(np.asarray(gauss_cols(x)), np.asarray(ref.gauss_cols_ref(x)), rtol=1e-6)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_gaussian_matches_ref(rng, shape):
+    x = _img(rng, shape)
+    assert_allclose(np.asarray(gaussian(x)), np.asarray(ref.gaussian_ref(x)), rtol=1e-6)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_sobel_matches_ref(rng, shape):
+    x = _img(rng, shape)
+    mag, dirc = sobel(x)
+    rmag, rdir = ref.sobel_ref(x)
+    assert_allclose(np.asarray(mag), np.asarray(rmag), rtol=1e-6, atol=1e-7)
+    np.testing.assert_array_equal(np.asarray(dirc), np.asarray(rdir))
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_nms_matches_ref(rng, shape):
+    x = _img(rng, shape)
+    mag, dirc = ref.sobel_ref(x)
+    assert_allclose(
+        np.asarray(nms(mag, dirc)), np.asarray(ref.nms_ref(mag, dirc)), rtol=1e-6, atol=1e-7
+    )
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_threshold_matches_ref(rng, shape):
+    m = _img(rng, shape) * 4.0
+    lo = jnp.asarray([0.4], dtype=jnp.float32)
+    hi = jnp.asarray([1.2], dtype=jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(threshold(m, lo, hi)), np.asarray(ref.threshold_ref(m, 0.4, 1.2))
+    )
+
+
+def test_gaussian_preserves_constant(rng):
+    # Normalized taps: blurring a constant image is the identity.
+    x = jnp.full((32, 32), 3.25, dtype=jnp.float32)
+    out = gaussian(x)
+    assert_allclose(np.asarray(out), np.full((28, 28), 3.25, dtype=np.float32), rtol=1e-6)
+
+
+def test_sobel_flat_image_zero_everything(rng):
+    x = jnp.full((20, 20), 0.5, dtype=jnp.float32)
+    mag, dirc = sobel(x)
+    np.testing.assert_array_equal(np.asarray(mag), np.zeros((18, 18), np.float32))
+    # gx = gy = 0 -> bin 0 by convention (ady <= t*adx with both 0).
+    np.testing.assert_array_equal(np.asarray(dirc), np.zeros((18, 18), np.float32))
+
+
+def test_sobel_vertical_edge_is_bin0(rng):
+    # A vertical step edge has a horizontal gradient -> E/W comparisons.
+    x = jnp.concatenate(
+        [jnp.zeros((16, 8), jnp.float32), jnp.ones((16, 8), jnp.float32)], axis=1
+    )
+    mag, dirc = sobel(x)
+    col = np.asarray(mag)[:, 6]  # the edge column in the valid region
+    assert (col > 0).all()
+    assert (np.asarray(dirc)[:, 6] == 0.0).all()
+
+
+def test_sobel_horizontal_edge_is_bin2(rng):
+    x = jnp.concatenate(
+        [jnp.zeros((8, 16), jnp.float32), jnp.ones((8, 16), jnp.float32)], axis=0
+    )
+    mag, dirc = sobel(x)
+    row = np.asarray(mag)[6, :]
+    assert (row > 0).all()
+    assert (np.asarray(dirc)[6, :] == 2.0).all()
+
+
+def test_nms_thins_ramp_to_single_line(rng):
+    # Gradient magnitude peaked on one column must survive only there.
+    mag = np.zeros((10, 10), np.float32)
+    mag[:, 4] = 2.0
+    mag[:, 3] = 1.0
+    mag[:, 5] = 1.0
+    dirc = np.zeros((10, 10), np.float32)  # bin 0: compare E/W
+    out = np.asarray(nms(jnp.asarray(mag), jnp.asarray(dirc)))
+    assert (out[:, 3] == 2.0).all()  # column 4 in full coords -> 3 in interior
+    assert (out[:, 2] == 0.0).all()
+    assert (out[:, 4] == 0.0).all()
+
+
+def test_threshold_classes_exhaustive():
+    m = jnp.asarray([[0.0, 0.39999, 0.4, 1.19999, 1.2, 5.0]], dtype=jnp.float32)
+    lo = jnp.asarray([0.4], dtype=jnp.float32)
+    hi = jnp.asarray([1.2], dtype=jnp.float32)
+    out = np.asarray(threshold(m, lo, hi))[0]
+    np.testing.assert_array_equal(out, [0.0, 0.0, 1.0, 1.0, 2.0, 2.0])

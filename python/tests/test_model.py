@@ -1,0 +1,88 @@
+"""L2 model tests: fused front == oracle composition, shape/halo algebra,
+determinism across jit re-traces."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels import ref
+
+LO, HI = 0.08, 0.2
+
+
+def _padded(rng, core_h, core_w):
+    return jnp.asarray(
+        rng.random((core_h + 2 * model.HALO, core_w + 2 * model.HALO), dtype=np.float32)
+    )
+
+
+def _scal(v):
+    return jnp.asarray([v], dtype=jnp.float32)
+
+
+@pytest.mark.parametrize("core", [(16, 16), (32, 24), (64, 64)])
+def test_canny_front_matches_ref(rng, core):
+    x = _padded(rng, *core)
+    cls, nm = model.canny_front(x, _scal(LO), _scal(HI))
+    rcls, rnm = ref.canny_front_ref(x, np.float32(LO), np.float32(HI))
+    assert cls.shape == core and nm.shape == core
+    assert_allclose(np.asarray(nm), np.asarray(rnm), rtol=1e-5, atol=1e-7)
+    np.testing.assert_array_equal(np.asarray(cls), np.asarray(rcls))
+
+
+def test_halo_algebra(rng):
+    """Stages shrink padded (H+8,W+8) -> -4 -> -2 -> -2 -> (H,W)."""
+    x = _padded(rng, 20, 28)
+    g = model.gaussian_stage(x)
+    assert g.shape == (24, 32)
+    mag, dirc = model.sobel_stage(g)
+    assert mag.shape == dirc.shape == (22, 30)
+    nm = model.nms_stage(mag, dirc)
+    assert nm.shape == (20, 28)
+    cls = model.threshold_stage(nm, _scal(LO), _scal(HI))
+    assert cls.shape == (20, 28)
+
+
+def test_stagewise_equals_fused(rng):
+    x = _padded(rng, 24, 24)
+    g = model.gaussian_stage(x)
+    mag, dirc = model.sobel_stage(g)
+    nm = model.nms_stage(mag, dirc)
+    cls = model.threshold_stage(nm, _scal(LO), _scal(HI))
+    fcls, fnm = model.canny_front(x, _scal(LO), _scal(HI))
+    np.testing.assert_array_equal(np.asarray(cls), np.asarray(fcls))
+    np.testing.assert_array_equal(np.asarray(nm), np.asarray(fnm))
+
+
+def test_jit_deterministic(rng):
+    x = _padded(rng, 16, 16)
+    f = jax.jit(model.canny_front)
+    a1, b1 = f(x, _scal(LO), _scal(HI))
+    a2, b2 = f(x, _scal(LO), _scal(HI))
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+    np.testing.assert_array_equal(np.asarray(b1), np.asarray(b2))
+
+
+def test_tiling_consistency(rng):
+    """Running the front on two overlapping padded tiles gives the same
+    interior as running it on the full image — the invariant the L3 tile
+    scheduler relies on."""
+    core, halo = 16, model.HALO
+    full = jnp.asarray(rng.random((2 * core + 2 * halo, core + 2 * halo), dtype=np.float32))
+    cls_full, _ = model.canny_front(full, _scal(LO), _scal(HI))
+    top = full[: core + 2 * halo, :]
+    bot = full[core:, :]
+    cls_top, _ = model.canny_front(top, _scal(LO), _scal(HI))
+    cls_bot, _ = model.canny_front(bot, _scal(LO), _scal(HI))
+    np.testing.assert_array_equal(np.asarray(cls_full)[:core], np.asarray(cls_top))
+    np.testing.assert_array_equal(np.asarray(cls_full)[core:], np.asarray(cls_bot))
+
+
+def test_class_map_values(rng):
+    x = _padded(rng, 16, 16)
+    cls, _ = model.canny_front(x, _scal(LO), _scal(HI))
+    vals = np.unique(np.asarray(cls))
+    assert set(vals.tolist()) <= {0.0, 1.0, 2.0}

@@ -1,0 +1,71 @@
+//! §2.2.1 Amdahl analysis: the paper's asymmetric-multicore speedup
+//! equation evaluated against the measured pipeline (serial hysteresis
+//! as the 1-f), plus model curves showing when the paper's recommended
+//! asymmetric design wins.
+//!
+//! Run: `cargo bench --bench amdahl_model`
+
+use canny_par::amdahl::{
+    best_asymmetric_r, curve, fit_parallel_fraction, speedup_asymmetric, speedup_symmetric,
+};
+use canny_par::bench::Table;
+use canny_par::canny::{CannyParams, CannyPipeline};
+use canny_par::coordinator::RunReport;
+use canny_par::image::synth::{generate, Scene};
+use canny_par::scheduler::Pool;
+use canny_par::simsched::simulate;
+
+fn main() {
+    // Measured parallel fraction from the real pipeline.
+    let img = generate(Scene::Shapes { seed: 7 }, 1024, 1024);
+    let pool = Pool::new(2).unwrap();
+    let params = CannyParams { tile: 128, ..CannyParams::default() };
+    let out = CannyPipeline::tiled(&pool).detect(&img, &params).unwrap();
+    let spec = RunReport::from_run("tiled", img.len(), &out.times, None).to_sim_spec();
+    let f_measured = 1.0 - spec.serial_fraction();
+    println!(
+        "measured parallel fraction f = {:.3} (serial = pad + hysteresis, paper's step 4)\n",
+        f_measured
+    );
+
+    // Model curves (paper equation), f in {measured, 0.90, 0.99}.
+    for f in [f_measured, 0.90, 0.99] {
+        let mut table = Table::new(&["n", "symmetric", "asymmetric best", "best r"]);
+        for p in curve(f, &[2, 4, 8, 16, 32, 64]) {
+            table.row(&[
+                p.n.to_string(),
+                format!("{:.2}x", p.symmetric),
+                format!("{:.2}x", p.asymmetric_best),
+                p.best_r.to_string(),
+            ]);
+        }
+        println!("Speedup(f = {f:.3}) — symmetric vs paper's asymmetric corollary:");
+        table.print();
+        println!();
+    }
+
+    // Validate: simulated speedups track the symmetric model.
+    let t1 = simulate(&spec, 1).makespan_ns as f64;
+    let mut table = Table::new(&["CPUs", "simulated", "model(f)", "error"]);
+    for cpus in [2usize, 4, 8, 16] {
+        let s = t1 / simulate(&spec, cpus).makespan_ns as f64;
+        let m = speedup_symmetric(f_measured, cpus);
+        table.row(&[
+            cpus.to_string(),
+            format!("{s:.2}x"),
+            format!("{m:.2}x"),
+            format!("{:+.1}%", 100.0 * (s - m) / m),
+        ]);
+    }
+    println!("simulated vs Amdahl model at measured f:");
+    table.print();
+
+    let s8 = t1 / simulate(&spec, 8).makespan_ns as f64;
+    println!("\nKarp-Flatt inverse fit at n=8: f = {:.3}", fit_parallel_fraction(s8, 8));
+    let r = best_asymmetric_r(f_measured, 8);
+    println!(
+        "paper's asymmetric recommendation at n=8: r = {r} big-core -> {:.2}x vs symmetric {:.2}x",
+        speedup_asymmetric(f_measured, 8, r),
+        speedup_symmetric(f_measured, 8)
+    );
+}

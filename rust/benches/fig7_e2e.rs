@@ -1,0 +1,74 @@
+//! Figure 7 + headline throughput: run every engine end-to-end on the
+//! demo scene, write the edge maps (the paper's application-run figure)
+//! and report Mpix/s per engine.
+//!
+//! Run: `cargo bench --bench fig7_e2e`
+
+use std::path::Path;
+
+use canny_par::bench::{bench, figures_dir, report, Table};
+use canny_par::canny::{CannyParams, CannyPipeline};
+use canny_par::coordinator::RunReport;
+use canny_par::image::pgm;
+use canny_par::image::synth::{generate, Scene};
+use canny_par::runtime::{Manifest, XlaEngine};
+use canny_par::scheduler::Pool;
+
+fn main() {
+    let (w, h) = (1024, 768);
+    let img = generate(Scene::Shapes { seed: 7 }, w, h);
+    let params = CannyParams::default();
+    let pool = Pool::new(4).unwrap();
+    let dir = figures_dir();
+    pgm::write_pgm(&dir.join("fig7_input.pgm"), &img.to_u8()).unwrap();
+
+    let xla = Manifest::load(&Manifest::default_dir())
+        .and_then(|m| XlaEngine::from_manifest(&m, "t128", 4))
+        .ok();
+    if xla.is_none() {
+        println!("note: no artifacts/ — skipping xla engine (run `make artifacts`)");
+    }
+
+    let mut table = Table::new(&["engine", "median", "Mpix/s", "edges", "speedup vs serial"]);
+    let mut serial_ns = 0u64;
+    let engines: Vec<(&str, CannyPipeline)> = {
+        let mut v = vec![
+            ("serial", CannyPipeline::serial()),
+            ("patterns", CannyPipeline::patterns(&pool)),
+            ("tiled", CannyPipeline::tiled(&pool)),
+        ];
+        if let Some(x) = xla.as_ref() {
+            v.push(("xla", CannyPipeline::xla(&pool, x)));
+        }
+        v
+    };
+
+    for (name, pipeline) in engines {
+        let summary = bench(2, 8, || pipeline.detect(&img, &params).unwrap());
+        let out = pipeline.detect(&img, &params).unwrap();
+        pgm::write_pgm(
+            &dir.join(format!("fig7_edges_{name}.pgm")),
+            &out.edges.to_image(),
+        )
+        .unwrap();
+        if name == "serial" {
+            serial_ns = summary.median_ns;
+        }
+        let rpt = RunReport::from_run(name, img.len(), &out.times, None);
+        report(&format!("fig7_e2e/{name}"), &summary);
+        table.row(&[
+            name.to_string(),
+            summary.human_median(),
+            format!("{:.2}", (img.len() as f64 / 1e6) / (summary.median_ns as f64 / 1e9)),
+            format!("{}", out.edges.count_edges()),
+            format!("{:.2}x", serial_ns as f64 / summary.median_ns as f64),
+        ]);
+        let _ = rpt;
+    }
+    println!("\nFigure 7 — parallel CED application run ({w}x{h} shapes scene):");
+    table.print();
+    println!("edge maps written to {}", dir.display());
+    println!("note: wall-clock speedups on this {}-CPU host are not the paper's scaling", canny_par::coordinator::topology::available_cpus());
+    println!("      claim — see table1_scaling (virtual topology) for the reproduction.");
+    let _ = Path::new("");
+}

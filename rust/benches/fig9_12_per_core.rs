@@ -1,0 +1,55 @@
+//! Figures 9b/10 (suboptimal per-core) and 11/12 (optimal per-core) on
+//! the simulated 4-CPU (i3) and 8-CPU (i7) topologies: uneven/idle
+//! cores for the serial build, even and high utilization for the
+//! parallel-patterns build (the work-stealing load-balance claim).
+//!
+//! Run: `cargo bench --bench fig9_12_per_core`
+
+use canny_par::bench::figures_dir;
+use canny_par::canny::{CannyParams, CannyPipeline};
+use canny_par::coordinator::RunReport;
+use canny_par::image::synth::{generate, Scene};
+use canny_par::metrics::coefficient_of_variation;
+use canny_par::profiler::UsageTrace;
+use canny_par::scheduler::Pool;
+use canny_par::simsched::simulate;
+
+fn main() {
+    let img = generate(Scene::Shapes { seed: 7 }, 1024, 1024);
+    let params = CannyParams { tile: 128, ..CannyParams::default() };
+    let pool = Pool::new(2).unwrap();
+
+    let serial_out = CannyPipeline::serial().detect(&img, &params).unwrap();
+    let tiled_out = CannyPipeline::tiled(&pool).detect(&img, &params).unwrap();
+    let spec_sub = RunReport::from_run("serial", img.len(), &serial_out.times, None).to_sim_spec();
+    let spec_opt = RunReport::from_run("tiled", img.len(), &tiled_out.times, None).to_sim_spec();
+
+    let dir = figures_dir();
+    let period = 500_000u64;
+    let cases = [
+        ("fig9b", "suboptimal", &spec_sub, 4usize),
+        ("fig10", "suboptimal", &spec_sub, 8),
+        ("fig11", "optimal", &spec_opt, 4),
+        ("fig12", "optimal", &spec_opt, 8),
+    ];
+    for (fig, kind, spec, cpus) in cases {
+        let sim = simulate(spec, cpus);
+        let trace = UsageTrace::from_sim(
+            &sim,
+            period,
+            &format!("{fig} — {kind} CED per-core usage ({cpus} CPUs)"),
+        );
+        trace.write_csv(&dir.join(format!("{fig}_{kind}_{cpus}cpu_per_core.csv"))).unwrap();
+        println!("{}", trace.ascii_per_core(72, 4));
+        let util = sim.per_core_utilization();
+        let cov = coefficient_of_variation(&util);
+        println!(
+            "{fig}: per-core utilization {:?} (CoV {:.3})\n",
+            util.iter().map(|u| format!("{:.0}%", 100.0 * u)).collect::<Vec<_>>(),
+            cov
+        );
+    }
+    println!("paper shape check: suboptimal = core0-only (others idle);");
+    println!("                   optimal   = all cores high & even (low CoV).");
+    println!("CSV written to {}", dir.display());
+}

@@ -1,0 +1,68 @@
+//! §2.2.1 steps 1-4: per-stage cost breakdown, serial vs pattern-
+//! parallel, quantifying where the parallel patterns pay off and how
+//! big the hysteresis serial elision really is.
+//!
+//! Run: `cargo bench --bench stage_breakdown`
+
+use canny_par::bench::{bench, report, Table};
+use canny_par::canny::{consts, gaussian, hysteresis, nms, sobel, threshold};
+use canny_par::canny::{CannyParams, CannyPipeline};
+use canny_par::image::synth::{generate, Scene};
+use canny_par::scheduler::Pool;
+use canny_par::util::timer::human_ns;
+
+fn main() {
+    let img = generate(Scene::Shapes { seed: 7 }, 1024, 1024);
+    let params = CannyParams::default();
+    let padded = img.pad_replicate(consts::HALO);
+
+    // Individual stage micro-benches (serial, whole image).
+    let g = gaussian::gaussian(&padded);
+    let (mag, dir) = sobel::sobel(&g);
+    let nm = nms::nms(&mag, &dir);
+    let cls = threshold::threshold(&nm, params.lo, params.hi);
+
+    let s_gauss = bench(1, 5, || gaussian::gaussian(&padded));
+    let s_sobel = bench(1, 5, || sobel::sobel(&g));
+    let s_nms = bench(1, 5, || nms::nms(&mag, &dir));
+    let s_thresh = bench(1, 5, || threshold::threshold(&nm, params.lo, params.hi));
+    let s_hyst = bench(1, 5, || hysteresis::hysteresis_serial(&cls));
+    report("stage/gaussian(serial)", &s_gauss);
+    report("stage/sobel(serial)", &s_sobel);
+    report("stage/nms(serial)", &s_nms);
+    report("stage/threshold(serial)", &s_thresh);
+    report("stage/hysteresis(serial)", &s_hyst);
+
+    let pool = Pool::new(4).unwrap();
+    let p_hyst = bench(1, 5, || hysteresis::hysteresis_parallel(&pool, &cls));
+    report("stage/hysteresis(parallel-ext)", &p_hyst);
+
+    // Whole-pipeline stage shares, serial vs patterns engine.
+    let serial = CannyPipeline::serial().detect(&img, &params).unwrap();
+    let patterns = CannyPipeline::patterns(&pool).detect(&img, &params).unwrap();
+    let mut table = Table::new(&["stage", "serial", "patterns(4w)", "share of serial total"]);
+    let rows = [
+        ("pad", serial.times.pad_ns, patterns.times.pad_ns),
+        ("gaussian", serial.times.gaussian_ns, patterns.times.gaussian_ns),
+        ("sobel", serial.times.sobel_ns, patterns.times.sobel_ns),
+        ("nms", serial.times.nms_ns, patterns.times.nms_ns),
+        ("threshold", serial.times.threshold_ns, patterns.times.threshold_ns),
+        ("hysteresis", serial.times.hysteresis_ns, patterns.times.hysteresis_ns),
+    ];
+    for (name, s, p) in rows {
+        table.row(&[
+            name.to_string(),
+            human_ns(s),
+            human_ns(p),
+            format!("{:.1}%", 100.0 * s as f64 / serial.times.total_ns as f64),
+        ]);
+    }
+    println!("\n§2.2.1 stage breakdown (1024x1024):");
+    table.print();
+    println!(
+        "\nhysteresis (the paper's forced-serial step 4) = {:.1}% of serial total;",
+        100.0 * serial.times.hysteresis_ns as f64 / serial.times.total_ns as f64
+    );
+    println!("parallel-extension hysteresis median {} vs serial {}.",
+        human_ns(p_hyst.median_ns), human_ns(s_hyst.median_ns));
+}

@@ -1,0 +1,62 @@
+//! Table 1 + the headline scalability claim: speedup and parallel
+//! efficiency of the patterns CED across the paper's topologies
+//! (i3 = 4 CPUs, i7 = 8 CPUs) plus the §4 future-work manycore probe
+//! (32/64 CPUs), from measured tile costs replayed in the simulator.
+//!
+//! Run: `cargo bench --bench table1_scaling`
+
+use canny_par::amdahl;
+use canny_par::bench::Table;
+use canny_par::canny::{CannyParams, CannyPipeline};
+use canny_par::coordinator::RunReport;
+use canny_par::image::synth::{generate, Scene};
+use canny_par::scheduler::Pool;
+use canny_par::simsched::simulate;
+
+fn main() {
+    let img = generate(Scene::Shapes { seed: 7 }, 1024, 1024);
+    let pool = Pool::new(2).unwrap();
+    let params = CannyParams { tile: 128, ..CannyParams::default() };
+    // Use parallel hysteresis? No: the paper keeps it serial — Table 1's
+    // scaling includes that Amdahl tax, and the ablation bench shows the
+    // alternative.
+    let out = CannyPipeline::tiled(&pool).detect(&img, &params).unwrap();
+    let spec = RunReport::from_run("tiled", img.len(), &out.times, None).to_sim_spec();
+    let serial_frac = spec.serial_fraction();
+    let f = 1.0 - serial_frac;
+
+    let t1 = simulate(&spec, 1).makespan_ns as f64;
+    let mut table = Table::new(&[
+        "topology", "CPUs", "speedup", "efficiency", "Amdahl bound", "achieved/bound",
+    ]);
+    let rows: Vec<(&str, usize)> = vec![
+        ("serial baseline", 1),
+        ("Core i3 (Table 1)", 4),
+        ("Core i7 (Table 1)", 8),
+        ("future work §4", 32),
+        ("future work §4", 64),
+    ];
+    for (name, cpus) in rows {
+        let tn = simulate(&spec, cpus).makespan_ns as f64;
+        let s = t1 / tn;
+        let bound = amdahl::speedup_symmetric(f, cpus);
+        table.row(&[
+            name.to_string(),
+            cpus.to_string(),
+            format!("{s:.2}x"),
+            format!("{:.0}%", 100.0 * s / cpus as f64),
+            format!("{bound:.2}x"),
+            format!("{:.0}%", 100.0 * s / bound),
+        ]);
+    }
+    println!("Table 1 reproduction — parallel CED scaling (1024x1024 scene,");
+    println!("measured tile costs, simulated topologies; serial fraction {:.1}%):\n", 100.0 * serial_frac);
+    table.print();
+    let s8 = t1 / simulate(&spec, 8).makespan_ns as f64;
+    println!(
+        "\nKarp-Flatt fit from 8-CPU point: parallel fraction f = {:.3}",
+        amdahl::fit_parallel_fraction(s8, 8)
+    );
+    println!("paper claim: \"scales well for multicore processors\" — achieved/bound near 100%");
+    println!("shows the pattern runtime adds no scheduling bottleneck beyond Amdahl.");
+}

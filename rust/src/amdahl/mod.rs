@@ -1,0 +1,157 @@
+//! Amdahl's-law speedup models, including the paper's asymmetric
+//! multicore corollary (Hill & Marty form):
+//!
+//! ```text
+//! Speedup_asymmetric(f, n, r) = 1 / ( (1-f)/perf(r) + f/(perf(r) + n - r) )
+//! ```
+//!
+//! where `n` is the total core budget (in base-core equivalents), `r`
+//! the resources fused into the one big core that runs the serial
+//! fraction, and `perf(r) = sqrt(r)` (Pollack's rule), the standard
+//! assumption the paper inherits from Hill & Marty.
+//!
+//! The paper invokes this model to argue that the serial hysteresis
+//! stage (its deliberately-unparallelized step 4) should run on a big
+//! core of an asymmetric multicore. [`fit_parallel_fraction`] inverts
+//! the symmetric model to estimate the achieved `f` from measured
+//! speedups (used by the `amdahl_model` bench to tie model to data).
+
+/// Pollack's-rule performance of a core built from `r` base cores.
+pub fn perf(r: f64) -> f64 {
+    r.max(1.0).sqrt()
+}
+
+/// Classic (symmetric) Amdahl speedup with parallel fraction `f` on `n`
+/// equal cores.
+pub fn speedup_symmetric(f: f64, n: usize) -> f64 {
+    assert!((0.0..=1.0).contains(&f));
+    assert!(n >= 1);
+    1.0 / ((1.0 - f) + f / n as f64)
+}
+
+/// The paper's asymmetric-multicore speedup: one big core of `r`
+/// base-core equivalents plus `n - r` small cores.
+pub fn speedup_asymmetric(f: f64, n: usize, r: usize) -> f64 {
+    assert!((0.0..=1.0).contains(&f));
+    assert!(n >= 1 && r >= 1 && r <= n);
+    let pr = perf(r as f64);
+    1.0 / ((1.0 - f) / pr + f / (pr + (n - r) as f64))
+}
+
+/// The `r` (1..=n) maximizing [`speedup_asymmetric`] for given `f`, `n`.
+pub fn best_asymmetric_r(f: f64, n: usize) -> usize {
+    (1..=n)
+        .max_by(|&a, &b| {
+            speedup_asymmetric(f, n, a)
+                .partial_cmp(&speedup_asymmetric(f, n, b))
+                .unwrap()
+        })
+        .unwrap_or(1)
+}
+
+/// Estimate the parallel fraction `f` from a measured speedup `s` on
+/// `n` symmetric cores (inverse Amdahl; the "Karp–Flatt"-style fit).
+pub fn fit_parallel_fraction(s: f64, n: usize) -> f64 {
+    if n <= 1 || s <= 0.0 {
+        return 0.0;
+    }
+    let n = n as f64;
+    // s = 1 / ((1-f) + f/n)  =>  f = (1 - 1/s) / (1 - 1/n)
+    (((1.0 - 1.0 / s) / (1.0 - 1.0 / n)).clamp(0.0, 1.0) * 1e12).round() / 1e12
+}
+
+/// A speedup curve sample for the model benches.
+#[derive(Clone, Debug)]
+pub struct CurvePoint {
+    pub n: usize,
+    pub symmetric: f64,
+    pub asymmetric_best: f64,
+    pub best_r: usize,
+}
+
+/// Speedup curve for `f` over core counts `ns`.
+pub fn curve(f: f64, ns: &[usize]) -> Vec<CurvePoint> {
+    ns.iter()
+        .map(|&n| {
+            let best_r = best_asymmetric_r(f, n);
+            CurvePoint {
+                n,
+                symmetric: speedup_symmetric(f, n),
+                asymmetric_best: speedup_asymmetric(f, n, best_r),
+                best_r,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn symmetric_limits() {
+        assert!((speedup_symmetric(0.0, 8) - 1.0).abs() < 1e-12);
+        assert!((speedup_symmetric(1.0, 8) - 8.0).abs() < 1e-12);
+        // f = 0.95, n -> inf caps at 20.
+        assert!(speedup_symmetric(0.95, 100_000) < 20.0);
+    }
+
+    #[test]
+    fn asymmetric_reduces_to_symmetric_at_r1() {
+        for &f in &[0.3, 0.7, 0.95] {
+            for &n in &[2usize, 4, 8, 16] {
+                let a = speedup_asymmetric(f, n, 1);
+                let s = speedup_symmetric(f, n);
+                // perf(1) = 1: 1/((1-f) + f/(1 + n - 1)) == symmetric.
+                assert!((a - s).abs() < 1e-12, "f={f} n={n}: {a} vs {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn asymmetric_beats_symmetric_for_serial_heavy() {
+        // With a large serial fraction, some r > 1 must win (Hill&Marty).
+        let f = 0.5;
+        let n = 16;
+        let r = best_asymmetric_r(f, n);
+        assert!(r > 1);
+        assert!(speedup_asymmetric(f, n, r) > speedup_symmetric(f, n));
+    }
+
+    #[test]
+    fn monotone_in_f() {
+        for &n in &[4usize, 8] {
+            let mut prev = 0.0;
+            for k in 0..=10 {
+                let s = speedup_symmetric(k as f64 / 10.0, n);
+                assert!(s >= prev);
+                prev = s;
+            }
+        }
+    }
+
+    #[test]
+    fn fit_inverts_model() {
+        for &f in &[0.2, 0.6, 0.9, 0.99] {
+            for &n in &[2usize, 4, 8] {
+                let s = speedup_symmetric(f, n);
+                let fhat = fit_parallel_fraction(s, n);
+                assert!((fhat - f).abs() < 1e-9, "f={f} n={n} fhat={fhat}");
+            }
+        }
+    }
+
+    #[test]
+    fn fit_clamps() {
+        assert_eq!(fit_parallel_fraction(0.5, 4), 0.0); // "slowdown" -> 0
+        assert_eq!(fit_parallel_fraction(100.0, 4), 1.0); // superlinear -> 1
+    }
+
+    #[test]
+    fn curve_has_all_points() {
+        let c = curve(0.9, &[1, 2, 4, 8]);
+        assert_eq!(c.len(), 4);
+        assert!(c[3].symmetric > c[1].symmetric);
+        assert!(c.iter().all(|p| p.asymmetric_best >= p.symmetric - 1e-12));
+    }
+}

@@ -1,0 +1,109 @@
+//! Minimal benchmark harness (criterion is unavailable offline): warmup
+//! + timed iterations + robust summary stats, plus helpers the figure
+//! benches share (output directory, markdown-ish tables).
+
+use std::path::PathBuf;
+
+use crate::util::timer::{human_ns, Stopwatch, Summary};
+
+/// Run `f` for `warmup` untimed and `iters` timed iterations.
+pub fn bench<R>(warmup: usize, iters: usize, mut f: impl FnMut() -> R) -> Summary {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let sw = Stopwatch::start();
+        std::hint::black_box(f());
+        samples.push(sw.elapsed_ns());
+    }
+    Summary::from_samples(samples)
+}
+
+/// Print one bench result line (standardized for bench_output.txt).
+pub fn report(name: &str, s: &Summary) {
+    println!(
+        "bench {name:<42} median {:>12}  p10 {:>12}  p90 {:>12}  n={}",
+        human_ns(s.median_ns),
+        human_ns(s.p10_ns),
+        human_ns(s.p90_ns),
+        s.n
+    );
+}
+
+/// Where figure CSVs/charts land (`target/figures`).
+pub fn figures_dir() -> PathBuf {
+    let dir = PathBuf::from("target/figures");
+    let _ = std::fs::create_dir_all(&dir);
+    dir
+}
+
+/// Simple aligned table printer for bench output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = fmt_row(&self.headers);
+        out.push('\n');
+        out.push_str(&"-".repeat(out.len().saturating_sub(1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.to_string());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_iters() {
+        let s = bench(1, 5, || std::hint::black_box((0..1000u64).sum::<u64>()));
+        assert_eq!(s.n, 5);
+        assert!(s.median_ns > 0);
+        assert!(s.min_ns <= s.median_ns && s.median_ns <= s.max_ns);
+    }
+
+    #[test]
+    fn table_alignment() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["longer".into(), "22".into()]);
+        let s = t.to_string();
+        assert!(s.contains("name"));
+        assert!(s.lines().count() == 4);
+    }
+}

@@ -1,0 +1,53 @@
+//! Numeric contract with the Pallas kernels — these literals are the
+//! f32 roundings of `python/compile/kernels/constants.py` and are
+//! guarded by `python/tests/test_constants.py` on the python side and
+//! the tests below on this side. Do not change one without the other.
+
+/// Normalized 5-tap Gaussian (sigma = 1.4), f32-exact to the python taps.
+pub const GAUSS5: [f32; 5] =
+    [0.110_209_46, 0.236_912_01, 0.305_757_05, 0.236_912_01, 0.110_209_46];
+
+/// tan(22.5°): direction-bin threshold (bin 0 vs diagonal).
+pub const TAN22: f32 = 0.414_213_56;
+
+/// tan(67.5°): direction-bin threshold (diagonal vs bin 2).
+pub const TAN67: f32 = 2.414_213_56;
+
+/// One-side halo consumed by the full front: gaussian 2 + sobel 1 + nms 1.
+pub const HALO: usize = 4;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gauss_taps_normalized_and_symmetric() {
+        let sum: f32 = GAUSS5.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6, "sum={sum}");
+        assert_eq!(GAUSS5[0], GAUSS5[4]);
+        assert_eq!(GAUSS5[1], GAUSS5[3]);
+    }
+
+    #[test]
+    fn gauss_taps_match_python_formula() {
+        // exp(-k^2 / (2 * 1.4^2)) normalized, rounded through f32 — the
+        // definition in python/compile/kernels/constants.py.
+        let raw: Vec<f64> =
+            (-2..=2).map(|k| (-((k * k) as f64) / (2.0 * 1.4 * 1.4)).exp()).collect();
+        let s: f64 = raw.iter().sum();
+        for (i, &r) in raw.iter().enumerate() {
+            let expect = (r / s) as f32;
+            assert!(
+                (GAUSS5[i] - expect).abs() < 2e-7,
+                "tap {i}: {} vs {expect}",
+                GAUSS5[i]
+            );
+        }
+    }
+
+    #[test]
+    fn tan_thresholds_match() {
+        assert!((TAN22 - (22.5f64.to_radians().tan() as f32)).abs() < 1e-7);
+        assert!((TAN67 - (67.5f64.to_radians().tan() as f32)).abs() < 1e-6);
+    }
+}

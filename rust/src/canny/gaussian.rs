@@ -1,0 +1,139 @@
+//! Stage 1 — separable 5×5 Gaussian blur (σ = 1.4), the paper's "filter
+//! out any noise" step. Two 1-D passes; the inner loops are written as
+//! flat slice MACs so the compiler auto-vectorizes them (the AVX/SIMD
+//! angle of the paper on this host).
+//!
+//! Shape algebra matches the Pallas kernel: rows (H, W) → (H, W-4),
+//! cols (H, W) → (H-4, W); composed (H, W) → (H-4, W-4).
+
+use crate::canny::consts::GAUSS5;
+use crate::image::ImageF32;
+
+/// Horizontal pass into a caller-provided row buffer.
+/// `src_row` has width W; `dst_row` must have width W-4.
+#[inline]
+pub fn gauss_row_into(src_row: &[f32], dst_row: &mut [f32]) {
+    let w_out = dst_row.len();
+    debug_assert_eq!(src_row.len(), w_out + 4);
+    let [w0, w1, w2, w3, w4] = GAUSS5;
+    for (j, d) in dst_row.iter_mut().enumerate() {
+        // 5-tap MAC over contiguous input — vectorizable.
+        *d = w0 * src_row[j]
+            + w1 * src_row[j + 1]
+            + w2 * src_row[j + 2]
+            + w3 * src_row[j + 3]
+            + w4 * src_row[j + 4];
+    }
+}
+
+/// Vertical pass for one output row `y` (reads rows y..y+5 of `src`).
+#[inline]
+pub fn gauss_col_row_into(src: &ImageF32, y: usize, dst_row: &mut [f32]) {
+    let w = src.width();
+    debug_assert_eq!(dst_row.len(), w);
+    let [w0, w1, w2, w3, w4] = GAUSS5;
+    let r0 = src.row(y);
+    let r1 = src.row(y + 1);
+    let r2 = src.row(y + 2);
+    let r3 = src.row(y + 3);
+    let r4 = src.row(y + 4);
+    for j in 0..w {
+        dst_row[j] = w0 * r0[j] + w1 * r1[j] + w2 * r2[j] + w3 * r3[j] + w4 * r4[j];
+    }
+}
+
+/// Horizontal 5-tap pass. (H, W) → (H, W-4).
+pub fn gauss_rows(src: &ImageF32) -> ImageF32 {
+    let (w, h) = (src.width(), src.height());
+    assert!(w >= 5, "width {w} < 5");
+    let mut out = ImageF32::zeros(w - 4, h);
+    let w_out = w - 4;
+    for y in 0..h {
+        let src_row = src.row(y);
+        let dst = &mut out.data_mut()[y * w_out..(y + 1) * w_out];
+        gauss_row_into(src_row, dst);
+    }
+    out
+}
+
+/// Vertical 5-tap pass. (H, W) → (H-4, W).
+pub fn gauss_cols(src: &ImageF32) -> ImageF32 {
+    let (w, h) = (src.width(), src.height());
+    assert!(h >= 5, "height {h} < 5");
+    let mut out = ImageF32::zeros(w, h - 4);
+    for y in 0..h - 4 {
+        let dst = &mut out.data_mut()[y * w..(y + 1) * w];
+        gauss_col_row_into(src, y, dst);
+    }
+    out
+}
+
+/// Separable blur. (H, W) → (H-4, W-4).
+pub fn gaussian(src: &ImageF32) -> ImageF32 {
+    gauss_cols(&gauss_rows(src))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ramp(w: usize, h: usize) -> ImageF32 {
+        ImageF32::from_vec(w, h, (0..w * h).map(|i| (i % 97) as f32 / 97.0).collect()).unwrap()
+    }
+
+    #[test]
+    fn shapes() {
+        let img = ramp(20, 12);
+        assert_eq!(gauss_rows(&img).width(), 16);
+        assert_eq!(gauss_rows(&img).height(), 12);
+        let g = gaussian(&img);
+        assert_eq!((g.width(), g.height()), (16, 8));
+    }
+
+    #[test]
+    fn constant_image_preserved() {
+        let img = ImageF32::from_vec(10, 10, vec![0.6; 100]).unwrap();
+        let g = gaussian(&img);
+        for &v in g.data() {
+            assert!((v - 0.6).abs() < 1e-6, "v={v}");
+        }
+    }
+
+    #[test]
+    fn matches_naive_2d_convolution() {
+        let img = ramp(16, 14);
+        let g = gaussian(&img);
+        // Naive O(25) reference.
+        for y in 0..g.height() {
+            for x in 0..g.width() {
+                let mut acc = 0.0f64;
+                for ky in 0..5 {
+                    for kx in 0..5 {
+                        acc += (GAUSS5[ky] as f64)
+                            * (GAUSS5[kx] as f64)
+                            * img.get(y + ky, x + kx) as f64;
+                    }
+                }
+                assert!(
+                    (g.get(y, x) as f64 - acc).abs() < 1e-5,
+                    "({y},{x}): {} vs {acc}",
+                    g.get(y, x)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn blur_reduces_variance() {
+        // White noise should lose energy under a low-pass filter.
+        let mut rng = crate::util::Prng::new(99);
+        let data: Vec<f32> = (0..64 * 64).map(|_| rng.next_f32()).collect();
+        let img = ImageF32::from_vec(64, 64, data).unwrap();
+        let g = gaussian(&img);
+        let var = |im: &ImageF32| {
+            let m = im.mean() as f64;
+            im.data().iter().map(|&v| (v as f64 - m).powi(2)).sum::<f64>() / im.len() as f64
+        };
+        assert!(var(&g) < var(&img) * 0.5);
+    }
+}

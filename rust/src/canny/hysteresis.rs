@@ -1,0 +1,173 @@
+//! Stage 4b — hysteresis connectivity: weak pixels become edges iff
+//! 8-connected (transitively) to a strong pixel.
+//!
+//! [`hysteresis_serial`] is the paper's choice: it deliberately leaves
+//! this stage serial ("the serial elision it carries … the if statement
+//! pattern") and reasons about the cost with Amdahl's law.
+//!
+//! [`hysteresis_parallel`] is the extension DESIGN.md calls out: weak→
+//! edge promotion is *monotone*, so a parallel label-propagation with
+//! atomic claims produces the identical fixpoint regardless of
+//! interleaving — deterministic output without the serial elision. The
+//! ablation bench quantifies what the paper left on the table.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use crate::canny::threshold::{CLASS_STRONG, CLASS_WEAK};
+use crate::image::{EdgeMap, ImageF32};
+use crate::patterns;
+use crate::scheduler::Pool;
+
+const NEIGHBOURS: [(i64, i64); 8] =
+    [(-1, -1), (-1, 0), (-1, 1), (0, -1), (0, 1), (1, -1), (1, 0), (1, 1)];
+
+/// Serial DFS from every strong pixel (the paper's step 4).
+pub fn hysteresis_serial(cls: &ImageF32) -> EdgeMap {
+    let (w, h) = (cls.width(), cls.height());
+    let mut out = vec![0u8; w * h];
+    let mut stack: Vec<(usize, usize)> = Vec::new();
+    for y in 0..h {
+        for x in 0..w {
+            if cls.get(y, x) == CLASS_STRONG && out[y * w + x] == 0 {
+                out[y * w + x] = 255;
+                stack.push((y, x));
+                while let Some((cy, cx)) = stack.pop() {
+                    for (dy, dx) in NEIGHBOURS {
+                        let ny = cy as i64 + dy;
+                        let nx = cx as i64 + dx;
+                        if ny < 0 || nx < 0 || ny >= h as i64 || nx >= w as i64 {
+                            continue;
+                        }
+                        let (ny, nx) = (ny as usize, nx as usize);
+                        let idx = ny * w + nx;
+                        if out[idx] == 0 && cls.get(ny, nx) >= CLASS_WEAK {
+                            out[idx] = 255;
+                            stack.push((ny, nx));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    EdgeMap::new(w, h, out).expect("sized correctly")
+}
+
+/// Parallel label propagation: strong seeds are partitioned over
+/// workers; each worker BFS-claims pixels with an atomic CAS. Because
+/// promotion is monotone (0 → 255 once), the reachable set — and thus
+/// the output — is schedule-independent.
+pub fn hysteresis_parallel(pool: &Pool, cls: &ImageF32) -> EdgeMap {
+    let (w, h) = (cls.width(), cls.height());
+    let flags: Vec<AtomicU8> = (0..w * h).map(|_| AtomicU8::new(0)).collect();
+    // Collect strong seeds (serial scan, cheap) then fan out.
+    let seeds: Vec<usize> = (0..w * h)
+        .filter(|&i| cls.data()[i] == CLASS_STRONG)
+        .collect();
+    let grain = patterns::auto_grain(seeds.len(), pool.n_workers());
+    patterns::par_for(pool, 0..seeds.len(), grain, |si| {
+        let mut stack = vec![seeds[si]];
+        // Claim the seed.
+        if flags[seeds[si]].swap(255, Ordering::AcqRel) != 0 {
+            return;
+        }
+        while let Some(idx) = stack.pop() {
+            let (cy, cx) = (idx / w, idx % w);
+            for (dy, dx) in NEIGHBOURS {
+                let ny = cy as i64 + dy;
+                let nx = cx as i64 + dx;
+                if ny < 0 || nx < 0 || ny >= h as i64 || nx >= w as i64 {
+                    continue;
+                }
+                let nidx = ny as usize * w + nx as usize;
+                if cls.data()[nidx] >= CLASS_WEAK
+                    && flags[nidx].swap(255, Ordering::AcqRel) == 0
+                {
+                    stack.push(nidx);
+                }
+            }
+        }
+    });
+    let out: Vec<u8> = flags.into_iter().map(|f| f.into_inner()).collect();
+    EdgeMap::new(w, h, out).expect("sized correctly")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cls(w: usize, h: usize, strong: &[(usize, usize)], weak: &[(usize, usize)]) -> ImageF32 {
+        let mut c = ImageF32::zeros(w, h);
+        for &(y, x) in weak {
+            c.set(y, x, CLASS_WEAK);
+        }
+        for &(y, x) in strong {
+            c.set(y, x, CLASS_STRONG);
+        }
+        c
+    }
+
+    #[test]
+    fn weak_connected_to_strong_survives() {
+        let c = cls(8, 8, &[(4, 4)], &[(4, 5), (4, 6), (5, 5)]);
+        let em = hysteresis_serial(&c);
+        assert!(em.is_edge(4, 4));
+        assert!(em.is_edge(4, 5));
+        assert!(em.is_edge(4, 6)); // transitively connected
+        assert!(em.is_edge(5, 5)); // diagonal connectivity
+        assert_eq!(em.count_edges(), 4);
+    }
+
+    #[test]
+    fn isolated_weak_dropped() {
+        let c = cls(8, 8, &[(1, 1)], &[(6, 6)]);
+        let em = hysteresis_serial(&c);
+        assert!(em.is_edge(1, 1));
+        assert!(!em.is_edge(6, 6));
+        assert_eq!(em.count_edges(), 1);
+    }
+
+    #[test]
+    fn weak_chain_propagates() {
+        let weak: Vec<(usize, usize)> = (1..7).map(|x| (3usize, x)).collect();
+        let c = cls(8, 8, &[(3, 0)], &weak);
+        let em = hysteresis_serial(&c);
+        for x in 0..7 {
+            assert!(em.is_edge(3, x), "x={x}");
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let pool = Pool::new(4).unwrap();
+        let mut rng = crate::util::Prng::new(31);
+        for _ in 0..10 {
+            let (w, h) = (40, 30);
+            let mut c = ImageF32::zeros(w, h);
+            for y in 0..h {
+                for x in 0..w {
+                    let r = rng.next_f32();
+                    c.set(y, x, if r > 0.95 { 2.0 } else if r > 0.6 { 1.0 } else { 0.0 });
+                }
+            }
+            let a = hysteresis_serial(&c);
+            let b = hysteresis_parallel(&pool, &c);
+            assert_eq!(a.diff_count(&b), 0);
+        }
+    }
+
+    #[test]
+    fn parallel_deterministic_across_pool_sizes() {
+        let c = cls(16, 16, &[(8, 8), (2, 2)], &[(8, 9), (8, 10), (3, 3), (4, 4)]);
+        let p1 = Pool::new(1).unwrap();
+        let p8 = Pool::new(8).unwrap();
+        let a = hysteresis_parallel(&p1, &c);
+        let b = hysteresis_parallel(&p8, &c);
+        assert_eq!(a.diff_count(&b), 0);
+    }
+
+    #[test]
+    fn empty_class_map() {
+        let c = ImageF32::zeros(10, 10);
+        assert_eq!(hysteresis_serial(&c).count_edges(), 0);
+    }
+}

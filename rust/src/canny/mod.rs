@@ -1,0 +1,65 @@
+//! The Canny Edge Detector operator: native Rust stages that mirror the
+//! L1 Pallas kernels (same constants, same tie rules — see
+//! `python/compile/kernels/`), the serial + parallel hysteresis, and
+//! the [`pipeline`] module tying everything into the three execution
+//! engines (Serial / Patterns / PatternsXla).
+
+pub mod consts;
+pub mod gaussian;
+pub mod hysteresis;
+pub mod nms;
+pub mod pipeline;
+pub mod sobel;
+pub mod threshold;
+
+pub use pipeline::{CannyParams, CannyPipeline, DetectOutput, Engine, StageTimes};
+pub use threshold::{CLASS_NONE, CLASS_STRONG, CLASS_WEAK};
+
+use crate::image::ImageF32;
+
+/// Reference whole-image serial Canny *front-end* (pre-hysteresis):
+/// pads by the halo and runs gaussian → sobel → nms → threshold,
+/// returning the class map and the suppressed magnitude, both
+/// image-sized. Every engine must agree with this function exactly.
+pub fn front_serial(img: &ImageF32, lo: f32, hi: f32) -> (ImageF32, ImageF32) {
+    let padded = img.pad_replicate(consts::HALO);
+    let g = gaussian::gaussian(&padded);
+    let (mag, dir) = sobel::sobel(&g);
+    let nm = nms::nms(&mag, &dir);
+    debug_assert_eq!(nm.width(), img.width());
+    debug_assert_eq!(nm.height(), img.height());
+    let cls = threshold::threshold(&nm, lo, hi);
+    (cls, nm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::synth::{generate, Scene};
+
+    #[test]
+    fn front_serial_shapes() {
+        let img = generate(Scene::Shapes { seed: 3 }, 50, 40);
+        let (cls, nm) = front_serial(&img, 0.05, 0.15);
+        assert_eq!((cls.width(), cls.height()), (50, 40));
+        assert_eq!((nm.width(), nm.height()), (50, 40));
+        // Class values restricted to {0, 1, 2}.
+        assert!(cls.data().iter().all(|&v| v == 0.0 || v == 1.0 || v == 2.0));
+    }
+
+    #[test]
+    fn front_detects_checker_edges() {
+        let img = generate(Scene::Checker { cell: 8 }, 64, 64);
+        let (cls, _) = front_serial(&img, 0.05, 0.15);
+        let strong = cls.data().iter().filter(|&&v| v == 2.0).count();
+        assert!(strong > 100, "strong={strong}");
+    }
+
+    #[test]
+    fn flat_image_has_no_edges() {
+        let img = ImageF32::zeros(32, 32);
+        let (cls, nm) = front_serial(&img, 0.05, 0.15);
+        assert!(cls.data().iter().all(|&v| v == 0.0));
+        assert!(nm.data().iter().all(|&v| v == 0.0));
+    }
+}

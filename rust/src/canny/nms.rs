@@ -1,0 +1,115 @@
+//! Stage 3 — non-maximum suppression, mirroring
+//! `python/compile/kernels/nms.py`: keep the centre magnitude iff it is
+//! >= both neighbours along the quantized gradient direction (ties
+//! keep — deterministic and identical across all three layers).
+
+use crate::image::ImageF32;
+
+/// Compute one NMS output row `y` (of the (H-2, W-2) result).
+///
+/// §Perf P2 note: an offset-LUT dispatch (`d as usize` indexing a
+/// neighbour table) was tried and REVERTED — the indirect loads beat
+/// the predictable compare chain by -30% on this host; natural scenes
+/// are dominated by bins 0/2, which the branch predictor eats.
+#[inline]
+pub fn nms_row_into(mag: &ImageF32, dir: &ImageF32, y: usize, dst_row: &mut [f32]) {
+    let w = mag.width();
+    let w_out = w - 2;
+    debug_assert_eq!(dst_row.len(), w_out);
+    let up = mag.row(y);
+    let mid = mag.row(y + 1);
+    let down = mag.row(y + 2);
+    let drow = dir.row(y + 1);
+    for (j, dst) in dst_row.iter_mut().enumerate() {
+        let m = mid[j + 1];
+        let d = drow[j + 1];
+        let (n1, n2) = if d == 0.0 {
+            (mid[j], mid[j + 2]) // E/W
+        } else if d == 2.0 {
+            (up[j + 1], down[j + 1]) // N/S
+        } else if d == 1.0 {
+            (up[j], down[j + 2]) // NW/SE
+        } else {
+            (up[j + 2], down[j]) // NE/SW
+        };
+        *dst = if m >= n1 && m >= n2 { m } else { 0.0 };
+    }
+}
+
+/// Non-maximum suppression. (H, W) ×2 → (H-2, W-2).
+pub fn nms(mag: &ImageF32, dir: &ImageF32) -> ImageF32 {
+    let (w, h) = (mag.width(), mag.height());
+    assert_eq!((w, h), (dir.width(), dir.height()));
+    assert!(w >= 3 && h >= 3, "nms needs >= 3x3");
+    let (w_out, h_out) = (w - 2, h - 2);
+    let mut out = ImageF32::zeros(w_out, h_out);
+    for y in 0..h_out {
+        let dst = &mut out.data_mut()[y * w_out..(y + 1) * w_out];
+        nms_row_into(mag, dir, y, dst);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn img(w: usize, h: usize, f: impl Fn(usize, usize) -> f32) -> ImageF32 {
+        let mut im = ImageF32::zeros(w, h);
+        for y in 0..h {
+            for x in 0..w {
+                im.set(y, x, f(y, x));
+            }
+        }
+        im
+    }
+
+    #[test]
+    fn ridge_survives_flanks_suppressed() {
+        // Vertical ridge at x=4, direction bin 0 (compare E/W).
+        let mag = img(9, 9, |_, x| match x {
+            4 => 2.0,
+            3 | 5 => 1.0,
+            _ => 0.0,
+        });
+        let dir = img(9, 9, |_, _| 0.0);
+        let out = nms(&mag, &dir);
+        for y in 0..7 {
+            assert_eq!(out.get(y, 3), 2.0); // ridge kept (out x=3 == in x=4)
+            assert_eq!(out.get(y, 2), 0.0); // flank suppressed
+            assert_eq!(out.get(y, 4), 0.0);
+        }
+    }
+
+    #[test]
+    fn plateau_ties_keep_both() {
+        // Two equal columns: >= semantics keeps both (documented choice).
+        let mag = img(9, 9, |_, x| if x == 4 || x == 5 { 1.0 } else { 0.0 });
+        let dir = img(9, 9, |_, _| 0.0);
+        let out = nms(&mag, &dir);
+        assert_eq!(out.get(3, 3), 1.0);
+        assert_eq!(out.get(3, 4), 1.0);
+    }
+
+    #[test]
+    fn direction_selects_neighbours() {
+        // A bright pixel with a brighter N neighbour: suppressed under
+        // bin 2 (N/S), kept under bin 0 (E/W).
+        let mag = img(5, 5, |y, x| match (y, x) {
+            (1, 2) => 3.0,
+            (2, 2) => 2.0,
+            _ => 0.0,
+        });
+        let bin2 = img(5, 5, |_, _| 2.0);
+        let bin0 = img(5, 5, |_, _| 0.0);
+        assert_eq!(nms(&mag, &bin2).get(1, 1), 0.0);
+        assert_eq!(nms(&mag, &bin0).get(1, 1), 2.0);
+    }
+
+    #[test]
+    fn zero_in_zero_out() {
+        let z = ImageF32::zeros(8, 8);
+        let out = nms(&z, &z);
+        assert!(out.data().iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,559 @@
+//! The Canny pipeline with its execution engines — the heart of the
+//! reproduction:
+//!
+//! * [`Engine::Serial`] — the paper's *suboptimal* baseline: every
+//!   stage whole-image, one thread (Figures 8/9b/10).
+//! * [`Engine::Patterns`] — the paper's contribution: each stage
+//!   parallelized with the map/stencil patterns over row bands
+//!   (`cilk_for` style), hysteresis left serial per the paper.
+//! * [`Engine::TiledPatterns`] — fused-front tile decomposition: one
+//!   task per tile runs all four front stages on a haloed window
+//!   (better locality; the ablation bench compares).
+//! * [`Engine::PatternsXla`] — tiles dispatched to the AOT-compiled
+//!   JAX/Pallas fused front via PJRT ([`crate::runtime::XlaEngine`]),
+//!   hysteresis in Rust. Python is long gone at this point.
+//!
+//! All engines produce the identical edge map (determinism tests
+//! enforce it; XLA within f32 tolerance at class boundaries).
+
+use crate::canny::{consts, gaussian, hysteresis, nms, sobel, threshold};
+use crate::error::{Error, Result};
+use crate::image::tile::TileGrid;
+use crate::image::{EdgeMap, ImageF32};
+use crate::patterns;
+use crate::runtime::XlaEngine;
+use crate::scheduler::Pool;
+use crate::util::timer::{thread_cpu_ns, Stopwatch};
+use crate::util::SharedSlice;
+
+/// Which implementation runs the front-end.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Engine {
+    Serial,
+    Patterns,
+    TiledPatterns,
+    PatternsXla,
+}
+
+impl Engine {
+    pub fn parse(s: &str) -> Option<Engine> {
+        match s {
+            "serial" => Some(Engine::Serial),
+            "patterns" => Some(Engine::Patterns),
+            "tiled" | "tiled-patterns" => Some(Engine::TiledPatterns),
+            "xla" | "patterns-xla" => Some(Engine::PatternsXla),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Engine::Serial => "serial",
+            Engine::Patterns => "patterns",
+            Engine::TiledPatterns => "tiled",
+            Engine::PatternsXla => "xla",
+        }
+    }
+}
+
+/// Detector parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct CannyParams {
+    /// Low hysteresis threshold (on gradient magnitude).
+    pub lo: f32,
+    /// High hysteresis threshold.
+    pub hi: f32,
+    /// Tile core size for the tiled engines.
+    pub tile: usize,
+    /// Use the parallel hysteresis extension instead of the paper's
+    /// serial walk.
+    pub parallel_hysteresis: bool,
+    /// Row-band grain for the stage-parallel engine (0 = auto).
+    pub band_grain: usize,
+}
+
+impl Default for CannyParams {
+    fn default() -> Self {
+        CannyParams { lo: 0.05, hi: 0.15, tile: 128, parallel_hysteresis: false, band_grain: 0 }
+    }
+}
+
+impl CannyParams {
+    pub fn validate(&self) -> Result<()> {
+        if !(self.lo.is_finite() && self.hi.is_finite()) || self.lo < 0.0 || self.hi < self.lo {
+            return Err(Error::Config(format!(
+                "thresholds must satisfy 0 <= lo <= hi, got lo={} hi={}",
+                self.lo, self.hi
+            )));
+        }
+        if self.tile == 0 {
+            return Err(Error::Config("tile must be >= 1".into()));
+        }
+        Ok(())
+    }
+}
+
+/// Wall-clock per stage plus per-tile CPU costs (the simulator's input).
+#[derive(Clone, Debug, Default)]
+pub struct StageTimes {
+    pub pad_ns: u64,
+    pub gaussian_ns: u64,
+    pub sobel_ns: u64,
+    pub nms_ns: u64,
+    pub threshold_ns: u64,
+    /// Fused front total for tiled engines (gaussian..threshold inside).
+    pub front_ns: u64,
+    pub hysteresis_ns: u64,
+    pub total_ns: u64,
+    /// Thread-CPU cost of each tile task (tiled engines only).
+    pub tile_costs_ns: Vec<u64>,
+}
+
+impl StageTimes {
+    /// Serial-work ns (everything not in parallel tasks).
+    pub fn serial_ns(&self) -> u64 {
+        self.pad_ns + self.hysteresis_ns
+    }
+}
+
+/// Full detection output.
+#[derive(Clone, Debug)]
+pub struct DetectOutput {
+    pub edges: EdgeMap,
+    /// Class map (0/1/2) before connectivity.
+    pub class_map: ImageF32,
+    /// Suppressed gradient magnitude (for SNR metrics).
+    pub nms_mag: ImageF32,
+    pub times: StageTimes,
+}
+
+/// The configured pipeline. Borrows its pool / XLA engine so the same
+/// resources serve many detections (the batch server reuses both).
+pub struct CannyPipeline<'a> {
+    pub engine: Engine,
+    pub pool: Option<&'a Pool>,
+    pub xla: Option<&'a XlaEngine>,
+}
+
+impl<'a> CannyPipeline<'a> {
+    pub fn serial() -> CannyPipeline<'static> {
+        CannyPipeline { engine: Engine::Serial, pool: None, xla: None }
+    }
+
+    pub fn patterns(pool: &'a Pool) -> CannyPipeline<'a> {
+        CannyPipeline { engine: Engine::Patterns, pool: Some(pool), xla: None }
+    }
+
+    pub fn tiled(pool: &'a Pool) -> CannyPipeline<'a> {
+        CannyPipeline { engine: Engine::TiledPatterns, pool: Some(pool), xla: None }
+    }
+
+    pub fn xla(pool: &'a Pool, engine: &'a XlaEngine) -> CannyPipeline<'a> {
+        CannyPipeline { engine: Engine::PatternsXla, pool: Some(pool), xla: Some(engine) }
+    }
+
+    /// Run detection.
+    pub fn detect(&self, img: &ImageF32, params: &CannyParams) -> Result<DetectOutput> {
+        params.validate()?;
+        if img.width() < 1 || img.height() < 1 {
+            return Err(Error::Geometry("empty image".into()));
+        }
+        let total = Stopwatch::start();
+        let mut out = match self.engine {
+            Engine::Serial => self.detect_serial(img, params),
+            Engine::Patterns => self.detect_patterns(img, params),
+            Engine::TiledPatterns => self.detect_tiled(img, params),
+            Engine::PatternsXla => self.detect_xla(img, params),
+        }?;
+        out.times.total_ns = total.elapsed_ns();
+        Ok(out)
+    }
+
+    fn need_pool(&self) -> Result<&'a Pool> {
+        self.pool
+            .ok_or_else(|| Error::Scheduler(format!("engine {:?} needs a pool", self.engine)))
+    }
+
+    fn finish_hysteresis(
+        &self,
+        cls: &ImageF32,
+        params: &CannyParams,
+        times: &mut StageTimes,
+    ) -> Result<EdgeMap> {
+        let sw = Stopwatch::start();
+        let edges = if params.parallel_hysteresis {
+            hysteresis::hysteresis_parallel(self.need_pool()?, cls)
+        } else {
+            hysteresis::hysteresis_serial(cls)
+        };
+        times.hysteresis_ns = sw.elapsed_ns();
+        Ok(edges)
+    }
+
+    // ---- Serial (suboptimal baseline) --------------------------------
+
+    fn detect_serial(&self, img: &ImageF32, params: &CannyParams) -> Result<DetectOutput> {
+        let mut times = StageTimes::default();
+        let sw = Stopwatch::start();
+        let padded = img.pad_replicate(consts::HALO);
+        times.pad_ns = sw.elapsed_ns();
+
+        let sw = Stopwatch::start();
+        let g = gaussian::gaussian(&padded);
+        times.gaussian_ns = sw.elapsed_ns();
+
+        let sw = Stopwatch::start();
+        let (mag, dir) = sobel::sobel(&g);
+        times.sobel_ns = sw.elapsed_ns();
+
+        let sw = Stopwatch::start();
+        let nm = nms::nms(&mag, &dir);
+        times.nms_ns = sw.elapsed_ns();
+
+        let sw = Stopwatch::start();
+        let cls = threshold::threshold(&nm, params.lo, params.hi);
+        times.threshold_ns = sw.elapsed_ns();
+        times.front_ns =
+            times.gaussian_ns + times.sobel_ns + times.nms_ns + times.threshold_ns;
+
+        let edges = {
+            let sw = Stopwatch::start();
+            let e = hysteresis::hysteresis_serial(&cls);
+            times.hysteresis_ns = sw.elapsed_ns();
+            e
+        };
+        Ok(DetectOutput { edges, class_map: cls, nms_mag: nm, times })
+    }
+
+    // ---- Stage-parallel patterns (the paper's construction) ----------
+
+    fn detect_patterns(&self, img: &ImageF32, params: &CannyParams) -> Result<DetectOutput> {
+        let pool = self.need_pool()?;
+        let mut times = StageTimes::default();
+        let grain = if params.band_grain > 0 {
+            params.band_grain
+        } else {
+            patterns::auto_grain(img.height(), pool.n_workers())
+        };
+
+        let sw = Stopwatch::start();
+        let padded = img.pad_replicate(consts::HALO);
+        times.pad_ns = sw.elapsed_ns();
+        let (pw, ph) = (padded.width(), padded.height());
+
+        // gauss rows: (ph, pw) -> (ph, pw-4)
+        let sw = Stopwatch::start();
+        let mut g1 = ImageF32::zeros(pw - 4, ph);
+        {
+            let out = SharedSlice::new(g1.data_mut());
+            let w_out = pw - 4;
+            patterns::par_rows(pool, ph, grain, |band| {
+                for y in band {
+                    // SAFETY: bands are disjoint row ranges.
+                    let dst = unsafe { out.range_mut(y * w_out, (y + 1) * w_out) };
+                    gaussian::gauss_row_into(padded.row(y), dst);
+                }
+            });
+        }
+        // gauss cols: (ph, pw-4) -> (ph-4, pw-4)
+        let mut g2 = ImageF32::zeros(pw - 4, ph - 4);
+        {
+            let out = SharedSlice::new(g2.data_mut());
+            let w_out = pw - 4;
+            patterns::par_rows(pool, ph - 4, grain, |band| {
+                for y in band {
+                    // SAFETY: disjoint rows.
+                    let dst = unsafe { out.range_mut(y * w_out, (y + 1) * w_out) };
+                    gaussian::gauss_col_row_into(&g1, y, dst);
+                }
+            });
+        }
+        times.gaussian_ns = sw.elapsed_ns();
+
+        // sobel: (ph-4, pw-4) -> (ph-6, pw-6)
+        let sw = Stopwatch::start();
+        let (sw_out, sh_out) = (pw - 6, ph - 6);
+        let mut mag = ImageF32::zeros(sw_out, sh_out);
+        let mut dir = ImageF32::zeros(sw_out, sh_out);
+        {
+            let mag_s = SharedSlice::new(mag.data_mut());
+            let dir_s = SharedSlice::new(dir.data_mut());
+            patterns::par_rows(pool, sh_out, grain, |band| {
+                for y in band {
+                    // SAFETY: disjoint rows per band, distinct buffers.
+                    let m = unsafe { mag_s.range_mut(y * sw_out, (y + 1) * sw_out) };
+                    let d = unsafe { dir_s.range_mut(y * sw_out, (y + 1) * sw_out) };
+                    sobel::sobel_row_into(&g2, y, m, d);
+                }
+            });
+        }
+        times.sobel_ns = sw.elapsed_ns();
+
+        // nms: (ph-6, pw-6) -> (ph-8, pw-8) == (h, w)
+        let sw = Stopwatch::start();
+        let (w, h) = (img.width(), img.height());
+        let mut nm = ImageF32::zeros(w, h);
+        {
+            let nm_s = SharedSlice::new(nm.data_mut());
+            patterns::par_rows(pool, h, grain, |band| {
+                for y in band {
+                    // SAFETY: disjoint rows.
+                    let dst = unsafe { nm_s.range_mut(y * w, (y + 1) * w) };
+                    nms::nms_row_into(&mag, &dir, y, dst);
+                }
+            });
+        }
+        times.nms_ns = sw.elapsed_ns();
+
+        // threshold (elementwise map)
+        let sw = Stopwatch::start();
+        let mut cls = ImageF32::zeros(w, h);
+        {
+            let cls_s = SharedSlice::new(cls.data_mut());
+            let (lo, hi) = (params.lo, params.hi);
+            patterns::par_rows(pool, h, grain, |band| {
+                for y in band {
+                    // SAFETY: disjoint rows.
+                    let dst = unsafe { cls_s.range_mut(y * w, (y + 1) * w) };
+                    threshold::threshold_row_into(nm.row(y), lo, hi, dst);
+                }
+            });
+        }
+        times.threshold_ns = sw.elapsed_ns();
+        times.front_ns =
+            times.gaussian_ns + times.sobel_ns + times.nms_ns + times.threshold_ns;
+
+        let edges = self.finish_hysteresis(&cls, params, &mut times)?;
+        Ok(DetectOutput { edges, class_map: cls, nms_mag: nm, times })
+    }
+
+    // ---- Fused-front tiles (native) -----------------------------------
+
+    fn detect_tiled(&self, img: &ImageF32, params: &CannyParams) -> Result<DetectOutput> {
+        let pool = self.need_pool()?;
+        let mut times = StageTimes::default();
+        let (w, h) = (img.width(), img.height());
+        let grid = TileGrid::new(w, h, params.tile, params.tile, consts::HALO)?;
+
+        // No serial whole-image pad: each tile task clamps its own halo
+        // (pad work rides inside the parallel phase — §Perf item P1).
+        let sw = Stopwatch::start();
+        let tiles: Vec<_> = grid.tiles().collect();
+        let mut cls = ImageF32::zeros(w, h);
+        let mut nm = ImageF32::zeros(w, h);
+        let mut costs = vec![0u64; tiles.len()];
+        {
+            let cls_s = SharedSlice::new(cls.data_mut());
+            let nm_s = SharedSlice::new(nm.data_mut());
+            let cost_s = SharedSlice::new(&mut costs);
+            let grid = &grid;
+            patterns::par_map(pool, &tiles, 1, |i, t| {
+                let t0 = thread_cpu_ns();
+                let window = grid.extract_clamped(img, *t);
+                let (tc, tn) = front_serial_window(&window, params.lo, params.hi);
+                debug_assert_eq!(tc.width(), t.core_w);
+                debug_assert_eq!(tc.height(), t.core_h);
+                for ty in 0..t.core_h {
+                    let row0 = (t.y0 + ty) * w + t.x0;
+                    // SAFETY: tiles cover disjoint output regions.
+                    let crow = unsafe { cls_s.range_mut(row0, row0 + t.core_w) };
+                    crow.copy_from_slice(&tc.data()[ty * t.core_w..(ty + 1) * t.core_w]);
+                    let nrow = unsafe { nm_s.range_mut(row0, row0 + t.core_w) };
+                    nrow.copy_from_slice(&tn.data()[ty * t.core_w..(ty + 1) * t.core_w]);
+                }
+                // SAFETY: one writer per tile index.
+                unsafe { cost_s.write(i, thread_cpu_ns() - t0) };
+            });
+        }
+        times.front_ns = sw.elapsed_ns();
+        times.tile_costs_ns = costs;
+
+        let edges = self.finish_hysteresis(&cls, params, &mut times)?;
+        Ok(DetectOutput { edges, class_map: cls, nms_mag: nm, times })
+    }
+
+    // ---- Fused-front tiles via PJRT (JAX/Pallas artifacts) ------------
+
+    fn detect_xla(&self, img: &ImageF32, params: &CannyParams) -> Result<DetectOutput> {
+        let pool = self.need_pool()?;
+        let xla = self
+            .xla
+            .ok_or_else(|| Error::Xla("PatternsXla engine needs an XlaEngine".into()))?;
+        let (core_h, core_w) = xla.tile_core();
+        let halo = xla.halo();
+        if halo != consts::HALO {
+            return Err(Error::Artifact(format!(
+                "artifact halo {halo} != native {}",
+                consts::HALO
+            )));
+        }
+        let mut times = StageTimes::default();
+        let (w, h) = (img.width(), img.height());
+        let grid = TileGrid::new(w, h, core_w, core_h, halo)?;
+
+        let sw = Stopwatch::start();
+        let padded = grid.pad_for_fixed(img);
+        times.pad_ns = sw.elapsed_ns();
+
+        let sw = Stopwatch::start();
+        let tiles: Vec<_> = grid.tiles().collect();
+        let mut cls = ImageF32::zeros(w, h);
+        let mut nm = ImageF32::zeros(w, h);
+        let mut costs = vec![0u64; tiles.len()];
+        let mut errs: Vec<Option<Error>> = (0..tiles.len()).map(|_| None).collect();
+        {
+            let cls_s = SharedSlice::new(cls.data_mut());
+            let nm_s = SharedSlice::new(nm.data_mut());
+            let cost_s = SharedSlice::new(&mut costs);
+            let err_s = SharedSlice::new(&mut errs);
+            let grid = &grid;
+            let padded = &padded;
+            patterns::par_map(pool, &tiles, 1, |i, t| {
+                let t0 = thread_cpu_ns();
+                let window = grid.extract_fixed(padded, *t);
+                match xla.run_front(&window, params.lo, params.hi, i) {
+                    Ok((tc, tn)) => {
+                        for ty in 0..t.core_h {
+                            let row0 = (t.y0 + ty) * w + t.x0;
+                            // SAFETY: disjoint tile regions / indices.
+                            let crow = unsafe { cls_s.range_mut(row0, row0 + t.core_w) };
+                            crow.copy_from_slice(&tc.data()[ty * core_w..ty * core_w + t.core_w]);
+                            let nrow = unsafe { nm_s.range_mut(row0, row0 + t.core_w) };
+                            nrow.copy_from_slice(&tn.data()[ty * core_w..ty * core_w + t.core_w]);
+                        }
+                    }
+                    Err(e) => unsafe { err_s.write(i, Some(e)) },
+                }
+                // SAFETY: one writer per index.
+                unsafe { cost_s.write(i, thread_cpu_ns() - t0) };
+            });
+        }
+        if let Some(e) = errs.into_iter().flatten().next() {
+            return Err(e);
+        }
+        times.front_ns = sw.elapsed_ns();
+        times.tile_costs_ns = costs;
+
+        let edges = self.finish_hysteresis(&cls, params, &mut times)?;
+        Ok(DetectOutput { edges, class_map: cls, nms_mag: nm, times })
+    }
+}
+
+/// Serial Canny front on a haloed window: `(c + 2*HALO)²` → `c²`.
+/// Shared by the tiled engine and the whole-image reference.
+pub fn front_serial_window(window: &ImageF32, lo: f32, hi: f32) -> (ImageF32, ImageF32) {
+    let g = gaussian::gaussian(window);
+    let (mag, dir) = sobel::sobel(&g);
+    let nm = nms::nms(&mag, &dir);
+    let cls = threshold::threshold(&nm, lo, hi);
+    (cls, nm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::synth::{generate, Scene};
+
+    fn test_image() -> ImageF32 {
+        generate(Scene::Shapes { seed: 11 }, 150, 90)
+    }
+
+    #[test]
+    fn serial_engine_runs() {
+        let img = test_image();
+        let out = CannyPipeline::serial().detect(&img, &CannyParams::default()).unwrap();
+        assert_eq!(out.edges.width(), 150);
+        assert!(out.edges.count_edges() > 0);
+        assert!(out.times.total_ns > 0);
+    }
+
+    #[test]
+    fn patterns_matches_serial_exactly() {
+        let img = test_image();
+        let params = CannyParams::default();
+        let serial = CannyPipeline::serial().detect(&img, &params).unwrap();
+        for workers in [1usize, 2, 4, 8] {
+            let pool = Pool::new(workers).unwrap();
+            let par = CannyPipeline::patterns(&pool).detect(&img, &params).unwrap();
+            assert_eq!(
+                serial.edges.diff_count(&par.edges),
+                0,
+                "patterns({workers}) diverged from serial"
+            );
+            assert_eq!(serial.class_map, par.class_map);
+            assert_eq!(serial.nms_mag, par.nms_mag);
+        }
+    }
+
+    #[test]
+    fn tiled_matches_serial_exactly() {
+        let img = test_image();
+        let pool = Pool::new(4).unwrap();
+        for tile in [32usize, 64, 128, 300] {
+            let params = CannyParams { tile, ..CannyParams::default() };
+            let serial = CannyPipeline::serial().detect(&img, &params).unwrap();
+            let tiled = CannyPipeline::tiled(&pool).detect(&img, &params).unwrap();
+            assert_eq!(
+                serial.edges.diff_count(&tiled.edges),
+                0,
+                "tiled(tile={tile}) diverged"
+            );
+            assert_eq!(serial.class_map, tiled.class_map);
+        }
+    }
+
+    #[test]
+    fn tiled_records_tile_costs() {
+        let img = test_image();
+        let pool = Pool::new(2).unwrap();
+        let params = CannyParams { tile: 64, ..CannyParams::default() };
+        let out = CannyPipeline::tiled(&pool).detect(&img, &params).unwrap();
+        // 150x90 at tile 64 -> 3x2 grid.
+        assert_eq!(out.times.tile_costs_ns.len(), 6);
+        assert!(out.times.tile_costs_ns.iter().all(|&c| c > 0));
+    }
+
+    #[test]
+    fn parallel_hysteresis_same_result() {
+        let img = test_image();
+        let pool = Pool::new(4).unwrap();
+        let base = CannyParams::default();
+        let par = CannyParams { parallel_hysteresis: true, ..base };
+        let a = CannyPipeline::patterns(&pool).detect(&img, &base).unwrap();
+        let b = CannyPipeline::patterns(&pool).detect(&img, &par).unwrap();
+        assert_eq!(a.edges.diff_count(&b.edges), 0);
+    }
+
+    #[test]
+    fn params_validation() {
+        assert!(CannyParams { lo: -0.1, ..CannyParams::default() }.validate().is_err());
+        assert!(CannyParams { lo: 0.5, hi: 0.1, ..CannyParams::default() }.validate().is_err());
+        assert!(CannyParams { tile: 0, ..CannyParams::default() }.validate().is_err());
+        assert!(CannyParams::default().validate().is_ok());
+    }
+
+    #[test]
+    fn engine_parse_roundtrip() {
+        for e in [Engine::Serial, Engine::Patterns, Engine::TiledPatterns, Engine::PatternsXla] {
+            assert_eq!(Engine::parse(e.name()), Some(e));
+        }
+        assert_eq!(Engine::parse("bogus"), None);
+    }
+
+    #[test]
+    fn patterns_without_pool_errors() {
+        let img = test_image();
+        let p = CannyPipeline { engine: Engine::Patterns, pool: None, xla: None };
+        assert!(p.detect(&img, &CannyParams::default()).is_err());
+    }
+
+    #[test]
+    fn tiny_image_single_tile() {
+        let img = generate(Scene::Checker { cell: 2 }, 9, 7);
+        let pool = Pool::new(2).unwrap();
+        let params = CannyParams { tile: 128, ..CannyParams::default() };
+        let serial = CannyPipeline::serial().detect(&img, &params).unwrap();
+        let tiled = CannyPipeline::tiled(&pool).detect(&img, &params).unwrap();
+        assert_eq!(serial.edges.diff_count(&tiled.edges), 0);
+    }
+}

@@ -1,0 +1,135 @@
+//! Stage 2 — fused Sobel gradient: Gx/Gy, magnitude, and branch-light
+//! direction quantization (tangent comparisons, no atan2), mirroring
+//! `python/compile/kernels/sobel.py` exactly.
+//!
+//! Direction encoding contract: 0 = E/W, 1 = NW/SE, 2 = N/S, 3 = NE/SW.
+
+use crate::canny::consts::{TAN22, TAN67};
+use crate::image::ImageF32;
+
+/// Compute one output row `y` (of the (H-2, W-2) result) into buffers.
+#[inline]
+pub fn sobel_row_into(src: &ImageF32, y: usize, mag_row: &mut [f32], dir_row: &mut [f32]) {
+    let w_out = src.width() - 2;
+    debug_assert_eq!(mag_row.len(), w_out);
+    debug_assert_eq!(dir_row.len(), w_out);
+    let r0 = src.row(y);
+    let r1 = src.row(y + 1);
+    let r2 = src.row(y + 2);
+    for j in 0..w_out {
+        let (a, b, c) = (r0[j], r0[j + 1], r0[j + 2]);
+        let (d, f) = (r1[j], r1[j + 2]);
+        let (g, h, i) = (r2[j], r2[j + 1], r2[j + 2]);
+        let gx = (c - a) + 2.0 * (f - d) + (i - g);
+        let gy = (a + 2.0 * b + c) - (g + 2.0 * h + i);
+        mag_row[j] = (gx * gx + gy * gy).sqrt();
+        let adx = gx.abs();
+        let ady = gy.abs();
+        dir_row[j] = if ady <= TAN22 * adx {
+            0.0
+        } else if ady > TAN67 * adx {
+            2.0
+        } else if gx * gy >= 0.0 {
+            1.0
+        } else {
+            3.0
+        };
+    }
+}
+
+/// Fused Sobel. (H, W) → (mag, dir) each (H-2, W-2).
+pub fn sobel(src: &ImageF32) -> (ImageF32, ImageF32) {
+    let (w, h) = (src.width(), src.height());
+    assert!(w >= 3 && h >= 3, "sobel needs >= 3x3, got {w}x{h}");
+    let (w_out, h_out) = (w - 2, h - 2);
+    let mut mag = ImageF32::zeros(w_out, h_out);
+    let mut dir = ImageF32::zeros(w_out, h_out);
+    for y in 0..h_out {
+        // Split disjoint row borrows.
+        let mag_row_ptr = &mut mag.data_mut()[y * w_out..(y + 1) * w_out] as *mut [f32];
+        let dir_row = &mut dir.data_mut()[y * w_out..(y + 1) * w_out];
+        // SAFETY: mag and dir are distinct allocations; raw split only to
+        // satisfy the borrow checker across the two &mut.
+        let mag_row = unsafe { &mut *mag_row_ptr };
+        sobel_row_into(src, y, mag_row, dir_row);
+    }
+    (mag, dir)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_is_zero() {
+        let img = ImageF32::from_vec(8, 8, vec![0.4; 64]).unwrap();
+        let (mag, dir) = sobel(&img);
+        assert!(mag.data().iter().all(|&v| v == 0.0));
+        assert!(dir.data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn vertical_step_gives_bin0() {
+        // Left half dark, right half bright: horizontal gradient.
+        let mut img = ImageF32::zeros(10, 10);
+        for y in 0..10 {
+            for x in 5..10 {
+                img.set(y, x, 1.0);
+            }
+        }
+        let (mag, dir) = sobel(&img);
+        for y in 0..8 {
+            assert!(mag.get(y, 4) > 0.0); // x=4 out maps to x=5 boundary
+            assert_eq!(dir.get(y, 4), 0.0);
+        }
+    }
+
+    #[test]
+    fn horizontal_step_gives_bin2() {
+        let mut img = ImageF32::zeros(10, 10);
+        for y in 5..10 {
+            for x in 0..10 {
+                img.set(y, x, 1.0);
+            }
+        }
+        let (mag, dir) = sobel(&img);
+        for x in 0..8 {
+            assert!(mag.get(4, x) > 0.0);
+            assert_eq!(dir.get(4, x), 2.0);
+        }
+    }
+
+    #[test]
+    fn diagonal_step_gives_diagonal_bin() {
+        // Bright below the main diagonal: gradient along the other diagonal.
+        let mut img = ImageF32::zeros(12, 12);
+        for y in 0..12 {
+            for x in 0..12 {
+                if x + y > 11 {
+                    img.set(y, x, 1.0);
+                }
+            }
+        }
+        let (_, dir) = sobel(&img);
+        // On the anti-diagonal boundary, direction must be a diagonal bin.
+        let d = dir.get(5, 5);
+        assert!(d == 1.0 || d == 3.0, "d={d}");
+    }
+
+    #[test]
+    fn magnitude_scale_invariance() {
+        // Doubling contrast doubles magnitude.
+        let mut img = ImageF32::zeros(8, 8);
+        for y in 0..8 {
+            for x in 4..8 {
+                img.set(y, x, 0.5);
+            }
+        }
+        let (mag1, _) = sobel(&img);
+        let img2 = ImageF32::from_vec(8, 8, img.data().iter().map(|v| v * 2.0).collect()).unwrap();
+        let (mag2, _) = sobel(&img2);
+        for (a, b) in mag1.data().iter().zip(mag2.data()) {
+            assert!((b - 2.0 * a).abs() < 1e-6);
+        }
+    }
+}

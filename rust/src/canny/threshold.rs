@@ -1,0 +1,64 @@
+//! Stage 4a — double-threshold classification (the per-pixel, parallel
+//! half of hysteresis), mirroring `python/compile/kernels/threshold.py`.
+
+use crate::image::ImageF32;
+
+/// Suppressed / not an edge.
+pub const CLASS_NONE: f32 = 0.0;
+/// Weak: kept only if connected to a strong pixel (stage 4b).
+pub const CLASS_WEAK: f32 = 1.0;
+/// Strong: definitely an edge.
+pub const CLASS_STRONG: f32 = 2.0;
+
+/// Classify one row.
+#[inline]
+pub fn threshold_row_into(src_row: &[f32], lo: f32, hi: f32, dst_row: &mut [f32]) {
+    debug_assert_eq!(src_row.len(), dst_row.len());
+    for (d, &m) in dst_row.iter_mut().zip(src_row) {
+        *d = if m >= hi {
+            CLASS_STRONG
+        } else if m >= lo {
+            CLASS_WEAK
+        } else {
+            CLASS_NONE
+        };
+    }
+}
+
+/// Double threshold. (H, W) → (H, W) class map in {0, 1, 2}.
+pub fn threshold(m: &ImageF32, lo: f32, hi: f32) -> ImageF32 {
+    assert!(lo <= hi, "lo {lo} > hi {hi}");
+    let mut out = ImageF32::zeros(m.width(), m.height());
+    let w = m.width();
+    for y in 0..m.height() {
+        let dst = &mut out.data_mut()[y * w..(y + 1) * w];
+        threshold_row_into(m.row(y), lo, hi, dst);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn boundary_semantics_inclusive() {
+        let m = ImageF32::from_vec(6, 1, vec![0.0, 0.399, 0.4, 1.199, 1.2, 9.0]).unwrap();
+        let c = threshold(&m, 0.4, 1.2);
+        assert_eq!(c.data(), &[0.0, 0.0, 1.0, 1.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn equal_lo_hi_means_no_weak() {
+        let m = ImageF32::from_vec(3, 1, vec![0.1, 0.5, 0.9]).unwrap();
+        let c = threshold(&m, 0.5, 0.5);
+        assert_eq!(c.data(), &[0.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "lo")]
+    fn rejects_inverted_thresholds() {
+        let m = ImageF32::zeros(2, 2);
+        let _ = threshold(&m, 0.9, 0.1);
+    }
+}

@@ -1,0 +1,238 @@
+//! Configuration system: a `key = value` config-file format plus CLI
+//! `--key value` overrides (no clap offline — the parser is ~100 lines
+//! and covered by tests). Precedence: defaults < file < CLI.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::canny::{CannyParams, Engine};
+use crate::error::{Error, Result};
+
+/// Fully-resolved run configuration for the `cannyd` launcher and the
+/// coordinator's planner.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Execution engine.
+    pub engine: Engine,
+    /// Worker threads (0 = auto from topology).
+    pub workers: usize,
+    /// Canny thresholds + tiling.
+    pub params: CannyParams,
+    /// Artifacts directory for the XLA engine.
+    pub artifacts_dir: String,
+    /// Tile-config name in the manifest ("" = closest to params.tile).
+    pub tile_name: String,
+    /// XLA executable replicas (0 = one per worker).
+    pub xla_replicas: usize,
+    /// Profiler sampling period, microseconds.
+    pub sample_period_us: u64,
+    /// Simulated topology for figure benches (e.g. 4 or 8 virtual CPUs).
+    pub sim_cpus: usize,
+    /// RNG seed for synthetic scenes.
+    pub seed: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            engine: Engine::Patterns,
+            workers: 0,
+            params: CannyParams::default(),
+            artifacts_dir: "artifacts".into(),
+            tile_name: String::new(),
+            xla_replicas: 0,
+            sample_period_us: 200,
+            sim_cpus: 8,
+            seed: 7,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Apply one `key = value` setting.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        let bad = |what: &str| Error::Config(format!("bad {what} `{value}` for key `{key}`"));
+        match key {
+            "engine" => {
+                self.engine = Engine::parse(value).ok_or_else(|| bad("engine"))?;
+            }
+            "workers" => self.workers = value.parse().map_err(|_| bad("usize"))?,
+            "lo" => self.params.lo = value.parse().map_err(|_| bad("f32"))?,
+            "hi" => self.params.hi = value.parse().map_err(|_| bad("f32"))?,
+            "tile" => self.params.tile = value.parse().map_err(|_| bad("usize"))?,
+            "parallel-hysteresis" | "parallel_hysteresis" => {
+                self.params.parallel_hysteresis = parse_bool(value).ok_or_else(|| bad("bool"))?
+            }
+            "band-grain" | "band_grain" => {
+                self.params.band_grain = value.parse().map_err(|_| bad("usize"))?
+            }
+            "artifacts" | "artifacts-dir" => self.artifacts_dir = value.to_string(),
+            "tile-name" | "tile_name" => self.tile_name = value.to_string(),
+            "xla-replicas" | "xla_replicas" => {
+                self.xla_replicas = value.parse().map_err(|_| bad("usize"))?
+            }
+            "sample-period-us" => {
+                self.sample_period_us = value.parse().map_err(|_| bad("u64"))?
+            }
+            "sim-cpus" | "sim_cpus" => self.sim_cpus = value.parse().map_err(|_| bad("usize"))?,
+            "seed" => self.seed = value.parse().map_err(|_| bad("u64"))?,
+            _ => return Err(Error::Config(format!("unknown config key `{key}`"))),
+        }
+        Ok(())
+    }
+
+    /// Load `key = value` lines (# comments, blank lines ok).
+    pub fn load_file(&mut self, path: &Path) -> Result<()> {
+        let text = std::fs::read_to_string(path)?;
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                Error::Config(format!("{}:{}: expected key = value", path.display(), lineno + 1))
+            })?;
+            self.set(k.trim(), v.trim())?;
+        }
+        Ok(())
+    }
+
+    /// Parse CLI args of the form `--key value` / `--key=value` /
+    /// `--flag`. Returns positional (non-flag) args.
+    pub fn apply_cli(&mut self, args: &[String]) -> Result<Vec<String>> {
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    self.set(k, v)?;
+                } else if stripped == "parallel-hysteresis" {
+                    self.set(stripped, "true")?;
+                } else {
+                    let v = args.get(i + 1).ok_or_else(|| {
+                        Error::Config(format!("--{stripped} needs a value"))
+                    })?;
+                    self.set(stripped, v)?;
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(positional)
+    }
+
+    /// Validate combined settings.
+    pub fn validate(&self) -> Result<()> {
+        self.params.validate()?;
+        if self.sim_cpus == 0 {
+            return Err(Error::Config("sim-cpus must be >= 1".into()));
+        }
+        Ok(())
+    }
+
+    /// Render as a `key = value` map (diagnostics / `cannyd info`).
+    pub fn to_map(&self) -> BTreeMap<String, String> {
+        let mut m = BTreeMap::new();
+        m.insert("engine".into(), self.engine.name().into());
+        m.insert("workers".into(), self.workers.to_string());
+        m.insert("lo".into(), self.params.lo.to_string());
+        m.insert("hi".into(), self.params.hi.to_string());
+        m.insert("tile".into(), self.params.tile.to_string());
+        m.insert(
+            "parallel-hysteresis".into(),
+            self.params.parallel_hysteresis.to_string(),
+        );
+        m.insert("artifacts".into(), self.artifacts_dir.clone());
+        m.insert("sim-cpus".into(), self.sim_cpus.to_string());
+        m.insert("seed".into(), self.seed.to_string());
+        m
+    }
+}
+
+fn parse_bool(v: &str) -> Option<bool> {
+    match v {
+        "1" | "true" | "yes" | "on" => Some(true),
+        "0" | "false" | "no" | "off" => Some(false),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn set_and_get() {
+        let mut c = RunConfig::default();
+        c.set("engine", "serial").unwrap();
+        c.set("workers", "8").unwrap();
+        c.set("lo", "0.03").unwrap();
+        c.set("parallel-hysteresis", "true").unwrap();
+        assert_eq!(c.engine, Engine::Serial);
+        assert_eq!(c.workers, 8);
+        assert!((c.params.lo - 0.03).abs() < 1e-9);
+        assert!(c.params.parallel_hysteresis);
+    }
+
+    #[test]
+    fn rejects_unknown_and_bad_values() {
+        let mut c = RunConfig::default();
+        assert!(c.set("nope", "1").is_err());
+        assert!(c.set("workers", "lots").is_err());
+        assert!(c.set("engine", "gpu").is_err());
+    }
+
+    #[test]
+    fn cli_parsing_forms() {
+        let mut c = RunConfig::default();
+        let args: Vec<String> = ["run", "--workers", "4", "--engine=tiled", "--parallel-hysteresis", "x.pgm"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let pos = c.apply_cli(&args).unwrap();
+        assert_eq!(pos, vec!["run", "x.pgm"]);
+        assert_eq!(c.workers, 4);
+        assert_eq!(c.engine, Engine::TiledPatterns);
+        assert!(c.params.parallel_hysteresis);
+    }
+
+    #[test]
+    fn cli_missing_value_errors() {
+        let mut c = RunConfig::default();
+        let args = vec!["--workers".to_string()];
+        assert!(c.apply_cli(&args).is_err());
+    }
+
+    #[test]
+    fn file_loading_with_comments() {
+        let path = std::env::temp_dir().join("canny_cfg_test.conf");
+        std::fs::write(&path, "# comment\nengine = xla\n\nworkers = 2 # trailing\n").unwrap();
+        let mut c = RunConfig::default();
+        c.load_file(&path).unwrap();
+        assert_eq!(c.engine, Engine::PatternsXla);
+        assert_eq!(c.workers, 2);
+    }
+
+    #[test]
+    fn file_syntax_error_reported_with_line() {
+        let path = std::env::temp_dir().join("canny_cfg_bad.conf");
+        std::fs::write(&path, "workers 4\n").unwrap();
+        let err = RunConfig::default().load_file(&path).map(|_| ()).unwrap_err().to_string();
+        assert!(err.contains(":1:"), "{err}");
+    }
+
+    #[test]
+    fn to_map_contains_core_keys() {
+        let m = RunConfig::default().to_map();
+        assert!(m.contains_key("engine"));
+        assert!(m.contains_key("tile"));
+    }
+}

@@ -1,0 +1,129 @@
+//! Batch server: the farm-pattern front door for bulk IFE workloads
+//! (directories of images / streams of frames), with bounded
+//! backpressure — the paper's motivating scenario of "large quantities
+//! of images … on the INTERNET".
+
+use crate::canny::CannyParams;
+use crate::coordinator::Detector;
+use crate::error::Result;
+use crate::image::{EdgeMap, ImageF32};
+use crate::patterns::farm::{farm_stream, FarmStats};
+use crate::util::timer::Stopwatch;
+
+/// One batch job.
+pub struct BatchJob {
+    pub id: usize,
+    pub image: ImageF32,
+}
+
+/// Result of a batch run.
+#[derive(Debug)]
+pub struct BatchReport {
+    pub results: Vec<EdgeMap>,
+    pub wall_ns: u64,
+    pub pixels: usize,
+    pub farm: FarmStats,
+}
+
+impl BatchReport {
+    pub fn mpix_per_s(&self) -> f64 {
+        self.pixels as f64 / 1e6 / (self.wall_ns as f64 / 1e9).max(1e-12)
+    }
+
+    pub fn images_per_s(&self) -> f64 {
+        self.results.len() as f64 / (self.wall_ns as f64 / 1e9).max(1e-12)
+    }
+}
+
+/// Farm-based batch executor over a detector's resources.
+pub struct BatchServer<'a> {
+    detector: &'a Detector,
+    /// Max images in flight (queue bound / backpressure).
+    pub capacity: usize,
+}
+
+impl<'a> BatchServer<'a> {
+    pub fn new(detector: &'a Detector) -> BatchServer<'a> {
+        BatchServer { detector, capacity: detector.n_workers() * 2 }
+    }
+
+    pub fn with_capacity(mut self, capacity: usize) -> Self {
+        self.capacity = capacity.max(1);
+        self
+    }
+
+    /// Process a stream of jobs; results come back in submission order.
+    ///
+    /// Each image is detected with the *serial* per-image pipeline —
+    /// at batch depth, image-level parallelism already saturates the
+    /// pool, and nesting tile scopes inside farm tasks only adds
+    /// scheduling overhead (ablated in `ablation_patterns`).
+    pub fn run(
+        &self,
+        jobs: impl IntoIterator<Item = BatchJob>,
+        params: &CannyParams,
+    ) -> Result<BatchReport> {
+        params.validate()?;
+        let sw = Stopwatch::start();
+        let pixel_count = std::sync::atomic::AtomicUsize::new(0);
+        let (results, farm) = farm_stream(
+            self.detector.pool(),
+            jobs,
+            self.capacity,
+            |_idx, job: BatchJob| {
+                pixel_count.fetch_add(job.image.len(), std::sync::atomic::Ordering::Relaxed);
+                let (cls, _) = crate::canny::front_serial(&job.image, params.lo, params.hi);
+                crate::canny::hysteresis::hysteresis_serial(&cls)
+            },
+        );
+        Ok(BatchReport {
+            results,
+            wall_ns: sw.elapsed_ns(),
+            pixels: pixel_count.into_inner(),
+            farm,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::synth::{generate, Scene};
+
+    #[test]
+    fn batch_results_match_single_runs() {
+        let det = Detector::builder().workers(4).build().unwrap();
+        let params = CannyParams::default();
+        let images: Vec<ImageF32> =
+            (0..6).map(|k| generate(Scene::Shapes { seed: k }, 80, 60)).collect();
+        let jobs = images
+            .iter()
+            .cloned()
+            .enumerate()
+            .map(|(id, image)| BatchJob { id, image });
+        let report = BatchServer::new(&det).run(jobs, &params).unwrap();
+        assert_eq!(report.results.len(), 6);
+        assert_eq!(report.pixels, 6 * 80 * 60);
+        for (k, img) in images.iter().enumerate() {
+            let single = crate::canny::CannyPipeline::serial()
+                .detect(img, &params)
+                .unwrap();
+            assert_eq!(report.results[k].diff_count(&single.edges), 0, "image {k}");
+        }
+    }
+
+    #[test]
+    fn backpressure_capacity_respected() {
+        let det = Detector::builder().workers(2).build().unwrap();
+        let jobs = (0..20).map(|k| BatchJob {
+            id: k,
+            image: generate(Scene::Checker { cell: 4 }, 40, 40),
+        });
+        let report = BatchServer::new(&det)
+            .with_capacity(2)
+            .run(jobs, &CannyParams::default())
+            .unwrap();
+        assert_eq!(report.results.len(), 20);
+        assert!(report.farm.stalls > 0, "tight capacity should stall the feeder");
+    }
+}

@@ -1,0 +1,219 @@
+//! The GCP (Golden Circle of Parallelism) coordinator — the paper's
+//! structural model realized as code:
+//!
+//! * **Shell** ([`Detector::builder`] + [`batch::BatchJob`]): turns the
+//!   real-world problem ("edges in these images") into a parallel plan.
+//! * **Kernel** ([`planner`]): optimizes the plan for the concrete
+//!   parallel architecture — worker count from the topology, engine,
+//!   tile geometry, grain.
+//! * **Core** ([`Detector::detect`] / [`batch::BatchServer`]): executes
+//!   on the work-stealing pool (and PJRT engine), collecting the run
+//!   reports the figures are built from.
+
+pub mod batch;
+pub mod planner;
+pub mod report;
+pub mod topology;
+
+pub use batch::{BatchReport, BatchServer};
+pub use planner::{Plan, Planner};
+pub use report::RunReport;
+pub use topology::CpuTopology;
+
+use std::sync::Arc;
+
+use crate::canny::{CannyParams, CannyPipeline, DetectOutput, Engine};
+use crate::config::RunConfig;
+use crate::error::{Error, Result};
+use crate::image::{EdgeMap, ImageF32};
+use crate::runtime::{Manifest, XlaEngine};
+use crate::scheduler::{Pool, PoolStats};
+
+/// The end-user entry point: owns the pool (and XLA engine when
+/// configured) and runs detections through the configured engine.
+pub struct Detector {
+    engine: Engine,
+    pool: Arc<Pool>,
+    xla: Option<Arc<XlaEngine>>,
+    params: CannyParams,
+}
+
+impl Detector {
+    /// Start building a detector.
+    pub fn builder() -> DetectorBuilder {
+        DetectorBuilder::default()
+    }
+
+    /// Build straight from a [`RunConfig`] (the CLI path).
+    pub fn from_config(cfg: &RunConfig) -> Result<Detector> {
+        cfg.validate()?;
+        let mut b = Detector::builder()
+            .engine(cfg.engine)
+            .workers(cfg.workers)
+            .params(cfg.params);
+        if cfg.engine == Engine::PatternsXla {
+            b = b.artifacts_dir(&cfg.artifacts_dir);
+            if !cfg.tile_name.is_empty() {
+                b = b.tile_name(&cfg.tile_name);
+            }
+            if cfg.xla_replicas > 0 {
+                b = b.xla_replicas(cfg.xla_replicas);
+            }
+        }
+        b.build()
+    }
+
+    /// Detect edges; returns only the edge map.
+    pub fn detect(&self, img: &ImageF32, params: &CannyParams) -> Result<EdgeMap> {
+        Ok(self.detect_full(img, params)?.edges)
+    }
+
+    /// Detect with class map, magnitude and stage timings.
+    pub fn detect_full(&self, img: &ImageF32, params: &CannyParams) -> Result<DetectOutput> {
+        self.pipeline().detect(img, params)
+    }
+
+    /// Detect with the detector's own default parameters.
+    pub fn detect_default(&self, img: &ImageF32) -> Result<EdgeMap> {
+        self.detect(img, &self.params.clone())
+    }
+
+    /// The configured default parameters.
+    pub fn params(&self) -> &CannyParams {
+        &self.params
+    }
+
+    pub fn engine(&self) -> Engine {
+        self.engine
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.pool.n_workers()
+    }
+
+    /// Live stats (for the profiler).
+    pub fn pool_stats(&self) -> PoolStats {
+        self.pool.stats()
+    }
+
+    /// Borrow the pool (patterns / farm use).
+    pub fn pool(&self) -> &Pool {
+        &self.pool
+    }
+
+    /// The pipeline view over this detector's resources.
+    pub fn pipeline(&self) -> CannyPipeline<'_> {
+        CannyPipeline { engine: self.engine, pool: Some(&self.pool), xla: self.xla.as_deref() }
+    }
+}
+
+/// Builder for [`Detector`].
+#[derive(Default)]
+pub struct DetectorBuilder {
+    engine: Option<Engine>,
+    workers: usize,
+    params: Option<CannyParams>,
+    artifacts_dir: Option<String>,
+    tile_name: Option<String>,
+    xla_replicas: usize,
+}
+
+impl DetectorBuilder {
+    pub fn engine(mut self, engine: Engine) -> Self {
+        self.engine = Some(engine);
+        self
+    }
+
+    /// 0 = auto (from host topology).
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = workers;
+        self
+    }
+
+    pub fn params(mut self, params: CannyParams) -> Self {
+        self.params = Some(params);
+        self
+    }
+
+    pub fn artifacts_dir(mut self, dir: &str) -> Self {
+        self.artifacts_dir = Some(dir.to_string());
+        self
+    }
+
+    pub fn tile_name(mut self, name: &str) -> Self {
+        self.tile_name = Some(name.to_string());
+        self
+    }
+
+    pub fn xla_replicas(mut self, n: usize) -> Self {
+        self.xla_replicas = n;
+        self
+    }
+
+    pub fn build(self) -> Result<Detector> {
+        let engine = self.engine.unwrap_or(Engine::Patterns);
+        let params = self.params.unwrap_or_default();
+        params.validate()?;
+        let topo = CpuTopology::detect();
+        let workers = if self.workers > 0 { self.workers } else { topo.recommended_workers() };
+        let pool = Arc::new(Pool::new(workers)?);
+        let xla = if engine == Engine::PatternsXla {
+            let dir = self
+                .artifacts_dir
+                .unwrap_or_else(|| Manifest::default_dir().to_string_lossy().into_owned());
+            let manifest = Manifest::load(std::path::Path::new(&dir))?;
+            let tile_name = match self.tile_name {
+                Some(n) => n,
+                None => manifest.closest_tile(params.tile).name.clone(),
+            };
+            let replicas =
+                if self.xla_replicas > 0 { self.xla_replicas } else { workers.min(8) };
+            Some(Arc::new(XlaEngine::from_manifest(&manifest, &tile_name, replicas)?))
+        } else {
+            None
+        };
+        if engine == Engine::PatternsXla && xla.is_none() {
+            return Err(Error::Xla("xla engine failed to initialize".into()));
+        }
+        Ok(Detector { engine, pool, xla, params })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::synth::{generate, Scene};
+
+    #[test]
+    fn builder_defaults() {
+        let det = Detector::builder().workers(2).build().unwrap();
+        assert_eq!(det.engine(), Engine::Patterns);
+        assert_eq!(det.n_workers(), 2);
+    }
+
+    #[test]
+    fn detect_roundtrip() {
+        let det = Detector::builder().workers(2).build().unwrap();
+        let img = generate(Scene::Checker { cell: 8 }, 64, 64);
+        let edges = det.detect_default(&img).unwrap();
+        assert!(edges.count_edges() > 0);
+    }
+
+    #[test]
+    fn from_config_serial() {
+        let mut cfg = RunConfig::default();
+        cfg.set("engine", "serial").unwrap();
+        cfg.set("workers", "1").unwrap();
+        let det = Detector::from_config(&cfg).unwrap();
+        assert_eq!(det.engine(), Engine::Serial);
+    }
+
+    #[test]
+    fn invalid_params_rejected() {
+        let r = Detector::builder()
+            .workers(1)
+            .params(CannyParams { lo: 0.9, hi: 0.1, ..CannyParams::default() })
+            .build();
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,169 @@
+//! The GCP *kernel* layer: given a problem description and a topology,
+//! choose the execution plan — engine, worker count, tile geometry,
+//! band grain. Heuristics are deliberately simple and documented; the
+//! ablation bench validates the tile-size choice empirically.
+
+use crate::canny::{CannyParams, Engine};
+use crate::coordinator::topology::CpuTopology;
+
+/// What the shell hands the planner.
+#[derive(Clone, Copy, Debug)]
+pub struct Workload {
+    pub image_w: usize,
+    pub image_h: usize,
+    /// Images per job (batch size); 1 for single-shot.
+    pub batch: usize,
+}
+
+impl Workload {
+    pub fn pixels(&self) -> usize {
+        self.image_w * self.image_h
+    }
+}
+
+/// The chosen plan.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    pub engine: Engine,
+    pub workers: usize,
+    pub params: CannyParams,
+    /// Human-readable rationale (surfaces in `cannyd info`).
+    pub rationale: String,
+}
+
+/// GCP kernel-layer planner.
+pub struct Planner {
+    pub topology: CpuTopology,
+    /// Whether XLA artifacts are available.
+    pub xla_available: bool,
+}
+
+impl Planner {
+    pub fn new(topology: CpuTopology) -> Planner {
+        Planner { topology, xla_available: false }
+    }
+
+    pub fn with_xla(mut self, available: bool) -> Planner {
+        self.xla_available = available;
+        self
+    }
+
+    /// Produce a plan for `work` starting from `base` parameters.
+    pub fn plan(&self, work: Workload, base: &CannyParams) -> Plan {
+        let workers = self.topology.recommended_workers();
+        let mut params = *base;
+        let mut why = Vec::new();
+
+        // Tiny images: parallel overhead dominates below ~16k pixels/task.
+        let engine = if work.pixels() < 32 * 32 || workers == 1 {
+            why.push("image too small / 1 CPU -> serial".to_string());
+            Engine::Serial
+        } else if work.batch > workers {
+            // A deep batch saturates the pool at image granularity; the
+            // per-image engine can stay serial inside farm workers... but
+            // tile-level parallelism composes via nested scopes, so keep
+            // the fused-tile engine (best locality).
+            why.push(format!("batch {} > workers {} -> tiled farm", work.batch, workers));
+            Engine::TiledPatterns
+        } else if self.xla_available {
+            why.push("artifacts present -> PJRT fused front".to_string());
+            Engine::PatternsXla
+        } else {
+            why.push("stage-parallel patterns".to_string());
+            Engine::Patterns
+        };
+
+        // Tile size: aim for >= 4 tiles per worker but tiles no smaller
+        // than 64 (front cost amortizes halo overhead ~ (c+8)^2/c^2).
+        let target_tiles = workers * 4;
+        let mut tile = params.tile.max(32);
+        while tile > 64
+            && (work.image_w.div_ceil(tile) * work.image_h.div_ceil(tile)) < target_tiles
+        {
+            tile /= 2;
+        }
+        if tile != params.tile {
+            why.push(format!("tile {} -> {} for >= {} tasks", params.tile, tile, target_tiles));
+            params.tile = tile;
+        }
+
+        // Band grain: ~4 bands per worker over the image height.
+        params.band_grain = (work.image_h / (workers * 4)).max(1);
+
+        Plan { engine, workers, params, rationale: why.join("; ") }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn planner(cpus: usize) -> Planner {
+        Planner::new(CpuTopology::manycore(cpus))
+    }
+
+    #[test]
+    fn tiny_image_goes_serial() {
+        let p = planner(8).plan(
+            Workload { image_w: 16, image_h: 16, batch: 1 },
+            &CannyParams::default(),
+        );
+        assert_eq!(p.engine, Engine::Serial);
+    }
+
+    #[test]
+    fn single_cpu_goes_serial() {
+        let p = Planner::new(CpuTopology::manycore(1)).plan(
+            Workload { image_w: 1024, image_h: 1024, batch: 1 },
+            &CannyParams::default(),
+        );
+        assert_eq!(p.engine, Engine::Serial);
+    }
+
+    #[test]
+    fn xla_preferred_when_available() {
+        let p = planner(8).with_xla(true).plan(
+            Workload { image_w: 1024, image_h: 1024, batch: 1 },
+            &CannyParams::default(),
+        );
+        assert_eq!(p.engine, Engine::PatternsXla);
+    }
+
+    #[test]
+    fn deep_batch_uses_tiled_farm() {
+        let p = planner(4).plan(
+            Workload { image_w: 512, image_h: 512, batch: 64 },
+            &CannyParams::default(),
+        );
+        assert_eq!(p.engine, Engine::TiledPatterns);
+    }
+
+    #[test]
+    fn tile_shrinks_for_small_images_many_workers() {
+        let p = planner(8).plan(
+            Workload { image_w: 256, image_h: 256, batch: 1 },
+            &CannyParams::default(),
+        );
+        assert!(p.params.tile <= 64, "tile={}", p.params.tile);
+        // 256/64 = 4 -> 16 tiles < 32 target but floor at 64.
+    }
+
+    #[test]
+    fn big_image_keeps_big_tiles() {
+        let p = planner(4).plan(
+            Workload { image_w: 4096, image_h: 4096, batch: 1 },
+            &CannyParams::default(),
+        );
+        assert_eq!(p.params.tile, 128);
+        assert!(p.params.band_grain >= 1);
+    }
+
+    #[test]
+    fn rationale_is_populated() {
+        let p = planner(8).plan(
+            Workload { image_w: 64, image_h: 64, batch: 1 },
+            &CannyParams::default(),
+        );
+        assert!(!p.rationale.is_empty());
+    }
+}

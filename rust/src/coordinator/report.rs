@@ -1,0 +1,170 @@
+//! Run reports: the measured quantities every bench/figure consumes,
+//! plus conversion of stage timings into simulator specs.
+
+use crate::canny::StageTimes;
+use crate::metrics::coefficient_of_variation;
+use crate::scheduler::PoolStats;
+use crate::simsched::{SimPhase, SimSpec};
+use crate::util::timer::human_ns;
+
+/// Summary of one detection (or batch) run.
+#[derive(Clone, Debug, Default)]
+pub struct RunReport {
+    pub label: String,
+    pub pixels: usize,
+    pub wall_ns: u64,
+    pub times: StageTimes,
+    /// Per-worker busy ns (from PoolStats), when a pool was used.
+    pub worker_busy_ns: Vec<u64>,
+    pub tasks: u64,
+    pub steals: u64,
+}
+
+impl RunReport {
+    pub fn from_run(
+        label: &str,
+        pixels: usize,
+        times: &StageTimes,
+        stats: Option<&PoolStats>,
+    ) -> RunReport {
+        let (worker_busy_ns, tasks, steals) = match stats {
+            Some(s) => (s.busy_ns_per_worker(), s.total_tasks(), s.total_steals()),
+            None => (Vec::new(), 0, 0),
+        };
+        RunReport {
+            label: label.to_string(),
+            pixels,
+            wall_ns: times.total_ns,
+            times: times.clone(),
+            worker_busy_ns,
+            tasks,
+            steals,
+        }
+    }
+
+    /// Throughput in megapixels per second.
+    pub fn mpix_per_s(&self) -> f64 {
+        self.pixels as f64 / 1e6 / (self.wall_ns as f64 / 1e9).max(1e-12)
+    }
+
+    /// Load balance (CoV of per-worker busy time; 0 = perfectly even —
+    /// the Figure 3 metric).
+    pub fn load_cov(&self) -> f64 {
+        coefficient_of_variation(
+            &self.worker_busy_ns.iter().map(|&n| n as f64).collect::<Vec<_>>(),
+        )
+    }
+
+    /// Build the simulator spec from this run's measured stage costs:
+    /// pad + hysteresis serial (the paper's 1-f), tile costs parallel.
+    /// Falls back to per-stage serial phases when no tile costs exist.
+    pub fn to_sim_spec(&self) -> SimSpec {
+        let t = &self.times;
+        let mut phases = Vec::new();
+        if t.pad_ns > 0 {
+            phases.push(SimPhase::serial("pad", t.pad_ns));
+        }
+        if !t.tile_costs_ns.is_empty() {
+            phases.push(SimPhase::parallel("front", t.tile_costs_ns.clone()));
+        } else {
+            for (label, ns) in [
+                ("gaussian", t.gaussian_ns),
+                ("sobel", t.sobel_ns),
+                ("nms", t.nms_ns),
+                ("threshold", t.threshold_ns),
+            ] {
+                if ns > 0 {
+                    phases.push(SimPhase::serial(label, ns));
+                }
+            }
+        }
+        if t.hysteresis_ns > 0 {
+            phases.push(SimPhase::serial("hysteresis", t.hysteresis_ns));
+        }
+        SimSpec { phases }
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{}: {} ({:.2} Mpix/s), front {}, hysteresis {}, {} tasks, {} steals, load CoV {:.3}",
+            self.label,
+            human_ns(self.wall_ns),
+            self.mpix_per_s(),
+            human_ns(self.times.front_ns),
+            human_ns(self.times.hysteresis_ns),
+            self.tasks,
+            self.steals,
+            self.load_cov(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn times() -> StageTimes {
+        StageTimes {
+            pad_ns: 10,
+            front_ns: 400,
+            hysteresis_ns: 90,
+            total_ns: 500,
+            tile_costs_ns: vec![100, 100, 100, 100],
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn throughput_math() {
+        let r = RunReport {
+            pixels: 1_000_000,
+            wall_ns: 500_000_000, // 0.5 s
+            ..Default::default()
+        };
+        assert!((r.mpix_per_s() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sim_spec_from_tiled_run() {
+        let r = RunReport { times: times(), ..Default::default() };
+        let spec = r.to_sim_spec();
+        assert_eq!(spec.phases.len(), 3); // pad, front, hysteresis
+        assert_eq!(spec.phases[1].tasks_ns.len(), 4);
+        assert_eq!(spec.work_ns(), 10 + 400 + 90);
+    }
+
+    #[test]
+    fn sim_spec_from_serial_run() {
+        let t = StageTimes {
+            pad_ns: 5,
+            gaussian_ns: 50,
+            sobel_ns: 30,
+            nms_ns: 20,
+            threshold_ns: 10,
+            hysteresis_ns: 40,
+            total_ns: 160,
+            ..Default::default()
+        };
+        let r = RunReport { times: t, ..Default::default() };
+        let spec = r.to_sim_spec();
+        assert_eq!(spec.phases.len(), 6);
+        assert!((spec.serial_fraction() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_contains_key_fields() {
+        let r = RunReport {
+            label: "x".into(),
+            pixels: 100,
+            wall_ns: 1000,
+            times: times(),
+            worker_busy_ns: vec![10, 12],
+            tasks: 4,
+            steals: 1,
+        };
+        let s = r.summary();
+        assert!(s.contains("x:"));
+        assert!(s.contains("steals"));
+    }
+}

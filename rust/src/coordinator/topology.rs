@@ -1,0 +1,114 @@
+//! CPU topology discovery + the paper's Table-1 simulated testbeds.
+
+/// A description of the (real or simulated) processor the coordinator
+/// plans for.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CpuTopology {
+    /// Human-readable name.
+    pub name: String,
+    /// Logical CPUs visible to the scheduler.
+    pub logical_cpus: usize,
+    /// Physical cores (= logical/2 when hyperthreaded).
+    pub physical_cores: usize,
+    /// Whether this topology is simulated (virtual-time figures) or the
+    /// live host.
+    pub simulated: bool,
+}
+
+impl CpuTopology {
+    /// The live host topology (affinity-aware).
+    pub fn detect() -> CpuTopology {
+        let logical = available_cpus();
+        CpuTopology {
+            name: format!("host ({logical} logical CPUs)"),
+            logical_cpus: logical,
+            physical_cores: logical.div_ceil(2).max(1),
+            simulated: false,
+        }
+    }
+
+    /// Paper Table 1, row 1: Intel Core i3 — 2 cores, 4 CPUs, 3.4 GHz.
+    pub fn i3_4cpu() -> CpuTopology {
+        CpuTopology {
+            name: "Core i3 (2 cores, 4 CPUs) [simulated]".into(),
+            logical_cpus: 4,
+            physical_cores: 2,
+            simulated: true,
+        }
+    }
+
+    /// Paper Table 1, row 2: Intel Core i7 — 4 cores, 8 CPUs, 3.4 GHz.
+    pub fn i7_8cpu() -> CpuTopology {
+        CpuTopology {
+            name: "Core i7 (4 cores, 8 CPUs) [simulated]".into(),
+            logical_cpus: 8,
+            physical_cores: 4,
+            simulated: true,
+        }
+    }
+
+    /// The paper's future-work manycore probe (§4: "32-64 CPUs").
+    pub fn manycore(cpus: usize) -> CpuTopology {
+        CpuTopology {
+            name: format!("manycore ({cpus} CPUs) [simulated]"),
+            logical_cpus: cpus,
+            physical_cores: cpus / 2,
+            simulated: true,
+        }
+    }
+
+    /// Worker count the planner should use on this topology.
+    pub fn recommended_workers(&self) -> usize {
+        self.logical_cpus.max(1)
+    }
+
+    /// The Table-1 sweep (plus the host) used by the benches.
+    pub fn table1() -> Vec<CpuTopology> {
+        vec![CpuTopology::i3_4cpu(), CpuTopology::i7_8cpu()]
+    }
+}
+
+/// Logical CPUs available to this process (sched_getaffinity-aware,
+/// falling back to available_parallelism).
+pub fn available_cpus() -> usize {
+    // SAFETY: zeroed cpu_set_t is a valid argument; sched_getaffinity
+    // writes into it.
+    unsafe {
+        let mut set: libc::cpu_set_t = std::mem::zeroed();
+        if libc::sched_getaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &mut set) == 0 {
+            let n = libc::CPU_COUNT(&set) as usize;
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_topology_sane() {
+        let t = CpuTopology::detect();
+        assert!(t.logical_cpus >= 1);
+        assert!(!t.simulated);
+        assert!(t.recommended_workers() >= 1);
+    }
+
+    #[test]
+    fn table1_matches_paper() {
+        let t = CpuTopology::table1();
+        assert_eq!(t.len(), 2);
+        assert_eq!((t[0].physical_cores, t[0].logical_cpus), (2, 4));
+        assert_eq!((t[1].physical_cores, t[1].logical_cpus), (4, 8));
+        assert!(t.iter().all(|x| x.simulated));
+    }
+
+    #[test]
+    fn manycore_probe() {
+        let t = CpuTopology::manycore(64);
+        assert_eq!(t.logical_cpus, 64);
+    }
+}

@@ -1,0 +1,44 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Errors surfaced by the canny-par library.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Image decoding / encoding problems (PGM/PPM codec).
+    #[error("image codec: {0}")]
+    Codec(String),
+
+    /// Geometry problems: tile larger than image, zero dimensions, …
+    #[error("geometry: {0}")]
+    Geometry(String),
+
+    /// Configuration parse / validation errors.
+    #[error("config: {0}")]
+    Config(String),
+
+    /// Manifest / artifact problems (missing file, shape mismatch, JSON).
+    #[error("artifact: {0}")]
+    Artifact(String),
+
+    /// XLA runtime errors (compile / execute / literal conversion).
+    #[error("xla: {0}")]
+    Xla(String),
+
+    /// Scheduler misuse (e.g. zero workers).
+    #[error("scheduler: {0}")]
+    Scheduler(String),
+
+    /// Underlying I/O error.
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,321 @@
+//! Image substrate: owned f32 grayscale images, PGM/PPM codec,
+//! procedural scene generators (the paper's OpenCV test images,
+//! substituted per DESIGN.md), padding and tiling.
+
+pub mod pgm;
+pub mod synth;
+pub mod tile;
+
+use crate::error::{Error, Result};
+
+/// Row-major f32 grayscale image, values nominally in [0, 1].
+#[derive(Clone, Debug, PartialEq)]
+pub struct ImageF32 {
+    width: usize,
+    height: usize,
+    data: Vec<f32>,
+}
+
+impl ImageF32 {
+    /// Zero-filled image.
+    pub fn zeros(width: usize, height: usize) -> ImageF32 {
+        ImageF32 { width, height, data: vec![0.0; width * height] }
+    }
+
+    /// Build from raw row-major data.
+    pub fn from_vec(width: usize, height: usize, data: Vec<f32>) -> Result<ImageF32> {
+        if data.len() != width * height {
+            return Err(Error::Geometry(format!(
+                "data len {} != {}x{}",
+                data.len(),
+                width,
+                height
+            )));
+        }
+        Ok(ImageF32 { width, height, data })
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    pub fn height(&self) -> usize {
+        self.height
+    }
+
+    /// Total pixels.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Immutable raw data (row-major).
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutable raw data (row-major).
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Pixel accessor (debug-checked).
+    #[inline]
+    pub fn get(&self, y: usize, x: usize) -> f32 {
+        debug_assert!(y < self.height && x < self.width);
+        self.data[y * self.width + x]
+    }
+
+    /// Pixel setter (debug-checked).
+    #[inline]
+    pub fn set(&mut self, y: usize, x: usize, v: f32) {
+        debug_assert!(y < self.height && x < self.width);
+        self.data[y * self.width + x] = v;
+    }
+
+    /// A single row as a slice.
+    #[inline]
+    pub fn row(&self, y: usize) -> &[f32] {
+        &self.data[y * self.width..(y + 1) * self.width]
+    }
+
+    /// Replicate-pad by `r` pixels on every side (clamp-to-edge), the
+    /// halo policy every engine uses so tile borders match whole-image
+    /// borders exactly. Row-level memcpy for the interior; only the
+    /// 2r border columns are filled per-pixel (§Perf: this stage is on
+    /// the serial path of every engine).
+    pub fn pad_replicate(&self, r: usize) -> ImageF32 {
+        let (w, h) = (self.width, self.height);
+        let (pw, ph) = (w + 2 * r, h + 2 * r);
+        // Build by appending rows: every output byte is touched exactly
+        // once (no zero-fill prepass).
+        let mut data = Vec::with_capacity(pw * ph);
+        for py in 0..ph {
+            let sy = py.saturating_sub(r).min(h - 1);
+            let src = self.row(sy);
+            data.resize(data.len() + r, src[0]);
+            data.extend_from_slice(src);
+            data.resize(data.len() + r, src[w - 1]);
+        }
+        ImageF32 { width: pw, height: ph, data }
+    }
+
+    /// Copy a rectangular window (debug-checked bounds).
+    pub fn crop(&self, x0: usize, y0: usize, w: usize, h: usize) -> ImageF32 {
+        debug_assert!(x0 + w <= self.width && y0 + h <= self.height);
+        let mut data = Vec::with_capacity(w * h);
+        for y in y0..y0 + h {
+            data.extend_from_slice(&self.data[y * self.width + x0..y * self.width + x0 + w]);
+        }
+        ImageF32 { width: w, height: h, data }
+    }
+
+    /// Mean pixel value.
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        (self.data.iter().map(|&v| v as f64).sum::<f64>() / self.data.len() as f64) as f32
+    }
+
+    /// Min/max pixel values.
+    pub fn min_max(&self) -> (f32, f32) {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &v in &self.data {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        (lo, hi)
+    }
+
+    /// Convert to 8-bit by clamping to 0..=1 and scaling.
+    pub fn to_u8(&self) -> ImageU8 {
+        ImageU8 {
+            width: self.width,
+            height: self.height,
+            data: self
+                .data
+                .iter()
+                .map(|&v| (v.clamp(0.0, 1.0) * 255.0).round() as u8)
+                .collect(),
+        }
+    }
+}
+
+/// Row-major u8 grayscale image (I/O form).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ImageU8 {
+    width: usize,
+    height: usize,
+    data: Vec<u8>,
+}
+
+impl ImageU8 {
+    pub fn from_vec(width: usize, height: usize, data: Vec<u8>) -> Result<ImageU8> {
+        if data.len() != width * height {
+            return Err(Error::Geometry(format!(
+                "data len {} != {}x{}",
+                data.len(),
+                width,
+                height
+            )));
+        }
+        Ok(ImageU8 { width, height, data })
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    pub fn height(&self) -> usize {
+        self.height
+    }
+
+    pub fn data(&self) -> &[u8] {
+        &self.data
+    }
+
+    /// Convert to f32 in [0, 1].
+    pub fn to_f32(&self) -> ImageF32 {
+        ImageF32 {
+            width: self.width,
+            height: self.height,
+            data: self.data.iter().map(|&v| v as f32 / 255.0).collect(),
+        }
+    }
+}
+
+/// Edge map: the detector's output. 0 = background, 255 = edge.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EdgeMap {
+    width: usize,
+    height: usize,
+    data: Vec<u8>,
+}
+
+impl EdgeMap {
+    pub fn new(width: usize, height: usize, data: Vec<u8>) -> Result<EdgeMap> {
+        if data.len() != width * height {
+            return Err(Error::Geometry("edge map size mismatch".into()));
+        }
+        Ok(EdgeMap { width, height, data })
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    pub fn height(&self) -> usize {
+        self.height
+    }
+
+    pub fn data(&self) -> &[u8] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn is_edge(&self, y: usize, x: usize) -> bool {
+        self.data[y * self.width + x] != 0
+    }
+
+    /// Number of edge pixels.
+    pub fn count_edges(&self) -> usize {
+        self.data.iter().filter(|&&v| v != 0).count()
+    }
+
+    /// Fraction of pixels that are edges.
+    pub fn edge_density(&self) -> f64 {
+        self.count_edges() as f64 / self.data.len().max(1) as f64
+    }
+
+    /// As a u8 image (0/255) for writing to PGM.
+    pub fn to_image(&self) -> ImageU8 {
+        ImageU8 { width: self.width, height: self.height, data: self.data.clone() }
+    }
+
+    /// Count differing pixels vs another map (determinism checks).
+    pub fn diff_count(&self, other: &EdgeMap) -> usize {
+        assert_eq!((self.width, self.height), (other.width, other.height));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .filter(|(a, b)| (**a != 0) != (**b != 0))
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_vec_validates() {
+        assert!(ImageF32::from_vec(3, 3, vec![0.0; 8]).is_err());
+        assert!(ImageF32::from_vec(3, 3, vec![0.0; 9]).is_ok());
+    }
+
+    #[test]
+    fn get_set_roundtrip() {
+        let mut img = ImageF32::zeros(5, 4);
+        img.set(3, 2, 0.7);
+        assert_eq!(img.get(3, 2), 0.7);
+        assert_eq!(img.get(0, 0), 0.0);
+    }
+
+    #[test]
+    fn pad_replicate_clamps_edges() {
+        let img = ImageF32::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let p = img.pad_replicate(2);
+        assert_eq!(p.width(), 6);
+        assert_eq!(p.height(), 6);
+        assert_eq!(p.get(0, 0), 1.0); // top-left corner replicated
+        assert_eq!(p.get(0, 5), 2.0);
+        assert_eq!(p.get(5, 0), 3.0);
+        assert_eq!(p.get(5, 5), 4.0);
+        assert_eq!(p.get(2, 2), 1.0); // interior preserved
+        assert_eq!(p.get(3, 3), 4.0);
+    }
+
+    #[test]
+    fn crop_extracts_window() {
+        let img = ImageF32::from_vec(4, 3, (0..12).map(|v| v as f32).collect()).unwrap();
+        let c = img.crop(1, 1, 2, 2);
+        assert_eq!(c.data(), &[5.0, 6.0, 9.0, 10.0]);
+    }
+
+    #[test]
+    fn u8_f32_roundtrip() {
+        let img = ImageU8::from_vec(2, 1, vec![0, 255]).unwrap();
+        let f = img.to_f32();
+        assert_eq!(f.data(), &[0.0, 1.0]);
+        assert_eq!(f.to_u8().data(), &[0, 255]);
+    }
+
+    #[test]
+    fn edge_map_counts() {
+        let em = EdgeMap::new(2, 2, vec![0, 255, 255, 0]).unwrap();
+        assert_eq!(em.count_edges(), 2);
+        assert!((em.edge_density() - 0.5).abs() < 1e-12);
+        assert!(em.is_edge(0, 1));
+        assert!(!em.is_edge(0, 0));
+    }
+
+    #[test]
+    fn edge_map_diff() {
+        let a = EdgeMap::new(2, 1, vec![0, 255]).unwrap();
+        let b = EdgeMap::new(2, 1, vec![255, 255]).unwrap();
+        assert_eq!(a.diff_count(&b), 1);
+        assert_eq!(a.diff_count(&a), 0);
+    }
+
+    #[test]
+    fn stats() {
+        let img = ImageF32::from_vec(2, 2, vec![0.0, 0.5, 1.0, 0.5]).unwrap();
+        assert!((img.mean() - 0.5).abs() < 1e-6);
+        assert_eq!(img.min_max(), (0.0, 1.0));
+    }
+}

@@ -1,0 +1,142 @@
+//! Binary PGM (P5) / PPM (P6) codec — the no-dependency substitute for
+//! the paper's OpenCV image I/O. P5 is the native grayscale format;
+//! P6 is read by luma conversion so RGB test assets also work.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::image::ImageU8;
+
+/// Write an 8-bit grayscale image as binary PGM (P5).
+pub fn write_pgm(path: &Path, img: &ImageU8) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        fs::create_dir_all(parent)?;
+    }
+    let mut f = fs::File::create(path)?;
+    write!(f, "P5\n{} {}\n255\n", img.width(), img.height())?;
+    f.write_all(img.data())?;
+    Ok(())
+}
+
+/// Read a binary PGM (P5) or PPM (P6, converted to luma) image.
+pub fn read_pgm(path: &Path) -> Result<ImageU8> {
+    let bytes = fs::read(path)?;
+    decode(&bytes)
+}
+
+/// Decode from memory. Supports `P5` (maxval <= 255) and `P6`.
+pub fn decode(bytes: &[u8]) -> Result<ImageU8> {
+    let mut pos = 0usize;
+    let magic = token(bytes, &mut pos)?;
+    let channels = match magic.as_str() {
+        "P5" => 1usize,
+        "P6" => 3usize,
+        other => return Err(Error::Codec(format!("unsupported magic `{other}`"))),
+    };
+    let width: usize = parse_num(&token(bytes, &mut pos)?)?;
+    let height: usize = parse_num(&token(bytes, &mut pos)?)?;
+    let maxval: usize = parse_num(&token(bytes, &mut pos)?)?;
+    if maxval == 0 || maxval > 255 {
+        return Err(Error::Codec(format!("unsupported maxval {maxval}")));
+    }
+    // Exactly one whitespace byte separates the header from raster data.
+    pos += 1;
+    let need = width * height * channels;
+    if bytes.len() < pos + need {
+        return Err(Error::Codec(format!(
+            "truncated raster: need {need} bytes, have {}",
+            bytes.len().saturating_sub(pos)
+        )));
+    }
+    let raster = &bytes[pos..pos + need];
+    let scale = 255.0 / maxval as f32;
+    let data: Vec<u8> = if channels == 1 {
+        raster.iter().map(|&v| ((v as f32) * scale).round() as u8).collect()
+    } else {
+        raster
+            .chunks_exact(3)
+            .map(|px| {
+                // BT.601 luma, the standard grayscale conversion.
+                let y = 0.299 * px[0] as f32 + 0.587 * px[1] as f32 + 0.114 * px[2] as f32;
+                (y * scale).round().min(255.0) as u8
+            })
+            .collect()
+    };
+    ImageU8::from_vec(width, height, data)
+}
+
+/// Next whitespace-delimited header token, skipping `#` comments.
+fn token(bytes: &[u8], pos: &mut usize) -> Result<String> {
+    loop {
+        while *pos < bytes.len() && bytes[*pos].is_ascii_whitespace() {
+            *pos += 1;
+        }
+        if *pos < bytes.len() && bytes[*pos] == b'#' {
+            while *pos < bytes.len() && bytes[*pos] != b'\n' {
+                *pos += 1;
+            }
+            continue;
+        }
+        break;
+    }
+    let start = *pos;
+    while *pos < bytes.len() && !bytes[*pos].is_ascii_whitespace() {
+        *pos += 1;
+    }
+    if start == *pos {
+        return Err(Error::Codec("unexpected end of header".into()));
+    }
+    Ok(String::from_utf8_lossy(&bytes[start..*pos]).into_owned())
+}
+
+fn parse_num(tok: &str) -> Result<usize> {
+    tok.parse::<usize>().map_err(|_| Error::Codec(format!("bad header number `{tok}`")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_pgm() {
+        let img = ImageU8::from_vec(3, 2, vec![0, 64, 128, 192, 255, 10]).unwrap();
+        let dir = std::env::temp_dir().join("canny_par_pgm_test");
+        let path = dir.join("x.pgm");
+        write_pgm(&path, &img).unwrap();
+        let back = read_pgm(&path).unwrap();
+        assert_eq!(back, img);
+    }
+
+    #[test]
+    fn decodes_with_comments() {
+        let mut bytes = b"P5\n# a comment\n2 2\n255\n".to_vec();
+        bytes.extend_from_slice(&[1, 2, 3, 4]);
+        let img = decode(&bytes).unwrap();
+        assert_eq!(img.data(), &[1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn scales_maxval() {
+        let mut bytes = b"P5\n2 1\n100\n".to_vec();
+        bytes.extend_from_slice(&[0, 100]);
+        let img = decode(&bytes).unwrap();
+        assert_eq!(img.data(), &[0, 255]);
+    }
+
+    #[test]
+    fn ppm_luma_conversion() {
+        let mut bytes = b"P6\n1 1\n255\n".to_vec();
+        bytes.extend_from_slice(&[255, 0, 0]); // pure red
+        let img = decode(&bytes).unwrap();
+        assert_eq!(img.data(), &[76]); // 0.299 * 255
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_truncation() {
+        assert!(decode(b"P4\n1 1\n255\nx").is_err());
+        assert!(decode(b"P5\n4 4\n255\nxy").is_err());
+        assert!(decode(b"P5\n2 2\n70000\n____").is_err());
+    }
+}

@@ -1,0 +1,256 @@
+//! Procedural scene generators: the substitute for the paper's OpenCV
+//! test-image set (DESIGN.md §3). Each scene targets a workload class
+//! from the paper's motivation:
+//!
+//! * [`Scene::Shapes`] — geometric objects with crisp boundaries; the
+//!   classic edge-detection demo (paper Fig. 7).
+//! * [`Scene::RemoteSensing`] — terrain-like low-frequency field +
+//!   point noise; the Ali & Clausi remote-sensing use case (paper ref 7).
+//! * [`Scene::Text`] — dense small glyph-like rectangles; the
+//!   steganography / document IFE workload (paper ref 9).
+//! * [`Scene::Checker`] — periodic high-density edges; worst-case edge
+//!   density for throughput stress.
+//! * [`Scene::Gradient`] — smooth ramp; zero true edges (false-positive
+//!   probe).
+//! * [`Scene::Video`] — [`Scene::Shapes`] with a time parameter for the
+//!   streaming example's moving objects.
+
+use crate::image::ImageF32;
+use crate::util::Prng;
+
+/// Available synthetic scenes.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Scene {
+    Shapes { seed: u64 },
+    RemoteSensing { seed: u64, noise: f32 },
+    Text { seed: u64 },
+    Checker { cell: usize },
+    Gradient,
+    Video { seed: u64, frame: usize },
+}
+
+impl Scene {
+    /// Parse a scene name as used by the CLI (`--scene shapes:7`).
+    pub fn parse(spec: &str) -> Option<Scene> {
+        let (name, arg) = match spec.split_once(':') {
+            Some((n, a)) => (n, Some(a)),
+            None => (spec, None),
+        };
+        let num = |d: u64| arg.and_then(|a| a.parse::<u64>().ok()).unwrap_or(d);
+        match name {
+            "shapes" => Some(Scene::Shapes { seed: num(7) }),
+            "remote" | "remote-sensing" => {
+                Some(Scene::RemoteSensing { seed: num(7), noise: 0.08 })
+            }
+            "text" => Some(Scene::Text { seed: num(7) }),
+            "checker" => Some(Scene::Checker { cell: num(16) as usize }),
+            "gradient" => Some(Scene::Gradient),
+            "video" => Some(Scene::Video { seed: 7, frame: num(0) as usize }),
+            _ => None,
+        }
+    }
+}
+
+/// Generate a scene at the given size.
+pub fn generate(scene: Scene, width: usize, height: usize) -> ImageF32 {
+    match scene {
+        Scene::Shapes { seed } => shapes(width, height, seed, 0),
+        Scene::RemoteSensing { seed, noise } => remote_sensing(width, height, seed, noise),
+        Scene::Text { seed } => text(width, height, seed),
+        Scene::Checker { cell } => checker(width, height, cell.max(1)),
+        Scene::Gradient => gradient(width, height),
+        Scene::Video { seed, frame } => shapes(width, height, seed, frame),
+    }
+}
+
+fn shapes(w: usize, h: usize, seed: u64, frame: usize) -> ImageF32 {
+    let mut img = ImageF32::zeros(w, h);
+    // Soft background vignette so the scene is not trivially flat.
+    for y in 0..h {
+        for x in 0..w {
+            let fx = x as f32 / w.max(1) as f32 - 0.5;
+            let fy = y as f32 / h.max(1) as f32 - 0.5;
+            img.set(y, x, 0.25 + 0.1 * (1.0 - (fx * fx + fy * fy)));
+        }
+    }
+    let mut rng = Prng::new(seed);
+    let n = 6 + rng.next_below(6);
+    let drift = frame as f32 * 2.5;
+    for k in 0..n {
+        let cx = rng.next_below(w.max(1)) as f32 + drift * if k % 2 == 0 { 1.0 } else { -1.0 };
+        let cy = rng.next_below(h.max(1)) as f32 + drift * 0.5;
+        let r = (6 + rng.next_below(w.max(12) / 6)) as f32;
+        let val = 0.55 + 0.45 * rng.next_f32();
+        let rect = rng.next_below(3) == 0;
+        let (x0, x1) = ((cx - r).max(0.0) as usize, ((cx + r) as usize).min(w));
+        let (y0, y1) = ((cy - r).max(0.0) as usize, ((cy + r) as usize).min(h));
+        for y in y0..y1 {
+            for x in x0..x1 {
+                let dx = x as f32 - cx;
+                let dy = y as f32 - cy;
+                let inside = if rect {
+                    dx.abs() <= r * 0.8 && dy.abs() <= r * 0.55
+                } else {
+                    dx * dx + dy * dy <= r * r
+                };
+                if inside {
+                    img.set(y, x, val);
+                }
+            }
+        }
+    }
+    img
+}
+
+fn remote_sensing(w: usize, h: usize, seed: u64, noise: f32) -> ImageF32 {
+    let mut rng = Prng::new(seed);
+    let mut img = ImageF32::zeros(w, h);
+    // Low-frequency "terrain" as a sum of a few random plane waves,
+    // thresholded into patches (field / water / urban analogue).
+    let waves: Vec<(f32, f32, f32)> = (0..4)
+        .map(|_| {
+            (
+                0.02 + 0.08 * rng.next_f32(),
+                0.02 + 0.08 * rng.next_f32(),
+                std::f32::consts::TAU * rng.next_f32(),
+            )
+        })
+        .collect();
+    for y in 0..h {
+        for x in 0..w {
+            let mut v = 0.0f32;
+            for &(kx, ky, ph) in &waves {
+                v += (kx * x as f32 + ky * y as f32 + ph).sin();
+            }
+            // Quantize to 3 plateaus -> real region boundaries to detect.
+            let plateau = if v > 1.0 {
+                0.8
+            } else if v > -1.0 {
+                0.5
+            } else {
+                0.2
+            };
+            img.set(y, x, plateau);
+        }
+    }
+    // Point (salt-and-pepper-ish gaussian) noise, the paper's [7] theme.
+    for v in img.data_mut() {
+        *v = (*v + noise * rng.next_gaussian()).clamp(0.0, 1.0);
+    }
+    img
+}
+
+fn text(w: usize, h: usize, seed: u64) -> ImageF32 {
+    let mut img = ImageF32::zeros(w, h);
+    for v in img.data_mut() {
+        *v = 0.92; // paper-white page
+    }
+    let mut rng = Prng::new(seed);
+    let line_h = 12usize;
+    let mut y = 4usize;
+    while y + line_h < h {
+        let mut x = 4usize;
+        while x + 10 < w {
+            let glyph_w = 3 + rng.next_below(6);
+            if rng.next_f32() < 0.82 {
+                // A "glyph": dark rectangle with a random notch.
+                let gh = 5 + rng.next_below(5);
+                let notch = rng.next_below(glyph_w.max(1));
+                for gy in 0..gh.min(line_h) {
+                    for gx in 0..glyph_w {
+                        if gx == notch && gy > 1 {
+                            continue;
+                        }
+                        if y + gy < h && x + gx < w {
+                            img.set(y + gy, x + gx, 0.08);
+                        }
+                    }
+                }
+            }
+            x += glyph_w + 2 + rng.next_below(3);
+        }
+        y += line_h + 2;
+    }
+    img
+}
+
+fn checker(w: usize, h: usize, cell: usize) -> ImageF32 {
+    let mut img = ImageF32::zeros(w, h);
+    for y in 0..h {
+        for x in 0..w {
+            let v = ((x / cell) + (y / cell)) % 2;
+            img.set(y, x, if v == 0 { 0.15 } else { 0.85 });
+        }
+    }
+    img
+}
+
+fn gradient(w: usize, h: usize) -> ImageF32 {
+    let mut img = ImageF32::zeros(w, h);
+    for y in 0..h {
+        for x in 0..w {
+            img.set(y, x, (x + y) as f32 / (w + h).max(1) as f32);
+        }
+    }
+    img
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_scenes_generate_in_range() {
+        for scene in [
+            Scene::Shapes { seed: 1 },
+            Scene::RemoteSensing { seed: 1, noise: 0.1 },
+            Scene::Text { seed: 1 },
+            Scene::Checker { cell: 8 },
+            Scene::Gradient,
+            Scene::Video { seed: 1, frame: 3 },
+        ] {
+            let img = generate(scene, 64, 48);
+            assert_eq!(img.width(), 64);
+            assert_eq!(img.height(), 48);
+            let (lo, hi) = img.min_max();
+            assert!(lo >= 0.0 && hi <= 1.0, "{scene:?} out of range: {lo}..{hi}");
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = generate(Scene::Shapes { seed: 42 }, 100, 80);
+        let b = generate(Scene::Shapes { seed: 42 }, 100, 80);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn seeds_change_content() {
+        let a = generate(Scene::Shapes { seed: 1 }, 64, 64);
+        let b = generate(Scene::Shapes { seed: 2 }, 64, 64);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn video_frames_move() {
+        let f0 = generate(Scene::Video { seed: 3, frame: 0 }, 64, 64);
+        let f5 = generate(Scene::Video { seed: 3, frame: 5 }, 64, 64);
+        assert_ne!(f0, f5);
+    }
+
+    #[test]
+    fn checker_has_expected_contrast() {
+        let img = generate(Scene::Checker { cell: 4 }, 16, 16);
+        assert_eq!(img.get(0, 0), 0.15);
+        assert_eq!(img.get(0, 4), 0.85);
+        assert_eq!(img.get(4, 4), 0.15);
+    }
+
+    #[test]
+    fn parse_cli_names() {
+        assert_eq!(Scene::parse("shapes:9"), Some(Scene::Shapes { seed: 9 }));
+        assert_eq!(Scene::parse("gradient"), Some(Scene::Gradient));
+        assert_eq!(Scene::parse("checker:32"), Some(Scene::Checker { cell: 32 }));
+        assert!(Scene::parse("nope").is_none());
+    }
+}

@@ -1,0 +1,239 @@
+//! Tiling: the decomposition the GCP *kernel* layer feeds to the
+//! parallel patterns. A [`TileGrid`] splits an image interior into
+//! core tiles; each tile knows how to extract its haloed window from a
+//! padded image and where its output lands in the full-size result.
+
+use crate::error::{Error, Result};
+use crate::image::ImageF32;
+
+/// One tile of the decomposition.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Tile {
+    /// Tile index in the grid (row-major).
+    pub index: usize,
+    /// Top-left of the tile core in *image* coordinates.
+    pub y0: usize,
+    pub x0: usize,
+    /// Core size (may be smaller at the right/bottom edges).
+    pub core_h: usize,
+    pub core_w: usize,
+}
+
+/// A grid decomposition of a `width x height` image into tiles of at
+/// most `tile_h x tile_w` core pixels, each carrying a `halo` border.
+#[derive(Clone, Debug)]
+pub struct TileGrid {
+    pub image_w: usize,
+    pub image_h: usize,
+    pub tile_w: usize,
+    pub tile_h: usize,
+    pub halo: usize,
+    pub cols: usize,
+    pub rows: usize,
+}
+
+impl TileGrid {
+    pub fn new(
+        image_w: usize,
+        image_h: usize,
+        tile_w: usize,
+        tile_h: usize,
+        halo: usize,
+    ) -> Result<TileGrid> {
+        if image_w == 0 || image_h == 0 {
+            return Err(Error::Geometry("empty image".into()));
+        }
+        if tile_w == 0 || tile_h == 0 {
+            return Err(Error::Geometry("empty tile".into()));
+        }
+        Ok(TileGrid {
+            image_w,
+            image_h,
+            tile_w,
+            tile_h,
+            halo,
+            cols: image_w.div_ceil(tile_w),
+            rows: image_h.div_ceil(tile_h),
+        })
+    }
+
+    /// Total number of tiles.
+    pub fn len(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The `i`-th tile (row-major).
+    pub fn tile(&self, i: usize) -> Tile {
+        debug_assert!(i < self.len());
+        let ty = i / self.cols;
+        let tx = i % self.cols;
+        let y0 = ty * self.tile_h;
+        let x0 = tx * self.tile_w;
+        Tile {
+            index: i,
+            y0,
+            x0,
+            core_h: (self.image_h - y0).min(self.tile_h),
+            core_w: (self.image_w - x0).min(self.tile_w),
+        }
+    }
+
+    /// Iterate all tiles.
+    pub fn tiles(&self) -> impl Iterator<Item = Tile> + '_ {
+        (0..self.len()).map(|i| self.tile(i))
+    }
+
+    /// Extract the haloed input window for `tile` from the `halo`-padded
+    /// image (as produced by [`ImageF32::pad_replicate`]). The window is
+    /// always `(core + 2*halo)` sized: edge tiles read replicated pixels.
+    pub fn extract_padded(&self, padded: &ImageF32, tile: Tile) -> ImageF32 {
+        debug_assert_eq!(padded.width(), self.image_w + 2 * self.halo);
+        debug_assert_eq!(padded.height(), self.image_h + 2 * self.halo);
+        // Tile core at (y0, x0) in image coords = (y0 + halo, x0 + halo)
+        // in padded coords; the window starts halo earlier.
+        padded.crop(tile.x0, tile.y0, tile.core_w + 2 * self.halo, tile.core_h + 2 * self.halo)
+    }
+
+    /// Extract the haloed window for `tile` directly from the
+    /// *unpadded* image, replicating out-of-bounds pixels (clamp to
+    /// edge). Semantically identical to `pad_replicate(halo)` +
+    /// [`TileGrid::extract_padded`], but does the halo work inside the
+    /// (parallel) tile task instead of a serial whole-image pad pass —
+    /// see EXPERIMENTS.md §Perf.
+    pub fn extract_clamped(&self, img: &ImageF32, tile: Tile) -> ImageF32 {
+        debug_assert_eq!(img.width(), self.image_w);
+        debug_assert_eq!(img.height(), self.image_h);
+        let r = self.halo;
+        let (w, h) = (self.image_w, self.image_h);
+        let (ww, wh) = (tile.core_w + 2 * r, tile.core_h + 2 * r);
+        let mut data = Vec::with_capacity(ww * wh);
+        for wy in 0..wh {
+            // Source row, clamped to the image.
+            let sy = (tile.y0 + wy).saturating_sub(r).min(h - 1);
+            let src = img.row(sy);
+            // Columns [x0 - r, x0 - r + ww) clamped into [0, w).
+            let x_lo = (tile.x0 + 0).saturating_sub(r); // left clamp target
+            let left_pad = r.saturating_sub(tile.x0); // columns clamped to 0
+            let copy_w = (ww - left_pad).min(w - x_lo);
+            data.resize(data.len() + left_pad, src[0]);
+            data.extend_from_slice(&src[x_lo..x_lo + copy_w]);
+            let right_pad = ww - left_pad - copy_w;
+            data.resize(data.len() + right_pad, src[w - 1]);
+        }
+        ImageF32::from_vec(ww, wh, data).expect("window sized")
+    }
+
+    /// Extract a window for a *fixed-size* executable: the window is
+    /// `(full_core + 2*halo)` even when the tile core is clipped; the
+    /// caller discards rows/cols beyond `core_h/core_w` after execution.
+    /// Requires the padded image to have at least that much data, which
+    /// holds when callers pad with `pad_for_fixed`.
+    pub fn extract_fixed(&self, padded: &ImageF32, tile: Tile) -> ImageF32 {
+        padded.crop(tile.x0, tile.y0, self.tile_w + 2 * self.halo, self.tile_h + 2 * self.halo)
+    }
+
+    /// Pad an image so that every `extract_fixed` window is in bounds:
+    /// replicate-pad by `halo`, then extend right/bottom to the grid.
+    pub fn pad_for_fixed(&self, img: &ImageF32) -> ImageF32 {
+        let need_w = self.cols * self.tile_w + 2 * self.halo;
+        let need_h = self.rows * self.tile_h + 2 * self.halo;
+        let base = img.pad_replicate(self.halo);
+        if base.width() == need_w && base.height() == need_h {
+            return base;
+        }
+        let mut out = ImageF32::zeros(need_w, need_h);
+        for y in 0..need_h {
+            let sy = y.min(base.height() - 1);
+            for x in 0..need_w {
+                let sx = x.min(base.width() - 1);
+                out.set(y, x, base.get(sy, sx));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_covers_image_exactly() {
+        let g = TileGrid::new(300, 200, 128, 128, 4).unwrap();
+        assert_eq!(g.cols, 3);
+        assert_eq!(g.rows, 2);
+        let mut covered = vec![false; 300 * 200];
+        for t in g.tiles() {
+            for y in t.y0..t.y0 + t.core_h {
+                for x in t.x0..t.x0 + t.core_w {
+                    assert!(!covered[y * 300 + x], "tile overlap at {y},{x}");
+                    covered[y * 300 + x] = true;
+                }
+            }
+        }
+        assert!(covered.iter().all(|&c| c), "coverage gap");
+    }
+
+    #[test]
+    fn edge_tiles_clip() {
+        let g = TileGrid::new(130, 130, 128, 128, 4).unwrap();
+        let t = g.tile(3); // bottom-right
+        assert_eq!((t.core_w, t.core_h), (2, 2));
+    }
+
+    #[test]
+    fn extract_padded_matches_direct_window() {
+        let img =
+            ImageF32::from_vec(8, 8, (0..64).map(|v| v as f32).collect()).unwrap();
+        let g = TileGrid::new(8, 8, 4, 4, 2).unwrap();
+        let padded = img.pad_replicate(2);
+        let t = g.tile(3); // core at (4,4)
+        let win = g.extract_padded(&padded, t);
+        assert_eq!(win.width(), 8);
+        assert_eq!(win.height(), 8);
+        // Centre of the window = original pixel at (4+1, 4+1)... window
+        // (wy, wx) maps to image (t.y0 + wy - halo, ...) clamped.
+        assert_eq!(win.get(2, 2), img.get(4, 4));
+        assert_eq!(win.get(3, 4), img.get(5, 6));
+    }
+
+    #[test]
+    fn fixed_windows_in_bounds() {
+        let img = ImageF32::zeros(130, 70);
+        let g = TileGrid::new(130, 70, 64, 64, 4).unwrap();
+        let padded = g.pad_for_fixed(&img);
+        assert_eq!(padded.width(), 3 * 64 + 8);
+        assert_eq!(padded.height(), 2 * 64 + 8);
+        for t in g.tiles() {
+            let win = g.extract_fixed(&padded, t);
+            assert_eq!(win.width(), 72);
+            assert_eq!(win.height(), 72);
+        }
+    }
+
+    #[test]
+    fn extract_clamped_equals_pad_then_extract() {
+        let mut rng = crate::util::Prng::new(5);
+        for (w, h, tile, halo) in [(8usize, 8usize, 4usize, 2usize), (13, 9, 5, 4), (30, 22, 16, 4)] {
+            let data: Vec<f32> = (0..w * h).map(|_| rng.next_f32()).collect();
+            let img = ImageF32::from_vec(w, h, data).unwrap();
+            let g = TileGrid::new(w, h, tile, tile, halo).unwrap();
+            let padded = img.pad_replicate(halo);
+            for t in g.tiles() {
+                let a = g.extract_padded(&padded, t);
+                let b = g.extract_clamped(&img, t);
+                assert_eq!(a, b, "{w}x{h} tile {tile} halo {halo} idx {}", t.index);
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_degenerate() {
+        assert!(TileGrid::new(0, 10, 4, 4, 1).is_err());
+        assert!(TileGrid::new(10, 10, 0, 4, 1).is_err());
+    }
+}

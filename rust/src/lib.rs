@@ -1,0 +1,52 @@
+//! # canny-par — High-Performance Parallel Canny Edge Detector
+//!
+//! Production reproduction of *"High Performance Canny Edge Detector using
+//! Parallel Patterns for Scalability on Modern Multicore Processors"*
+//! (CS.DC 2017) as a three-layer Rust + JAX/Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's coordination contribution: a
+//!   Cilk-style work-stealing scheduler ([`scheduler`]), the structured
+//!   parallel-pattern catalogue ([`patterns`]), the GCP
+//!   shell/kernel/core coordinator ([`coordinator`]), a sampling CPU
+//!   profiler ([`profiler`]) and a deterministic multicore simulator
+//!   ([`simsched`]) for the paper's 4/8-CPU topologies.
+//! * **L2/L1 (python/, build-time only)** — the Canny front-end
+//!   (Gaussian → Sobel → NMS → double threshold) as JAX + Pallas
+//!   kernels, AOT-lowered to HLO text consumed by [`runtime`] through
+//!   the XLA PJRT CPU client. Python is never on the request path.
+//!
+//! The native Rust stages in [`canny`] mirror the Pallas kernels
+//! bit-for-bit-in-intent (same constants, same tie rules), so every
+//! execution engine — serial, pattern-parallel native, pattern-parallel
+//! XLA — produces the same edge map (the paper's "deterministic output"
+//! goal).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use canny_par::canny::{CannyParams, Engine};
+//! use canny_par::coordinator::Detector;
+//! use canny_par::image::synth::{Scene, generate};
+//!
+//! let img = generate(Scene::Shapes { seed: 7 }, 512, 512);
+//! let det = Detector::builder().workers(4).engine(Engine::Patterns).build().unwrap();
+//! let edges = det.detect(&img, &CannyParams::default()).unwrap();
+//! println!("{} edge pixels", edges.count_edges());
+//! ```
+
+pub mod amdahl;
+pub mod bench;
+pub mod canny;
+pub mod config;
+pub mod coordinator;
+pub mod error;
+pub mod image;
+pub mod metrics;
+pub mod patterns;
+pub mod profiler;
+pub mod runtime;
+pub mod scheduler;
+pub mod simsched;
+pub mod util;
+
+pub use error::{Error, Result};

@@ -1,0 +1,252 @@
+//! Edge-quality and statistical metrics: the quantitative backing for
+//! the paper's qualitative claims (good detection → SNR, good
+//! localization → Pratt's FOM, determinism → exact diffs, even load →
+//! coefficient of variation).
+
+use crate::image::{EdgeMap, ImageF32};
+
+/// Peak signal-to-noise ratio between two images (dB). `+inf` if equal.
+pub fn psnr(a: &ImageF32, b: &ImageF32) -> f64 {
+    assert_eq!((a.width(), a.height()), (b.width(), b.height()));
+    let mse: f64 = a
+        .data()
+        .iter()
+        .zip(b.data())
+        .map(|(&x, &y)| {
+            let d = (x - y) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / a.len() as f64;
+    if mse == 0.0 {
+        f64::INFINITY
+    } else {
+        10.0 * (1.0 / mse).log10()
+    }
+}
+
+/// Discrete analogue of the paper's detection-SNR criterion: edge
+/// response amplitude over noise standard deviation, measured from the
+/// gradient magnitude on edge vs non-edge pixels of a ground truth.
+pub fn detection_snr(magnitude: &ImageF32, truth: &EdgeMap) -> f64 {
+    assert_eq!((magnitude.width(), magnitude.height()), (truth.width(), truth.height()));
+    let (mut sig, mut nsig) = (0.0f64, 0usize);
+    let (mut noise_sq, mut nnoise) = (0.0f64, 0usize);
+    for y in 0..truth.height() {
+        for x in 0..truth.width() {
+            let m = magnitude.get(y, x) as f64;
+            if truth.is_edge(y, x) {
+                sig += m;
+                nsig += 1;
+            } else {
+                noise_sq += m * m;
+                nnoise += 1;
+            }
+        }
+    }
+    if nsig == 0 || nnoise == 0 {
+        return 0.0;
+    }
+    let a = sig / nsig as f64;
+    let sigma = (noise_sq / nnoise as f64).sqrt();
+    if sigma == 0.0 {
+        f64::INFINITY
+    } else {
+        a / sigma
+    }
+}
+
+/// Pratt's Figure of Merit: localization quality of `detected` against
+/// `truth` (1.0 = perfect). `alpha` is the standard 1/9 scaling.
+pub fn pratt_fom(detected: &EdgeMap, truth: &EdgeMap) -> f64 {
+    assert_eq!((detected.width(), detected.height()), (truth.width(), truth.height()));
+    let (w, h) = (truth.width(), truth.height());
+    let truth_pts: Vec<(i64, i64)> = (0..h)
+        .flat_map(|y| (0..w).filter(move |&x| truth.is_edge(y, x)).map(move |x| (y as i64, x as i64)))
+        .collect();
+    let n_truth = truth_pts.len();
+    let n_det = detected.count_edges();
+    if n_truth == 0 || n_det == 0 {
+        return if n_truth == n_det { 1.0 } else { 0.0 };
+    }
+    // Distance transform via two-pass chamfer would be fancier; edge
+    // sets here are small enough for a windowed nearest search.
+    let alpha = 1.0 / 9.0;
+    let mut sum = 0.0f64;
+    // Bucket truth points by row for a banded nearest-neighbour query.
+    let mut rows: Vec<Vec<i64>> = vec![Vec::new(); h];
+    for &(y, x) in &truth_pts {
+        rows[y as usize].push(x);
+    }
+    for y in 0..h {
+        for x in 0..w {
+            if !detected.is_edge(y, x) {
+                continue;
+            }
+            let mut best = f64::INFINITY;
+            // Search rows outward; stop when the row distance alone
+            // exceeds the best found.
+            for dy in 0..h as i64 {
+                if (dy * dy) as f64 >= best {
+                    break;
+                }
+                for ry in [y as i64 - dy, y as i64 + dy] {
+                    if ry < 0 || ry >= h as i64 || (dy > 0 && ry == y as i64) {
+                        continue;
+                    }
+                    for &rx in &rows[ry as usize] {
+                        let d2 = (dy * dy + (rx - x as i64) * (rx - x as i64)) as f64;
+                        if d2 < best {
+                            best = d2;
+                        }
+                    }
+                }
+            }
+            sum += 1.0 / (1.0 + alpha * best);
+        }
+    }
+    sum / n_truth.max(n_det) as f64
+}
+
+/// Precision/recall of detected edges against a ground truth with a
+/// tolerance of `tol` pixels (Chebyshev distance).
+pub fn precision_recall(detected: &EdgeMap, truth: &EdgeMap, tol: usize) -> (f64, f64) {
+    assert_eq!((detected.width(), detected.height()), (truth.width(), truth.height()));
+    let near = |map: &EdgeMap, y: usize, x: usize| -> bool {
+        let (w, h) = (map.width() as i64, map.height() as i64);
+        let t = tol as i64;
+        for dy in -t..=t {
+            for dx in -t..=t {
+                let (ny, nx) = (y as i64 + dy, x as i64 + dx);
+                if ny >= 0 && ny < h && nx >= 0 && nx < w && map.is_edge(ny as usize, nx as usize)
+                {
+                    return true;
+                }
+            }
+        }
+        false
+    };
+    let (mut tp_p, mut n_p) = (0usize, 0usize);
+    for y in 0..detected.height() {
+        for x in 0..detected.width() {
+            if detected.is_edge(y, x) {
+                n_p += 1;
+                if near(truth, y, x) {
+                    tp_p += 1;
+                }
+            }
+        }
+    }
+    let (mut tp_r, mut n_r) = (0usize, 0usize);
+    for y in 0..truth.height() {
+        for x in 0..truth.width() {
+            if truth.is_edge(y, x) {
+                n_r += 1;
+                if near(detected, y, x) {
+                    tp_r += 1;
+                }
+            }
+        }
+    }
+    let precision = if n_p == 0 { 1.0 } else { tp_p as f64 / n_p as f64 };
+    let recall = if n_r == 0 { 1.0 } else { tp_r as f64 / n_r as f64 };
+    (precision, recall)
+}
+
+/// Coefficient of variation (stddev / mean) — the load-balance metric
+/// for Figure 3 (0 = perfectly even distribution).
+pub fn coefficient_of_variation(values: &[f64]) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    let mean = values.iter().sum::<f64>() / values.len() as f64;
+    if mean == 0.0 {
+        return 0.0;
+    }
+    let var =
+        values.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / values.len() as f64;
+    var.sqrt() / mean
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::EdgeMap;
+
+    fn em(w: usize, h: usize, pts: &[(usize, usize)]) -> EdgeMap {
+        let mut d = vec![0u8; w * h];
+        for &(y, x) in pts {
+            d[y * w + x] = 255;
+        }
+        EdgeMap::new(w, h, d).unwrap()
+    }
+
+    #[test]
+    fn psnr_identical_is_inf() {
+        let a = ImageF32::zeros(4, 4);
+        assert!(psnr(&a, &a).is_infinite());
+    }
+
+    #[test]
+    fn psnr_decreases_with_noise() {
+        let a = ImageF32::zeros(8, 8);
+        let mut b = ImageF32::zeros(8, 8);
+        let mut c = ImageF32::zeros(8, 8);
+        b.set(0, 0, 0.1);
+        c.set(0, 0, 0.5);
+        assert!(psnr(&a, &b) > psnr(&a, &c));
+    }
+
+    #[test]
+    fn fom_perfect_match_is_one() {
+        let t = em(10, 10, &[(5, 2), (5, 3), (5, 4)]);
+        assert!((pratt_fom(&t, &t) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fom_penalizes_displacement() {
+        let t = em(10, 10, &[(5, 2), (5, 3), (5, 4)]);
+        let near = em(10, 10, &[(6, 2), (6, 3), (6, 4)]);
+        let far = em(10, 10, &[(9, 2), (9, 3), (9, 4)]);
+        let f_near = pratt_fom(&near, &t);
+        let f_far = pratt_fom(&far, &t);
+        assert!(f_near > f_far, "{f_near} vs {f_far}");
+        assert!(f_near < 1.0);
+    }
+
+    #[test]
+    fn fom_empty_cases() {
+        let none = em(4, 4, &[]);
+        let some = em(4, 4, &[(1, 1)]);
+        assert_eq!(pratt_fom(&none, &none), 1.0);
+        assert_eq!(pratt_fom(&some, &none), 0.0);
+        assert_eq!(pratt_fom(&none, &some), 0.0);
+    }
+
+    #[test]
+    fn precision_recall_tolerant() {
+        let t = em(10, 10, &[(5, 5)]);
+        let d = em(10, 10, &[(5, 6)]); // off by one
+        let (p0, r0) = precision_recall(&d, &t, 0);
+        assert_eq!((p0, r0), (0.0, 0.0));
+        let (p1, r1) = precision_recall(&d, &t, 1);
+        assert_eq!((p1, r1), (1.0, 1.0));
+    }
+
+    #[test]
+    fn detection_snr_strong_edges_win() {
+        let mut mag = ImageF32::zeros(4, 4);
+        let t = em(4, 4, &[(1, 1), (2, 2)]);
+        mag.set(1, 1, 1.0);
+        mag.set(2, 2, 1.0);
+        mag.set(0, 3, 0.1); // background noise
+        let snr = detection_snr(&mag, &t);
+        assert!(snr > 10.0, "snr={snr}");
+    }
+
+    #[test]
+    fn cov_uniform_is_zero() {
+        assert_eq!(coefficient_of_variation(&[2.0, 2.0, 2.0]), 0.0);
+        assert!(coefficient_of_variation(&[1.0, 3.0]) > 0.4);
+    }
+}

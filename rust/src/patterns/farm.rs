@@ -1,0 +1,110 @@
+//! Task-farm / workpile pattern with bounded in-flight jobs
+//! (backpressure) — the batch-IFE workload from the paper's motivation
+//! ("large quantities of images … on the INTERNET").
+//!
+//! Jobs stream from an iterator; at most `capacity` are in flight; the
+//! results vector is returned in submission order (deterministic).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+
+use crate::scheduler::Pool;
+
+/// Statistics from a farm run (backpressure visibility).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FarmStats {
+    /// Jobs processed.
+    pub jobs: usize,
+    /// Times the feeder had to wait because `capacity` jobs were in flight.
+    pub stalls: usize,
+}
+
+/// Stream `jobs` through the pool with at most `capacity` in flight.
+pub fn farm_stream<J, R, F>(
+    pool: &Pool,
+    jobs: impl IntoIterator<Item = J>,
+    capacity: usize,
+    f: F,
+) -> (Vec<R>, FarmStats)
+where
+    J: Send,
+    R: Send,
+    F: Fn(usize, J) -> R + Sync,
+{
+    let capacity = capacity.max(1);
+    let results: Mutex<Vec<Option<R>>> = Mutex::new(Vec::new());
+    let in_flight = AtomicUsize::new(0);
+    let gate = (Mutex::new(()), Condvar::new());
+    let mut stalls = 0usize;
+    let mut submitted = 0usize;
+
+    pool.scope(|s| {
+        for (idx, job) in jobs.into_iter().enumerate() {
+            // Backpressure: wait until a slot frees.
+            if in_flight.load(Ordering::Acquire) >= capacity {
+                stalls += 1;
+                let mut g = gate.0.lock().unwrap();
+                while in_flight.load(Ordering::Acquire) >= capacity {
+                    g = gate.1.wait(g).unwrap();
+                }
+            }
+            in_flight.fetch_add(1, Ordering::AcqRel);
+            results.lock().unwrap().push(None);
+            submitted += 1;
+            let results = &results;
+            let in_flight = &in_flight;
+            let gate = &gate;
+            let f = &f;
+            s.spawn(move || {
+                let r = f(idx, job);
+                results.lock().unwrap()[idx] = Some(r);
+                in_flight.fetch_sub(1, Ordering::AcqRel);
+                let _g = gate.0.lock().unwrap();
+                gate.1.notify_all();
+            });
+        }
+    });
+
+    let out: Vec<R> =
+        results.into_inner().unwrap().into_iter().map(|r| r.expect("job completed")).collect();
+    debug_assert_eq!(out.len(), submitted);
+    (out, FarmStats { jobs: submitted, stalls })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_in_submission_order() {
+        let pool = Pool::new(4).unwrap();
+        let (out, stats) = farm_stream(&pool, 0..200, 8, |_, j: i32| j * j);
+        let expect: Vec<i32> = (0..200).map(|j| j * j).collect();
+        assert_eq!(out, expect);
+        assert_eq!(stats.jobs, 200);
+    }
+
+    #[test]
+    fn capacity_bounds_in_flight() {
+        let pool = Pool::new(4).unwrap();
+        let peak = AtomicUsize::new(0);
+        let current = AtomicUsize::new(0);
+        let cap = 3usize;
+        let (_out, stats) = farm_stream(&pool, 0..100, cap, |_, _j: i32| {
+            let c = current.fetch_add(1, Ordering::AcqRel) + 1;
+            peak.fetch_max(c, Ordering::AcqRel);
+            std::thread::sleep(std::time::Duration::from_micros(200));
+            current.fetch_sub(1, Ordering::AcqRel);
+        });
+        assert!(peak.load(Ordering::Acquire) <= cap, "peak {} > cap", peak.load(Ordering::Acquire));
+        assert!(stats.stalls > 0, "expected backpressure stalls");
+    }
+
+    #[test]
+    fn empty_stream() {
+        let pool = Pool::new(2).unwrap();
+        let (out, stats) = farm_stream(&pool, Vec::<u8>::new(), 4, |_, j| j);
+        assert!(out.is_empty());
+        assert_eq!(stats.jobs, 0);
+    }
+}

@@ -1,0 +1,309 @@
+//! Structured parallel patterns (the paper's Figure 6 catalogue,
+//! after McCool/Reinders/Robison) built on the work-stealing
+//! [`crate::scheduler::Pool`].
+//!
+//! Every pattern is **deterministic**: outputs depend only on inputs,
+//! never on scheduling. That is the paper's stated design goal
+//! ("aiming for deterministic output") and it is achieved the same way
+//! Cilk Plus patterns achieve it — disjoint writes for maps/stencils,
+//! fixed-shape combination trees for reductions/scans.
+//!
+//! | paper pattern   | here                                        |
+//! |-----------------|---------------------------------------------|
+//! | map (cilk_for)  | [`par_map`], [`par_for`], [`par_rows`]      |
+//! | stencil         | [`par_rows`] + halo discipline (see canny)  |
+//! | reduce          | [`par_reduce`]                              |
+//! | scan            | [`par_scan`]                                |
+//! | fork–join       | [`Pool::scope`](crate::scheduler::Pool)     |
+//! | pipeline        | [`pipeline::pipeline3`]                     |
+//! | farm / workpile | [`farm::farm_stream`]                       |
+
+pub mod farm;
+pub mod pipeline;
+
+use std::mem::MaybeUninit;
+use std::ops::Range;
+
+use crate::scheduler::Pool;
+use crate::util::SharedSlice;
+
+/// Deterministic chunk boundaries: `len` split into chunks of at most
+/// `grain` (>= 1), identical for every run and worker count.
+pub fn chunks(len: usize, grain: usize) -> Vec<Range<usize>> {
+    let grain = grain.max(1);
+    (0..len.div_ceil(grain)).map(|c| c * grain..((c + 1) * grain).min(len)).collect()
+}
+
+/// A sensible grain so that ~4 chunks exist per worker (steal slack
+/// without drowning in scheduling overhead).
+pub fn auto_grain(len: usize, workers: usize) -> usize {
+    (len / (workers.max(1) * 4)).max(1)
+}
+
+/// Parallel map over a slice: `out[i] = f(i, &items[i])`.
+pub fn par_map<T, R, F>(pool: &Pool, items: &[T], grain: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let n = items.len();
+    let mut out: Vec<MaybeUninit<R>> = Vec::with_capacity(n);
+    // SAFETY: every index is written exactly once below before assuming init.
+    unsafe { out.set_len(n) };
+    {
+        let shared = SharedSlice::new(&mut out);
+        let f = &f;
+        pool.scope(|s| {
+            for range in chunks(n, grain) {
+                let shared = &shared;
+                s.spawn(move || {
+                    // SAFETY: chunk ranges are disjoint by construction.
+                    let slots = unsafe { shared.range_mut(range.start, range.end) };
+                    for (k, slot) in slots.iter_mut().enumerate() {
+                        let i = range.start + k;
+                        slot.write(f(i, &items[i]));
+                    }
+                });
+            }
+        });
+    }
+    // SAFETY: all n slots written (scope joined all chunks).
+    unsafe { std::mem::transmute::<Vec<MaybeUninit<R>>, Vec<R>>(out) }
+}
+
+/// Parallel for over an index range (the `cilk_for` analogue).
+pub fn par_for<F>(pool: &Pool, range: Range<usize>, grain: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let len = range.end.saturating_sub(range.start);
+    let base = range.start;
+    let f = &f;
+    pool.scope(|s| {
+        for chunk in chunks(len, grain) {
+            s.spawn(move || {
+                for i in chunk {
+                    f(base + i);
+                }
+            });
+        }
+    });
+}
+
+/// Parallel iteration over row bands: `f(y0..y1)` for disjoint bands
+/// covering `0..height`. The workhorse for image stencils: each band
+/// writes disjoint output rows, reads shared input freely.
+pub fn par_rows<F>(pool: &Pool, height: usize, grain: usize, f: F)
+where
+    F: Fn(Range<usize>) + Sync,
+{
+    let f = &f;
+    pool.scope(|s| {
+        for band in chunks(height, grain) {
+            s.spawn(move || f(band));
+        }
+    });
+}
+
+/// Deterministic parallel reduction: chunk partials computed in
+/// parallel, combined left-to-right in chunk order. For f32 this gives
+/// bitwise-stable results for a fixed `grain`, independent of workers.
+pub fn par_reduce<T, A, M, C>(
+    pool: &Pool,
+    items: &[T],
+    grain: usize,
+    identity: A,
+    map: M,
+    combine: C,
+) -> A
+where
+    T: Sync,
+    A: Send + Sync + Clone,
+    M: Fn(&T) -> A + Sync,
+    C: Fn(A, A) -> A + Sync,
+{
+    let ranges = chunks(items.len(), grain);
+    let partials = par_map(pool, &ranges, 1, |_, range| {
+        let mut acc = identity.clone();
+        for item in &items[range.clone()] {
+            acc = combine(acc, map(item));
+        }
+        acc
+    });
+    partials.into_iter().fold(identity, combine)
+}
+
+/// Deterministic inclusive parallel scan (prefix op) with associative
+/// `combine`. Three phases: chunk-local scans, serial chunk-offset
+/// pass, parallel offset application — the textbook pattern.
+pub fn par_scan<T, C>(pool: &Pool, items: &[T], grain: usize, combine: C) -> Vec<T>
+where
+    T: Send + Sync + Clone,
+    C: Fn(&T, &T) -> T + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let ranges = chunks(n, grain);
+    // Phase 1: local inclusive scans.
+    let mut scanned: Vec<Vec<T>> = par_map(pool, &ranges, 1, |_, range| {
+        let slice = &items[range.clone()];
+        let mut acc = Vec::with_capacity(slice.len());
+        for item in slice {
+            let next = match acc.last() {
+                None => item.clone(),
+                Some(prev) => combine(prev, item),
+            };
+            acc.push(next);
+        }
+        acc
+    });
+    // Phase 2: serial exclusive scan of chunk totals.
+    let mut offsets: Vec<Option<T>> = Vec::with_capacity(scanned.len());
+    let mut running: Option<T> = None;
+    for chunk in &scanned {
+        offsets.push(running.clone());
+        let total = chunk.last().expect("non-empty chunk");
+        running = Some(match &running {
+            None => total.clone(),
+            Some(r) => combine(r, total),
+        });
+    }
+    // Phase 3: apply offsets in parallel.
+    {
+        let offsets = &offsets;
+        let combine = &combine;
+        let chunk_refs: Vec<&mut Vec<T>> = scanned.iter_mut().collect();
+        pool.scope(|s| {
+            for (ci, chunk) in chunk_refs.into_iter().enumerate() {
+                s.spawn(move || {
+                    if let Some(off) = &offsets[ci] {
+                        for v in chunk.iter_mut() {
+                            *v = combine(off, v);
+                        }
+                    }
+                });
+            }
+        });
+    }
+    scanned.into_iter().flatten().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool() -> Pool {
+        Pool::new(4).unwrap()
+    }
+
+    #[test]
+    fn chunks_cover_disjointly() {
+        for (len, grain) in [(10, 3), (1, 1), (100, 7), (5, 100)] {
+            let cs = chunks(len, grain);
+            let mut next = 0;
+            for c in &cs {
+                assert_eq!(c.start, next);
+                assert!(c.end > c.start);
+                next = c.end;
+            }
+            assert_eq!(next, len);
+        }
+        assert!(chunks(0, 4).is_empty());
+    }
+
+    #[test]
+    fn par_map_matches_serial() {
+        let p = pool();
+        let items: Vec<u64> = (0..1000).collect();
+        let out = par_map(&p, &items, 13, |i, &x| x * 2 + i as u64);
+        let expect: Vec<u64> = items.iter().enumerate().map(|(i, &x)| x * 2 + i as u64).collect();
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn par_map_empty_and_single() {
+        let p = pool();
+        let empty: Vec<u32> = vec![];
+        assert!(par_map(&p, &empty, 4, |_, &x| x).is_empty());
+        assert_eq!(par_map(&p, &[5u32], 4, |_, &x| x + 1), vec![6]);
+    }
+
+    #[test]
+    fn par_for_visits_every_index_once() {
+        let p = pool();
+        let hits: Vec<std::sync::atomic::AtomicU32> =
+            (0..500).map(|_| std::sync::atomic::AtomicU32::new(0)).collect();
+        par_for(&p, 0..500, 7, |i| {
+            hits[i].fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        });
+        assert!(hits
+            .iter()
+            .all(|h| h.load(std::sync::atomic::Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn par_rows_bands_cover() {
+        let p = pool();
+        let rows = std::sync::Mutex::new(vec![false; 97]);
+        par_rows(&p, 97, 10, |band| {
+            let mut g = rows.lock().unwrap();
+            for y in band {
+                assert!(!g[y]);
+                g[y] = true;
+            }
+        });
+        assert!(rows.lock().unwrap().iter().all(|&b| b));
+    }
+
+    #[test]
+    fn par_reduce_deterministic_f32() {
+        let p = pool();
+        let items: Vec<f32> = (0..10_000).map(|i| (i as f32).sin()).collect();
+        let a = par_reduce(&p, &items, 64, 0.0f32, |&x| x, |a, b| a + b);
+        let b = par_reduce(&p, &items, 64, 0.0f32, |&x| x, |a, b| a + b);
+        assert_eq!(a.to_bits(), b.to_bits(), "bitwise-unstable reduction");
+        // And independent of worker count:
+        let p1 = Pool::new(1).unwrap();
+        let c = par_reduce(&p1, &items, 64, 0.0f32, |&x| x, |a, b| a + b);
+        assert_eq!(a.to_bits(), c.to_bits());
+    }
+
+    #[test]
+    fn par_reduce_max() {
+        let p = pool();
+        let items: Vec<i64> = vec![3, -1, 42, 7, 42, 0];
+        let m = par_reduce(&p, &items, 2, i64::MIN, |&x| x, |a, b| a.max(b));
+        assert_eq!(m, 42);
+    }
+
+    #[test]
+    fn par_scan_matches_serial() {
+        let p = pool();
+        let items: Vec<u64> = (1..=100).collect();
+        let out = par_scan(&p, &items, 9, |a, b| a + b);
+        let mut expect = Vec::new();
+        let mut acc = 0u64;
+        for &x in &items {
+            acc += x;
+            expect.push(acc);
+        }
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn par_scan_empty() {
+        let p = pool();
+        let empty: Vec<u32> = vec![];
+        assert!(par_scan(&p, &empty, 4, |a, b| a + b).is_empty());
+    }
+
+    #[test]
+    fn auto_grain_reasonable() {
+        assert_eq!(auto_grain(0, 4), 1);
+        assert_eq!(auto_grain(1600, 4), 100);
+        assert!(auto_grain(3, 8) >= 1);
+    }
+}

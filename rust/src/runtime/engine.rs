@@ -1,0 +1,197 @@
+//! The XLA execution engine: compiles HLO-text artifacts once at
+//! startup (PJRT CPU client) and executes them per tile from worker
+//! threads.
+//!
+//! Concurrency model: `PjRtLoadedExecutable::execute` takes `&self`
+//! through a raw C handle. We keep `replicas` independently-compiled
+//! copies of each entry, each behind its own mutex; worker `slot`s hash
+//! onto replicas so concurrent tiles don't serialize on one handle.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use crate::error::{Error, Result};
+use crate::image::ImageF32;
+use crate::runtime::manifest::{ArtifactEntry, Manifest, TileConfig};
+
+/// One compiled executable behind a mutex.
+struct ExeSlot(Mutex<xla::PjRtLoadedExecutable>);
+
+// SAFETY: PJRT CPU executables are internally thread-safe for execute;
+// we additionally serialize per-slot through the mutex. The raw handles
+// are only freed on drop, which happens once (owned here).
+unsafe impl Send for ExeSlot {}
+unsafe impl Sync for ExeSlot {}
+
+struct Entry {
+    meta: ArtifactEntry,
+    slots: Vec<ExeSlot>,
+}
+
+/// Loads + runs the AOT artifacts for one tile configuration.
+pub struct XlaEngine {
+    client: xla::PjRtClient,
+    tile_name: String,
+    core_h: usize,
+    core_w: usize,
+    halo: usize,
+    entries: BTreeMap<String, Entry>,
+}
+
+// SAFETY: the client handle is only used for compile (startup) and is
+// thread-safe in the CPU plugin; see ExeSlot for executables.
+unsafe impl Send for XlaEngine {}
+unsafe impl Sync for XlaEngine {}
+
+impl XlaEngine {
+    /// Load `tile_name` from the artifacts at `dir`, compiling
+    /// `replicas` copies of each entry point.
+    pub fn load(dir: &Path, tile_name: &str, replicas: usize) -> Result<XlaEngine> {
+        let manifest = Manifest::load(dir)?;
+        Self::from_manifest(&manifest, tile_name, replicas)
+    }
+
+    /// Load from an already-parsed manifest.
+    pub fn from_manifest(
+        manifest: &Manifest,
+        tile_name: &str,
+        replicas: usize,
+    ) -> Result<XlaEngine> {
+        let tile: &TileConfig = manifest.tile(tile_name)?;
+        let client = xla::PjRtClient::cpu()?;
+        let replicas = replicas.max(1);
+        let mut entries = BTreeMap::new();
+        for (name, meta) in &tile.entries {
+            let proto = xla::HloModuleProto::from_text_file(
+                meta.path
+                    .to_str()
+                    .ok_or_else(|| Error::Artifact("non-utf8 artifact path".into()))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let slots = (0..replicas)
+                .map(|_| Ok(ExeSlot(Mutex::new(client.compile(&comp)?))))
+                .collect::<Result<Vec<_>>>()?;
+            entries.insert(name.clone(), Entry { meta: meta.clone(), slots });
+        }
+        Ok(XlaEngine {
+            client,
+            tile_name: tile.name.clone(),
+            core_h: tile.core_h,
+            core_w: tile.core_w,
+            halo: manifest.halo,
+            entries,
+        })
+    }
+
+    pub fn tile_name(&self) -> &str {
+        &self.tile_name
+    }
+
+    /// (core_h, core_w) of the fixed tile this engine executes.
+    pub fn tile_core(&self) -> (usize, usize) {
+        (self.core_h, self.core_w)
+    }
+
+    pub fn halo(&self) -> usize {
+        self.halo
+    }
+
+    /// PJRT platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Entry names available at this tile.
+    pub fn entry_names(&self) -> Vec<&str> {
+        self.entries.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Execute entry `name` with `inputs`; returns output literals.
+    /// `slot` selects the executable replica (use the worker index).
+    pub fn run_entry(
+        &self,
+        name: &str,
+        inputs: &[xla::Literal],
+        slot: usize,
+    ) -> Result<Vec<xla::Literal>> {
+        let entry = self
+            .entries
+            .get(name)
+            .ok_or_else(|| Error::Artifact(format!("no entry `{name}` at {}", self.tile_name)))?;
+        if inputs.len() != entry.meta.inputs.len() {
+            return Err(Error::Xla(format!(
+                "{name}: {} inputs given, {} expected",
+                inputs.len(),
+                entry.meta.inputs.len()
+            )));
+        }
+        let exe = &entry.slots[slot % entry.slots.len()];
+        let guard = exe.0.lock().unwrap();
+        let result = guard.execute::<xla::Literal>(inputs)?;
+        drop(guard);
+        let literal = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let outs = literal
+            .to_tuple()
+            .map_err(|e| Error::Xla(format!("{name}: untupling failed: {e}")))?;
+        if outs.len() != entry.meta.outputs.len() {
+            return Err(Error::Xla(format!(
+                "{name}: {} outputs, {} expected",
+                outs.len(),
+                entry.meta.outputs.len()
+            )));
+        }
+        Ok(outs)
+    }
+
+    /// Execute the fused Canny front on one padded tile window
+    /// (`(core+2h) x (core+2h)`), returning image-shaped (class, nms)
+    /// of exactly `core` size.
+    pub fn run_front(
+        &self,
+        window: &ImageF32,
+        lo: f32,
+        hi: f32,
+        slot: usize,
+    ) -> Result<(ImageF32, ImageF32)> {
+        let (ph, pw) = (self.core_h + 2 * self.halo, self.core_w + 2 * self.halo);
+        if window.height() != ph || window.width() != pw {
+            return Err(Error::Geometry(format!(
+                "window {}x{} != expected {}x{}",
+                window.height(),
+                window.width(),
+                ph,
+                pw
+            )));
+        }
+        let x = xla::Literal::vec1(window.data()).reshape(&[ph as i64, pw as i64])?;
+        let lo = xla::Literal::vec1(&[lo]);
+        let hi = xla::Literal::vec1(&[hi]);
+        let outs = self.run_entry("canny_front", &[x, lo, hi], slot)?;
+        let cls = literal_to_image(&outs[0], self.core_w, self.core_h)?;
+        let nm = literal_to_image(&outs[1], self.core_w, self.core_h)?;
+        Ok((cls, nm))
+    }
+}
+
+/// Convert an f32 literal of known shape into an image.
+pub fn literal_to_image(lit: &xla::Literal, width: usize, height: usize) -> Result<ImageF32> {
+    let v = lit.to_vec::<f32>()?;
+    ImageF32::from_vec(width, height, v)
+}
+
+// Engine construction is exercised by rust/tests/integration_runtime.rs
+// (requires `make artifacts`); unit tests here cover the helpers only.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let img = ImageF32::from_vec(3, 2, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        let lit = xla::Literal::vec1(img.data()).reshape(&[2, 3]).unwrap();
+        let back = literal_to_image(&lit, 3, 2).unwrap();
+        assert_eq!(back, img);
+    }
+}

@@ -1,0 +1,209 @@
+//! `artifacts/manifest.json` loader: which HLO files exist, their tile
+//! geometry and parameter shapes. The manifest is the contract between
+//! `python/compile/aot.py` and this runtime; shapes are re-validated
+//! here so a stale artifacts/ directory fails loudly, not numerically.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// One lowered entry point (e.g. `canny_front` at tile t128).
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    /// HLO text file, absolute.
+    pub path: PathBuf,
+    /// Input shapes (row-major dims; scalars are `[1]`).
+    pub inputs: Vec<Vec<usize>>,
+    /// Output shapes.
+    pub outputs: Vec<Vec<usize>>,
+}
+
+/// One tile configuration (core size + its entry points).
+#[derive(Clone, Debug)]
+pub struct TileConfig {
+    pub name: String,
+    pub core_h: usize,
+    pub core_w: usize,
+    pub entries: BTreeMap<String, ArtifactEntry>,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub halo: usize,
+    pub tiles: Vec<TileConfig>,
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json")).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {}/manifest.json (run `make artifacts`): {e}",
+                dir.display()
+            ))
+        })?;
+        let root = Json::parse(&text)?;
+        let format = root.req("format")?.as_usize().unwrap_or(0);
+        if format != 1 {
+            return Err(Error::Artifact(format!("unsupported manifest format {format}")));
+        }
+        let halo = root
+            .req("halo")?
+            .as_usize()
+            .ok_or_else(|| Error::Artifact("halo not a number".into()))?;
+        let mut tiles = Vec::new();
+        for t in root.req("tiles")?.as_arr().unwrap_or(&[]) {
+            let name = t
+                .req("name")?
+                .as_str()
+                .ok_or_else(|| Error::Artifact("tile name".into()))?
+                .to_string();
+            let core = t
+                .req("core")?
+                .as_usize_vec()
+                .filter(|v| v.len() == 2)
+                .ok_or_else(|| Error::Artifact(format!("tile {name}: bad core")))?;
+            let mut entries = BTreeMap::new();
+            for (ename, e) in t.req("entries")?.as_obj().into_iter().flatten() {
+                let file = e
+                    .req("file")?
+                    .as_str()
+                    .ok_or_else(|| Error::Artifact(format!("{ename}: file")))?;
+                let shapes = |key: &str| -> Result<Vec<Vec<usize>>> {
+                    e.req(key)?
+                        .as_arr()
+                        .ok_or_else(|| Error::Artifact(format!("{ename}: {key}")))?
+                        .iter()
+                        .map(|s| {
+                            s.as_usize_vec()
+                                .ok_or_else(|| Error::Artifact(format!("{ename}: {key} dims")))
+                        })
+                        .collect()
+                };
+                let entry = ArtifactEntry {
+                    name: ename.clone(),
+                    path: dir.join(file),
+                    inputs: shapes("inputs")?,
+                    outputs: shapes("outputs")?,
+                };
+                if !entry.path.exists() {
+                    return Err(Error::Artifact(format!(
+                        "manifest references missing file {}",
+                        entry.path.display()
+                    )));
+                }
+                entries.insert(ename.clone(), entry);
+            }
+            // Geometry validation: canny_front input must be core + 2*halo.
+            if let Some(front) = entries.get("canny_front") {
+                let expect = vec![core[0] + 2 * halo, core[1] + 2 * halo];
+                if front.inputs.first() != Some(&expect) {
+                    return Err(Error::Artifact(format!(
+                        "tile {name}: canny_front input {:?} != core+2*halo {:?}",
+                        front.inputs.first(),
+                        expect
+                    )));
+                }
+            }
+            tiles.push(TileConfig { name, core_h: core[0], core_w: core[1], entries });
+        }
+        if tiles.is_empty() {
+            return Err(Error::Artifact("manifest has no tiles".into()));
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), halo, tiles })
+    }
+
+    /// Default artifacts location: `$CANNY_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("CANNY_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// Find a tile config by name.
+    pub fn tile(&self, name: &str) -> Result<&TileConfig> {
+        self.tiles
+            .iter()
+            .find(|t| t.name == name)
+            .ok_or_else(|| Error::Artifact(format!("no tile config `{name}` in manifest")))
+    }
+
+    /// The tile whose core height is closest to `want` (planner helper).
+    pub fn closest_tile(&self, want: usize) -> &TileConfig {
+        self.tiles
+            .iter()
+            .min_by_key(|t| t.core_h.abs_diff(want))
+            .expect("manifest non-empty")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fixture(dir: &Path, manifest: &str, files: &[&str]) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        for f in files {
+            std::fs::write(dir.join(f), "ENTRY {}").unwrap();
+        }
+    }
+
+    const GOOD: &str = r#"{"format":1,"halo":4,"tiles":[
+        {"name":"t8","core":[8,8],"entries":{
+            "canny_front":{"file":"f.hlo.txt","inputs":[[16,16],[1],[1]],
+                           "outputs":[[8,8],[8,8]]}}}]}"#;
+
+    #[test]
+    fn loads_valid_manifest() {
+        let dir = std::env::temp_dir().join("canny_manifest_ok");
+        write_fixture(&dir, GOOD, &["f.hlo.txt"]);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.halo, 4);
+        assert_eq!(m.tiles.len(), 1);
+        let t = m.tile("t8").unwrap();
+        assert_eq!((t.core_h, t.core_w), (8, 8));
+        assert!(t.entries.contains_key("canny_front"));
+    }
+
+    #[test]
+    fn rejects_missing_file() {
+        let dir = std::env::temp_dir().join("canny_manifest_missing");
+        write_fixture(&dir, GOOD, &[]); // no f.hlo.txt
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_geometry() {
+        let bad = GOOD.replace("[[16,16]", "[[15,16]");
+        let dir = std::env::temp_dir().join("canny_manifest_geom");
+        write_fixture(&dir, &bad, &["f.hlo.txt"]);
+        let err = Manifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("core+2*halo"), "{err}");
+    }
+
+    #[test]
+    fn rejects_unknown_format() {
+        let bad = GOOD.replace("\"format\":1", "\"format\":9");
+        let dir = std::env::temp_dir().join("canny_manifest_fmt");
+        write_fixture(&dir, &bad, &["f.hlo.txt"]);
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn closest_tile_picks_nearest() {
+        let two = r#"{"format":1,"halo":4,"tiles":[
+            {"name":"t8","core":[8,8],"entries":{}},
+            {"name":"t64","core":[64,64],"entries":{}}]}"#;
+        let dir = std::env::temp_dir().join("canny_manifest_two");
+        write_fixture(&dir, two, &[]);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.closest_tile(10).name, "t8");
+        assert_eq!(m.closest_tile(100).name, "t64");
+    }
+}

@@ -1,0 +1,11 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` +
+//! `manifest.json` produced by `python/compile/aot.py`) and executes
+//! them on the XLA CPU client from the L3 hot path.
+//!
+//! Python never runs here — the HLO text is the entire interchange.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::XlaEngine;
+pub use manifest::{ArtifactEntry, Manifest, TileConfig};

@@ -1,0 +1,22 @@
+//! Cilk-style work-stealing thread pool — the substitute for the Intel
+//! Cilk Plus runtime the paper builds on (DESIGN.md §3).
+//!
+//! Semantics mirrored from Cilk:
+//! * each worker owns a deque; it pushes/pops its own work LIFO
+//!   (depth-first, cache-friendly),
+//! * idle workers steal FIFO from a random victim (breadth-first,
+//!   load-balancing — the mechanism behind the paper's "even
+//!   distribution of work across all cores", Fig. 3/11/12),
+//! * `scope` provides structured fork–join (`cilk_spawn`/`cilk_sync`).
+//!
+//! The deques are mutex-protected rather than lock-free Chase–Lev:
+//! task granularity in this system is an image tile or row band
+//! (tens of µs to ms), so deque overhead is noise, and the mutex
+//! version is auditable. Per-worker [`stats::WorkerStats`] feed the
+//! sampling profiler (Figures 8–12).
+
+pub mod pool;
+pub mod stats;
+
+pub use pool::{Pool, Scope};
+pub use stats::{PoolStats, WorkerStats};

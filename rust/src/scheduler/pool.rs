@@ -1,0 +1,428 @@
+//! The work-stealing pool and structured fork–join scope.
+
+use std::collections::VecDeque;
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::scheduler::stats::PoolStats;
+use crate::util::timer::Stopwatch;
+use crate::util::Prng;
+
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// Unique pool ids so nested scopes can tell "am I a worker of *this*
+/// pool" (worker threads help-join instead of blocking).
+static POOL_IDS: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    /// (pool id, worker index) when the current thread is a pool worker.
+    static WORKER: std::cell::Cell<Option<(u64, usize)>> = const { std::cell::Cell::new(None) };
+}
+
+struct Shared {
+    id: u64,
+    /// Per-worker deques: owner pops back (LIFO), thieves pop front (FIFO).
+    deques: Vec<Mutex<VecDeque<Task>>>,
+    /// Overflow queue for tasks submitted from non-worker threads.
+    injector: Mutex<VecDeque<Task>>,
+    /// Sleep/wake for idle workers.
+    idle_lock: Mutex<()>,
+    idle_cv: Condvar,
+    /// Approximate count of queued tasks (wake hint).
+    queued: AtomicUsize,
+    shutdown: AtomicBool,
+    stats: PoolStats,
+}
+
+impl Shared {
+    fn push_local(&self, me: usize, task: Task) {
+        self.deques[me].lock().unwrap().push_back(task);
+        self.queued.fetch_add(1, Ordering::Release);
+        self.idle_cv.notify_one();
+    }
+
+    /// Kept for completeness (cross-pool submission without steal
+    /// semantics); the scope path prefers deque 0 — see `Scope::spawn`.
+    #[allow(dead_code)]
+    fn push_injector(&self, task: Task) {
+        self.injector.lock().unwrap().push_back(task);
+        self.queued.fetch_add(1, Ordering::Release);
+        self.idle_cv.notify_all();
+    }
+
+    /// Owner-side LIFO pop.
+    fn pop_local(&self, me: usize) -> Option<Task> {
+        let t = self.deques[me].lock().unwrap().pop_back();
+        if t.is_some() {
+            self.queued.fetch_sub(1, Ordering::AcqRel);
+        }
+        t
+    }
+
+    /// Thief-side FIFO steal from `victim`.
+    fn steal_from(&self, victim: usize) -> Option<Task> {
+        let t = self.deques[victim].lock().unwrap().pop_front();
+        if t.is_some() {
+            self.queued.fetch_sub(1, Ordering::AcqRel);
+        }
+        t
+    }
+
+    fn pop_injector(&self) -> Option<Task> {
+        let t = self.injector.lock().unwrap().pop_front();
+        if t.is_some() {
+            self.queued.fetch_sub(1, Ordering::AcqRel);
+        }
+        t
+    }
+
+    /// Find any task: local LIFO first, then injector, then random-order
+    /// steals. `me == None` for external helpers (no local deque).
+    fn find_task(&self, me: Option<usize>, rng: &mut Prng) -> Option<Task> {
+        if let Some(me) = me {
+            if let Some(t) = self.pop_local(me) {
+                return Some(t);
+            }
+        }
+        if let Some(t) = self.pop_injector() {
+            return Some(t);
+        }
+        let n = self.deques.len();
+        if n == 0 {
+            return None;
+        }
+        let start = rng.next_below(n);
+        for k in 0..n {
+            let victim = (start + k) % n;
+            if Some(victim) == me {
+                continue;
+            }
+            if let Some(t) = self.steal_from(victim) {
+                if let Some(me) = me {
+                    self.stats.worker(me).steals.fetch_add(1, Ordering::Relaxed);
+                }
+                return Some(t);
+            }
+        }
+        None
+    }
+}
+
+/// A work-stealing thread pool (Cilk-style runtime).
+pub struct Pool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    n_workers: usize,
+}
+
+impl Pool {
+    /// Spawn a pool with `n_workers` worker threads (>= 1).
+    pub fn new(n_workers: usize) -> Result<Pool> {
+        if n_workers == 0 {
+            return Err(Error::Scheduler("pool needs >= 1 worker".into()));
+        }
+        let shared = Arc::new(Shared {
+            id: POOL_IDS.fetch_add(1, Ordering::Relaxed),
+            deques: (0..n_workers).map(|_| Mutex::new(VecDeque::new())).collect(),
+            injector: Mutex::new(VecDeque::new()),
+            idle_lock: Mutex::new(()),
+            idle_cv: Condvar::new(),
+            queued: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+            stats: PoolStats::new(n_workers),
+        });
+        let handles = (0..n_workers)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("canny-worker-{i}"))
+                    .spawn(move || worker_loop(shared, i))
+                    .expect("spawn worker")
+            })
+            .collect();
+        Ok(Pool { shared, handles, n_workers })
+    }
+
+    /// Number of workers.
+    pub fn n_workers(&self) -> usize {
+        self.n_workers
+    }
+
+    /// Live stats handle for the profiler.
+    pub fn stats(&self) -> PoolStats {
+        self.shared.stats.clone()
+    }
+
+    /// Structured fork–join: tasks spawned on the scope are guaranteed
+    /// complete when `scope` returns. Panics in tasks propagate.
+    pub fn scope<'env, F, R>(&self, f: F) -> R
+    where
+        F: FnOnce(&Scope<'env>) -> R,
+    {
+        let inner = Arc::new(ScopeInner {
+            pending: AtomicUsize::new(0),
+            panicked: AtomicBool::new(false),
+            lock: Mutex::new(()),
+            cv: Condvar::new(),
+        });
+        let scope = Scope {
+            shared: Arc::clone(&self.shared),
+            inner,
+            _marker: std::marker::PhantomData,
+        };
+        let result = f(&scope);
+        scope.join();
+        result
+    }
+
+    /// Convenience: run one closure on the pool and wait.
+    pub fn run<R: Send>(&self, f: impl FnOnce() -> R + Send) -> R {
+        let mut out: Option<R> = None;
+        self.scope(|s| {
+            let slot = &mut out;
+            s.spawn(move || {
+                *slot = Some(f());
+            });
+        });
+        out.expect("task ran")
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.idle_cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+struct ScopeInner {
+    pending: AtomicUsize,
+    panicked: AtomicBool,
+    lock: Mutex<()>,
+    cv: Condvar,
+}
+
+/// Fork–join scope handle. Lifetime `'env` allows spawned closures to
+/// borrow from the enclosing environment (like `std::thread::scope`).
+pub struct Scope<'env> {
+    shared: Arc<Shared>,
+    inner: Arc<ScopeInner>,
+    _marker: std::marker::PhantomData<&'env mut &'env ()>,
+}
+
+impl<'env> Scope<'env> {
+    /// Spawn a task into the pool (`cilk_spawn`).
+    pub fn spawn<F>(&self, f: F)
+    where
+        F: FnOnce() + Send + 'env,
+    {
+        self.inner.pending.fetch_add(1, Ordering::AcqRel);
+        let inner = Arc::clone(&self.inner);
+        let task: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
+            let ok = panic::catch_unwind(AssertUnwindSafe(f)).is_ok();
+            if !ok {
+                inner.panicked.store(true, Ordering::Release);
+            }
+            if inner.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+                let _g = inner.lock.lock().unwrap();
+                inner.cv.notify_all();
+            }
+        });
+        // SAFETY: `join()` runs before the scope (and thus `'env`) ends,
+        // so the closure cannot outlive its borrows. Same argument as
+        // std::thread::scope / rayon::scope.
+        let task: Task = unsafe { std::mem::transmute(task) };
+        let me = WORKER.with(|w| w.get());
+        match me {
+            Some((pool_id, idx)) if pool_id == self.shared.id => {
+                self.shared.push_local(idx, task)
+            }
+            // External spawner: hand the task to worker 0's deque — the
+            // Cilk model (the spawner's deque, stolen FIFO by idle
+            // workers) and what the simulator replays. The injector is
+            // reserved for tasks that must not be stolen ordering-wise.
+            _ => self.shared.push_local(0, task),
+        }
+    }
+
+    /// Wait for all spawned tasks (`cilk_sync`). Called automatically at
+    /// scope exit. Worker threads *help* (run tasks) instead of blocking
+    /// so nested scopes cannot deadlock a small pool.
+    fn join(&self) {
+        let me = WORKER.with(|w| w.get());
+        let helping_idx = match me {
+            Some((pool_id, idx)) if pool_id == self.shared.id => Some(idx),
+            _ => None,
+        };
+        if helping_idx.is_some() {
+            let me = helping_idx.unwrap();
+            let mut rng = Prng::new(0x5EED ^ me as u64);
+            while self.inner.pending.load(Ordering::Acquire) > 0 {
+                if let Some(task) = self.shared.find_task(helping_idx, &mut rng) {
+                    // Count the task; busy time is already covered by the
+                    // enclosing task this worker is inside of.
+                    self.shared.stats.worker(me).tasks.fetch_add(1, Ordering::Relaxed);
+                    task();
+                } else {
+                    std::thread::yield_now();
+                }
+            }
+        } else {
+            // External thread: block until the workers drain the scope.
+            // (Deliberately no external help: ALL task execution happens
+            // on pool workers so per-worker stats account for every task,
+            // matching the paper's per-core utilization accounting.)
+            while self.inner.pending.load(Ordering::Acquire) > 0 {
+                let g = self.inner.lock.lock().unwrap();
+                if self.inner.pending.load(Ordering::Acquire) > 0 {
+                    let _ = self
+                        .inner
+                        .cv
+                        .wait_timeout(g, Duration::from_millis(1))
+                        .unwrap();
+                }
+            }
+        }
+        if self.inner.panicked.load(Ordering::Acquire) {
+            panic!("a task spawned in Pool::scope panicked");
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, me: usize) {
+    WORKER.with(|w| w.set(Some((shared.id, me))));
+    let mut rng = Prng::new(0x57EA1u64 ^ (me as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    loop {
+        if let Some(task) = shared.find_task(Some(me), &mut rng) {
+            let stats = shared.stats.worker(me);
+            stats.busy.store(true, Ordering::Relaxed);
+            // Counted BEFORE execution: the task body performs the
+            // scope-join notification, so post-hoc accounting would race
+            // with an observer that wakes on "all tasks done".
+            stats.tasks.fetch_add(1, Ordering::Relaxed);
+            let sw = Stopwatch::start();
+            task();
+            stats.busy_ns.fetch_add(sw.elapsed_ns(), Ordering::Relaxed);
+            stats.busy.store(false, Ordering::Relaxed);
+            continue;
+        }
+        if shared.shutdown.load(Ordering::Acquire) {
+            break;
+        }
+        // Nothing to do: sleep until new work or shutdown.
+        let g = shared.idle_lock.lock().unwrap();
+        if shared.queued.load(Ordering::Acquire) == 0
+            && !shared.shutdown.load(Ordering::Acquire)
+        {
+            let _ = shared.idle_cv.wait_timeout(g, Duration::from_millis(1)).unwrap();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    #[test]
+    fn runs_all_tasks_exactly_once() {
+        let pool = Pool::new(4).unwrap();
+        let counter = AtomicU32::new(0);
+        pool.scope(|s| {
+            for _ in 0..1000 {
+                s.spawn(|| {
+                    counter.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
+    fn scope_borrows_environment() {
+        let pool = Pool::new(2).unwrap();
+        let mut results = vec![0usize; 8];
+        {
+            let chunks: Vec<&mut [usize]> = results.chunks_mut(2).collect();
+            pool.scope(|s| {
+                for (k, chunk) in chunks.into_iter().enumerate() {
+                    s.spawn(move || {
+                        for (j, slot) in chunk.iter_mut().enumerate() {
+                            *slot = k * 10 + j;
+                        }
+                    });
+                }
+            });
+        }
+        assert_eq!(results, vec![0, 1, 10, 11, 20, 21, 30, 31]);
+    }
+
+    #[test]
+    fn nested_scopes_do_not_deadlock() {
+        let pool = Pool::new(1).unwrap(); // single worker is the hard case
+        let counter = AtomicU32::new(0);
+        pool.scope(|s| {
+            for _ in 0..4 {
+                let counter = &counter;
+                s.spawn(move || {
+                    // This runs ON the only worker; the inner scope must
+                    // help-join rather than block.
+                    WORKER.with(|w| assert!(w.get().is_some()));
+                    counter.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn run_returns_value() {
+        let pool = Pool::new(2).unwrap();
+        assert_eq!(pool.run(|| 6 * 7), 42);
+    }
+
+    #[test]
+    #[should_panic(expected = "task spawned in Pool::scope panicked")]
+    fn task_panic_propagates() {
+        let pool = Pool::new(2).unwrap();
+        pool.scope(|s| {
+            s.spawn(|| panic!("boom"));
+        });
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let pool = Pool::new(2).unwrap();
+        pool.scope(|s| {
+            for _ in 0..64 {
+                s.spawn(|| {
+                    std::hint::black_box((0..10_000u64).sum::<u64>());
+                });
+            }
+        });
+        let stats = pool.stats();
+        assert_eq!(stats.total_tasks(), 64);
+        assert!(stats.total_busy_ns() > 0);
+    }
+
+    #[test]
+    fn zero_workers_rejected() {
+        assert!(Pool::new(0).is_err());
+    }
+
+    #[test]
+    fn pool_drop_terminates() {
+        let pool = Pool::new(3).unwrap();
+        pool.scope(|s| {
+            s.spawn(|| ());
+        });
+        drop(pool); // must not hang
+    }
+}

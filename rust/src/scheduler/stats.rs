@@ -1,0 +1,120 @@
+//! Per-worker execution statistics: the raw signal behind the paper's
+//! CPU-utilization figures. The sampling profiler reads `busy` flags
+//! and cumulative busy-ns while workers run.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Live, shareable stats for one worker.
+#[derive(Debug, Default)]
+pub struct WorkerStats {
+    /// Currently executing a task?
+    pub busy: AtomicBool,
+    /// Total nanoseconds spent inside tasks.
+    pub busy_ns: AtomicU64,
+    /// Tasks executed.
+    pub tasks: AtomicU64,
+    /// Successful steals performed by this worker.
+    pub steals: AtomicU64,
+}
+
+impl WorkerStats {
+    pub fn snapshot(&self) -> WorkerSnapshot {
+        WorkerSnapshot {
+            busy: self.busy.load(Ordering::Relaxed),
+            busy_ns: self.busy_ns.load(Ordering::Relaxed),
+            tasks: self.tasks.load(Ordering::Relaxed),
+            steals: self.steals.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A point-in-time copy of one worker's counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WorkerSnapshot {
+    pub busy: bool,
+    pub busy_ns: u64,
+    pub tasks: u64,
+    pub steals: u64,
+}
+
+/// Shared handle to all workers' stats (what the profiler samples).
+#[derive(Clone, Debug)]
+pub struct PoolStats {
+    workers: Arc<Vec<WorkerStats>>,
+}
+
+impl PoolStats {
+    pub(crate) fn new(n: usize) -> PoolStats {
+        PoolStats { workers: Arc::new((0..n).map(|_| WorkerStats::default()).collect()) }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub(crate) fn worker(&self, i: usize) -> &WorkerStats {
+        &self.workers[i]
+    }
+
+    /// Snapshot every worker.
+    pub fn snapshot(&self) -> Vec<WorkerSnapshot> {
+        self.workers.iter().map(|w| w.snapshot()).collect()
+    }
+
+    /// Total busy nanoseconds across workers.
+    pub fn total_busy_ns(&self) -> u64 {
+        self.workers.iter().map(|w| w.busy_ns.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Total tasks executed across workers.
+    pub fn total_tasks(&self) -> u64 {
+        self.workers.iter().map(|w| w.tasks.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Total successful steals across workers.
+    pub fn total_steals(&self) -> u64 {
+        self.workers.iter().map(|w| w.steals.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Reset counters (between bench iterations).
+    pub fn reset(&self) {
+        for w in self.workers.iter() {
+            w.busy_ns.store(0, Ordering::Relaxed);
+            w.tasks.store(0, Ordering::Relaxed);
+            w.steals.store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// Per-worker busy-ns vector (Figure 3's load histogram).
+    pub fn busy_ns_per_worker(&self) -> Vec<u64> {
+        self.workers.iter().map(|w| w.busy_ns.load(Ordering::Relaxed)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_reflects_updates() {
+        let stats = PoolStats::new(2);
+        stats.worker(0).busy_ns.fetch_add(100, Ordering::Relaxed);
+        stats.worker(0).tasks.fetch_add(1, Ordering::Relaxed);
+        stats.worker(1).steals.fetch_add(3, Ordering::Relaxed);
+        let snap = stats.snapshot();
+        assert_eq!(snap[0].busy_ns, 100);
+        assert_eq!(snap[0].tasks, 1);
+        assert_eq!(snap[1].steals, 3);
+        assert_eq!(stats.total_busy_ns(), 100);
+        assert_eq!(stats.total_steals(), 3);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let stats = PoolStats::new(1);
+        stats.worker(0).busy_ns.fetch_add(5, Ordering::Relaxed);
+        stats.reset();
+        assert_eq!(stats.total_busy_ns(), 0);
+    }
+}

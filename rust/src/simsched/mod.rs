@@ -1,0 +1,248 @@
+//! Deterministic discrete-event simulator of a work-stealing multicore
+//! — the substitute for the paper's physical i3 (2c/4t) and i7 (4c/8t)
+//! testbeds on this 1-CPU host (DESIGN.md §3).
+//!
+//! The *real* pattern decomposition runs once to produce a
+//! [`SimSpec`]: per-task costs measured with thread-CPU-time plus the
+//! serial fractions (pad/assemble/hysteresis). The simulator then
+//! replays the same Cilk steal policy — spawner pushes tiles to its own
+//! deque, owner pops LIFO, idle virtual cores steal FIFO — over virtual
+//! time on `n` virtual cores. Outputs are per-core busy intervals, from
+//! which the profiler renders the paper's Figures 8–12, and makespans,
+//! from which Table-1-style speedups are computed.
+//!
+//! This measures exactly what the paper's figures measure — scheduling
+//! behaviour (idle vs evenly-utilized cores) — while being fully
+//! reproducible from a seed.
+
+pub mod trace;
+
+pub use trace::{SimResult, Interval};
+
+/// One fork–join phase: an optional serial prologue (runs on core 0),
+/// a bag of parallel tasks (tile costs, ns), and a serial epilogue.
+#[derive(Clone, Debug, Default)]
+pub struct SimPhase {
+    pub label: String,
+    pub serial_before_ns: u64,
+    pub tasks_ns: Vec<u64>,
+    pub serial_after_ns: u64,
+}
+
+impl SimPhase {
+    pub fn serial(label: &str, ns: u64) -> SimPhase {
+        SimPhase { label: label.into(), serial_before_ns: ns, ..Default::default() }
+    }
+
+    pub fn parallel(label: &str, tasks_ns: Vec<u64>) -> SimPhase {
+        SimPhase { label: label.into(), tasks_ns, ..Default::default() }
+    }
+
+    /// Total work in this phase.
+    pub fn work_ns(&self) -> u64 {
+        self.serial_before_ns + self.tasks_ns.iter().sum::<u64>() + self.serial_after_ns
+    }
+}
+
+/// A whole run: phases executed in order with a full barrier between
+/// them (the paper's stage structure: gauss → sobel → nms → hysteresis).
+#[derive(Clone, Debug, Default)]
+pub struct SimSpec {
+    pub phases: Vec<SimPhase>,
+}
+
+impl SimSpec {
+    /// Total work across phases (= ideal serial time).
+    pub fn work_ns(&self) -> u64 {
+        self.phases.iter().map(|p| p.work_ns()).sum()
+    }
+
+    /// The serial fraction `1 - f` of Amdahl's law implied by the spec.
+    pub fn serial_fraction(&self) -> f64 {
+        let serial: u64 = self
+            .phases
+            .iter()
+            .map(|p| p.serial_before_ns + p.serial_after_ns)
+            .sum();
+        serial as f64 / self.work_ns().max(1) as f64
+    }
+}
+
+/// Simulate `spec` on `cores` virtual cores.
+///
+/// Steal policy (mirrors [`crate::scheduler`]): all tasks of a phase
+/// are spawned from core 0, which then pops its deque LIFO (last tile
+/// first); each idle core repeatedly steals the *oldest* task (FIFO)
+/// from the only non-empty deque. Ready cores are served in core-id
+/// order at equal times, making the whole simulation deterministic.
+pub fn simulate(spec: &SimSpec, cores: usize) -> SimResult {
+    assert!(cores >= 1);
+    let mut now = 0u64; // virtual ns
+    let mut result = SimResult::new(cores);
+
+    for phase in &spec.phases {
+        if phase.serial_before_ns > 0 {
+            result.push_interval(0, now, now + phase.serial_before_ns, &phase.label);
+            now += phase.serial_before_ns;
+        }
+        if !phase.tasks_ns.is_empty() {
+            // Deque after spawn: front = task 0, back = task n-1.
+            // Core 0 pops back; thieves steal front.
+            let mut front = 0usize;
+            let mut back = phase.tasks_ns.len(); // exclusive
+            // Per-core next-free time; all free at `now`.
+            let mut free_at = vec![now; cores];
+            loop {
+                if front >= back {
+                    break;
+                }
+                // The next core to become free (ties -> lowest id).
+                let core = (0..cores)
+                    .min_by_key(|&c| (free_at[c], c))
+                    .expect("cores >= 1");
+                let t = free_at[core];
+                // Assign next task per steal policy.
+                let (task_idx, stolen) = if core == 0 {
+                    back -= 1;
+                    (back, false)
+                } else {
+                    let i = front;
+                    front += 1;
+                    (i, true)
+                };
+                let cost = phase.tasks_ns[task_idx].max(1);
+                result.push_interval(core, t, t + cost, &phase.label);
+                if stolen {
+                    result.steals[core] += 1;
+                }
+                result.tasks[core] += 1;
+                free_at[core] = t + cost;
+            }
+            now = free_at.into_iter().max().unwrap_or(now);
+        }
+        if phase.serial_after_ns > 0 {
+            result.push_interval(0, now, now + phase.serial_after_ns, &phase.label);
+            now += phase.serial_after_ns;
+        }
+    }
+    result.makespan_ns = now;
+    result
+}
+
+/// Speedup of an n-core simulation over the 1-core simulation.
+pub fn speedup(spec: &SimSpec, cores: usize) -> f64 {
+    let t1 = simulate(spec, 1).makespan_ns as f64;
+    let tn = simulate(spec, cores).makespan_ns as f64;
+    t1 / tn.max(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flat_spec(n_tasks: usize, cost: u64) -> SimSpec {
+        SimSpec { phases: vec![SimPhase::parallel("p", vec![cost; n_tasks])] }
+    }
+
+    #[test]
+    fn single_core_runs_everything_serially() {
+        let spec = flat_spec(10, 100);
+        let r = simulate(&spec, 1);
+        assert_eq!(r.makespan_ns, 1000);
+        assert_eq!(r.busy_ns[0], 1000);
+        assert_eq!(r.tasks[0], 10);
+        assert_eq!(r.steals[0], 0);
+    }
+
+    #[test]
+    fn perfect_scaling_on_even_tasks() {
+        let spec = flat_spec(16, 100);
+        for cores in [2usize, 4, 8] {
+            let r = simulate(&spec, cores);
+            assert_eq!(r.makespan_ns, 1600 / cores as u64, "cores={cores}");
+            // All cores equally busy.
+            assert!(r.busy_ns.iter().all(|&b| b == 1600 / cores as u64));
+        }
+    }
+
+    #[test]
+    fn work_conserved() {
+        let spec = SimSpec {
+            phases: vec![
+                SimPhase::serial("pad", 50),
+                SimPhase::parallel("front", vec![10, 20, 30, 40, 50, 60, 70]),
+                SimPhase {
+                    label: "hyst".into(),
+                    serial_before_ns: 0,
+                    tasks_ns: vec![],
+                    serial_after_ns: 100,
+                },
+            ],
+        };
+        for cores in [1usize, 2, 4, 8] {
+            let r = simulate(&spec, cores);
+            assert_eq!(r.busy_ns.iter().sum::<u64>(), spec.work_ns(), "cores={cores}");
+        }
+    }
+
+    #[test]
+    fn serial_phase_occupies_core0_only() {
+        let spec = SimSpec { phases: vec![SimPhase::serial("s", 500)] };
+        let r = simulate(&spec, 4);
+        assert_eq!(r.busy_ns[0], 500);
+        assert!(r.busy_ns[1..].iter().all(|&b| b == 0));
+        assert_eq!(r.makespan_ns, 500);
+    }
+
+    #[test]
+    fn steals_happen_on_multicore() {
+        let r = simulate(&flat_spec(32, 100), 4);
+        let total_steals: u64 = r.steals.iter().sum();
+        assert!(total_steals > 0);
+        assert_eq!(r.steals[0], 0, "core 0 owns the deque");
+    }
+
+    #[test]
+    fn deterministic() {
+        let spec = flat_spec(37, 113);
+        let a = simulate(&spec, 8);
+        let b = simulate(&spec, 8);
+        assert_eq!(a.busy_ns, b.busy_ns);
+        assert_eq!(a.makespan_ns, b.makespan_ns);
+    }
+
+    #[test]
+    fn amdahl_limit_respected() {
+        // 50% serial work caps speedup at 2 regardless of cores.
+        let spec = SimSpec {
+            phases: vec![
+                SimPhase::serial("s", 1000),
+                SimPhase::parallel("p", vec![125; 8]),
+            ],
+        };
+        let s8 = speedup(&spec, 8);
+        assert!(s8 < 2.0 + 1e-9, "s8={s8}");
+        assert!(s8 > 1.5, "s8={s8}");
+    }
+
+    #[test]
+    fn uneven_tasks_still_balance_reasonably() {
+        // One huge task + many small: makespan >= huge task.
+        let mut tasks = vec![50u64; 30];
+        tasks.push(2000);
+        let spec = SimSpec { phases: vec![SimPhase::parallel("p", tasks)] };
+        let r = simulate(&spec, 4);
+        assert!(r.makespan_ns >= 2000);
+        // But not much worse: LIFO pop means core 0 takes the big task
+        // last... steal order FIFO; bound loosely.
+        assert!(r.makespan_ns <= 2000 + 1500, "makespan {}", r.makespan_ns);
+    }
+
+    #[test]
+    fn serial_fraction_computed() {
+        let spec = SimSpec {
+            phases: vec![SimPhase::serial("s", 100), SimPhase::parallel("p", vec![100; 3])],
+        };
+        assert!((spec.serial_fraction() - 0.25).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,141 @@
+//! Simulation results: per-core busy intervals and conversions into the
+//! profiler's utilization traces (the common artifact format behind the
+//! paper's figures, whether measured or simulated).
+
+/// One busy interval on a virtual core.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Interval {
+    pub start_ns: u64,
+    pub end_ns: u64,
+    /// Phase label ("gaussian", "front", "hysteresis", …).
+    pub label: String,
+}
+
+/// Output of [`super::simulate`].
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    pub cores: usize,
+    pub makespan_ns: u64,
+    /// Per-core busy time.
+    pub busy_ns: Vec<u64>,
+    /// Per-core busy intervals, time-ordered.
+    pub intervals: Vec<Vec<Interval>>,
+    /// Per-core tasks executed.
+    pub tasks: Vec<u64>,
+    /// Per-core successful steals.
+    pub steals: Vec<u64>,
+}
+
+impl SimResult {
+    pub(crate) fn new(cores: usize) -> SimResult {
+        SimResult {
+            cores,
+            makespan_ns: 0,
+            busy_ns: vec![0; cores],
+            intervals: vec![Vec::new(); cores],
+            tasks: vec![0; cores],
+            steals: vec![0; cores],
+        }
+    }
+
+    pub(crate) fn push_interval(&mut self, core: usize, start: u64, end: u64, label: &str) {
+        debug_assert!(end > start);
+        self.busy_ns[core] += end - start;
+        self.intervals[core].push(Interval { start_ns: start, end_ns: end, label: label.into() });
+    }
+
+    /// Whether `core` is busy at time `t` (ns).
+    pub fn busy_at(&self, core: usize, t: u64) -> bool {
+        // Intervals are time-ordered; binary search the candidate.
+        let v = &self.intervals[core];
+        match v.binary_search_by(|iv| {
+            if iv.end_ns <= t {
+                std::cmp::Ordering::Less
+            } else if iv.start_ns > t {
+                std::cmp::Ordering::Greater
+            } else {
+                std::cmp::Ordering::Equal
+            }
+        }) {
+            Ok(_) => true,
+            Err(_) => false,
+        }
+    }
+
+    /// Average utilization of each core over the makespan, in [0, 1].
+    pub fn per_core_utilization(&self) -> Vec<f64> {
+        self.busy_ns
+            .iter()
+            .map(|&b| b as f64 / self.makespan_ns.max(1) as f64)
+            .collect()
+    }
+
+    /// Mean total utilization (sum of core busy / cores*makespan).
+    pub fn total_utilization(&self) -> f64 {
+        let total: u64 = self.busy_ns.iter().sum();
+        total as f64 / (self.makespan_ns.max(1) * self.cores as u64) as f64
+    }
+
+    /// Sample per-core busy state every `period_ns` over the makespan:
+    /// the simulated equivalent of the paper's 10M-cycle sampling
+    /// profiler. Returns `samples[t][core] = busy?`.
+    pub fn sample(&self, period_ns: u64) -> Vec<Vec<bool>> {
+        let period = period_ns.max(1);
+        let n = (self.makespan_ns / period) as usize + 1;
+        (0..n)
+            .map(|k| {
+                let t = k as u64 * period;
+                (0..self.cores).map(|c| self.busy_at(c, t)).collect()
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn simple() -> SimResult {
+        let mut r = SimResult::new(2);
+        r.push_interval(0, 0, 100, "a");
+        r.push_interval(0, 150, 250, "b");
+        r.push_interval(1, 50, 120, "a");
+        r.makespan_ns = 250;
+        r
+    }
+
+    #[test]
+    fn busy_at_interval_boundaries() {
+        let r = simple();
+        assert!(r.busy_at(0, 0));
+        assert!(r.busy_at(0, 99));
+        assert!(!r.busy_at(0, 100)); // end exclusive
+        assert!(!r.busy_at(0, 120));
+        assert!(r.busy_at(0, 200));
+        assert!(r.busy_at(1, 50));
+        assert!(!r.busy_at(1, 10));
+    }
+
+    #[test]
+    fn utilization_math() {
+        let r = simple();
+        let per = r.per_core_utilization();
+        assert!((per[0] - 200.0 / 250.0).abs() < 1e-12);
+        assert!((per[1] - 70.0 / 250.0).abs() < 1e-12);
+        assert!((r.total_utilization() - 270.0 / 500.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sampling_counts_busy_points() {
+        let r = simple();
+        let s = r.sample(50);
+        // t = 0,50,100,150,200,250
+        assert_eq!(s.len(), 6);
+        assert_eq!(s[0], vec![true, false]);
+        assert_eq!(s[1], vec![true, true]);
+        assert_eq!(s[2], vec![false, true]);
+        assert_eq!(s[3], vec![true, false]);
+        assert_eq!(s[4], vec![true, false]);
+        assert_eq!(s[5], vec![false, false]);
+    }
+}

@@ -1,0 +1,12 @@
+//! Small self-contained utilities: deterministic PRNG, minimal JSON
+//! parser (for `artifacts/manifest.json` — no serde offline), shared
+//! disjoint-write slices for the pattern implementations, and timing
+//! helpers for the bench harness.
+
+pub mod json;
+pub mod prng;
+pub mod shared_slice;
+pub mod timer;
+
+pub use prng::Prng;
+pub use shared_slice::SharedSlice;

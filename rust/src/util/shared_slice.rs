@@ -1,0 +1,105 @@
+//! Disjoint-write shared slice: the unsafe core that lets the parallel
+//! patterns write results from many workers into one output buffer
+//! without locks.
+//!
+//! Safety contract: callers must guarantee that concurrently-written
+//! index ranges are disjoint. Every pattern in [`crate::patterns`]
+//! derives its ranges from a deterministic chunking of `0..len`, which
+//! makes the contract auditable at the call site (and is what makes the
+//! patterns deterministic, per the paper's goal).
+
+use std::cell::UnsafeCell;
+
+/// A `&mut [T]` that can be shared across scoped threads for disjoint
+/// range writes.
+pub struct SharedSlice<'a, T> {
+    data: &'a UnsafeCell<[T]>,
+}
+
+// SAFETY: access discipline (disjoint ranges) is enforced by callers per
+// the module contract; T: Send suffices because only &mut-style access
+// to disjoint elements happens.
+unsafe impl<'a, T: Send> Send for SharedSlice<'a, T> {}
+unsafe impl<'a, T: Send> Sync for SharedSlice<'a, T> {}
+
+impl<'a, T> SharedSlice<'a, T> {
+    /// Wrap a mutable slice.
+    pub fn new(slice: &'a mut [T]) -> Self {
+        // SAFETY: UnsafeCell<[T]> has the same layout as [T].
+        let data = unsafe { &*(slice as *mut [T] as *const UnsafeCell<[T]>) };
+        SharedSlice { data }
+    }
+
+    /// Total length.
+    pub fn len(&self) -> usize {
+        // Reads the fat-pointer metadata only (no dereference).
+        let ptr: *mut [T] = self.data.get();
+        ptr.len()
+    }
+
+    /// Whether the slice is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Get a mutable sub-slice for `range`.
+    ///
+    /// # Safety
+    /// The caller must ensure no other thread concurrently accesses any
+    /// index in `range`.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn range_mut(&self, start: usize, end: usize) -> &mut [T] {
+        debug_assert!(start <= end && end <= self.len());
+        let base = (*self.data.get()).as_mut_ptr();
+        std::slice::from_raw_parts_mut(base.add(start), end - start)
+    }
+
+    /// Write one element.
+    ///
+    /// # Safety
+    /// The caller must ensure no other thread concurrently accesses
+    /// index `i`.
+    pub unsafe fn write(&self, i: usize, value: T) {
+        debug_assert!(i < self.len());
+        let base = (*self.data.get()).as_mut_ptr();
+        base.add(i).write(value);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disjoint_writes_land() {
+        let mut v = vec![0u32; 100];
+        {
+            let s = SharedSlice::new(&mut v);
+            std::thread::scope(|scope| {
+                for chunk in 0..4 {
+                    let s = &s;
+                    scope.spawn(move || {
+                        let (lo, hi) = (chunk * 25, chunk * 25 + 25);
+                        let part = unsafe { s.range_mut(lo, hi) };
+                        for (k, slot) in part.iter_mut().enumerate() {
+                            *slot = (lo + k) as u32;
+                        }
+                    });
+                }
+            });
+        }
+        assert!(v.iter().enumerate().all(|(i, &x)| x == i as u32));
+    }
+
+    #[test]
+    fn single_writes_land() {
+        let mut v = vec![0u8; 16];
+        {
+            let s = SharedSlice::new(&mut v);
+            for i in 0..16 {
+                unsafe { s.write(i, i as u8 * 2) };
+            }
+        }
+        assert_eq!(v[15], 30);
+    }
+}

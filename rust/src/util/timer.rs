@@ -1,0 +1,139 @@
+//! Timing helpers shared by the bench harness and the profiler: a
+//! monotonic stopwatch, thread-CPU-time readings (for the simulator's
+//! cost measurements on a timeshared host) and simple summary stats.
+
+use std::time::{Duration, Instant};
+
+/// Monotonic stopwatch.
+#[derive(Clone, Copy, Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_ns(&self) -> u64 {
+        self.elapsed().as_nanos() as u64
+    }
+}
+
+/// CLOCK_THREAD_CPUTIME_ID in nanoseconds — CPU time consumed by the
+/// *calling thread* only. On a 1-CPU container this is the honest task
+/// cost measure (wall-clock includes other threads' timeslices).
+pub fn thread_cpu_ns() -> u64 {
+    let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
+    // SAFETY: valid pointer, documented clock id.
+    unsafe {
+        libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts);
+    }
+    ts.tv_sec as u64 * 1_000_000_000 + ts.tv_nsec as u64
+}
+
+/// CLOCK_PROCESS_CPUTIME_ID in nanoseconds (all threads).
+pub fn process_cpu_ns() -> u64 {
+    let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
+    // SAFETY: valid pointer, documented clock id.
+    unsafe {
+        libc::clock_gettime(libc::CLOCK_PROCESS_CPUTIME_ID, &mut ts);
+    }
+    ts.tv_sec as u64 * 1_000_000_000 + ts.tv_nsec as u64
+}
+
+/// Summary statistics over a set of duration samples (ns).
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub min_ns: u64,
+    pub p10_ns: u64,
+    pub median_ns: u64,
+    pub p90_ns: u64,
+    pub max_ns: u64,
+    pub mean_ns: f64,
+}
+
+impl Summary {
+    pub fn from_samples(mut samples: Vec<u64>) -> Summary {
+        if samples.is_empty() {
+            return Summary::default();
+        }
+        samples.sort_unstable();
+        let n = samples.len();
+        let q = |p: f64| samples[((n - 1) as f64 * p).round() as usize];
+        Summary {
+            n,
+            min_ns: samples[0],
+            p10_ns: q(0.10),
+            median_ns: q(0.50),
+            p90_ns: q(0.90),
+            max_ns: samples[n - 1],
+            mean_ns: samples.iter().sum::<u64>() as f64 / n as f64,
+        }
+    }
+
+    /// "12.3 ms" style rendering of the median.
+    pub fn human_median(&self) -> String {
+        human_ns(self.median_ns)
+    }
+}
+
+/// Render nanoseconds for humans.
+pub fn human_ns(ns: u64) -> String {
+    if ns >= 1_000_000_000 {
+        format!("{:.2} s", ns as f64 / 1e9)
+    } else if ns >= 1_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else if ns >= 1_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else {
+        format!("{ns} ns")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(sw.elapsed_ns() >= 1_000_000);
+    }
+
+    #[test]
+    fn thread_cpu_advances_under_load() {
+        let a = thread_cpu_ns();
+        let mut acc = 0u64;
+        for i in 0..2_000_000u64 {
+            acc = acc.wrapping_add(i.wrapping_mul(2654435761));
+        }
+        std::hint::black_box(acc);
+        assert!(thread_cpu_ns() > a);
+    }
+
+    #[test]
+    fn summary_quantiles() {
+        let s = Summary::from_samples((1..=100).collect());
+        assert_eq!(s.n, 100);
+        assert_eq!(s.min_ns, 1);
+        assert_eq!(s.max_ns, 100);
+        assert!(s.median_ns == 50 || s.median_ns == 51, "median={}", s.median_ns);
+        assert!(s.p90_ns >= 89 && s.p90_ns <= 91);
+        assert!((s.mean_ns - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn human_rendering() {
+        assert_eq!(human_ns(500), "500 ns");
+        assert_eq!(human_ns(1_500), "1.50 µs");
+        assert_eq!(human_ns(2_500_000), "2.50 ms");
+        assert_eq!(human_ns(3_000_000_000), "3.00 s");
+    }
+}

@@ -1,0 +1,149 @@
+//! Integration: the full detector across engines, scenes and parameter
+//! ranges — the "deterministic output" claim end to end.
+
+use canny_par::canny::{CannyParams, CannyPipeline, Engine};
+use canny_par::coordinator::Detector;
+use canny_par::image::synth::{generate, Scene};
+use canny_par::image::ImageF32;
+use canny_par::metrics;
+use canny_par::scheduler::Pool;
+
+fn scenes() -> Vec<(&'static str, ImageF32)> {
+    vec![
+        ("shapes", generate(Scene::Shapes { seed: 5 }, 200, 150)),
+        ("remote", generate(Scene::RemoteSensing { seed: 5, noise: 0.05 }, 160, 120)),
+        ("text", generate(Scene::Text { seed: 5 }, 180, 140)),
+        ("checker", generate(Scene::Checker { cell: 10 }, 128, 128)),
+        ("gradient", generate(Scene::Gradient, 100, 100)),
+    ]
+}
+
+#[test]
+fn all_native_engines_agree_on_all_scenes() {
+    let pool = Pool::new(4).unwrap();
+    let params = CannyParams::default();
+    for (name, img) in scenes() {
+        let serial = CannyPipeline::serial().detect(&img, &params).unwrap();
+        let patterns = CannyPipeline::patterns(&pool).detect(&img, &params).unwrap();
+        let tiled = CannyPipeline::tiled(&pool).detect(&img, &params).unwrap();
+        assert_eq!(serial.edges.diff_count(&patterns.edges), 0, "{name}: patterns");
+        assert_eq!(serial.edges.diff_count(&tiled.edges), 0, "{name}: tiled");
+        assert_eq!(serial.class_map, patterns.class_map, "{name}: class map");
+    }
+}
+
+#[test]
+fn detection_repeatable_across_runs_and_pools() {
+    let img = generate(Scene::Shapes { seed: 42 }, 300, 200);
+    let params = CannyParams::default();
+    let mut reference = None;
+    for workers in [1usize, 2, 3, 8] {
+        let pool = Pool::new(workers).unwrap();
+        for _ in 0..3 {
+            let out = CannyPipeline::patterns(&pool).detect(&img, &params).unwrap();
+            match &reference {
+                None => reference = Some(out.edges.clone()),
+                Some(r) => assert_eq!(r.diff_count(&out.edges), 0, "workers={workers}"),
+            }
+        }
+    }
+}
+
+#[test]
+fn gradient_scene_has_no_false_edges() {
+    // A smooth ramp must produce (almost) no edges at sane thresholds.
+    let img = generate(Scene::Gradient, 128, 128);
+    let out = CannyPipeline::serial().detect(&img, &CannyParams::default()).unwrap();
+    assert!(
+        out.edges.edge_density() < 0.001,
+        "false-positive density {}",
+        out.edges.edge_density()
+    );
+}
+
+#[test]
+fn checker_edges_localized_against_truth() {
+    // Ground truth for a checkerboard: cell boundaries.
+    let cell = 16usize;
+    let n = 128usize;
+    let img = generate(Scene::Checker { cell }, n, n);
+    let out = CannyPipeline::serial().detect(&img, &CannyParams::default()).unwrap();
+    let mut truth = vec![0u8; n * n];
+    for y in 0..n {
+        for x in 0..n {
+            // Boundary between cells (either side of the seam).
+            let on_x = x % cell == 0 || x % cell == cell - 1;
+            let on_y = y % cell == 0 || y % cell == cell - 1;
+            if (on_x && x > 0 && x < n - 1) || (on_y && y > 0 && y < n - 1) {
+                truth[y * n + x] = 255;
+            }
+        }
+    }
+    let truth = canny_par::image::EdgeMap::new(n, n, truth).unwrap();
+    let (precision, recall) = metrics::precision_recall(&out.edges, &truth, 1);
+    assert!(precision > 0.95, "precision {precision}");
+    assert!(recall > 0.55, "recall {recall}");
+    let fom = metrics::pratt_fom(&out.edges, &truth);
+    assert!(fom > 0.5, "FOM {fom}");
+}
+
+#[test]
+fn thresholds_move_edge_counts_monotonically() {
+    let img = generate(Scene::Shapes { seed: 9 }, 150, 150);
+    let pipeline = CannyPipeline::serial();
+    let mut last = usize::MAX;
+    for hi in [0.08f32, 0.15, 0.3, 0.6] {
+        let params = CannyParams { lo: hi / 3.0, hi, ..CannyParams::default() };
+        let out = pipeline.detect(&img, &params).unwrap();
+        let n = out.edges.count_edges();
+        assert!(n <= last, "edges must not increase with hi (hi={hi}: {n} > {last})");
+        last = n;
+    }
+}
+
+#[test]
+fn noise_robustness_via_gaussian_stage() {
+    // Same scene with/without point noise: edge maps stay similar
+    // (the paper's remote-sensing enhancement claim, [7]).
+    let clean = generate(Scene::RemoteSensing { seed: 3, noise: 0.0 }, 128, 128);
+    let noisy = generate(Scene::RemoteSensing { seed: 3, noise: 0.06 }, 128, 128);
+    let params = CannyParams::default();
+    let a = CannyPipeline::serial().detect(&clean, &params).unwrap();
+    let b = CannyPipeline::serial().detect(&noisy, &params).unwrap();
+    let (precision, recall) = metrics::precision_recall(&b.edges, &a.edges, 1);
+    assert!(precision > 0.55, "precision {precision}");
+    assert!(recall > 0.5, "recall {recall}");
+}
+
+#[test]
+fn detector_facade_matches_pipeline() {
+    let img = generate(Scene::Shapes { seed: 1 }, 100, 80);
+    let det = Detector::builder().engine(Engine::TiledPatterns).workers(2).build().unwrap();
+    let via_detector = det.detect_default(&img).unwrap();
+    let serial = CannyPipeline::serial().detect(&img, det.params()).unwrap();
+    assert_eq!(via_detector.diff_count(&serial.edges), 0);
+}
+
+#[test]
+fn stage_times_are_consistent() {
+    let img = generate(Scene::Shapes { seed: 2 }, 256, 256);
+    let out = CannyPipeline::serial().detect(&img, &CannyParams::default()).unwrap();
+    let t = &out.times;
+    assert!(t.front_ns >= t.gaussian_ns + t.sobel_ns);
+    assert!(t.total_ns >= t.front_ns + t.hysteresis_ns);
+}
+
+#[test]
+fn extreme_thresholds_behave() {
+    let img = generate(Scene::Checker { cell: 8 }, 64, 64);
+    // hi = 0: everything >= 0 is strong -> all pixels edges.
+    let all = CannyPipeline::serial()
+        .detect(&img, &CannyParams { lo: 0.0, hi: 0.0, ..CannyParams::default() })
+        .unwrap();
+    assert!(all.edges.edge_density() > 0.2);
+    // hi huge: nothing strong -> no edges at all.
+    let none = CannyPipeline::serial()
+        .detect(&img, &CannyParams { lo: 50.0, hi: 100.0, ..CannyParams::default() })
+        .unwrap();
+    assert_eq!(none.edges.count_edges(), 0);
+}

@@ -1,0 +1,145 @@
+//! Integration: the GCP coordinator — planner decisions feeding real
+//! detections, batch server under load, reports feeding the simulator.
+
+use canny_par::amdahl;
+use canny_par::canny::CannyParams;
+use canny_par::coordinator::batch::BatchJob;
+use canny_par::coordinator::planner::Workload;
+use canny_par::coordinator::{BatchServer, CpuTopology, Detector, Planner, RunReport};
+use canny_par::image::synth::{generate, Scene};
+use canny_par::profiler::UsageTrace;
+use canny_par::simsched::simulate;
+
+#[test]
+fn planned_detection_end_to_end() {
+    let topo = CpuTopology::i3_4cpu();
+    let planner = Planner::new(topo);
+    let work = Workload { image_w: 256, image_h: 192, batch: 1 };
+    let plan = planner.plan(work, &CannyParams::default());
+    let det = Detector::builder()
+        .engine(plan.engine)
+        .workers(plan.workers)
+        .params(plan.params)
+        .build()
+        .unwrap();
+    let img = generate(Scene::Shapes { seed: 20 }, work.image_w, work.image_h);
+    let edges = det.detect_default(&img).unwrap();
+    assert!(edges.count_edges() > 0);
+    assert_eq!(det.n_workers(), 4);
+}
+
+#[test]
+fn batch_server_streams_and_reports() {
+    let det = Detector::builder().workers(4).build().unwrap();
+    let jobs = (0..12).map(|k| BatchJob {
+        id: k,
+        image: generate(Scene::Shapes { seed: k as u64 }, 96, 96),
+    });
+    let report = BatchServer::new(&det).with_capacity(4).run(jobs, &CannyParams::default()).unwrap();
+    assert_eq!(report.results.len(), 12);
+    assert!(report.mpix_per_s() > 0.0);
+    assert!(report.images_per_s() > 0.0);
+    assert_eq!(report.pixels, 12 * 96 * 96);
+}
+
+#[test]
+fn run_report_drives_simulator_with_sane_speedups() {
+    // Real tiled run -> SimSpec -> simulated 1..8 core speedups must be
+    // monotone non-decreasing (within tolerance) and Amdahl-bounded.
+    let det = Detector::builder()
+        .engine(canny_par::canny::Engine::TiledPatterns)
+        .workers(2)
+        .params(CannyParams { tile: 64, ..CannyParams::default() })
+        .build()
+        .unwrap();
+    let img = generate(Scene::Shapes { seed: 33 }, 512, 384);
+    let out = det.detect_full(&img, det.params()).unwrap();
+    let report = RunReport::from_run("tiled", img.len(), &out.times, Some(&det.pool_stats()));
+    let spec = report.to_sim_spec();
+    assert!(spec.phases.iter().any(|p| !p.tasks_ns.is_empty()), "no parallel phase");
+
+    let t1 = simulate(&spec, 1).makespan_ns as f64;
+    let mut prev = 1.0;
+    for cores in [2usize, 4, 8] {
+        let s = t1 / simulate(&spec, cores).makespan_ns as f64;
+        assert!(s >= prev * 0.98, "speedup regressed at {cores}: {s} < {prev}");
+        // Amdahl bound from the spec's own serial fraction.
+        let f = 1.0 - spec.serial_fraction();
+        let bound = amdahl::speedup_symmetric(f, cores);
+        assert!(s <= bound * 1.02, "cores={cores}: {s} > Amdahl bound {bound}");
+        prev = s;
+    }
+}
+
+#[test]
+fn simulated_traces_show_paper_contrast() {
+    // The F8-vs-F9 contrast: serial trace ~ 1/cores utilization,
+    // parallel trace much higher.
+    // A low-edge-density scene keeps the serial hysteresis negligible —
+    // the regime the paper's figures show (front-dominated work).
+    let det = Detector::builder()
+        .engine(canny_par::canny::Engine::TiledPatterns)
+        .workers(2)
+        .params(CannyParams { tile: 64, ..CannyParams::default() })
+        .build()
+        .unwrap();
+    let img = generate(Scene::Gradient, 768, 512);
+    let tiled = det.detect_full(&img, det.params()).unwrap();
+    let serial = canny_par::canny::CannyPipeline::serial().detect(&img, det.params()).unwrap();
+
+    let spec_par = RunReport::from_run("p", img.len(), &tiled.times, None).to_sim_spec();
+    let spec_ser = RunReport::from_run("s", img.len(), &serial.times, None).to_sim_spec();
+    let cores = 4;
+    let period = 200_000;
+    let t_par = UsageTrace::from_sim(&simulate(&spec_par, cores), period, "opt");
+    let t_ser = UsageTrace::from_sim(&simulate(&spec_ser, cores), period, "sub");
+    assert!(
+        t_ser.mean_total_pct() <= 100.0 / cores as f64 + 1.0,
+        "serial trace too busy: {}",
+        t_ser.mean_total_pct()
+    );
+    assert!(
+        t_par.mean_total_pct() > t_ser.mean_total_pct() * 2.0,
+        "parallel {} not >> serial {}",
+        t_par.mean_total_pct(),
+        t_ser.mean_total_pct()
+    );
+    // During the parallel phase all cores are saturated at some point.
+    assert!(
+        t_par.total_pct().iter().cloned().fold(0.0, f64::max) >= 100.0 - 1e-9,
+        "parallel trace never reaches full utilization"
+    );
+}
+
+#[test]
+fn amdahl_fit_of_simulated_speedup_recovers_fraction() {
+    let det = Detector::builder()
+        .engine(canny_par::canny::Engine::TiledPatterns)
+        .workers(2)
+        .params(CannyParams { tile: 32, ..CannyParams::default() })
+        .build()
+        .unwrap();
+    let img = generate(Scene::Checker { cell: 16 }, 384, 384);
+    let out = det.detect_full(&img, det.params()).unwrap();
+    let spec = RunReport::from_run("t", img.len(), &out.times, None).to_sim_spec();
+    let true_f = 1.0 - spec.serial_fraction();
+    let s4 = simulate(&spec, 1).makespan_ns as f64 / simulate(&spec, 4).makespan_ns as f64;
+    let fitted = amdahl::fit_parallel_fraction(s4, 4);
+    // Fit is approximate (scheduling gaps), but should be in the zone.
+    assert!(
+        (fitted - true_f).abs() < 0.15,
+        "fitted f {fitted} vs actual {true_f} (s4 = {s4})"
+    );
+}
+
+#[test]
+fn topology_objects_used_by_planner() {
+    for topo in CpuTopology::table1() {
+        let planner = Planner::new(topo.clone());
+        let plan = planner.plan(
+            Workload { image_w: 1024, image_h: 768, batch: 1 },
+            &CannyParams::default(),
+        );
+        assert_eq!(plan.workers, topo.logical_cpus);
+    }
+}

@@ -1,0 +1,134 @@
+//! Integration: the pattern catalogue composed the way the pipeline
+//! composes it (maps feeding stencils feeding reductions), plus the
+//! pipeline/farm throughput patterns under contention.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use canny_par::patterns::{self, farm::farm_stream, pipeline::pipeline3};
+use canny_par::scheduler::Pool;
+
+#[test]
+fn map_reduce_composition_deterministic() {
+    let pool = Pool::new(4).unwrap();
+    let data: Vec<f32> = (0..50_000).map(|i| ((i * 37) % 101) as f32 / 101.0).collect();
+    // map: square; reduce: sum — run twice on different pools.
+    let run = |pool: &Pool| {
+        let sq = patterns::par_map(pool, &data, 512, |_, &x| x * x);
+        patterns::par_reduce(pool, &sq, 512, 0.0f32, |&x| x, |a, b| a + b)
+    };
+    let a = run(&pool);
+    let single = Pool::new(1).unwrap();
+    let b = run(&single);
+    assert_eq!(a.to_bits(), b.to_bits());
+}
+
+#[test]
+fn scan_then_map_pipeline() {
+    let pool = Pool::new(4).unwrap();
+    let xs: Vec<u64> = (1..=10_000).collect();
+    let prefix = patterns::par_scan(&pool, &xs, 128, |a, b| a + b);
+    assert_eq!(prefix[9_999], 10_000 * 10_001 / 2);
+    let diffs = patterns::par_map(&pool, &prefix, 128, |i, &p| {
+        if i == 0 { p } else { p - prefix[i - 1] }
+    });
+    assert_eq!(diffs, xs);
+}
+
+#[test]
+fn nested_scopes_tile_in_tile() {
+    // Tiles spawning sub-tasks (the batch-of-images case): correctness
+    // under nesting on a small pool.
+    let pool = Pool::new(2).unwrap();
+    let total = AtomicUsize::new(0);
+    pool.scope(|outer| {
+        for _ in 0..8 {
+            let total = &total;
+            let pool = &pool;
+            outer.spawn(move || {
+                pool.scope(|inner| {
+                    for _ in 0..16 {
+                        inner.spawn(|| {
+                            total.fetch_add(1, Ordering::Relaxed);
+                        });
+                    }
+                });
+            });
+        }
+    });
+    assert_eq!(total.load(Ordering::Relaxed), 8 * 16);
+}
+
+#[test]
+fn pipeline_farm_combo_preserves_results() {
+    // Stage 1 generates work, stage 2 farms it, stage 3 folds.
+    let pool = Pool::new(4).unwrap();
+    let out = pipeline3(
+        0..20u64,
+        4,
+        |seed| (seed, vec![seed; 100]),
+        |(seed, items)| {
+            let (res, _) = farm_stream(&pool, items, 8, |_, v| v * 2);
+            (seed, res.iter().sum::<u64>())
+        },
+        |(seed, sum)| {
+            assert_eq!(sum, seed * 200);
+            sum
+        },
+    );
+    assert_eq!(out.len(), 20);
+}
+
+#[test]
+fn steals_occur_under_imbalance() {
+    let pool = Pool::new(4).unwrap();
+    pool.stats().reset();
+    // One long task queued first, many short after: thieves must steal.
+    pool.scope(|s| {
+        for i in 0..64 {
+            s.spawn(move || {
+                let reps = if i == 0 { 3_000_000 } else { 30_000 };
+                let mut acc = 0u64;
+                for k in 0..reps {
+                    acc = acc.wrapping_add(k);
+                }
+                std::hint::black_box(acc);
+            });
+        }
+    });
+    let stats = pool.stats();
+    assert_eq!(stats.total_tasks(), 64);
+    assert!(stats.total_steals() > 0, "no steals despite imbalance");
+}
+
+#[test]
+fn grain_one_and_huge_grain_equivalent() {
+    let pool = Pool::new(3).unwrap();
+    let xs: Vec<i64> = (0..999).collect();
+    let a = patterns::par_map(&pool, &xs, 1, |_, &x| x * 3);
+    let b = patterns::par_map(&pool, &xs, 10_000, |_, &x| x * 3);
+    assert_eq!(a, b);
+}
+
+#[test]
+fn busy_ns_bounded_by_wall_times_workers() {
+    let pool = Pool::new(4).unwrap();
+    pool.stats().reset();
+    let sw = std::time::Instant::now();
+    pool.scope(|s| {
+        for _ in 0..32 {
+            s.spawn(|| {
+                let mut acc = 0u64;
+                for k in 0..200_000u64 {
+                    acc = acc.wrapping_add(k * k);
+                }
+                std::hint::black_box(acc);
+            });
+        }
+    });
+    let wall = sw.elapsed().as_nanos() as u64;
+    let busy = pool.stats().total_busy_ns();
+    assert!(
+        busy <= wall * 4 + 4_000_000,
+        "busy {busy} > wall {wall} * workers (+slack)"
+    );
+}

@@ -1,0 +1,164 @@
+//! Integration: the PJRT runtime against the real artifacts produced by
+//! `make artifacts`. Skipped (with a loud message) if artifacts are
+//! missing, so `cargo test` works pre-`make artifacts` too.
+
+use std::path::{Path, PathBuf};
+
+use canny_par::canny::{CannyParams, CannyPipeline};
+use canny_par::coordinator::Detector;
+use canny_par::image::synth::{generate, Scene};
+use canny_par::runtime::{Manifest, XlaEngine};
+use canny_par::scheduler::Pool;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Manifest::default_dir();
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts at {} (run `make artifacts`)", dir.display());
+        None
+    }
+}
+
+#[test]
+fn manifest_loads_and_lists_tiles() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    assert_eq!(m.halo, 4);
+    let names: Vec<&str> = m.tiles.iter().map(|t| t.name.as_str()).collect();
+    assert!(names.contains(&"t64"));
+    assert!(names.contains(&"t128"));
+    assert!(m.tile("t128").unwrap().entries.contains_key("canny_front"));
+}
+
+#[test]
+fn engine_executes_fused_front() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = XlaEngine::load(&dir, "t64", 1).unwrap();
+    assert_eq!(engine.tile_core(), (64, 64));
+    let window = generate(Scene::Shapes { seed: 4 }, 72, 72);
+    let (cls, nm) = engine.run_front(&window, 0.05, 0.15, 0).unwrap();
+    assert_eq!((cls.width(), cls.height()), (64, 64));
+    assert_eq!((nm.width(), nm.height()), (64, 64));
+    assert!(cls.data().iter().all(|&v| v == 0.0 || v == 1.0 || v == 2.0));
+}
+
+#[test]
+fn xla_front_matches_native_within_tolerance() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = XlaEngine::load(&dir, "t64", 1).unwrap();
+    let window = generate(Scene::RemoteSensing { seed: 8, noise: 0.05 }, 72, 72);
+    let (xcls, xnm) = engine.run_front(&window, 0.05, 0.15, 0).unwrap();
+    let (ncls, nnm) = canny_par::canny::pipeline::front_serial_window(&window, 0.05, 0.15);
+    // Magnitudes agree to f32 tolerance.
+    let mut max_err = 0.0f32;
+    for (a, b) in xnm.data().iter().zip(nnm.data()) {
+        max_err = max_err.max((a - b).abs());
+    }
+    assert!(max_err < 1e-4, "nms magnitude max err {max_err}");
+    // Class maps agree except at float-tie boundaries (< 0.1%).
+    let diff = xcls.data().iter().zip(ncls.data()).filter(|(a, b)| a != b).count();
+    assert!(
+        (diff as f64) < 0.001 * ncls.len() as f64,
+        "class maps differ at {diff}/{} pixels",
+        ncls.len()
+    );
+}
+
+#[test]
+fn xla_pipeline_end_to_end_close_to_serial() {
+    let Some(dir) = artifacts_dir() else { return };
+    std::env::set_var("CANNY_ARTIFACTS", &dir);
+    let det = Detector::builder()
+        .engine(canny_par::canny::Engine::PatternsXla)
+        .workers(2)
+        .artifacts_dir(dir.to_str().unwrap())
+        .tile_name("t64")
+        .build()
+        .unwrap();
+    let img = generate(Scene::Shapes { seed: 7 }, 200, 150);
+    let params = CannyParams::default();
+    let xla_out = det.detect_full(&img, &params).unwrap();
+    let serial = CannyPipeline::serial().detect(&img, &params).unwrap();
+    let diff = xla_out.edges.diff_count(&serial.edges);
+    assert!(
+        (diff as f64) < 0.002 * img.len() as f64,
+        "xla vs serial: {diff}/{} pixels differ",
+        img.len()
+    );
+    // Per-tile costs recorded for the simulator.
+    assert!(!xla_out.times.tile_costs_ns.is_empty());
+}
+
+#[test]
+fn stage_artifacts_execute_and_chain() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = XlaEngine::load(&dir, "t128", 1).unwrap();
+    let names = engine.entry_names();
+    for required in ["gaussian_stage", "sobel_stage", "nms_stage", "threshold_stage"] {
+        assert!(names.contains(&required), "missing {required}");
+    }
+    // Chain the stages: 136 -> 132 -> 130 -> 128, matching the fused
+    // front. (A smooth scene: checkerboards are NMS-tie-degenerate and
+    // amplify f32 fusion-order differences into many class flips.)
+    let window = generate(Scene::RemoteSensing { seed: 12, noise: 0.04 }, 136, 136);
+    let x = xla::Literal::vec1(window.data()).reshape(&[136, 136]).unwrap();
+    let g = engine.run_entry("gaussian_stage", &[x], 0).unwrap();
+    let sob = engine.run_entry("sobel_stage", &[g[0].clone()], 0).unwrap();
+    let nm = engine
+        .run_entry("nms_stage", &[sob[0].clone(), sob[1].clone()], 0)
+        .unwrap();
+    let lo = xla::Literal::vec1(&[0.05f32]);
+    let hi = xla::Literal::vec1(&[0.15f32]);
+    let cls = engine.run_entry("threshold_stage", &[nm[0].clone(), lo, hi], 0).unwrap();
+    let staged = canny_par::runtime::engine::literal_to_image(&cls[0], 128, 128).unwrap();
+    // Fused front on the same window must agree (modulo f32 fusion-order
+    // ties, < 0.5% of pixels).
+    let (fused, _) = engine.run_front(&window, 0.05, 0.15, 0).unwrap();
+    let diff = staged.data().iter().zip(fused.data()).filter(|(a, b)| a != b).count();
+    assert!(
+        (diff as f64) < 0.005 * staged.len() as f64,
+        "staged vs fused: {diff}/{} pixels differ",
+        staged.len()
+    );
+}
+
+#[test]
+fn concurrent_tile_execution_is_safe() {
+    // Race detector: concurrent execution across replicas must produce
+    // bitwise the same results as serial execution of the same windows
+    // (XLA vs XLA — no float-tie tolerance needed).
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = XlaEngine::load(&dir, "t64", 4).unwrap();
+    let pool = Pool::new(4).unwrap();
+    let windows: Vec<_> =
+        (0..16).map(|k| generate(Scene::Shapes { seed: k }, 72, 72)).collect();
+    let serial: Vec<_> = windows
+        .iter()
+        .map(|w| engine.run_front(w, 0.05, 0.15, 0).unwrap())
+        .collect();
+    for round in 0..3 {
+        let results = canny_par::patterns::par_map(&pool, &windows, 1, |i, w| {
+            engine.run_front(w, 0.05, 0.15, i + round).map(|(c, n)| (c, n))
+        });
+        for (i, r) in results.iter().enumerate() {
+            let (cls, nm) = r.as_ref().unwrap_or_else(|e| panic!("tile {i}: {e}"));
+            assert_eq!(cls, &serial[i].0, "round {round} tile {i}: class map raced");
+            assert_eq!(nm, &serial[i].1, "round {round} tile {i}: magnitude raced");
+        }
+    }
+}
+
+#[test]
+fn engine_rejects_wrong_window_size() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = XlaEngine::load(&dir, "t64", 1).unwrap();
+    let wrong = generate(Scene::Gradient, 70, 72);
+    assert!(engine.run_front(&wrong, 0.05, 0.15, 0).is_err());
+}
+
+#[test]
+fn manifest_missing_dir_fails_loudly() {
+    let err = Manifest::load(Path::new("/nonexistent/artifacts")).unwrap_err().to_string();
+    assert!(err.contains("make artifacts"), "{err}");
+}

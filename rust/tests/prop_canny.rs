@@ -1,0 +1,174 @@
+//! Property tests on the detector: engine equivalence, tiling
+//! invariance, hysteresis monotonicity — over random images, sizes,
+//! thresholds, tiles and worker counts.
+
+use canny_par::canny::{hysteresis, CannyParams, CannyPipeline};
+use canny_par::image::ImageF32;
+use canny_par::scheduler::Pool;
+use canny_par::util::Prng;
+
+const CASES: usize = 15;
+
+fn random_image(rng: &mut Prng, w: usize, h: usize) -> ImageF32 {
+    // Mix of structure (plateaus) and noise so hysteresis has work.
+    let mut img = ImageF32::zeros(w, h);
+    let cell = 4 + rng.next_below(16);
+    for y in 0..h {
+        for x in 0..w {
+            let base = if ((x / cell) + (y / cell)) % 2 == 0 { 0.3 } else { 0.7 };
+            img.set(y, x, (base + 0.05 * rng.next_gaussian()).clamp(0.0, 1.0));
+        }
+    }
+    img
+}
+
+fn random_params(rng: &mut Prng) -> CannyParams {
+    let lo = 0.02 + 0.1 * rng.next_f32();
+    CannyParams {
+        lo,
+        hi: lo + 0.02 + 0.2 * rng.next_f32(),
+        tile: [16, 32, 64, 128][rng.next_below(4)],
+        parallel_hysteresis: false,
+        band_grain: 0,
+    }
+}
+
+#[test]
+fn prop_engines_agree_on_random_inputs() {
+    let mut rng = Prng::new(0xF00D);
+    for case in 0..CASES {
+        let w = 20 + rng.next_below(200);
+        let h = 20 + rng.next_below(150);
+        let img = random_image(&mut rng, w, h);
+        let params = random_params(&mut rng);
+        let workers = 1 + rng.next_below(6);
+        let pool = Pool::new(workers).unwrap();
+        let serial = CannyPipeline::serial().detect(&img, &params).unwrap();
+        let patterns = CannyPipeline::patterns(&pool).detect(&img, &params).unwrap();
+        let tiled = CannyPipeline::tiled(&pool).detect(&img, &params).unwrap();
+        assert_eq!(
+            serial.edges.diff_count(&patterns.edges),
+            0,
+            "case {case}: patterns({workers}w) {w}x{h} tile={}",
+            params.tile
+        );
+        assert_eq!(
+            serial.edges.diff_count(&tiled.edges),
+            0,
+            "case {case}: tiled({workers}w) {w}x{h} tile={}",
+            params.tile
+        );
+    }
+}
+
+#[test]
+fn prop_parallel_hysteresis_equals_serial() {
+    let mut rng = Prng::new(0xFACE);
+    let pool = Pool::new(4).unwrap();
+    for case in 0..CASES {
+        let w = 16 + rng.next_below(120);
+        let h = 16 + rng.next_below(120);
+        // Random class map with tunable strong/weak density.
+        let p_strong = 0.01 + 0.05 * rng.next_f32();
+        let p_weak = 0.1 + 0.4 * rng.next_f32();
+        let mut cls = ImageF32::zeros(w, h);
+        for y in 0..h {
+            for x in 0..w {
+                let r = rng.next_f32();
+                cls.set(
+                    y,
+                    x,
+                    if r < p_strong {
+                        2.0
+                    } else if r < p_strong + p_weak {
+                        1.0
+                    } else {
+                        0.0
+                    },
+                );
+            }
+        }
+        let ser = hysteresis::hysteresis_serial(&cls);
+        let par = hysteresis::hysteresis_parallel(&pool, &cls);
+        assert_eq!(ser.diff_count(&par), 0, "case {case} {w}x{h}");
+    }
+}
+
+#[test]
+fn prop_edges_subset_of_weak_or_strong() {
+    // Every edge pixel must have been weak or strong; every strong
+    // pixel must be an edge.
+    let mut rng = Prng::new(0xBEEF);
+    for _ in 0..CASES {
+        let w = 20 + rng.next_below(100);
+        let h = 20 + rng.next_below(100);
+        let img = random_image(&mut rng, w, h);
+        let params = random_params(&mut rng);
+        let out = CannyPipeline::serial().detect(&img, &params).unwrap();
+        for y in 0..h {
+            for x in 0..w {
+                let c = out.class_map.get(y, x);
+                if out.edges.is_edge(y, x) {
+                    assert!(c >= 1.0, "edge at ({y},{x}) with class {c}");
+                }
+                if c == 2.0 {
+                    assert!(out.edges.is_edge(y, x), "strong at ({y},{x}) not an edge");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_hysteresis_monotone_in_weak_set() {
+    // Adding weak pixels can only grow the edge set (monotonicity).
+    let mut rng = Prng::new(0xCAFE);
+    for case in 0..CASES {
+        let (w, h) = (40, 40);
+        let mut cls = ImageF32::zeros(w, h);
+        for y in 0..h {
+            for x in 0..w {
+                let r = rng.next_f32();
+                cls.set(y, x, if r < 0.03 { 2.0 } else if r < 0.3 { 1.0 } else { 0.0 });
+            }
+        }
+        let before = hysteresis::hysteresis_serial(&cls);
+        // Promote some background to weak.
+        let mut grown = cls.clone();
+        for _ in 0..60 {
+            let (y, x) = (rng.next_below(h), rng.next_below(w));
+            if grown.get(y, x) == 0.0 {
+                grown.set(y, x, 1.0);
+            }
+        }
+        let after = hysteresis::hysteresis_serial(&grown);
+        for i in 0..w * h {
+            assert!(
+                !(before.data()[i] != 0 && after.data()[i] == 0),
+                "case {case}: edge lost at {i} after growing weak set"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_tile_size_never_changes_result() {
+    let mut rng = Prng::new(0x7157);
+    let pool = Pool::new(3).unwrap();
+    for _ in 0..8 {
+        let w = 50 + rng.next_below(150);
+        let h = 50 + rng.next_below(100);
+        let img = random_image(&mut rng, w, h);
+        let mut reference = None;
+        for tile in [16usize, 24, 64, 96, 512] {
+            let params = CannyParams { tile, ..CannyParams::default() };
+            let out = CannyPipeline::tiled(&pool).detect(&img, &params).unwrap();
+            match &reference {
+                None => reference = Some(out.edges.clone()),
+                Some(r) => {
+                    assert_eq!(r.diff_count(&out.edges), 0, "{w}x{h} tile={tile}")
+                }
+            }
+        }
+    }
+}

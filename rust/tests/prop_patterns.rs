@@ -1,0 +1,125 @@
+//! Property tests on the pattern catalogue: parallel == serial for any
+//! input size / grain / worker count; reductions and scans bitwise
+//! deterministic (the paper's determinism goal as an invariant).
+
+use canny_par::patterns;
+use canny_par::scheduler::Pool;
+use canny_par::util::Prng;
+
+const CASES: usize = 30;
+
+fn random_vec(rng: &mut Prng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.next_f32() * 2.0 - 1.0).collect()
+}
+
+#[test]
+fn prop_par_map_equals_serial_map() {
+    let mut rng = Prng::new(1);
+    for _ in 0..CASES {
+        let workers = 1 + rng.next_below(8);
+        let n = rng.next_below(5000);
+        let grain = 1 + rng.next_below(600);
+        let xs = random_vec(&mut rng, n);
+        let pool = Pool::new(workers).unwrap();
+        let par = patterns::par_map(&pool, &xs, grain, |i, &x| (x * 3.5 + i as f32).to_bits());
+        let ser: Vec<u32> =
+            xs.iter().enumerate().map(|(i, &x)| (x * 3.5 + i as f32).to_bits()).collect();
+        assert_eq!(par, ser, "workers={workers} n={n} grain={grain}");
+    }
+}
+
+#[test]
+fn prop_par_reduce_bitwise_stable_across_workers() {
+    let mut rng = Prng::new(2);
+    for _ in 0..CASES {
+        let n = rng.next_below(4000);
+        let grain = 1 + rng.next_below(300);
+        let xs = random_vec(&mut rng, n);
+        let mut first: Option<u32> = None;
+        for workers in [1usize, 2, 5, 8] {
+            let pool = Pool::new(workers).unwrap();
+            let sum = patterns::par_reduce(&pool, &xs, grain, 0.0f32, |&x| x, |a, b| a + b);
+            match first {
+                None => first = Some(sum.to_bits()),
+                Some(f) => assert_eq!(
+                    f,
+                    sum.to_bits(),
+                    "grain={grain} n={n} workers={workers}: f32 sum unstable"
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_par_scan_equals_serial_scan() {
+    let mut rng = Prng::new(3);
+    for _ in 0..CASES {
+        let workers = 1 + rng.next_below(6);
+        let n = rng.next_below(3000);
+        let grain = 1 + rng.next_below(250);
+        let xs: Vec<u64> = (0..n).map(|_| rng.next_below(1000) as u64).collect();
+        let pool = Pool::new(workers).unwrap();
+        let par = patterns::par_scan(&pool, &xs, grain, |a, b| a.wrapping_add(*b));
+        let mut acc = 0u64;
+        let ser: Vec<u64> = xs
+            .iter()
+            .map(|&x| {
+                acc = acc.wrapping_add(x);
+                acc
+            })
+            .collect();
+        assert_eq!(par, ser, "workers={workers} n={n} grain={grain}");
+    }
+}
+
+#[test]
+fn prop_farm_preserves_order_any_capacity() {
+    let mut rng = Prng::new(4);
+    for _ in 0..CASES {
+        let workers = 1 + rng.next_below(6);
+        let n = rng.next_below(400);
+        let cap = 1 + rng.next_below(16);
+        let pool = Pool::new(workers).unwrap();
+        let (out, stats) =
+            patterns::farm::farm_stream(&pool, 0..n, cap, |_, j| j * 7 + 1);
+        assert_eq!(out, (0..n).map(|j| j * 7 + 1).collect::<Vec<_>>());
+        assert_eq!(stats.jobs, n);
+    }
+}
+
+#[test]
+fn prop_pipeline_identity_composition() {
+    let mut rng = Prng::new(5);
+    for _ in 0..CASES {
+        let n = rng.next_below(500);
+        let cap = 1 + rng.next_below(8);
+        let xs: Vec<u64> = (0..n as u64).collect();
+        let out = patterns::pipeline::pipeline3(
+            xs.clone(),
+            cap,
+            |x| x.wrapping_mul(3),
+            |x| x.wrapping_add(11),
+            |x| x,
+        );
+        let expect: Vec<u64> = xs.iter().map(|&x| x.wrapping_mul(3).wrapping_add(11)).collect();
+        assert_eq!(out, expect, "n={n} cap={cap}");
+    }
+}
+
+#[test]
+fn prop_chunks_partition_any_input() {
+    let mut rng = Prng::new(6);
+    for _ in 0..200 {
+        let len = rng.next_below(10_000);
+        let grain = 1 + rng.next_below(1_000);
+        let cs = patterns::chunks(len, grain);
+        let mut next = 0usize;
+        for c in &cs {
+            assert_eq!(c.start, next);
+            assert!(c.end - c.start <= grain);
+            next = c.end;
+        }
+        assert_eq!(next, len);
+    }
+}

@@ -1,0 +1,113 @@
+//! Property tests (randomized, seeded, shrink-free) on scheduler
+//! invariants: every task runs exactly once, scopes always join, stats
+//! account for all work — across random pool sizes, task counts and
+//! task durations.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+
+use canny_par::scheduler::Pool;
+use canny_par::util::Prng;
+
+const CASES: usize = 25;
+
+#[test]
+fn prop_every_task_runs_exactly_once() {
+    let mut rng = Prng::new(0xA11CE);
+    for case in 0..CASES {
+        let workers = 1 + rng.next_below(8);
+        let n_tasks = 1 + rng.next_below(300);
+        let pool = Pool::new(workers).unwrap();
+        let counters: Vec<AtomicU32> = (0..n_tasks).map(|_| AtomicU32::new(0)).collect();
+        pool.scope(|s| {
+            for c in &counters {
+                let spin = rng.next_below(2000) as u64;
+                s.spawn(move || {
+                    let mut acc = 0u64;
+                    for k in 0..spin {
+                        acc = acc.wrapping_add(k);
+                    }
+                    std::hint::black_box(acc);
+                    c.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        });
+        for (i, c) in counters.iter().enumerate() {
+            assert_eq!(
+                c.load(Ordering::Relaxed),
+                1,
+                "case {case} (workers={workers}, tasks={n_tasks}): task {i}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_task_counts_conserved() {
+    let mut rng = Prng::new(0xB0B);
+    for _ in 0..CASES {
+        let workers = 1 + rng.next_below(6);
+        let n_tasks = rng.next_below(200);
+        let pool = Pool::new(workers).unwrap();
+        pool.scope(|s| {
+            for _ in 0..n_tasks {
+                s.spawn(|| {
+                    std::hint::black_box(1 + 1);
+                });
+            }
+        });
+        assert_eq!(pool.stats().total_tasks() as usize, n_tasks);
+    }
+}
+
+#[test]
+fn prop_sequential_scopes_isolated() {
+    // Tasks from one scope never leak into the next join.
+    let mut rng = Prng::new(0xC0C0);
+    for _ in 0..CASES {
+        let workers = 1 + rng.next_below(4);
+        let pool = Pool::new(workers).unwrap();
+        let mut total = 0usize;
+        for _round in 0..3 {
+            let n = rng.next_below(50);
+            let counter = AtomicU32::new(0);
+            pool.scope(|s| {
+                for _ in 0..n {
+                    let counter = &counter;
+                    s.spawn(move || {
+                        counter.fetch_add(1, Ordering::Relaxed);
+                    });
+                }
+            });
+            assert_eq!(counter.load(Ordering::Relaxed) as usize, n);
+            total += n;
+        }
+        assert_eq!(pool.stats().total_tasks() as usize, total);
+    }
+}
+
+#[test]
+fn prop_nested_depth_random() {
+    // Random nesting depth (1-3) with random fanouts never deadlocks
+    // and runs every leaf exactly once.
+    let mut rng = Prng::new(0xD00D);
+    for _ in 0..12 {
+        let workers = 1 + rng.next_below(4);
+        let pool = Pool::new(workers).unwrap();
+        let depth = 1 + rng.next_below(3);
+        let fan = 1 + rng.next_below(4);
+        let leaves = AtomicU32::new(0);
+        fn recurse(pool: &Pool, depth: usize, fan: usize, leaves: &AtomicU32) {
+            if depth == 0 {
+                leaves.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+            pool.scope(|s| {
+                for _ in 0..fan {
+                    s.spawn(move || recurse(pool, depth - 1, fan, leaves));
+                }
+            });
+        }
+        recurse(&pool, depth, fan, &leaves);
+        assert_eq!(leaves.load(Ordering::Relaxed) as usize, fan.pow(depth as u32));
+    }
+}
