@@ -1,12 +1,17 @@
-//! Quickstart: the 20-line happy path — build a detector, run it on a
-//! scene, write the input and the edge map (paper Figure 7).
+//! Quickstart: the happy path — build a detector, run it on a scene,
+//! write the input and the edge map (paper Figure 7), then replay a
+//! small request stream through the serving tier (the library face of
+//! `cannyd serve --synthetic 200 --lanes 2`).
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use canny_par::canny::{CannyParams, Engine};
+use canny_par::config::RunConfig;
 use canny_par::coordinator::Detector;
 use canny_par::image::pgm;
 use canny_par::image::synth::{generate, Scene};
+use canny_par::service::{serve, ServeOptions, Trace};
+use canny_par::util::timer::human_ns;
 use std::path::Path;
 
 fn main() -> anyhow::Result<()> {
@@ -40,5 +45,21 @@ fn main() -> anyhow::Result<()> {
         &out.edges.to_image(),
     )?;
     println!("wrote target/figures/quickstart_{{input,edges}}.pgm");
+
+    // 5. The serving tier: a deterministic synthetic client trace
+    //    through admission queue -> batcher -> detector lanes. Same
+    //    seed, same report — `cannyd serve` prints the full JSON.
+    let cfg = RunConfig::default();
+    let trace = Trace::synthetic(32, cfg.seed, cfg.arrival_rate_hz);
+    let report = serve("quickstart-serve", &trace, &ServeOptions::from_config(&cfg))?;
+    println!(
+        "served {}/{} requests on {} lanes: p99 {} ({} batches, {} edge pixels)",
+        report.completed,
+        report.offered,
+        report.lanes.len(),
+        human_ns(report.latency.p99_ns),
+        report.batches_formed,
+        report.edge_pixels,
+    );
     Ok(())
 }

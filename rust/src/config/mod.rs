@@ -30,6 +30,22 @@ pub struct RunConfig {
     pub sim_cpus: usize,
     /// RNG seed for synthetic scenes.
     pub seed: u64,
+    /// Serving tier (`cannyd serve`): worker lanes, each owning a detector.
+    pub lanes: usize,
+    /// Serving tier: max admitted-but-undispatched requests
+    /// (backpressure bound — arrivals beyond it are rejected).
+    pub queue_depth: usize,
+    /// Serving tier: batch coalescing max-delay window, µs (virtual time).
+    pub batch_window_us: u64,
+    /// Serving tier: max requests coalesced into one batch.
+    pub batch_max: usize,
+    /// Serving tier: synthetic open-loop arrival rate, requests/second.
+    pub arrival_rate_hz: f64,
+    /// Serving tier: SLO target on aggregate p99 latency, milliseconds.
+    pub slo_p99_ms: f64,
+    /// Serving tier: per-request pixel budget (0 = unlimited); larger
+    /// requests are rejected at admission with an `oversize` reason.
+    pub max_pixels: usize,
 }
 
 impl Default for RunConfig {
@@ -44,6 +60,13 @@ impl Default for RunConfig {
             sample_period_us: 200,
             sim_cpus: 8,
             seed: 7,
+            lanes: 2,
+            queue_depth: 64,
+            batch_window_us: 2000,
+            batch_max: 8,
+            arrival_rate_hz: 2000.0,
+            slo_p99_ms: 50.0,
+            max_pixels: 0,
         }
     }
 }
@@ -76,9 +99,78 @@ impl RunConfig {
             }
             "sim-cpus" | "sim_cpus" => self.sim_cpus = value.parse().map_err(|_| bad("usize"))?,
             "seed" => self.seed = value.parse().map_err(|_| bad("u64"))?,
+            "lanes" => self.lanes = value.parse().map_err(|_| bad("usize"))?,
+            "queue-depth" | "queue_depth" => {
+                self.queue_depth = value.parse().map_err(|_| bad("usize"))?
+            }
+            "batch-window-us" | "batch_window_us" => {
+                self.batch_window_us = value.parse().map_err(|_| bad("u64"))?
+            }
+            "batch-max" | "batch_max" => {
+                self.batch_max = value.parse().map_err(|_| bad("usize"))?
+            }
+            "arrival-rate" | "arrival_rate" => {
+                self.arrival_rate_hz = value.parse().map_err(|_| bad("f64"))?
+            }
+            "slo-p99-ms" | "slo_p99_ms" => {
+                self.slo_p99_ms = value.parse().map_err(|_| bad("f64"))?
+            }
+            "max-pixels" | "max_pixels" => {
+                self.max_pixels = value.parse().map_err(|_| bad("usize"))?
+            }
             _ => return Err(Error::Config(format!("unknown config key `{key}`"))),
         }
         Ok(())
+    }
+
+    /// Every key spelling accepted by [`RunConfig::set`]. `cannyd` uses
+    /// this to reject unknown `--flags` up front; keep it in lockstep
+    /// with the `set` match (a test enforces the forward direction).
+    pub const KEYS: &'static [&'static str] = &[
+        "engine",
+        "workers",
+        "lo",
+        "hi",
+        "tile",
+        "parallel-hysteresis",
+        "parallel_hysteresis",
+        "band-grain",
+        "band_grain",
+        "artifacts",
+        "artifacts-dir",
+        "tile-name",
+        "tile_name",
+        "xla-replicas",
+        "xla_replicas",
+        "sample-period-us",
+        "sim-cpus",
+        "sim_cpus",
+        "seed",
+        "lanes",
+        "queue-depth",
+        "queue_depth",
+        "batch-window-us",
+        "batch_window_us",
+        "batch-max",
+        "batch_max",
+        "arrival-rate",
+        "arrival_rate",
+        "slo-p99-ms",
+        "slo_p99_ms",
+        "max-pixels",
+        "max_pixels",
+    ];
+
+    /// Is `key` a config key `set` would accept?
+    pub fn is_known_key(key: &str) -> bool {
+        Self::KEYS.contains(&key)
+    }
+
+    /// Boolean config keys: on the CLI, `--flag` with no value means
+    /// `true`. The single source of the flag grammar — `apply_cli` and
+    /// `cannyd`'s pre-parser both consult it.
+    pub fn is_flag_key(key: &str) -> bool {
+        matches!(key, "parallel-hysteresis" | "parallel_hysteresis")
     }
 
     /// Load `key = value` lines (# comments, blank lines ok).
@@ -107,7 +199,7 @@ impl RunConfig {
             if let Some(stripped) = a.strip_prefix("--") {
                 if let Some((k, v)) = stripped.split_once('=') {
                     self.set(k, v)?;
-                } else if stripped == "parallel-hysteresis" {
+                } else if Self::is_flag_key(stripped) {
                     self.set(stripped, "true")?;
                 } else {
                     let v = args.get(i + 1).ok_or_else(|| {
@@ -130,6 +222,21 @@ impl RunConfig {
         if self.sim_cpus == 0 {
             return Err(Error::Config("sim-cpus must be >= 1".into()));
         }
+        if self.lanes == 0 {
+            return Err(Error::Config("lanes must be >= 1".into()));
+        }
+        if self.queue_depth == 0 {
+            return Err(Error::Config("queue-depth must be >= 1".into()));
+        }
+        if self.batch_max == 0 {
+            return Err(Error::Config("batch-max must be >= 1".into()));
+        }
+        if !(self.arrival_rate_hz.is_finite() && self.arrival_rate_hz > 0.0) {
+            return Err(Error::Config("arrival-rate must be > 0".into()));
+        }
+        if !(self.slo_p99_ms.is_finite() && self.slo_p99_ms > 0.0) {
+            return Err(Error::Config("slo-p99-ms must be > 0".into()));
+        }
         Ok(())
     }
 
@@ -148,6 +255,13 @@ impl RunConfig {
         m.insert("artifacts".into(), self.artifacts_dir.clone());
         m.insert("sim-cpus".into(), self.sim_cpus.to_string());
         m.insert("seed".into(), self.seed.to_string());
+        m.insert("lanes".into(), self.lanes.to_string());
+        m.insert("queue-depth".into(), self.queue_depth.to_string());
+        m.insert("batch-window-us".into(), self.batch_window_us.to_string());
+        m.insert("batch-max".into(), self.batch_max.to_string());
+        m.insert("arrival-rate".into(), self.arrival_rate_hz.to_string());
+        m.insert("slo-p99-ms".into(), self.slo_p99_ms.to_string());
+        m.insert("max-pixels".into(), self.max_pixels.to_string());
         m
     }
 }
@@ -205,6 +319,16 @@ mod tests {
     }
 
     #[test]
+    fn cli_underscore_bool_spelling() {
+        let mut c = RunConfig::default();
+        let args: Vec<String> =
+            ["--parallel_hysteresis", "--workers", "2"].iter().map(|s| s.to_string()).collect();
+        c.apply_cli(&args).unwrap();
+        assert!(c.params.parallel_hysteresis);
+        assert_eq!(c.workers, 2);
+    }
+
+    #[test]
     fn cli_missing_value_errors() {
         let mut c = RunConfig::default();
         let args = vec!["--workers".to_string()];
@@ -234,5 +358,44 @@ mod tests {
         let m = RunConfig::default().to_map();
         assert!(m.contains_key("engine"));
         assert!(m.contains_key("tile"));
+        assert!(m.contains_key("lanes"));
+        assert!(m.contains_key("queue-depth"));
+        assert!(m.contains_key("batch-window-us"));
+    }
+
+    #[test]
+    fn serve_keys_set_and_validate() {
+        let mut c = RunConfig::default();
+        c.set("lanes", "4").unwrap();
+        c.set("queue-depth", "16").unwrap();
+        c.set("batch-window-us", "500").unwrap();
+        c.set("batch-max", "12").unwrap();
+        c.set("arrival-rate", "1500.5").unwrap();
+        c.set("slo-p99-ms", "10").unwrap();
+        assert_eq!(c.lanes, 4);
+        assert_eq!(c.queue_depth, 16);
+        assert_eq!(c.batch_window_us, 500);
+        assert_eq!(c.batch_max, 12);
+        assert!((c.arrival_rate_hz - 1500.5).abs() < 1e-9);
+        c.validate().unwrap();
+        c.set("lanes", "0").unwrap();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn every_known_key_is_settable() {
+        for &key in RunConfig::KEYS {
+            let mut c = RunConfig::default();
+            let sample = match key {
+                "engine" => "patterns",
+                "artifacts" | "artifacts-dir" => "artifacts",
+                "tile-name" | "tile_name" => "t128",
+                "parallel-hysteresis" | "parallel_hysteresis" => "true",
+                _ => "4", // parses as usize / u64 / f32 / f64 alike
+            };
+            c.set(key, sample).unwrap_or_else(|e| panic!("KEYS lists `{key}` but set failed: {e}"));
+            assert!(RunConfig::is_known_key(key));
+        }
+        assert!(!RunConfig::is_known_key("nope"));
     }
 }

@@ -10,6 +10,11 @@
 //!   shell/kernel/core coordinator ([`coordinator`]), a sampling CPU
 //!   profiler ([`profiler`]) and a deterministic multicore simulator
 //!   ([`simsched`]) for the paper's 4/8-CPU topologies.
+//! * **L3 serving tier** ([`service`]) — the multi-client front door:
+//!   a bounded admission queue with backpressure, same-shape request
+//!   batching under a max-delay window, N sharded detector lanes, and
+//!   p50/p95/p99 SLO reporting — replayed deterministically in virtual
+//!   time (`cannyd serve`).
 //! * **L2/L1 (python/, build-time only)** — the Canny front-end
 //!   (Gaussian → Sobel → NMS → double threshold) as JAX + Pallas
 //!   kernels, AOT-lowered to HLO text consumed by [`runtime`] through
@@ -33,6 +38,19 @@
 //! let edges = det.detect(&img, &CannyParams::default()).unwrap();
 //! println!("{} edge pixels", edges.count_edges());
 //! ```
+//!
+//! Serving a request stream (the CLI equivalent is
+//! `cannyd serve --synthetic 200 --lanes 2`):
+//!
+//! ```no_run
+//! use canny_par::config::RunConfig;
+//! use canny_par::service::{serve, ServeOptions, Trace};
+//!
+//! let cfg = RunConfig::default();
+//! let trace = Trace::synthetic(200, cfg.seed, cfg.arrival_rate_hz);
+//! let report = serve("quickstart", &trace, &ServeOptions::from_config(&cfg)).unwrap();
+//! println!("{}", report.to_json_string());
+//! ```
 
 pub mod amdahl;
 pub mod bench;
@@ -46,6 +64,7 @@ pub mod patterns;
 pub mod profiler;
 pub mod runtime;
 pub mod scheduler;
+pub mod service;
 pub mod simsched;
 pub mod util;
 

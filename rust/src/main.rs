@@ -4,11 +4,14 @@
 //!   run      --input x.pgm --output edges.pgm [--engine …] [--workers n]
 //!   gen      --scene shapes:7 --size 512x512 --output img.pgm
 //!   batch    --count 16 --size 512x512 [--scene …]   (farm throughput)
+//!   serve    --synthetic 200 | --requests trace.json   (serving tier)
 //!   profile  [--sim-cpus 4|8] [--engine serial|patterns]   (figures)
 //!   info     (topology, artifacts, resolved config)
 //!
 //! Global flags are config keys (`--engine`, `--workers`, `--lo`, …),
 //! see `config::RunConfig`; `--config file.conf` loads a file first.
+//! Unknown flags, stray positionals and unknown subcommands are
+//! rejected with an error rather than silently ignored.
 
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
@@ -22,6 +25,7 @@ use canny_par::image::synth::{generate, Scene};
 use canny_par::image::{pgm, ImageF32};
 use canny_par::profiler::UsageTrace;
 use canny_par::runtime::Manifest;
+use canny_par::service::{serve, ServeOptions, Trace};
 use canny_par::simsched::simulate;
 use canny_par::util::timer::human_ns;
 
@@ -36,38 +40,76 @@ fn main() -> ExitCode {
     }
 }
 
+/// Every subcommand (also the source of the command-flag union below).
+const COMMANDS: &[&str] = &["run", "gen", "batch", "serve", "profile", "info", "help"];
+
+/// Command-level flags (not config keys) each subcommand accepts.
+fn allowed_extras(cmd: &str) -> &'static [&'static str] {
+    match cmd {
+        "run" => &["config", "input", "output", "scene", "size"],
+        "gen" => &["config", "scene", "size", "output"],
+        "batch" => &["config", "count", "size", "scene"],
+        "serve" => &["config", "requests", "synthetic"],
+        "profile" => &["config", "figure"],
+        _ => &["config"],
+    }
+}
+
+/// Is `k` a command-level flag for *some* subcommand? (Which commands
+/// accept it is checked later, once the subcommand is known.)
+fn is_extra_key(k: &str) -> bool {
+    COMMANDS.iter().any(|c| allowed_extras(c).contains(&k))
+}
+
 fn run(args: Vec<String>) -> anyhow::Result<()> {
-    // Extract --config and pgm/scene/etc. keys that RunConfig doesn't own.
+    if args.iter().any(|a| a == "--help" || a == "-h") {
+        print!("{}", HELP);
+        return Ok(());
+    }
+    // Split args into command-level flags (`extra`: --input, --requests,
+    // …), config flags (`filtered`, fed to RunConfig::apply_cli) and
+    // positionals. Anything that is neither is an error — flags are
+    // never silently ignored.
     let mut extra: Vec<(String, String)> = Vec::new();
     let mut filtered: Vec<String> = Vec::new();
-    let extra_keys =
-        ["input", "output", "scene", "size", "count", "config", "figure"];
     let mut i = 0;
     while i < args.len() {
         let a = args[i].clone();
-        let stripped = a.strip_prefix("--").map(str::to_string);
-        match stripped {
-            Some(key) => {
-                let (k, inline_v) = match key.split_once('=') {
-                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
-                    None => (key.clone(), None),
+        if let Some(key) = a.strip_prefix("--") {
+            let (k, inline_v) = match key.split_once('=') {
+                Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                None => (key.to_string(), None),
+            };
+            if is_extra_key(&k) {
+                let v = match inline_v {
+                    Some(v) => v,
+                    None => {
+                        i += 1;
+                        args.get(i)
+                            .cloned()
+                            .ok_or_else(|| anyhow::anyhow!("--{k} needs a value"))?
+                    }
                 };
-                if extra_keys.contains(&k.as_str()) {
-                    let v = match inline_v {
-                        Some(v) => v,
-                        None => {
-                            i += 1;
-                            args.get(i)
-                                .cloned()
-                                .ok_or_else(|| anyhow::anyhow!("--{k} needs a value"))?
-                        }
-                    };
-                    extra.push((k, v));
-                } else {
-                    filtered.push(a);
+                extra.push((k, v));
+            } else if RunConfig::is_known_key(&k) {
+                // Keep the flag (and its value token, so a value like
+                // `-0.5` is never mistaken for a flag) for apply_cli.
+                filtered.push(a.clone());
+                if inline_v.is_none() && !RunConfig::is_flag_key(&k) {
+                    i += 1;
+                    let v = args
+                        .get(i)
+                        .cloned()
+                        .ok_or_else(|| anyhow::anyhow!("--{k} needs a value"))?;
+                    filtered.push(v);
                 }
+            } else {
+                anyhow::bail!("unknown flag `--{k}` (run `cannyd help` for the flag list)");
             }
-            None => filtered.push(a),
+        } else if a.starts_with('-') && a.len() > 1 {
+            anyhow::bail!("unknown flag `{a}` (flags are spelled `--key`)");
+        } else {
+            filtered.push(a);
         }
         i += 1;
     }
@@ -80,35 +122,52 @@ fn run(args: Vec<String>) -> anyhow::Result<()> {
     let positional = cfg.apply_cli(&filtered)?;
     cfg.validate()?;
     let cmd = positional.first().map(|s| s.as_str()).unwrap_or("help");
+    if let Some(stray) = positional.get(1) {
+        anyhow::bail!("unexpected argument `{stray}` after `{cmd}`");
+    }
+    for (k, _) in &extra {
+        if !allowed_extras(cmd).contains(&k.as_str()) {
+            anyhow::bail!("flag --{k} is not valid for `{cmd}` (run `cannyd help`)");
+        }
+    }
 
     match cmd {
         "run" => cmd_run(&cfg, get("input"), get("output"), get("scene"), get("size")),
         "gen" => cmd_gen(&cfg, get("scene"), get("size"), get("output")),
         "batch" => cmd_batch(&cfg, get("count"), get("size"), get("scene")),
+        "serve" => cmd_serve(&cfg, get("requests"), get("synthetic")),
         "profile" => cmd_profile(&cfg, get("figure")),
         "info" => cmd_info(&cfg),
-        "help" | _ => {
+        "help" => {
             print!("{}", HELP);
             Ok(())
         }
+        other => anyhow::bail!("unknown command `{other}` (run `cannyd help`)"),
     }
 }
 
 const HELP: &str = "\
 cannyd — high-performance parallel Canny edge detector (CS.DC 2017 repro)
 
-USAGE: cannyd <run|gen|batch|profile|info> [flags]
+USAGE: cannyd <run|gen|batch|serve|profile|info> [flags]
 
   run      detect edges:      --input x.pgm | --scene shapes:7 --size 512x512
                               [--output edges.pgm]
   gen      generate an image: --scene checker:16 --size 512x512 --output x.pgm
   batch    farm throughput:   --count 16 --size 512x512 [--scene shapes]
+  serve    serving tier:      --synthetic 200 | --requests trace.json
+                              (admission queue -> batcher -> detector lanes;
+                               prints a deterministic JSON SLO report)
   profile  paper figures:     [--figure fig8|fig9|percore] [--sim-cpus 4|8]
   info     topology + artifacts + resolved config
 
 Config flags (all commands): --engine serial|patterns|tiled|xla
   --workers N  --lo F --hi F --tile N --parallel-hysteresis
   --artifacts DIR --tile-name tNNN --sim-cpus N --seed N --config FILE
+Serve flags: --lanes N --queue-depth N --batch-window-us N --batch-max N
+  --arrival-rate HZ --slo-p99-ms F --max-pixels N
+
+Unknown flags and subcommands are errors, not ignored.
 ";
 
 fn parse_size(spec: Option<String>) -> anyhow::Result<(usize, usize)> {
@@ -207,6 +266,31 @@ fn cmd_batch(
         report.mpix_per_s(),
         report.farm.stalls
     );
+    Ok(())
+}
+
+fn cmd_serve(
+    cfg: &RunConfig,
+    requests: Option<String>,
+    synthetic: Option<String>,
+) -> anyhow::Result<()> {
+    let (label, trace) = match requests {
+        Some(path) => {
+            if synthetic.is_some() {
+                anyhow::bail!("--requests and --synthetic are mutually exclusive");
+            }
+            (format!("serve[{path}]"), Trace::from_json_file(Path::new(&path))?)
+        }
+        None => {
+            let n: usize = synthetic.unwrap_or_else(|| "200".into()).parse()?;
+            (
+                format!("serve[synthetic n={n} seed={}]", cfg.seed),
+                Trace::synthetic(n, cfg.seed, cfg.arrival_rate_hz),
+            )
+        }
+    };
+    let report = serve(&label, &trace, &ServeOptions::from_config(cfg))?;
+    println!("{}", report.to_json_string());
     Ok(())
 }
 

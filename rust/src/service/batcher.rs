@@ -1,0 +1,197 @@
+//! Same-shape request coalescing under a max-delay window.
+//!
+//! Batching trades a bounded amount of latency for throughput: each
+//! dispatch pays a fixed overhead (scheduling, lane wake-up, and — for
+//! XLA-backed lanes — executable invocation), so carrying several
+//! same-shape requests per dispatch amortizes it. A batch closes when
+//! it reaches `max_batch` requests, or when the *oldest* request in it
+//! has waited `window_ns` — the max-delay guarantee that keeps the
+//! latency cost bounded.
+
+use std::collections::BTreeMap;
+
+use crate::service::request::{Request, Shape};
+
+/// A closed batch ready for dispatch; all requests share one shape.
+#[derive(Clone, Debug)]
+pub struct FormedBatch {
+    pub shape: Shape,
+    pub requests: Vec<Request>,
+    /// Virtual time the batch was closed.
+    pub formed_ns: u64,
+}
+
+impl FormedBatch {
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    /// Total pixels across the batch (the service-cost driver).
+    pub fn pixels(&self) -> usize {
+        self.requests.len() * self.shape.pixels()
+    }
+}
+
+#[derive(Clone, Debug)]
+struct Group {
+    requests: Vec<Request>,
+    /// Close-by time: first admission into the group + window.
+    deadline_ns: u64,
+}
+
+/// Coalesces admitted requests into [`FormedBatch`]es, keyed by shape.
+/// All state is ordinary maps in virtual time — determinism falls out
+/// of `BTreeMap`'s sorted iteration.
+#[derive(Clone, Debug)]
+pub struct Batcher {
+    window_ns: u64,
+    max_batch: usize,
+    groups: BTreeMap<Shape, Group>,
+    pub batches_formed: u64,
+    pub requests_batched: u64,
+}
+
+impl Batcher {
+    pub fn new(window_ns: u64, max_batch: usize) -> Batcher {
+        Batcher {
+            window_ns,
+            max_batch: max_batch.max(1),
+            groups: BTreeMap::new(),
+            batches_formed: 0,
+            requests_batched: 0,
+        }
+    }
+
+    fn close(&mut self, shape: Shape, group: Group, now_ns: u64) -> FormedBatch {
+        self.batches_formed += 1;
+        self.requests_batched += group.requests.len() as u64;
+        FormedBatch { shape, requests: group.requests, formed_ns: now_ns }
+    }
+
+    /// Add an admitted request at virtual time `now_ns`; returns the
+    /// closed batch if this push filled one to `max_batch`.
+    pub fn push(&mut self, req: Request, now_ns: u64) -> Option<FormedBatch> {
+        let shape = req.shape();
+        let deadline_ns = now_ns.saturating_add(self.window_ns);
+        let group = self
+            .groups
+            .entry(shape)
+            .or_insert_with(|| Group { requests: Vec::new(), deadline_ns });
+        group.requests.push(req);
+        if group.requests.len() >= self.max_batch {
+            let group = self.groups.remove(&shape).expect("group just inserted");
+            return Some(self.close(shape, group, now_ns));
+        }
+        None
+    }
+
+    /// Earliest open-group deadline, if any (the event loop's timer).
+    pub fn next_deadline(&self) -> Option<u64> {
+        self.groups.values().map(|g| g.deadline_ns).min()
+    }
+
+    /// Close every group whose window has expired at `now_ns`, in shape
+    /// order (deterministic).
+    pub fn expire(&mut self, now_ns: u64) -> Vec<FormedBatch> {
+        let due: Vec<Shape> =
+            self.groups.iter().filter(|(_, g)| g.deadline_ns <= now_ns).map(|(&s, _)| s).collect();
+        due.into_iter()
+            .map(|shape| {
+                let group = self.groups.remove(&shape).expect("due group exists");
+                self.close(shape, group, now_ns)
+            })
+            .collect()
+    }
+
+    /// Close everything regardless of deadline (drain at shutdown).
+    pub fn flush(&mut self, now_ns: u64) -> Vec<FormedBatch> {
+        let shapes: Vec<Shape> = self.groups.keys().copied().collect();
+        shapes
+            .into_iter()
+            .map(|shape| {
+                let group = self.groups.remove(&shape).expect("group exists");
+                self.close(shape, group, now_ns)
+            })
+            .collect()
+    }
+
+    /// Requests currently coalescing (admitted, not yet in a closed batch).
+    pub fn pending(&self) -> usize {
+        self.groups.values().map(|g| g.requests.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::synth::Scene;
+
+    fn req(id: u64, w: usize, h: usize) -> Request {
+        Request { id, arrival_ns: 0, scene: Scene::Gradient, width: w, height: h }
+    }
+
+    #[test]
+    fn fills_close_at_max_batch() {
+        let mut b = Batcher::new(1_000_000, 3);
+        assert!(b.push(req(0, 64, 64), 0).is_none());
+        assert!(b.push(req(1, 64, 64), 10).is_none());
+        let batch = b.push(req(2, 64, 64), 20).expect("third push fills the batch");
+        assert_eq!(batch.len(), 3);
+        assert_eq!(batch.formed_ns, 20);
+        assert_eq!(b.pending(), 0);
+        assert_eq!(b.batches_formed, 1);
+        assert_eq!(b.requests_batched, 3);
+    }
+
+    #[test]
+    fn shapes_do_not_mix() {
+        let mut b = Batcher::new(1_000_000, 2);
+        assert!(b.push(req(0, 64, 64), 0).is_none());
+        assert!(b.push(req(1, 32, 32), 0).is_none());
+        assert_eq!(b.pending(), 2);
+        let batch = b.push(req(2, 64, 64), 5).unwrap();
+        assert_eq!(batch.shape, Shape { width: 64, height: 64 });
+        assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn window_expiry_closes_partial_batches() {
+        let mut b = Batcher::new(100, 8);
+        b.push(req(0, 64, 64), 0);
+        b.push(req(1, 32, 32), 40);
+        assert_eq!(b.next_deadline(), Some(100));
+        assert!(b.expire(99).is_empty());
+        let closed = b.expire(100);
+        assert_eq!(closed.len(), 1);
+        assert_eq!(closed[0].shape, Shape { width: 64, height: 64 });
+        assert_eq!(b.next_deadline(), Some(140));
+        let rest = b.expire(140);
+        assert_eq!(rest.len(), 1);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn zero_window_means_immediate_expiry() {
+        let mut b = Batcher::new(0, 8);
+        b.push(req(0, 64, 64), 7);
+        assert_eq!(b.next_deadline(), Some(7));
+        assert_eq!(b.expire(7).len(), 1);
+    }
+
+    #[test]
+    fn flush_drains_every_group() {
+        let mut b = Batcher::new(1_000_000, 8);
+        b.push(req(0, 64, 64), 0);
+        b.push(req(1, 32, 32), 0);
+        let all = b.flush(50);
+        assert_eq!(all.len(), 2);
+        assert_eq!(b.pending(), 0);
+        assert_eq!(b.next_deadline(), None);
+        // Shape order: 32x32 before 64x64 (BTreeMap).
+        assert_eq!(all[0].shape, Shape { width: 32, height: 32 });
+    }
+}

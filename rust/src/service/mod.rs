@@ -1,0 +1,54 @@
+//! The L3 **serving tier** — the multi-client front door above the
+//! per-image detector. The unit of work here is a *request stream*,
+//! not an image: long-lived serving is what the ROADMAP's "heavy
+//! traffic" north star needs, and what every later scaling PR
+//! (sharding, caching, async backends) plugs into.
+//!
+//! Request path:
+//!
+//! ```text
+//! arrivals ──> AdmissionQueue ──> Batcher ──> lane 0 (Detector) ──┐
+//!  (open-loop) (bounded; rejects  (same-shape └> lane 1 (Detector) ├─> SLO report
+//!               with a reason      coalescing,  …                  │   (p50/p95/p99,
+//!               when full)        max-delay     lane N-1 ──────────┘    per lane)
+//!                                 window)
+//! ```
+//!
+//! * [`queue::AdmissionQueue`] — bounded waiting room with
+//!   backpressure: a full room rejects immediately with a
+//!   [`queue::RejectReason`] instead of growing an unbounded backlog.
+//! * [`batcher::Batcher`] — coalesces same-shape requests into one
+//!   dispatch under a configurable max-delay window, amortizing
+//!   per-dispatch overhead without unbounded latency cost.
+//! * [`server::serve`] — N sharded worker lanes, each owning a
+//!   [`crate::coordinator::Detector`] (engine/workers chosen by the
+//!   GCP [`crate::coordinator::Planner`]), driven by a virtual-time
+//!   event loop so replays are deterministic.
+//! * [`slo`] — per-request latency tracking (enqueue→dispatch→
+//!   complete) rolled into p50/p95/p99 summaries per lane and in
+//!   aggregate, emitted as a deterministic JSON report.
+//!
+//! Entry points: `cannyd serve --synthetic 200 --lanes 2` (or
+//! `--requests trace.json`), or programmatically:
+//!
+//! ```no_run
+//! use canny_par::config::RunConfig;
+//! use canny_par::service::{serve, ServeOptions, Trace};
+//!
+//! let cfg = RunConfig::default();
+//! let trace = Trace::synthetic(200, cfg.seed, cfg.arrival_rate_hz);
+//! let report = serve("demo", &trace, &ServeOptions::from_config(&cfg)).unwrap();
+//! println!("{}", report.to_json_string());
+//! ```
+
+pub mod batcher;
+pub mod queue;
+pub mod request;
+pub mod server;
+pub mod slo;
+
+pub use batcher::{Batcher, FormedBatch};
+pub use queue::{AdmissionQueue, RejectReason};
+pub use request::{Request, Shape, Trace};
+pub use server::{serve, ServeOptions};
+pub use slo::{LaneReport, LatencyStats, LatencySummary, ServeReport};

@@ -1,0 +1,153 @@
+//! Bounded admission control for the serving tier.
+//!
+//! The queue is the *waiting room bound* between arrival and dispatch:
+//! admitted-but-undispatched requests (whether still coalescing in the
+//! batcher or closed and waiting for a lane) may never exceed `depth`.
+//! When the room is full the request is rejected immediately with a
+//! reason — load sheds at the door instead of growing an unbounded
+//! backlog (the serving tier's backpressure contract).
+
+/// Why a request was turned away at the door.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The waiting room is at capacity (backpressure).
+    QueueFull { depth: usize },
+    /// The request exceeds the per-request pixel budget.
+    Oversize { pixels: usize, max_pixels: usize },
+}
+
+impl RejectReason {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RejectReason::QueueFull { .. } => "queue-full",
+            RejectReason::Oversize { .. } => "oversize",
+        }
+    }
+}
+
+impl std::fmt::Display for RejectReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RejectReason::QueueFull { depth } => write!(f, "queue full (depth {depth})"),
+            RejectReason::Oversize { pixels, max_pixels } => {
+                write!(f, "request too large ({pixels} px > {max_pixels} px budget)")
+            }
+        }
+    }
+}
+
+/// Occupancy accounting for the bounded waiting room. The batcher owns
+/// the actual request objects; the queue owns the *bound* and the
+/// admission counters the report is built from.
+#[derive(Clone, Debug)]
+pub struct AdmissionQueue {
+    depth: usize,
+    max_pixels: usize,
+    occupancy: usize,
+    /// Highest occupancy ever reached (report: queue high-water mark).
+    pub high_water: usize,
+    pub admitted: u64,
+    pub rejected_full: u64,
+    pub rejected_oversize: u64,
+}
+
+impl AdmissionQueue {
+    pub fn new(depth: usize) -> AdmissionQueue {
+        AdmissionQueue {
+            depth: depth.max(1),
+            max_pixels: usize::MAX,
+            occupancy: 0,
+            high_water: 0,
+            admitted: 0,
+            rejected_full: 0,
+            rejected_oversize: 0,
+        }
+    }
+
+    /// Cap the per-request pixel count (admission control beyond the
+    /// depth bound; default unlimited).
+    pub fn with_max_pixels(mut self, max_pixels: usize) -> Self {
+        self.max_pixels = max_pixels.max(1);
+        self
+    }
+
+    /// Admit one request of `pixels` size, or say why not.
+    pub fn try_admit(&mut self, pixels: usize) -> std::result::Result<(), RejectReason> {
+        if pixels > self.max_pixels {
+            self.rejected_oversize += 1;
+            return Err(RejectReason::Oversize { pixels, max_pixels: self.max_pixels });
+        }
+        if self.occupancy >= self.depth {
+            self.rejected_full += 1;
+            return Err(RejectReason::QueueFull { depth: self.depth });
+        }
+        self.occupancy += 1;
+        self.high_water = self.high_water.max(self.occupancy);
+        self.admitted += 1;
+        Ok(())
+    }
+
+    /// `n` requests left the waiting room (dispatched to a lane).
+    pub fn release(&mut self, n: usize) {
+        self.occupancy = self.occupancy.saturating_sub(n);
+    }
+
+    pub fn occupancy(&self) -> usize {
+        self.occupancy
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Total rejections, all reasons.
+    pub fn rejected(&self) -> u64 {
+        self.rejected_full + self.rejected_oversize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admits_up_to_depth_then_rejects() {
+        let mut q = AdmissionQueue::new(3);
+        for _ in 0..3 {
+            assert!(q.try_admit(100).is_ok());
+        }
+        assert_eq!(q.try_admit(100), Err(RejectReason::QueueFull { depth: 3 }));
+        assert_eq!(q.admitted, 3);
+        assert_eq!(q.rejected_full, 1);
+        assert_eq!(q.high_water, 3);
+    }
+
+    #[test]
+    fn release_reopens_the_door() {
+        let mut q = AdmissionQueue::new(2);
+        assert!(q.try_admit(1).is_ok());
+        assert!(q.try_admit(1).is_ok());
+        assert!(q.try_admit(1).is_err());
+        q.release(2);
+        assert_eq!(q.occupancy(), 0);
+        assert!(q.try_admit(1).is_ok());
+        // High water remembers the peak, not the present.
+        assert_eq!(q.high_water, 2);
+    }
+
+    #[test]
+    fn oversize_is_rejected_regardless_of_room() {
+        let mut q = AdmissionQueue::new(8).with_max_pixels(1000);
+        assert!(q.try_admit(1000).is_ok());
+        let r = q.try_admit(1001);
+        assert_eq!(r, Err(RejectReason::Oversize { pixels: 1001, max_pixels: 1000 }));
+        assert_eq!(q.rejected(), 1);
+        assert_eq!(q.occupancy(), 1);
+    }
+
+    #[test]
+    fn reasons_render() {
+        assert_eq!(RejectReason::QueueFull { depth: 4 }.name(), "queue-full");
+        assert!(RejectReason::QueueFull { depth: 4 }.to_string().contains("4"));
+    }
+}

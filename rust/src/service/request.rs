@@ -1,0 +1,270 @@
+//! Request-stream vocabulary for the serving tier: a [`Request`] is one
+//! client detection call (what image, when it arrived), a [`Trace`] is a
+//! whole replayable client workload — either synthesized (deterministic
+//! open-loop arrivals from [`crate::util::Prng`]) or loaded from a JSON
+//! trace file recorded by a client.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::image::synth::Scene;
+use crate::util::json::Json;
+use crate::util::Prng;
+
+/// Image geometry — the batching key: only same-shape requests can be
+/// coalesced into one lane dispatch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Shape {
+    pub width: usize,
+    pub height: usize,
+}
+
+impl Shape {
+    pub fn pixels(&self) -> usize {
+        self.width * self.height
+    }
+}
+
+/// One client request, timestamped in virtual nanoseconds since serve
+/// start. Arrivals are open-loop: clients do not wait for completions,
+/// which is what makes the admission queue's backpressure meaningful.
+#[derive(Clone, Copy, Debug)]
+pub struct Request {
+    pub id: u64,
+    /// Virtual arrival time (ns since serve start).
+    pub arrival_ns: u64,
+    /// What to detect edges on (generated at dispatch — traces stay
+    /// tiny and runs stay deterministic).
+    pub scene: Scene,
+    pub width: usize,
+    pub height: usize,
+}
+
+impl Request {
+    pub fn shape(&self) -> Shape {
+        Shape { width: self.width, height: self.height }
+    }
+
+    pub fn pixels(&self) -> usize {
+        self.width * self.height
+    }
+}
+
+/// Synthetic workloads draw sizes from this palette — a handful of
+/// repeated shapes so the batcher has same-shape runs to coalesce.
+pub const SIZE_PALETTE: &[(usize, usize)] = &[(96, 96), (128, 128), (128, 96), (192, 192)];
+
+/// Largest per-dimension size a JSON trace may request (64k: keeps
+/// `width * height` and the per-pixel cost model far from overflow).
+pub const MAX_DIM: usize = 1 << 16;
+
+/// Largest arrival timestamp a JSON trace may carry (µs; ~11.5 virtual
+/// days — keeps `arrival_ns + service_ns` far from u64::MAX).
+pub const MAX_ARRIVAL_US: f64 = 1e15;
+
+/// A replayable request stream, sorted by arrival time.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub requests: Vec<Request>,
+}
+
+impl Trace {
+    /// Deterministic open-loop synthetic workload: Poisson arrivals at
+    /// `rate_hz` (exponential inter-arrival gaps), sizes from
+    /// [`SIZE_PALETTE`], scene content varying per request. Same
+    /// `(n, seed, rate_hz)` ⇒ identical trace.
+    pub fn synthetic(n: usize, seed: u64, rate_hz: f64) -> Trace {
+        let rate = if rate_hz.is_finite() && rate_hz > 0.0 { rate_hz } else { 1000.0 };
+        let mut rng = Prng::new(seed ^ 0x5e44_7e5e_ed00_0001);
+        let mut t = 0u64;
+        let mut requests = Vec::with_capacity(n);
+        for k in 0..n {
+            // Exponential gap: u in [0,1) so 1-u in (0,1] and ln() <= 0.
+            let u = rng.next_f64();
+            let dt = (-(1.0 - u).ln() / rate * 1e9).round() as u64;
+            t += dt.max(1);
+            let (width, height) = SIZE_PALETTE[rng.next_below(SIZE_PALETTE.len())];
+            requests.push(Request {
+                id: k as u64,
+                arrival_ns: t,
+                scene: Scene::Shapes { seed: seed.wrapping_add(k as u64) },
+                width,
+                height,
+            });
+        }
+        Trace { requests }
+    }
+
+    /// Load a client trace from JSON text:
+    ///
+    /// ```json
+    /// {"requests": [
+    ///   {"arrival_us": 0,   "width": 128, "height": 128, "scene": "shapes:3"},
+    ///   {"arrival_us": 250, "width": 128, "height": 128}
+    /// ]}
+    /// ```
+    ///
+    /// `id` defaults to the array index, `scene` to `shapes:<id>`.
+    /// Requests are sorted by `(arrival, id)` after parsing.
+    pub fn from_json(text: &str) -> Result<Trace> {
+        let j = Json::parse(text)?;
+        let reqs = j
+            .get("requests")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Config("trace: missing `requests` array".into()))?;
+        let mut requests = Vec::with_capacity(reqs.len());
+        for (k, r) in reqs.iter().enumerate() {
+            let field = |name: &str| -> Result<f64> {
+                r.get(name).and_then(Json::as_f64).ok_or_else(|| {
+                    Error::Config(format!("trace request {k}: missing/invalid `{name}`"))
+                })
+            };
+            // Bounds: this is the untrusted-input boundary
+            // (`cannyd serve --requests file.json`) — reject geometry
+            // and timestamps that would overflow downstream arithmetic
+            // instead of wrapping/saturating into nonsense.
+            let dim = |name: &str| -> Result<usize> {
+                let v = field(name)?;
+                if !(v >= 1.0 && v <= MAX_DIM as f64 && v.fract() == 0.0) {
+                    return Err(Error::Config(format!(
+                        "trace request {k}: `{name}` must be an integer in 1..={MAX_DIM}, got {v}"
+                    )));
+                }
+                Ok(v as usize)
+            };
+            let width = dim("width")?;
+            let height = dim("height")?;
+            let arrival_us = field("arrival_us")?;
+            if !(arrival_us >= 0.0 && arrival_us <= MAX_ARRIVAL_US) {
+                return Err(Error::Config(format!(
+                    "trace request {k}: `arrival_us` must be in 0..={MAX_ARRIVAL_US}"
+                )));
+            }
+            let id = r.get("id").and_then(Json::as_f64).map(|v| v as u64).unwrap_or(k as u64);
+            let scene = match r.get("scene").and_then(Json::as_str) {
+                Some(s) => Scene::parse(s).ok_or_else(|| {
+                    Error::Config(format!("trace request {k}: unknown scene `{s}`"))
+                })?,
+                None => Scene::Shapes { seed: id },
+            };
+            requests.push(Request {
+                id,
+                arrival_ns: (arrival_us * 1e3) as u64,
+                scene,
+                width,
+                height,
+            });
+        }
+        requests.sort_by_key(|r| (r.arrival_ns, r.id));
+        Ok(Trace { requests })
+    }
+
+    /// [`Trace::from_json`] over a file.
+    pub fn from_json_file(path: &Path) -> Result<Trace> {
+        Trace::from_json(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    /// The most frequent shape (ties → smallest) — the planner's
+    /// representative workload when sizing lane detectors.
+    pub fn dominant_shape(&self) -> Option<Shape> {
+        let mut counts: std::collections::BTreeMap<Shape, usize> = Default::default();
+        for r in &self.requests {
+            *counts.entry(r.shape()).or_insert(0) += 1;
+        }
+        let mut best: Option<(Shape, usize)> = None;
+        for (shape, n) in counts {
+            // Strict `>` keeps the first (smallest) shape on ties.
+            if best.map_or(true, |(_, bn)| n > bn) {
+                best = Some((shape, n));
+            }
+        }
+        best.map(|(s, _)| s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_is_deterministic_and_sorted() {
+        let a = Trace::synthetic(50, 7, 2000.0);
+        let b = Trace::synthetic(50, 7, 2000.0);
+        assert_eq!(a.len(), 50);
+        for (ra, rb) in a.requests.iter().zip(&b.requests) {
+            assert_eq!(ra.arrival_ns, rb.arrival_ns);
+            assert_eq!((ra.width, ra.height), (rb.width, rb.height));
+        }
+        assert!(a.requests.windows(2).all(|w| w[0].arrival_ns <= w[1].arrival_ns));
+    }
+
+    #[test]
+    fn synthetic_seeds_diverge() {
+        let a = Trace::synthetic(20, 1, 2000.0);
+        let b = Trace::synthetic(20, 2, 2000.0);
+        assert!(a.requests.iter().zip(&b.requests).any(|(x, y)| x.arrival_ns != y.arrival_ns));
+    }
+
+    #[test]
+    fn from_json_roundtrip_fields() {
+        let t = Trace::from_json(
+            r#"{"requests": [
+                {"arrival_us": 100, "width": 64, "height": 48, "scene": "checker:8"},
+                {"arrival_us": 20,  "width": 32, "height": 32}
+            ]}"#,
+        )
+        .unwrap();
+        assert_eq!(t.len(), 2);
+        // Sorted by arrival: the 20 µs request first.
+        assert_eq!(t.requests[0].arrival_ns, 20_000);
+        assert_eq!(t.requests[0].shape(), Shape { width: 32, height: 32 });
+        assert_eq!(t.requests[1].scene, Scene::Checker { cell: 8 });
+    }
+
+    #[test]
+    fn from_json_rejects_bad_traces() {
+        assert!(Trace::from_json("{}").is_err());
+        assert!(Trace::from_json(r#"{"requests":[{"arrival_us":0,"width":0,"height":4}]}"#)
+            .is_err());
+        assert!(Trace::from_json(
+            r#"{"requests":[{"arrival_us":0,"width":4,"height":4,"scene":"nope"}]}"#
+        )
+        .is_err());
+        // Overflow-bait geometry and timestamps are rejected, not wrapped.
+        assert!(Trace::from_json(
+            r#"{"requests":[{"arrival_us":0,"width":4294967296,"height":4294967296}]}"#
+        )
+        .is_err());
+        assert!(Trace::from_json(r#"{"requests":[{"arrival_us":0,"width":4.5,"height":4}]}"#)
+            .is_err());
+        assert!(Trace::from_json(r#"{"requests":[{"arrival_us":1e300,"width":4,"height":4}]}"#)
+            .is_err());
+        assert!(Trace::from_json(r#"{"requests":[{"arrival_us":-1,"width":4,"height":4}]}"#)
+            .is_err());
+    }
+
+    #[test]
+    fn dominant_shape_majority_and_ties() {
+        let mk = |w, h, t| Request {
+            id: t,
+            arrival_ns: t,
+            scene: Scene::Gradient,
+            width: w,
+            height: h,
+        };
+        let t = Trace { requests: vec![mk(64, 64, 0), mk(96, 96, 1), mk(96, 96, 2)] };
+        assert_eq!(t.dominant_shape(), Some(Shape { width: 96, height: 96 }));
+        // Tie -> smallest shape.
+        let t2 = Trace { requests: vec![mk(96, 96, 0), mk(64, 64, 1)] };
+        assert_eq!(t2.dominant_shape(), Some(Shape { width: 64, height: 64 }));
+        assert_eq!(Trace::default().dominant_shape(), None);
+    }
+}

@@ -1,0 +1,348 @@
+//! The serving event loop: admission → batching → sharded detector
+//! lanes → SLO report.
+//!
+//! Scheduling runs in **virtual time**. Arrivals carry virtual
+//! timestamps, lane occupancy advances by a deterministic service-cost
+//! model (fixed per-dispatch overhead + per-pixel cost), and every
+//! latency in the report is a virtual quantity — so replaying a trace
+//! with the same seed produces a byte-identical report regardless of
+//! host load. This extends the repo's determinism rule (same edge map
+//! from every engine) to the *scheduling* layer, which is what makes
+//! serving behaviour testable at all.
+//!
+//! Real compute still happens: every dispatched request runs the real
+//! detector owned by its lane, and the report carries the exactly
+//! reproducible edge totals. Only *time* is modeled.
+
+use std::collections::VecDeque;
+
+use crate::canny::{CannyParams, Engine};
+use crate::config::RunConfig;
+use crate::coordinator::planner::Workload;
+use crate::coordinator::{CpuTopology, Detector, Planner};
+use crate::error::Result;
+use crate::image::synth::generate;
+use crate::service::batcher::{Batcher, FormedBatch};
+use crate::service::queue::AdmissionQueue;
+use crate::service::request::{Shape, Trace};
+use crate::service::slo::{LaneReport, LatencyStats, ServeReport};
+
+/// Virtual per-dispatch overhead (scheduling + lane wake-up), ns.
+pub const DEFAULT_BATCH_OVERHEAD_NS: u64 = 100_000;
+/// Virtual per-pixel service cost, ns (≈ 250 Mpix/s per lane).
+pub const DEFAULT_COST_NS_PER_PIXEL: u64 = 4;
+
+/// Resolved serving options (see the `RunConfig` serve keys).
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Worker lanes, each owning a detector.
+    pub lanes: usize,
+    /// Admission bound: max admitted-but-undispatched requests.
+    pub queue_depth: usize,
+    /// Batcher max-delay window (virtual ns).
+    pub batch_window_ns: u64,
+    /// Max requests coalesced into one dispatch.
+    pub max_batch: usize,
+    /// SLO target on aggregate p99 end-to-end latency (virtual ns).
+    pub slo_p99_ns: u64,
+    /// Per-request pixel budget (0 = unlimited); larger requests are
+    /// rejected at admission with an `oversize` reason.
+    pub max_pixels: usize,
+    /// Run the real detector for every request (edge totals in the
+    /// report). Disable for pure scheduling studies and fast tests.
+    pub execute: bool,
+    /// Virtual service-cost model.
+    pub batch_overhead_ns: u64,
+    pub cost_ns_per_pixel: u64,
+    /// Worker threads per lane (0 = split host CPUs evenly over lanes).
+    pub workers_per_lane: usize,
+    /// Base detection parameters (the planner may adapt tile/grain).
+    pub params: CannyParams,
+    /// Echoed into the report for provenance.
+    pub seed: u64,
+}
+
+impl ServeOptions {
+    pub fn from_config(cfg: &RunConfig) -> ServeOptions {
+        ServeOptions {
+            lanes: cfg.lanes.max(1),
+            queue_depth: cfg.queue_depth.max(1),
+            batch_window_ns: cfg.batch_window_us.saturating_mul(1_000),
+            max_batch: cfg.batch_max.max(1),
+            slo_p99_ns: (cfg.slo_p99_ms.max(0.0) * 1e6) as u64,
+            max_pixels: cfg.max_pixels,
+            execute: true,
+            batch_overhead_ns: DEFAULT_BATCH_OVERHEAD_NS,
+            cost_ns_per_pixel: DEFAULT_COST_NS_PER_PIXEL,
+            workers_per_lane: 0,
+            params: cfg.params,
+            seed: cfg.seed,
+        }
+    }
+}
+
+struct Lane {
+    det: Option<Detector>,
+    busy_until_ns: u64,
+    busy_ns: u64,
+    batches: u64,
+    requests: u64,
+    edge_pixels: u64,
+    latency: LatencyStats,
+}
+
+/// Plan the per-lane detector: the GCP kernel layer picks engine and
+/// parameters for the trace's dominant shape at batch depth; workers
+/// are the host CPUs sharded evenly across lanes. XLA lanes are pinned
+/// off for now (artifact-backed lanes are a later PR).
+fn plan_lanes(trace: &Trace, opts: &ServeOptions) -> (Engine, usize, CannyParams) {
+    let shape = trace.dominant_shape().unwrap_or(Shape { width: 128, height: 128 });
+    let planner = Planner::new(CpuTopology::detect()).with_xla(false);
+    let plan = planner.plan(
+        Workload { image_w: shape.width, image_h: shape.height, batch: opts.max_batch },
+        &opts.params,
+    );
+    let workers = if opts.workers_per_lane > 0 {
+        opts.workers_per_lane
+    } else {
+        (plan.workers / opts.lanes).max(1)
+    };
+    (plan.engine, workers, plan.params)
+}
+
+/// Replay `trace` through the serving tier and return the SLO report.
+///
+/// Event loop invariants (all in virtual time, all deterministic):
+/// * at one instant, lane completions free lanes first, then expired
+///   batch windows close, then arrivals are admitted, then dispatch —
+///   a lane freed at `t` can take a batch formed at `t`;
+/// * dispatch is FIFO over closed batches onto the lowest-numbered
+///   idle lane;
+/// * admission is decided *at arrival* against the current waiting-room
+///   occupancy — a full room rejects immediately (open-loop clients
+///   don't retry).
+pub fn serve(label: &str, trace: &Trace, opts: &ServeOptions) -> Result<ServeReport> {
+    let (engine, workers_per_lane, params) = plan_lanes(trace, opts);
+    let mut lanes: Vec<Lane> = Vec::with_capacity(opts.lanes);
+    for _ in 0..opts.lanes {
+        let det = if opts.execute {
+            Some(
+                Detector::builder()
+                    .engine(engine)
+                    .workers(workers_per_lane)
+                    .params(params)
+                    .build()?,
+            )
+        } else {
+            None
+        };
+        lanes.push(Lane {
+            det,
+            busy_until_ns: 0,
+            busy_ns: 0,
+            batches: 0,
+            requests: 0,
+            edge_pixels: 0,
+            latency: LatencyStats::new(),
+        });
+    }
+
+    let mut queue = AdmissionQueue::new(opts.queue_depth);
+    if opts.max_pixels > 0 {
+        queue = queue.with_max_pixels(opts.max_pixels);
+    }
+    let mut batcher = Batcher::new(opts.batch_window_ns, opts.max_batch);
+    let mut ready: VecDeque<FormedBatch> = VecDeque::new();
+    let mut total_latency = LatencyStats::new();
+    let mut queue_wait = LatencyStats::new();
+    let mut completed = 0u64;
+    let mut makespan_ns = 0u64;
+    let mut next = 0usize; // arrival cursor into trace.requests
+    let mut now = 0u64;
+
+    loop {
+        // Dispatch everything possible at `now`: FIFO batches onto the
+        // lowest-numbered idle lane.
+        while !ready.is_empty() {
+            let Some(idx) = lanes.iter().position(|l| l.busy_until_ns <= now) else {
+                break;
+            };
+            let batch = ready.pop_front().expect("checked non-empty");
+            let service_ns = opts
+                .batch_overhead_ns
+                .saturating_add(opts.cost_ns_per_pixel.saturating_mul(batch.pixels() as u64));
+            let dispatch_ns = now;
+            let complete_ns = now + service_ns;
+            queue.release(batch.len());
+            makespan_ns = makespan_ns.max(complete_ns);
+            let lane = &mut lanes[idx];
+            lane.busy_until_ns = complete_ns;
+            lane.busy_ns += service_ns;
+            lane.batches += 1;
+            for req in &batch.requests {
+                lane.requests += 1;
+                completed += 1;
+                queue_wait.record(dispatch_ns - req.arrival_ns);
+                total_latency.record(complete_ns - req.arrival_ns);
+                lane.latency.record(complete_ns - req.arrival_ns);
+                if let Some(det) = &lane.det {
+                    let img = generate(req.scene, req.width, req.height);
+                    let edges = det.detect_default(&img)?;
+                    lane.edge_pixels += edges.count_edges() as u64;
+                }
+            }
+        }
+
+        // Next event: arrival, batch-window deadline, or (if work is
+        // waiting to dispatch) the earliest lane-free time.
+        let mut t = u64::MAX;
+        if next < trace.requests.len() {
+            t = t.min(trace.requests[next].arrival_ns);
+        }
+        if let Some(d) = batcher.next_deadline() {
+            t = t.min(d);
+        }
+        if !ready.is_empty() {
+            if let Some(free) =
+                lanes.iter().map(|l| l.busy_until_ns).filter(|&b| b > now).min()
+            {
+                t = t.min(free);
+            }
+        }
+        if t == u64::MAX {
+            break;
+        }
+        now = now.max(t);
+
+        for b in batcher.expire(now) {
+            ready.push_back(b);
+        }
+        while next < trace.requests.len() && trace.requests[next].arrival_ns <= now {
+            let req = trace.requests[next];
+            next += 1;
+            // Rejections are final (and counted inside the queue);
+            // admitted requests go to the batcher, which may close a
+            // batch at max fill.
+            if queue.try_admit(req.pixels()).is_ok() {
+                if let Some(b) = batcher.push(req, req.arrival_ns) {
+                    ready.push_back(b);
+                }
+            }
+        }
+    }
+    debug_assert_eq!(batcher.pending(), 0);
+    debug_assert_eq!(queue.occupancy(), 0);
+
+    let edge_pixels = lanes.iter().map(|l| l.edge_pixels).sum();
+    let lane_reports = lanes
+        .iter()
+        .enumerate()
+        .map(|(i, l)| LaneReport {
+            lane: i,
+            requests: l.requests,
+            batches: l.batches,
+            busy_ns: l.busy_ns,
+            latency: l.latency.summary(),
+        })
+        .collect();
+    Ok(ServeReport {
+        label: label.to_string(),
+        seed: opts.seed,
+        engine: engine.name().to_string(),
+        workers_per_lane,
+        offered: trace.len() as u64,
+        admitted: queue.admitted,
+        rejected_full: queue.rejected_full,
+        rejected_oversize: queue.rejected_oversize,
+        completed,
+        queue_depth: queue.depth(),
+        queue_high_water: queue.high_water,
+        batch_window_ns: opts.batch_window_ns,
+        max_batch: opts.max_batch,
+        batches_formed: batcher.batches_formed,
+        makespan_ns,
+        edge_pixels,
+        latency: total_latency.summary(),
+        queue_wait: queue_wait.summary(),
+        lanes: lane_reports,
+        slo_target_p99_ns: opts.slo_p99_ns,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opts() -> ServeOptions {
+        let mut o = ServeOptions::from_config(&RunConfig::default());
+        o.execute = false;
+        o
+    }
+
+    #[test]
+    fn conservation_offered_equals_completed_plus_rejected() {
+        let trace = Trace::synthetic(120, 11, 5_000.0);
+        let report = serve("t", &trace, &opts()).unwrap();
+        assert_eq!(report.offered, 120);
+        assert_eq!(report.offered, report.completed + report.rejected());
+        assert_eq!(report.admitted, report.completed);
+        assert!(report.makespan_ns > 0);
+        assert!(report.batches_formed > 0);
+        assert!(report.queue_high_water >= 1);
+    }
+
+    #[test]
+    fn lanes_share_the_load() {
+        let mut o = opts();
+        o.lanes = 3;
+        // Arrival pressure high enough that one lane cannot keep up.
+        let trace = Trace::synthetic(300, 5, 50_000.0);
+        let report = serve("t", &trace, &o).unwrap();
+        assert_eq!(report.lanes.len(), 3);
+        let active = report.lanes.iter().filter(|l| l.requests > 0).count();
+        assert!(active >= 2, "only {active} lanes took work");
+        assert_eq!(
+            report.lanes.iter().map(|l| l.requests).sum::<u64>(),
+            report.completed
+        );
+    }
+
+    #[test]
+    fn tiny_queue_rejects_under_burst() {
+        let mut o = opts();
+        o.queue_depth = 2;
+        o.lanes = 1;
+        // Very high rate: arrivals bunch faster than one lane drains.
+        let trace = Trace::synthetic(100, 3, 1_000_000.0);
+        let report = serve("t", &trace, &o).unwrap();
+        assert!(report.rejected_full > 0, "expected backpressure rejections");
+        assert!(report.queue_high_water <= 2);
+    }
+
+    #[test]
+    fn empty_trace_is_a_noop_report() {
+        let report = serve("t", &Trace::default(), &opts()).unwrap();
+        assert_eq!(report.offered, 0);
+        assert_eq!(report.makespan_ns, 0);
+        assert_eq!(report.throughput_rps(), 0.0);
+        assert!(report.slo_met());
+    }
+
+    #[test]
+    fn wider_window_forms_fewer_batches() {
+        let base = Trace::synthetic(200, 9, 20_000.0);
+        let mut narrow = opts();
+        narrow.batch_window_ns = 0;
+        let mut wide = opts();
+        wide.batch_window_ns = 10_000_000; // 10 ms
+        let rn = serve("narrow", &base, &narrow).unwrap();
+        let rw = serve("wide", &base, &wide).unwrap();
+        assert!(
+            rw.batches_formed < rn.batches_formed,
+            "wide {} vs narrow {}",
+            rw.batches_formed,
+            rn.batches_formed
+        );
+        assert!(rw.mean_batch_fill() > rn.mean_batch_fill());
+    }
+}

@@ -1,0 +1,302 @@
+//! SLO accounting for the serving tier: per-request latency samples
+//! (enqueue→dispatch→complete) rolled into p50/p95/p99 summaries per
+//! lane and in aggregate, and the deterministic JSON serving report
+//! `cannyd serve` prints.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// Latency sample sink (virtual ns). Order-insensitive: summaries sort.
+#[derive(Clone, Debug, Default)]
+pub struct LatencyStats {
+    samples: Vec<u64>,
+}
+
+impl LatencyStats {
+    pub fn new() -> LatencyStats {
+        LatencyStats::default()
+    }
+
+    pub fn record(&mut self, ns: u64) {
+        self.samples.push(ns);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// Nearest-rank summary (same quantile convention as
+    /// [`crate::util::timer::Summary`]). Empty stats summarize to zeros.
+    pub fn summary(&self) -> LatencySummary {
+        if self.samples.is_empty() {
+            return LatencySummary::default();
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_unstable();
+        let n = sorted.len();
+        let q = |p: f64| sorted[((n - 1) as f64 * p).round() as usize];
+        LatencySummary {
+            n,
+            p50_ns: q(0.50),
+            p95_ns: q(0.95),
+            p99_ns: q(0.99),
+            max_ns: sorted[n - 1],
+            mean_ns: sorted.iter().sum::<u64>() as f64 / n as f64,
+        }
+    }
+}
+
+/// Sorted-once percentile snapshot of a [`LatencyStats`].
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LatencySummary {
+    pub n: usize,
+    pub p50_ns: u64,
+    pub p95_ns: u64,
+    pub p99_ns: u64,
+    pub max_ns: u64,
+    pub mean_ns: f64,
+}
+
+impl LatencySummary {
+    fn to_json(self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("n".into(), Json::Num(self.n as f64));
+        m.insert("p50".into(), Json::Num(self.p50_ns as f64));
+        m.insert("p95".into(), Json::Num(self.p95_ns as f64));
+        m.insert("p99".into(), Json::Num(self.p99_ns as f64));
+        m.insert("max".into(), Json::Num(self.max_ns as f64));
+        m.insert("mean".into(), Json::Num(self.mean_ns));
+        Json::Obj(m)
+    }
+}
+
+/// Per-lane slice of the serving report.
+#[derive(Clone, Debug)]
+pub struct LaneReport {
+    pub lane: usize,
+    pub requests: u64,
+    pub batches: u64,
+    /// Virtual ns this lane spent serving.
+    pub busy_ns: u64,
+    pub latency: LatencySummary,
+}
+
+/// The complete serving report — everything `cannyd serve` knows about
+/// a replayed trace. Serialized via [`ServeReport::to_json_string`];
+/// field values are virtual-time quantities, so the same trace + seed
+/// produces a byte-identical report on a given host.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub label: String,
+    pub seed: u64,
+    /// Engine the planner chose for the lanes.
+    pub engine: String,
+    pub workers_per_lane: usize,
+    pub offered: u64,
+    pub admitted: u64,
+    pub rejected_full: u64,
+    pub rejected_oversize: u64,
+    pub completed: u64,
+    pub queue_depth: usize,
+    pub queue_high_water: usize,
+    pub batch_window_ns: u64,
+    pub max_batch: usize,
+    pub batches_formed: u64,
+    /// Virtual time of the last completion.
+    pub makespan_ns: u64,
+    /// Sum of detected edge pixels over all completed requests (0 when
+    /// execution is disabled) — the proof real compute happened.
+    pub edge_pixels: u64,
+    /// End-to-end latency (arrival → complete), all lanes.
+    pub latency: LatencySummary,
+    /// Waiting-room latency (arrival → dispatch), all lanes.
+    pub queue_wait: LatencySummary,
+    pub lanes: Vec<LaneReport>,
+    pub slo_target_p99_ns: u64,
+}
+
+impl ServeReport {
+    /// Total rejections, all reasons.
+    pub fn rejected(&self) -> u64 {
+        self.rejected_full + self.rejected_oversize
+    }
+
+    /// Did the aggregate p99 stay within the SLO target? Vacuously true
+    /// with no completions.
+    pub fn slo_met(&self) -> bool {
+        self.completed == 0 || self.latency.p99_ns <= self.slo_target_p99_ns
+    }
+
+    /// Completions per virtual second.
+    pub fn throughput_rps(&self) -> f64 {
+        if self.makespan_ns == 0 {
+            return 0.0;
+        }
+        self.completed as f64 / (self.makespan_ns as f64 / 1e9)
+    }
+
+    /// Mean requests per formed batch (coalescing effectiveness).
+    pub fn mean_batch_fill(&self) -> f64 {
+        if self.batches_formed == 0 {
+            return 0.0;
+        }
+        self.completed as f64 / self.batches_formed as f64
+    }
+
+    /// Structured report (object keys are sorted — deterministic dump).
+    pub fn to_json(&self) -> Json {
+        let num = |v: u64| Json::Num(v as f64);
+        let mut m = BTreeMap::new();
+        m.insert("label".into(), Json::Str(self.label.clone()));
+        m.insert("seed".into(), num(self.seed));
+        m.insert("engine".into(), Json::Str(self.engine.clone()));
+        m.insert("workers_per_lane".into(), Json::Num(self.workers_per_lane as f64));
+        m.insert("offered".into(), num(self.offered));
+        m.insert("admitted".into(), num(self.admitted));
+        m.insert("rejected".into(), num(self.rejected()));
+        m.insert("completed".into(), num(self.completed));
+        m.insert("makespan_ns".into(), num(self.makespan_ns));
+        m.insert("throughput_rps".into(), Json::Num(self.throughput_rps()));
+        m.insert("edge_pixels".into(), num(self.edge_pixels));
+
+        let mut queue = BTreeMap::new();
+        queue.insert("depth".into(), Json::Num(self.queue_depth as f64));
+        queue.insert("high_water".into(), Json::Num(self.queue_high_water as f64));
+        queue.insert("rejected_full".into(), num(self.rejected_full));
+        queue.insert("rejected_oversize".into(), num(self.rejected_oversize));
+        m.insert("queue".into(), Json::Obj(queue));
+
+        let mut batch = BTreeMap::new();
+        batch.insert("window_ns".into(), num(self.batch_window_ns));
+        batch.insert("max".into(), Json::Num(self.max_batch as f64));
+        batch.insert("formed".into(), num(self.batches_formed));
+        batch.insert("mean_fill".into(), Json::Num(self.mean_batch_fill()));
+        m.insert("batch".into(), Json::Obj(batch));
+
+        m.insert("latency_ns".into(), self.latency.to_json());
+        m.insert("queue_wait_ns".into(), self.queue_wait.to_json());
+
+        let lanes = self
+            .lanes
+            .iter()
+            .map(|l| {
+                let mut lm = BTreeMap::new();
+                lm.insert("lane".into(), Json::Num(l.lane as f64));
+                lm.insert("requests".into(), num(l.requests));
+                lm.insert("batches".into(), num(l.batches));
+                lm.insert("busy_ns".into(), num(l.busy_ns));
+                lm.insert(
+                    "utilization".into(),
+                    Json::Num(if self.makespan_ns == 0 {
+                        0.0
+                    } else {
+                        l.busy_ns as f64 / self.makespan_ns as f64
+                    }),
+                );
+                lm.insert("latency_ns".into(), l.latency.to_json());
+                Json::Obj(lm)
+            })
+            .collect();
+        m.insert("lanes".into(), Json::Arr(lanes));
+
+        let mut slo = BTreeMap::new();
+        slo.insert("target_p99_ns".into(), num(self.slo_target_p99_ns));
+        slo.insert("p99_ns".into(), num(self.latency.p99_ns));
+        slo.insert("met".into(), Json::Bool(self.slo_met()));
+        m.insert("slo".into(), Json::Obj(slo));
+
+        Json::Obj(m)
+    }
+
+    /// The JSON text `cannyd serve` prints.
+    pub fn to_json_string(&self) -> String {
+        self.to_json().dump()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_stats_summarize_to_zero() {
+        let s = LatencyStats::new().summary();
+        assert_eq!(s, LatencySummary::default());
+    }
+
+    #[test]
+    fn quantiles_ordered() {
+        let mut st = LatencyStats::new();
+        for v in (1..=1000).rev() {
+            st.record(v);
+        }
+        let s = st.summary();
+        assert_eq!(s.n, 1000);
+        assert!(s.p50_ns <= s.p95_ns && s.p95_ns <= s.p99_ns && s.p99_ns <= s.max_ns);
+        assert_eq!(s.max_ns, 1000);
+        assert!(s.p50_ns == 500 || s.p50_ns == 501, "p50={}", s.p50_ns);
+        assert!((s.mean_ns - 500.5).abs() < 1e-9);
+    }
+
+    fn report() -> ServeReport {
+        ServeReport {
+            label: "t".into(),
+            seed: 7,
+            engine: "patterns".into(),
+            workers_per_lane: 2,
+            offered: 10,
+            admitted: 8,
+            rejected_full: 2,
+            rejected_oversize: 0,
+            completed: 8,
+            queue_depth: 4,
+            queue_high_water: 4,
+            batch_window_ns: 2_000_000,
+            max_batch: 4,
+            batches_formed: 2,
+            makespan_ns: 1_000_000_000,
+            edge_pixels: 1234,
+            latency: LatencySummary { n: 8, p99_ns: 5_000_000, ..Default::default() },
+            queue_wait: LatencySummary::default(),
+            lanes: vec![LaneReport {
+                lane: 0,
+                requests: 8,
+                batches: 2,
+                busy_ns: 500_000_000,
+                latency: LatencySummary::default(),
+            }],
+            slo_target_p99_ns: 50_000_000,
+        }
+    }
+
+    #[test]
+    fn report_math() {
+        let r = report();
+        assert_eq!(r.rejected(), 2);
+        assert!(r.slo_met());
+        assert!((r.throughput_rps() - 8.0).abs() < 1e-9);
+        assert!((r.mean_batch_fill() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn report_json_has_required_fields() {
+        let j = report().to_json();
+        assert_eq!(j.get("queue").unwrap().get("high_water").unwrap().as_usize(), Some(4));
+        assert_eq!(j.get("batch").unwrap().get("formed").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("rejected").unwrap().as_usize(), Some(2));
+        let lanes = j.get("lanes").unwrap().as_arr().unwrap();
+        assert!(lanes[0].get("latency_ns").unwrap().get("p99").is_some());
+        assert_eq!(j.get("slo").unwrap().get("met"), Some(&Json::Bool(true)));
+        // The dump round-trips through the parser.
+        let text = report().to_json_string();
+        assert_eq!(Json::parse(&text).unwrap(), j);
+    }
+
+    #[test]
+    fn slo_violation_detected() {
+        let mut r = report();
+        r.slo_target_p99_ns = 1;
+        assert!(!r.slo_met());
+    }
+}

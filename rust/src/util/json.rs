@@ -81,6 +81,72 @@ impl Json {
     pub fn as_usize_vec(&self) -> Option<Vec<usize>> {
         self.as_arr()?.iter().map(|j| j.as_usize()).collect()
     }
+
+    /// Serialize back to compact JSON text. Deterministic: object keys
+    /// come out in `BTreeMap` order and integral numbers render without
+    /// a fractional part, so equal values always produce equal bytes —
+    /// the property the serving report's replay tests rely on.
+    pub fn dump(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if !n.is_finite() {
+                    // JSON has no Inf/NaN; null is the conventional stand-in.
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 9.007_199_254_740_992e15 {
+                    out.push_str(&format!("{}", *n as i64));
+                } else {
+                    out.push_str(&format!("{n}"));
+                }
+            }
+            Json::Str(s) => write_escaped(s, out),
+            Json::Arr(v) => {
+                out.push('[');
+                for (i, item) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn write_escaped(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 struct Parser<'a> {
@@ -294,6 +360,33 @@ mod tests {
         let j = Json::parse("[136, 136]").unwrap();
         assert_eq!(j.as_usize_vec(), Some(vec![136, 136]));
         assert_eq!(Json::parse("[1, \"x\"]").unwrap().as_usize_vec(), None);
+    }
+
+    #[test]
+    fn dump_roundtrips_through_parse() {
+        let j = Json::parse(r#"{"a": [1, 2.5, {"b": "c\nd"}], "e": null, "f": true}"#).unwrap();
+        let text = j.dump();
+        assert_eq!(Json::parse(&text).unwrap(), j);
+        // Integral numbers render without a fractional part.
+        assert!(text.contains("[1,2.5,"), "{text}");
+    }
+
+    #[test]
+    fn dump_is_deterministic_and_escaped() {
+        let mut m = BTreeMap::new();
+        m.insert("z".to_string(), Json::Num(4.0));
+        m.insert("a".to_string(), Json::Str("q\"\\\u{1}".into()));
+        let j = Json::Obj(m);
+        assert_eq!(j.dump(), j.dump());
+        // Keys in BTreeMap order, controls escaped.
+        assert_eq!(j.dump(), "{\"a\":\"q\\\"\\\\\\u0001\",\"z\":4}");
+        assert_eq!(Json::parse(&j.dump()).unwrap(), j);
+    }
+
+    #[test]
+    fn dump_nonfinite_as_null() {
+        assert_eq!(Json::Num(f64::NAN).dump(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).dump(), "null");
     }
 
     #[test]

@@ -1,0 +1,170 @@
+//! Integration: the L3 serving tier — admission-queue backpressure,
+//! deterministic synthetic-trace replay, and batch-window coalescing,
+//! end to end through `service::serve`.
+
+use canny_par::config::RunConfig;
+use canny_par::image::synth::Scene;
+use canny_par::service::{serve, Request, ServeOptions, Trace};
+
+/// Default options with real execution off — pure scheduling, fast.
+fn sched_opts() -> ServeOptions {
+    let mut o = ServeOptions::from_config(&RunConfig::default());
+    o.execute = false;
+    o
+}
+
+fn burst(n: usize, w: usize, h: usize, gap_ns: u64) -> Trace {
+    Trace {
+        requests: (0..n)
+            .map(|k| Request {
+                id: k as u64,
+                arrival_ns: k as u64 * gap_ns,
+                scene: Scene::Checker { cell: 8 },
+                width: w,
+                height: h,
+            })
+            .collect(),
+    }
+}
+
+#[test]
+fn admission_queue_overflow_rejects_with_backpressure() {
+    let mut o = sched_opts();
+    o.lanes = 1;
+    o.queue_depth = 4;
+    o.max_batch = 4;
+    o.batch_window_ns = 10_000_000; // 10 ms: nothing dispatches during the burst
+    // 30 requests all at t=0: 4 fit in the waiting room, 26 bounce.
+    let trace = burst(30, 64, 64, 0);
+    let report = serve("overflow", &trace, &o).unwrap();
+    assert_eq!(report.offered, 30);
+    assert_eq!(report.admitted, 4);
+    assert_eq!(report.rejected_full, 26);
+    assert_eq!(report.completed, 4);
+    assert_eq!(report.offered, report.completed + report.rejected());
+    assert_eq!(report.queue_high_water, 4, "high-water == depth under overload");
+    // The admitted batch dispatched at max fill, not at the window.
+    assert_eq!(report.batches_formed, 1);
+    assert!(report.queue_wait.max_ns < o.batch_window_ns);
+}
+
+#[test]
+fn queue_drains_and_readmits_over_time() {
+    let mut o = sched_opts();
+    o.lanes = 1;
+    o.queue_depth = 2;
+    o.max_batch = 1; // every admission dispatches as a singleton
+    o.batch_window_ns = 0;
+    o.batch_overhead_ns = 100;
+    o.cost_ns_per_pixel = 0;
+    // Arrivals every 200 ns vs 100 ns service: the lane keeps up, so
+    // nothing is ever rejected despite the tiny depth.
+    let trace = burst(50, 32, 32, 200);
+    let report = serve("drain", &trace, &o).unwrap();
+    assert_eq!(report.rejected(), 0);
+    assert_eq!(report.completed, 50);
+    assert!(report.queue_high_water <= 2);
+}
+
+#[test]
+fn oversize_requests_rejected_at_admission() {
+    let mut o = sched_opts();
+    o.lanes = 1;
+    o.max_pixels = 64 * 64; // 96x96 requests are over budget
+    let mut trace = burst(6, 64, 64, 100_000);
+    trace.requests.extend(burst(3, 96, 96, 100_000).requests.into_iter().map(|mut r| {
+        r.id += 6;
+        r
+    }));
+    trace.requests.sort_by_key(|r| (r.arrival_ns, r.id));
+    let report = serve("oversize", &trace, &o).unwrap();
+    assert_eq!(report.rejected_oversize, 3);
+    assert_eq!(report.completed, 6);
+    assert_eq!(report.offered, report.completed + report.rejected());
+}
+
+#[test]
+fn synthetic_replay_is_deterministic() {
+    let o = sched_opts();
+    let trace = Trace::synthetic(300, 42, 20_000.0);
+    let a = serve("replay", &trace, &o).unwrap().to_json_string();
+    let b = serve("replay", &Trace::synthetic(300, 42, 20_000.0), &o).unwrap().to_json_string();
+    assert_eq!(a, b, "same seed must reproduce the report byte-for-byte");
+    let c = serve("replay", &Trace::synthetic(300, 43, 20_000.0), &o).unwrap().to_json_string();
+    assert_ne!(a, c, "different seed must change the report");
+}
+
+#[test]
+fn real_compute_replay_is_deterministic_and_counts_edges() {
+    let mut o = sched_opts();
+    o.execute = true;
+    o.workers_per_lane = 2;
+    let trace = Trace::synthetic(12, 7, 5_000.0);
+    let r1 = serve("exec", &trace, &o).unwrap();
+    let r2 = serve("exec", &trace, &o).unwrap();
+    assert!(r1.edge_pixels > 0, "real detections must find edges");
+    assert_eq!(r1.to_json_string(), r2.to_json_string());
+    assert_eq!(r1.completed, 12);
+}
+
+#[test]
+fn batch_window_coalesces_same_shape_requests() {
+    let mut o = sched_opts();
+    o.lanes = 1;
+    o.max_batch = 4;
+    o.batch_window_ns = 1_000_000; // 1 ms
+    // 12 same-shape requests at t=0 -> three full batches of 4.
+    let report = serve("coalesce", &burst(12, 64, 64, 0), &o).unwrap();
+    assert_eq!(report.batches_formed, 3);
+    assert!((report.mean_batch_fill() - 4.0).abs() < 1e-9);
+
+    // Zero window + spaced arrivals -> every request is its own batch.
+    let mut singles = sched_opts();
+    singles.lanes = 1;
+    singles.max_batch = 4;
+    singles.batch_window_ns = 0;
+    let report = serve("singles", &burst(12, 64, 64, 50_000), &singles).unwrap();
+    assert_eq!(report.batches_formed, 12);
+    assert!((report.mean_batch_fill() - 1.0).abs() < 1e-9);
+}
+
+#[test]
+fn report_carries_slo_and_per_lane_percentiles() {
+    let mut o = sched_opts();
+    o.lanes = 2;
+    let trace = Trace::synthetic(200, 9, 20_000.0);
+    let report = serve("slo", &trace, &o).unwrap();
+    assert_eq!(report.lanes.len(), 2);
+    for lane in &report.lanes {
+        let l = lane.latency;
+        assert!(l.p50_ns <= l.p95_ns && l.p95_ns <= l.p99_ns, "lane {} disordered", lane.lane);
+    }
+    // Virtual latencies include at least the dispatch overhead.
+    assert!(report.latency.p50_ns >= o.batch_overhead_ns);
+    // An impossible SLO target is reported as violated.
+    let mut strict = sched_opts();
+    strict.slo_p99_ns = 1;
+    let r = serve("strict", &trace, &strict).unwrap();
+    assert!(!r.slo_met());
+    let json = r.to_json_string();
+    assert!(json.contains("\"met\":false"), "{json}");
+}
+
+#[test]
+fn json_trace_replays_like_a_synthetic_one() {
+    let text = r#"{"requests": [
+        {"arrival_us": 0,   "width": 64, "height": 64, "scene": "checker:8"},
+        {"arrival_us": 100, "width": 64, "height": 64, "scene": "checker:8"},
+        {"arrival_us": 150, "width": 96, "height": 64, "scene": "shapes:3"}
+    ]}"#;
+    let trace = Trace::from_json(text).unwrap();
+    let mut o = sched_opts();
+    o.lanes = 1;
+    let a = serve("json", &trace, &o).unwrap();
+    let b = serve("json", &Trace::from_json(text).unwrap(), &o).unwrap();
+    assert_eq!(a.to_json_string(), b.to_json_string());
+    assert_eq!(a.offered, 3);
+    assert_eq!(a.completed, 3);
+    // Two shapes -> at least two batches.
+    assert!(a.batches_formed >= 2);
+}
