@@ -64,25 +64,32 @@ pub fn hysteresis_parallel(pool: &Pool, cls: &ImageF32) -> EdgeMap {
         .filter(|&i| cls.data()[i] == CLASS_STRONG)
         .collect();
     let grain = patterns::auto_grain(seeds.len(), pool.n_workers());
-    patterns::par_for(pool, 0..seeds.len(), grain, |si| {
-        let mut stack = vec![seeds[si]];
-        // Claim the seed.
-        if flags[seeds[si]].swap(255, Ordering::AcqRel) != 0 {
-            return;
-        }
-        while let Some(idx) = stack.pop() {
-            let (cy, cx) = (idx / w, idx % w);
-            for (dy, dx) in NEIGHBOURS {
-                let ny = cy as i64 + dy;
-                let nx = cx as i64 + dx;
-                if ny < 0 || nx < 0 || ny >= h as i64 || nx >= w as i64 {
-                    continue;
-                }
-                let nidx = ny as usize * w + nx as usize;
-                if cls.data()[nidx] >= CLASS_WEAK
-                    && flags[nidx].swap(255, Ordering::AcqRel) == 0
-                {
-                    stack.push(nidx);
+    // One task per seed *band* (par_rows is just chunked indices), so
+    // each task reuses a single BFS stack across its seeds. Claim the
+    // seed with the atomic FIRST — on dense seed maps most seeds are
+    // already claimed by a neighbour's flood, and losing the race must
+    // cost a compare-exchange, not a heap allocation.
+    patterns::par_rows(pool, seeds.len(), grain, |band| {
+        let mut stack: Vec<usize> = Vec::new();
+        for si in band {
+            if flags[seeds[si]].swap(255, Ordering::AcqRel) != 0 {
+                continue;
+            }
+            stack.push(seeds[si]);
+            while let Some(idx) = stack.pop() {
+                let (cy, cx) = (idx / w, idx % w);
+                for (dy, dx) in NEIGHBOURS {
+                    let ny = cy as i64 + dy;
+                    let nx = cx as i64 + dx;
+                    if ny < 0 || nx < 0 || ny >= h as i64 || nx >= w as i64 {
+                        continue;
+                    }
+                    let nidx = ny as usize * w + nx as usize;
+                    if cls.data()[nidx] >= CLASS_WEAK
+                        && flags[nidx].swap(255, Ordering::AcqRel) == 0
+                    {
+                        stack.push(nidx);
+                    }
                 }
             }
         }

@@ -114,6 +114,32 @@ impl StageTimes {
     pub fn serial_ns(&self) -> u64 {
         self.pad_ns + self.hysteresis_ns
     }
+
+    /// Fieldwise minimum of two measurements of the *same* work — the
+    /// noise-robust estimator min-of-repeats probing uses (preemption on
+    /// a timeshared host only ever inflates a sample). Tile costs merge
+    /// elementwise when the grids match, else the first is kept.
+    pub fn min_with(&self, other: &StageTimes) -> StageTimes {
+        StageTimes {
+            pad_ns: self.pad_ns.min(other.pad_ns),
+            gaussian_ns: self.gaussian_ns.min(other.gaussian_ns),
+            sobel_ns: self.sobel_ns.min(other.sobel_ns),
+            nms_ns: self.nms_ns.min(other.nms_ns),
+            threshold_ns: self.threshold_ns.min(other.threshold_ns),
+            front_ns: self.front_ns.min(other.front_ns),
+            hysteresis_ns: self.hysteresis_ns.min(other.hysteresis_ns),
+            total_ns: self.total_ns.min(other.total_ns),
+            tile_costs_ns: if self.tile_costs_ns.len() == other.tile_costs_ns.len() {
+                self.tile_costs_ns
+                    .iter()
+                    .zip(&other.tile_costs_ns)
+                    .map(|(&a, &b)| a.min(b))
+                    .collect()
+            } else {
+                self.tile_costs_ns.clone()
+            },
+        }
+    }
 }
 
 /// Full detection output.
@@ -167,6 +193,33 @@ impl<'a> CannyPipeline<'a> {
         }?;
         out.times.total_ns = total.elapsed_ns();
         Ok(out)
+    }
+
+    /// Measure [`StageTimes`] for a `width`×`height` detection on this
+    /// engine: run the real pipeline `repeats` times (>= 1) on a
+    /// deterministic synthetic scene of that shape and keep the
+    /// fieldwise minimum. This is the per-shape probe the serving tier's
+    /// cost calibration is fitted from.
+    pub fn probe_shape(
+        &self,
+        width: usize,
+        height: usize,
+        repeats: usize,
+        params: &CannyParams,
+    ) -> Result<StageTimes> {
+        let scene = crate::image::synth::Scene::Shapes {
+            seed: ((width as u64) << 32) | height as u64,
+        };
+        let img = crate::image::synth::generate(scene, width, height);
+        let mut best: Option<StageTimes> = None;
+        for _ in 0..repeats.max(1) {
+            let t = self.detect(&img, params)?.times;
+            best = Some(match best {
+                None => t,
+                Some(b) => b.min_with(&t),
+            });
+        }
+        Ok(best.expect("at least one repeat ran"))
     }
 
     fn need_pool(&self) -> Result<&'a Pool> {
@@ -522,6 +575,18 @@ mod tests {
         let a = CannyPipeline::patterns(&pool).detect(&img, &base).unwrap();
         let b = CannyPipeline::patterns(&pool).detect(&img, &par).unwrap();
         assert_eq!(a.edges.diff_count(&b.edges), 0);
+    }
+
+    #[test]
+    fn probe_shape_measures_and_min_merges() {
+        let out = CannyPipeline::serial().probe_shape(64, 48, 2, &CannyParams::default()).unwrap();
+        assert!(out.total_ns > 0);
+        assert!(out.front_ns > 0);
+        let a = StageTimes { total_ns: 10, gaussian_ns: 7, ..StageTimes::default() };
+        let b = StageTimes { total_ns: 4, gaussian_ns: 9, ..StageTimes::default() };
+        let m = a.min_with(&b);
+        assert_eq!(m.total_ns, 4);
+        assert_eq!(m.gaussian_ns, 7);
     }
 
     #[test]

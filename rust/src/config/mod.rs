@@ -7,6 +7,7 @@ use std::path::Path;
 
 use crate::canny::{CannyParams, Engine};
 use crate::error::{Error, Result};
+use crate::service::clock::ClockMode;
 
 /// Fully-resolved run configuration for the `cannyd` launcher and the
 /// coordinator's planner.
@@ -46,6 +47,10 @@ pub struct RunConfig {
     /// Serving tier: per-request pixel budget (0 = unlimited); larger
     /// requests are rejected at admission with an `oversize` reason.
     pub max_pixels: usize,
+    /// Serving tier: which clock drives the event loop —
+    /// `virtual` (deterministic modeled-time replay, the default) or
+    /// `wall` (real lane threads + monotonic time).
+    pub clock: ClockMode,
 }
 
 impl Default for RunConfig {
@@ -67,6 +72,7 @@ impl Default for RunConfig {
             arrival_rate_hz: 2000.0,
             slo_p99_ms: 50.0,
             max_pixels: 0,
+            clock: ClockMode::Virtual,
         }
     }
 }
@@ -118,6 +124,9 @@ impl RunConfig {
             "max-pixels" | "max_pixels" => {
                 self.max_pixels = value.parse().map_err(|_| bad("usize"))?
             }
+            "clock" => {
+                self.clock = ClockMode::parse(value).ok_or_else(|| bad("clock"))?
+            }
             _ => return Err(Error::Config(format!("unknown config key `{key}`"))),
         }
         Ok(())
@@ -159,6 +168,7 @@ impl RunConfig {
         "slo_p99_ms",
         "max-pixels",
         "max_pixels",
+        "clock",
     ];
 
     /// Is `key` a config key `set` would accept?
@@ -262,6 +272,7 @@ impl RunConfig {
         m.insert("arrival-rate".into(), self.arrival_rate_hz.to_string());
         m.insert("slo-p99-ms".into(), self.slo_p99_ms.to_string());
         m.insert("max-pixels".into(), self.max_pixels.to_string());
+        m.insert("clock".into(), self.clock.name().to_string());
         m
     }
 }
@@ -364,6 +375,18 @@ mod tests {
     }
 
     #[test]
+    fn clock_key_parses_both_modes() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.clock, ClockMode::Virtual);
+        c.set("clock", "wall").unwrap();
+        assert_eq!(c.clock, ClockMode::Wall);
+        c.set("clock", "virtual").unwrap();
+        assert_eq!(c.clock, ClockMode::Virtual);
+        assert!(c.set("clock", "sundial").is_err());
+        assert_eq!(c.to_map().get("clock").map(String::as_str), Some("virtual"));
+    }
+
+    #[test]
     fn serve_keys_set_and_validate() {
         let mut c = RunConfig::default();
         c.set("lanes", "4").unwrap();
@@ -391,6 +414,7 @@ mod tests {
                 "artifacts" | "artifacts-dir" => "artifacts",
                 "tile-name" | "tile_name" => "t128",
                 "parallel-hysteresis" | "parallel_hysteresis" => "true",
+                "clock" => "wall",
                 _ => "4", // parses as usize / u64 / f32 / f64 alike
             };
             c.set(key, sample).unwrap_or_else(|e| panic!("KEYS lists `{key}` but set failed: {e}"));

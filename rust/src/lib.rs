@@ -13,8 +13,12 @@
 //! * **L3 serving tier** ([`service`]) — the multi-client front door:
 //!   a bounded admission queue with backpressure, same-shape request
 //!   batching under a max-delay window, N sharded detector lanes, and
-//!   p50/p95/p99 SLO reporting — replayed deterministically in virtual
-//!   time (`cannyd serve`).
+//!   p50/p95/p99 SLO reporting — under **two clocks** (`cannyd serve
+//!   --clock virtual|wall`): a deterministic virtual-time replay whose
+//!   service-cost model can be calibrated from measured
+//!   [`canny::StageTimes`] ([`service::calibrate`]), and a wall-clock
+//!   mode running real lane threads on monotonic time that the
+//!   calibrated predictions are validated against.
 //! * **L2/L1 (python/, build-time only)** — the Canny front-end
 //!   (Gaussian → Sobel → NMS → double threshold) as JAX + Pallas
 //!   kernels, AOT-lowered to HLO text consumed by [`runtime`] through

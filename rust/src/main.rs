@@ -1,12 +1,14 @@
 //! `cannyd` — the canny-par launcher.
 //!
 //! Subcommands:
-//!   run      --input x.pgm --output edges.pgm [--engine …] [--workers n]
-//!   gen      --scene shapes:7 --size 512x512 --output img.pgm
-//!   batch    --count 16 --size 512x512 [--scene …]   (farm throughput)
-//!   serve    --synthetic 200 | --requests trace.json   (serving tier)
-//!   profile  [--sim-cpus 4|8] [--engine serial|patterns]   (figures)
-//!   info     (topology, artifacts, resolved config)
+//!   run        --input x.pgm --output edges.pgm [--engine …] [--workers n]
+//!   gen        --scene shapes:7 --size 512x512 --output img.pgm
+//!   batch      --count 16 --size 512x512 [--scene …]   (farm throughput)
+//!   serve      --synthetic 200 | --requests trace.json   (serving tier;
+//!              --clock virtual|wall, --calibration file.json|probe)
+//!   calibrate  [--output calib.json]   (probe the service-cost model)
+//!   profile    [--sim-cpus 4|8] [--engine serial|patterns]   (figures)
+//!   info       (topology, artifacts, resolved config)
 //!
 //! Global flags are config keys (`--engine`, `--workers`, `--lo`, …),
 //! see `config::RunConfig`; `--config file.conf` loads a file first.
@@ -25,7 +27,8 @@ use canny_par::image::synth::{generate, Scene};
 use canny_par::image::{pgm, ImageF32};
 use canny_par::profiler::UsageTrace;
 use canny_par::runtime::Manifest;
-use canny_par::service::{serve, ServeOptions, Trace};
+use canny_par::service::calibrate::{DEFAULT_PROBE_SHAPES, PROBE_REPEATS};
+use canny_par::service::{calibrate_for, serve, Calibration, ServeOptions, Shape, Trace};
 use canny_par::simsched::simulate;
 use canny_par::util::timer::human_ns;
 
@@ -41,7 +44,8 @@ fn main() -> ExitCode {
 }
 
 /// Every subcommand (also the source of the command-flag union below).
-const COMMANDS: &[&str] = &["run", "gen", "batch", "serve", "profile", "info", "help"];
+const COMMANDS: &[&str] =
+    &["run", "gen", "batch", "serve", "calibrate", "profile", "info", "help"];
 
 /// Command-level flags (not config keys) each subcommand accepts.
 fn allowed_extras(cmd: &str) -> &'static [&'static str] {
@@ -49,7 +53,8 @@ fn allowed_extras(cmd: &str) -> &'static [&'static str] {
         "run" => &["config", "input", "output", "scene", "size"],
         "gen" => &["config", "scene", "size", "output"],
         "batch" => &["config", "count", "size", "scene"],
-        "serve" => &["config", "requests", "synthetic"],
+        "serve" => &["config", "requests", "synthetic", "calibration"],
+        "calibrate" => &["config", "output"],
         "profile" => &["config", "figure"],
         _ => &["config"],
     }
@@ -135,7 +140,8 @@ fn run(args: Vec<String>) -> anyhow::Result<()> {
         "run" => cmd_run(&cfg, get("input"), get("output"), get("scene"), get("size")),
         "gen" => cmd_gen(&cfg, get("scene"), get("size"), get("output")),
         "batch" => cmd_batch(&cfg, get("count"), get("size"), get("scene")),
-        "serve" => cmd_serve(&cfg, get("requests"), get("synthetic")),
+        "serve" => cmd_serve(&cfg, get("requests"), get("synthetic"), get("calibration")),
+        "calibrate" => cmd_calibrate(&cfg, get("output")),
         "profile" => cmd_profile(&cfg, get("figure")),
         "info" => cmd_info(&cfg),
         "help" => {
@@ -149,23 +155,29 @@ fn run(args: Vec<String>) -> anyhow::Result<()> {
 const HELP: &str = "\
 cannyd — high-performance parallel Canny edge detector (CS.DC 2017 repro)
 
-USAGE: cannyd <run|gen|batch|serve|profile|info> [flags]
+USAGE: cannyd <run|gen|batch|serve|calibrate|profile|info> [flags]
 
-  run      detect edges:      --input x.pgm | --scene shapes:7 --size 512x512
-                              [--output edges.pgm]
-  gen      generate an image: --scene checker:16 --size 512x512 --output x.pgm
-  batch    farm throughput:   --count 16 --size 512x512 [--scene shapes]
-  serve    serving tier:      --synthetic 200 | --requests trace.json
-                              (admission queue -> batcher -> detector lanes;
-                               prints a deterministic JSON SLO report)
-  profile  paper figures:     [--figure fig8|fig9|percore] [--sim-cpus 4|8]
-  info     topology + artifacts + resolved config
+  run        detect edges:      --input x.pgm | --scene shapes:7 --size 512x512
+                                [--output edges.pgm]
+  gen        generate an image: --scene checker:16 --size 512x512 --output x.pgm
+  batch      farm throughput:   --count 16 --size 512x512 [--scene shapes]
+  serve      serving tier:      --synthetic 200 | --requests trace.json
+                                (admission queue -> batcher -> detector lanes;
+                                 prints a JSON SLO report; --clock virtual
+                                 replays deterministically, --clock wall runs
+                                 real lane threads on monotonic time;
+                                 --calibration file.json|probe swaps the
+                                 virtual cost model for a measured one)
+  calibrate  probe the service-cost model on this host and print/save it
+                                [--output calib.json]
+  profile    paper figures:     [--figure fig8|fig9|percore] [--sim-cpus 4|8]
+  info       topology + artifacts + resolved config
 
 Config flags (all commands): --engine serial|patterns|tiled|xla
   --workers N  --lo F --hi F --tile N --parallel-hysteresis
   --artifacts DIR --tile-name tNNN --sim-cpus N --seed N --config FILE
 Serve flags: --lanes N --queue-depth N --batch-window-us N --batch-max N
-  --arrival-rate HZ --slo-p99-ms F --max-pixels N
+  --arrival-rate HZ --slo-p99-ms F --max-pixels N --clock virtual|wall
 
 Unknown flags and subcommands are errors, not ignored.
 ";
@@ -273,6 +285,7 @@ fn cmd_serve(
     cfg: &RunConfig,
     requests: Option<String>,
     synthetic: Option<String>,
+    calibration: Option<String>,
 ) -> anyhow::Result<()> {
     let (label, trace) = match requests {
         Some(path) => {
@@ -289,8 +302,37 @@ fn cmd_serve(
             )
         }
     };
-    let report = serve(&label, &trace, &ServeOptions::from_config(cfg))?;
+    let mut opts = ServeOptions::from_config(cfg);
+    // `--calibration probe` measures at startup; anything else is a
+    // saved calibration JSON (deterministic replay).
+    opts.calibration = match calibration.as_deref() {
+        Some("probe") => Some(calibrate_for(&trace, &opts)?),
+        Some(path) => Some(Calibration::from_json_file(Path::new(path))?),
+        None => None,
+    };
+    let report = serve(&label, &trace, &opts)?;
     println!("{}", report.to_json_string());
+    Ok(())
+}
+
+/// Probe the service-cost model for the configured engine/workers on
+/// the default shape grid; print the calibration JSON (and save it when
+/// `--output` is given) for later `serve --calibration file.json` runs.
+fn cmd_calibrate(cfg: &RunConfig, output: Option<String>) -> anyhow::Result<()> {
+    let det = Detector::from_config(cfg)?;
+    let shapes: Vec<Shape> =
+        DEFAULT_PROBE_SHAPES.iter().map(|&(w, h)| Shape { width: w, height: h }).collect();
+    let calib = Calibration::probe(&det, &shapes, PROBE_REPEATS)?;
+    match output {
+        Some(path) => {
+            calib.save(Path::new(&path))?;
+            eprintln!(
+                "calibrated {} ({} workers): overhead {} ns + {:.3} ns/px -> wrote {path}",
+                calib.engine, calib.workers, calib.overhead_ns, calib.cost_ns_per_pixel
+            );
+        }
+        None => println!("{}", calib.to_json_string()),
+    }
     Ok(())
 }
 

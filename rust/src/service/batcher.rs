@@ -175,6 +175,27 @@ mod tests {
     }
 
     #[test]
+    fn mid_window_join_keeps_the_oldest_requests_deadline() {
+        // The max-delay guarantee is anchored to the request that
+        // opened the group: a join mid-window must NOT extend the
+        // deadline, and the closed batch carries both requests.
+        let mut b = Batcher::new(100, 8);
+        b.push(req(0, 64, 64), 0);
+        assert_eq!(b.next_deadline(), Some(100));
+        assert!(b.push(req(1, 64, 64), 60).is_none(), "join below max fill stays open");
+        assert_eq!(b.next_deadline(), Some(100), "deadline anchored to the opener");
+        assert!(b.expire(99).is_empty());
+        let closed = b.expire(100);
+        assert_eq!(closed.len(), 1);
+        assert_eq!(closed[0].len(), 2);
+        assert_eq!(closed[0].formed_ns, 100);
+        // A post-close arrival opens a fresh group with a fresh window.
+        b.push(req(2, 64, 64), 130);
+        assert_eq!(b.next_deadline(), Some(230));
+        assert_eq!(b.requests_batched, 2);
+    }
+
+    #[test]
     fn zero_window_means_immediate_expiry() {
         let mut b = Batcher::new(0, 8);
         b.push(req(0, 64, 64), 7);

@@ -1,0 +1,312 @@
+//! Service-cost calibration: fit the virtual clock's cost model from
+//! measured [`crate::canny::StageTimes`].
+//!
+//! The virtual driver charges each dispatch
+//! `overhead_ns + cost_ns_per_pixel * pixels`. PR 1 shipped synthetic
+//! constants for those two numbers; this module replaces them with a
+//! model fitted to the *real* detector on the *current* host: probe a
+//! grid of shapes (each measured as the fieldwise-min of repeated runs,
+//! via [`crate::canny::CannyPipeline::probe_shape`]), then least-squares
+//! fit measured nanoseconds against pixel count. With a calibration
+//! installed, virtual-time p50/p95/p99 predictions track the wall-clock
+//! driver instead of a guess — the integration suite asserts the two
+//! agree within a documented tolerance band.
+//!
+//! Calibrations serialize to JSON (schema in [`crate::service`] docs) so
+//! a probe done once can be replayed deterministically with
+//! `cannyd serve --calibration file.json`.
+
+use std::path::Path;
+
+use crate::coordinator::Detector;
+use crate::error::{Error, Result};
+use crate::service::request::Shape;
+use crate::util::json::Json;
+
+/// Fallback probe grid when no trace shapes are available (spans the
+/// synthetic size palette and a couple of larger shapes so the fit has
+/// leverage on the per-pixel slope).
+pub const DEFAULT_PROBE_SHAPES: &[(usize, usize)] =
+    &[(64, 64), (96, 96), (128, 128), (192, 192), (256, 256)];
+
+/// Detection runs per probe shape; the fieldwise minimum is kept
+/// (min-of-repeats strips preemption noise on a timeshared host).
+pub const PROBE_REPEATS: usize = 3;
+
+/// One measured shape: the min-of-repeats end-to-end detection cost.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ProbePoint {
+    pub width: usize,
+    pub height: usize,
+    /// Measured detection nanoseconds for this shape.
+    pub ns: u64,
+}
+
+impl ProbePoint {
+    pub fn pixels(&self) -> usize {
+        self.width * self.height
+    }
+}
+
+/// A fitted per-engine service-cost model: `t(px) = overhead_ns +
+/// cost_ns_per_pixel * px`, plus the probe points it was fitted from
+/// (kept for provenance and for re-fitting offline).
+#[derive(Clone, Debug)]
+pub struct Calibration {
+    /// Engine the probes ran on (provenance only).
+    pub engine: String,
+    /// Worker threads per lane during probing (provenance only).
+    pub workers: usize,
+    /// Fitted per-dispatch fixed cost, ns (intercept, clamped >= 0).
+    pub overhead_ns: u64,
+    /// Fitted per-pixel cost, ns (slope, clamped >= 0).
+    pub cost_ns_per_pixel: f64,
+    pub probes: Vec<ProbePoint>,
+}
+
+impl Calibration {
+    /// Modeled service cost for one dispatch of `pixels` total pixels.
+    pub fn service_ns(&self, pixels: usize) -> u64 {
+        self.overhead_ns
+            .saturating_add((self.cost_ns_per_pixel * pixels as f64).round() as u64)
+    }
+
+    /// Least-squares fit `ns = a + b * pixels` over the probe points,
+    /// clamped to the physical range (`a >= 0`, `b >= 0`): a negative
+    /// intercept refits through the origin, a negative slope degrades to
+    /// a flat per-dispatch cost. A single distinct pixel count fits
+    /// through the origin (no leverage to split overhead from slope).
+    pub fn fit(probes: Vec<ProbePoint>, engine: &str, workers: usize) -> Result<Calibration> {
+        if probes.is_empty() {
+            return Err(Error::Config("calibration: no probe points".into()));
+        }
+        let n = probes.len() as f64;
+        let (mut sx, mut sy, mut sxx, mut sxy) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+        for p in &probes {
+            let (x, y) = (p.pixels() as f64, p.ns as f64);
+            sx += x;
+            sy += y;
+            sxx += x * x;
+            sxy += x * y;
+        }
+        let var = sxx - sx * sx / n;
+        let (mut a, mut b) = if var <= f64::EPSILON * sxx {
+            (0.0, sy / sx)
+        } else {
+            let b = (sxy - sx * sy / n) / var;
+            (sy / n - b * sx / n, b)
+        };
+        if b < 0.0 {
+            (a, b) = (sy / n, 0.0);
+        } else if a < 0.0 {
+            (a, b) = (0.0, sxy / sxx);
+        }
+        Ok(Calibration {
+            engine: engine.to_string(),
+            workers,
+            overhead_ns: a.round() as u64,
+            cost_ns_per_pixel: b,
+            probes,
+        })
+    }
+
+    /// Measure `shapes` on `det` (each the fieldwise-min of `repeats`
+    /// runs) and fit the cost model.
+    pub fn probe(det: &Detector, shapes: &[Shape], repeats: usize) -> Result<Calibration> {
+        let mut probes = Vec::with_capacity(shapes.len());
+        for s in shapes {
+            let times = det.pipeline().probe_shape(s.width, s.height, repeats, det.params())?;
+            probes.push(ProbePoint { width: s.width, height: s.height, ns: times.total_ns });
+        }
+        Calibration::fit(probes, det.engine().name(), det.n_workers())
+    }
+
+    /// Serialize (schema documented in the [`crate::service`] module).
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("format".into(), Json::Num(1.0));
+        m.insert("engine".into(), Json::Str(self.engine.clone()));
+        m.insert("workers".into(), Json::Num(self.workers as f64));
+        m.insert("overhead_ns".into(), Json::Num(self.overhead_ns as f64));
+        m.insert("cost_ns_per_pixel".into(), Json::Num(self.cost_ns_per_pixel));
+        let probes = self
+            .probes
+            .iter()
+            .map(|p| {
+                let mut pm = std::collections::BTreeMap::new();
+                pm.insert("width".into(), Json::Num(p.width as f64));
+                pm.insert("height".into(), Json::Num(p.height as f64));
+                pm.insert("ns".into(), Json::Num(p.ns as f64));
+                Json::Obj(pm)
+            })
+            .collect();
+        m.insert("probes".into(), Json::Arr(probes));
+        Json::Obj(m)
+    }
+
+    pub fn to_json_string(&self) -> String {
+        self.to_json().dump()
+    }
+
+    /// Parse + validate a calibration document. `overhead_ns` and
+    /// `cost_ns_per_pixel` are required and must be finite and >= 0;
+    /// `engine`, `workers` and `probes` are optional provenance. A
+    /// `format` other than 1 (or absent) is rejected so future schema
+    /// revisions fail loudly instead of loading under v1 semantics.
+    pub fn from_json(text: &str) -> Result<Calibration> {
+        let j = Json::parse(text)?;
+        if let Some(f) = j.get("format").and_then(Json::as_f64) {
+            if f != 1.0 {
+                return Err(Error::Config(format!(
+                    "calibration: unsupported format {f} (this build reads format 1)"
+                )));
+            }
+        }
+        let num = |key: &str| -> Result<f64> {
+            let v = j
+                .get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| Error::Config(format!("calibration: missing/invalid `{key}`")))?;
+            if !(v.is_finite() && v >= 0.0) {
+                return Err(Error::Config(format!(
+                    "calibration: `{key}` must be finite and >= 0, got {v}"
+                )));
+            }
+            Ok(v)
+        };
+        let overhead_ns = num("overhead_ns")? as u64;
+        let cost_ns_per_pixel = num("cost_ns_per_pixel")?;
+        let mut probes = Vec::new();
+        if let Some(arr) = j.get("probes").and_then(Json::as_arr) {
+            for (k, p) in arr.iter().enumerate() {
+                let field = |name: &str| -> Result<f64> {
+                    p.get(name).and_then(Json::as_f64).ok_or_else(|| {
+                        Error::Config(format!("calibration probe {k}: missing/invalid `{name}`"))
+                    })
+                };
+                probes.push(ProbePoint {
+                    width: field("width")? as usize,
+                    height: field("height")? as usize,
+                    ns: field("ns")? as u64,
+                });
+            }
+        }
+        Ok(Calibration {
+            engine: j.get("engine").and_then(Json::as_str).unwrap_or("").to_string(),
+            workers: j.get("workers").and_then(Json::as_usize).unwrap_or(0),
+            overhead_ns,
+            cost_ns_per_pixel,
+            probes,
+        })
+    }
+
+    /// [`Calibration::from_json`] over a file.
+    pub fn from_json_file(path: &Path) -> Result<Calibration> {
+        Calibration::from_json(&std::fs::read_to_string(path)?)
+    }
+
+    /// Write the JSON document to `path`.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json_string())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn point(w: usize, h: usize, ns: u64) -> ProbePoint {
+        ProbePoint { width: w, height: h, ns }
+    }
+
+    #[test]
+    fn fit_recovers_a_linear_model() {
+        // ns = 50_000 + 3 * px, exactly.
+        let probes: Vec<ProbePoint> = [(64, 64), (128, 128), (256, 256)]
+            .iter()
+            .map(|&(w, h)| point(w, h, 50_000 + 3 * (w * h) as u64))
+            .collect();
+        let c = Calibration::fit(probes, "patterns", 4).unwrap();
+        assert!((c.overhead_ns as i64 - 50_000).abs() <= 1, "overhead {}", c.overhead_ns);
+        assert!((c.cost_ns_per_pixel - 3.0).abs() < 1e-6, "slope {}", c.cost_ns_per_pixel);
+        assert_eq!(c.service_ns(10_000), c.overhead_ns + 30_000);
+    }
+
+    #[test]
+    fn fit_single_shape_goes_through_the_origin() {
+        let c = Calibration::fit(vec![point(100, 100, 40_000)], "serial", 1).unwrap();
+        assert_eq!(c.overhead_ns, 0);
+        assert!((c.cost_ns_per_pixel - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fit_clamps_unphysical_slopes_and_intercepts() {
+        // Decreasing cost with size -> slope clamps to 0, flat mean cost.
+        let c = Calibration::fit(
+            vec![point(64, 64, 90_000), point(256, 256, 10_000)],
+            "patterns",
+            2,
+        )
+        .unwrap();
+        assert_eq!(c.cost_ns_per_pixel, 0.0);
+        assert_eq!(c.overhead_ns, 50_000);
+        // Negative intercept (tiny fixed cost) -> refit through origin.
+        let c2 = Calibration::fit(
+            vec![point(64, 64, 1_000), point(256, 256, 300_000)],
+            "patterns",
+            2,
+        )
+        .unwrap();
+        assert_eq!(c2.overhead_ns, 0);
+        assert!(c2.cost_ns_per_pixel > 0.0);
+        assert!(Calibration::fit(Vec::new(), "patterns", 1).is_err());
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_the_model() {
+        let c = Calibration {
+            engine: "tiled".into(),
+            workers: 3,
+            overhead_ns: 120_000,
+            cost_ns_per_pixel: 3.5,
+            probes: vec![point(96, 96, 152_256)],
+        };
+        let back = Calibration::from_json(&c.to_json_string()).unwrap();
+        assert_eq!(back.engine, "tiled");
+        assert_eq!(back.workers, 3);
+        assert_eq!(back.overhead_ns, 120_000);
+        assert!((back.cost_ns_per_pixel - 3.5).abs() < 1e-12);
+        assert_eq!(back.probes, c.probes);
+    }
+
+    #[test]
+    fn from_json_rejects_bad_documents() {
+        assert!(Calibration::from_json("{}").is_err());
+        assert!(Calibration::from_json(r#"{"overhead_ns": 1}"#).is_err());
+        assert!(
+            Calibration::from_json(r#"{"overhead_ns": -5, "cost_ns_per_pixel": 1}"#).is_err()
+        );
+        assert!(
+            Calibration::from_json(r#"{"overhead_ns": 1, "cost_ns_per_pixel": 1e999}"#).is_err()
+        );
+        // A future schema revision is rejected, not misread as v1.
+        assert!(Calibration::from_json(
+            r#"{"format": 2, "overhead_ns": 1, "cost_ns_per_pixel": 1}"#
+        )
+        .is_err());
+        // Minimal hand-written model is accepted.
+        let c = Calibration::from_json(r#"{"overhead_ns": 1000, "cost_ns_per_pixel": 2}"#)
+            .unwrap();
+        assert_eq!(c.service_ns(10), 1020);
+    }
+
+    #[test]
+    fn probe_measures_a_real_detector() {
+        let det = Detector::builder().workers(1).build().unwrap();
+        let c = Calibration::probe(&det, &[Shape { width: 48, height: 32 }], 1).unwrap();
+        assert_eq!(c.probes.len(), 1);
+        assert!(c.probes[0].ns > 0, "probe must measure real work");
+        assert!(c.service_ns(48 * 32) > 0);
+    }
+}

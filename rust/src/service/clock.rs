@@ -1,0 +1,109 @@
+//! The serving tier's two clocks.
+//!
+//! [`ClockMode::Virtual`] replays a trace in modeled time: lane
+//! occupancy advances by the service-cost model and the report is
+//! byte-identical for the same trace + seed regardless of host load —
+//! the testable, predictive mode.
+//!
+//! [`ClockMode::Wall`] runs the same admission → batch → lane pipeline
+//! against real worker threads and a monotonic clock: arrivals are paced
+//! to their trace offsets, lanes drain a shared dispatch channel, and
+//! every latency in the report is a measured wall-clock quantity. This
+//! is the ground truth the calibrated virtual model is validated
+//! against (see [`crate::service::calibrate`]).
+
+use std::time::{Duration, Instant};
+
+/// Which clock drives the serving event loop.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ClockMode {
+    /// Deterministic modeled time (the default).
+    #[default]
+    Virtual,
+    /// Real threads + monotonic time.
+    Wall,
+}
+
+impl ClockMode {
+    /// Parse the `--clock` config value.
+    pub fn parse(s: &str) -> Option<ClockMode> {
+        match s {
+            "virtual" => Some(ClockMode::Virtual),
+            "wall" | "real" | "realtime" => Some(ClockMode::Wall),
+            _ => None,
+        }
+    }
+
+    /// The name echoed in the serving report's `clock` field.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ClockMode::Virtual => "virtual",
+            ClockMode::Wall => "wall",
+        }
+    }
+}
+
+/// Monotonic time since an epoch fixed at serve start, in nanoseconds —
+/// the wall driver's analogue of the virtual driver's `now` counter.
+/// Copyable so every lane thread carries the same epoch.
+#[derive(Clone, Copy, Debug)]
+pub struct WallClock {
+    epoch: Instant,
+}
+
+impl WallClock {
+    pub fn start() -> WallClock {
+        WallClock { epoch: Instant::now() }
+    }
+
+    /// Nanoseconds elapsed since [`WallClock::start`].
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Sleep until the clock reads at least `t_ns` (no-op if it already
+    /// does). Loops because `thread::sleep` may wake early.
+    pub fn sleep_until(&self, t_ns: u64) {
+        loop {
+            let now = self.now_ns();
+            if now >= t_ns {
+                return;
+            }
+            std::thread::sleep(Duration::from_nanos(t_ns - now));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parse_roundtrip() {
+        for m in [ClockMode::Virtual, ClockMode::Wall] {
+            assert_eq!(ClockMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(ClockMode::parse("real"), Some(ClockMode::Wall));
+        assert_eq!(ClockMode::parse("sundial"), None);
+        assert_eq!(ClockMode::default(), ClockMode::Virtual);
+    }
+
+    #[test]
+    fn wall_clock_is_monotone() {
+        let c = WallClock::start();
+        let a = c.now_ns();
+        std::thread::sleep(Duration::from_millis(1));
+        assert!(c.now_ns() > a);
+    }
+
+    #[test]
+    fn sleep_until_reaches_the_deadline() {
+        let c = WallClock::start();
+        c.sleep_until(2_000_000); // 2 ms
+        assert!(c.now_ns() >= 2_000_000);
+        // Past deadlines return immediately.
+        let before = c.now_ns();
+        c.sleep_until(1);
+        assert!(c.now_ns() - before < 1_000_000_000);
+    }
+}

@@ -22,14 +22,56 @@
 //!   per-dispatch overhead without unbounded latency cost.
 //! * [`server::serve`] — N sharded worker lanes, each owning a
 //!   [`crate::coordinator::Detector`] (engine/workers chosen by the
-//!   GCP [`crate::coordinator::Planner`]), driven by a virtual-time
-//!   event loop so replays are deterministic.
+//!   GCP [`crate::coordinator::Planner`]), driven by the clock selected
+//!   in [`server::ServeOptions`].
 //! * [`slo`] — per-request latency tracking (enqueue→dispatch→
 //!   complete) rolled into p50/p95/p99 summaries per lane and in
-//!   aggregate, emitted as a deterministic JSON report.
+//!   aggregate, emitted as a deterministic JSON report with a
+//!   three-state `slo.status` (`met`/`missed`/`no-data`).
+//!
+//! ## Two clocks
+//!
+//! The event loop runs under either clock ([`clock::ClockMode`]):
+//!
+//! * **virtual** (default) — deterministic modeled-time replay: lane
+//!   occupancy advances by the service-cost model, and the same trace +
+//!   seed produces a byte-identical report regardless of host load.
+//! * **wall** (`cannyd serve --clock wall`) — the same admission →
+//!   batch → lane pipeline against real worker threads draining a
+//!   shared dispatch channel, with arrivals paced to their trace
+//!   offsets on a monotonic clock. Latencies are measured, and the
+//!   report carries `clock: "wall"` with an otherwise identical schema.
+//!
+//! ## Calibration
+//!
+//! [`calibrate::Calibration`] closes the loop between the two: it
+//! measures per-stage [`crate::canny::StageTimes`] on a probe grid of
+//! shapes (min-of-repeats), least-squares fits
+//! `service_ns = overhead_ns + cost_ns_per_pixel * pixels`, and
+//! replaces the synthetic virtual-time constants — so virtual
+//! p50/p95/p99 predictions track wall-clock reality. Probe at startup
+//! with `cannyd serve --calibration probe`, or persist a probe with
+//! `cannyd calibrate --output calib.json` and replay it
+//! deterministically via `cannyd serve --calibration calib.json`.
+//!
+//! ### Calibration JSON schema
+//!
+//! ```json
+//! {
+//!   "format": 1,
+//!   "engine": "patterns",          // provenance (optional)
+//!   "workers": 4,                  // provenance (optional)
+//!   "overhead_ns": 120000,         // required, finite, >= 0
+//!   "cost_ns_per_pixel": 3.72,     // required, finite, >= 0
+//!   "probes": [                    // optional provenance
+//!     {"width": 96, "height": 96, "ns": 812345}
+//!   ]
+//! }
+//! ```
 //!
 //! Entry points: `cannyd serve --synthetic 200 --lanes 2` (or
-//! `--requests trace.json`), or programmatically:
+//! `--requests trace.json`, `--clock wall`, `--calibration …`), or
+//! programmatically:
 //!
 //! ```no_run
 //! use canny_par::config::RunConfig;
@@ -42,13 +84,17 @@
 //! ```
 
 pub mod batcher;
+pub mod calibrate;
+pub mod clock;
 pub mod queue;
 pub mod request;
 pub mod server;
 pub mod slo;
 
 pub use batcher::{Batcher, FormedBatch};
+pub use calibrate::{Calibration, ProbePoint};
+pub use clock::{ClockMode, WallClock};
 pub use queue::{AdmissionQueue, RejectReason};
 pub use request::{Request, Shape, Trace};
-pub use server::{serve, ServeOptions};
-pub use slo::{LaneReport, LatencyStats, LatencySummary, ServeReport};
+pub use server::{calibrate_for, serve, ServeOptions};
+pub use slo::{CostModel, LaneReport, LatencyStats, LatencySummary, ServeReport, SloStatus};

@@ -172,6 +172,15 @@ impl Trace {
         self.requests.is_empty()
     }
 
+    /// Every distinct shape in the trace, sorted — the calibration
+    /// probe grid for this workload (probing exactly the shapes that
+    /// will be served beats a generic grid).
+    pub fn distinct_shapes(&self) -> Vec<Shape> {
+        let set: std::collections::BTreeSet<Shape> =
+            self.requests.iter().map(|r| r.shape()).collect();
+        set.into_iter().collect()
+    }
+
     /// The most frequent shape (ties → smallest) — the planner's
     /// representative workload when sizing lane detectors.
     pub fn dominant_shape(&self) -> Option<Shape> {
@@ -182,7 +191,7 @@ impl Trace {
         let mut best: Option<(Shape, usize)> = None;
         for (shape, n) in counts {
             // Strict `>` keeps the first (smallest) shape on ties.
-            if best.map_or(true, |(_, bn)| n > bn) {
+            if best.is_none_or(|(_, bn)| n > bn) {
                 best = Some((shape, n));
             }
         }
@@ -249,6 +258,25 @@ mod tests {
             .is_err());
         assert!(Trace::from_json(r#"{"requests":[{"arrival_us":-1,"width":4,"height":4}]}"#)
             .is_err());
+    }
+
+    #[test]
+    fn distinct_shapes_sorted_and_deduped() {
+        let mk = |w, h, t| Request {
+            id: t,
+            arrival_ns: t,
+            scene: Scene::Gradient,
+            width: w,
+            height: h,
+        };
+        let t = Trace {
+            requests: vec![mk(96, 96, 0), mk(64, 64, 1), mk(96, 96, 2), mk(64, 64, 3)],
+        };
+        assert_eq!(
+            t.distinct_shapes(),
+            vec![Shape { width: 64, height: 64 }, Shape { width: 96, height: 96 }]
+        );
+        assert!(Trace::default().distinct_shapes().is_empty());
     }
 
     #[test]

@@ -1,35 +1,49 @@
 //! The serving event loop: admission → batching → sharded detector
-//! lanes → SLO report.
+//! lanes → SLO report, driven by either of two clocks.
 //!
-//! Scheduling runs in **virtual time**. Arrivals carry virtual
-//! timestamps, lane occupancy advances by a deterministic service-cost
-//! model (fixed per-dispatch overhead + per-pixel cost), and every
-//! latency in the report is a virtual quantity — so replaying a trace
-//! with the same seed produces a byte-identical report regardless of
-//! host load. This extends the repo's determinism rule (same edge map
-//! from every engine) to the *scheduling* layer, which is what makes
-//! serving behaviour testable at all.
+//! The **virtual** driver (default) schedules in modeled time: arrivals
+//! carry virtual timestamps, lane occupancy advances by a deterministic
+//! service-cost model (per-dispatch overhead + per-pixel cost, either
+//! the synthetic defaults or a fitted [`Calibration`]), and every
+//! latency in the report is a virtual quantity — replaying a trace with
+//! the same seed produces a byte-identical report regardless of host
+//! load. Real compute still happens when `execute` is on; only *time*
+//! is modeled.
 //!
-//! Real compute still happens: every dispatched request runs the real
-//! detector owned by its lane, and the report carries the exactly
-//! reproducible edge totals. Only *time* is modeled.
+//! The **wall** driver runs the identical admission/batching front half
+//! against real worker threads and a monotonic clock: arrivals are
+//! paced to their trace offsets, each lane is a thread draining a
+//! shared dispatch channel, and latencies are measured. With `execute`
+//! off, a wall lane occupies itself by sleeping the modeled service
+//! time instead, so scheduling studies work without compute.
+//!
+//! Both drivers share the clock-agnostic [`Intake`] core (admission +
+//! coalescing) and the report assembly, so the virtual mode is a true
+//! model of the wall mode — which is what makes calibration
+//! ([`crate::service::calibrate`]) meaningful.
 
 use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
 
 use crate::canny::{CannyParams, Engine};
 use crate::config::RunConfig;
 use crate::coordinator::planner::Workload;
 use crate::coordinator::{CpuTopology, Detector, Planner};
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::image::synth::generate;
 use crate::service::batcher::{Batcher, FormedBatch};
+use crate::service::calibrate::{Calibration, DEFAULT_PROBE_SHAPES, PROBE_REPEATS};
+use crate::service::clock::{ClockMode, WallClock};
 use crate::service::queue::AdmissionQueue;
-use crate::service::request::{Shape, Trace};
-use crate::service::slo::{LaneReport, LatencyStats, ServeReport};
+use crate::service::request::{Request, Shape, Trace};
+use crate::service::slo::{CostModel, LaneReport, LatencyStats, ServeReport};
 
-/// Virtual per-dispatch overhead (scheduling + lane wake-up), ns.
+/// Virtual per-dispatch overhead (scheduling + lane wake-up), ns —
+/// used when no [`Calibration`] is installed.
 pub const DEFAULT_BATCH_OVERHEAD_NS: u64 = 100_000;
-/// Virtual per-pixel service cost, ns (≈ 250 Mpix/s per lane).
+/// Virtual per-pixel service cost, ns (≈ 250 Mpix/s per lane) — used
+/// when no [`Calibration`] is installed.
 pub const DEFAULT_COST_NS_PER_PIXEL: u64 = 4;
 
 /// Resolved serving options (see the `RunConfig` serve keys).
@@ -39,11 +53,11 @@ pub struct ServeOptions {
     pub lanes: usize,
     /// Admission bound: max admitted-but-undispatched requests.
     pub queue_depth: usize,
-    /// Batcher max-delay window (virtual ns).
+    /// Batcher max-delay window (ns, in the active clock).
     pub batch_window_ns: u64,
     /// Max requests coalesced into one dispatch.
     pub max_batch: usize,
-    /// SLO target on aggregate p99 end-to-end latency (virtual ns).
+    /// SLO target on aggregate p99 end-to-end latency (ns).
     pub slo_p99_ns: u64,
     /// Per-request pixel budget (0 = unlimited); larger requests are
     /// rejected at admission with an `oversize` reason.
@@ -51,9 +65,14 @@ pub struct ServeOptions {
     /// Run the real detector for every request (edge totals in the
     /// report). Disable for pure scheduling studies and fast tests.
     pub execute: bool,
-    /// Virtual service-cost model.
+    /// Synthetic service-cost constants (used unless `calibration` is
+    /// set).
     pub batch_overhead_ns: u64,
     pub cost_ns_per_pixel: u64,
+    /// Fitted cost model; replaces the synthetic constants when set.
+    pub calibration: Option<Calibration>,
+    /// Which clock drives the event loop.
+    pub clock: ClockMode,
     /// Worker threads per lane (0 = split host CPUs evenly over lanes).
     pub workers_per_lane: usize,
     /// Base detection parameters (the planner may adapt tile/grain).
@@ -74,21 +93,34 @@ impl ServeOptions {
             execute: true,
             batch_overhead_ns: DEFAULT_BATCH_OVERHEAD_NS,
             cost_ns_per_pixel: DEFAULT_COST_NS_PER_PIXEL,
+            calibration: None,
+            clock: cfg.clock,
             workers_per_lane: 0,
             params: cfg.params,
             seed: cfg.seed,
         }
     }
-}
 
-struct Lane {
-    det: Option<Detector>,
-    busy_until_ns: u64,
-    busy_ns: u64,
-    batches: u64,
-    requests: u64,
-    edge_pixels: u64,
-    latency: LatencyStats,
+    /// Modeled service cost of one dispatch: the calibration when
+    /// installed, else the synthetic constants.
+    pub fn service_ns(&self, pixels: usize) -> u64 {
+        match &self.calibration {
+            Some(c) => c.service_ns(pixels),
+            None => self
+                .batch_overhead_ns
+                .saturating_add(self.cost_ns_per_pixel.saturating_mul(pixels as u64)),
+        }
+    }
+
+    fn cost_model(&self) -> CostModel {
+        match &self.calibration {
+            Some(c) => CostModel::Calibrated(c.clone()),
+            None => CostModel::Synthetic {
+                overhead_ns: self.batch_overhead_ns,
+                cost_ns_per_pixel: self.cost_ns_per_pixel,
+            },
+        }
+    }
 }
 
 /// Plan the per-lane detector: the GCP kernel layer picks engine and
@@ -110,53 +142,230 @@ fn plan_lanes(trace: &Trace, opts: &ServeOptions) -> (Engine, usize, CannyParams
     (plan.engine, workers, plan.params)
 }
 
-/// Replay `trace` through the serving tier and return the SLO report.
-///
-/// Event loop invariants (all in virtual time, all deterministic):
-/// * at one instant, lane completions free lanes first, then expired
-///   batch windows close, then arrivals are admitted, then dispatch —
-///   a lane freed at `t` can take a batch formed at `t`;
-/// * dispatch is FIFO over closed batches onto the lowest-numbered
-///   idle lane;
-/// * admission is decided *at arrival* against the current waiting-room
-///   occupancy — a full room rejects immediately (open-loop clients
-///   don't retry).
-pub fn serve(label: &str, trace: &Trace, opts: &ServeOptions) -> Result<ServeReport> {
+fn build_lane_detector(
+    engine: Engine,
+    workers: usize,
+    params: CannyParams,
+    execute: bool,
+) -> Result<Option<Detector>> {
+    if !execute {
+        return Ok(None);
+    }
+    Ok(Some(Detector::builder().engine(engine).workers(workers).params(params).build()?))
+}
+
+/// Cap on how many distinct shapes [`calibrate_for`] probes (most
+/// frequent first) — bounds `--calibration probe` startup cost on
+/// traces with many unique geometries.
+pub const MAX_PROBE_SHAPES: usize = 8;
+
+/// Probe a [`Calibration`] matched to how [`serve`] would run `trace`:
+/// the same planner decision (engine, workers-per-lane, adapted params)
+/// and the trace's own shapes as the probe grid — at most
+/// [`MAX_PROBE_SHAPES`], most frequent first (falling back to
+/// [`DEFAULT_PROBE_SHAPES`] for an empty trace).
+pub fn calibrate_for(trace: &Trace, opts: &ServeOptions) -> Result<Calibration> {
     let (engine, workers_per_lane, params) = plan_lanes(trace, opts);
-    let mut lanes: Vec<Lane> = Vec::with_capacity(opts.lanes);
-    for _ in 0..opts.lanes {
-        let det = if opts.execute {
-            Some(
-                Detector::builder()
-                    .engine(engine)
-                    .workers(workers_per_lane)
-                    .params(params)
-                    .build()?,
-            )
-        } else {
-            None
-        };
-        lanes.push(Lane {
-            det,
-            busy_until_ns: 0,
-            busy_ns: 0,
-            batches: 0,
-            requests: 0,
-            edge_pixels: 0,
-            latency: LatencyStats::new(),
-        });
+    let det =
+        Detector::builder().engine(engine).workers(workers_per_lane).params(params).build()?;
+    let shapes: Vec<Shape> = if trace.is_empty() {
+        DEFAULT_PROBE_SHAPES.iter().map(|&(w, h)| Shape { width: w, height: h }).collect()
+    } else {
+        let mut counts: std::collections::BTreeMap<Shape, usize> = Default::default();
+        for r in &trace.requests {
+            *counts.entry(r.shape()).or_insert(0) += 1;
+        }
+        let distinct = counts.len();
+        let mut by_freq: Vec<(Shape, usize)> = counts.into_iter().collect();
+        by_freq.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        if distinct > MAX_PROBE_SHAPES {
+            eprintln!(
+                "calibrate: probing the {MAX_PROBE_SHAPES} most frequent of {distinct} \
+                 distinct shapes (per-pixel fit covers the rest)"
+            );
+        }
+        by_freq.into_iter().take(MAX_PROBE_SHAPES).map(|(s, _)| s).collect()
+    };
+    Calibration::probe(&det, &shapes, PROBE_REPEATS)
+}
+
+// ---- Clock-agnostic core ------------------------------------------------
+
+/// The front half of the pipeline — admission control + batch
+/// coalescing — shared verbatim by both drivers. Drivers feed it
+/// timestamps from their own clock and get back dispatch-ready batches.
+struct Intake {
+    queue: AdmissionQueue,
+    batcher: Batcher,
+}
+
+impl Intake {
+    fn new(opts: &ServeOptions) -> Intake {
+        let mut queue = AdmissionQueue::new(opts.queue_depth);
+        if opts.max_pixels > 0 {
+            queue = queue.with_max_pixels(opts.max_pixels);
+        }
+        Intake { queue, batcher: Batcher::new(opts.batch_window_ns, opts.max_batch) }
     }
 
-    let mut queue = AdmissionQueue::new(opts.queue_depth);
-    if opts.max_pixels > 0 {
-        queue = queue.with_max_pixels(opts.max_pixels);
+    /// One arrival at `now_ns`: admission is decided immediately
+    /// (rejections are final — open-loop clients don't retry); admitted
+    /// requests join the batcher, which may close a batch at max fill.
+    fn arrive(&mut self, req: Request, now_ns: u64) -> Option<FormedBatch> {
+        if self.queue.try_admit(req.pixels()).is_ok() {
+            self.batcher.push(req, now_ns)
+        } else {
+            None
+        }
     }
-    let mut batcher = Batcher::new(opts.batch_window_ns, opts.max_batch);
-    let mut ready: VecDeque<FormedBatch> = VecDeque::new();
+
+    fn expire(&mut self, now_ns: u64) -> Vec<FormedBatch> {
+        self.batcher.expire(now_ns)
+    }
+
+    fn next_deadline(&self) -> Option<u64> {
+        self.batcher.next_deadline()
+    }
+
+    /// A batch left the waiting room (dispatched to a lane).
+    fn release(&mut self, n: usize) {
+        self.queue.release(n);
+    }
+}
+
+/// Per-lane accounting, identical across drivers.
+#[derive(Default)]
+struct LaneStats {
+    busy_ns: u64,
+    batches: u64,
+    requests: u64,
+    edge_pixels: u64,
+    last_complete_ns: u64,
+    latency: LatencyStats,
+    queue_wait: LatencyStats,
+}
+
+impl LaneStats {
+    /// Record one dispatched batch completing at `complete_ns`.
+    fn record_batch(&mut self, batch: &FormedBatch, dispatch_ns: u64, complete_ns: u64) {
+        self.busy_ns += complete_ns - dispatch_ns;
+        self.batches += 1;
+        self.last_complete_ns = self.last_complete_ns.max(complete_ns);
+        for req in &batch.requests {
+            self.requests += 1;
+            self.queue_wait.record(dispatch_ns.saturating_sub(req.arrival_ns));
+            self.latency.record(complete_ns.saturating_sub(req.arrival_ns));
+        }
+    }
+
+    /// Run the real detector over the batch (no-op without one).
+    fn execute_batch(&mut self, det: Option<&Detector>, batch: &FormedBatch) -> Result<()> {
+        if let Some(det) = det {
+            for req in &batch.requests {
+                let img = generate(req.scene, req.width, req.height);
+                self.edge_pixels += det.detect_default(&img)?.count_edges() as u64;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Roll driver results into the report (identical schema either way).
+fn build_report(
+    label: &str,
+    opts: &ServeOptions,
+    plan: (Engine, usize),
+    offered: u64,
+    intake: &Intake,
+    lanes: Vec<LaneStats>,
+) -> ServeReport {
     let mut total_latency = LatencyStats::new();
     let mut queue_wait = LatencyStats::new();
     let mut completed = 0u64;
     let mut makespan_ns = 0u64;
+    let mut edge_pixels = 0u64;
+    for l in &lanes {
+        total_latency.merge(&l.latency);
+        queue_wait.merge(&l.queue_wait);
+        completed += l.requests;
+        makespan_ns = makespan_ns.max(l.last_complete_ns);
+        edge_pixels += l.edge_pixels;
+    }
+    let lane_reports = lanes
+        .iter()
+        .enumerate()
+        .map(|(i, l)| LaneReport {
+            lane: i,
+            requests: l.requests,
+            batches: l.batches,
+            busy_ns: l.busy_ns,
+            latency: l.latency.summary(),
+        })
+        .collect();
+    ServeReport {
+        label: label.to_string(),
+        seed: opts.seed,
+        clock: opts.clock.name().to_string(),
+        engine: plan.0.name().to_string(),
+        workers_per_lane: plan.1,
+        offered,
+        admitted: intake.queue.admitted,
+        rejected_full: intake.queue.rejected_full,
+        rejected_oversize: intake.queue.rejected_oversize,
+        completed,
+        queue_depth: intake.queue.depth(),
+        queue_high_water: intake.queue.high_water,
+        batch_window_ns: opts.batch_window_ns,
+        max_batch: opts.max_batch,
+        batches_formed: intake.batcher.batches_formed,
+        requests_batched: intake.batcher.requests_batched,
+        makespan_ns,
+        edge_pixels,
+        latency: total_latency.summary(),
+        queue_wait: queue_wait.summary(),
+        lanes: lane_reports,
+        slo_target_p99_ns: opts.slo_p99_ns,
+        cost_model: opts.cost_model(),
+    }
+}
+
+/// Serve `trace` under the clock selected in `opts` and return the SLO
+/// report.
+pub fn serve(label: &str, trace: &Trace, opts: &ServeOptions) -> Result<ServeReport> {
+    match opts.clock {
+        ClockMode::Virtual => serve_virtual(label, trace, opts),
+        ClockMode::Wall => serve_wall(label, trace, opts),
+    }
+}
+
+// ---- Virtual driver -----------------------------------------------------
+
+/// Deterministic replay in modeled time.
+///
+/// Event loop invariants (all in virtual time):
+/// * at one instant, lane completions free lanes first, then expired
+///   batch windows close, then arrivals are admitted, then dispatch —
+///   a lane freed at `t` can take a batch formed at `t`;
+/// * dispatch is FIFO over closed batches onto the lowest-numbered
+///   idle lane.
+fn serve_virtual(label: &str, trace: &Trace, opts: &ServeOptions) -> Result<ServeReport> {
+    let (engine, workers_per_lane, params) = plan_lanes(trace, opts);
+    struct VirtualLane {
+        det: Option<Detector>,
+        busy_until_ns: u64,
+        stats: LaneStats,
+    }
+    let mut lanes: Vec<VirtualLane> = Vec::with_capacity(opts.lanes);
+    for _ in 0..opts.lanes {
+        lanes.push(VirtualLane {
+            det: build_lane_detector(engine, workers_per_lane, params, opts.execute)?,
+            busy_until_ns: 0,
+            stats: LaneStats::default(),
+        });
+    }
+
+    let mut intake = Intake::new(opts);
+    let mut ready: VecDeque<FormedBatch> = VecDeque::new();
     let mut next = 0usize; // arrival cursor into trace.requests
     let mut now = 0u64;
 
@@ -168,29 +377,13 @@ pub fn serve(label: &str, trace: &Trace, opts: &ServeOptions) -> Result<ServeRep
                 break;
             };
             let batch = ready.pop_front().expect("checked non-empty");
-            let service_ns = opts
-                .batch_overhead_ns
-                .saturating_add(opts.cost_ns_per_pixel.saturating_mul(batch.pixels() as u64));
-            let dispatch_ns = now;
+            let service_ns = opts.service_ns(batch.pixels());
             let complete_ns = now + service_ns;
-            queue.release(batch.len());
-            makespan_ns = makespan_ns.max(complete_ns);
+            intake.release(batch.len());
             let lane = &mut lanes[idx];
             lane.busy_until_ns = complete_ns;
-            lane.busy_ns += service_ns;
-            lane.batches += 1;
-            for req in &batch.requests {
-                lane.requests += 1;
-                completed += 1;
-                queue_wait.record(dispatch_ns - req.arrival_ns);
-                total_latency.record(complete_ns - req.arrival_ns);
-                lane.latency.record(complete_ns - req.arrival_ns);
-                if let Some(det) = &lane.det {
-                    let img = generate(req.scene, req.width, req.height);
-                    let edges = det.detect_default(&img)?;
-                    lane.edge_pixels += edges.count_edges() as u64;
-                }
-            }
+            lane.stats.record_batch(&batch, now, complete_ns);
+            lane.stats.execute_batch(lane.det.as_ref(), &batch)?;
         }
 
         // Next event: arrival, batch-window deadline, or (if work is
@@ -199,7 +392,7 @@ pub fn serve(label: &str, trace: &Trace, opts: &ServeOptions) -> Result<ServeRep
         if next < trace.requests.len() {
             t = t.min(trace.requests[next].arrival_ns);
         }
-        if let Some(d) = batcher.next_deadline() {
+        if let Some(d) = intake.next_deadline() {
             t = t.min(d);
         }
         if !ready.is_empty() {
@@ -214,64 +407,179 @@ pub fn serve(label: &str, trace: &Trace, opts: &ServeOptions) -> Result<ServeRep
         }
         now = now.max(t);
 
-        for b in batcher.expire(now) {
+        for b in intake.expire(now) {
             ready.push_back(b);
         }
         while next < trace.requests.len() && trace.requests[next].arrival_ns <= now {
             let req = trace.requests[next];
             next += 1;
-            // Rejections are final (and counted inside the queue);
-            // admitted requests go to the batcher, which may close a
-            // batch at max fill.
-            if queue.try_admit(req.pixels()).is_ok() {
-                if let Some(b) = batcher.push(req, req.arrival_ns) {
-                    ready.push_back(b);
+            if let Some(b) = intake.arrive(req, req.arrival_ns) {
+                ready.push_back(b);
+            }
+        }
+    }
+    debug_assert_eq!(intake.batcher.pending(), 0);
+    debug_assert_eq!(intake.queue.occupancy(), 0);
+
+    let stats = lanes.into_iter().map(|l| l.stats).collect();
+    Ok(build_report(label, opts, (engine, workers_per_lane), trace.len() as u64, &intake, stats))
+}
+
+// ---- Wall driver --------------------------------------------------------
+
+/// Shared state between the wall driver's arrival thread and its lane
+/// threads. `intake` is the same core the virtual driver uses, behind a
+/// lock because lanes release occupancy concurrently with admissions.
+struct WallShared {
+    intake: Mutex<Intake>,
+    dispatch: Mutex<WallDispatch>,
+    cv: Condvar,
+}
+
+struct WallDispatch {
+    ready: VecDeque<FormedBatch>,
+    /// No further batches will arrive (arrival replay finished).
+    closed: bool,
+}
+
+fn wall_lane(
+    det: Option<Detector>,
+    opts: &ServeOptions,
+    shared: &WallShared,
+    clock: WallClock,
+) -> Result<LaneStats> {
+    let mut stats = LaneStats::default();
+    loop {
+        let batch = {
+            let mut d = shared.dispatch.lock().expect("dispatch lock");
+            loop {
+                if let Some(b) = d.ready.pop_front() {
+                    break Some(b);
+                }
+                if d.closed {
+                    break None;
+                }
+                d = shared.cv.wait(d).expect("dispatch wait");
+            }
+        };
+        let Some(batch) = batch else {
+            return Ok(stats);
+        };
+        shared.intake.lock().expect("intake lock").release(batch.len());
+        let dispatch_ns = clock.now_ns();
+        if opts.execute {
+            stats.execute_batch(det.as_ref(), &batch)?;
+        } else {
+            // Scheduling-only runs still occupy the lane for the
+            // modeled service time so wall studies work without
+            // compute.
+            std::thread::sleep(Duration::from_nanos(opts.service_ns(batch.pixels())));
+        }
+        stats.record_batch(&batch, dispatch_ns, clock.now_ns());
+    }
+}
+
+/// Real-time replay: arrivals paced to their trace offsets, lanes as
+/// actual worker threads draining a shared dispatch channel.
+fn serve_wall(label: &str, trace: &Trace, opts: &ServeOptions) -> Result<ServeReport> {
+    let (engine, workers_per_lane, params) = plan_lanes(trace, opts);
+    // Build detectors before starting the clock so pool/planner setup
+    // cost never pollutes the measured latencies.
+    let mut dets: Vec<Option<Detector>> = Vec::with_capacity(opts.lanes);
+    for _ in 0..opts.lanes {
+        dets.push(build_lane_detector(engine, workers_per_lane, params, opts.execute)?);
+    }
+
+    let shared = Arc::new(WallShared {
+        intake: Mutex::new(Intake::new(opts)),
+        dispatch: Mutex::new(WallDispatch { ready: VecDeque::new(), closed: false }),
+        cv: Condvar::new(),
+    });
+    let clock = WallClock::start();
+    let mut handles = Vec::with_capacity(opts.lanes);
+    for det in dets {
+        let shared = Arc::clone(&shared);
+        let opts = opts.clone();
+        handles.push(std::thread::spawn(move || wall_lane(det, &opts, &shared, clock)));
+    }
+
+    // Arrival replay on this thread: sleep to the next event (arrival
+    // or batch-window deadline), then run the same expire-then-admit
+    // step the virtual driver runs.
+    let mut next = 0usize;
+    loop {
+        let deadline = shared.intake.lock().expect("intake lock").next_deadline();
+        let mut t = u64::MAX;
+        if next < trace.requests.len() {
+            t = t.min(trace.requests[next].arrival_ns);
+        }
+        if let Some(d) = deadline {
+            t = t.min(d);
+        }
+        if t == u64::MAX {
+            break;
+        }
+        clock.sleep_until(t);
+        let now = clock.now_ns();
+        let mut formed = Vec::new();
+        {
+            let mut intake = shared.intake.lock().expect("intake lock");
+            formed.extend(intake.expire(now));
+            while next < trace.requests.len() && trace.requests[next].arrival_ns <= now {
+                let req = trace.requests[next];
+                next += 1;
+                // Window deadlines run on the wall clock (`now`), so a
+                // late-woken arrival can never create an already-expired
+                // group.
+                if let Some(b) = intake.arrive(req, now) {
+                    formed.push(b);
+                }
+            }
+        }
+        if !formed.is_empty() {
+            let mut d = shared.dispatch.lock().expect("dispatch lock");
+            for b in formed {
+                d.ready.push_back(b);
+                shared.cv.notify_one();
+            }
+        }
+    }
+    {
+        let mut d = shared.dispatch.lock().expect("dispatch lock");
+        d.closed = true;
+        shared.cv.notify_all();
+    }
+
+    let mut stats = Vec::with_capacity(handles.len());
+    let mut first_err: Option<Error> = None;
+    for h in handles {
+        match h.join() {
+            Ok(Ok(s)) => stats.push(s),
+            Ok(Err(e)) => {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+            Err(_) => {
+                if first_err.is_none() {
+                    first_err = Some(Error::Scheduler("serve lane panicked".into()));
                 }
             }
         }
     }
-    debug_assert_eq!(batcher.pending(), 0);
-    debug_assert_eq!(queue.occupancy(), 0);
-
-    let edge_pixels = lanes.iter().map(|l| l.edge_pixels).sum();
-    let lane_reports = lanes
-        .iter()
-        .enumerate()
-        .map(|(i, l)| LaneReport {
-            lane: i,
-            requests: l.requests,
-            batches: l.batches,
-            busy_ns: l.busy_ns,
-            latency: l.latency.summary(),
-        })
-        .collect();
-    Ok(ServeReport {
-        label: label.to_string(),
-        seed: opts.seed,
-        engine: engine.name().to_string(),
-        workers_per_lane,
-        offered: trace.len() as u64,
-        admitted: queue.admitted,
-        rejected_full: queue.rejected_full,
-        rejected_oversize: queue.rejected_oversize,
-        completed,
-        queue_depth: queue.depth(),
-        queue_high_water: queue.high_water,
-        batch_window_ns: opts.batch_window_ns,
-        max_batch: opts.max_batch,
-        batches_formed: batcher.batches_formed,
-        makespan_ns,
-        edge_pixels,
-        latency: total_latency.summary(),
-        queue_wait: queue_wait.summary(),
-        lanes: lane_reports,
-        slo_target_p99_ns: opts.slo_p99_ns,
-    })
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    let intake = shared.intake.lock().expect("intake lock");
+    debug_assert_eq!(intake.batcher.pending(), 0);
+    debug_assert_eq!(intake.queue.occupancy(), 0);
+    Ok(build_report(label, opts, (engine, workers_per_lane), trace.len() as u64, &intake, stats))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::service::slo::SloStatus;
 
     fn opts() -> ServeOptions {
         let mut o = ServeOptions::from_config(&RunConfig::default());
@@ -289,6 +597,7 @@ mod tests {
         assert!(report.makespan_ns > 0);
         assert!(report.batches_formed > 0);
         assert!(report.queue_high_water >= 1);
+        assert_eq!(report.clock, "virtual");
     }
 
     #[test]
@@ -325,7 +634,9 @@ mod tests {
         assert_eq!(report.offered, 0);
         assert_eq!(report.makespan_ns, 0);
         assert_eq!(report.throughput_rps(), 0.0);
-        assert!(report.slo_met());
+        // Zero completions is *not* an SLO pass (satellite bugfix).
+        assert_eq!(report.slo_status(), SloStatus::NoData);
+        assert!(!report.slo_met());
     }
 
     #[test]
@@ -344,5 +655,63 @@ mod tests {
             rn.batches_formed
         );
         assert!(rw.mean_batch_fill() > rn.mean_batch_fill());
+    }
+
+    #[test]
+    fn calibration_replaces_the_synthetic_constants() {
+        let mut o = opts();
+        o.lanes = 1;
+        o.max_batch = 1;
+        o.batch_window_ns = 0;
+        o.calibration = Some(Calibration {
+            engine: "patterns".into(),
+            workers: 1,
+            overhead_ns: 7_000,
+            cost_ns_per_pixel: 2.0,
+            probes: Vec::new(),
+        });
+        assert_eq!(o.service_ns(1_000), 9_000);
+        // One 32x32 request at t=0, immediate window: latency is exactly
+        // the calibrated cost.
+        let trace = Trace {
+            requests: vec![Request {
+                id: 0,
+                arrival_ns: 0,
+                scene: crate::image::synth::Scene::Gradient,
+                width: 32,
+                height: 32,
+            }],
+        };
+        let report = serve("calib", &trace, &o).unwrap();
+        assert_eq!(report.latency.max_ns, 7_000 + 2 * 32 * 32);
+        let j = report.to_json();
+        assert_eq!(
+            j.get("calibration").unwrap().get("source").unwrap().as_str(),
+            Some("measured")
+        );
+    }
+
+    #[test]
+    fn wall_clock_smoke_run_matches_schema() {
+        let mut o = opts();
+        o.clock = ClockMode::Wall;
+        o.lanes = 2;
+        // Tiny modeled costs keep the sleep-based lanes fast.
+        o.batch_overhead_ns = 10_000;
+        o.cost_ns_per_pixel = 0;
+        // 30 requests at 100 kHz -> ~300 µs of replay.
+        let trace = Trace::synthetic(30, 3, 100_000.0);
+        let report = serve("wall", &trace, &o).unwrap();
+        assert_eq!(report.clock, "wall");
+        assert_eq!(report.offered, 30);
+        assert_eq!(report.offered, report.completed + report.rejected());
+        assert!(report.makespan_ns > 0);
+        // Same JSON schema as the virtual report.
+        let virt = serve("virt", &trace, &opts()).unwrap();
+        let (a, b) = (report.to_json(), virt.to_json());
+        let keys = |j: &crate::util::json::Json| -> Vec<String> {
+            j.as_obj().unwrap().keys().cloned().collect()
+        };
+        assert_eq!(keys(&a), keys(&b));
     }
 }

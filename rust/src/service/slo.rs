@@ -1,13 +1,18 @@
 //! SLO accounting for the serving tier: per-request latency samples
 //! (enqueue→dispatch→complete) rolled into p50/p95/p99 summaries per
 //! lane and in aggregate, and the deterministic JSON serving report
-//! `cannyd serve` prints.
+//! `cannyd serve` prints. The same schema serves both clocks — the
+//! `clock` field says whether the numbers are modeled or measured, and
+//! the `calibration` section says which cost model produced (or would
+//! predict) them.
 
 use std::collections::BTreeMap;
 
+use crate::service::calibrate::Calibration;
 use crate::util::json::Json;
 
-/// Latency sample sink (virtual ns). Order-insensitive: summaries sort.
+/// Latency sample sink (ns, in the active clock). Order-insensitive:
+/// summaries sort.
 #[derive(Clone, Debug, Default)]
 pub struct LatencyStats {
     samples: Vec<u64>,
@@ -20,6 +25,11 @@ impl LatencyStats {
 
     pub fn record(&mut self, ns: u64) {
         self.samples.push(ns);
+    }
+
+    /// Fold another sink's samples into this one (lane → aggregate).
+    pub fn merge(&mut self, other: &LatencyStats) {
+        self.samples.extend_from_slice(&other.samples);
     }
 
     pub fn count(&self) -> usize {
@@ -77,19 +87,74 @@ pub struct LaneReport {
     pub lane: usize,
     pub requests: u64,
     pub batches: u64,
-    /// Virtual ns this lane spent serving.
+    /// Ns this lane spent serving (modeled or measured per `clock`).
     pub busy_ns: u64,
     pub latency: LatencySummary,
 }
 
+/// Three-state SLO verdict: a run with zero completions has no latency
+/// evidence, so it can neither meet nor miss the target.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SloStatus {
+    Met,
+    Missed,
+    NoData,
+}
+
+impl SloStatus {
+    /// The string the report's `slo.status` field carries.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SloStatus::Met => "met",
+            SloStatus::Missed => "missed",
+            SloStatus::NoData => "no-data",
+        }
+    }
+}
+
+/// Which service-cost model timed (virtual) or would predict (wall) the
+/// run — echoed in the report's `calibration` section.
+#[derive(Clone, Debug)]
+pub enum CostModel {
+    /// The built-in synthetic constants.
+    Synthetic { overhead_ns: u64, cost_ns_per_pixel: u64 },
+    /// A [`StageTimes`](crate::canny::StageTimes)-fitted calibration.
+    Calibrated(Calibration),
+}
+
+impl CostModel {
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        match self {
+            CostModel::Synthetic { overhead_ns, cost_ns_per_pixel } => {
+                m.insert("source".into(), Json::Str("synthetic".into()));
+                m.insert("overhead_ns".into(), Json::Num(*overhead_ns as f64));
+                m.insert("cost_ns_per_pixel".into(), Json::Num(*cost_ns_per_pixel as f64));
+            }
+            CostModel::Calibrated(c) => {
+                m.insert("source".into(), Json::Str("measured".into()));
+                m.insert("engine".into(), Json::Str(c.engine.clone()));
+                m.insert("workers".into(), Json::Num(c.workers as f64));
+                m.insert("overhead_ns".into(), Json::Num(c.overhead_ns as f64));
+                m.insert("cost_ns_per_pixel".into(), Json::Num(c.cost_ns_per_pixel));
+                m.insert("probes".into(), Json::Num(c.probes.len() as f64));
+            }
+        }
+        Json::Obj(m)
+    }
+}
+
 /// The complete serving report — everything `cannyd serve` knows about
 /// a replayed trace. Serialized via [`ServeReport::to_json_string`];
-/// field values are virtual-time quantities, so the same trace + seed
-/// produces a byte-identical report on a given host.
+/// under the virtual clock all field values are modeled quantities, so
+/// the same trace + seed produces a byte-identical report on a given
+/// host. Under the wall clock the same fields carry measured values.
 #[derive(Clone, Debug)]
 pub struct ServeReport {
     pub label: String,
     pub seed: u64,
+    /// Which clock drove the run: "virtual" or "wall".
+    pub clock: String,
     /// Engine the planner chose for the lanes.
     pub engine: String,
     pub workers_per_lane: usize,
@@ -103,7 +168,11 @@ pub struct ServeReport {
     pub batch_window_ns: u64,
     pub max_batch: usize,
     pub batches_formed: u64,
-    /// Virtual time of the last completion.
+    /// Requests that entered a formed batch — the batch-fill
+    /// denominator's numerator. Stays correct even when completions lag
+    /// (dropped lanes, truncated replays), unlike `completed`.
+    pub requests_batched: u64,
+    /// Time of the last completion (ns since serve start).
     pub makespan_ns: u64,
     /// Sum of detected edge pixels over all completed requests (0 when
     /// execution is disabled) — the proof real compute happened.
@@ -114,6 +183,8 @@ pub struct ServeReport {
     pub queue_wait: LatencySummary,
     pub lanes: Vec<LaneReport>,
     pub slo_target_p99_ns: u64,
+    /// The service-cost model in effect (see [`CostModel`]).
+    pub cost_model: CostModel,
 }
 
 impl ServeReport {
@@ -122,13 +193,26 @@ impl ServeReport {
         self.rejected_full + self.rejected_oversize
     }
 
-    /// Did the aggregate p99 stay within the SLO target? Vacuously true
-    /// with no completions.
-    pub fn slo_met(&self) -> bool {
-        self.completed == 0 || self.latency.p99_ns <= self.slo_target_p99_ns
+    /// Three-state SLO verdict on the aggregate p99. Zero completions
+    /// is `NoData`, never a vacuous pass — an all-rejected run must not
+    /// read as "SLO met".
+    pub fn slo_status(&self) -> SloStatus {
+        if self.completed == 0 {
+            SloStatus::NoData
+        } else if self.latency.p99_ns <= self.slo_target_p99_ns {
+            SloStatus::Met
+        } else {
+            SloStatus::Missed
+        }
     }
 
-    /// Completions per virtual second.
+    /// Strictly-met convenience: true only with evidence
+    /// ([`SloStatus::Met`]).
+    pub fn slo_met(&self) -> bool {
+        self.slo_status() == SloStatus::Met
+    }
+
+    /// Completions per second (of the active clock).
     pub fn throughput_rps(&self) -> f64 {
         if self.makespan_ns == 0 {
             return 0.0;
@@ -137,11 +221,13 @@ impl ServeReport {
     }
 
     /// Mean requests per formed batch (coalescing effectiveness).
+    /// Counts batched requests — not completions, which undercount when
+    /// admitted requests are dropped or a replay is truncated.
     pub fn mean_batch_fill(&self) -> f64 {
         if self.batches_formed == 0 {
             return 0.0;
         }
-        self.completed as f64 / self.batches_formed as f64
+        self.requests_batched as f64 / self.batches_formed as f64
     }
 
     /// Structured report (object keys are sorted — deterministic dump).
@@ -150,6 +236,7 @@ impl ServeReport {
         let mut m = BTreeMap::new();
         m.insert("label".into(), Json::Str(self.label.clone()));
         m.insert("seed".into(), num(self.seed));
+        m.insert("clock".into(), Json::Str(self.clock.clone()));
         m.insert("engine".into(), Json::Str(self.engine.clone()));
         m.insert("workers_per_lane".into(), Json::Num(self.workers_per_lane as f64));
         m.insert("offered".into(), num(self.offered));
@@ -159,6 +246,7 @@ impl ServeReport {
         m.insert("makespan_ns".into(), num(self.makespan_ns));
         m.insert("throughput_rps".into(), Json::Num(self.throughput_rps()));
         m.insert("edge_pixels".into(), num(self.edge_pixels));
+        m.insert("calibration".into(), self.cost_model.to_json());
 
         let mut queue = BTreeMap::new();
         queue.insert("depth".into(), Json::Num(self.queue_depth as f64));
@@ -171,6 +259,7 @@ impl ServeReport {
         batch.insert("window_ns".into(), num(self.batch_window_ns));
         batch.insert("max".into(), Json::Num(self.max_batch as f64));
         batch.insert("formed".into(), num(self.batches_formed));
+        batch.insert("requests".into(), num(self.requests_batched));
         batch.insert("mean_fill".into(), Json::Num(self.mean_batch_fill()));
         m.insert("batch".into(), Json::Obj(batch));
 
@@ -203,7 +292,7 @@ impl ServeReport {
         let mut slo = BTreeMap::new();
         slo.insert("target_p99_ns".into(), num(self.slo_target_p99_ns));
         slo.insert("p99_ns".into(), num(self.latency.p99_ns));
-        slo.insert("met".into(), Json::Bool(self.slo_met()));
+        slo.insert("status".into(), Json::Str(self.slo_status().name().into()));
         m.insert("slo".into(), Json::Obj(slo));
 
         Json::Obj(m)
@@ -239,10 +328,53 @@ mod tests {
         assert!((s.mean_ns - 500.5).abs() < 1e-9);
     }
 
+    #[test]
+    fn nearest_rank_edge_cases() {
+        // n = 1: every quantile is the single sample.
+        let mut one = LatencyStats::new();
+        one.record(42);
+        let s = one.summary();
+        assert_eq!((s.n, s.p50_ns, s.p95_ns, s.p99_ns, s.max_ns), (1, 42, 42, 42, 42));
+        assert!((s.mean_ns - 42.0).abs() < 1e-12);
+
+        // n = 2: nearest-rank rounds 0.5 up, so p50 is the *larger*
+        // sample (documented convention, shared with util::timer).
+        let mut two = LatencyStats::new();
+        two.record(10);
+        two.record(30);
+        let s = two.summary();
+        assert_eq!(s.p50_ns, 30);
+        assert_eq!(s.p95_ns, 30);
+        assert_eq!(s.max_ns, 30);
+        assert!((s.mean_ns - 20.0).abs() < 1e-12);
+
+        // All-equal samples: every quantile collapses to that value.
+        let mut eq = LatencyStats::new();
+        for _ in 0..17 {
+            eq.record(7);
+        }
+        let s = eq.summary();
+        assert_eq!((s.p50_ns, s.p95_ns, s.p99_ns, s.max_ns), (7, 7, 7, 7));
+        assert!((s.mean_ns - 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_concatenates_samples() {
+        let mut a = LatencyStats::new();
+        a.record(1);
+        a.record(9);
+        let mut b = LatencyStats::new();
+        b.record(5);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.summary().p50_ns, 5);
+    }
+
     fn report() -> ServeReport {
         ServeReport {
             label: "t".into(),
             seed: 7,
+            clock: "virtual".into(),
             engine: "patterns".into(),
             workers_per_lane: 2,
             offered: 10,
@@ -255,6 +387,7 @@ mod tests {
             batch_window_ns: 2_000_000,
             max_batch: 4,
             batches_formed: 2,
+            requests_batched: 8,
             makespan_ns: 1_000_000_000,
             edge_pixels: 1234,
             latency: LatencySummary { n: 8, p99_ns: 5_000_000, ..Default::default() },
@@ -267,6 +400,7 @@ mod tests {
                 latency: LatencySummary::default(),
             }],
             slo_target_p99_ns: 50_000_000,
+            cost_model: CostModel::Synthetic { overhead_ns: 100_000, cost_ns_per_pixel: 4 },
         }
     }
 
@@ -274,9 +408,21 @@ mod tests {
     fn report_math() {
         let r = report();
         assert_eq!(r.rejected(), 2);
+        assert_eq!(r.slo_status(), SloStatus::Met);
         assert!(r.slo_met());
         assert!((r.throughput_rps() - 8.0).abs() < 1e-9);
         assert!((r.mean_batch_fill() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn batch_fill_counts_batched_requests_not_completions() {
+        // Regression: 8 requests entered batches but only 5 completed
+        // (e.g. a truncated replay). Fill must stay 8/2, not 5/2.
+        let mut r = report();
+        r.completed = 5;
+        assert!((r.mean_batch_fill() - 4.0).abs() < 1e-9);
+        let j = r.to_json();
+        assert_eq!(j.get("batch").unwrap().get("requests").unwrap().as_usize(), Some(8));
     }
 
     #[test]
@@ -285,18 +431,47 @@ mod tests {
         assert_eq!(j.get("queue").unwrap().get("high_water").unwrap().as_usize(), Some(4));
         assert_eq!(j.get("batch").unwrap().get("formed").unwrap().as_usize(), Some(2));
         assert_eq!(j.get("rejected").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("clock").unwrap().as_str(), Some("virtual"));
+        let calib = j.get("calibration").unwrap();
+        assert_eq!(calib.get("source").unwrap().as_str(), Some("synthetic"));
+        assert_eq!(calib.get("overhead_ns").unwrap().as_usize(), Some(100_000));
         let lanes = j.get("lanes").unwrap().as_arr().unwrap();
         assert!(lanes[0].get("latency_ns").unwrap().get("p99").is_some());
-        assert_eq!(j.get("slo").unwrap().get("met"), Some(&Json::Bool(true)));
+        assert_eq!(j.get("slo").unwrap().get("status").unwrap().as_str(), Some("met"));
         // The dump round-trips through the parser.
         let text = report().to_json_string();
         assert_eq!(Json::parse(&text).unwrap(), j);
     }
 
     #[test]
-    fn slo_violation_detected() {
+    fn calibrated_cost_model_serializes_provenance() {
+        let mut r = report();
+        r.cost_model = CostModel::Calibrated(Calibration {
+            engine: "tiled".into(),
+            workers: 4,
+            overhead_ns: 88_000,
+            cost_ns_per_pixel: 3.25,
+            probes: Vec::new(),
+        });
+        let c = r.to_json();
+        let calib = c.get("calibration").unwrap();
+        assert_eq!(calib.get("source").unwrap().as_str(), Some("measured"));
+        assert_eq!(calib.get("engine").unwrap().as_str(), Some("tiled"));
+        assert_eq!(calib.get("probes").unwrap().as_usize(), Some(0));
+    }
+
+    #[test]
+    fn slo_three_states() {
         let mut r = report();
         r.slo_target_p99_ns = 1;
+        assert_eq!(r.slo_status(), SloStatus::Missed);
         assert!(!r.slo_met());
+        assert!(r.to_json_string().contains("\"status\":\"missed\""));
+        // Zero completions: no-data, not a vacuous pass.
+        r.completed = 0;
+        assert_eq!(r.slo_status(), SloStatus::NoData);
+        assert!(!r.slo_met());
+        assert!(r.to_json_string().contains("\"status\":\"no-data\""));
+        assert_eq!(SloStatus::NoData.name(), "no-data");
     }
 }
