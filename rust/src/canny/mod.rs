@@ -9,10 +9,12 @@ pub mod gaussian;
 pub mod hysteresis;
 pub mod nms;
 pub mod pipeline;
+pub mod plan;
 pub mod sobel;
 pub mod threshold;
 
 pub use pipeline::{CannyParams, CannyPipeline, DetectOutput, Engine, StageTimes};
+pub use plan::{Artifact, PlanEntry, PlanOutput, StageKind, StagePlan, StageRecord};
 pub use threshold::{CLASS_NONE, CLASS_STRONG, CLASS_WEAK};
 
 use crate::image::ImageF32;

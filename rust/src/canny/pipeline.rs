@@ -15,7 +15,18 @@
 //!
 //! All engines produce the identical edge map (determinism tests
 //! enforce it; XLA within f32 tolerance at class boundaries).
+//!
+//! Every engine path executes a [`StagePlan`] (see [`crate::canny::plan`]):
+//! [`CannyPipeline::detect`] is the full image→edges plan, while
+//! [`CannyPipeline::execute`] also runs partial prefixes (stop after any
+//! stage) and mid-pipeline resumes (re-threshold a cached
+//! suppressed-magnitude map). The fused-tile engines keep their fused
+//! fast path whenever the plan covers the whole front; a *partial*
+//! front prefix on those engines runs the unfused band-parallel stage
+//! path instead (fusion has no per-stage boundary to stop at), which
+//! produces identical artifacts by the determinism invariant.
 
+use crate::canny::plan::{Artifact, PlanEntry, PlanOutput, StageKind, StagePlan, StageRecord};
 use crate::canny::{consts, gaussian, hysteresis, nms, sobel, threshold};
 use crate::error::{Error, Result};
 use crate::image::tile::TileGrid;
@@ -94,6 +105,11 @@ impl CannyParams {
 }
 
 /// Wall-clock per stage plus per-tile CPU costs (the simulator's input).
+///
+/// Since the stage-graph redesign this is a **compatibility view**
+/// computed from the uniform [`StageRecord`]s
+/// ([`StageTimes::from_records`]); the benches, simulator specs and the
+/// serving tier's end-to-end calibration keep consuming it unchanged.
 #[derive(Clone, Debug, Default)]
 pub struct StageTimes {
     pub pad_ns: u64,
@@ -113,6 +129,37 @@ impl StageTimes {
     /// Serial-work ns (everything not in parallel tasks).
     pub fn serial_ns(&self) -> u64 {
         self.pad_ns + self.hysteresis_ns
+    }
+
+    /// Build the legacy view from per-phase records: unfused stages map
+    /// to their fields (`front_ns` = gaussian+sobel+nms+threshold, as
+    /// the per-stage engines always reported), a fused span maps to
+    /// `front_ns` + `tile_costs_ns`.
+    pub fn from_records(records: &[StageRecord], total_ns: u64) -> StageTimes {
+        let mut t = StageTimes { total_ns, ..StageTimes::default() };
+        let mut fused = false;
+        for r in records {
+            if r.fused_from.is_some() {
+                fused = true;
+                t.front_ns += r.wall_ns;
+                if !r.task_costs_ns.is_empty() {
+                    t.tile_costs_ns = r.task_costs_ns.clone();
+                }
+                continue;
+            }
+            match r.kind {
+                StageKind::Pad => t.pad_ns += r.wall_ns,
+                StageKind::Gaussian => t.gaussian_ns += r.wall_ns,
+                StageKind::Sobel => t.sobel_ns += r.wall_ns,
+                StageKind::Nms => t.nms_ns += r.wall_ns,
+                StageKind::Threshold => t.threshold_ns += r.wall_ns,
+                StageKind::Hysteresis => t.hysteresis_ns += r.wall_ns,
+            }
+        }
+        if !fused {
+            t.front_ns = t.gaussian_ns + t.sobel_ns + t.nms_ns + t.threshold_ns;
+        }
+        t
     }
 
     /// Fieldwise minimum of two measurements of the *same* work — the
@@ -142,7 +189,9 @@ impl StageTimes {
     }
 }
 
-/// Full detection output.
+/// Full detection output — built on top of a [`PlanOutput`]: the three
+/// artifacts of the full plan moved into named fields, the legacy
+/// [`StageTimes`] view, and the uniform per-phase records.
 #[derive(Clone, Debug)]
 pub struct DetectOutput {
     pub edges: EdgeMap,
@@ -150,7 +199,35 @@ pub struct DetectOutput {
     pub class_map: ImageF32,
     /// Suppressed gradient magnitude (for SNR metrics).
     pub nms_mag: ImageF32,
+    /// Legacy per-stage view (see [`StageTimes::from_records`]).
     pub times: StageTimes,
+    /// Uniform per-phase accounting (the per-stage calibration input).
+    pub records: Vec<StageRecord>,
+}
+
+impl DetectOutput {
+    /// Rebuild the classic output from a *full-plan* execution.
+    pub fn from_plan(mut out: PlanOutput) -> Result<DetectOutput> {
+        let times = out.stage_times();
+        let records = std::mem::take(&mut out.records);
+        let (mut edges, mut cls, mut nm) = (None, None, None);
+        for a in out.artifacts {
+            match a {
+                Artifact::Edges(e) => edges = Some(e),
+                Artifact::ClassMap(c) => cls = Some(c),
+                Artifact::Suppressed(s) => nm = Some(s),
+                _ => {}
+            }
+        }
+        match (edges, cls, nm) {
+            (Some(edges), Some(class_map), Some(nms_mag)) => {
+                Ok(DetectOutput { edges, class_map, nms_mag, times, records })
+            }
+            _ => Err(Error::Config(
+                "full detection plan did not yield edges + class-map + suppressed".into(),
+            )),
+        }
+    }
 }
 
 /// The configured pipeline. Borrows its pool / XLA engine so the same
@@ -178,28 +255,82 @@ impl<'a> CannyPipeline<'a> {
         CannyPipeline { engine: Engine::PatternsXla, pool: Some(pool), xla: Some(engine) }
     }
 
-    /// Run detection.
+    /// Run full detection (the image→edges plan).
     pub fn detect(&self, img: &ImageF32, params: &CannyParams) -> Result<DetectOutput> {
+        DetectOutput::from_plan(self.execute(&StagePlan::new(), Some(img), params)?)
+    }
+
+    /// Execute a [`StagePlan`]. `img` is required iff the plan's entry
+    /// is [`PlanEntry::Image`]. The plan's engine override (if any)
+    /// beats this pipeline's engine; the fused-tile fast path runs
+    /// whenever the plan covers the whole front from a raw image, and
+    /// partial front prefixes run band-parallel per stage.
+    pub fn execute(
+        &self,
+        plan: &StagePlan,
+        img: Option<&ImageF32>,
+        params: &CannyParams,
+    ) -> Result<PlanOutput> {
         params.validate()?;
-        if img.width() < 1 || img.height() < 1 {
-            return Err(Error::Geometry("empty image".into()));
+        plan.validate()?;
+        match &plan.entry {
+            PlanEntry::Image => {
+                let img = img.ok_or_else(|| {
+                    Error::Config("plan entry is the raw image but none was passed".into())
+                })?;
+                if img.width() < 1 || img.height() < 1 {
+                    return Err(Error::Geometry("empty image".into()));
+                }
+            }
+            PlanEntry::Suppressed(a) | PlanEntry::ClassMap(a) => {
+                if img.is_some() {
+                    return Err(Error::Config(
+                        "plan resumes from a cached artifact; do not pass an image".into(),
+                    ));
+                }
+                if a.width() < 1 || a.height() < 1 {
+                    return Err(Error::Geometry("empty entry artifact".into()));
+                }
+            }
         }
+        let engine = plan.engine.unwrap_or(self.engine);
         let total = Stopwatch::start();
-        let mut out = match self.engine {
-            Engine::Serial => self.detect_serial(img, params),
-            Engine::Patterns => self.detect_patterns(img, params),
-            Engine::TiledPatterns => self.detect_tiled(img, params),
-            Engine::PatternsXla => self.detect_xla(img, params),
-        }?;
-        out.times.total_ns = total.elapsed_ns();
+        // The fused-tile fast path has no per-stage boundaries, so it
+        // runs only when the plan covers the whole front *and* carries
+        // no per-stage grain overrides; otherwise the band-parallel
+        // stage path honors the plan exactly.
+        let fused_ok = plan.stop >= StageKind::Threshold && plan.grains.is_empty();
+        let mut out = match (&plan.entry, engine) {
+            (PlanEntry::Image, Engine::TiledPatterns) if fused_ok => {
+                self.exec_tiled(plan, img.expect("validated above"), params)?
+            }
+            (PlanEntry::Image, Engine::PatternsXla) if fused_ok => {
+                self.exec_xla(plan, img.expect("validated above"), params)?
+            }
+            (_, Engine::Serial) => self.exec_stages(plan, img, params, false)?,
+            _ => self.exec_stages(plan, img, params, true)?,
+        };
+        out.total_ns = total.elapsed_ns();
         Ok(out)
     }
 
+    /// The deterministic synthetic image probes of a given shape run
+    /// on — one seed per shape, shared by [`CannyPipeline::probe_shape`]
+    /// and the serving tier's calibration probe so both measure the
+    /// same content.
+    pub fn probe_image(width: usize, height: usize) -> ImageF32 {
+        let scene = crate::image::synth::Scene::Shapes {
+            seed: ((width as u64) << 32) | height as u64,
+        };
+        crate::image::synth::generate(scene, width, height)
+    }
+
     /// Measure [`StageTimes`] for a `width`×`height` detection on this
-    /// engine: run the real pipeline `repeats` times (>= 1) on a
-    /// deterministic synthetic scene of that shape and keep the
-    /// fieldwise minimum. This is the per-shape probe the serving tier's
-    /// cost calibration is fitted from.
+    /// engine: run the real pipeline `repeats` times (>= 1) on
+    /// [`CannyPipeline::probe_image`] and keep the fieldwise minimum.
+    /// (The serving tier's calibration runs the same loop over full
+    /// [`DetectOutput`]s instead, to fit per-stage models from the
+    /// records — see [`crate::service::calibrate`].)
     pub fn probe_shape(
         &self,
         width: usize,
@@ -207,10 +338,7 @@ impl<'a> CannyPipeline<'a> {
         repeats: usize,
         params: &CannyParams,
     ) -> Result<StageTimes> {
-        let scene = crate::image::synth::Scene::Shapes {
-            seed: ((width as u64) << 32) | height as u64,
-        };
-        let img = crate::image::synth::generate(scene, width, height);
+        let img = Self::probe_image(width, height);
         let mut best: Option<StageTimes> = None;
         for _ in 0..repeats.max(1) {
             let t = self.detect(&img, params)?.times;
@@ -227,164 +355,242 @@ impl<'a> CannyPipeline<'a> {
             .ok_or_else(|| Error::Scheduler(format!("engine {:?} needs a pool", self.engine)))
     }
 
-    fn finish_hysteresis(
+    /// Run the hysteresis stage for a plan and record it.
+    fn run_hysteresis(
         &self,
         cls: &ImageF32,
         params: &CannyParams,
-        times: &mut StageTimes,
-    ) -> Result<EdgeMap> {
+        plan: &StagePlan,
+    ) -> Result<(EdgeMap, StageRecord)> {
+        let use_par = plan.parallel_hysteresis.unwrap_or(params.parallel_hysteresis);
         let sw = Stopwatch::start();
-        let edges = if params.parallel_hysteresis {
+        let cpu0 = thread_cpu_ns();
+        let edges = if use_par {
             hysteresis::hysteresis_parallel(self.need_pool()?, cls)
         } else {
             hysteresis::hysteresis_serial(cls)
         };
-        times.hysteresis_ns = sw.elapsed_ns();
-        Ok(edges)
-    }
-
-    // ---- Serial (suboptimal baseline) --------------------------------
-
-    fn detect_serial(&self, img: &ImageF32, params: &CannyParams) -> Result<DetectOutput> {
-        let mut times = StageTimes::default();
-        let sw = Stopwatch::start();
-        let padded = img.pad_replicate(consts::HALO);
-        times.pad_ns = sw.elapsed_ns();
-
-        let sw = Stopwatch::start();
-        let g = gaussian::gaussian(&padded);
-        times.gaussian_ns = sw.elapsed_ns();
-
-        let sw = Stopwatch::start();
-        let (mag, dir) = sobel::sobel(&g);
-        times.sobel_ns = sw.elapsed_ns();
-
-        let sw = Stopwatch::start();
-        let nm = nms::nms(&mag, &dir);
-        times.nms_ns = sw.elapsed_ns();
-
-        let sw = Stopwatch::start();
-        let cls = threshold::threshold(&nm, params.lo, params.hi);
-        times.threshold_ns = sw.elapsed_ns();
-        times.front_ns =
-            times.gaussian_ns + times.sobel_ns + times.nms_ns + times.threshold_ns;
-
-        let edges = {
-            let sw = Stopwatch::start();
-            let e = hysteresis::hysteresis_serial(&cls);
-            times.hysteresis_ns = sw.elapsed_ns();
-            e
+        let wall_ns = sw.elapsed_ns();
+        let rec = StageRecord {
+            kind: StageKind::Hysteresis,
+            fused_from: None,
+            engine: if use_par { Engine::Patterns } else { Engine::Serial },
+            wall_ns,
+            cpu_ns: if use_par { wall_ns } else { thread_cpu_ns().saturating_sub(cpu0) },
+            tasks: 1,
+            task_costs_ns: Vec::new(),
         };
-        Ok(DetectOutput { edges, class_map: cls, nms_mag: nm, times })
+        Ok((edges, rec))
     }
 
-    // ---- Stage-parallel patterns (the paper's construction) ----------
+    // ---- Per-stage execution (Serial whole-image, or Patterns row
+    //      bands) — runs any plan: full chains, partial prefixes, and
+    //      mid-pipeline resumes. ---------------------------------------
 
-    fn detect_patterns(&self, img: &ImageF32, params: &CannyParams) -> Result<DetectOutput> {
-        let pool = self.need_pool()?;
-        let mut times = StageTimes::default();
-        let grain = if params.band_grain > 0 {
-            params.band_grain
+    fn exec_stages(
+        &self,
+        plan: &StagePlan,
+        img: Option<&ImageF32>,
+        params: &CannyParams,
+        parallel: bool,
+    ) -> Result<PlanOutput> {
+        let pool = if parallel { Some(self.need_pool()?) } else { None };
+        let eng = if parallel { Engine::Patterns } else { Engine::Serial };
+        let mut records: Vec<StageRecord> = Vec::new();
+        let mut artifacts: Vec<Artifact> = Vec::new();
+
+        // One phase record. `tasks`/`cpu` conventions documented on
+        // [`StageRecord`]: band phases carry the band count and a wall
+        // proxy for CPU; serial phases carry the executing thread's CPU.
+        let rec = |kind: StageKind, engine: Engine, wall_ns: u64, cpu_ns: u64, tasks: u64| {
+            StageRecord {
+                kind,
+                fused_from: None,
+                engine,
+                wall_ns,
+                cpu_ns,
+                tasks,
+                task_costs_ns: Vec::new(),
+            }
+        };
+
+        // The suppressed-magnitude map Threshold reads: produced by the
+        // front below (owned, echoed as an artifact), or borrowed from
+        // the entry artifact (the re-threshold hot path — no copy).
+        let mut front_nm: Option<ImageF32> = None;
+        match &plan.entry {
+            PlanEntry::ClassMap(cls) => {
+                let (edges, r) = self.run_hysteresis(cls, params, plan)?;
+                records.push(r);
+                artifacts.push(Artifact::Edges(edges));
+                return Ok(PlanOutput { artifacts, records, total_ns: 0 });
+            }
+            PlanEntry::Suppressed(_) => {}
+            PlanEntry::Image => {
+                let img = img.expect("validated in execute");
+                // Base grain: identical to the historical stage-parallel
+                // engine (one grain from the image height), overridable
+                // per stage by the plan.
+                let base_grain = |workers: usize| {
+                    if params.band_grain > 0 {
+                        params.band_grain
+                    } else {
+                        patterns::auto_grain(img.height(), workers)
+                    }
+                };
+                let grain_of = |kind: StageKind, pool: &Pool| {
+                    plan.grain_for(kind).unwrap_or_else(|| base_grain(pool.n_workers()))
+                };
+
+                // -- Pad (serial in every engine) -----------------------
+                let sw = Stopwatch::start();
+                let cpu0 = thread_cpu_ns();
+                let padded = img.pad_replicate(consts::HALO);
+                records.push(rec(
+                    StageKind::Pad,
+                    Engine::Serial,
+                    sw.elapsed_ns(),
+                    thread_cpu_ns().saturating_sub(cpu0),
+                    1,
+                ));
+                if plan.stop == StageKind::Pad {
+                    artifacts.push(Artifact::Gray(padded));
+                    return Ok(PlanOutput { artifacts, records, total_ns: 0 });
+                }
+
+                // -- Gaussian ------------------------------------------
+                let sw = Stopwatch::start();
+                let cpu0 = thread_cpu_ns();
+                let (g, tasks) = match pool {
+                    Some(pool) => {
+                        let grain = grain_of(StageKind::Gaussian, pool);
+                        let g = gaussian_bands(pool, &padded, grain);
+                        let bands =
+                            patterns::chunks(padded.height(), grain).len() as u64;
+                        (g, bands)
+                    }
+                    None => (gaussian::gaussian(&padded), 1),
+                };
+                let wall = sw.elapsed_ns();
+                let cpu = if pool.is_some() {
+                    wall
+                } else {
+                    thread_cpu_ns().saturating_sub(cpu0)
+                };
+                records.push(rec(StageKind::Gaussian, eng, wall, cpu, tasks));
+                if plan.stop == StageKind::Gaussian {
+                    artifacts.push(Artifact::Gray(g));
+                    return Ok(PlanOutput { artifacts, records, total_ns: 0 });
+                }
+
+                // -- Sobel ---------------------------------------------
+                let sw = Stopwatch::start();
+                let cpu0 = thread_cpu_ns();
+                let ((mag, dir), tasks) = match pool {
+                    Some(pool) => {
+                        let grain = grain_of(StageKind::Sobel, pool);
+                        let md = sobel_bands(pool, &g, grain);
+                        let bands =
+                            patterns::chunks(g.height() - 2, grain).len() as u64;
+                        (md, bands)
+                    }
+                    None => (sobel::sobel(&g), 1),
+                };
+                let wall = sw.elapsed_ns();
+                let cpu = if pool.is_some() {
+                    wall
+                } else {
+                    thread_cpu_ns().saturating_sub(cpu0)
+                };
+                records.push(rec(StageKind::Sobel, eng, wall, cpu, tasks));
+                if plan.stop == StageKind::Sobel {
+                    artifacts.push(Artifact::Gradient { mag, dir });
+                    return Ok(PlanOutput { artifacts, records, total_ns: 0 });
+                }
+
+                // -- NMS -----------------------------------------------
+                let sw = Stopwatch::start();
+                let cpu0 = thread_cpu_ns();
+                let (w, h) = (img.width(), img.height());
+                let (nm_out, tasks) = match pool {
+                    Some(pool) => {
+                        let grain = grain_of(StageKind::Nms, pool);
+                        let n = nms_bands(pool, &mag, &dir, w, h, grain);
+                        (n, patterns::chunks(h, grain).len() as u64)
+                    }
+                    None => (nms::nms(&mag, &dir), 1),
+                };
+                let wall = sw.elapsed_ns();
+                let cpu = if pool.is_some() {
+                    wall
+                } else {
+                    thread_cpu_ns().saturating_sub(cpu0)
+                };
+                records.push(rec(StageKind::Nms, eng, wall, cpu, tasks));
+                debug_assert_eq!(nm_out.width(), w);
+                debug_assert_eq!(nm_out.height(), h);
+                if plan.stop == StageKind::Nms {
+                    artifacts.push(Artifact::Suppressed(nm_out));
+                    return Ok(PlanOutput { artifacts, records, total_ns: 0 });
+                }
+                front_nm = Some(nm_out);
+            }
+        }
+
+        // -- Threshold (from the front's map, or the entry artifact) ---
+        let nm: &ImageF32 = match &plan.entry {
+            PlanEntry::Suppressed(entry_nm) => entry_nm,
+            _ => front_nm.as_ref().expect("front ran to NMS above"),
+        };
+        let sw = Stopwatch::start();
+        let cpu0 = thread_cpu_ns();
+        let (cls, tasks) = match pool {
+            Some(pool) => {
+                let grain = plan.grain_for(StageKind::Threshold).unwrap_or_else(|| {
+                    if params.band_grain > 0 {
+                        params.band_grain
+                    } else {
+                        patterns::auto_grain(nm.height(), pool.n_workers())
+                    }
+                });
+                let c = threshold_bands(pool, nm, params.lo, params.hi, grain);
+                (c, patterns::chunks(nm.height(), grain).len() as u64)
+            }
+            None => (threshold::threshold(nm, params.lo, params.hi), 1),
+        };
+        let wall = sw.elapsed_ns();
+        let cpu = if pool.is_some() { wall } else { thread_cpu_ns().saturating_sub(cpu0) };
+        records.push(rec(StageKind::Threshold, eng, wall, cpu, tasks));
+
+        // -- Hysteresis ------------------------------------------------
+        let edges = if plan.stop == StageKind::Hysteresis {
+            let (edges, r) = self.run_hysteresis(&cls, params, plan)?;
+            records.push(r);
+            Some(edges)
         } else {
-            patterns::auto_grain(img.height(), pool.n_workers())
+            None
         };
 
-        let sw = Stopwatch::start();
-        let padded = img.pad_replicate(consts::HALO);
-        times.pad_ns = sw.elapsed_ns();
-        let (pw, ph) = (padded.width(), padded.height());
-
-        // gauss rows: (ph, pw) -> (ph, pw-4)
-        let sw = Stopwatch::start();
-        let mut g1 = ImageF32::zeros(pw - 4, ph);
-        {
-            let out = SharedSlice::new(g1.data_mut());
-            let w_out = pw - 4;
-            patterns::par_rows(pool, ph, grain, |band| {
-                for y in band {
-                    // SAFETY: bands are disjoint row ranges.
-                    let dst = unsafe { out.range_mut(y * w_out, (y + 1) * w_out) };
-                    gaussian::gauss_row_into(padded.row(y), dst);
-                }
-            });
+        // Entry artifacts are not echoed back; the front's own map is.
+        if let Some(m) = front_nm {
+            artifacts.push(Artifact::Suppressed(m));
         }
-        // gauss cols: (ph, pw-4) -> (ph-4, pw-4)
-        let mut g2 = ImageF32::zeros(pw - 4, ph - 4);
-        {
-            let out = SharedSlice::new(g2.data_mut());
-            let w_out = pw - 4;
-            patterns::par_rows(pool, ph - 4, grain, |band| {
-                for y in band {
-                    // SAFETY: disjoint rows.
-                    let dst = unsafe { out.range_mut(y * w_out, (y + 1) * w_out) };
-                    gaussian::gauss_col_row_into(&g1, y, dst);
-                }
-            });
+        artifacts.push(Artifact::ClassMap(cls));
+        if let Some(edges) = edges {
+            artifacts.push(Artifact::Edges(edges));
         }
-        times.gaussian_ns = sw.elapsed_ns();
-
-        // sobel: (ph-4, pw-4) -> (ph-6, pw-6)
-        let sw = Stopwatch::start();
-        let (sw_out, sh_out) = (pw - 6, ph - 6);
-        let mut mag = ImageF32::zeros(sw_out, sh_out);
-        let mut dir = ImageF32::zeros(sw_out, sh_out);
-        {
-            let mag_s = SharedSlice::new(mag.data_mut());
-            let dir_s = SharedSlice::new(dir.data_mut());
-            patterns::par_rows(pool, sh_out, grain, |band| {
-                for y in band {
-                    // SAFETY: disjoint rows per band, distinct buffers.
-                    let m = unsafe { mag_s.range_mut(y * sw_out, (y + 1) * sw_out) };
-                    let d = unsafe { dir_s.range_mut(y * sw_out, (y + 1) * sw_out) };
-                    sobel::sobel_row_into(&g2, y, m, d);
-                }
-            });
-        }
-        times.sobel_ns = sw.elapsed_ns();
-
-        // nms: (ph-6, pw-6) -> (ph-8, pw-8) == (h, w)
-        let sw = Stopwatch::start();
-        let (w, h) = (img.width(), img.height());
-        let mut nm = ImageF32::zeros(w, h);
-        {
-            let nm_s = SharedSlice::new(nm.data_mut());
-            patterns::par_rows(pool, h, grain, |band| {
-                for y in band {
-                    // SAFETY: disjoint rows.
-                    let dst = unsafe { nm_s.range_mut(y * w, (y + 1) * w) };
-                    nms::nms_row_into(&mag, &dir, y, dst);
-                }
-            });
-        }
-        times.nms_ns = sw.elapsed_ns();
-
-        // threshold (elementwise map)
-        let sw = Stopwatch::start();
-        let mut cls = ImageF32::zeros(w, h);
-        {
-            let cls_s = SharedSlice::new(cls.data_mut());
-            let (lo, hi) = (params.lo, params.hi);
-            patterns::par_rows(pool, h, grain, |band| {
-                for y in band {
-                    // SAFETY: disjoint rows.
-                    let dst = unsafe { cls_s.range_mut(y * w, (y + 1) * w) };
-                    threshold::threshold_row_into(nm.row(y), lo, hi, dst);
-                }
-            });
-        }
-        times.threshold_ns = sw.elapsed_ns();
-        times.front_ns =
-            times.gaussian_ns + times.sobel_ns + times.nms_ns + times.threshold_ns;
-
-        let edges = self.finish_hysteresis(&cls, params, &mut times)?;
-        Ok(DetectOutput { edges, class_map: cls, nms_mag: nm, times })
+        Ok(PlanOutput { artifacts, records, total_ns: 0 })
     }
 
     // ---- Fused-front tiles (native) -----------------------------------
 
-    fn detect_tiled(&self, img: &ImageF32, params: &CannyParams) -> Result<DetectOutput> {
+    fn exec_tiled(
+        &self,
+        plan: &StagePlan,
+        img: &ImageF32,
+        params: &CannyParams,
+    ) -> Result<PlanOutput> {
         let pool = self.need_pool()?;
-        let mut times = StageTimes::default();
         let (w, h) = (img.width(), img.height());
         let grid = TileGrid::new(w, h, params.tile, params.tile, consts::HALO)?;
 
@@ -418,16 +624,39 @@ impl<'a> CannyPipeline<'a> {
                 unsafe { cost_s.write(i, thread_cpu_ns() - t0) };
             });
         }
-        times.front_ns = sw.elapsed_ns();
-        times.tile_costs_ns = costs;
+        let front_wall = sw.elapsed_ns();
+        let mut records = vec![StageRecord {
+            kind: StageKind::Threshold,
+            // Pad happens inside each tile task, so the fused span
+            // covers Pad..Threshold.
+            fused_from: Some(StageKind::Pad),
+            engine: Engine::TiledPatterns,
+            wall_ns: front_wall,
+            cpu_ns: costs.iter().sum(),
+            tasks: costs.len() as u64,
+            task_costs_ns: costs,
+        }];
 
-        let edges = self.finish_hysteresis(&cls, params, &mut times)?;
-        Ok(DetectOutput { edges, class_map: cls, nms_mag: nm, times })
+        let mut artifacts = vec![Artifact::Suppressed(nm)];
+        if plan.stop == StageKind::Hysteresis {
+            let (edges, r) = self.run_hysteresis(&cls, params, plan)?;
+            records.push(r);
+            artifacts.push(Artifact::ClassMap(cls));
+            artifacts.push(Artifact::Edges(edges));
+        } else {
+            artifacts.push(Artifact::ClassMap(cls));
+        }
+        Ok(PlanOutput { artifacts, records, total_ns: 0 })
     }
 
     // ---- Fused-front tiles via PJRT (JAX/Pallas artifacts) ------------
 
-    fn detect_xla(&self, img: &ImageF32, params: &CannyParams) -> Result<DetectOutput> {
+    fn exec_xla(
+        &self,
+        plan: &StagePlan,
+        img: &ImageF32,
+        params: &CannyParams,
+    ) -> Result<PlanOutput> {
         let pool = self.need_pool()?;
         let xla = self
             .xla
@@ -440,13 +669,21 @@ impl<'a> CannyPipeline<'a> {
                 consts::HALO
             )));
         }
-        let mut times = StageTimes::default();
         let (w, h) = (img.width(), img.height());
         let grid = TileGrid::new(w, h, core_w, core_h, halo)?;
 
         let sw = Stopwatch::start();
+        let cpu0 = thread_cpu_ns();
         let padded = grid.pad_for_fixed(img);
-        times.pad_ns = sw.elapsed_ns();
+        let mut records = vec![StageRecord {
+            kind: StageKind::Pad,
+            fused_from: None,
+            engine: Engine::Serial,
+            wall_ns: sw.elapsed_ns(),
+            cpu_ns: thread_cpu_ns().saturating_sub(cpu0),
+            tasks: 1,
+            task_costs_ns: Vec::new(),
+        }];
 
         let sw = Stopwatch::start();
         let tiles: Vec<_> = grid.tiles().collect();
@@ -484,12 +721,122 @@ impl<'a> CannyPipeline<'a> {
         if let Some(e) = errs.into_iter().flatten().next() {
             return Err(e);
         }
-        times.front_ns = sw.elapsed_ns();
-        times.tile_costs_ns = costs;
+        records.push(StageRecord {
+            kind: StageKind::Threshold,
+            fused_from: Some(StageKind::Gaussian),
+            engine: Engine::PatternsXla,
+            wall_ns: sw.elapsed_ns(),
+            cpu_ns: costs.iter().sum(),
+            tasks: costs.len() as u64,
+            task_costs_ns: costs,
+        });
 
-        let edges = self.finish_hysteresis(&cls, params, &mut times)?;
-        Ok(DetectOutput { edges, class_map: cls, nms_mag: nm, times })
+        let mut artifacts = vec![Artifact::Suppressed(nm)];
+        if plan.stop == StageKind::Hysteresis {
+            let (edges, r) = self.run_hysteresis(&cls, params, plan)?;
+            records.push(r);
+            artifacts.push(Artifact::ClassMap(cls));
+            artifacts.push(Artifact::Edges(edges));
+        } else {
+            artifacts.push(Artifact::ClassMap(cls));
+        }
+        Ok(PlanOutput { artifacts, records, total_ns: 0 })
     }
+}
+
+// ---- Band-parallel stage bodies (the paper's stage-parallel engine,
+//      shared by full chains and partial plans) -----------------------
+
+/// Gaussian over row bands: (ph, pw) → (ph-4, pw-4) in two passes.
+fn gaussian_bands(pool: &Pool, padded: &ImageF32, grain: usize) -> ImageF32 {
+    let (pw, ph) = (padded.width(), padded.height());
+    // gauss rows: (ph, pw) -> (ph, pw-4)
+    let mut g1 = ImageF32::zeros(pw - 4, ph);
+    {
+        let out = SharedSlice::new(g1.data_mut());
+        let w_out = pw - 4;
+        patterns::par_rows(pool, ph, grain, |band| {
+            for y in band {
+                // SAFETY: bands are disjoint row ranges.
+                let dst = unsafe { out.range_mut(y * w_out, (y + 1) * w_out) };
+                gaussian::gauss_row_into(padded.row(y), dst);
+            }
+        });
+    }
+    // gauss cols: (ph, pw-4) -> (ph-4, pw-4)
+    let mut g2 = ImageF32::zeros(pw - 4, ph - 4);
+    {
+        let out = SharedSlice::new(g2.data_mut());
+        let w_out = pw - 4;
+        patterns::par_rows(pool, ph - 4, grain, |band| {
+            for y in band {
+                // SAFETY: disjoint rows.
+                let dst = unsafe { out.range_mut(y * w_out, (y + 1) * w_out) };
+                gaussian::gauss_col_row_into(&g1, y, dst);
+            }
+        });
+    }
+    g2
+}
+
+/// Sobel over row bands: (gh, gw) → (gh-2, gw-2) magnitude + direction.
+fn sobel_bands(pool: &Pool, g: &ImageF32, grain: usize) -> (ImageF32, ImageF32) {
+    let (sw_out, sh_out) = (g.width() - 2, g.height() - 2);
+    let mut mag = ImageF32::zeros(sw_out, sh_out);
+    let mut dir = ImageF32::zeros(sw_out, sh_out);
+    {
+        let mag_s = SharedSlice::new(mag.data_mut());
+        let dir_s = SharedSlice::new(dir.data_mut());
+        patterns::par_rows(pool, sh_out, grain, |band| {
+            for y in band {
+                // SAFETY: disjoint rows per band, distinct buffers.
+                let m = unsafe { mag_s.range_mut(y * sw_out, (y + 1) * sw_out) };
+                let d = unsafe { dir_s.range_mut(y * sw_out, (y + 1) * sw_out) };
+                sobel::sobel_row_into(g, y, m, d);
+            }
+        });
+    }
+    (mag, dir)
+}
+
+/// NMS over row bands: gradient → (h, w) suppressed magnitude.
+fn nms_bands(
+    pool: &Pool,
+    mag: &ImageF32,
+    dir: &ImageF32,
+    w: usize,
+    h: usize,
+    grain: usize,
+) -> ImageF32 {
+    let mut nm = ImageF32::zeros(w, h);
+    {
+        let nm_s = SharedSlice::new(nm.data_mut());
+        patterns::par_rows(pool, h, grain, |band| {
+            for y in band {
+                // SAFETY: disjoint rows.
+                let dst = unsafe { nm_s.range_mut(y * w, (y + 1) * w) };
+                nms::nms_row_into(mag, dir, y, dst);
+            }
+        });
+    }
+    nm
+}
+
+/// Double threshold over row bands (elementwise map).
+fn threshold_bands(pool: &Pool, nm: &ImageF32, lo: f32, hi: f32, grain: usize) -> ImageF32 {
+    let (w, h) = (nm.width(), nm.height());
+    let mut cls = ImageF32::zeros(w, h);
+    {
+        let cls_s = SharedSlice::new(cls.data_mut());
+        patterns::par_rows(pool, h, grain, |band| {
+            for y in band {
+                // SAFETY: disjoint rows.
+                let dst = unsafe { cls_s.range_mut(y * w, (y + 1) * w) };
+                threshold::threshold_row_into(nm.row(y), lo, hi, dst);
+            }
+        });
+    }
+    cls
 }
 
 /// Serial Canny front on a haloed window: `(c + 2*HALO)²` → `c²`.
@@ -564,6 +911,11 @@ mod tests {
         // 150x90 at tile 64 -> 3x2 grid.
         assert_eq!(out.times.tile_costs_ns.len(), 6);
         assert!(out.times.tile_costs_ns.iter().all(|&c| c > 0));
+        // The fused span carries the same costs as the compat view.
+        let front = out.records.iter().find(|r| r.span_name() == "front").unwrap();
+        assert_eq!(front.task_costs_ns, out.times.tile_costs_ns);
+        assert_eq!(front.tasks, 6);
+        assert!(front.covers(StageKind::Pad) && front.covers(StageKind::Threshold));
     }
 
     #[test]
@@ -620,5 +972,156 @@ mod tests {
         let serial = CannyPipeline::serial().detect(&img, &params).unwrap();
         let tiled = CannyPipeline::tiled(&pool).detect(&img, &params).unwrap();
         assert_eq!(serial.edges.diff_count(&tiled.edges), 0);
+    }
+
+    // ---- Stage-graph plans -------------------------------------------
+
+    #[test]
+    fn full_plan_execute_matches_detect() {
+        let img = test_image();
+        let params = CannyParams::default();
+        let pool = Pool::new(3).unwrap();
+        for pipe in [CannyPipeline::serial(), CannyPipeline::patterns(&pool)] {
+            let det = pipe.detect(&img, &params).unwrap();
+            let plan = pipe.execute(&StagePlan::new(), Some(&img), &params).unwrap();
+            assert_eq!(det.edges.diff_count(plan.edges().unwrap()), 0);
+            assert_eq!(&det.class_map, plan.class_map().unwrap());
+            assert_eq!(&det.nms_mag, plan.suppressed().unwrap());
+        }
+    }
+
+    #[test]
+    fn serial_records_cover_every_stage() {
+        let img = test_image();
+        let out = CannyPipeline::serial().detect(&img, &CannyParams::default()).unwrap();
+        let names: Vec<&str> = out.records.iter().map(|r| r.span_name()).collect();
+        assert_eq!(names, ["pad", "gaussian", "sobel", "nms", "threshold", "hysteresis"]);
+        assert!(out.records.iter().all(|r| r.tasks == 1));
+        // Compat view reproduces the per-stage fields and the front sum.
+        assert_eq!(
+            out.times.front_ns,
+            out.times.gaussian_ns + out.times.sobel_ns + out.times.nms_ns
+                + out.times.threshold_ns
+        );
+        assert!(out.times.total_ns > 0);
+    }
+
+    #[test]
+    fn patterns_records_count_bands() {
+        let img = test_image();
+        let pool = Pool::new(2).unwrap();
+        let out = CannyPipeline::patterns(&pool).detect(&img, &CannyParams::default()).unwrap();
+        let gauss = out.records.iter().find(|r| r.kind == StageKind::Gaussian).unwrap();
+        assert_eq!(gauss.engine, Engine::Patterns);
+        assert!(gauss.tasks >= 1);
+    }
+
+    #[test]
+    fn partial_stops_yield_the_right_artifact() {
+        let img = test_image();
+        let params = CannyParams::default();
+        let pipe = CannyPipeline::serial();
+        let stops = [
+            (StageKind::Pad, "gray"),
+            (StageKind::Gaussian, "gray"),
+            (StageKind::Sobel, "gradient"),
+            (StageKind::Nms, "suppressed"),
+            (StageKind::Threshold, "class-map"),
+            (StageKind::Hysteresis, "edges"),
+        ];
+        for (stop, want) in stops {
+            let plan = StagePlan::new().stop_after(stop);
+            let out = pipe.execute(&plan, Some(&img), &params).unwrap();
+            assert!(
+                out.artifacts.iter().any(|a| a.name() == want),
+                "stop {} missing artifact {want}",
+                stop.name()
+            );
+            assert!(out.ran(stop));
+            if stop < StageKind::Hysteresis {
+                assert!(!out.ran(StageKind::Hysteresis), "stop {} overran", stop.name());
+            }
+        }
+    }
+
+    #[test]
+    fn resume_from_suppressed_skips_the_front() {
+        let img = test_image();
+        let params = CannyParams::default();
+        let pool = Pool::new(3).unwrap();
+        let pipe = CannyPipeline::patterns(&pool);
+        let full = pipe.detect(&img, &params).unwrap();
+
+        let front = StagePlan::new().stop_after(StageKind::Nms);
+        let mut front_out = pipe.execute(&front, Some(&img), &params).unwrap();
+        let nm = front_out.take_suppressed().unwrap();
+        assert_eq!(&nm, &full.nms_mag);
+
+        let resume = StagePlan::new().from_suppressed(nm);
+        let out = pipe.execute(&resume, None, &params).unwrap();
+        assert_eq!(full.edges.diff_count(out.edges().unwrap()), 0);
+        for k in [StageKind::Pad, StageKind::Gaussian, StageKind::Sobel, StageKind::Nms] {
+            assert!(!out.ran(k), "resume re-ran {}", k.name());
+        }
+        assert!(out.ran(StageKind::Threshold) && out.ran(StageKind::Hysteresis));
+        // Entry artifacts are not echoed back.
+        assert!(out.suppressed().is_none());
+    }
+
+    #[test]
+    fn resume_from_class_map_runs_hysteresis_only() {
+        let img = test_image();
+        let params = CannyParams::default();
+        let full = CannyPipeline::serial().detect(&img, &params).unwrap();
+        let plan = StagePlan::new().from_class_map(full.class_map.clone());
+        let out = CannyPipeline::serial().execute(&plan, None, &params).unwrap();
+        assert_eq!(out.records.len(), 1);
+        assert_eq!(out.records[0].kind, StageKind::Hysteresis);
+        assert_eq!(full.edges.diff_count(out.edges().unwrap()), 0);
+    }
+
+    #[test]
+    fn tiled_partial_prefix_falls_back_to_band_stages() {
+        let img = test_image();
+        let params = CannyParams::default();
+        let pool = Pool::new(2).unwrap();
+        let plan = StagePlan::new().stop_after(StageKind::Nms);
+        let out = CannyPipeline::tiled(&pool).execute(&plan, Some(&img), &params).unwrap();
+        let serial = CannyPipeline::serial().detect(&img, &params).unwrap();
+        assert_eq!(out.suppressed().unwrap(), &serial.nms_mag);
+        // The prefix ran unfused (no "front" span).
+        assert!(out.records.iter().all(|r| r.fused_from.is_none()));
+    }
+
+    #[test]
+    fn plan_engine_override_beats_pipeline_engine() {
+        let img = test_image();
+        let params = CannyParams::default();
+        // Serial pipeline + a Patterns override without a pool: error.
+        let plan = StagePlan::new().engine(Engine::Patterns);
+        assert!(CannyPipeline::serial().execute(&plan, Some(&img), &params).is_err());
+        // Patterns pipeline + a Serial override: runs without touching
+        // the pool-parallel path.
+        let pool = Pool::new(2).unwrap();
+        let plan = StagePlan::new().engine(Engine::Serial);
+        let out = CannyPipeline::patterns(&pool).execute(&plan, Some(&img), &params).unwrap();
+        assert!(out.records.iter().all(|r| r.engine == Engine::Serial));
+    }
+
+    #[test]
+    fn execute_input_arity_is_validated() {
+        let img = test_image();
+        let params = CannyParams::default();
+        let pipe = CannyPipeline::serial();
+        // Image entry without an image.
+        assert!(pipe.execute(&StagePlan::new(), None, &params).is_err());
+        // Resume entry with a stray image.
+        let plan = StagePlan::new().from_suppressed(ImageF32::zeros(8, 8));
+        assert!(pipe.execute(&plan, Some(&img), &params).is_err());
+        // Contradictory stop/entry rejected.
+        let plan = StagePlan::new()
+            .from_class_map(ImageF32::zeros(8, 8))
+            .stop_after(StageKind::Threshold);
+        assert!(pipe.execute(&plan, None, &params).is_err());
     }
 }

@@ -1,0 +1,457 @@
+//! The **stage graph** behind the detection API: the Canny pipeline as
+//! six addressable stages with typed artifacts, instead of a monolithic
+//! `detect(img) -> edges` black box.
+//!
+//! A [`StagePlan`] selects
+//!
+//! * a **stop stage** — run only a prefix of the pipeline (front-only,
+//!   gradient-only, NMS-only) and get that stage's [`Artifact`] back;
+//! * an **entry artifact** — resume mid-pipeline from a cached
+//!   intermediate (re-threshold a suppressed-magnitude map with new
+//!   `lo`/`hi` without recomputing Gaussian/Sobel/NMS);
+//! * per-stage **engine / grain overrides** — swap the front engine or
+//!   pin a band grain for one stage without rebuilding the detector.
+//!
+//! Execution ([`crate::canny::CannyPipeline::execute`]) returns a
+//! [`PlanOutput`]: the artifacts the plan produced plus one uniform
+//! [`StageRecord`] per executed phase (`kind`, `engine`, `wall_ns`,
+//! `cpu_ns`, `tasks`). The legacy [`StageTimes`] is now a view computed
+//! from the records ([`StageTimes::from_records`]), kept for the
+//! benches, the simulator specs and the serving tier's end-to-end
+//! calibration.
+//!
+//! The full plan (`entry = Image`, `stop = Hysteresis`, no overrides)
+//! is what [`CannyPipeline::detect`](crate::canny::CannyPipeline::detect)
+//! runs; the fused-tile fast paths are preserved bit-for-bit, which the
+//! engine-equivalence determinism tests enforce.
+
+use crate::canny::pipeline::{Engine, StageTimes};
+use crate::error::{Error, Result};
+use crate::image::{EdgeMap, ImageF32};
+
+/// The pipeline stages, in execution order (the derived `Ord` *is* the
+/// pipeline order — `Gaussian < Nms` etc., used for prefix checks).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum StageKind {
+    /// Replicate-pad the input by the halo.
+    Pad,
+    /// 5×5 separable Gaussian smoothing.
+    Gaussian,
+    /// Sobel gradient magnitude + direction.
+    Sobel,
+    /// Non-maximum suppression along the gradient direction.
+    Nms,
+    /// Double-threshold classification (none/weak/strong).
+    Threshold,
+    /// Weak→edge connectivity (the only data-dependent stage).
+    Hysteresis,
+}
+
+impl StageKind {
+    /// Every stage, pipeline order.
+    pub const ALL: [StageKind; 6] = [
+        StageKind::Pad,
+        StageKind::Gaussian,
+        StageKind::Sobel,
+        StageKind::Nms,
+        StageKind::Threshold,
+        StageKind::Hysteresis,
+    ];
+
+    /// CLI / report name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            StageKind::Pad => "pad",
+            StageKind::Gaussian => "gaussian",
+            StageKind::Sobel => "sobel",
+            StageKind::Nms => "nms",
+            StageKind::Threshold => "threshold",
+            StageKind::Hysteresis => "hysteresis",
+        }
+    }
+
+    /// Parse a `--stop-after` value.
+    pub fn parse(s: &str) -> Option<StageKind> {
+        match s {
+            "pad" => Some(StageKind::Pad),
+            "gaussian" | "gauss" => Some(StageKind::Gaussian),
+            "sobel" | "gradient" => Some(StageKind::Sobel),
+            "nms" | "suppress" => Some(StageKind::Nms),
+            "threshold" => Some(StageKind::Threshold),
+            "hysteresis" | "edges" => Some(StageKind::Hysteresis),
+            _ => None,
+        }
+    }
+}
+
+/// A typed pipeline product. Which variant a stage yields:
+/// Pad/Gaussian → `Gray`, Sobel → `Gradient`, Nms → `Suppressed`,
+/// Threshold → `ClassMap`, Hysteresis → `Edges`.
+#[derive(Clone, Debug)]
+pub enum Artifact {
+    /// A grayscale field (the padded input, or the smoothed image).
+    Gray(ImageF32),
+    /// Gradient magnitude + direction.
+    Gradient { mag: ImageF32, dir: ImageF32 },
+    /// Suppressed gradient magnitude (image-sized) — the re-threshold
+    /// entry artifact.
+    Suppressed(ImageF32),
+    /// 0/1/2 class map before connectivity.
+    ClassMap(ImageF32),
+    /// The final binary edge map.
+    Edges(EdgeMap),
+}
+
+impl Artifact {
+    /// CLI / report name (`--emit` values).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Artifact::Gray(_) => "gray",
+            Artifact::Gradient { .. } => "gradient",
+            Artifact::Suppressed(_) => "suppressed",
+            Artifact::ClassMap(_) => "class-map",
+            Artifact::Edges(_) => "edges",
+        }
+    }
+}
+
+/// Where a plan starts.
+#[derive(Clone, Debug, Default)]
+pub enum PlanEntry {
+    /// From a raw image (passed to `execute`); runs from [`StageKind::Pad`].
+    #[default]
+    Image,
+    /// Resume from a cached suppressed-magnitude map; runs from
+    /// [`StageKind::Threshold`] — the re-threshold path.
+    Suppressed(ImageF32),
+    /// Resume from a class map; runs [`StageKind::Hysteresis`] only.
+    ClassMap(ImageF32),
+}
+
+impl PlanEntry {
+    /// First stage this entry executes.
+    pub fn first_stage(&self) -> StageKind {
+        match self {
+            PlanEntry::Image => StageKind::Pad,
+            PlanEntry::Suppressed(_) => StageKind::Threshold,
+            PlanEntry::ClassMap(_) => StageKind::Hysteresis,
+        }
+    }
+}
+
+/// A composable execution plan over the stage graph. Built via
+/// [`crate::coordinator::Detector::plan`] (or [`StagePlan::new`]) and
+/// executed by [`crate::canny::CannyPipeline::execute`].
+#[derive(Clone, Debug)]
+pub struct StagePlan {
+    /// Run through this stage inclusive (default: the whole pipeline).
+    pub stop: StageKind,
+    /// Where execution starts (default: from the raw image).
+    pub entry: PlanEntry,
+    /// Front-engine override (default: the pipeline's own engine).
+    pub engine: Option<Engine>,
+    /// Hysteresis-engine override (default: `params.parallel_hysteresis`).
+    pub parallel_hysteresis: Option<bool>,
+    /// Per-stage band-grain overrides (0 = auto), beating
+    /// `params.band_grain` for that stage only.
+    pub grains: Vec<(StageKind, usize)>,
+}
+
+impl Default for StagePlan {
+    fn default() -> Self {
+        StagePlan::new()
+    }
+}
+
+impl StagePlan {
+    /// The full plan: image in, edges out, no overrides.
+    pub fn new() -> StagePlan {
+        StagePlan {
+            stop: StageKind::Hysteresis,
+            entry: PlanEntry::Image,
+            engine: None,
+            parallel_hysteresis: None,
+            grains: Vec::new(),
+        }
+    }
+
+    /// Stop after `stage` (inclusive) and return its artifact.
+    pub fn stop_after(mut self, stage: StageKind) -> Self {
+        self.stop = stage;
+        self
+    }
+
+    /// Resume from a cached suppressed-magnitude map (the re-threshold
+    /// entry): only Threshold (and Hysteresis, per `stop`) run.
+    pub fn from_suppressed(mut self, nm: ImageF32) -> Self {
+        self.entry = PlanEntry::Suppressed(nm);
+        self
+    }
+
+    /// Resume from a class map: only Hysteresis runs.
+    pub fn from_class_map(mut self, cls: ImageF32) -> Self {
+        self.entry = PlanEntry::ClassMap(cls);
+        self
+    }
+
+    /// Override the front engine for this plan.
+    pub fn engine(mut self, engine: Engine) -> Self {
+        self.engine = Some(engine);
+        self
+    }
+
+    /// Override the hysteresis engine for this plan.
+    pub fn parallel_hysteresis(mut self, on: bool) -> Self {
+        self.parallel_hysteresis = Some(on);
+        self
+    }
+
+    /// Override the row-band grain for one stage (0 = auto). Grains
+    /// apply to the band-parallel stage path: a plan carrying any
+    /// grain override executes the fused-tile engines unfused, so the
+    /// override is honored rather than silently dropped.
+    pub fn stage_grain(mut self, stage: StageKind, grain: usize) -> Self {
+        self.grains.retain(|(k, _)| *k != stage);
+        self.grains.push((stage, grain));
+        self
+    }
+
+    /// The grain override for `stage`, if any (and non-auto).
+    pub fn grain_for(&self, stage: StageKind) -> Option<usize> {
+        self.grains.iter().find(|(k, _)| *k == stage).map(|&(_, g)| g).filter(|&g| g > 0)
+    }
+
+    /// Is this the unmodified image→edges plan (the `detect` fast path)?
+    pub fn is_full(&self) -> bool {
+        matches!(self.entry, PlanEntry::Image) && self.stop == StageKind::Hysteresis
+    }
+
+    /// Check entry/stop consistency: the stop stage must not precede
+    /// the entry's first stage.
+    pub fn validate(&self) -> Result<()> {
+        if self.stop < self.entry.first_stage() {
+            return Err(Error::Config(format!(
+                "plan stops at `{}` but its entry artifact resumes at `{}`",
+                self.stop.name(),
+                self.entry.first_stage().name()
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Uniform per-phase accounting: one record per executed phase. For the
+/// fused-tile engines the whole front is one phase — `fused_from` marks
+/// the first stage the phase covers and `kind` the last.
+#[derive(Clone, Debug)]
+pub struct StageRecord {
+    /// The stage this record completes.
+    pub kind: StageKind,
+    /// When `Some(first)`, this record covers `first..=kind` fused into
+    /// one phase (the tiled engines' fused front).
+    pub fused_from: Option<StageKind>,
+    /// Engine that executed the phase.
+    pub engine: Engine,
+    pub wall_ns: u64,
+    /// Thread-CPU cost: summed per-task CPU where tasks are timed
+    /// (fused tile fronts), the executing thread's CPU for serial
+    /// phases, and the wall clock as a proxy for untimed band-parallel
+    /// phases.
+    pub cpu_ns: u64,
+    /// Parallel tasks the phase decomposed into (1 for serial phases).
+    pub tasks: u64,
+    /// Per-task thread-CPU costs where measured (fused tile fronts) —
+    /// the simulator's load-balance input.
+    pub task_costs_ns: Vec<u64>,
+}
+
+impl StageRecord {
+    /// Accounting name: the stage name, or `"front"` for a fused span.
+    pub fn span_name(&self) -> &'static str {
+        if self.fused_from.is_some() {
+            "front"
+        } else {
+            self.kind.name()
+        }
+    }
+
+    /// Does this record's phase cover `stage`?
+    pub fn covers(&self, stage: StageKind) -> bool {
+        match self.fused_from {
+            Some(first) => first <= stage && stage <= self.kind,
+            None => self.kind == stage,
+        }
+    }
+}
+
+/// What a plan execution returns: the artifacts the executed stages
+/// produced (big intermediates before NMS are kept only when they *are*
+/// the stop artifact; entry artifacts are not echoed back) plus the
+/// per-phase records.
+#[derive(Clone, Debug, Default)]
+pub struct PlanOutput {
+    pub artifacts: Vec<Artifact>,
+    pub records: Vec<StageRecord>,
+    pub total_ns: u64,
+}
+
+impl PlanOutput {
+    fn find(&self, name: &str) -> Option<&Artifact> {
+        self.artifacts.iter().find(|a| a.name() == name)
+    }
+
+    pub fn gray(&self) -> Option<&ImageF32> {
+        match self.find("gray") {
+            Some(Artifact::Gray(g)) => Some(g),
+            _ => None,
+        }
+    }
+
+    pub fn gradient(&self) -> Option<(&ImageF32, &ImageF32)> {
+        match self.find("gradient") {
+            Some(Artifact::Gradient { mag, dir }) => Some((mag, dir)),
+            _ => None,
+        }
+    }
+
+    pub fn suppressed(&self) -> Option<&ImageF32> {
+        match self.find("suppressed") {
+            Some(Artifact::Suppressed(nm)) => Some(nm),
+            _ => None,
+        }
+    }
+
+    pub fn class_map(&self) -> Option<&ImageF32> {
+        match self.find("class-map") {
+            Some(Artifact::ClassMap(c)) => Some(c),
+            _ => None,
+        }
+    }
+
+    pub fn edges(&self) -> Option<&EdgeMap> {
+        match self.find("edges") {
+            Some(Artifact::Edges(e)) => Some(e),
+            _ => None,
+        }
+    }
+
+    /// Move the suppressed-magnitude artifact out (the serving tier's
+    /// cache-fill path — avoids a clone of the biggest artifact).
+    pub fn take_suppressed(&mut self) -> Option<ImageF32> {
+        let i = self.artifacts.iter().position(|a| matches!(a, Artifact::Suppressed(_)))?;
+        match self.artifacts.remove(i) {
+            Artifact::Suppressed(nm) => Some(nm),
+            _ => unreachable!("position matched Suppressed"),
+        }
+    }
+
+    /// Did any executed phase cover `stage`?
+    pub fn ran(&self, stage: StageKind) -> bool {
+        self.records.iter().any(|r| r.covers(stage))
+    }
+
+    /// The legacy [`StageTimes`] compatibility view over the records.
+    pub fn stage_times(&self) -> StageTimes {
+        StageTimes::from_records(&self.records, self.total_ns)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_order_and_parse() {
+        assert!(StageKind::Pad < StageKind::Gaussian);
+        assert!(StageKind::Threshold < StageKind::Hysteresis);
+        for k in StageKind::ALL {
+            assert_eq!(StageKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(StageKind::parse("gradient"), Some(StageKind::Sobel));
+        assert_eq!(StageKind::parse("edges"), Some(StageKind::Hysteresis));
+        assert_eq!(StageKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn plan_builders_and_validation() {
+        let full = StagePlan::new();
+        assert!(full.is_full());
+        assert!(full.validate().is_ok());
+
+        let front = StagePlan::new().stop_after(StageKind::Nms);
+        assert!(!front.is_full());
+        assert!(front.validate().is_ok());
+
+        // Resuming from a suppressed map but stopping before Threshold
+        // is contradictory.
+        let bad = StagePlan::new()
+            .from_suppressed(ImageF32::zeros(4, 4))
+            .stop_after(StageKind::Sobel);
+        assert!(bad.validate().is_err());
+
+        let ok = StagePlan::new()
+            .from_suppressed(ImageF32::zeros(4, 4))
+            .stop_after(StageKind::Threshold);
+        assert!(ok.validate().is_ok());
+        assert_eq!(ok.entry.first_stage(), StageKind::Threshold);
+    }
+
+    #[test]
+    fn grain_overrides_latest_wins_and_zero_is_auto() {
+        let p = StagePlan::new()
+            .stage_grain(StageKind::Gaussian, 8)
+            .stage_grain(StageKind::Gaussian, 16)
+            .stage_grain(StageKind::Sobel, 0);
+        assert_eq!(p.grain_for(StageKind::Gaussian), Some(16));
+        assert_eq!(p.grain_for(StageKind::Sobel), None, "0 means auto");
+        assert_eq!(p.grain_for(StageKind::Nms), None);
+    }
+
+    #[test]
+    fn record_span_names_and_coverage() {
+        let fused = StageRecord {
+            kind: StageKind::Threshold,
+            fused_from: Some(StageKind::Pad),
+            engine: Engine::TiledPatterns,
+            wall_ns: 10,
+            cpu_ns: 10,
+            tasks: 4,
+            task_costs_ns: vec![2, 3, 2, 3],
+        };
+        assert_eq!(fused.span_name(), "front");
+        assert!(fused.covers(StageKind::Gaussian));
+        assert!(fused.covers(StageKind::Threshold));
+        assert!(!fused.covers(StageKind::Hysteresis));
+        let plain = StageRecord {
+            kind: StageKind::Nms,
+            fused_from: None,
+            engine: Engine::Serial,
+            wall_ns: 5,
+            cpu_ns: 5,
+            tasks: 1,
+            task_costs_ns: Vec::new(),
+        };
+        assert_eq!(plain.span_name(), "nms");
+        assert!(plain.covers(StageKind::Nms));
+        assert!(!plain.covers(StageKind::Sobel));
+    }
+
+    #[test]
+    fn output_accessors_and_take() {
+        let mut out = PlanOutput {
+            artifacts: vec![
+                Artifact::Suppressed(ImageF32::zeros(3, 2)),
+                Artifact::ClassMap(ImageF32::zeros(3, 2)),
+            ],
+            records: Vec::new(),
+            total_ns: 0,
+        };
+        assert!(out.suppressed().is_some());
+        assert!(out.class_map().is_some());
+        assert!(out.edges().is_none());
+        let nm = out.take_suppressed().unwrap();
+        assert_eq!((nm.width(), nm.height()), (3, 2));
+        assert!(out.suppressed().is_none());
+        assert!(out.take_suppressed().is_none());
+    }
+}

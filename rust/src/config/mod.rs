@@ -51,6 +51,10 @@ pub struct RunConfig {
     /// `virtual` (deterministic modeled-time replay, the default) or
     /// `wall` (real lane threads + monotonic time).
     pub clock: ClockMode,
+    /// Serving tier: per-lane suppressed-magnitude LRU capacity in
+    /// entries (the `re-threshold` request-kind fast path; 0 disables
+    /// the cache so every re-threshold recomputes the front).
+    pub rethreshold_cache: usize,
 }
 
 impl Default for RunConfig {
@@ -73,6 +77,7 @@ impl Default for RunConfig {
             slo_p99_ms: 50.0,
             max_pixels: 0,
             clock: ClockMode::Virtual,
+            rethreshold_cache: 32,
         }
     }
 }
@@ -127,6 +132,9 @@ impl RunConfig {
             "clock" => {
                 self.clock = ClockMode::parse(value).ok_or_else(|| bad("clock"))?
             }
+            "rethreshold-cache" | "rethreshold_cache" => {
+                self.rethreshold_cache = value.parse().map_err(|_| bad("usize"))?
+            }
             _ => return Err(Error::Config(format!("unknown config key `{key}`"))),
         }
         Ok(())
@@ -169,6 +177,8 @@ impl RunConfig {
         "max-pixels",
         "max_pixels",
         "clock",
+        "rethreshold-cache",
+        "rethreshold_cache",
     ];
 
     /// Is `key` a config key `set` would accept?
@@ -273,6 +283,7 @@ impl RunConfig {
         m.insert("slo-p99-ms".into(), self.slo_p99_ms.to_string());
         m.insert("max-pixels".into(), self.max_pixels.to_string());
         m.insert("clock".into(), self.clock.name().to_string());
+        m.insert("rethreshold-cache".into(), self.rethreshold_cache.to_string());
         m
     }
 }
@@ -395,6 +406,10 @@ mod tests {
         c.set("batch-max", "12").unwrap();
         c.set("arrival-rate", "1500.5").unwrap();
         c.set("slo-p99-ms", "10").unwrap();
+        c.set("rethreshold-cache", "8").unwrap();
+        assert_eq!(c.rethreshold_cache, 8);
+        c.set("rethreshold_cache", "0").unwrap();
+        assert_eq!(c.rethreshold_cache, 0, "0 disables the cache and still validates");
         assert_eq!(c.lanes, 4);
         assert_eq!(c.queue_depth, 16);
         assert_eq!(c.batch_window_us, 500);

@@ -22,6 +22,7 @@ pub use topology::CpuTopology;
 
 use std::sync::Arc;
 
+use crate::canny::plan::{PlanOutput, StagePlan};
 use crate::canny::{CannyParams, CannyPipeline, DetectOutput, Engine};
 use crate::config::RunConfig;
 use crate::error::{Error, Result};
@@ -75,7 +76,26 @@ impl Detector {
 
     /// Detect with the detector's own default parameters.
     pub fn detect_default(&self, img: &ImageF32) -> Result<EdgeMap> {
-        self.detect(img, &self.params.clone())
+        self.detect(img, &self.params)
+    }
+
+    /// Start a [`StagePlan`] over the stage graph: pick a stop stage
+    /// (front-only, gradient-only, …), an entry artifact (re-threshold
+    /// a cached suppressed-magnitude map) and per-stage overrides, then
+    /// run it with [`Detector::run_plan`].
+    pub fn plan(&self) -> StagePlan {
+        StagePlan::new()
+    }
+
+    /// Execute a [`StagePlan`] on this detector's resources. `img` is
+    /// required iff the plan starts from a raw image.
+    pub fn run_plan(
+        &self,
+        plan: &StagePlan,
+        img: Option<&ImageF32>,
+        params: &CannyParams,
+    ) -> Result<PlanOutput> {
+        self.pipeline().execute(plan, img, params)
     }
 
     /// The configured default parameters.
@@ -206,6 +226,20 @@ mod tests {
         cfg.set("workers", "1").unwrap();
         let det = Detector::from_config(&cfg).unwrap();
         assert_eq!(det.engine(), Engine::Serial);
+    }
+
+    #[test]
+    fn plan_roundtrip_through_detector() {
+        use crate::canny::StageKind;
+        let det = Detector::builder().workers(2).build().unwrap();
+        let img = generate(Scene::Checker { cell: 8 }, 48, 48);
+        let front = det.plan().stop_after(StageKind::Nms);
+        let mut out = det.run_plan(&front, Some(&img), det.params()).unwrap();
+        let nm = out.take_suppressed().unwrap();
+        let re = det.plan().from_suppressed(nm);
+        let out2 = det.run_plan(&re, None, det.params()).unwrap();
+        let full = det.detect_default(&img).unwrap();
+        assert_eq!(full.diff_count(out2.edges().unwrap()), 0);
     }
 
     #[test]

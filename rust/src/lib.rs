@@ -15,10 +15,12 @@
 //!   batching under a max-delay window, N sharded detector lanes, and
 //!   p50/p95/p99 SLO reporting — under **two clocks** (`cannyd serve
 //!   --clock virtual|wall`): a deterministic virtual-time replay whose
-//!   service-cost model can be calibrated from measured
-//!   [`canny::StageTimes`] ([`service::calibrate`]), and a wall-clock
-//!   mode running real lane threads on monotonic time that the
-//!   calibrated predictions are validated against.
+//!   service-cost model can be calibrated end-to-end *and per stage*
+//!   from measured [`canny::StageRecord`]s ([`service::calibrate`]),
+//!   and a wall-clock mode running real lane threads on monotonic time
+//!   that the calibrated predictions are validated against. Requests
+//!   carry a kind (full | front-only | re-threshold), with re-threshold
+//!   served from a per-lane suppressed-magnitude LRU.
 //! * **L2/L1 (python/, build-time only)** — the Canny front-end
 //!   (Gaussian → Sobel → NMS → double threshold) as JAX + Pallas
 //!   kernels, AOT-lowered to HLO text consumed by [`runtime`] through
@@ -41,6 +43,34 @@
 //! let det = Detector::builder().workers(4).engine(Engine::Patterns).build().unwrap();
 //! let edges = det.detect(&img, &CannyParams::default()).unwrap();
 //! println!("{} edge pixels", edges.count_edges());
+//! ```
+//!
+//! Partial pipelines via the **stage graph** ([`canny::plan`]): stop
+//! after any stage, keep its typed artifact, and resume later without
+//! recomputing the front — with uniform per-stage records
+//! ([`canny::StageRecord`]) for accounting:
+//!
+//! ```no_run
+//! use canny_par::canny::{CannyParams, StageKind};
+//! use canny_par::coordinator::Detector;
+//! use canny_par::image::synth::{Scene, generate};
+//!
+//! let det = Detector::builder().workers(2).build().unwrap();
+//! let img = generate(Scene::Shapes { seed: 7 }, 256, 256);
+//! let params = CannyParams::default();
+//! // Run the front only (Gaussian -> Sobel -> NMS) and keep the
+//! // suppressed-magnitude map.
+//! let front = det.plan().stop_after(StageKind::Nms);
+//! let mut out = det.run_plan(&front, Some(&img), &params).unwrap();
+//! let nm = out.take_suppressed().unwrap();
+//! // Re-threshold with new lo/hi without re-running the front.
+//! let re = det.plan().from_suppressed(nm);
+//! let tighter = CannyParams { lo: 0.02, hi: 0.25, ..params };
+//! let out2 = det.run_plan(&re, None, &tighter).unwrap();
+//! println!("{} edge pixels", out2.edges().unwrap().count_edges());
+//! for r in &out2.records {
+//!     println!("{}: {} ns over {} tasks", r.span_name(), r.wall_ns, r.tasks);
+//! }
 //! ```
 //!
 //! Serving a request stream (the CLI equivalent is

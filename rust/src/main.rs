@@ -18,8 +18,10 @@
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
-use canny_par::canny::Engine;
+use canny_par::canny::{Engine, StageKind};
 use canny_par::config::RunConfig;
+use canny_par::service::clock::ClockMode;
+use canny_par::service::install_sigint_drain;
 use canny_par::coordinator::{topology, BatchServer, Detector, Planner, RunReport};
 use canny_par::coordinator::batch::BatchJob;
 use canny_par::coordinator::planner::Workload;
@@ -50,7 +52,7 @@ const COMMANDS: &[&str] =
 /// Command-level flags (not config keys) each subcommand accepts.
 fn allowed_extras(cmd: &str) -> &'static [&'static str] {
     match cmd {
-        "run" => &["config", "input", "output", "scene", "size"],
+        "run" => &["config", "input", "output", "scene", "size", "stop-after", "emit"],
         "gen" => &["config", "scene", "size", "output"],
         "batch" => &["config", "count", "size", "scene"],
         "serve" => &["config", "requests", "synthetic", "calibration"],
@@ -137,7 +139,15 @@ fn run(args: Vec<String>) -> anyhow::Result<()> {
     }
 
     match cmd {
-        "run" => cmd_run(&cfg, get("input"), get("output"), get("scene"), get("size")),
+        "run" => cmd_run(
+            &cfg,
+            get("input"),
+            get("output"),
+            get("scene"),
+            get("size"),
+            get("stop-after"),
+            get("emit"),
+        ),
         "gen" => cmd_gen(&cfg, get("scene"), get("size"), get("output")),
         "batch" => cmd_batch(&cfg, get("count"), get("size"), get("scene")),
         "serve" => cmd_serve(&cfg, get("requests"), get("synthetic"), get("calibration")),
@@ -159,15 +169,22 @@ USAGE: cannyd <run|gen|batch|serve|calibrate|profile|info> [flags]
 
   run        detect edges:      --input x.pgm | --scene shapes:7 --size 512x512
                                 [--output edges.pgm]
+                                [--stop-after pad|gaussian|sobel|nms|threshold|
+                                 hysteresis]  (partial pipeline + stage records)
+                                [--emit gray|gradient|suppressed|class-map|edges]
   gen        generate an image: --scene checker:16 --size 512x512 --output x.pgm
   batch      farm throughput:   --count 16 --size 512x512 [--scene shapes]
   serve      serving tier:      --synthetic 200 | --requests trace.json
                                 (admission queue -> batcher -> detector lanes;
                                  prints a JSON SLO report; --clock virtual
                                  replays deterministically, --clock wall runs
-                                 real lane threads on monotonic time;
+                                 real lane threads on monotonic time and drains
+                                 gracefully on SIGINT ("interrupted": true);
                                  --calibration file.json|probe swaps the
-                                 virtual cost model for a measured one)
+                                 virtual cost model for a measured one;
+                                 requests may carry "kind": full | front-only
+                                 | re-threshold {lo, hi} — re-threshold hits a
+                                 per-lane suppressed-magnitude LRU)
   calibrate  probe the service-cost model on this host and print/save it
                                 [--output calib.json]
   profile    paper figures:     [--figure fig8|fig9|percore] [--sim-cpus 4|8]
@@ -178,6 +195,7 @@ Config flags (all commands): --engine serial|patterns|tiled|xla
   --artifacts DIR --tile-name tNNN --sim-cpus N --seed N --config FILE
 Serve flags: --lanes N --queue-depth N --batch-window-us N --batch-max N
   --arrival-rate HZ --slo-p99-ms F --max-pixels N --clock virtual|wall
+  --rethreshold-cache N (per-lane suppressed-map LRU entries, 0 = off)
 
 Unknown flags and subcommands are errors, not ignored.
 ";
@@ -208,15 +226,76 @@ fn load_or_generate(
     }
 }
 
+/// Map an `--emit` artifact name to the default stop stage when
+/// `--stop-after` is not given (for `gray`, the smoothed image rather
+/// than the bare padded input).
+fn emit_stage(emit: &str) -> anyhow::Result<StageKind> {
+    match emit {
+        "gray" => Ok(StageKind::Gaussian),
+        "gradient" => Ok(StageKind::Sobel),
+        "suppressed" => Ok(StageKind::Nms),
+        "class-map" => Ok(StageKind::Threshold),
+        "edges" => Ok(StageKind::Hysteresis),
+        other => anyhow::bail!(
+            "unknown artifact `{other}` (gray | gradient | suppressed | class-map | edges)"
+        ),
+    }
+}
+
+/// Is the artifact retained in the plan output at this stop? (Big
+/// pre-NMS intermediates exist only when they are the stop artifact;
+/// the suppressed map and class map survive to later stops.)
+fn emit_available(emit: &str, stop: StageKind) -> bool {
+    match emit {
+        "gray" => matches!(stop, StageKind::Pad | StageKind::Gaussian),
+        "gradient" => stop == StageKind::Sobel,
+        "suppressed" => stop >= StageKind::Nms,
+        "class-map" => stop >= StageKind::Threshold,
+        "edges" => stop == StageKind::Hysteresis,
+        _ => false,
+    }
+}
+
+/// The artifact a given stop stage yields (for `--stop-after` with
+/// `--output` but no explicit `--emit`).
+fn stop_artifact(stop: StageKind) -> &'static str {
+    match stop {
+        StageKind::Pad | StageKind::Gaussian => "gray",
+        StageKind::Sobel => "gradient",
+        StageKind::Nms => "suppressed",
+        StageKind::Threshold => "class-map",
+        StageKind::Hysteresis => "edges",
+    }
+}
+
+/// Write an f32 artifact as an 8-bit PGM, normalized to its own max
+/// (gradient magnitudes and class maps are not in [0, 1]).
+fn write_f32_pgm(path: &Path, img: &ImageF32) -> anyhow::Result<()> {
+    let max = img.data().iter().cloned().fold(0.0f32, f32::max).max(1e-9);
+    let mut scaled = ImageF32::zeros(img.width(), img.height());
+    for y in 0..img.height() {
+        for x in 0..img.width() {
+            scaled.set(y, x, img.get(y, x) / max);
+        }
+    }
+    pgm::write_pgm(path, &scaled.to_u8())?;
+    Ok(())
+}
+
 fn cmd_run(
     cfg: &RunConfig,
     input: Option<String>,
     output: Option<String>,
     scene: Option<String>,
     size: Option<String>,
+    stop_after: Option<String>,
+    emit: Option<String>,
 ) -> anyhow::Result<()> {
     let img = load_or_generate(cfg, input, scene, size)?;
     let det = Detector::from_config(cfg)?;
+    if stop_after.is_some() || emit.is_some() {
+        return cmd_run_plan(cfg, &det, &img, output, stop_after, emit);
+    }
     let out = det.detect_full(&img, &cfg.params)?;
     let report = RunReport::from_run(
         &format!("run[{}x{} {}]", img.width(), img.height(), cfg.engine.name()),
@@ -233,6 +312,90 @@ fn cmd_run(
     if let Some(path) = output {
         pgm::write_pgm(Path::new(&path), &out.edges.to_image())?;
         println!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// `cannyd run --stop-after <stage>` / `--emit <artifact>`: execute a
+/// partial [`canny_par::canny::StagePlan`], print per-stage records,
+/// and optionally write the requested artifact.
+fn cmd_run_plan(
+    cfg: &RunConfig,
+    det: &Detector,
+    img: &ImageF32,
+    output: Option<String>,
+    stop_after: Option<String>,
+    emit: Option<String>,
+) -> anyhow::Result<()> {
+    let emit_default_stop = emit.as_deref().map(emit_stage).transpose()?;
+    let stop = match stop_after.as_deref() {
+        Some(s) => StageKind::parse(s)
+            .ok_or_else(|| anyhow::anyhow!(
+                "unknown stage `{s}` (pad | gaussian | sobel | nms | threshold | hysteresis)"
+            ))?,
+        None => emit_default_stop.unwrap_or(StageKind::Hysteresis),
+    };
+    // `--output` without `--emit` writes the stop stage's own artifact
+    // (matching plain `run`, which always honors --output).
+    let emit = match (emit, &output) {
+        (None, Some(_)) => Some(stop_artifact(stop).to_string()),
+        (emit, _) => emit,
+    };
+    if let Some(emit) = emit.as_deref() {
+        if !emit_available(emit, stop) {
+            anyhow::bail!(
+                "artifact `{emit}` is not retained when stopping after `{}` \
+                 (gray: pad|gaussian, gradient: sobel, suppressed: nms+, \
+                  class-map: threshold+, edges: hysteresis)",
+                stop.name()
+            );
+        }
+    }
+    let plan = det.plan().stop_after(stop);
+    let out = det.run_plan(&plan, Some(img), &cfg.params)?;
+    println!(
+        "plan[{}x{} {} stop={}]:",
+        img.width(),
+        img.height(),
+        det.engine().name(),
+        stop.name()
+    );
+    for r in &out.records {
+        println!(
+            "  {:<10} engine={:<8} wall={:>10} cpu={:>10} tasks={}",
+            r.span_name(),
+            r.engine.name(),
+            human_ns(r.wall_ns),
+            human_ns(r.cpu_ns),
+            r.tasks
+        );
+    }
+    println!("  total      {}", human_ns(out.total_ns));
+    if let Some(emit) = emit {
+        let path = output.unwrap_or_else(|| format!("{emit}.pgm"));
+        let path = Path::new(&path);
+        // Big pre-NMS intermediates are retained only when they are the
+        // stop artifact, so emitting one requires stopping there.
+        let missing = || {
+            anyhow::anyhow!(
+                "artifact `{emit}` is not retained at stop `{}` — \
+                 add --stop-after {}",
+                stop.name(),
+                emit_stage(&emit).map(|k| k.name()).unwrap_or("?")
+            )
+        };
+        match emit.as_str() {
+            "edges" => {
+                let e = out.edges().ok_or_else(missing)?;
+                pgm::write_pgm(path, &e.to_image())?;
+            }
+            "gray" => write_f32_pgm(path, out.gray().ok_or_else(missing)?)?,
+            "gradient" => write_f32_pgm(path, out.gradient().ok_or_else(missing)?.0)?,
+            "suppressed" => write_f32_pgm(path, out.suppressed().ok_or_else(missing)?)?,
+            "class-map" => write_f32_pgm(path, out.class_map().ok_or_else(missing)?)?,
+            _ => unreachable!("validated by emit_stage"),
+        }
+        println!("wrote {}", path.display());
     }
     Ok(())
 }
@@ -310,6 +473,11 @@ fn cmd_serve(
         Some(path) => Some(Calibration::from_json_file(Path::new(path))?),
         None => None,
     };
+    if cfg.clock == ClockMode::Wall {
+        // Ctrl-C drains in-flight requests and prints a partial report
+        // with "interrupted": true.
+        opts.interrupt = Some(install_sigint_drain());
+    }
     let report = serve(&label, &trace, &opts)?;
     println!("{}", report.to_json_string());
     Ok(())

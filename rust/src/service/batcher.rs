@@ -10,12 +10,18 @@
 
 use std::collections::BTreeMap;
 
-use crate::service::request::{Request, Shape};
+use crate::service::request::{Request, RequestKind, Shape};
 
-/// A closed batch ready for dispatch; all requests share one shape.
+/// A closed batch ready for dispatch; all requests share one shape and
+/// one [`RequestKind`] discriminant (their stage sets — and service
+/// costs — must match; re-threshold thresholds may vary per request).
 #[derive(Clone, Debug)]
 pub struct FormedBatch {
     pub shape: Shape,
+    /// The kind every request in the batch shares (for re-threshold,
+    /// the first request's thresholds — only the discriminant is a
+    /// batching key).
+    pub kind: RequestKind,
     pub requests: Vec<Request>,
     /// Virtual time the batch was closed.
     pub formed_ns: u64,
@@ -43,14 +49,19 @@ struct Group {
     deadline_ns: u64,
 }
 
-/// Coalesces admitted requests into [`FormedBatch`]es, keyed by shape.
-/// All state is ordinary maps in virtual time — determinism falls out
-/// of `BTreeMap`'s sorted iteration.
+/// Coalescing key: geometry plus the request-kind discriminant
+/// ([`RequestKind::tag`]) — a re-threshold must never share a dispatch
+/// with a full detection, whose service cost it doesn't pay.
+type BatchKey = (Shape, u8);
+
+/// Coalesces admitted requests into [`FormedBatch`]es, keyed by
+/// (shape, kind). All state is ordinary maps in virtual time —
+/// determinism falls out of `BTreeMap`'s sorted iteration.
 #[derive(Clone, Debug)]
 pub struct Batcher {
     window_ns: u64,
     max_batch: usize,
-    groups: BTreeMap<Shape, Group>,
+    groups: BTreeMap<BatchKey, Group>,
     pub batches_formed: u64,
     pub requests_batched: u64,
 }
@@ -66,25 +77,26 @@ impl Batcher {
         }
     }
 
-    fn close(&mut self, shape: Shape, group: Group, now_ns: u64) -> FormedBatch {
+    fn close(&mut self, key: BatchKey, group: Group, now_ns: u64) -> FormedBatch {
         self.batches_formed += 1;
         self.requests_batched += group.requests.len() as u64;
-        FormedBatch { shape, requests: group.requests, formed_ns: now_ns }
+        let kind = group.requests.first().map(|r| r.kind).unwrap_or(RequestKind::Full);
+        FormedBatch { shape: key.0, kind, requests: group.requests, formed_ns: now_ns }
     }
 
     /// Add an admitted request at virtual time `now_ns`; returns the
     /// closed batch if this push filled one to `max_batch`.
     pub fn push(&mut self, req: Request, now_ns: u64) -> Option<FormedBatch> {
-        let shape = req.shape();
+        let key = (req.shape(), req.kind.tag());
         let deadline_ns = now_ns.saturating_add(self.window_ns);
         let group = self
             .groups
-            .entry(shape)
+            .entry(key)
             .or_insert_with(|| Group { requests: Vec::new(), deadline_ns });
         group.requests.push(req);
         if group.requests.len() >= self.max_batch {
-            let group = self.groups.remove(&shape).expect("group just inserted");
-            return Some(self.close(shape, group, now_ns));
+            let group = self.groups.remove(&key).expect("group just inserted");
+            return Some(self.close(key, group, now_ns));
         }
         None
     }
@@ -94,27 +106,26 @@ impl Batcher {
         self.groups.values().map(|g| g.deadline_ns).min()
     }
 
-    /// Close every group whose window has expired at `now_ns`, in shape
-    /// order (deterministic).
+    /// Close every group whose window has expired at `now_ns`, in
+    /// (shape, kind) order (deterministic).
     pub fn expire(&mut self, now_ns: u64) -> Vec<FormedBatch> {
-        let due: Vec<Shape> =
-            self.groups.iter().filter(|(_, g)| g.deadline_ns <= now_ns).map(|(&s, _)| s).collect();
+        let due: Vec<BatchKey> =
+            self.groups.iter().filter(|(_, g)| g.deadline_ns <= now_ns).map(|(&k, _)| k).collect();
         due.into_iter()
-            .map(|shape| {
-                let group = self.groups.remove(&shape).expect("due group exists");
-                self.close(shape, group, now_ns)
+            .map(|key| {
+                let group = self.groups.remove(&key).expect("due group exists");
+                self.close(key, group, now_ns)
             })
             .collect()
     }
 
     /// Close everything regardless of deadline (drain at shutdown).
     pub fn flush(&mut self, now_ns: u64) -> Vec<FormedBatch> {
-        let shapes: Vec<Shape> = self.groups.keys().copied().collect();
-        shapes
-            .into_iter()
-            .map(|shape| {
-                let group = self.groups.remove(&shape).expect("group exists");
-                self.close(shape, group, now_ns)
+        let keys: Vec<BatchKey> = self.groups.keys().copied().collect();
+        keys.into_iter()
+            .map(|key| {
+                let group = self.groups.remove(&key).expect("group exists");
+                self.close(key, group, now_ns)
             })
             .collect()
     }
@@ -131,7 +142,14 @@ mod tests {
     use crate::image::synth::Scene;
 
     fn req(id: u64, w: usize, h: usize) -> Request {
-        Request { id, arrival_ns: 0, scene: Scene::Gradient, width: w, height: h }
+        Request {
+            id,
+            arrival_ns: 0,
+            scene: Scene::Gradient,
+            width: w,
+            height: h,
+            kind: RequestKind::Full,
+        }
     }
 
     #[test]
@@ -156,6 +174,28 @@ mod tests {
         let batch = b.push(req(2, 64, 64), 5).unwrap();
         assert_eq!(batch.shape, Shape { width: 64, height: 64 });
         assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn kinds_do_not_mix_even_at_one_shape() {
+        let mut b = Batcher::new(1_000_000, 2);
+        let mut re = req(0, 64, 64);
+        re.kind = RequestKind::ReThreshold { lo: 0.02, hi: 0.2 };
+        assert!(b.push(re, 0).is_none());
+        // Same shape, different kind: opens a second group.
+        assert!(b.push(req(1, 64, 64), 0).is_none());
+        assert_eq!(b.pending(), 2);
+        let mut re2 = req(2, 64, 64);
+        re2.kind = RequestKind::ReThreshold { lo: 0.05, hi: 0.3 };
+        let batch = b.push(re2, 5).expect("second re-threshold fills that group");
+        assert_eq!(batch.kind.tag(), re.kind.tag());
+        assert_eq!(batch.len(), 2);
+        // Differing thresholds may share a batch — only the
+        // discriminant keys the group.
+        assert_eq!(b.pending(), 1, "the full-kind request still coalescing");
+        let rest = b.flush(10);
+        assert_eq!(rest.len(), 1);
+        assert_eq!(rest[0].kind, RequestKind::Full);
     }
 
     #[test]

@@ -1,21 +1,26 @@
 //! Service-cost calibration: fit the virtual clock's cost model from
-//! measured [`crate::canny::StageTimes`].
+//! measured per-stage [`crate::canny::StageRecord`]s.
 //!
 //! The virtual driver charges each dispatch
 //! `overhead_ns + cost_ns_per_pixel * pixels`. PR 1 shipped synthetic
 //! constants for those two numbers; this module replaces them with a
 //! model fitted to the *real* detector on the *current* host: probe a
-//! grid of shapes (each measured as the fieldwise-min of repeated runs,
-//! via [`crate::canny::CannyPipeline::probe_shape`]), then least-squares
-//! fit measured nanoseconds against pixel count. With a calibration
-//! installed, virtual-time p50/p95/p99 predictions track the wall-clock
-//! driver instead of a guess — the integration suite asserts the two
-//! agree within a documented tolerance band.
+//! grid of shapes (each stage measured as the min of repeated runs),
+//! then least-squares fit measured nanoseconds against pixel count —
+//! **end-to-end** (the full-detection cost the virtual lanes charge)
+//! and **per stage** ([`StageCost`], one linear model per stage span),
+//! so partial-pipeline request kinds (front-only, re-threshold) are
+//! charged only the stages they actually run, and batch coalescing can
+//! model fused-front amortization. With a calibration installed,
+//! virtual-time p50/p95/p99 predictions track the wall-clock driver
+//! instead of a guess — the integration suite asserts the two agree
+//! within a documented tolerance band.
 //!
 //! Calibrations serialize to JSON (schema in [`crate::service`] docs) so
 //! a probe done once can be replayed deterministically with
 //! `cannyd serve --calibration file.json`.
 
+use std::collections::BTreeMap;
 use std::path::Path;
 
 use crate::coordinator::Detector;
@@ -48,9 +53,59 @@ impl ProbePoint {
     }
 }
 
-/// A fitted per-engine service-cost model: `t(px) = overhead_ns +
-/// cost_ns_per_pixel * px`, plus the probe points it was fitted from
-/// (kept for provenance and for re-fitting offline).
+/// A per-stage linear cost model: `t(px) = overhead_ns +
+/// cost_ns_per_pixel * px` for one stage span (`"pad"`, `"gaussian"`,
+/// …, `"front"` for a fused tile front, `"hysteresis"`), with `px` the
+/// *image* pixel count.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StageCost {
+    /// Stage span name ([`crate::canny::StageRecord::span_name`]).
+    pub stage: String,
+    pub overhead_ns: u64,
+    pub cost_ns_per_pixel: f64,
+}
+
+impl StageCost {
+    pub fn service_ns(&self, pixels: usize) -> u64 {
+        self.overhead_ns
+            .saturating_add((self.cost_ns_per_pixel * pixels as f64).round() as u64)
+    }
+}
+
+/// Least-squares fit `y = a + b x` over `(x, y)` points, clamped to the
+/// physical range (`a >= 0`, `b >= 0`): a negative intercept refits
+/// through the origin, a negative slope degrades to a flat cost. A
+/// single distinct x fits through the origin (no leverage to split
+/// overhead from slope).
+fn fit_line(points: &[(f64, f64)]) -> (f64, f64) {
+    let n = points.len() as f64;
+    let (mut sx, mut sy, mut sxx, mut sxy) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    for &(x, y) in points {
+        sx += x;
+        sy += y;
+        sxx += x * x;
+        sxy += x * y;
+    }
+    let var = sxx - sx * sx / n;
+    let (mut a, mut b) = if var <= f64::EPSILON * sxx {
+        (0.0, sy / sx)
+    } else {
+        let b = (sxy - sx * sy / n) / var;
+        (sy / n - b * sx / n, b)
+    };
+    if b < 0.0 {
+        (a, b) = (sy / n, 0.0);
+    } else if a < 0.0 {
+        (a, b) = (0.0, sxy / sxx);
+    }
+    (a, b)
+}
+
+/// A fitted per-engine service-cost model: the end-to-end line
+/// `t(px) = overhead_ns + cost_ns_per_pixel * px`, per-stage lines
+/// ([`StageCost`]) for partial-pipeline request kinds, plus the probe
+/// points it was fitted from (kept for provenance and for re-fitting
+/// offline).
 #[derive(Clone, Debug)]
 pub struct Calibration {
     /// Engine the probes ran on (provenance only).
@@ -61,79 +116,119 @@ pub struct Calibration {
     pub overhead_ns: u64,
     /// Fitted per-pixel cost, ns (slope, clamped >= 0).
     pub cost_ns_per_pixel: f64,
+    /// Per-stage fits, one per stage span measured on every probe
+    /// shape (empty on pre-stage-graph calibration files).
+    pub stages: Vec<StageCost>,
     pub probes: Vec<ProbePoint>,
 }
 
 impl Calibration {
-    /// Modeled service cost for one dispatch of `pixels` total pixels.
+    /// Modeled service cost for one dispatch of `pixels` total pixels
+    /// (the full pipeline, end-to-end fit).
     pub fn service_ns(&self, pixels: usize) -> u64 {
         self.overhead_ns
             .saturating_add((self.cost_ns_per_pixel * pixels as f64).round() as u64)
     }
 
-    /// Least-squares fit `ns = a + b * pixels` over the probe points,
-    /// clamped to the physical range (`a >= 0`, `b >= 0`): a negative
-    /// intercept refits through the origin, a negative slope degrades to
-    /// a flat per-dispatch cost. A single distinct pixel count fits
-    /// through the origin (no leverage to split overhead from slope).
+    /// Modeled cost of running exactly `stage_names` on `pixels`
+    /// pixels: the sum of those stages' fitted lines. `None` when any
+    /// stage has no fit (e.g. a fused-front probe never measured
+    /// `"gaussian"` on its own) — the caller falls back to a synthetic
+    /// fraction of the end-to-end cost.
+    pub fn stage_service_ns(&self, stage_names: &[&str], pixels: usize) -> Option<u64> {
+        let mut total = 0u64;
+        for name in stage_names {
+            let c = self.stages.iter().find(|s| s.stage == *name)?;
+            total = total.saturating_add(c.service_ns(pixels));
+        }
+        Some(total)
+    }
+
+    /// Fit the end-to-end model over the probe points (clamped as
+    /// described on the module's line-fit helper: negative intercepts
+    /// refit through the origin, negative slopes degrade to a flat
+    /// cost). Per-stage fits are added by [`Calibration::probe`],
+    /// which has the records.
     pub fn fit(probes: Vec<ProbePoint>, engine: &str, workers: usize) -> Result<Calibration> {
         if probes.is_empty() {
             return Err(Error::Config("calibration: no probe points".into()));
         }
-        let n = probes.len() as f64;
-        let (mut sx, mut sy, mut sxx, mut sxy) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
-        for p in &probes {
-            let (x, y) = (p.pixels() as f64, p.ns as f64);
-            sx += x;
-            sy += y;
-            sxx += x * x;
-            sxy += x * y;
-        }
-        let var = sxx - sx * sx / n;
-        let (mut a, mut b) = if var <= f64::EPSILON * sxx {
-            (0.0, sy / sx)
-        } else {
-            let b = (sxy - sx * sy / n) / var;
-            (sy / n - b * sx / n, b)
-        };
-        if b < 0.0 {
-            (a, b) = (sy / n, 0.0);
-        } else if a < 0.0 {
-            (a, b) = (0.0, sxy / sxx);
-        }
+        let pts: Vec<(f64, f64)> =
+            probes.iter().map(|p| (p.pixels() as f64, p.ns as f64)).collect();
+        let (a, b) = fit_line(&pts);
         Ok(Calibration {
             engine: engine.to_string(),
             workers,
             overhead_ns: a.round() as u64,
             cost_ns_per_pixel: b,
+            stages: Vec::new(),
             probes,
         })
     }
 
-    /// Measure `shapes` on `det` (each the fieldwise-min of `repeats`
-    /// runs) and fit the cost model.
+    /// Measure `shapes` on `det` (each stage and the total taken as the
+    /// min over `repeats` runs) and fit the cost models — end-to-end
+    /// from the totals, per-stage from the [`crate::canny::StageRecord`]
+    /// walls. Stage fits cover only spans measured on *every* shape, so
+    /// a model is never extrapolated from one lucky sample.
     pub fn probe(det: &Detector, shapes: &[Shape], repeats: usize) -> Result<Calibration> {
         let mut probes = Vec::with_capacity(shapes.len());
+        // span name -> (pixels, min ns) per shape, in shape order.
+        let mut stage_points: BTreeMap<String, Vec<(f64, f64)>> = BTreeMap::new();
         for s in shapes {
-            let times = det.pipeline().probe_shape(s.width, s.height, repeats, det.params())?;
-            probes.push(ProbePoint { width: s.width, height: s.height, ns: times.total_ns });
+            let img = crate::canny::CannyPipeline::probe_image(s.width, s.height);
+            let mut best_total = u64::MAX;
+            let mut best_stage: BTreeMap<String, u64> = BTreeMap::new();
+            for _ in 0..repeats.max(1) {
+                let out = det.detect_full(&img, det.params())?;
+                best_total = best_total.min(out.times.total_ns);
+                for r in &out.records {
+                    let e = best_stage.entry(r.span_name().to_string()).or_insert(u64::MAX);
+                    *e = (*e).min(r.wall_ns);
+                }
+            }
+            probes.push(ProbePoint { width: s.width, height: s.height, ns: best_total });
+            for (name, ns) in best_stage {
+                stage_points.entry(name).or_default().push((s.pixels() as f64, ns as f64));
+            }
         }
-        Calibration::fit(probes, det.engine().name(), det.n_workers())
+        let mut calib = Calibration::fit(probes, det.engine().name(), det.n_workers())?;
+        calib.stages = stage_points
+            .into_iter()
+            .filter(|(_, pts)| pts.len() == shapes.len())
+            .map(|(stage, pts)| {
+                let (a, b) = fit_line(&pts);
+                StageCost { stage, overhead_ns: a.round() as u64, cost_ns_per_pixel: b }
+            })
+            .collect();
+        Ok(calib)
     }
 
     /// Serialize (schema documented in the [`crate::service`] module).
     pub fn to_json(&self) -> Json {
-        let mut m = std::collections::BTreeMap::new();
+        let mut m = BTreeMap::new();
         m.insert("format".into(), Json::Num(1.0));
         m.insert("engine".into(), Json::Str(self.engine.clone()));
         m.insert("workers".into(), Json::Num(self.workers as f64));
         m.insert("overhead_ns".into(), Json::Num(self.overhead_ns as f64));
         m.insert("cost_ns_per_pixel".into(), Json::Num(self.cost_ns_per_pixel));
+        let stages = self
+            .stages
+            .iter()
+            .map(|s| {
+                let mut sm = BTreeMap::new();
+                sm.insert("stage".into(), Json::Str(s.stage.clone()));
+                sm.insert("overhead_ns".into(), Json::Num(s.overhead_ns as f64));
+                sm.insert("cost_ns_per_pixel".into(), Json::Num(s.cost_ns_per_pixel));
+                Json::Obj(sm)
+            })
+            .collect();
+        m.insert("stages".into(), Json::Arr(stages));
         let probes = self
             .probes
             .iter()
             .map(|p| {
-                let mut pm = std::collections::BTreeMap::new();
+                let mut pm = BTreeMap::new();
                 pm.insert("width".into(), Json::Num(p.width as f64));
                 pm.insert("height".into(), Json::Num(p.height as f64));
                 pm.insert("ns".into(), Json::Num(p.ns as f64));
@@ -176,6 +271,36 @@ impl Calibration {
         };
         let overhead_ns = num("overhead_ns")? as u64;
         let cost_ns_per_pixel = num("cost_ns_per_pixel")?;
+        let mut stages = Vec::new();
+        if let Some(arr) = j.get("stages").and_then(Json::as_arr) {
+            for (k, s) in arr.iter().enumerate() {
+                let stage = s
+                    .get("stage")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| {
+                        Error::Config(format!("calibration stage {k}: missing `stage`"))
+                    })?
+                    .to_string();
+                let field = |name: &str| -> Result<f64> {
+                    let v = s.get(name).and_then(Json::as_f64).ok_or_else(|| {
+                        Error::Config(format!(
+                            "calibration stage `{stage}`: missing/invalid `{name}`"
+                        ))
+                    })?;
+                    if !(v.is_finite() && v >= 0.0) {
+                        return Err(Error::Config(format!(
+                            "calibration stage `{stage}`: `{name}` must be finite and >= 0"
+                        )));
+                    }
+                    Ok(v)
+                };
+                stages.push(StageCost {
+                    overhead_ns: field("overhead_ns")? as u64,
+                    cost_ns_per_pixel: field("cost_ns_per_pixel")?,
+                    stage,
+                });
+            }
+        }
         let mut probes = Vec::new();
         if let Some(arr) = j.get("probes").and_then(Json::as_arr) {
             for (k, p) in arr.iter().enumerate() {
@@ -196,6 +321,7 @@ impl Calibration {
             workers: j.get("workers").and_then(Json::as_usize).unwrap_or(0),
             overhead_ns,
             cost_ns_per_pixel,
+            stages,
             probes,
         })
     }
@@ -270,6 +396,14 @@ mod tests {
             workers: 3,
             overhead_ns: 120_000,
             cost_ns_per_pixel: 3.5,
+            stages: vec![
+                StageCost { stage: "front".into(), overhead_ns: 90_000, cost_ns_per_pixel: 3.0 },
+                StageCost {
+                    stage: "hysteresis".into(),
+                    overhead_ns: 10_000,
+                    cost_ns_per_pixel: 0.4,
+                },
+            ],
             probes: vec![point(96, 96, 152_256)],
         };
         let back = Calibration::from_json(&c.to_json_string()).unwrap();
@@ -277,7 +411,53 @@ mod tests {
         assert_eq!(back.workers, 3);
         assert_eq!(back.overhead_ns, 120_000);
         assert!((back.cost_ns_per_pixel - 3.5).abs() < 1e-12);
+        assert_eq!(back.stages, c.stages);
         assert_eq!(back.probes, c.probes);
+    }
+
+    #[test]
+    fn stage_service_sums_only_complete_fits() {
+        let c = Calibration {
+            engine: "patterns".into(),
+            workers: 2,
+            overhead_ns: 100_000,
+            cost_ns_per_pixel: 4.0,
+            stages: vec![
+                StageCost { stage: "threshold".into(), overhead_ns: 1_000, cost_ns_per_pixel: 1.0 },
+                StageCost {
+                    stage: "hysteresis".into(),
+                    overhead_ns: 2_000,
+                    cost_ns_per_pixel: 0.5,
+                },
+            ],
+            probes: Vec::new(),
+        };
+        assert_eq!(
+            c.stage_service_ns(&["threshold", "hysteresis"], 1_000),
+            Some(1_000 + 1_000 + 2_000 + 500)
+        );
+        // A stage with no fit voids the sum — the caller must fall back.
+        assert_eq!(c.stage_service_ns(&["gaussian", "threshold"], 1_000), None);
+        assert_eq!(c.stage_service_ns(&[], 1_000), Some(0));
+    }
+
+    #[test]
+    fn probe_fits_per_stage_models() {
+        let det = Detector::builder().workers(1).build().unwrap();
+        let shapes =
+            [Shape { width: 48, height: 32 }, Shape { width: 64, height: 64 }];
+        let c = Calibration::probe(&det, &shapes, 1).unwrap();
+        assert_eq!(c.probes.len(), 2);
+        assert!(!c.stages.is_empty(), "per-stage fits must exist");
+        // The default Patterns engine runs unfused, so every stage span
+        // gets its own fit, and the re-threshold stage set is coverable.
+        for name in ["pad", "gaussian", "sobel", "nms", "threshold", "hysteresis"] {
+            assert!(
+                c.stages.iter().any(|s| s.stage == name),
+                "missing per-stage fit for {name}"
+            );
+        }
+        assert!(c.stage_service_ns(&["threshold", "hysteresis"], 48 * 32).is_some());
     }
 
     #[test]

@@ -42,15 +42,53 @@
 //!   offsets on a monotonic clock. Latencies are measured, and the
 //!   report carries `clock: "wall"` with an otherwise identical schema.
 //!
+//! ## Request kinds (partial pipelines over the wire)
+//!
+//! Every [`request::Request`] carries a [`request::RequestKind`] — the
+//! stage-graph API ([`crate::canny::StagePlan`]) surfaced at the
+//! serving boundary:
+//!
+//! * `full` (default) — the whole pipeline, edge totals in the report;
+//! * `front-only` — Gaussian→Sobel→NMS only; warms the lane's
+//!   suppressed-magnitude LRU (capacity per lane:
+//!   `--rethreshold-cache N`, 0 disables);
+//! * `re-threshold` — re-run Threshold + Hysteresis with new `lo`/`hi`
+//!   against the cached suppressed map: a hit skips
+//!   Gaussian/Sobel/NMS entirely (the report's `stages` section counts
+//!   executed phases, and `rethreshold_cache.hits/misses` the LRU).
+//!
+//! Batches never mix kinds (their stage sets, and so their service
+//! costs, differ), and the virtual clock charges each kind only its
+//! stage set — per-stage calibration fits when installed, synthetic
+//! fractions of the full cost otherwise.
+//!
+//! ### Request JSON schema (`cannyd serve --requests trace.json`)
+//!
+//! ```json
+//! {"requests": [
+//!   {"arrival_us": 0,   "width": 128, "height": 128, "scene": "shapes:3"},
+//!   {"arrival_us": 120, "width": 128, "height": 128, "scene": "shapes:3",
+//!    "kind": "front-only"},
+//!   {"arrival_us": 250, "width": 128, "height": 128, "scene": "shapes:3",
+//!    "kind": "re-threshold", "lo": 0.03, "hi": 0.2}
+//! ]}
+//! ```
+//!
+//! `kind` defaults to `"full"`; `re-threshold` requires finite
+//! `0 <= lo <= hi`; `id` defaults to the array index and `scene` to
+//! `shapes:<id>`.
+//!
 //! ## Calibration
 //!
 //! [`calibrate::Calibration`] closes the loop between the two: it
-//! measures per-stage [`crate::canny::StageTimes`] on a probe grid of
+//! measures per-stage [`crate::canny::StageRecord`]s on a probe grid of
 //! shapes (min-of-repeats), least-squares fits
-//! `service_ns = overhead_ns + cost_ns_per_pixel * pixels`, and
-//! replaces the synthetic virtual-time constants — so virtual
-//! p50/p95/p99 predictions track wall-clock reality. Probe at startup
-//! with `cannyd serve --calibration probe`, or persist a probe with
+//! `service_ns = overhead_ns + cost_ns_per_pixel * pixels` — end-to-end
+//! *and* per stage ([`calibrate::StageCost`]) — and replaces the
+//! synthetic virtual-time constants, so virtual p50/p95/p99 predictions
+//! track wall-clock reality and partial-pipeline kinds are charged only
+//! the stages they run. Probe at startup with
+//! `cannyd serve --calibration probe`, or persist a probe with
 //! `cannyd calibrate --output calib.json` and replay it
 //! deterministically via `cannyd serve --calibration calib.json`.
 //!
@@ -63,11 +101,21 @@
 //!   "workers": 4,                  // provenance (optional)
 //!   "overhead_ns": 120000,         // required, finite, >= 0
 //!   "cost_ns_per_pixel": 3.72,     // required, finite, >= 0
+//!   "stages": [                    // optional per-stage fits
+//!     {"stage": "gaussian", "overhead_ns": 20000, "cost_ns_per_pixel": 1.1}
+//!   ],
 //!   "probes": [                    // optional provenance
 //!     {"width": 96, "height": 96, "ns": 812345}
 //!   ]
 //! }
 //! ```
+//!
+//! ## Graceful shutdown
+//!
+//! A wall-clock `cannyd serve` installs a SIGINT handler
+//! ([`server::install_sigint_drain`]): on Ctrl-C the arrival replay
+//! stops, admitted requests drain to completion, and the partial
+//! report is printed with `"interrupted": true`.
 //!
 //! Entry points: `cannyd serve --synthetic 200 --lanes 2` (or
 //! `--requests trace.json`, `--clock wall`, `--calibration …`), or
@@ -92,9 +140,9 @@ pub mod server;
 pub mod slo;
 
 pub use batcher::{Batcher, FormedBatch};
-pub use calibrate::{Calibration, ProbePoint};
+pub use calibrate::{Calibration, ProbePoint, StageCost};
 pub use clock::{ClockMode, WallClock};
 pub use queue::{AdmissionQueue, RejectReason};
-pub use request::{Request, Shape, Trace};
-pub use server::{calibrate_for, serve, ServeOptions};
+pub use request::{Request, RequestKind, Shape, Trace};
+pub use server::{calibrate_for, install_sigint_drain, serve, ServeOptions, SuppressedCache};
 pub use slo::{CostModel, LaneReport, LatencyStats, LatencySummary, ServeReport, SloStatus};

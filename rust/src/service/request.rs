@@ -25,6 +25,42 @@ impl Shape {
     }
 }
 
+/// What a request asks the pipeline to run — a [`crate::canny::StagePlan`]
+/// selector at the serving-tier boundary.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RequestKind {
+    /// The whole pipeline: image in, edge count out.
+    Full,
+    /// Run the front only (stop after NMS) and warm the lane's
+    /// suppressed-magnitude cache; no edges are produced.
+    FrontOnly,
+    /// Re-threshold the scene's cached suppressed-magnitude map with
+    /// new thresholds — hits the per-lane LRU and skips
+    /// Gaussian/Sobel/NMS entirely on a hit.
+    ReThreshold { lo: f32, hi: f32 },
+}
+
+impl RequestKind {
+    /// Report / JSON name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            RequestKind::Full => "full",
+            RequestKind::FrontOnly => "front-only",
+            RequestKind::ReThreshold { .. } => "re-threshold",
+        }
+    }
+
+    /// Batching-key discriminant: requests coalesce only within a kind
+    /// (their stage sets — and so their service costs — differ).
+    pub fn tag(&self) -> u8 {
+        match self {
+            RequestKind::Full => 0,
+            RequestKind::FrontOnly => 1,
+            RequestKind::ReThreshold { .. } => 2,
+        }
+    }
+}
+
 /// One client request, timestamped in virtual nanoseconds since serve
 /// start. Arrivals are open-loop: clients do not wait for completions,
 /// which is what makes the admission queue's backpressure meaningful.
@@ -38,6 +74,8 @@ pub struct Request {
     pub scene: Scene,
     pub width: usize,
     pub height: usize,
+    /// Which pipeline span to run (see [`RequestKind`]).
+    pub kind: RequestKind,
 }
 
 impl Request {
@@ -90,6 +128,7 @@ impl Trace {
                 scene: Scene::Shapes { seed: seed.wrapping_add(k as u64) },
                 width,
                 height,
+                kind: RequestKind::Full,
             });
         }
         Trace { requests }
@@ -100,12 +139,17 @@ impl Trace {
     /// ```json
     /// {"requests": [
     ///   {"arrival_us": 0,   "width": 128, "height": 128, "scene": "shapes:3"},
-    ///   {"arrival_us": 250, "width": 128, "height": 128}
+    ///   {"arrival_us": 120, "width": 128, "height": 128, "scene": "shapes:3",
+    ///    "kind": "front-only"},
+    ///   {"arrival_us": 250, "width": 128, "height": 128, "scene": "shapes:3",
+    ///    "kind": "re-threshold", "lo": 0.03, "hi": 0.2}
     /// ]}
     /// ```
     ///
-    /// `id` defaults to the array index, `scene` to `shapes:<id>`.
-    /// Requests are sorted by `(arrival, id)` after parsing.
+    /// `id` defaults to the array index, `scene` to `shapes:<id>`,
+    /// `kind` to `full`. A `re-threshold` request must carry finite
+    /// thresholds with `0 <= lo <= hi`. Requests are sorted by
+    /// `(arrival, id)` after parsing.
     pub fn from_json(text: &str) -> Result<Trace> {
         let j = Json::parse(text)?;
         let reqs = j
@@ -147,12 +191,34 @@ impl Trace {
                 })?,
                 None => Scene::Shapes { seed: id },
             };
+            let kind = match r.get("kind").and_then(Json::as_str) {
+                None | Some("full") => RequestKind::Full,
+                Some("front-only") => RequestKind::FrontOnly,
+                Some("re-threshold") => {
+                    let lo = field("lo")? as f32;
+                    let hi = field("hi")? as f32;
+                    if !(lo.is_finite() && hi.is_finite() && lo >= 0.0 && lo <= hi) {
+                        return Err(Error::Config(format!(
+                            "trace request {k}: re-threshold needs 0 <= lo <= hi, \
+                             got lo={lo} hi={hi}"
+                        )));
+                    }
+                    RequestKind::ReThreshold { lo, hi }
+                }
+                Some(other) => {
+                    return Err(Error::Config(format!(
+                        "trace request {k}: unknown kind `{other}` \
+                         (full | front-only | re-threshold)"
+                    )))
+                }
+            };
             requests.push(Request {
                 id,
                 arrival_ns: (arrival_us * 1e3) as u64,
                 scene,
                 width,
                 height,
+                kind,
             });
         }
         requests.sort_by_key(|r| (r.arrival_ns, r.id));
@@ -261,6 +327,54 @@ mod tests {
     }
 
     #[test]
+    fn from_json_parses_request_kinds() {
+        let t = Trace::from_json(
+            r#"{"requests": [
+                {"arrival_us": 0,  "width": 64, "height": 64, "scene": "shapes:1"},
+                {"arrival_us": 10, "width": 64, "height": 64, "scene": "shapes:1",
+                 "kind": "front-only"},
+                {"arrival_us": 20, "width": 64, "height": 64, "scene": "shapes:1",
+                 "kind": "re-threshold", "lo": 0.03, "hi": 0.2}
+            ]}"#,
+        )
+        .unwrap();
+        assert_eq!(t.requests[0].kind, RequestKind::Full);
+        assert_eq!(t.requests[1].kind, RequestKind::FrontOnly);
+        match t.requests[2].kind {
+            RequestKind::ReThreshold { lo, hi } => {
+                assert!((lo - 0.03).abs() < 1e-6 && (hi - 0.2).abs() < 1e-6);
+            }
+            other => panic!("expected re-threshold, got {other:?}"),
+        }
+        // Unknown kinds and malformed thresholds are rejected.
+        assert!(Trace::from_json(
+            r#"{"requests":[{"arrival_us":0,"width":4,"height":4,"kind":"nope"}]}"#
+        )
+        .is_err());
+        assert!(Trace::from_json(
+            r#"{"requests":[{"arrival_us":0,"width":4,"height":4,"kind":"re-threshold"}]}"#
+        )
+        .is_err());
+        assert!(Trace::from_json(
+            r#"{"requests":[{"arrival_us":0,"width":4,"height":4,
+                "kind":"re-threshold","lo":0.5,"hi":0.1}]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn kind_names_and_tags_are_distinct() {
+        let kinds =
+            [RequestKind::Full, RequestKind::FrontOnly, RequestKind::ReThreshold { lo: 0.1, hi: 0.2 }];
+        for (i, a) in kinds.iter().enumerate() {
+            for (j, b) in kinds.iter().enumerate() {
+                assert_eq!(i == j, a.tag() == b.tag());
+                assert_eq!(i == j, a.name() == b.name());
+            }
+        }
+    }
+
+    #[test]
     fn distinct_shapes_sorted_and_deduped() {
         let mk = |w, h, t| Request {
             id: t,
@@ -268,6 +382,7 @@ mod tests {
             scene: Scene::Gradient,
             width: w,
             height: h,
+            kind: RequestKind::Full,
         };
         let t = Trace {
             requests: vec![mk(96, 96, 0), mk(64, 64, 1), mk(96, 96, 2), mk(64, 64, 3)],
@@ -287,6 +402,7 @@ mod tests {
             scene: Scene::Gradient,
             width: w,
             height: h,
+            kind: RequestKind::Full,
         };
         let t = Trace { requests: vec![mk(64, 64, 0), mk(96, 96, 1), mk(96, 96, 2)] };
         assert_eq!(t.dominant_shape(), Some(Shape { width: 96, height: 96 }));

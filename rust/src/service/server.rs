@@ -15,28 +15,50 @@
 //! paced to their trace offsets, each lane is a thread draining a
 //! shared dispatch channel, and latencies are measured. With `execute`
 //! off, a wall lane occupies itself by sleeping the modeled service
-//! time instead, so scheduling studies work without compute.
+//! time instead, so scheduling studies work without compute. A wall run
+//! drains gracefully on SIGINT (see [`install_sigint_drain`]): pending
+//! arrivals are abandoned, admitted requests complete, and the report
+//! carries `"interrupted": true`.
 //!
 //! Both drivers share the clock-agnostic [`Intake`] core (admission +
 //! coalescing) and the report assembly, so the virtual mode is a true
 //! model of the wall mode — which is what makes calibration
 //! ([`crate::service::calibrate`]) meaningful.
+//!
+//! ## Request kinds and the suppressed-magnitude cache
+//!
+//! Requests carry a [`RequestKind`] selecting which pipeline span runs
+//! (a [`crate::canny::StagePlan`] at the serving boundary):
+//!
+//! * `full` — the whole pipeline (the classic path);
+//! * `front-only` — stop after NMS and warm the lane's
+//!   [`SuppressedCache`] with the suppressed-magnitude map;
+//! * `re-threshold {lo, hi}` — re-run only Threshold + Hysteresis from
+//!   the cached map. On a cache hit, Gaussian/Sobel/NMS never run —
+//!   the report's `stages` section proves it.
+//!
+//! The virtual clock charges each kind only its stage set: per-stage
+//! calibration fits when installed, synthetic fractions of the full
+//! cost otherwise (re-threshold is modeled as a cache hit; the wall
+//! driver measures reality).
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
-use crate::canny::{CannyParams, Engine};
+use crate::canny::{CannyParams, Engine, StageKind};
 use crate::config::RunConfig;
 use crate::coordinator::planner::Workload;
 use crate::coordinator::{CpuTopology, Detector, Planner};
 use crate::error::{Error, Result};
-use crate::image::synth::generate;
+use crate::image::synth::{generate, Scene};
+use crate::image::ImageF32;
 use crate::service::batcher::{Batcher, FormedBatch};
 use crate::service::calibrate::{Calibration, DEFAULT_PROBE_SHAPES, PROBE_REPEATS};
 use crate::service::clock::{ClockMode, WallClock};
 use crate::service::queue::AdmissionQueue;
-use crate::service::request::{Request, Shape, Trace};
+use crate::service::request::{Request, RequestKind, Shape, Trace};
 use crate::service::slo::{CostModel, LaneReport, LatencyStats, ServeReport};
 
 /// Virtual per-dispatch overhead (scheduling + lane wake-up), ns —
@@ -45,6 +67,24 @@ pub const DEFAULT_BATCH_OVERHEAD_NS: u64 = 100_000;
 /// Virtual per-pixel service cost, ns (≈ 250 Mpix/s per lane) — used
 /// when no [`Calibration`] is installed.
 pub const DEFAULT_COST_NS_PER_PIXEL: u64 = 4;
+
+/// Synthetic fallback: front-only per-pixel cost as a percentage of the
+/// full pipeline's (the front is most of the work; hysteresis and the
+/// final threshold are cheap). Used only when no per-stage calibration
+/// covers the kind's stage set.
+pub const SYNTH_FRONT_PCT: u64 = 85;
+/// Synthetic fallback: re-threshold (threshold + hysteresis only)
+/// per-pixel cost as a percentage of the full pipeline's.
+pub const SYNTH_RETHRESHOLD_PCT: u64 = 15;
+
+/// The stage spans a front-only request executes (per-stage
+/// calibration lookup key).
+const FRONT_STAGES: &[&str] = &["pad", "gaussian", "sobel", "nms"];
+/// The stage spans a re-threshold request executes on a cache hit.
+const RETHRESHOLD_STAGES: &[&str] = &["threshold", "hysteresis"];
+
+/// How often a wall-clock arrival sleep re-checks the interrupt flag.
+const INTERRUPT_POLL_NS: u64 = 20_000_000; // 20 ms
 
 /// Resolved serving options (see the `RunConfig` serve keys).
 #[derive(Clone, Debug)]
@@ -75,8 +115,14 @@ pub struct ServeOptions {
     pub clock: ClockMode,
     /// Worker threads per lane (0 = split host CPUs evenly over lanes).
     pub workers_per_lane: usize,
+    /// Per-lane suppressed-magnitude LRU capacity, entries
+    /// (0 = disabled: every re-threshold recomputes the front).
+    pub rethreshold_cache: usize,
     /// Base detection parameters (the planner may adapt tile/grain).
     pub params: CannyParams,
+    /// When set, a raised flag drains a wall-clock run gracefully
+    /// (see [`install_sigint_drain`]).
+    pub interrupt: Option<&'static AtomicBool>,
     /// Echoed into the report for provenance.
     pub seed: u64,
 }
@@ -96,19 +142,52 @@ impl ServeOptions {
             calibration: None,
             clock: cfg.clock,
             workers_per_lane: 0,
+            rethreshold_cache: cfg.rethreshold_cache,
             params: cfg.params,
+            interrupt: None,
             seed: cfg.seed,
         }
     }
 
-    /// Modeled service cost of one dispatch: the calibration when
-    /// installed, else the synthetic constants.
+    /// Modeled service cost of one full-pipeline dispatch: the
+    /// calibration when installed, else the synthetic constants.
     pub fn service_ns(&self, pixels: usize) -> u64 {
         match &self.calibration {
             Some(c) => c.service_ns(pixels),
             None => self
                 .batch_overhead_ns
                 .saturating_add(self.cost_ns_per_pixel.saturating_mul(pixels as u64)),
+        }
+    }
+
+    /// Modeled service cost of one dispatch of `kind`: full dispatches
+    /// use the end-to-end model; partial kinds use the per-stage
+    /// calibration fits when they cover the kind's stage set, else a
+    /// synthetic fraction of the full per-pixel cost. Re-threshold is
+    /// modeled as a cache hit (the wall driver measures misses).
+    pub fn service_ns_kind(&self, kind: RequestKind, pixels: usize) -> u64 {
+        let fraction = |pct: u64| {
+            self.batch_overhead_ns.saturating_add(
+                self.cost_ns_per_pixel
+                    .saturating_mul(pixels as u64)
+                    .saturating_mul(pct)
+                    / 100,
+            )
+        };
+        match kind {
+            RequestKind::Full => self.service_ns(pixels),
+            RequestKind::FrontOnly => match &self.calibration {
+                Some(c) => c
+                    .stage_service_ns(FRONT_STAGES, pixels)
+                    .unwrap_or_else(|| c.service_ns(pixels) * SYNTH_FRONT_PCT / 100),
+                None => fraction(SYNTH_FRONT_PCT),
+            },
+            RequestKind::ReThreshold { .. } => match &self.calibration {
+                Some(c) => c
+                    .stage_service_ns(RETHRESHOLD_STAGES, pixels)
+                    .unwrap_or_else(|| c.service_ns(pixels) * SYNTH_RETHRESHOLD_PCT / 100),
+                None => fraction(SYNTH_RETHRESHOLD_PCT),
+            },
         }
     }
 
@@ -121,6 +200,35 @@ impl ServeOptions {
             },
         }
     }
+
+    fn interrupted(&self) -> bool {
+        self.interrupt.is_some_and(|f| f.load(Ordering::SeqCst))
+    }
+}
+
+// ---- SIGINT drain -------------------------------------------------------
+
+static SIGINT_DRAIN: AtomicBool = AtomicBool::new(false);
+
+extern "C" fn sigint_handler(_: libc::c_int) {
+    SIGINT_DRAIN.store(true, Ordering::SeqCst);
+}
+
+/// Install a SIGINT handler that requests a graceful wall-clock serve
+/// drain and return the flag to pass as [`ServeOptions::interrupt`].
+/// On Ctrl-C the arrival replay stops, admitted requests complete, and
+/// [`serve`] returns a partial report with `"interrupted": true`. The
+/// flag is re-armed (cleared) on every install, so a process serving
+/// multiple runs is not instantly drained by a previous run's Ctrl-C.
+pub fn install_sigint_drain() -> &'static AtomicBool {
+    SIGINT_DRAIN.store(false, Ordering::SeqCst);
+    // SAFETY: installing a signal handler that only stores to an
+    // AtomicBool (async-signal-safe).
+    let handler = sigint_handler as extern "C" fn(libc::c_int);
+    unsafe {
+        libc::signal(libc::SIGINT, handler as libc::sighandler_t);
+    }
+    &SIGINT_DRAIN
 }
 
 /// Plan the per-lane detector: the GCP kernel layer picks engine and
@@ -171,7 +279,7 @@ pub fn calibrate_for(trace: &Trace, opts: &ServeOptions) -> Result<Calibration> 
     let shapes: Vec<Shape> = if trace.is_empty() {
         DEFAULT_PROBE_SHAPES.iter().map(|&(w, h)| Shape { width: w, height: h }).collect()
     } else {
-        let mut counts: std::collections::BTreeMap<Shape, usize> = Default::default();
+        let mut counts: BTreeMap<Shape, usize> = Default::default();
         for r in &trace.requests {
             *counts.entry(r.shape()).or_insert(0) += 1;
         }
@@ -187,6 +295,66 @@ pub fn calibrate_for(trace: &Trace, opts: &ServeOptions) -> Result<Calibration> 
         by_freq.into_iter().take(MAX_PROBE_SHAPES).map(|(s, _)| s).collect()
     };
     Calibration::probe(&det, &shapes, PROBE_REPEATS)
+}
+
+// ---- Suppressed-magnitude cache -----------------------------------------
+
+/// Per-lane LRU of suppressed-magnitude maps keyed by (scene, shape):
+/// the re-threshold fast path. Small and exact — the maps are one f32
+/// per pixel and lanes see only their own dispatches.
+pub struct SuppressedCache {
+    cap: usize,
+    /// Most-recently-used last.
+    entries: Vec<(String, ImageF32)>,
+}
+
+impl SuppressedCache {
+    pub fn new(cap: usize) -> SuppressedCache {
+        SuppressedCache { cap, entries: Vec::new() }
+    }
+
+    fn key(scene: &Scene, width: usize, height: usize) -> String {
+        format!("{scene:?}@{width}x{height}")
+    }
+
+    /// Look up a map, refreshing its recency. Returns a clone (the
+    /// plan's entry artifact takes ownership).
+    pub fn get(&mut self, scene: &Scene, width: usize, height: usize) -> Option<ImageF32> {
+        let key = Self::key(scene, width, height);
+        let i = self.entries.iter().position(|(k, _)| *k == key)?;
+        let entry = self.entries.remove(i);
+        let nm = entry.1.clone();
+        self.entries.push(entry);
+        Some(nm)
+    }
+
+    /// Insert (or refresh) a map, evicting the least-recently-used
+    /// entry past capacity. No-op with capacity 0.
+    pub fn put(&mut self, scene: &Scene, width: usize, height: usize, nm: ImageF32) {
+        if self.cap == 0 {
+            return;
+        }
+        let key = Self::key(scene, width, height);
+        self.entries.retain(|(k, _)| *k != key);
+        self.entries.push((key, nm));
+        if self.entries.len() > self.cap {
+            self.entries.remove(0);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// False when capacity is 0 — callers can skip the clone a `put`
+    /// would immediately discard.
+    pub fn is_enabled(&self) -> bool {
+        self.cap > 0
+    }
 }
 
 // ---- Clock-agnostic core ------------------------------------------------
@@ -243,6 +411,12 @@ struct LaneStats {
     last_complete_ns: u64,
     latency: LatencyStats,
     queue_wait: LatencyStats,
+    /// Completed requests per kind name.
+    kinds: BTreeMap<&'static str, u64>,
+    /// Executed pipeline phases per stage-span name (execution only).
+    stage_runs: BTreeMap<&'static str, u64>,
+    cache_hits: u64,
+    cache_misses: u64,
 }
 
 impl LaneStats {
@@ -253,17 +427,82 @@ impl LaneStats {
         self.last_complete_ns = self.last_complete_ns.max(complete_ns);
         for req in &batch.requests {
             self.requests += 1;
+            *self.kinds.entry(req.kind.name()).or_insert(0) += 1;
             self.queue_wait.record(dispatch_ns.saturating_sub(req.arrival_ns));
             self.latency.record(complete_ns.saturating_sub(req.arrival_ns));
         }
     }
 
-    /// Run the real detector over the batch (no-op without one).
-    fn execute_batch(&mut self, det: Option<&Detector>, batch: &FormedBatch) -> Result<()> {
-        if let Some(det) = det {
-            for req in &batch.requests {
-                let img = generate(req.scene, req.width, req.height);
-                self.edge_pixels += det.detect_default(&img)?.count_edges() as u64;
+    fn note_stage_runs(&mut self, records: &[crate::canny::StageRecord]) {
+        for r in records {
+            *self.stage_runs.entry(r.span_name()).or_insert(0) += 1;
+        }
+    }
+
+    /// Run the real pipeline over the batch per its request kind
+    /// (no-op without a detector).
+    fn execute_batch(
+        &mut self,
+        det: Option<&Detector>,
+        cache: &mut SuppressedCache,
+        batch: &FormedBatch,
+    ) -> Result<()> {
+        let Some(det) = det else {
+            return Ok(());
+        };
+        for req in &batch.requests {
+            match req.kind {
+                RequestKind::Full => {
+                    let img = generate(req.scene, req.width, req.height);
+                    let out = det.detect_full(&img, det.params())?;
+                    self.note_stage_runs(&out.records);
+                    self.edge_pixels += out.edges.count_edges() as u64;
+                }
+                RequestKind::FrontOnly => {
+                    let img = generate(req.scene, req.width, req.height);
+                    let plan = det.plan().stop_after(StageKind::Nms);
+                    let mut out = det.run_plan(&plan, Some(&img), det.params())?;
+                    self.note_stage_runs(&out.records);
+                    let nm = out.take_suppressed().ok_or_else(|| {
+                        Error::Scheduler("front-only plan yielded no suppressed map".into())
+                    })?;
+                    cache.put(&req.scene, req.width, req.height, nm);
+                }
+                RequestKind::ReThreshold { lo, hi } => {
+                    let params = CannyParams { lo, hi, ..*det.params() };
+                    let nm = match cache.get(&req.scene, req.width, req.height) {
+                        Some(nm) => {
+                            self.cache_hits += 1;
+                            nm
+                        }
+                        None => {
+                            // Miss: compute the front once, cache it,
+                            // then resume — the next re-threshold of
+                            // this scene hits.
+                            self.cache_misses += 1;
+                            let img = generate(req.scene, req.width, req.height);
+                            let plan = det.plan().stop_after(StageKind::Nms);
+                            let mut out = det.run_plan(&plan, Some(&img), det.params())?;
+                            self.note_stage_runs(&out.records);
+                            let nm = out.take_suppressed().ok_or_else(|| {
+                                Error::Scheduler(
+                                    "front-only plan yielded no suppressed map".into(),
+                                )
+                            })?;
+                            if cache.is_enabled() {
+                                cache.put(&req.scene, req.width, req.height, nm.clone());
+                            }
+                            nm
+                        }
+                    };
+                    let plan = det.plan().from_suppressed(nm);
+                    let out = det.run_plan(&plan, None, &params)?;
+                    self.note_stage_runs(&out.records);
+                    let edges = out.edges().ok_or_else(|| {
+                        Error::Scheduler("re-threshold plan yielded no edges".into())
+                    })?;
+                    self.edge_pixels += edges.count_edges() as u64;
+                }
             }
         }
         Ok(())
@@ -276,6 +515,7 @@ fn build_report(
     opts: &ServeOptions,
     plan: (Engine, usize),
     offered: u64,
+    interrupted: bool,
     intake: &Intake,
     lanes: Vec<LaneStats>,
 ) -> ServeReport {
@@ -284,12 +524,23 @@ fn build_report(
     let mut completed = 0u64;
     let mut makespan_ns = 0u64;
     let mut edge_pixels = 0u64;
+    let mut kinds: BTreeMap<String, u64> = BTreeMap::new();
+    let mut stage_runs: BTreeMap<String, u64> = BTreeMap::new();
+    let (mut cache_hits, mut cache_misses) = (0u64, 0u64);
     for l in &lanes {
         total_latency.merge(&l.latency);
         queue_wait.merge(&l.queue_wait);
         completed += l.requests;
         makespan_ns = makespan_ns.max(l.last_complete_ns);
         edge_pixels += l.edge_pixels;
+        for (&k, &v) in &l.kinds {
+            *kinds.entry(k.to_string()).or_insert(0) += v;
+        }
+        for (&k, &v) in &l.stage_runs {
+            *stage_runs.entry(k.to_string()).or_insert(0) += v;
+        }
+        cache_hits += l.cache_hits;
+        cache_misses += l.cache_misses;
     }
     let lane_reports = lanes
         .iter()
@@ -308,6 +559,7 @@ fn build_report(
         clock: opts.clock.name().to_string(),
         engine: plan.0.name().to_string(),
         workers_per_lane: plan.1,
+        interrupted,
         offered,
         admitted: intake.queue.admitted,
         rejected_full: intake.queue.rejected_full,
@@ -326,6 +578,10 @@ fn build_report(
         lanes: lane_reports,
         slo_target_p99_ns: opts.slo_p99_ns,
         cost_model: opts.cost_model(),
+        kinds,
+        stage_runs,
+        cache_hits,
+        cache_misses,
     }
 }
 
@@ -352,6 +608,7 @@ fn serve_virtual(label: &str, trace: &Trace, opts: &ServeOptions) -> Result<Serv
     let (engine, workers_per_lane, params) = plan_lanes(trace, opts);
     struct VirtualLane {
         det: Option<Detector>,
+        cache: SuppressedCache,
         busy_until_ns: u64,
         stats: LaneStats,
     }
@@ -359,6 +616,7 @@ fn serve_virtual(label: &str, trace: &Trace, opts: &ServeOptions) -> Result<Serv
     for _ in 0..opts.lanes {
         lanes.push(VirtualLane {
             det: build_lane_detector(engine, workers_per_lane, params, opts.execute)?,
+            cache: SuppressedCache::new(opts.rethreshold_cache),
             busy_until_ns: 0,
             stats: LaneStats::default(),
         });
@@ -377,13 +635,13 @@ fn serve_virtual(label: &str, trace: &Trace, opts: &ServeOptions) -> Result<Serv
                 break;
             };
             let batch = ready.pop_front().expect("checked non-empty");
-            let service_ns = opts.service_ns(batch.pixels());
+            let service_ns = opts.service_ns_kind(batch.kind, batch.pixels());
             let complete_ns = now + service_ns;
             intake.release(batch.len());
             let lane = &mut lanes[idx];
             lane.busy_until_ns = complete_ns;
             lane.stats.record_batch(&batch, now, complete_ns);
-            lane.stats.execute_batch(lane.det.as_ref(), &batch)?;
+            lane.stats.execute_batch(lane.det.as_ref(), &mut lane.cache, &batch)?;
         }
 
         // Next event: arrival, batch-window deadline, or (if work is
@@ -422,7 +680,15 @@ fn serve_virtual(label: &str, trace: &Trace, opts: &ServeOptions) -> Result<Serv
     debug_assert_eq!(intake.queue.occupancy(), 0);
 
     let stats = lanes.into_iter().map(|l| l.stats).collect();
-    Ok(build_report(label, opts, (engine, workers_per_lane), trace.len() as u64, &intake, stats))
+    Ok(build_report(
+        label,
+        opts,
+        (engine, workers_per_lane),
+        trace.len() as u64,
+        false,
+        &intake,
+        stats,
+    ))
 }
 
 // ---- Wall driver --------------------------------------------------------
@@ -449,6 +715,7 @@ fn wall_lane(
     clock: WallClock,
 ) -> Result<LaneStats> {
     let mut stats = LaneStats::default();
+    let mut cache = SuppressedCache::new(opts.rethreshold_cache);
     loop {
         let batch = {
             let mut d = shared.dispatch.lock().expect("dispatch lock");
@@ -468,19 +735,24 @@ fn wall_lane(
         shared.intake.lock().expect("intake lock").release(batch.len());
         let dispatch_ns = clock.now_ns();
         if opts.execute {
-            stats.execute_batch(det.as_ref(), &batch)?;
+            stats.execute_batch(det.as_ref(), &mut cache, &batch)?;
         } else {
             // Scheduling-only runs still occupy the lane for the
             // modeled service time so wall studies work without
             // compute.
-            std::thread::sleep(Duration::from_nanos(opts.service_ns(batch.pixels())));
+            std::thread::sleep(Duration::from_nanos(
+                opts.service_ns_kind(batch.kind, batch.pixels()),
+            ));
         }
         stats.record_batch(&batch, dispatch_ns, clock.now_ns());
     }
 }
 
 /// Real-time replay: arrivals paced to their trace offsets, lanes as
-/// actual worker threads draining a shared dispatch channel.
+/// actual worker threads draining a shared dispatch channel. When
+/// [`ServeOptions::interrupt`] is raised mid-replay the remaining
+/// arrivals are abandoned, open batch windows are flushed so admitted
+/// requests still complete, and the report is marked interrupted.
 fn serve_wall(label: &str, trace: &Trace, opts: &ServeOptions) -> Result<ServeReport> {
     let (engine, workers_per_lane, params) = plan_lanes(trace, opts);
     // Build detectors before starting the clock so pool/planner setup
@@ -507,7 +779,12 @@ fn serve_wall(label: &str, trace: &Trace, opts: &ServeOptions) -> Result<ServeRe
     // or batch-window deadline), then run the same expire-then-admit
     // step the virtual driver runs.
     let mut next = 0usize;
+    let mut interrupted = false;
     loop {
+        if opts.interrupted() {
+            interrupted = true;
+            break;
+        }
         let deadline = shared.intake.lock().expect("intake lock").next_deadline();
         let mut t = u64::MAX;
         if next < trace.requests.len() {
@@ -519,7 +796,26 @@ fn serve_wall(label: &str, trace: &Trace, opts: &ServeOptions) -> Result<ServeRe
         if t == u64::MAX {
             break;
         }
-        clock.sleep_until(t);
+        if opts.interrupt.is_none() {
+            clock.sleep_until(t);
+        } else {
+            // Sleep in short slices so a raised interrupt flag is
+            // noticed promptly even far from the next event.
+            loop {
+                if opts.interrupted() {
+                    interrupted = true;
+                    break;
+                }
+                let now = clock.now_ns();
+                if now >= t {
+                    break;
+                }
+                std::thread::sleep(Duration::from_nanos((t - now).min(INTERRUPT_POLL_NS)));
+            }
+            if interrupted {
+                break;
+            }
+        }
         let now = clock.now_ns();
         let mut formed = Vec::new();
         {
@@ -539,6 +835,21 @@ fn serve_wall(label: &str, trace: &Trace, opts: &ServeOptions) -> Result<ServeRe
         if !formed.is_empty() {
             let mut d = shared.dispatch.lock().expect("dispatch lock");
             for b in formed {
+                d.ready.push_back(b);
+                shared.cv.notify_one();
+            }
+        }
+    }
+    if interrupted {
+        // Drain: close every open batch window so admitted requests
+        // complete instead of vanishing with the replay.
+        let flushed = {
+            let mut intake = shared.intake.lock().expect("intake lock");
+            intake.batcher.flush(clock.now_ns())
+        };
+        if !flushed.is_empty() {
+            let mut d = shared.dispatch.lock().expect("dispatch lock");
+            for b in flushed {
                 d.ready.push_back(b);
                 shared.cv.notify_one();
             }
@@ -573,7 +884,17 @@ fn serve_wall(label: &str, trace: &Trace, opts: &ServeOptions) -> Result<ServeRe
     let intake = shared.intake.lock().expect("intake lock");
     debug_assert_eq!(intake.batcher.pending(), 0);
     debug_assert_eq!(intake.queue.occupancy(), 0);
-    Ok(build_report(label, opts, (engine, workers_per_lane), trace.len() as u64, &intake, stats))
+    // `offered` counts arrivals that reached an admission decision —
+    // equal to the trace length unless the replay was interrupted.
+    Ok(build_report(
+        label,
+        opts,
+        (engine, workers_per_lane),
+        next as u64,
+        interrupted,
+        &intake,
+        stats,
+    ))
 }
 
 #[cfg(test)]
@@ -598,6 +919,8 @@ mod tests {
         assert!(report.batches_formed > 0);
         assert!(report.queue_high_water >= 1);
         assert_eq!(report.clock, "virtual");
+        assert!(!report.interrupted);
+        assert_eq!(report.kinds.get("full"), Some(&report.completed));
     }
 
     #[test]
@@ -668,6 +991,7 @@ mod tests {
             workers: 1,
             overhead_ns: 7_000,
             cost_ns_per_pixel: 2.0,
+            stages: Vec::new(),
             probes: Vec::new(),
         });
         assert_eq!(o.service_ns(1_000), 9_000);
@@ -677,9 +1001,10 @@ mod tests {
             requests: vec![Request {
                 id: 0,
                 arrival_ns: 0,
-                scene: crate::image::synth::Scene::Gradient,
+                scene: Scene::Gradient,
                 width: 32,
                 height: 32,
+                kind: RequestKind::Full,
             }],
         };
         let report = serve("calib", &trace, &o).unwrap();
@@ -689,6 +1014,65 @@ mod tests {
             j.get("calibration").unwrap().get("source").unwrap().as_str(),
             Some("measured")
         );
+    }
+
+    #[test]
+    fn kind_costs_scale_with_their_stage_sets() {
+        let o = opts();
+        let px = 10_000usize;
+        let full = o.service_ns_kind(RequestKind::Full, px);
+        let front = o.service_ns_kind(RequestKind::FrontOnly, px);
+        let re = o.service_ns_kind(RequestKind::ReThreshold { lo: 0.1, hi: 0.2 }, px);
+        assert!(re < front && front < full, "re {re} front {front} full {full}");
+        assert_eq!(full, o.service_ns(px));
+
+        // Per-stage calibration beats the synthetic fractions.
+        let mut c = opts();
+        c.calibration = Some(Calibration {
+            engine: "patterns".into(),
+            workers: 1,
+            overhead_ns: 10_000,
+            cost_ns_per_pixel: 4.0,
+            stages: ["pad", "gaussian", "sobel", "nms", "threshold", "hysteresis"]
+                .iter()
+                .map(|s| crate::service::calibrate::StageCost {
+                    stage: s.to_string(),
+                    overhead_ns: 1_000,
+                    cost_ns_per_pixel: 0.5,
+                })
+                .collect(),
+            probes: Vec::new(),
+        });
+        assert_eq!(
+            c.service_ns_kind(RequestKind::FrontOnly, px),
+            4 * (1_000 + px as u64 / 2)
+        );
+        assert_eq!(
+            c.service_ns_kind(RequestKind::ReThreshold { lo: 0.1, hi: 0.2 }, px),
+            2 * (1_000 + px as u64 / 2)
+        );
+    }
+
+    #[test]
+    fn suppressed_cache_lru_evicts_oldest() {
+        let mut c = SuppressedCache::new(2);
+        let a = Scene::Shapes { seed: 1 };
+        let b = Scene::Shapes { seed: 2 };
+        let d = Scene::Shapes { seed: 3 };
+        c.put(&a, 8, 8, ImageF32::zeros(8, 8));
+        c.put(&b, 8, 8, ImageF32::zeros(8, 8));
+        assert!(c.get(&a, 8, 8).is_some(), "a refreshed");
+        c.put(&d, 8, 8, ImageF32::zeros(8, 8));
+        assert_eq!(c.len(), 2);
+        assert!(c.get(&b, 8, 8).is_none(), "b was LRU and evicted");
+        assert!(c.get(&a, 8, 8).is_some());
+        assert!(c.get(&d, 8, 8).is_some());
+        // Shape is part of the key.
+        assert!(c.get(&a, 4, 4).is_none());
+        // Capacity 0 disables the cache entirely.
+        let mut off = SuppressedCache::new(0);
+        off.put(&a, 8, 8, ImageF32::zeros(8, 8));
+        assert!(off.is_empty());
     }
 
     #[test]
@@ -706,6 +1090,7 @@ mod tests {
         assert_eq!(report.offered, 30);
         assert_eq!(report.offered, report.completed + report.rejected());
         assert!(report.makespan_ns > 0);
+        assert!(!report.interrupted);
         // Same JSON schema as the virtual report.
         let virt = serve("virt", &trace, &opts()).unwrap();
         let (a, b) = (report.to_json(), virt.to_json());

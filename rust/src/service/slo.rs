@@ -138,6 +138,7 @@ impl CostModel {
                 m.insert("overhead_ns".into(), Json::Num(c.overhead_ns as f64));
                 m.insert("cost_ns_per_pixel".into(), Json::Num(c.cost_ns_per_pixel));
                 m.insert("probes".into(), Json::Num(c.probes.len() as f64));
+                m.insert("stages".into(), Json::Num(c.stages.len() as f64));
             }
         }
         Json::Obj(m)
@@ -158,6 +159,10 @@ pub struct ServeReport {
     /// Engine the planner chose for the lanes.
     pub engine: String,
     pub workers_per_lane: usize,
+    /// True when a wall-clock run was drained early by SIGINT: arrivals
+    /// after the interrupt were never offered, admitted requests were
+    /// completed, and every number below describes the partial run.
+    pub interrupted: bool,
     pub offered: u64,
     pub admitted: u64,
     pub rejected_full: u64,
@@ -185,6 +190,18 @@ pub struct ServeReport {
     pub slo_target_p99_ns: u64,
     /// The service-cost model in effect (see [`CostModel`]).
     pub cost_model: CostModel,
+    /// Completed requests per [`RequestKind`](crate::service::RequestKind)
+    /// name.
+    pub kinds: BTreeMap<String, u64>,
+    /// Executed pipeline phases per stage-span name, summed over lanes
+    /// (empty when execution is off) — the proof of which stages ran:
+    /// a re-threshold serving path must grow `threshold`/`hysteresis`
+    /// without growing `gaussian`/`sobel`/`nms`.
+    pub stage_runs: BTreeMap<String, u64>,
+    /// Per-lane suppressed-magnitude LRU hit/miss totals (re-threshold
+    /// requests only).
+    pub cache_hits: u64,
+    pub cache_misses: u64,
 }
 
 impl ServeReport {
@@ -239,6 +256,7 @@ impl ServeReport {
         m.insert("clock".into(), Json::Str(self.clock.clone()));
         m.insert("engine".into(), Json::Str(self.engine.clone()));
         m.insert("workers_per_lane".into(), Json::Num(self.workers_per_lane as f64));
+        m.insert("interrupted".into(), Json::Bool(self.interrupted));
         m.insert("offered".into(), num(self.offered));
         m.insert("admitted".into(), num(self.admitted));
         m.insert("rejected".into(), num(self.rejected()));
@@ -262,6 +280,19 @@ impl ServeReport {
         batch.insert("requests".into(), num(self.requests_batched));
         batch.insert("mean_fill".into(), Json::Num(self.mean_batch_fill()));
         m.insert("batch".into(), Json::Obj(batch));
+
+        m.insert(
+            "kinds".into(),
+            Json::Obj(self.kinds.iter().map(|(k, &v)| (k.clone(), num(v))).collect()),
+        );
+        m.insert(
+            "stages".into(),
+            Json::Obj(self.stage_runs.iter().map(|(k, &v)| (k.clone(), num(v))).collect()),
+        );
+        let mut cache = BTreeMap::new();
+        cache.insert("hits".into(), num(self.cache_hits));
+        cache.insert("misses".into(), num(self.cache_misses));
+        m.insert("rethreshold_cache".into(), Json::Obj(cache));
 
         m.insert("latency_ns".into(), self.latency.to_json());
         m.insert("queue_wait_ns".into(), self.queue_wait.to_json());
@@ -377,6 +408,7 @@ mod tests {
             clock: "virtual".into(),
             engine: "patterns".into(),
             workers_per_lane: 2,
+            interrupted: false,
             offered: 10,
             admitted: 8,
             rejected_full: 2,
@@ -401,6 +433,10 @@ mod tests {
             }],
             slo_target_p99_ns: 50_000_000,
             cost_model: CostModel::Synthetic { overhead_ns: 100_000, cost_ns_per_pixel: 4 },
+            kinds: [("full".to_string(), 8u64)].into_iter().collect(),
+            stage_runs: BTreeMap::new(),
+            cache_hits: 0,
+            cache_misses: 0,
         }
     }
 
@@ -428,6 +464,13 @@ mod tests {
     #[test]
     fn report_json_has_required_fields() {
         let j = report().to_json();
+        assert_eq!(j.get("interrupted"), Some(&Json::Bool(false)));
+        assert_eq!(j.get("kinds").unwrap().get("full").unwrap().as_usize(), Some(8));
+        assert_eq!(
+            j.get("rethreshold_cache").unwrap().get("hits").unwrap().as_usize(),
+            Some(0)
+        );
+        assert!(j.get("stages").unwrap().as_obj().unwrap().is_empty());
         assert_eq!(j.get("queue").unwrap().get("high_water").unwrap().as_usize(), Some(4));
         assert_eq!(j.get("batch").unwrap().get("formed").unwrap().as_usize(), Some(2));
         assert_eq!(j.get("rejected").unwrap().as_usize(), Some(2));
@@ -451,6 +494,7 @@ mod tests {
             workers: 4,
             overhead_ns: 88_000,
             cost_ns_per_pixel: 3.25,
+            stages: Vec::new(),
             probes: Vec::new(),
         });
         let c = r.to_json();

@@ -3,9 +3,15 @@
 //! wall-clock driver, and StageTimes-calibrated virtual predictions,
 //! end to end through `service::serve`.
 
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use canny_par::canny::CannyParams;
 use canny_par::config::RunConfig;
-use canny_par::image::synth::Scene;
-use canny_par::service::{calibrate_for, serve, ClockMode, Request, ServeOptions, Trace};
+use canny_par::coordinator::Detector;
+use canny_par::image::synth::{generate, Scene};
+use canny_par::service::{
+    calibrate_for, serve, ClockMode, Request, RequestKind, ServeOptions, Trace,
+};
 use canny_par::util::json::Json;
 
 /// Default options with real execution off — pure scheduling, fast.
@@ -24,6 +30,7 @@ fn burst(n: usize, w: usize, h: usize, gap_ns: u64) -> Trace {
                 scene: Scene::Checker { cell: 8 },
                 width: w,
                 height: h,
+                kind: RequestKind::Full,
             })
             .collect(),
     }
@@ -236,6 +243,144 @@ fn calibrated_virtual_p50_tracks_wall_clock_p50() {
         "calibrated virtual p50 {vp50} ns vs wall p50 {wp50} ns: ratio {ratio:.3} \
          outside the documented 4x tolerance band"
     );
+}
+
+/// Acceptance: a re-threshold request served after a front-only warmer
+/// completes without re-running Gaussian/Sobel/NMS (stage records),
+/// and its edge counts equal full detections at those thresholds
+/// (cache-equivalence).
+#[test]
+fn rethreshold_hits_the_cache_and_matches_full_detection() {
+    let scene = Scene::Shapes { seed: 21 };
+    let (w, h) = (64usize, 64);
+    let mk = |id: u64, arrival_us: u64, kind: RequestKind| Request {
+        id,
+        arrival_ns: arrival_us * 1_000,
+        scene,
+        width: w,
+        height: h,
+        kind,
+    };
+    let trace = Trace {
+        requests: vec![
+            mk(0, 0, RequestKind::FrontOnly),
+            mk(1, 200, RequestKind::ReThreshold { lo: 0.05, hi: 0.15 }),
+            mk(2, 400, RequestKind::ReThreshold { lo: 0.02, hi: 0.30 }),
+        ],
+    };
+    let mut o = sched_opts();
+    o.execute = true;
+    o.lanes = 1; // one lane => one cache => deterministic hit pattern
+    o.max_batch = 1;
+    o.batch_window_ns = 0;
+    o.workers_per_lane = 2;
+    let report = serve("rethresh", &trace, &o).unwrap();
+
+    assert_eq!(report.completed, 3);
+    assert_eq!(report.kinds.get("front-only"), Some(&1));
+    assert_eq!(report.kinds.get("re-threshold"), Some(&2));
+    // Both re-thresholds hit the map the front-only request cached.
+    assert_eq!(report.cache_hits, 2, "stages: {:?}", report.stage_runs);
+    assert_eq!(report.cache_misses, 0);
+    // The front ran exactly once (the warmer); re-thresholds ran only
+    // threshold + hysteresis. Lane engines are planner-chosen, so the
+    // front shows up as per-stage spans (patterns) or one fused span
+    // (tiled) — either way, exactly once.
+    let front_runs = report.stage_runs.get("gaussian").copied().unwrap_or(0)
+        + report.stage_runs.get("front").copied().unwrap_or(0);
+    assert_eq!(front_runs, 1, "stages: {:?}", report.stage_runs);
+    assert_eq!(report.stage_runs.get("threshold"), Some(&2));
+    assert_eq!(report.stage_runs.get("hysteresis"), Some(&2));
+
+    // Cache-equivalence: summed edge pixels equal two full detections
+    // at the requested thresholds (any engine — determinism invariant).
+    let img = generate(scene, w, h);
+    let det = Detector::builder().workers(2).build().unwrap();
+    let expect: u64 = [(0.05, 0.15), (0.02, 0.30)]
+        .iter()
+        .map(|&(lo, hi)| {
+            det.detect(&img, &CannyParams { lo, hi, ..CannyParams::default() })
+                .unwrap()
+                .count_edges() as u64
+        })
+        .sum();
+    assert_eq!(report.edge_pixels, expect);
+}
+
+#[test]
+fn rethreshold_with_cache_disabled_recomputes_the_front() {
+    let scene = Scene::Shapes { seed: 9 };
+    let mk = |id: u64, arrival_us: u64, kind: RequestKind| Request {
+        id,
+        arrival_ns: arrival_us * 1_000,
+        scene,
+        width: 48,
+        height: 48,
+        kind,
+    };
+    let trace = Trace {
+        requests: vec![
+            mk(0, 0, RequestKind::ReThreshold { lo: 0.05, hi: 0.15 }),
+            mk(1, 200, RequestKind::ReThreshold { lo: 0.05, hi: 0.15 }),
+        ],
+    };
+    let mut o = sched_opts();
+    o.execute = true;
+    o.lanes = 1;
+    o.max_batch = 1;
+    o.batch_window_ns = 0;
+    o.workers_per_lane = 1;
+    o.rethreshold_cache = 0; // disabled: every re-threshold misses
+    let report = serve("nocache", &trace, &o).unwrap();
+    assert_eq!(report.cache_hits, 0);
+    assert_eq!(report.cache_misses, 2);
+    let front_runs = report.stage_runs.get("gaussian").copied().unwrap_or(0)
+        + report.stage_runs.get("front").copied().unwrap_or(0);
+    assert_eq!(front_runs, 2, "stages: {:?}", report.stage_runs);
+}
+
+/// Satellite: SIGINT (modeled by the interrupt flag the handler sets)
+/// drains a wall-clock run gracefully — admitted requests complete,
+/// pending arrivals are abandoned, and the report says so.
+#[test]
+fn wall_interrupt_drains_and_reports_partial() {
+    static FLAG: AtomicBool = AtomicBool::new(false);
+    let mut o = sched_opts();
+    o.clock = ClockMode::Wall;
+    o.interrupt = Some(&FLAG);
+    o.lanes = 1;
+    o.batch_overhead_ns = 1_000;
+    o.cost_ns_per_pixel = 0;
+    // 5 immediate arrivals, then 5 ten seconds out: the interrupt must
+    // cut the replay long before the second group.
+    let mut trace = burst(5, 32, 32, 10_000);
+    for k in 0..5u64 {
+        trace.requests.push(Request {
+            id: 5 + k,
+            arrival_ns: 10_000_000_000 + k,
+            scene: Scene::Gradient,
+            width: 32,
+            height: 32,
+            kind: RequestKind::Full,
+        });
+    }
+    let raiser = std::thread::spawn(|| {
+        std::thread::sleep(std::time::Duration::from_millis(80));
+        FLAG.store(true, Ordering::SeqCst);
+    });
+    let start = std::time::Instant::now();
+    let report = serve("interrupt", &trace, &o).unwrap();
+    raiser.join().unwrap();
+    assert!(
+        start.elapsed() < std::time::Duration::from_secs(5),
+        "interrupt did not cut the 10 s replay short"
+    );
+    assert!(report.interrupted);
+    assert_eq!(report.offered, 5, "only the first burst reached admission");
+    assert_eq!(report.offered, report.completed + report.rejected());
+    assert_eq!(report.completed, 5, "admitted requests drained to completion");
+    let json = report.to_json_string();
+    assert!(json.contains("\"interrupted\":true"), "{json}");
 }
 
 #[test]

@@ -2,7 +2,10 @@
 //! invariance, hysteresis monotonicity — over random images, sizes,
 //! thresholds, tiles and worker counts.
 
-use canny_par::canny::{hysteresis, CannyParams, CannyPipeline};
+use canny_par::canny::{
+    consts, gaussian, hysteresis, nms, sobel, threshold, CannyParams, CannyPipeline, StageKind,
+    StagePlan,
+};
 use canny_par::image::ImageF32;
 use canny_par::scheduler::Pool;
 use canny_par::util::Prng;
@@ -147,6 +150,86 @@ fn prop_hysteresis_monotone_in_weak_set() {
                 !(before.data()[i] != 0 && after.data()[i] == 0),
                 "case {case}: edge lost at {i} after growing weak set"
             );
+        }
+    }
+}
+
+/// Satellite: every stop-stage artifact equals the corresponding
+/// prefix of `front_serial` — across the serial, patterns and tiled
+/// engines (the tiled engine runs partial prefixes unfused; the
+/// property pins that path to the same values).
+#[test]
+fn prop_partial_plans_match_front_serial_prefix() {
+    let mut rng = Prng::new(0x51A6);
+    let pool = Pool::new(3).unwrap();
+    for case in 0..8 {
+        let w = 24 + rng.next_below(120);
+        let h = 24 + rng.next_below(90);
+        let img = random_image(&mut rng, w, h);
+        let params = random_params(&mut rng);
+
+        // The reference prefix, stage by stage (front_serial's body).
+        let padded = img.pad_replicate(consts::HALO);
+        let g = gaussian::gaussian(&padded);
+        let (mag, dir) = sobel::sobel(&g);
+        let nm = nms::nms(&mag, &dir);
+        let cls = threshold::threshold(&nm, params.lo, params.hi);
+
+        for pipe in
+            [CannyPipeline::serial(), CannyPipeline::patterns(&pool), CannyPipeline::tiled(&pool)]
+        {
+            let engine = pipe.engine.name();
+            let run = |stop: StageKind| {
+                pipe.execute(&StagePlan::new().stop_after(stop), Some(&img), &params)
+                    .unwrap_or_else(|e| panic!("case {case} {engine} stop {stop:?}: {e}"))
+            };
+            let ctx = |stop: &str| format!("case {case}: {engine} {w}x{h} stop {stop}");
+            assert_eq!(run(StageKind::Pad).gray().unwrap(), &padded, "{}", ctx("pad"));
+            assert_eq!(run(StageKind::Gaussian).gray().unwrap(), &g, "{}", ctx("gaussian"));
+            let out = run(StageKind::Sobel);
+            let (m, d) = out.gradient().unwrap();
+            assert_eq!(m, &mag, "{}", ctx("sobel mag"));
+            assert_eq!(d, &dir, "{}", ctx("sobel dir"));
+            assert_eq!(run(StageKind::Nms).suppressed().unwrap(), &nm, "{}", ctx("nms"));
+            let out = run(StageKind::Threshold);
+            assert_eq!(out.class_map().unwrap(), &cls, "{}", ctx("threshold"));
+            assert!(!out.ran(StageKind::Hysteresis), "{}", ctx("threshold overran"));
+        }
+    }
+}
+
+/// Satellite: resuming from a cached suppressed-magnitude map with any
+/// thresholds equals running the whole pipeline with those thresholds.
+#[test]
+fn prop_rethreshold_from_cached_map_equals_full_run() {
+    let mut rng = Prng::new(0xD1CE);
+    let pool = Pool::new(2).unwrap();
+    for case in 0..8 {
+        let w = 24 + rng.next_below(100);
+        let h = 24 + rng.next_below(80);
+        let img = random_image(&mut rng, w, h);
+        let params = random_params(&mut rng);
+        let pipe = CannyPipeline::patterns(&pool);
+
+        let front = StagePlan::new().stop_after(StageKind::Nms);
+        let mut front_out = pipe.execute(&front, Some(&img), &params).unwrap();
+        let nm = front_out.take_suppressed().unwrap();
+
+        // New, independent thresholds.
+        let lo = 0.01 + 0.1 * rng.next_f32();
+        let re_params = CannyParams { lo, hi: lo + 0.01 + 0.25 * rng.next_f32(), ..params };
+        let resume = StagePlan::new().from_suppressed(nm);
+        let resumed = pipe.execute(&resume, None, &re_params).unwrap();
+        let full = CannyPipeline::serial().detect(&img, &re_params).unwrap();
+        assert_eq!(
+            full.edges.diff_count(resumed.edges().unwrap()),
+            0,
+            "case {case}: {w}x{h} lo={} hi={}",
+            re_params.lo,
+            re_params.hi
+        );
+        for k in [StageKind::Pad, StageKind::Gaussian, StageKind::Sobel, StageKind::Nms] {
+            assert!(!resumed.ran(k), "case {case}: resume re-ran {:?}", k);
         }
     }
 }
