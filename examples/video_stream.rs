@@ -1,50 +1,55 @@
-//! Real-time video edge detection through the pipeline pattern
-//! (generate → Canny front → hysteresis+collect), the workload class
-//! the paper's FPGA comparator [18] reports 240 fps on.
+//! Real-time video edge detection through the stream tier — the
+//! workload class the paper's FPGA comparator [18] reports 240 fps on.
+//!
+//! A `FrameSource` feeds the pipeline-parallel decode → delta-gated
+//! front → finish executor: moving tiles recompute, static tiles reuse
+//! the previous frame's cached suppressed-magnitude artifact (exact at
+//! the default threshold 0), and the whole chain keeps a bounded
+//! window of frames in flight.
 //!
 //! Run: `cargo run --release --example video_stream`
 
-use canny_par::canny::{CannyParams, CannyPipeline};
-use canny_par::image::synth::{generate, Scene};
-use canny_par::image::ImageF32;
-use canny_par::patterns::pipeline::pipeline3;
-use canny_par::scheduler::Pool;
-use std::time::Instant;
+use canny_par::canny::{CannyParams, Engine};
+use canny_par::coordinator::Detector;
+use canny_par::stream::{run_stream, FrameSource, StreamOptions};
 
 fn main() -> anyhow::Result<()> {
-    let pool = Pool::new(4).unwrap();
-    let params = CannyParams { tile: 128, ..CannyParams::default() };
+    // The stream tier reads detection params from StreamOptions (the
+    // gated front tiles itself; the detector's engine/pool drive the
+    // finish stages).
+    let params = CannyParams::default();
+    let det = Detector::builder().engine(Engine::TiledPatterns).workers(4).build()?;
     let (w, h) = (640, 360);
     let frames = 90usize;
+    let source = FrameSource::synthetic(3, frames, w, h);
+    let opts = StreamOptions {
+        inflight: 4, // bounded queues: at most 4 frames in flight per stage
+        params,
+        ..StreamOptions::default()
+    };
 
-    // Stage 1: frame source (synthetic camera: moving shapes).
-    // Stage 2: Canny front (tiled patterns on the pool).
-    // Stage 3: hysteresis + feature summary.
-    let t0 = Instant::now();
-    let results = pipeline3(
-        0..frames,
-        4, // bounded queues: at most 4 frames in flight per stage
-        |k| generate(Scene::Video { seed: 3, frame: k }, w, h),
-        |frame: ImageF32| {
-            let out = CannyPipeline::tiled(&pool).detect(&frame, &params).unwrap();
-            out
-        },
-        |out| out.edges.count_edges(),
-    );
-    let wall = t0.elapsed();
-    let fps = frames as f64 / wall.as_secs_f64();
-
-    let min = results.iter().min().unwrap();
-    let max = results.iter().max().unwrap();
+    let out = run_stream("video_stream", &source, &det, &opts)?;
+    let r = &out.report;
     println!(
-        "{frames} frames @ {w}x{h} in {:.2} s -> {:.1} fps ({:.2} Mpix/s)",
-        wall.as_secs_f64(),
-        fps,
-        (frames * w * h) as f64 / 1e6 / wall.as_secs_f64()
+        "{} frames @ {w}x{h} in {:.2} s -> {:.1} fps ({:.2} Mpix/s)",
+        r.frames_emitted,
+        r.wall_ns as f64 / 1e9,
+        r.fps(),
+        r.mpix_per_s()
     );
+    let min = out.frames.iter().map(|f| f.edge_pixels).min().unwrap_or(0);
+    let max = out.frames.iter().map(|f| f.edge_pixels).max().unwrap_or(0);
     println!("edge pixels per frame: min {min}, max {max} (objects moving across frames)");
+    println!(
+        "delta gate: {:.0}% tile reuse across {} gated frames ({} tiles recomputed)",
+        100.0 * r.gate.hit_rate(),
+        r.gate.frames_gated,
+        r.gate.tiles_dirty
+    );
     println!("\n(reference point: the paper's FPGA comparator [18] reports 240 fps");
-    println!(" on 1 Mpix images on a Spartan-3E; this is a {}-CPU host)",
-        canny_par::coordinator::topology::available_cpus());
+    println!(
+        " on 1 Mpix images on a Spartan-3E; this is a {}-CPU host)",
+        canny_par::coordinator::topology::available_cpus()
+    );
     Ok(())
 }

@@ -842,11 +842,21 @@ fn threshold_bands(pool: &Pool, nm: &ImageF32, lo: f32, hi: f32, grain: usize) -
 /// Serial Canny front on a haloed window: `(c + 2*HALO)²` → `c²`.
 /// Shared by the tiled engine and the whole-image reference.
 pub fn front_serial_window(window: &ImageF32, lo: f32, hi: f32) -> (ImageF32, ImageF32) {
-    let g = gaussian::gaussian(window);
-    let (mag, dir) = sobel::sobel(&g);
-    let nm = nms::nms(&mag, &dir);
+    let nm = front_suppressed_window(window);
     let cls = threshold::threshold(&nm, lo, hi);
     (cls, nm)
+}
+
+/// Threshold-free front on a haloed window: Gaussian → Sobel → NMS,
+/// `(c + 2*HALO)²` → `c²` suppressed magnitude. The stream tier's
+/// delta gate recomputes dirty tiles through this (the global
+/// Threshold + Hysteresis pass runs afterwards from the stitched
+/// [`crate::canny::Artifact::Suppressed`] map), so a tile's suppressed
+/// core never depends on the thresholds.
+pub fn front_suppressed_window(window: &ImageF32) -> ImageF32 {
+    let g = gaussian::gaussian(window);
+    let (mag, dir) = sobel::sobel(&g);
+    nms::nms(&mag, &dir)
 }
 
 #[cfg(test)]

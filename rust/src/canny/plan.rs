@@ -345,6 +345,25 @@ impl PlanOutput {
         }
     }
 
+    /// Move the edge-map artifact out (the stream tier's per-frame
+    /// emission path — avoids cloning every emitted frame).
+    pub fn take_edges(&mut self) -> Option<EdgeMap> {
+        let i = self.artifacts.iter().position(|a| matches!(a, Artifact::Edges(_)))?;
+        match self.artifacts.remove(i) {
+            Artifact::Edges(e) => Some(e),
+            _ => unreachable!("position matched Edges"),
+        }
+    }
+
+    /// Move the class-map artifact out (resume-from-class-map reuse).
+    pub fn take_class_map(&mut self) -> Option<ImageF32> {
+        let i = self.artifacts.iter().position(|a| matches!(a, Artifact::ClassMap(_)))?;
+        match self.artifacts.remove(i) {
+            Artifact::ClassMap(c) => Some(c),
+            _ => unreachable!("position matched ClassMap"),
+        }
+    }
+
     /// Did any executed phase cover `stage`?
     pub fn ran(&self, stage: StageKind) -> bool {
         self.records.iter().any(|r| r.covers(stage))
@@ -453,5 +472,25 @@ mod tests {
         assert_eq!((nm.width(), nm.height()), (3, 2));
         assert!(out.suppressed().is_none());
         assert!(out.take_suppressed().is_none());
+    }
+
+    #[test]
+    fn take_edges_and_class_map_move_out() {
+        let mut out = PlanOutput {
+            artifacts: vec![
+                Artifact::ClassMap(ImageF32::zeros(2, 2)),
+                Artifact::Edges(crate::image::EdgeMap::new(2, 2, vec![0, 255, 0, 0]).unwrap()),
+            ],
+            records: Vec::new(),
+            total_ns: 0,
+        };
+        let e = out.take_edges().unwrap();
+        assert_eq!(e.count_edges(), 1);
+        assert!(out.edges().is_none());
+        assert!(out.take_edges().is_none());
+        let c = out.take_class_map().unwrap();
+        assert_eq!((c.width(), c.height()), (2, 2));
+        assert!(out.take_class_map().is_none());
+        assert!(out.artifacts.is_empty());
     }
 }

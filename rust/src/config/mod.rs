@@ -8,6 +8,7 @@ use std::path::Path;
 use crate::canny::{CannyParams, Engine};
 use crate::error::{Error, Result};
 use crate::service::clock::ClockMode;
+use crate::stream::{DeltaMode, DropPolicy};
 
 /// Fully-resolved run configuration for the `cannyd` launcher and the
 /// coordinator's planner.
@@ -55,6 +56,18 @@ pub struct RunConfig {
     /// entries (the `re-threshold` request-kind fast path; 0 disables
     /// the cache so every re-threshold recomputes the front).
     pub rethreshold_cache: usize,
+    /// Stream tier (`cannyd stream`): bounded in-flight window — the
+    /// capacity of each inter-stage queue in the frame pipeline.
+    pub inflight: usize,
+    /// Stream tier: temporal delta-gating — `off`, or a per-pixel
+    /// cleanliness threshold (`0` = exact reuse, the default).
+    pub delta_gate: DeltaMode,
+    /// Stream tier: real-time frame budget in milliseconds (0 =
+    /// offline, no deadlines).
+    pub frame_budget_ms: f64,
+    /// Stream tier: what to do with frames past their deadline —
+    /// `drop`, `degrade`, or `none`.
+    pub drop_policy: DropPolicy,
 }
 
 impl Default for RunConfig {
@@ -78,6 +91,10 @@ impl Default for RunConfig {
             max_pixels: 0,
             clock: ClockMode::Virtual,
             rethreshold_cache: 32,
+            inflight: 4,
+            delta_gate: DeltaMode::default(),
+            frame_budget_ms: 0.0,
+            drop_policy: DropPolicy::Drop,
         }
     }
 }
@@ -135,6 +152,16 @@ impl RunConfig {
             "rethreshold-cache" | "rethreshold_cache" => {
                 self.rethreshold_cache = value.parse().map_err(|_| bad("usize"))?
             }
+            "inflight" => self.inflight = value.parse().map_err(|_| bad("usize"))?,
+            "delta-gate" | "delta_gate" => {
+                self.delta_gate = DeltaMode::parse(value).ok_or_else(|| bad("delta-gate"))?
+            }
+            "frame-budget-ms" | "frame_budget_ms" => {
+                self.frame_budget_ms = value.parse().map_err(|_| bad("f64"))?
+            }
+            "drop-policy" | "drop_policy" => {
+                self.drop_policy = DropPolicy::parse(value).ok_or_else(|| bad("drop-policy"))?
+            }
             _ => return Err(Error::Config(format!("unknown config key `{key}`"))),
         }
         Ok(())
@@ -179,6 +206,13 @@ impl RunConfig {
         "clock",
         "rethreshold-cache",
         "rethreshold_cache",
+        "inflight",
+        "delta-gate",
+        "delta_gate",
+        "frame-budget-ms",
+        "frame_budget_ms",
+        "drop-policy",
+        "drop_policy",
     ];
 
     /// Is `key` a config key `set` would accept?
@@ -257,6 +291,12 @@ impl RunConfig {
         if !(self.slo_p99_ms.is_finite() && self.slo_p99_ms > 0.0) {
             return Err(Error::Config("slo-p99-ms must be > 0".into()));
         }
+        if self.inflight == 0 {
+            return Err(Error::Config("inflight must be >= 1".into()));
+        }
+        if !(self.frame_budget_ms.is_finite() && self.frame_budget_ms >= 0.0) {
+            return Err(Error::Config("frame-budget-ms must be >= 0".into()));
+        }
         Ok(())
     }
 
@@ -284,6 +324,10 @@ impl RunConfig {
         m.insert("max-pixels".into(), self.max_pixels.to_string());
         m.insert("clock".into(), self.clock.name().to_string());
         m.insert("rethreshold-cache".into(), self.rethreshold_cache.to_string());
+        m.insert("inflight".into(), self.inflight.to_string());
+        m.insert("delta-gate".into(), self.delta_gate.name());
+        m.insert("frame-budget-ms".into(), self.frame_budget_ms.to_string());
+        m.insert("drop-policy".into(), self.drop_policy.name().to_string());
         m
     }
 }
@@ -421,6 +465,35 @@ mod tests {
     }
 
     #[test]
+    fn stream_keys_set_and_validate() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.delta_gate, DeltaMode::Gate(0.0), "default gate is exact reuse");
+        assert_eq!(c.drop_policy, DropPolicy::Drop);
+        c.set("inflight", "8").unwrap();
+        c.set("delta-gate", "off").unwrap();
+        c.set("frame-budget-ms", "16.7").unwrap();
+        c.set("drop-policy", "none").unwrap();
+        assert_eq!(c.inflight, 8);
+        assert_eq!(c.delta_gate, DeltaMode::Off);
+        assert!((c.frame_budget_ms - 16.7).abs() < 1e-9);
+        assert_eq!(c.drop_policy, DropPolicy::Keep);
+        c.set("delta_gate", "0.02").unwrap();
+        assert_eq!(c.delta_gate, DeltaMode::Gate(0.02));
+        c.validate().unwrap();
+        assert!(c.set("delta-gate", "-1").is_err());
+        assert!(c.set("drop-policy", "explode").is_err());
+        c.set("inflight", "0").unwrap();
+        assert!(c.validate().is_err());
+        c.set("inflight", "4").unwrap();
+        c.set("frame-budget-ms", "-2").unwrap();
+        assert!(c.validate().is_err());
+        let m = RunConfig::default().to_map();
+        assert_eq!(m.get("delta-gate").map(String::as_str), Some("0"));
+        assert_eq!(m.get("drop-policy").map(String::as_str), Some("drop"));
+        assert_eq!(m.get("inflight").map(String::as_str), Some("4"));
+    }
+
+    #[test]
     fn every_known_key_is_settable() {
         for &key in RunConfig::KEYS {
             let mut c = RunConfig::default();
@@ -430,6 +503,8 @@ mod tests {
                 "tile-name" | "tile_name" => "t128",
                 "parallel-hysteresis" | "parallel_hysteresis" => "true",
                 "clock" => "wall",
+                "delta-gate" | "delta_gate" => "0.05",
+                "drop-policy" | "drop_policy" => "degrade",
                 _ => "4", // parses as usize / u64 / f32 / f64 alike
             };
             c.set(key, sample).unwrap_or_else(|e| panic!("KEYS lists `{key}` but set failed: {e}"));

@@ -1,6 +1,9 @@
 //! Binary PGM (P5) / PPM (P6) codec — the no-dependency substitute for
 //! the paper's OpenCV image I/O. P5 is the native grayscale format;
-//! P6 is read by luma conversion so RGB test assets also work.
+//! P6 is read by luma conversion so RGB test assets also work. 16-bit
+//! rasters (maxval 256..=65535, big-endian samples per the PNM spec)
+//! are accepted and rescaled to 8-bit, so high-bit-depth camera frames
+//! feed the stream tier without a conversion step.
 
 use std::fs;
 use std::io::Write as _;
@@ -26,7 +29,9 @@ pub fn read_pgm(path: &Path) -> Result<ImageU8> {
     decode(&bytes)
 }
 
-/// Decode from memory. Supports `P5` (maxval <= 255) and `P6`.
+/// Decode from memory. Supports `P5` and `P6` with maxval 1..=65535
+/// (16-bit samples are big-endian, per the PNM spec, and rescale to
+/// 8-bit).
 pub fn decode(bytes: &[u8]) -> Result<ImageU8> {
     let mut pos = 0usize;
     let magic = token(bytes, &mut pos)?;
@@ -38,12 +43,14 @@ pub fn decode(bytes: &[u8]) -> Result<ImageU8> {
     let width: usize = parse_num(&token(bytes, &mut pos)?)?;
     let height: usize = parse_num(&token(bytes, &mut pos)?)?;
     let maxval: usize = parse_num(&token(bytes, &mut pos)?)?;
-    if maxval == 0 || maxval > 255 {
+    if maxval == 0 || maxval > 65535 {
         return Err(Error::Codec(format!("unsupported maxval {maxval}")));
     }
+    let wide = maxval > 255;
     // Exactly one whitespace byte separates the header from raster data.
     pos += 1;
-    let need = width * height * channels;
+    let samples = width * height * channels;
+    let need = samples * if wide { 2 } else { 1 };
     if bytes.len() < pos + need {
         return Err(Error::Codec(format!(
             "truncated raster: need {need} bytes, have {}",
@@ -52,17 +59,22 @@ pub fn decode(bytes: &[u8]) -> Result<ImageU8> {
     }
     let raster = &bytes[pos..pos + need];
     let scale = 255.0 / maxval as f32;
-    let data: Vec<u8> = if channels == 1 {
-        raster.iter().map(|&v| ((v as f32) * scale).round() as u8).collect()
-    } else {
-        raster
+    let rescale = |v: f32| (v * scale).round().min(255.0) as u8;
+    // BT.601 luma, the standard grayscale conversion.
+    let luma = |r: f32, g: f32, b: f32| rescale(0.299 * r + 0.587 * g + 0.114 * b);
+    let wide16 = |b: &[u8]| u16::from_be_bytes([b[0], b[1]]) as f32;
+    // Per (sample width, channels) path — no intermediate buffer.
+    let data: Vec<u8> = match (wide, channels) {
+        (false, 1) => raster.iter().map(|&v| rescale(v as f32)).collect(),
+        (false, _) => raster
             .chunks_exact(3)
-            .map(|px| {
-                // BT.601 luma, the standard grayscale conversion.
-                let y = 0.299 * px[0] as f32 + 0.587 * px[1] as f32 + 0.114 * px[2] as f32;
-                (y * scale).round().min(255.0) as u8
-            })
-            .collect()
+            .map(|px| luma(px[0] as f32, px[1] as f32, px[2] as f32))
+            .collect(),
+        (true, 1) => raster.chunks_exact(2).map(|b| rescale(wide16(b))).collect(),
+        (true, _) => raster
+            .chunks_exact(6)
+            .map(|px| luma(wide16(&px[0..2]), wide16(&px[2..4]), wide16(&px[4..6])))
+            .collect(),
     };
     ImageU8::from_vec(width, height, data)
 }
@@ -134,9 +146,49 @@ mod tests {
     }
 
     #[test]
+    fn decodes_16bit_p5_full_range() {
+        // maxval 65535, big-endian samples: 0, 65535, 32768.
+        let mut bytes = b"P5\n3 1\n65535\n".to_vec();
+        bytes.extend_from_slice(&[0x00, 0x00, 0xff, 0xff, 0x80, 0x00]);
+        let img = decode(&bytes).unwrap();
+        // 32768 * 255 / 65535 = 127.50195 -> rounds to 128.
+        assert_eq!(img.data(), &[0, 255, 128]);
+    }
+
+    #[test]
+    fn decodes_16bit_p5_odd_maxval() {
+        // maxval 1000 (two-byte because > 255): 250/1000 -> 63.75 -> 64.
+        let mut bytes = b"P5\n2 1\n1000\n".to_vec();
+        bytes.extend_from_slice(&[0x03, 0xe8, 0x00, 0xfa]); // 1000, 250
+        let img = decode(&bytes).unwrap();
+        assert_eq!(img.data(), &[255, 64]);
+    }
+
+    #[test]
+    fn decodes_16bit_p6_luma() {
+        // Pure red at full 16-bit scale -> same luma as the 8-bit case.
+        let mut bytes = b"P6\n1 1\n65535\n".to_vec();
+        bytes.extend_from_slice(&[0xff, 0xff, 0x00, 0x00, 0x00, 0x00]);
+        let img = decode(&bytes).unwrap();
+        assert_eq!(img.data(), &[76]); // 0.299 * 255
+    }
+
+    #[test]
+    fn truncated_16bit_raster_rejected() {
+        // 2x1 at maxval 65535 needs 4 raster bytes; give 3.
+        let mut bytes = b"P5\n2 1\n65535\n".to_vec();
+        bytes.extend_from_slice(&[0x00, 0x01, 0x02]);
+        assert!(decode(&bytes).is_err());
+    }
+
+    #[test]
     fn rejects_bad_magic_and_truncation() {
         assert!(decode(b"P4\n1 1\n255\nx").is_err());
         assert!(decode(b"P5\n4 4\n255\nxy").is_err());
+        // Malformed headers: maxval beyond 16-bit, non-numeric width,
+        // and a header that ends before maxval.
         assert!(decode(b"P5\n2 2\n70000\n____").is_err());
+        assert!(decode(b"P5\nwide 2\n255\nxxxx").is_err());
+        assert!(decode(b"P5\n2 2\n").is_err());
     }
 }

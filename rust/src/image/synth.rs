@@ -31,6 +31,10 @@ pub enum Scene {
 
 impl Scene {
     /// Parse a scene name as used by the CLI (`--scene shapes:7`).
+    /// Video takes a two-part argument — `video:<seed>:<frame>` — so
+    /// `cannyd run --scene`, `cannyd batch` and the stream tier's
+    /// [`crate::stream::FrameSource`] all share this one parser
+    /// (`video` = seed 7 frame 0, `video:3` = seed 3 frame 0).
     pub fn parse(spec: &str) -> Option<Scene> {
         let (name, arg) = match spec.split_once(':') {
             Some((n, a)) => (n, Some(a)),
@@ -45,7 +49,22 @@ impl Scene {
             "text" => Some(Scene::Text { seed: num(7) }),
             "checker" => Some(Scene::Checker { cell: num(16) as usize }),
             "gradient" => Some(Scene::Gradient),
-            "video" => Some(Scene::Video { seed: 7, frame: num(0) as usize }),
+            "video" => {
+                let (seed, frame) = match arg {
+                    None => (7, 0),
+                    Some(a) => {
+                        let (s, f) = match a.split_once(':') {
+                            Some((s, f)) => (s, Some(f)),
+                            None => (a, None),
+                        };
+                        (
+                            s.parse::<u64>().unwrap_or(7),
+                            f.and_then(|f| f.parse::<usize>().ok()).unwrap_or(0),
+                        )
+                    }
+                };
+                Some(Scene::Video { seed, frame })
+            }
             _ => None,
         }
     }
@@ -252,5 +271,16 @@ mod tests {
         assert_eq!(Scene::parse("gradient"), Some(Scene::Gradient));
         assert_eq!(Scene::parse("checker:32"), Some(Scene::Checker { cell: 32 }));
         assert!(Scene::parse("nope").is_none());
+    }
+
+    #[test]
+    fn parse_video_seed_and_frame() {
+        assert_eq!(Scene::parse("video"), Some(Scene::Video { seed: 7, frame: 0 }));
+        assert_eq!(Scene::parse("video:3"), Some(Scene::Video { seed: 3, frame: 0 }));
+        assert_eq!(Scene::parse("video:3:12"), Some(Scene::Video { seed: 3, frame: 12 }));
+        // The spec the stream source generates per frame.
+        let a = generate(Scene::parse("video:5:2").unwrap(), 48, 32);
+        let b = generate(Scene::Video { seed: 5, frame: 2 }, 48, 32);
+        assert_eq!(a, b);
     }
 }

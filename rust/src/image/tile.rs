@@ -136,6 +136,47 @@ impl TileGrid {
         padded.crop(tile.x0, tile.y0, self.tile_w + 2 * self.halo, self.tile_h + 2 * self.halo)
     }
 
+    /// Max absolute pixel difference between `a` and `b` over the
+    /// haloed neighborhood of `tile` — the temporal change measure the
+    /// stream tier's delta gate thresholds ([`crate::stream::DeltaGate`]).
+    ///
+    /// The compared region is the tile core dilated by `halo` and
+    /// clipped to the image. Replicated out-of-bounds window pixels are
+    /// copies of in-image pixels inside that region, so a zero here
+    /// means the tile's *entire* clamped input window is identical —
+    /// and therefore every front artifact over the tile core is too
+    /// (the delta gate's exact-reuse guarantee).
+    pub fn tile_delta(&self, a: &ImageF32, b: &ImageF32, tile: Tile) -> f32 {
+        self.tile_delta_exceeds(a, b, tile, f32::INFINITY)
+    }
+
+    /// Like [`TileGrid::tile_delta`], but stops scanning (at a row
+    /// boundary) once the difference exceeds `budget`: the returned
+    /// running max is then already conclusive for a dirty verdict,
+    /// while results within the budget are still exact — what the
+    /// delta gate's drift accumulator needs.
+    pub fn tile_delta_exceeds(&self, a: &ImageF32, b: &ImageF32, tile: Tile, budget: f32) -> f32 {
+        debug_assert_eq!((a.width(), a.height()), (self.image_w, self.image_h));
+        debug_assert_eq!((b.width(), b.height()), (self.image_w, self.image_h));
+        let r = self.halo;
+        let y0 = tile.y0.saturating_sub(r);
+        let y1 = (tile.y0 + tile.core_h + r).min(self.image_h);
+        let x0 = tile.x0.saturating_sub(r);
+        let x1 = (tile.x0 + tile.core_w + r).min(self.image_w);
+        let mut worst = 0.0f32;
+        for y in y0..y1 {
+            let ra = &a.row(y)[x0..x1];
+            let rb = &b.row(y)[x0..x1];
+            for (&va, &vb) in ra.iter().zip(rb) {
+                worst = worst.max((va - vb).abs());
+            }
+            if worst > budget {
+                return worst;
+            }
+        }
+        worst
+    }
+
     /// Pad an image so that every `extract_fixed` window is in bounds:
     /// replicate-pad by `halo`, then extend right/bottom to the grid.
     pub fn pad_for_fixed(&self, img: &ImageF32) -> ImageF32 {
@@ -235,5 +276,60 @@ mod tests {
     fn rejects_degenerate() {
         assert!(TileGrid::new(0, 10, 4, 4, 1).is_err());
         assert!(TileGrid::new(10, 10, 0, 4, 1).is_err());
+    }
+
+    #[test]
+    fn tile_delta_zero_for_identical_images() {
+        let img = ImageF32::from_vec(16, 16, (0..256).map(|v| v as f32).collect()).unwrap();
+        let g = TileGrid::new(16, 16, 8, 8, 2).unwrap();
+        for t in g.tiles() {
+            assert_eq!(g.tile_delta(&img, &img, t), 0.0);
+        }
+    }
+
+    #[test]
+    fn tile_delta_sees_halo_neighborhood() {
+        // 16x16, 8px tiles, halo 2. A change at (8, 8) sits in tile 3's
+        // core but inside the halo ring of every other tile too.
+        let a = ImageF32::zeros(16, 16);
+        let mut b = a.clone();
+        b.set(8, 8, 0.5);
+        let g = TileGrid::new(16, 16, 8, 8, 2).unwrap();
+        for t in g.tiles() {
+            assert_eq!(g.tile_delta(&a, &b, t), 0.5, "tile {}", t.index);
+        }
+        // A change outside a tile's haloed window leaves it clean: with
+        // halo 2, (0, 0) is 6 rows/cols away from tile 3's window edge.
+        let mut c = a.clone();
+        c.set(0, 0, 1.0);
+        assert_eq!(g.tile_delta(&a, &c, g.tile(3)), 0.0);
+        assert_eq!(g.tile_delta(&a, &c, g.tile(0)), 1.0);
+    }
+
+    #[test]
+    fn tile_delta_is_max_abs_diff() {
+        let a = ImageF32::zeros(8, 8);
+        let mut b = a.clone();
+        b.set(2, 2, 0.25);
+        b.set(5, 5, -0.75);
+        let g = TileGrid::new(8, 8, 8, 8, 4).unwrap();
+        assert_eq!(g.tile_delta(&a, &b, g.tile(0)), 0.75);
+    }
+
+    #[test]
+    fn tile_delta_exceeds_is_exact_within_budget_and_conclusive_past_it() {
+        let a = ImageF32::zeros(8, 8);
+        let mut b = a.clone();
+        b.set(1, 1, 0.3); // early row
+        b.set(6, 6, 0.9); // later row
+        let g = TileGrid::new(8, 8, 8, 8, 4).unwrap();
+        let t = g.tile(0);
+        // Within budget: exact max, full scan.
+        assert_eq!(g.tile_delta_exceeds(&a, &b, t, 1.0), 0.9);
+        // Past the budget: the early exit may miss the later 0.9, but
+        // whatever it returns is already over the budget.
+        assert!(g.tile_delta_exceeds(&a, &b, t, 0.2) > 0.2);
+        // Exact-match budget 0 still returns 0 for identical images.
+        assert_eq!(g.tile_delta_exceeds(&a, &a, t, 0.0), 0.0);
     }
 }

@@ -21,6 +21,13 @@
 //!   that the calibrated predictions are validated against. Requests
 //!   carry a kind (full | front-only | re-threshold), with re-threshold
 //!   served from a per-lane suppressed-magnitude LRU.
+//! * **L3 stream tier** ([`stream`]) — real-time frame streams: a
+//!   [`stream::FrameSource`] feeds a pipeline-parallel decode → front →
+//!   finish executor with a bounded in-flight window, **temporal
+//!   delta-gating** (clean tiles reuse the previous frame's cached
+//!   suppressed-magnitude artifact — exact at the default threshold 0),
+//!   and a real-time frame budget that drops or degrades late frames
+//!   (`cannyd stream`).
 //! * **L2/L1 (python/, build-time only)** — the Canny front-end
 //!   (Gaussian → Sobel → NMS → double threshold) as JAX + Pallas
 //!   kernels, AOT-lowered to HLO text consumed by [`runtime`] through
@@ -85,6 +92,30 @@
 //! let report = serve("quickstart", &trace, &ServeOptions::from_config(&cfg)).unwrap();
 //! println!("{}", report.to_json_string());
 //! ```
+//!
+//! Processing a **frame stream** ([`stream`]) with temporal
+//! delta-gating — clean tiles reuse the previous frame's cached
+//! suppressed-magnitude artifact, dirty tiles recompute, and the
+//! decode → front → finish stages run pipeline-parallel (the CLI
+//! equivalent is `cannyd stream --synthetic-frames 32`):
+//!
+//! ```no_run
+//! use canny_par::config::RunConfig;
+//! use canny_par::coordinator::Detector;
+//! use canny_par::stream::{run_stream, FrameSource, StreamOptions};
+//!
+//! let cfg = RunConfig::default();
+//! let det = Detector::from_config(&cfg).unwrap();
+//! let source = FrameSource::synthetic(cfg.seed, 32, 512, 512);
+//! let out = run_stream("quickstart", &source, &det, &StreamOptions::from_config(&cfg))
+//!     .unwrap();
+//! println!(
+//!     "{:.1} fps, gate hit-rate {:.0}%",
+//!     out.report.fps(),
+//!     100.0 * out.report.gate.hit_rate()
+//! );
+//! println!("{}", out.report.to_json_string());
+//! ```
 
 pub mod amdahl;
 pub mod bench;
@@ -100,6 +131,7 @@ pub mod runtime;
 pub mod scheduler;
 pub mod service;
 pub mod simsched;
+pub mod stream;
 pub mod util;
 
 pub use error::{Error, Result};

@@ -6,6 +6,9 @@
 //!   batch      --count 16 --size 512x512 [--scene …]   (farm throughput)
 //!   serve      --synthetic 200 | --requests trace.json   (serving tier;
 //!              --clock virtual|wall, --calibration file.json|probe)
+//!   stream     --synthetic-frames 32 | --source dir:frames/   (frame-stream
+//!              tier; --inflight, --delta-gate, --frame-budget-ms,
+//!              --drop-policy)
 //!   calibrate  [--output calib.json]   (probe the service-cost model)
 //!   profile    [--sim-cpus 4|8] [--engine serial|patterns]   (figures)
 //!   info       (topology, artifacts, resolved config)
@@ -32,6 +35,7 @@ use canny_par::runtime::Manifest;
 use canny_par::service::calibrate::{DEFAULT_PROBE_SHAPES, PROBE_REPEATS};
 use canny_par::service::{calibrate_for, serve, Calibration, ServeOptions, Shape, Trace};
 use canny_par::simsched::simulate;
+use canny_par::stream::{run_stream, FrameSource, StreamOptions};
 use canny_par::util::timer::human_ns;
 
 fn main() -> ExitCode {
@@ -47,7 +51,7 @@ fn main() -> ExitCode {
 
 /// Every subcommand (also the source of the command-flag union below).
 const COMMANDS: &[&str] =
-    &["run", "gen", "batch", "serve", "calibrate", "profile", "info", "help"];
+    &["run", "gen", "batch", "serve", "stream", "calibrate", "profile", "info", "help"];
 
 /// Command-level flags (not config keys) each subcommand accepts.
 fn allowed_extras(cmd: &str) -> &'static [&'static str] {
@@ -56,6 +60,7 @@ fn allowed_extras(cmd: &str) -> &'static [&'static str] {
         "gen" => &["config", "scene", "size", "output"],
         "batch" => &["config", "count", "size", "scene"],
         "serve" => &["config", "requests", "synthetic", "calibration"],
+        "stream" => &["config", "source", "synthetic-frames", "size"],
         "calibrate" => &["config", "output"],
         "profile" => &["config", "figure"],
         _ => &["config"],
@@ -151,6 +156,7 @@ fn run(args: Vec<String>) -> anyhow::Result<()> {
         "gen" => cmd_gen(&cfg, get("scene"), get("size"), get("output")),
         "batch" => cmd_batch(&cfg, get("count"), get("size"), get("scene")),
         "serve" => cmd_serve(&cfg, get("requests"), get("synthetic"), get("calibration")),
+        "stream" => cmd_stream(&cfg, get("source"), get("synthetic-frames"), get("size")),
         "calibrate" => cmd_calibrate(&cfg, get("output")),
         "profile" => cmd_profile(&cfg, get("figure")),
         "info" => cmd_info(&cfg),
@@ -165,7 +171,7 @@ fn run(args: Vec<String>) -> anyhow::Result<()> {
 const HELP: &str = "\
 cannyd — high-performance parallel Canny edge detector (CS.DC 2017 repro)
 
-USAGE: cannyd <run|gen|batch|serve|calibrate|profile|info> [flags]
+USAGE: cannyd <run|gen|batch|serve|stream|calibrate|profile|info> [flags]
 
   run        detect edges:      --input x.pgm | --scene shapes:7 --size 512x512
                                 [--output edges.pgm]
@@ -185,6 +191,12 @@ USAGE: cannyd <run|gen|batch|serve|calibrate|profile|info> [flags]
                                  requests may carry "kind": full | front-only
                                  | re-threshold {lo, hi} — re-threshold hits a
                                  per-lane suppressed-magnitude LRU)
+  stream     frame-stream tier: --synthetic-frames 32 [--size 512x512]
+                                | --source video:SEED|SCENE|dir:PATH|trace:PATH
+                                (decode -> delta-gated front -> finish, pipeline-
+                                 parallel with a bounded in-flight window; prints
+                                 a JSON stream report: fps, Mpix/s, gate hit-rate,
+                                 per-stage aggregates, jitter p50/p95/p99)
   calibrate  probe the service-cost model on this host and print/save it
                                 [--output calib.json]
   profile    paper figures:     [--figure fig8|fig9|percore] [--sim-cpus 4|8]
@@ -196,6 +208,10 @@ Config flags (all commands): --engine serial|patterns|tiled|xla
 Serve flags: --lanes N --queue-depth N --batch-window-us N --batch-max N
   --arrival-rate HZ --slo-p99-ms F --max-pixels N --clock virtual|wall
   --rethreshold-cache N (per-lane suppressed-map LRU entries, 0 = off)
+Stream flags: --inflight N (bounded in-flight window)
+  --delta-gate off|THRESH (temporal per-tile reuse; 0 = exact, default)
+  --frame-budget-ms F (real-time deadline per frame, 0 = offline)
+  --drop-policy drop|degrade|none (late-frame handling under a budget)
 
 Unknown flags and subcommands are errors, not ignored.
 ";
@@ -480,6 +496,27 @@ fn cmd_serve(
     }
     let report = serve(&label, &trace, &opts)?;
     println!("{}", report.to_json_string());
+    Ok(())
+}
+
+/// `cannyd stream`: run a frame stream through the pipeline-parallel
+/// executor with temporal delta-gating and print the JSON stream
+/// report (schema documented in `canny_par::stream`).
+fn cmd_stream(
+    cfg: &RunConfig,
+    source: Option<String>,
+    synthetic_frames: Option<String>,
+    size: Option<String>,
+) -> anyhow::Result<()> {
+    let frames: usize = synthetic_frames.unwrap_or_else(|| "64".into()).parse()?;
+    let (w, h) = parse_size(size)?;
+    let spec = source.unwrap_or_else(|| format!("video:{}", cfg.seed));
+    let src = FrameSource::parse(&spec, frames, w, h, cfg.seed)?;
+    let det = Detector::from_config(cfg)?;
+    let opts = StreamOptions::from_config(cfg);
+    let label = format!("stream[{}]", src.describe());
+    let out = run_stream(&label, &src, &det, &opts)?;
+    println!("{}", out.report.to_json_string());
     Ok(())
 }
 

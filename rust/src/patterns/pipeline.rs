@@ -3,9 +3,15 @@
 //! sequential internally, so outputs arrive in input order — which
 //! keeps the whole pattern deterministic.
 //!
-//! Used by the video-stream example (generate → Canny front →
-//! hysteresis) the way the paper's motivation describes real-time
-//! image-processing pipelines.
+//! Two forms:
+//!
+//! * [`pipeline2`] / [`pipeline3`] — fixed-arity closure chains with
+//!   distinct inter-stage types (the original paper-style form).
+//! * [`pipeline_stages`] — a runtime-chosen list of [`DynStage`]s over
+//!   one message type, the generalization the stream tier
+//!   ([`crate::stream`]) builds its decode → front → finish executor
+//!   on: stages are picked per run (delta-gated front, budget-aware
+//!   finish) rather than baked into the call's arity.
 
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 
@@ -72,6 +78,71 @@ where
     })
 }
 
+/// One stage of a [`pipeline_stages`] chain: transforms the pipeline's
+/// uniform message type in place-of-arity (stages that do not apply to
+/// a message — e.g. a finish stage seeing a dropped frame — pass it
+/// through unchanged).
+pub type DynStage<'a, M> = Box<dyn FnMut(M) -> M + Send + 'a>;
+
+/// Run a *dynamic* stage list as a linear pipeline over `inputs` with
+/// bounded queues of `capacity` between consecutive stages — the
+/// generalization of [`pipeline2`]/[`pipeline3`] from fixed-arity
+/// closures to a runtime-built chain. One thread feeds the inputs
+/// (lazily: generator sources run pipelined too), each stage but the
+/// last gets its own thread, and the last stage runs on the calling
+/// thread while collecting. Stages are sequential internally, so
+/// outputs arrive in input order (the same determinism contract as the
+/// fixed-arity forms). An empty stage list just collects the inputs.
+pub fn pipeline_stages<'a, M, I>(
+    inputs: I,
+    capacity: usize,
+    stages: Vec<DynStage<'a, M>>,
+) -> Vec<M>
+where
+    M: Send + 'a,
+    I: IntoIterator<Item = M> + Send + 'a,
+{
+    std::thread::scope(|scope| {
+        let cap = capacity.max(1);
+        let mut stages = stages;
+        let last = stages.pop();
+        let (tx0, mut rx) = sync_channel::<M>(cap);
+        let mut handles = Vec::new();
+        handles.push(scope.spawn(move || {
+            for item in inputs {
+                if tx0.send(item).is_err() {
+                    break;
+                }
+            }
+        }));
+        for mut stage in stages {
+            let (tx, next_rx) = sync_channel::<M>(cap);
+            let prev = rx;
+            handles.push(scope.spawn(move || {
+                for item in prev {
+                    if tx.send(stage(item)).is_err() {
+                        break;
+                    }
+                }
+            }));
+            rx = next_rx;
+        }
+        let mut out = Vec::new();
+        match last {
+            Some(mut f) => {
+                for item in rx {
+                    out.push(f(item));
+                }
+            }
+            None => out.extend(rx),
+        }
+        for h in handles {
+            h.join().expect("pipeline stage panicked");
+        }
+        out
+    })
+}
+
 fn run_stage<A, B>(
     inputs: impl IntoIterator<Item = A>,
     mut f: impl FnMut(A) -> B,
@@ -121,6 +192,54 @@ mod tests {
         // Backpressure with the tightest queue must not deadlock.
         let out = pipeline3(0..1000, 1, |x: u32| x, |x| x, |x| x);
         assert_eq!(out.len(), 1000);
+    }
+
+    #[test]
+    fn pipeline_stages_matches_serial_composition() {
+        let stages: Vec<DynStage<i64>> = vec![
+            Box::new(|x| x + 1),
+            Box::new(|x| x * 3),
+            Box::new(|x| x - 2),
+        ];
+        let out = pipeline_stages(0..200i64, 4, stages);
+        let expect: Vec<i64> = (0..200).map(|x| (x + 1) * 3 - 2).collect();
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn pipeline_stages_preserves_order_with_stateful_stages() {
+        // A stateful (FnMut) stage tags each message with its arrival
+        // rank; ranks must equal indices if order is preserved.
+        let mut rank = 0usize;
+        let stages: Vec<DynStage<(usize, usize)>> = vec![Box::new(move |(i, _)| {
+            let r = rank;
+            rank += 1;
+            (i, r)
+        })];
+        let out = pipeline_stages((0..500).map(|i| (i, 0)), 2, stages);
+        assert!(out.iter().all(|&(i, r)| i == r));
+    }
+
+    #[test]
+    fn pipeline_stages_empty_and_no_stage_cases() {
+        let none: Vec<DynStage<u8>> = Vec::new();
+        assert_eq!(pipeline_stages(vec![1u8, 2, 3], 1, none), vec![1, 2, 3]);
+        let one: Vec<DynStage<u8>> = vec![Box::new(|x| x * 2)];
+        assert!(pipeline_stages(Vec::<u8>::new(), 4, one).is_empty());
+    }
+
+    #[test]
+    fn pipeline_stages_borrows_environment() {
+        // Stages may borrow locals (the stream executor borrows the
+        // detector and frame source this way).
+        let offset = 10i32;
+        let sink = std::cell::Cell::new(0);
+        {
+            let stages: Vec<DynStage<i32>> = vec![Box::new(|x| x + offset)];
+            let out = pipeline_stages(0..50, 3, stages);
+            sink.set(out.iter().sum());
+        }
+        assert_eq!(sink.get(), (0..50).sum::<i32>() + 50 * 10);
     }
 
     #[test]

@@ -69,7 +69,9 @@ pub struct LatencySummary {
 }
 
 impl LatencySummary {
-    fn to_json(self) -> Json {
+    /// Structured `{n, p50, p95, p99, max, mean}` object — shared by the
+    /// serving report and the stream report's jitter section.
+    pub fn to_json(self) -> Json {
         let mut m = BTreeMap::new();
         m.insert("n".into(), Json::Num(self.n as f64));
         m.insert("p50".into(), Json::Num(self.p50_ns as f64));

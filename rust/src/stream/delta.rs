@@ -1,0 +1,375 @@
+//! Temporal delta-gating: per-tile change detection against the
+//! previous frame, so near-static video pays only for what moved.
+//!
+//! The gate keeps the previous frame and the suppressed-magnitude map
+//! ([`crate::canny::Artifact::Suppressed`]) that matches it. For each
+//! new frame every gate tile compares its *haloed* input window against
+//! the previous frame ([`TileGrid::tile_delta`]):
+//!
+//! * **clean** (difference <= threshold) — the cached suppressed core
+//!   is reused untouched;
+//! * **dirty** — the Gaussian → Sobel → NMS front recomputes on the
+//!   tile's clamped window (in parallel over the pool — the farm
+//!   pattern within a frame) and overwrites the cached core.
+//!
+//! Because [`crate::canny::consts::HALO`] covers the full dependency
+//! cone of the front, a byte-identical haloed window implies a
+//! byte-identical suppressed core. With threshold `0` the gate is
+//! therefore **exact**: the stitched map is bit-identical to a full
+//! per-frame front, for static *and* moving scenes — the generalization
+//! of the serving tier's re-threshold cache from per-request to
+//! per-stream temporal reuse. Thresholds above `0` trade exactness for
+//! more reuse, with bounded staleness: each tile carries its
+//! *accumulated* drift since its core was last recomputed (the
+//! triangle inequality upper-bounds the true difference to the cached
+//! reference), so a slow fade cannot stay "clean" forever.
+//!
+//! The global Threshold + Hysteresis pass runs afterwards from the
+//! stitched map (hysteresis connectivity is image-global, so it is
+//! never gated).
+
+use crate::canny::consts;
+use crate::canny::pipeline::front_suppressed_window;
+use crate::error::Result;
+use crate::image::tile::TileGrid;
+use crate::image::ImageF32;
+use crate::patterns;
+use crate::scheduler::Pool;
+use crate::util::timer::{thread_cpu_ns, Stopwatch};
+use crate::util::SharedSlice;
+
+/// Default gate-tile core size. Deliberately finer than the engines'
+/// detection tile (128): gating granularity bounds how much of the
+/// image a small moving object dirties, and a 32px core keeps the
+/// dirty footprint of a typical shape to a few tiles.
+pub const GATE_TILE: usize = 32;
+
+/// Gate configuration: off (recompute every tile every frame), or on
+/// with a max-abs-difference cleanliness threshold (`0` = exact reuse).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum DeltaMode {
+    /// No temporal reuse; every frame recomputes the full front.
+    Off,
+    /// Reuse tiles whose haloed window has *accumulated* at most this
+    /// per-pixel absolute difference since the tile was last
+    /// recomputed (`0.0` = byte-identical only).
+    Gate(f32),
+}
+
+impl DeltaMode {
+    /// Parse a `--delta-gate` value: `off`, or a finite threshold >= 0.
+    pub fn parse(s: &str) -> Option<DeltaMode> {
+        if s == "off" {
+            return Some(DeltaMode::Off);
+        }
+        s.parse::<f32>()
+            .ok()
+            .filter(|t| t.is_finite() && *t >= 0.0)
+            .map(DeltaMode::Gate)
+    }
+
+    /// Config / report rendering (inverse of [`DeltaMode::parse`]).
+    pub fn name(&self) -> String {
+        match self {
+            DeltaMode::Off => "off".into(),
+            DeltaMode::Gate(t) => format!("{t}"),
+        }
+    }
+
+    pub fn is_on(&self) -> bool {
+        matches!(self, DeltaMode::Gate(_))
+    }
+}
+
+impl Default for DeltaMode {
+    /// Exact reuse: gated output is bit-identical to full detection.
+    fn default() -> Self {
+        DeltaMode::Gate(0.0)
+    }
+}
+
+/// What one [`DeltaGate::advance`] did.
+#[derive(Clone, Debug)]
+pub struct GateRun {
+    /// The stitched suppressed-magnitude map for this frame (the
+    /// finish stage's [`crate::canny::StagePlan::from_suppressed`]
+    /// entry artifact).
+    pub nm: ImageF32,
+    /// Tiles reused from the cache.
+    pub clean: usize,
+    /// Tiles recomputed.
+    pub dirty: usize,
+    /// False when no usable reference existed (first frame, size
+    /// change, or [`DeltaMode::Off`]) — the frame ran a full front and
+    /// does not count toward the gate hit-rate.
+    pub gated: bool,
+    pub wall_ns: u64,
+    /// Summed per-tile thread-CPU cost.
+    pub cpu_ns: u64,
+    /// Per-tile thread-CPU costs (delta check + any recompute), one
+    /// entry per gate tile — the parallel tasks of the frame.
+    pub task_costs_ns: Vec<u64>,
+}
+
+/// The per-stream temporal cache + gate state. One gate per stream
+/// (state carries across frames); not shareable across streams.
+#[derive(Clone, Debug)]
+pub struct DeltaGate {
+    mode: DeltaMode,
+    tile: usize,
+    /// The previous frame (the per-frame delta baseline).
+    prev: Option<ImageF32>,
+    /// Cached suppressed magnitude. Invariant (threshold 0): for every
+    /// gate tile, equals the exact front output of `prev` over that
+    /// tile's core.
+    nm: Option<ImageF32>,
+    /// Per-tile drift accumulated since that tile's core was last
+    /// recomputed: the sum of per-frame `tile_delta`s, an upper bound
+    /// (triangle inequality) on the true difference between the
+    /// current window and the one the cached core was computed from.
+    /// Cleanliness tests `acc + delta <= threshold`, so nonzero
+    /// thresholds bound total staleness, not just frame-to-frame
+    /// flicker.
+    acc: Vec<f32>,
+}
+
+impl DeltaGate {
+    pub fn new(mode: DeltaMode) -> DeltaGate {
+        DeltaGate::with_tile(mode, GATE_TILE)
+    }
+
+    /// Override the gate-tile core size (tests / tuning).
+    pub fn with_tile(mode: DeltaMode, tile: usize) -> DeltaGate {
+        DeltaGate { mode, tile: tile.max(1), prev: None, nm: None, acc: Vec::new() }
+    }
+
+    pub fn mode(&self) -> DeltaMode {
+        self.mode
+    }
+
+    /// The cached suppressed map, if any (always `None` in
+    /// [`DeltaMode::Off`], which keeps no cache).
+    pub fn cached_nm(&self) -> Option<&ImageF32> {
+        self.nm.as_ref()
+    }
+
+    /// Gate one frame: classify every tile, recompute the dirty ones
+    /// (on `pool` when given, serially otherwise — both produce
+    /// identical bytes), update the cache, and return the stitched map.
+    /// Takes the frame by value: it becomes the next delta baseline
+    /// without a copy.
+    pub fn advance(&mut self, pool: Option<&Pool>, img: ImageF32) -> Result<GateRun> {
+        let sw = Stopwatch::start();
+        let (w, h) = (img.width(), img.height());
+        let grid = TileGrid::new(w, h, self.tile, self.tile, consts::HALO)?;
+        let tiles: Vec<_> = grid.tiles().collect();
+
+        // A reference exists when gating is on and the cache (including
+        // the drift accumulator) matches this frame's geometry;
+        // otherwise the whole frame is dirty.
+        let threshold = match (self.mode, &self.prev, &self.nm) {
+            (DeltaMode::Gate(th), Some(p), Some(_))
+                if p.width() == w && p.height() == h && self.acc.len() == tiles.len() =>
+            {
+                Some(th)
+            }
+            _ => None,
+        };
+        // Take (not clone) the cached map: clean cores are already in
+        // place, dirty cores get overwritten below.
+        let mut nm = match threshold {
+            Some(_) => self.nm.take().expect("reference guard checked the cache"),
+            None => ImageF32::zeros(w, h),
+        };
+        let prev = self.prev.as_ref();
+        let acc = &self.acc;
+
+        // Per tile: (dirty, accumulated drift after this frame, cpu ns).
+        let results: Vec<(bool, f32, u64)>;
+        {
+            let nm_s = SharedSlice::new(nm.data_mut());
+            let grid = &grid;
+            let task = |i: usize, t: &crate::image::tile::Tile| {
+                let c0 = thread_cpu_ns();
+                let (dirty, drift) = match (threshold, prev) {
+                    (Some(th), Some(prev)) => {
+                        // Early-exit scan: once past the remaining
+                        // budget the tile is dirty regardless of the
+                        // exact max (the accumulator resets anyway).
+                        let budget = th - acc[i];
+                        let drift = acc[i] + grid.tile_delta_exceeds(prev, &img, *t, budget);
+                        (drift > th, drift)
+                    }
+                    _ => (true, 0.0),
+                };
+                if dirty {
+                    let window = grid.extract_clamped(&img, *t);
+                    let tn = front_suppressed_window(&window);
+                    debug_assert_eq!((tn.width(), tn.height()), (t.core_w, t.core_h));
+                    for ty in 0..t.core_h {
+                        let row0 = (t.y0 + ty) * w + t.x0;
+                        // SAFETY: tiles cover disjoint output regions.
+                        let row = unsafe { nm_s.range_mut(row0, row0 + t.core_w) };
+                        row.copy_from_slice(&tn.data()[ty * t.core_w..(ty + 1) * t.core_w]);
+                    }
+                }
+                // A recomputed core is the new reference: drift resets.
+                (dirty, if dirty { 0.0 } else { drift }, thread_cpu_ns().saturating_sub(c0))
+            };
+            results = match pool {
+                Some(pool) => patterns::par_map(pool, &tiles, 1, task),
+                None => tiles.iter().enumerate().map(|(i, t)| task(i, t)).collect(),
+            };
+        }
+
+        let dirty = results.iter().filter(|(d, _, _)| *d).count();
+        let task_costs_ns: Vec<u64> = results.iter().map(|&(_, _, c)| c).collect();
+        let cpu_ns = task_costs_ns.iter().sum();
+        // Off mode never reads the cache — skip the cache maintenance
+        // (and its nm clone) entirely. The frame itself moves into the
+        // baseline without a copy.
+        if self.mode.is_on() {
+            self.prev = Some(img);
+            self.nm = Some(nm.clone());
+            self.acc = results.iter().map(|&(_, a, _)| a).collect();
+        }
+        Ok(GateRun {
+            nm,
+            clean: tiles.len() - dirty,
+            dirty,
+            gated: threshold.is_some(),
+            wall_ns: sw.elapsed_ns(),
+            cpu_ns,
+            task_costs_ns,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::canny::front_serial;
+    use crate::image::synth::{generate, Scene};
+
+    #[test]
+    fn mode_parse_roundtrip() {
+        assert_eq!(DeltaMode::parse("off"), Some(DeltaMode::Off));
+        assert_eq!(DeltaMode::parse("0"), Some(DeltaMode::Gate(0.0)));
+        assert_eq!(DeltaMode::parse("0.05"), Some(DeltaMode::Gate(0.05)));
+        assert_eq!(DeltaMode::parse("-1"), None);
+        assert_eq!(DeltaMode::parse("inf"), None);
+        assert_eq!(DeltaMode::parse("nope"), None);
+        assert_eq!(DeltaMode::Off.name(), "off");
+        assert_eq!(DeltaMode::parse(&DeltaMode::Gate(0.05).name()), Some(DeltaMode::Gate(0.05)));
+        assert!(DeltaMode::default().is_on());
+    }
+
+    #[test]
+    fn first_frame_is_full_and_matches_reference() {
+        let img = generate(Scene::Shapes { seed: 4 }, 70, 50);
+        let mut gate = DeltaGate::with_tile(DeltaMode::default(), 16);
+        let run = gate.advance(None, img.clone()).unwrap();
+        assert!(!run.gated);
+        assert_eq!(run.clean, 0);
+        let (_, want) = front_serial(&img, 0.05, 0.15);
+        assert_eq!(run.nm, want, "first-frame front diverged from the serial reference");
+    }
+
+    #[test]
+    fn static_frame_is_all_clean_and_byte_identical() {
+        let img = generate(Scene::Shapes { seed: 4 }, 70, 50);
+        let mut gate = DeltaGate::with_tile(DeltaMode::default(), 16);
+        let first = gate.advance(None, img.clone()).unwrap();
+        let second = gate.advance(None, img).unwrap();
+        assert!(second.gated);
+        assert_eq!(second.dirty, 0);
+        assert_eq!(second.clean, first.clean + first.dirty);
+        assert_eq!(second.nm, first.nm);
+    }
+
+    #[test]
+    fn moving_frame_stays_exact_at_zero_threshold() {
+        // The induction invariant: even when only some tiles recompute,
+        // the stitched map equals a full front of the current frame.
+        let mut gate = DeltaGate::with_tile(DeltaMode::Gate(0.0), 16);
+        for k in 0..3 {
+            let img = generate(Scene::Video { seed: 3, frame: k }, 96, 64);
+            let run = gate.advance(None, img.clone()).unwrap();
+            let (_, want) = front_serial(&img, 0.05, 0.15);
+            assert_eq!(run.nm, want, "frame {k} diverged");
+        }
+    }
+
+    #[test]
+    fn pool_and_serial_recompute_agree() {
+        let pool = crate::scheduler::Pool::new(3).unwrap();
+        let frames: Vec<ImageF32> =
+            (0..3).map(|k| generate(Scene::Video { seed: 9, frame: k }, 80, 60)).collect();
+        let mut a = DeltaGate::with_tile(DeltaMode::default(), 16);
+        let mut b = DeltaGate::with_tile(DeltaMode::default(), 16);
+        for f in &frames {
+            let ra = a.advance(Some(&pool), f.clone()).unwrap();
+            let rb = b.advance(None, f.clone()).unwrap();
+            assert_eq!(ra.nm, rb.nm);
+            assert_eq!((ra.clean, ra.dirty), (rb.clean, rb.dirty));
+        }
+    }
+
+    #[test]
+    fn off_mode_never_gates() {
+        let img = generate(Scene::Shapes { seed: 4 }, 48, 48);
+        let mut gate = DeltaGate::with_tile(DeltaMode::Off, 16);
+        for _ in 0..2 {
+            let run = gate.advance(None, img.clone()).unwrap();
+            assert!(!run.gated);
+            assert_eq!(run.clean, 0);
+        }
+    }
+
+    #[test]
+    fn nonzero_threshold_bounds_accumulated_drift() {
+        // A slow fade: +0.04/frame against a 0.05 threshold. Frame 1 is
+        // within the budget (clean); by frame 2 the *accumulated* drift
+        // (0.08) exceeds it, so tiles must recompute — staleness is
+        // bounded, not just frame-to-frame flicker.
+        let mut gate = DeltaGate::with_tile(DeltaMode::Gate(0.05), 16);
+        let frame = |v: f32| {
+            let mut img = ImageF32::zeros(32, 32);
+            for p in img.data_mut() {
+                *p = v;
+            }
+            img
+        };
+        let r0 = gate.advance(None, frame(0.20)).unwrap();
+        assert!(!r0.gated);
+        let r1 = gate.advance(None, frame(0.24)).unwrap();
+        assert!(r1.gated);
+        assert_eq!(r1.dirty, 0, "one 0.04 step stays under the 0.05 budget");
+        let r2 = gate.advance(None, frame(0.28)).unwrap();
+        assert_eq!(r2.clean, 0, "accumulated 0.08 drift must recompute every tile");
+        // Recomputing reset the accumulator: the next 0.04 step is
+        // clean again.
+        let r3 = gate.advance(None, frame(0.32)).unwrap();
+        assert_eq!(r3.dirty, 0);
+    }
+
+    #[test]
+    fn off_mode_keeps_no_cache() {
+        let img = generate(Scene::Shapes { seed: 4 }, 48, 48);
+        let mut gate = DeltaGate::with_tile(DeltaMode::Off, 16);
+        gate.advance(None, img).unwrap();
+        assert!(gate.cached_nm().is_none(), "off mode must not pay for a cache");
+    }
+
+    #[test]
+    fn size_change_resets_the_reference() {
+        let mut gate = DeltaGate::with_tile(DeltaMode::default(), 16);
+        let a = generate(Scene::Shapes { seed: 4 }, 48, 48);
+        gate.advance(None, a).unwrap();
+        let b = generate(Scene::Shapes { seed: 4 }, 64, 32);
+        let run = gate.advance(None, b.clone()).unwrap();
+        assert!(!run.gated, "mismatched geometry must not be gated");
+        let (_, want) = front_serial(&b, 0.05, 0.15);
+        assert_eq!(run.nm, want);
+    }
+}

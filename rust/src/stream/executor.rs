@@ -1,0 +1,463 @@
+//! The pipeline-parallel frame executor: decode → delta-gated front →
+//! finish (threshold + hysteresis), each stage on its own thread with a
+//! bounded in-flight window, ordered emission, and an optional
+//! real-time frame budget with drop/degrade handling for late frames.
+//!
+//! Built on [`crate::patterns::pipeline::pipeline_stages`] — the
+//! dynamic generalization of the fixed-arity `pipeline3` the old video
+//! example hand-rolled — with the front stage farming dirty tiles over
+//! the shared [`crate::scheduler::Pool`] (pipeline across stages, farm
+//! within a frame: the paper's two patterns composed).
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use crate::canny::{CannyParams, Engine, StageKind, StagePlan, StageRecord};
+use crate::config::RunConfig;
+use crate::coordinator::Detector;
+use crate::error::{Error, Result};
+use crate::image::EdgeMap;
+use crate::patterns::pipeline::{pipeline_stages, DynStage};
+use crate::service::LatencyStats;
+use crate::stream::delta::{DeltaGate, DeltaMode};
+use crate::stream::report::{GateReport, StreamReport};
+use crate::stream::source::FrameSource;
+use crate::util::timer::Stopwatch;
+
+/// What to do with a frame that is already past its deadline when the
+/// front stage dequeues it (real-time mode only).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DropPolicy {
+    /// Skip it entirely: no front, no finish, no emission.
+    Drop,
+    /// Emit a degraded frame: reuse the last computed suppressed map
+    /// wholesale (skip the front) and run only threshold + hysteresis.
+    /// The map is kept by the executor, so this works with the delta
+    /// gate off too; falls back to full processing when no map exists
+    /// yet.
+    Degrade,
+    /// Process anyway; lateness is only counted.
+    Keep,
+}
+
+impl DropPolicy {
+    /// Parse a `--drop-policy` value.
+    pub fn parse(s: &str) -> Option<DropPolicy> {
+        match s {
+            "drop" => Some(DropPolicy::Drop),
+            "degrade" => Some(DropPolicy::Degrade),
+            "none" | "keep" => Some(DropPolicy::Keep),
+            _ => None,
+        }
+    }
+
+    /// Config / report name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            DropPolicy::Drop => "drop",
+            DropPolicy::Degrade => "degrade",
+            DropPolicy::Keep => "none",
+        }
+    }
+}
+
+/// Stream-run configuration (the `cannyd stream` flag set).
+#[derive(Clone, Debug)]
+pub struct StreamOptions {
+    /// Bounded in-flight window: capacity of each inter-stage queue.
+    pub inflight: usize,
+    /// Temporal delta-gating mode.
+    pub delta: DeltaMode,
+    /// Real-time frame budget in ns (0 = offline: process everything,
+    /// as fast as possible, no deadlines).
+    pub frame_budget_ns: u64,
+    /// Late-frame handling under a budget.
+    pub drop_policy: DropPolicy,
+    /// Detection parameters. The stream tier reads thresholds from
+    /// *here* (they feed the global finish pass), not from the
+    /// detector's own defaults — embedders with custom `lo`/`hi` must
+    /// set them on these options.
+    pub params: CannyParams,
+    /// Keep each emitted frame's [`EdgeMap`] in the outcome (tests,
+    /// embedding programs); the CLI leaves this off.
+    pub keep_edges: bool,
+}
+
+impl StreamOptions {
+    /// Build from the resolved [`RunConfig`] (the CLI path).
+    pub fn from_config(cfg: &RunConfig) -> StreamOptions {
+        StreamOptions {
+            inflight: cfg.inflight,
+            delta: cfg.delta_gate,
+            frame_budget_ns: (cfg.frame_budget_ms * 1e6) as u64,
+            drop_policy: cfg.drop_policy,
+            params: cfg.params,
+            keep_edges: false,
+        }
+    }
+}
+
+impl Default for StreamOptions {
+    fn default() -> Self {
+        StreamOptions {
+            inflight: 4,
+            delta: DeltaMode::default(),
+            frame_budget_ns: 0,
+            drop_policy: DropPolicy::Drop,
+            params: CannyParams::default(),
+            keep_edges: false,
+        }
+    }
+}
+
+/// Per-frame result in source order.
+#[derive(Clone, Debug)]
+pub struct FrameResult {
+    pub index: usize,
+    /// Skipped entirely (late under [`DropPolicy::Drop`]).
+    pub dropped: bool,
+    /// Emitted from the cached suppressed map without a front pass.
+    pub degraded: bool,
+    /// Past its deadline at front entry (any policy).
+    pub late: bool,
+    /// Counted toward the gate hit-rate (a reference frame existed).
+    pub gated: bool,
+    pub tiles_clean: usize,
+    pub tiles_dirty: usize,
+    pub edge_pixels: u64,
+    /// Present for emitted frames when
+    /// [`StreamOptions::keep_edges`] was set.
+    pub edges: Option<EdgeMap>,
+}
+
+/// Everything a stream run produced: the aggregate report plus the
+/// ordered per-frame results.
+#[derive(Clone, Debug)]
+pub struct StreamOutcome {
+    pub report: StreamReport,
+    pub frames: Vec<FrameResult>,
+}
+
+/// The pipeline's uniform message (see
+/// [`crate::patterns::pipeline::pipeline_stages`]): stages fill it in
+/// as the frame moves decode → front → finish.
+struct Slot {
+    index: usize,
+    image: Option<crate::image::ImageF32>,
+    nm: Option<crate::image::ImageF32>,
+    pixels: u64,
+    deadline_ns: u64,
+    decode_ns: u64,
+    emit_ns: u64,
+    dropped: bool,
+    degraded: bool,
+    late: bool,
+    gated: bool,
+    clean: usize,
+    dirty: usize,
+    edge_pixels: u64,
+    edges: Option<EdgeMap>,
+    records: Vec<StageRecord>,
+    error: Option<Error>,
+}
+
+/// Run a frame stream through the detector. The three stages run
+/// pipeline-parallel with at most `opts.inflight` frames queued between
+/// consecutive stages; emission is in frame order.
+pub fn run_stream(
+    label: &str,
+    source: &FrameSource,
+    det: &Detector,
+    opts: &StreamOptions,
+) -> Result<StreamOutcome> {
+    if opts.inflight == 0 {
+        return Err(Error::Config("inflight must be >= 1".into()));
+    }
+    // The delta-gated front recomputes dirty tiles through the native
+    // fused-tile path (there is no per-tile XLA gate executable), so an
+    // XLA detector would silently run on CPU while the report claimed
+    // otherwise — reject it instead of mislabeling.
+    if det.engine() == Engine::PatternsXla {
+        return Err(Error::Config(
+            "the stream tier does not support the xla engine (the delta-gated front \
+             recomputes tiles natively); use serial | patterns | tiled"
+                .into(),
+        ));
+    }
+    opts.params.validate()?;
+    let n = source.len();
+    let budget = opts.frame_budget_ns;
+    let t0 = Stopwatch::start();
+
+    // -- Stage 1 (source thread): acquire + decode, paced to the frame
+    //    budget like a camera: frame k becomes available at k*budget.
+    let inputs = (0..n).map(move |k| {
+        if budget > 0 {
+            let target = k as u64 * budget;
+            let now = t0.elapsed_ns();
+            if now < target {
+                std::thread::sleep(Duration::from_nanos(target - now));
+            }
+        }
+        let sw = Stopwatch::start();
+        let (image, pixels, error) = match source.frame(k) {
+            Ok(img) => {
+                let px = img.len() as u64;
+                (Some(img), px, None)
+            }
+            Err(e) => (None, 0, Some(e)),
+        };
+        Slot {
+            index: k,
+            image,
+            nm: None,
+            pixels,
+            deadline_ns: if budget > 0 { (k as u64 + 1) * budget } else { 0 },
+            decode_ns: sw.elapsed_ns(),
+            emit_ns: 0,
+            dropped: false,
+            degraded: false,
+            late: false,
+            gated: false,
+            clean: 0,
+            dirty: 0,
+            edge_pixels: 0,
+            edges: None,
+            records: Vec::new(),
+            error,
+        }
+    });
+
+    // -- Stage 2 (own thread): the delta-gated front. Dirty tiles farm
+    //    over the detector's pool unless the engine is Serial. The
+    //    front records carry the engine that actually executed them
+    //    (the fused native tile path); the report's top-level `engine`
+    //    is the detector engine, which drives the finish stages.
+    let pool = if det.engine() != Engine::Serial { Some(det.pool()) } else { None };
+    let front_engine =
+        if pool.is_some() { Engine::TiledPatterns } else { Engine::Serial };
+    let mut gate = DeltaGate::new(opts.delta);
+    // The degrade path's stale-frame source. Owned by the executor —
+    // not the gate — so degrading works with `--delta-gate off` too;
+    // maintained only when the policy can use it.
+    let mut degrade_nm: Option<crate::image::ImageF32> = None;
+    let drop_policy = opts.drop_policy;
+    let front: DynStage<Slot> = Box::new(move |mut s: Slot| {
+        if s.error.is_some() {
+            return s;
+        }
+        let img = s.image.take().expect("decoded frame present");
+        if s.deadline_ns > 0 && t0.elapsed_ns() > s.deadline_ns {
+            s.late = true;
+            match drop_policy {
+                DropPolicy::Drop => {
+                    s.dropped = true;
+                    return s;
+                }
+                DropPolicy::Degrade => {
+                    // Prefer the gate's own cache; the executor-owned
+                    // copy exists only for the gate-off case.
+                    if let Some(nm) = gate.cached_nm().or(degrade_nm.as_ref()) {
+                        if nm.width() == img.width() && nm.height() == img.height() {
+                            s.nm = Some(nm.clone());
+                            s.degraded = true;
+                            return s;
+                        }
+                    }
+                    // No usable map yet: compute normally below.
+                }
+                DropPolicy::Keep => {}
+            }
+        }
+        match gate.advance(pool, img) {
+            Ok(run) => {
+                s.clean = run.clean;
+                s.dirty = run.dirty;
+                s.gated = run.gated;
+                s.records.push(StageRecord {
+                    kind: StageKind::Nms,
+                    fused_from: Some(StageKind::Pad),
+                    engine: front_engine,
+                    wall_ns: run.wall_ns,
+                    cpu_ns: run.cpu_ns,
+                    tasks: run.task_costs_ns.len() as u64,
+                    task_costs_ns: run.task_costs_ns,
+                });
+                if drop_policy == DropPolicy::Degrade && !gate.mode().is_on() {
+                    degrade_nm = Some(run.nm.clone());
+                }
+                s.nm = Some(run.nm);
+            }
+            Err(e) => s.error = Some(e),
+        }
+        s
+    });
+
+    // -- Stage 3 (collector thread): global threshold + hysteresis from
+    //    the stitched suppressed map, through the stage-graph API.
+    let params = opts.params;
+    let keep_edges = opts.keep_edges;
+    let finish: DynStage<Slot> = Box::new(move |mut s: Slot| {
+        if s.error.is_some() || s.dropped {
+            return s;
+        }
+        let nm = s.nm.take().expect("front produced a suppressed map");
+        let plan = StagePlan::new().from_suppressed(nm);
+        match det.run_plan(&plan, None, &params) {
+            Ok(mut out) => {
+                s.records.append(&mut out.records);
+                match out.take_edges() {
+                    Some(edges) => {
+                        s.edge_pixels = edges.count_edges() as u64;
+                        if keep_edges {
+                            s.edges = Some(edges);
+                        }
+                        s.emit_ns = t0.elapsed_ns();
+                    }
+                    None => {
+                        s.error = Some(Error::Config(
+                            "finish plan yielded no edge map".into(),
+                        ))
+                    }
+                }
+            }
+            Err(e) => s.error = Some(e),
+        }
+        s
+    });
+
+    let slots = pipeline_stages(inputs, opts.inflight, vec![front, finish]);
+    let wall_ns = t0.elapsed_ns();
+
+    // -- Fold the ordered slots into the report.
+    let mut report = StreamReport {
+        label: label.to_string(),
+        source: source.describe(),
+        engine: det.engine().name().to_string(),
+        workers: det.n_workers(),
+        inflight: opts.inflight,
+        frames_offered: n as u64,
+        frames_emitted: 0,
+        dropped: 0,
+        degraded: 0,
+        late: 0,
+        wall_ns,
+        pixels: 0,
+        edge_pixels: 0,
+        gate: GateReport {
+            mode: opts.delta.name(),
+            tiles_clean: 0,
+            tiles_dirty: 0,
+            frames_gated: 0,
+            frames_full: 0,
+        },
+        frame_budget_ns: budget,
+        drop_policy: opts.drop_policy.name().to_string(),
+        stages: BTreeMap::new(),
+        jitter: Default::default(),
+    };
+    let mut jitter = LatencyStats::new();
+    let mut last_emit: Option<u64> = None;
+    let mut frames = Vec::with_capacity(slots.len());
+    for mut s in slots {
+        if let Some(e) = s.error.take() {
+            return Err(e);
+        }
+        report
+            .stages
+            .entry("decode".into())
+            .or_default()
+            .add(s.decode_ns, s.decode_ns, 1);
+        for r in &s.records {
+            report
+                .stages
+                .entry(r.span_name().into())
+                .or_default()
+                .add(r.wall_ns, r.cpu_ns, r.tasks);
+        }
+        if s.late {
+            report.late += 1;
+        }
+        if s.dropped {
+            report.dropped += 1;
+        } else {
+            report.frames_emitted += 1;
+            report.pixels += s.pixels;
+            report.edge_pixels += s.edge_pixels;
+            if let Some(prev) = last_emit {
+                jitter.record(s.emit_ns.saturating_sub(prev));
+            }
+            last_emit = Some(s.emit_ns);
+        }
+        if s.degraded {
+            report.degraded += 1;
+        } else if !s.dropped {
+            if s.gated {
+                report.gate.frames_gated += 1;
+                report.gate.tiles_clean += s.clean as u64;
+                report.gate.tiles_dirty += s.dirty as u64;
+            } else {
+                report.gate.frames_full += 1;
+            }
+        }
+        frames.push(FrameResult {
+            index: s.index,
+            dropped: s.dropped,
+            degraded: s.degraded,
+            late: s.late,
+            gated: s.gated,
+            tiles_clean: s.clean,
+            tiles_dirty: s.dirty,
+            edge_pixels: s.edge_pixels,
+            edges: s.edges.take(),
+        });
+    }
+    report.jitter = jitter.summary();
+    Ok(StreamOutcome { report, frames })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn drop_policy_parse_roundtrip() {
+        for p in [DropPolicy::Drop, DropPolicy::Degrade, DropPolicy::Keep] {
+            assert_eq!(DropPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(DropPolicy::parse("keep"), Some(DropPolicy::Keep));
+        assert_eq!(DropPolicy::parse("bogus"), None);
+    }
+
+    #[test]
+    fn options_from_config_map_fields() {
+        let mut cfg = RunConfig::default();
+        cfg.set("inflight", "7").unwrap();
+        cfg.set("delta-gate", "off").unwrap();
+        cfg.set("frame-budget-ms", "2.5").unwrap();
+        cfg.set("drop-policy", "degrade").unwrap();
+        let opts = StreamOptions::from_config(&cfg);
+        assert_eq!(opts.inflight, 7);
+        assert_eq!(opts.delta, DeltaMode::Off);
+        assert_eq!(opts.frame_budget_ns, 2_500_000);
+        assert_eq!(opts.drop_policy, DropPolicy::Degrade);
+        assert!(!opts.keep_edges);
+    }
+
+    #[test]
+    fn zero_inflight_rejected() {
+        let det = Detector::builder().workers(1).build().unwrap();
+        let src = FrameSource::synthetic(1, 2, 32, 24);
+        let opts = StreamOptions { inflight: 0, ..StreamOptions::default() };
+        assert!(run_stream("t", &src, &det, &opts).is_err());
+    }
+
+    #[test]
+    fn decode_error_surfaces() {
+        let det = Detector::builder().workers(1).build().unwrap();
+        let src = FrameSource::Directory {
+            paths: vec![std::path::PathBuf::from("/nonexistent/frame_0.pgm")],
+        };
+        assert!(run_stream("t", &src, &det, &StreamOptions::default()).is_err());
+    }
+}

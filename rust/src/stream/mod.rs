@@ -1,0 +1,95 @@
+//! The **frame-stream tier** — real-time video edge detection above the
+//! per-image detector. The unit of work is a *frame stream*: the
+//! workload class the paper benchmarks against its FPGA comparator
+//! (~240 fps), previously exercised only by a toy example.
+//!
+//! ```text
+//! FrameSource ──> decode ──> delta-gated front ──> finish ──> report
+//!  (video:<seed>, (paced to  (per-tile change      (global      (fps, Mpix/s,
+//!   dir:, trace:,  the frame  detection; dirty      Threshold +   gate hit-rate,
+//!   scene specs)   budget)    tiles recompute,      Hysteresis    per-stage aggs,
+//!                             clean tiles reuse     via            jitter p50/95/99)
+//!                             the temporal cache)   StagePlan)
+//! ```
+//!
+//! Three ideas compose:
+//!
+//! * **Pipeline across stages** ([`executor`]): decode, front and
+//!   finish each run on their own thread with bounded queues
+//!   (`--inflight`), built on the dynamic
+//!   [`crate::patterns::pipeline::pipeline_stages`] generalization of
+//!   the fixed-arity pipeline pattern. Emission is in frame order.
+//! * **Farm within a frame** ([`delta`]): the front stage recomputes
+//!   dirty gate tiles in parallel over the shared pool.
+//! * **Temporal delta-gating** ([`delta::DeltaGate`]): per-tile change
+//!   detection against the previous frame; clean tiles reuse their
+//!   cached [`crate::canny::Artifact::Suppressed`] core — the serving
+//!   tier's re-threshold cache generalized from per-request to
+//!   per-stream temporal reuse. With the default threshold `0` the
+//!   reuse is **exact** (bit-identical to full per-frame detection);
+//!   near-static video becomes mostly re-threshold work.
+//!
+//! A real-time mode (`--frame-budget-ms`) paces acquisition like a
+//! camera and handles frames that miss their deadline per
+//! `--drop-policy`: `drop` (skip), `degrade` (emit from the cached
+//! suppressed map, skipping the front), or `none` (process anyway,
+//! count lateness).
+//!
+//! ## Stream report JSON schema (`cannyd stream`)
+//!
+//! ```json
+//! {
+//!   "label": "stream[video:7 n=32 512x512]",
+//!   "source": "video:7 n=32 512x512",
+//!   "engine": "patterns", "workers": 4, "inflight": 4,
+//!   "frames": {"offered": 32, "emitted": 32, "dropped": 0,
+//!              "degraded": 0, "late": 0},
+//!   "wall_ns": 812345678, "fps": 39.4, "mpix_per_s": 10.3,
+//!   "edge_pixels": 104882,
+//!   "gate": {"mode": "0", "tiles_clean": 5890, "tiles_dirty": 2046,
+//!            "frames_gated": 31, "frames_full": 1, "hit_rate": 0.74},
+//!   "budget": {"frame_budget_ns": 0, "drop_policy": "drop"},
+//!   "stages": {
+//!     "decode":     {"wall_ns": 1, "cpu_ns": 1, "tasks": 32, "frames": 32},
+//!     "front":      {"wall_ns": 1, "cpu_ns": 1, "tasks": 8192, "frames": 32},
+//!     "threshold":  {"wall_ns": 1, "cpu_ns": 1, "tasks": 256, "frames": 32},
+//!     "hysteresis": {"wall_ns": 1, "cpu_ns": 1, "tasks": 32, "frames": 32}
+//!   },
+//!   "jitter_ns": {"n": 31, "p50": 1, "p95": 1, "p99": 1, "max": 1, "mean": 1.0}
+//! }
+//! ```
+//!
+//! `gate.mode` is `"off"` or the cleanliness threshold; `hit_rate` is
+//! `tiles_clean / (tiles_clean + tiles_dirty)` over gated frames (the
+//! first frame and post-resize frames count as `frames_full`, not
+//! misses). `stages` aggregates one entry per executed
+//! [`crate::canny::StageRecord`] span plus the synthesized `decode`
+//! span; `jitter_ns` summarizes inter-emission gaps.
+//!
+//! ## Frame-trace JSON schema (`--source trace:frames.json`)
+//!
+//! ```json
+//! {"frames": [
+//!   {"file": "frames/frame_0001.pgm"},
+//!   {"scene": "video:3:1", "width": 640, "height": 360},
+//!   {"scene": "shapes:9"}
+//! ]}
+//! ```
+//!
+//! Entries are replayed in order; `scene` entries without sizes use the
+//! run's `--size`.
+//!
+//! Entry points: `cannyd stream --synthetic-frames 32 --delta-gate 0`
+//! (or `--source dir:frames/ --frame-budget-ms 16.7 --drop-policy
+//! degrade`), or programmatically via [`run_stream`] — see the crate
+//! quickstart in [`crate`].
+
+pub mod delta;
+pub mod executor;
+pub mod report;
+pub mod source;
+
+pub use delta::{DeltaGate, DeltaMode, GateRun, GATE_TILE};
+pub use executor::{run_stream, DropPolicy, FrameResult, StreamOptions, StreamOutcome};
+pub use report::{GateReport, StageAgg, StreamReport};
+pub use source::{FrameSource, TraceFrame};

@@ -1,0 +1,264 @@
+//! The stream report: what `cannyd stream` prints — throughput, gate
+//! effectiveness, per-stage accounting and emission jitter, serialized
+//! through [`crate::util::json::Json`] (deterministic key order; the
+//! values themselves are measured wall-clock quantities). The schema is
+//! documented in [`crate::stream`].
+
+use std::collections::BTreeMap;
+
+use crate::service::LatencySummary;
+use crate::util::json::Json;
+
+/// Aggregate of the [`crate::canny::StageRecord`]s one stage span
+/// produced across the whole stream (plus the synthesized `decode`
+/// span).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StageAgg {
+    /// Summed wall time of the span's phases.
+    pub wall_ns: u64,
+    /// Summed thread-CPU cost.
+    pub cpu_ns: u64,
+    /// Summed parallel tasks (gate tiles for `front`, bands for
+    /// `threshold`, 1 per frame for serial spans).
+    pub tasks: u64,
+    /// Frames that executed the span.
+    pub frames: u64,
+}
+
+impl StageAgg {
+    pub fn add(&mut self, wall_ns: u64, cpu_ns: u64, tasks: u64) {
+        self.wall_ns += wall_ns;
+        self.cpu_ns += cpu_ns;
+        self.tasks += tasks;
+        self.frames += 1;
+    }
+
+    fn to_json(self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("wall_ns".into(), Json::Num(self.wall_ns as f64));
+        m.insert("cpu_ns".into(), Json::Num(self.cpu_ns as f64));
+        m.insert("tasks".into(), Json::Num(self.tasks as f64));
+        m.insert("frames".into(), Json::Num(self.frames as f64));
+        Json::Obj(m)
+    }
+}
+
+/// Delta-gate tallies over the stream. Degraded and dropped frames
+/// never ran the gate and count in neither bucket.
+#[derive(Clone, Debug)]
+pub struct GateReport {
+    /// `"off"` or the cleanliness threshold (`"0"` = exact reuse).
+    pub mode: String,
+    /// Tiles reused from the temporal cache (gated frames only).
+    pub tiles_clean: u64,
+    /// Tiles recomputed (gated frames only).
+    pub tiles_dirty: u64,
+    /// Frames classified against a reference frame.
+    pub frames_gated: u64,
+    /// Frames that ran a full front (first frame, size changes, or
+    /// every computed frame when the gate is off).
+    pub frames_full: u64,
+}
+
+impl GateReport {
+    /// Fraction of gated tiles served from the cache (0 when nothing
+    /// was gated).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.tiles_clean + self.tiles_dirty;
+        if total == 0 {
+            return 0.0;
+        }
+        self.tiles_clean as f64 / total as f64
+    }
+
+    fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("mode".into(), Json::Str(self.mode.clone()));
+        m.insert("tiles_clean".into(), Json::Num(self.tiles_clean as f64));
+        m.insert("tiles_dirty".into(), Json::Num(self.tiles_dirty as f64));
+        m.insert("frames_gated".into(), Json::Num(self.frames_gated as f64));
+        m.insert("frames_full".into(), Json::Num(self.frames_full as f64));
+        m.insert("hit_rate".into(), Json::Num(self.hit_rate()));
+        Json::Obj(m)
+    }
+}
+
+/// The complete stream report (schema in [`crate::stream`]).
+#[derive(Clone, Debug)]
+pub struct StreamReport {
+    pub label: String,
+    /// Source description ([`crate::stream::FrameSource::describe`]).
+    pub source: String,
+    /// The detector engine (drives the finish stages; the gated front
+    /// always runs the fused native tile path, as its stage records
+    /// show). XLA detectors are rejected by the stream tier.
+    pub engine: String,
+    pub workers: usize,
+    pub inflight: usize,
+    pub frames_offered: u64,
+    /// Frames that produced an edge map (includes degraded ones).
+    pub frames_emitted: u64,
+    pub dropped: u64,
+    pub degraded: u64,
+    /// Frames past their deadline at front entry, whatever the policy.
+    pub late: u64,
+    pub wall_ns: u64,
+    /// Input pixels of emitted frames.
+    pub pixels: u64,
+    /// Summed edge pixels over emitted frames.
+    pub edge_pixels: u64,
+    pub gate: GateReport,
+    /// 0 = offline (no deadlines).
+    pub frame_budget_ns: u64,
+    pub drop_policy: String,
+    /// Per-span aggregates keyed by
+    /// [`crate::canny::StageRecord::span_name`] plus `decode`.
+    pub stages: BTreeMap<String, StageAgg>,
+    /// Inter-emission gap percentiles (the pacing smoothness measure).
+    pub jitter: LatencySummary,
+}
+
+impl StreamReport {
+    /// Emitted frames per wall second.
+    pub fn fps(&self) -> f64 {
+        if self.wall_ns == 0 {
+            return 0.0;
+        }
+        self.frames_emitted as f64 / (self.wall_ns as f64 / 1e9)
+    }
+
+    /// Megapixels of emitted input per wall second.
+    pub fn mpix_per_s(&self) -> f64 {
+        if self.wall_ns == 0 {
+            return 0.0;
+        }
+        self.pixels as f64 / 1e6 / (self.wall_ns as f64 / 1e9)
+    }
+
+    /// Structured report (sorted keys — a deterministic dump for any
+    /// given set of measured values).
+    pub fn to_json(&self) -> Json {
+        let num = |v: u64| Json::Num(v as f64);
+        let mut m = BTreeMap::new();
+        m.insert("label".into(), Json::Str(self.label.clone()));
+        m.insert("source".into(), Json::Str(self.source.clone()));
+        m.insert("engine".into(), Json::Str(self.engine.clone()));
+        m.insert("workers".into(), Json::Num(self.workers as f64));
+        m.insert("inflight".into(), Json::Num(self.inflight as f64));
+
+        let mut f = BTreeMap::new();
+        f.insert("offered".into(), num(self.frames_offered));
+        f.insert("emitted".into(), num(self.frames_emitted));
+        f.insert("dropped".into(), num(self.dropped));
+        f.insert("degraded".into(), num(self.degraded));
+        f.insert("late".into(), num(self.late));
+        m.insert("frames".into(), Json::Obj(f));
+
+        m.insert("wall_ns".into(), num(self.wall_ns));
+        m.insert("fps".into(), Json::Num(self.fps()));
+        m.insert("mpix_per_s".into(), Json::Num(self.mpix_per_s()));
+        m.insert("edge_pixels".into(), num(self.edge_pixels));
+        m.insert("gate".into(), self.gate.to_json());
+
+        let mut b = BTreeMap::new();
+        b.insert("frame_budget_ns".into(), num(self.frame_budget_ns));
+        b.insert("drop_policy".into(), Json::Str(self.drop_policy.clone()));
+        m.insert("budget".into(), Json::Obj(b));
+
+        m.insert(
+            "stages".into(),
+            Json::Obj(self.stages.iter().map(|(k, v)| (k.clone(), v.to_json())).collect()),
+        );
+        m.insert("jitter_ns".into(), self.jitter.to_json());
+        Json::Obj(m)
+    }
+
+    /// The JSON text `cannyd stream` prints.
+    pub fn to_json_string(&self) -> String {
+        self.to_json().dump()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report() -> StreamReport {
+        let mut stages = BTreeMap::new();
+        let mut front = StageAgg::default();
+        front.add(4_000_000, 3_000_000, 64);
+        front.add(1_000_000, 500_000, 8);
+        stages.insert("front".to_string(), front);
+        StreamReport {
+            label: "t".into(),
+            source: "video:7 n=2 64x48".into(),
+            engine: "patterns".into(),
+            workers: 2,
+            inflight: 4,
+            frames_offered: 2,
+            frames_emitted: 2,
+            dropped: 0,
+            degraded: 0,
+            late: 0,
+            wall_ns: 1_000_000_000,
+            pixels: 2 * 64 * 48,
+            edge_pixels: 321,
+            gate: GateReport {
+                mode: "0".into(),
+                tiles_clean: 56,
+                tiles_dirty: 8,
+                frames_gated: 1,
+                frames_full: 1,
+            },
+            frame_budget_ns: 0,
+            drop_policy: "drop".into(),
+            stages,
+            jitter: LatencySummary::default(),
+        }
+    }
+
+    #[test]
+    fn rates_and_hit_rate() {
+        let r = report();
+        assert!((r.fps() - 2.0).abs() < 1e-9);
+        assert!((r.mpix_per_s() - 2.0 * 64.0 * 48.0 / 1e6).abs() < 1e-9);
+        assert!((r.gate.hit_rate() - 56.0 / 64.0).abs() < 1e-12);
+        let empty = GateReport {
+            mode: "off".into(),
+            tiles_clean: 0,
+            tiles_dirty: 0,
+            frames_gated: 0,
+            frames_full: 2,
+        };
+        assert_eq!(empty.hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn stage_agg_accumulates() {
+        let mut a = StageAgg::default();
+        a.add(10, 5, 3);
+        a.add(20, 10, 1);
+        assert_eq!((a.wall_ns, a.cpu_ns, a.tasks, a.frames), (30, 15, 4, 2));
+    }
+
+    #[test]
+    fn json_schema_fields() {
+        let j = report().to_json();
+        assert_eq!(j.get("engine").unwrap().as_str(), Some("patterns"));
+        let frames = j.get("frames").unwrap();
+        for k in ["offered", "emitted", "dropped", "degraded", "late"] {
+            assert!(frames.get(k).is_some(), "frames.{k} missing");
+        }
+        let gate = j.get("gate").unwrap();
+        assert_eq!(gate.get("mode").unwrap().as_str(), Some("0"));
+        assert!((gate.get("hit_rate").unwrap().as_f64().unwrap() - 0.875).abs() < 1e-12);
+        let front = j.get("stages").unwrap().get("front").unwrap();
+        assert_eq!(front.get("wall_ns").unwrap().as_usize(), Some(5_000_000));
+        assert_eq!(front.get("frames").unwrap().as_usize(), Some(2));
+        assert!(j.get("jitter_ns").unwrap().get("p99").is_some());
+        assert_eq!(j.get("budget").unwrap().get("drop_policy").unwrap().as_str(), Some("drop"));
+        // Round-trips through the parser.
+        let text = report().to_json_string();
+        assert_eq!(Json::parse(&text).unwrap(), j);
+    }
+}

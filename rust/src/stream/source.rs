@@ -1,0 +1,367 @@
+//! Frame acquisition for the stream tier: where frames come from
+//! before the pipeline-parallel executor sees them. Mirrors the
+//! acquisition / pipeline split industrial vision stacks use — a
+//! source only knows how to produce frame `k`, never how frames are
+//! scheduled, gated or dropped.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::image::synth::{generate, Scene};
+use crate::image::{pgm, ImageF32};
+use crate::util::json::Json;
+
+/// A finite, indexable stream of frames. All variants are pull-based:
+/// the executor's source stage calls [`FrameSource::frame`] lazily, so
+/// decode overlaps detection (pipeline parallelism starts at
+/// acquisition).
+#[derive(Clone, Debug)]
+pub enum FrameSource {
+    /// `Scene::Video` frames: one moving-shapes scene per index, built
+    /// through the shared [`Scene::parse`] `video:<seed>:<frame>` spec.
+    Synthetic { seed: u64, frames: usize, width: usize, height: usize },
+    /// A fixed (non-video) scene repeated every frame — a fully static
+    /// stream, the delta gate's best case.
+    Static { scene: Scene, frames: usize, width: usize, height: usize },
+    /// In-memory frames (tests and embedding programs).
+    Frames(Vec<ImageF32>),
+    /// A directory of numbered PGM/PPM files, replayed in numeric
+    /// order.
+    Directory { paths: Vec<PathBuf> },
+    /// A recorded trace: an explicit frame list mixing files and scene
+    /// specs (see the JSON schema in [`crate::stream`]).
+    Trace { entries: Vec<TraceFrame> },
+}
+
+/// One entry of a [`FrameSource::Trace`].
+#[derive(Clone, Debug)]
+pub enum TraceFrame {
+    /// Decode this image file.
+    File(PathBuf),
+    /// Generate this scene spec at the given size.
+    Scene { spec: String, width: usize, height: usize },
+}
+
+impl FrameSource {
+    /// A `Scene::Video` source (the `video:<seed>` spec).
+    pub fn synthetic(seed: u64, frames: usize, width: usize, height: usize) -> FrameSource {
+        FrameSource::Synthetic { seed, frames, width, height }
+    }
+
+    /// Parse a CLI source spec:
+    ///
+    /// * `video` / `video:<seed>` — moving synthetic scene (`frames`
+    ///   frames of `width`x`height`; bare `video` uses `default_seed`);
+    ///   `video:<seed>:<frame>` pins that one frame (a static stream,
+    ///   same spelling `cannyd run --scene` accepts);
+    /// * any other [`Scene::parse`] spec (`shapes:3`, `checker:16`, …)
+    ///   — that scene repeated `frames` times (a static stream);
+    /// * `dir:<path>` — every `.pgm`/`.ppm` in the directory, numeric
+    ///   filename order;
+    /// * `trace:<path>` — a recorded JSON frame trace.
+    pub fn parse(
+        spec: &str,
+        frames: usize,
+        width: usize,
+        height: usize,
+        default_seed: u64,
+    ) -> Result<FrameSource> {
+        if frames == 0 {
+            return Err(Error::Config("stream needs >= 1 frame".into()));
+        }
+        if let Some(path) = spec.strip_prefix("dir:") {
+            return FrameSource::from_dir(Path::new(path));
+        }
+        if let Some(path) = spec.strip_prefix("trace:") {
+            return FrameSource::from_trace_file(Path::new(path), width, height);
+        }
+        let (name, arg) = match spec.split_once(':') {
+            Some((n, a)) => (n, Some(a)),
+            None => (spec, None),
+        };
+        if name == "video" {
+            return match arg {
+                None => Ok(FrameSource::Synthetic { seed: default_seed, frames, width, height }),
+                Some(a) => match a.split_once(':') {
+                    // `video:<seed>`: a moving stream, one frame per index.
+                    None => {
+                        let seed = a.parse::<u64>().map_err(|_| {
+                            Error::Config(format!("bad video seed `{a}` in `{spec}`"))
+                        })?;
+                        Ok(FrameSource::Synthetic { seed, frames, width, height })
+                    }
+                    // `video:<seed>:<frame>` (the `--scene` spelling) pins
+                    // one frame: a static stream. Parsed strictly — the
+                    // lenient Scene defaults would mask typos.
+                    Some((s, f)) => match (s.parse::<u64>(), f.parse::<usize>()) {
+                        (Ok(seed), Ok(frame)) => Ok(FrameSource::Static {
+                            scene: Scene::Video { seed, frame },
+                            frames,
+                            width,
+                            height,
+                        }),
+                        _ => Err(Error::Config(format!(
+                            "bad video spec `{spec}` (video[:seed[:frame]])"
+                        ))),
+                    },
+                },
+            };
+        }
+        match Scene::parse(spec) {
+            Some(scene) => Ok(FrameSource::Static { scene, frames, width, height }),
+            None => Err(Error::Config(format!(
+                "unknown stream source `{spec}` (video[:seed[:frame]] | <scene spec> | dir:PATH | trace:PATH)"
+            ))),
+        }
+    }
+
+    /// All `.pgm`/`.ppm` files under `dir`, ordered by the numeric
+    /// value embedded in the file stem (then by name), so `frame_2.pgm`
+    /// precedes `frame_10.pgm`.
+    pub fn from_dir(dir: &Path) -> Result<FrameSource> {
+        let mut paths: Vec<PathBuf> = std::fs::read_dir(dir)?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| {
+                matches!(
+                    p.extension().and_then(|e| e.to_str()),
+                    Some("pgm") | Some("ppm")
+                )
+            })
+            .collect();
+        if paths.is_empty() {
+            return Err(Error::Config(format!(
+                "no .pgm/.ppm frames in `{}`",
+                dir.display()
+            )));
+        }
+        paths.sort_by_key(|p| {
+            let name = p.file_stem().and_then(|s| s.to_str()).unwrap_or("").to_string();
+            (numeric_key(&name), name)
+        });
+        Ok(FrameSource::Directory { paths })
+    }
+
+    /// Load a recorded frame trace (schema in [`crate::stream`]); scene
+    /// entries without explicit sizes fall back to `width`x`height`.
+    pub fn from_trace_file(path: &Path, width: usize, height: usize) -> Result<FrameSource> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text)
+            .map_err(|e| Error::Config(format!("{}: {e}", path.display())))?;
+        let frames = j
+            .get("frames")
+            .and_then(|f| f.as_arr())
+            .ok_or_else(|| {
+                Error::Config(format!("{}: missing `frames` array", path.display()))
+            })?;
+        let mut entries = Vec::with_capacity(frames.len());
+        for (k, f) in frames.iter().enumerate() {
+            if let Some(file) = f.get("file").and_then(|v| v.as_str()) {
+                entries.push(TraceFrame::File(PathBuf::from(file)));
+            } else if let Some(spec) = f.get("scene").and_then(|v| v.as_str()) {
+                entries.push(TraceFrame::Scene {
+                    spec: spec.to_string(),
+                    width: f.get("width").and_then(|v| v.as_usize()).unwrap_or(width),
+                    height: f.get("height").and_then(|v| v.as_usize()).unwrap_or(height),
+                });
+            } else {
+                return Err(Error::Config(format!(
+                    "{}: frame {k} needs `file` or `scene`",
+                    path.display()
+                )));
+            }
+        }
+        if entries.is_empty() {
+            return Err(Error::Config(format!("{}: empty frame trace", path.display())));
+        }
+        Ok(FrameSource::Trace { entries })
+    }
+
+    /// Number of frames this source yields.
+    pub fn len(&self) -> usize {
+        match self {
+            FrameSource::Synthetic { frames, .. } | FrameSource::Static { frames, .. } => *frames,
+            FrameSource::Frames(v) => v.len(),
+            FrameSource::Directory { paths } => paths.len(),
+            FrameSource::Trace { entries } => entries.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Produce (decode or generate) frame `k`.
+    pub fn frame(&self, k: usize) -> Result<ImageF32> {
+        match self {
+            FrameSource::Synthetic { seed, width, height, .. } => {
+                // One parser for CLI scenes and stream frames: frame k
+                // is exactly `--scene video:<seed>:<k>`.
+                let spec = format!("video:{seed}:{k}");
+                let scene = Scene::parse(&spec)
+                    .ok_or_else(|| Error::Config(format!("bad scene spec `{spec}`")))?;
+                Ok(generate(scene, *width, *height))
+            }
+            FrameSource::Static { scene, width, height, .. } => {
+                Ok(generate(*scene, *width, *height))
+            }
+            FrameSource::Frames(v) => v
+                .get(k)
+                .cloned()
+                .ok_or_else(|| Error::Config(format!("frame {k} out of range"))),
+            FrameSource::Directory { paths } => Ok(pgm::read_pgm(&paths[k])?.to_f32()),
+            FrameSource::Trace { entries } => match &entries[k] {
+                TraceFrame::File(p) => Ok(pgm::read_pgm(p)?.to_f32()),
+                TraceFrame::Scene { spec, width, height } => {
+                    let scene = Scene::parse(spec)
+                        .ok_or_else(|| Error::Config(format!("bad scene spec `{spec}`")))?;
+                    Ok(generate(scene, *width, *height))
+                }
+            },
+        }
+    }
+
+    /// Report / label description.
+    pub fn describe(&self) -> String {
+        match self {
+            FrameSource::Synthetic { seed, frames, width, height } => {
+                format!("video:{seed} n={frames} {width}x{height}")
+            }
+            FrameSource::Static { scene, frames, width, height } => {
+                format!("{scene:?} n={frames} {width}x{height} (static)")
+            }
+            FrameSource::Frames(v) => format!("frames n={}", v.len()),
+            FrameSource::Directory { paths } => format!("dir n={}", paths.len()),
+            FrameSource::Trace { entries } => format!("trace n={}", entries.len()),
+        }
+    }
+}
+
+/// The last run of ASCII digits in `name`, as the primary sort key for
+/// numbered frame files (`usize::MAX` when there is none).
+fn numeric_key(name: &str) -> u64 {
+    let mut best: Option<u64> = None;
+    let mut cur: Option<u64> = None;
+    for c in name.chars() {
+        match c.to_digit(10) {
+            Some(d) => {
+                cur = Some(cur.unwrap_or(0).saturating_mul(10).saturating_add(d as u64));
+            }
+            None => {
+                if cur.is_some() {
+                    best = cur.take();
+                }
+            }
+        }
+    }
+    if cur.is_some() {
+        best = cur;
+    }
+    best.unwrap_or(u64::MAX)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_frames_match_scene_parser() {
+        let src = FrameSource::synthetic(3, 4, 48, 32);
+        assert_eq!(src.len(), 4);
+        let f2 = src.frame(2).unwrap();
+        let direct = generate(Scene::Video { seed: 3, frame: 2 }, 48, 32);
+        assert_eq!(f2, direct);
+        assert_ne!(src.frame(0).unwrap(), f2, "video frames must move");
+    }
+
+    #[test]
+    fn parse_specs() {
+        match FrameSource::parse("video:9", 8, 64, 48, 7).unwrap() {
+            FrameSource::Synthetic { seed, frames, width, height } => {
+                assert_eq!((seed, frames, width, height), (9, 8, 64, 48));
+            }
+            other => panic!("wrong source {other:?}"),
+        }
+        match FrameSource::parse("video", 8, 64, 48, 7).unwrap() {
+            FrameSource::Synthetic { seed, .. } => assert_eq!(seed, 7),
+            other => panic!("wrong source {other:?}"),
+        }
+        match FrameSource::parse("checker:8", 3, 32, 32, 7).unwrap() {
+            FrameSource::Static { frames, .. } => assert_eq!(frames, 3),
+            other => panic!("wrong source {other:?}"),
+        }
+        // `video:<seed>:<frame>` (the --scene spelling) pins one frame.
+        match FrameSource::parse("video:3:12", 4, 32, 32, 7).unwrap() {
+            FrameSource::Static { scene, frames, .. } => {
+                assert_eq!(scene, Scene::Video { seed: 3, frame: 12 });
+                assert_eq!(frames, 4);
+            }
+            other => panic!("wrong source {other:?}"),
+        }
+        assert!(FrameSource::parse("nope", 8, 64, 48, 7).is_err());
+        assert!(FrameSource::parse("video:bogus", 8, 64, 48, 7).is_err());
+        assert!(FrameSource::parse("video:3:x", 8, 64, 48, 7).is_err());
+        assert!(FrameSource::parse("video", 0, 64, 48, 7).is_err());
+    }
+
+    #[test]
+    fn static_source_repeats_exactly() {
+        let src = FrameSource::parse("shapes:5", 3, 40, 30, 7).unwrap();
+        assert_eq!(src.frame(0).unwrap(), src.frame(2).unwrap());
+    }
+
+    #[test]
+    fn directory_orders_numerically() {
+        let dir = std::env::temp_dir().join("canny_stream_dir_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        for (name, v) in [("frame_10.pgm", 10u8), ("frame_2.pgm", 2), ("frame_1.pgm", 1)] {
+            let img = crate::image::ImageU8::from_vec(1, 1, vec![v]).unwrap();
+            pgm::write_pgm(&dir.join(name), &img).unwrap();
+        }
+        let src = FrameSource::from_dir(&dir).unwrap();
+        assert_eq!(src.len(), 3);
+        // Numeric, not lexicographic: 1, 2, 10.
+        let vals: Vec<f32> = (0..3).map(|k| src.frame(k).unwrap().get(0, 0)).collect();
+        assert!(vals[0] < vals[1] && vals[1] < vals[2], "{vals:?}");
+        assert!(FrameSource::from_dir(&dir.join("missing")).is_err());
+    }
+
+    #[test]
+    fn trace_mixes_files_and_scenes() {
+        let dir = std::env::temp_dir().join("canny_stream_trace_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let img = crate::image::ImageU8::from_vec(2, 2, vec![1, 2, 3, 4]).unwrap();
+        let img_path = dir.join("f0.pgm");
+        pgm::write_pgm(&img_path, &img).unwrap();
+        let trace = dir.join("trace.json");
+        std::fs::write(
+            &trace,
+            format!(
+                "{{\"frames\": [{{\"file\": \"{}\"}}, {{\"scene\": \"video:3:1\", \"width\": 16, \"height\": 12}}, {{\"scene\": \"gradient\"}}]}}",
+                img_path.display()
+            ),
+        )
+        .unwrap();
+        let src = FrameSource::from_trace_file(&trace, 24, 20).unwrap();
+        assert_eq!(src.len(), 3);
+        assert_eq!(src.frame(0).unwrap(), img.to_f32());
+        let f1 = src.frame(1).unwrap();
+        assert_eq!((f1.width(), f1.height()), (16, 12));
+        // Default size applies when the entry has none.
+        let f2 = src.frame(2).unwrap();
+        assert_eq!((f2.width(), f2.height()), (24, 20));
+        // Malformed entries rejected.
+        std::fs::write(&trace, "{\"frames\": [{\"neither\": 1}]}").unwrap();
+        assert!(FrameSource::from_trace_file(&trace, 8, 8).is_err());
+        std::fs::write(&trace, "{\"frames\": []}").unwrap();
+        assert!(FrameSource::from_trace_file(&trace, 8, 8).is_err());
+    }
+
+    #[test]
+    fn numeric_key_extracts_last_run() {
+        assert_eq!(numeric_key("frame_12"), 12);
+        assert_eq!(numeric_key("cam2_frame_003"), 3);
+        assert_eq!(numeric_key("noframe"), u64::MAX);
+    }
+}

@@ -1,0 +1,227 @@
+//! Stream-tier integration tests: delta-gating correctness (the
+//! bit-identity properties from the issue), real-time budget handling,
+//! and the documented report schema.
+
+use canny_par::canny::{CannyParams, Engine};
+use canny_par::coordinator::Detector;
+use canny_par::image::synth::{generate, Scene};
+use canny_par::image::ImageF32;
+use canny_par::stream::{
+    run_stream, DeltaMode, DropPolicy, FrameSource, StreamOptions, StreamOutcome,
+};
+use canny_par::util::json::Json;
+
+fn detector(engine: Engine, workers: usize) -> Detector {
+    Detector::builder().engine(engine).workers(workers).build().unwrap()
+}
+
+fn run(det: &Detector, src: &FrameSource, delta: DeltaMode) -> StreamOutcome {
+    let opts = StreamOptions { delta, keep_edges: true, ..StreamOptions::default() };
+    run_stream("test", src, det, &opts).unwrap()
+}
+
+/// Property: with the gate forced all-dirty (`off`) the stream is
+/// bit-identical to per-frame full detection — and with the exact gate
+/// (threshold 0) it *stays* bit-identical even though most tiles are
+/// reused, across the serial / patterns / tiled engines.
+#[test]
+fn gated_stream_bit_identical_to_full_detection() {
+    let (w, h, n) = (96usize, 72usize, 4usize);
+    let src = FrameSource::synthetic(5, n, w, h);
+    let params = CannyParams::default();
+    for (engine, workers) in
+        [(Engine::Serial, 1), (Engine::Patterns, 3), (Engine::TiledPatterns, 2)]
+    {
+        let det = detector(engine, workers);
+        let all_dirty = run(&det, &src, DeltaMode::Off);
+        let gated = run(&det, &src, DeltaMode::Gate(0.0));
+        assert_eq!(all_dirty.frames.len(), n);
+        assert_eq!(gated.frames.len(), n);
+        for k in 0..n {
+            let frame = generate(Scene::Video { seed: 5, frame: k }, w, h);
+            let want = det.detect(&frame, &params).unwrap();
+            let got_off = all_dirty.frames[k].edges.as_ref().unwrap();
+            assert_eq!(
+                want.diff_count(got_off),
+                0,
+                "{engine:?} frame {k}: all-dirty stream diverged from full detection"
+            );
+            let got_gated = gated.frames[k].edges.as_ref().unwrap();
+            assert_eq!(
+                want.diff_count(got_gated),
+                0,
+                "{engine:?} frame {k}: exact-gated stream diverged from full detection"
+            );
+        }
+        // The off run never gates; the exact run gates every frame but
+        // the first.
+        assert_eq!(all_dirty.report.gate.frames_gated, 0);
+        assert_eq!(all_dirty.report.gate.frames_full, n as u64);
+        assert_eq!(gated.report.gate.frames_gated, (n - 1) as u64);
+        assert_eq!(gated.report.gate.frames_full, 1);
+    }
+}
+
+/// Property: a fully static scene converges to 100% gate hits with
+/// byte-identical edge maps across frames.
+#[test]
+fn static_scene_converges_to_full_gate_hits() {
+    let src = FrameSource::parse("shapes:3", 6, 128, 96, 7).unwrap();
+    let det = detector(Engine::Patterns, 2);
+    let out = run(&det, &src, DeltaMode::default());
+    let g = &out.report.gate;
+    assert_eq!(g.frames_full, 1, "only the first frame runs a full front");
+    assert_eq!(g.frames_gated, 5);
+    assert_eq!(g.tiles_dirty, 0, "a static scene must not recompute any tile");
+    assert!(g.tiles_clean > 0);
+    assert!((g.hit_rate() - 1.0).abs() < 1e-12);
+    let first = out.frames[0].edges.as_ref().unwrap();
+    assert!(first.count_edges() > 0, "static scene still has real edges");
+    for f in &out.frames[1..] {
+        assert_eq!(first.diff_count(f.edges.as_ref().unwrap()), 0);
+    }
+}
+
+/// On a moving `Scene::Video` stream the exact gate still finds real
+/// reuse: the background is static, so a nonzero share of tiles is
+/// clean (the acceptance criterion for `cannyd stream`).
+#[test]
+fn video_scene_reports_nonzero_gate_hits() {
+    let src = FrameSource::synthetic(7, 3, 480, 480);
+    let det = detector(Engine::Patterns, 4);
+    let opts = StreamOptions { delta: DeltaMode::default(), ..StreamOptions::default() };
+    let out = run_stream("video", &src, &det, &opts).unwrap();
+    let g = &out.report.gate;
+    assert_eq!(g.frames_gated, 2);
+    assert!(
+        g.tiles_clean > 0,
+        "moving shapes on a static background must leave clean tiles (dirty={})",
+        g.tiles_dirty
+    );
+    assert!(g.hit_rate() > 0.0);
+    assert!(g.tiles_dirty > 0, "moving shapes must dirty some tiles");
+    assert_eq!(out.report.frames_emitted, 3);
+    assert!(out.report.edge_pixels > 0);
+}
+
+#[test]
+fn drop_policy_skips_late_frames() {
+    let src = FrameSource::parse("shapes:9", 5, 32, 24, 7).unwrap();
+    let det = detector(Engine::Serial, 1);
+    let opts = StreamOptions {
+        frame_budget_ns: 100, // deadlines in the past by the time stages run
+        drop_policy: DropPolicy::Drop,
+        ..StreamOptions::default()
+    };
+    let out = run_stream("late", &src, &det, &opts).unwrap();
+    let r = &out.report;
+    assert!(r.dropped >= 1, "a 100ns budget must drop frames");
+    assert_eq!(r.frames_emitted + r.dropped, r.frames_offered);
+    assert!(r.late >= r.dropped);
+    assert_eq!(r.degraded, 0);
+    for f in out.frames.iter().filter(|f| f.dropped) {
+        assert_eq!(f.edge_pixels, 0);
+        assert!(f.edges.is_none());
+    }
+}
+
+#[test]
+fn degrade_policy_emits_from_the_cache() {
+    let src = FrameSource::parse("shapes:9", 6, 48, 48, 7).unwrap();
+    let det = detector(Engine::Serial, 1);
+    let opts = StreamOptions {
+        frame_budget_ns: 100,
+        drop_policy: DropPolicy::Degrade,
+        keep_edges: true,
+        ..StreamOptions::default()
+    };
+    let out = run_stream("degrade", &src, &det, &opts).unwrap();
+    let r = &out.report;
+    assert_eq!(r.frames_emitted, r.frames_offered, "degrade never drops");
+    assert_eq!(r.dropped, 0);
+    assert!(r.degraded >= 1, "late frames with a warm cache must degrade");
+    // The first frame has no cache, so it computes even when late.
+    assert!(!out.frames[0].degraded);
+    assert!(out.frames[0].edges.as_ref().unwrap().count_edges() > 0);
+    // Degraded frames reuse the cached suppressed map; on a static
+    // source their edges match the computed first frame exactly.
+    let first = out.frames[0].edges.as_ref().unwrap();
+    for f in out.frames.iter().filter(|f| f.degraded) {
+        assert_eq!(first.diff_count(f.edges.as_ref().unwrap()), 0);
+    }
+}
+
+/// Both `--delta-gate off` and the default produce the documented
+/// stream-report schema (the `cannyd stream` acceptance shape).
+#[test]
+fn report_schema_matches_documentation() {
+    let src = FrameSource::synthetic(7, 3, 64, 48);
+    let det = detector(Engine::Patterns, 2);
+    for delta in [DeltaMode::Off, DeltaMode::default()] {
+        let out = run(&det, &src, delta);
+        let j = out.report.to_json();
+        for key in
+            ["label", "source", "engine", "workers", "inflight", "wall_ns", "fps",
+             "mpix_per_s", "edge_pixels", "frames", "gate", "budget", "stages",
+             "jitter_ns"]
+        {
+            assert!(j.get(key).is_some(), "missing `{key}` ({delta:?})");
+        }
+        let frames = j.get("frames").unwrap();
+        for key in ["offered", "emitted", "dropped", "degraded", "late"] {
+            assert!(frames.get(key).is_some(), "missing frames.{key}");
+        }
+        assert_eq!(frames.get("offered").unwrap().as_usize(), Some(3));
+        assert_eq!(frames.get("emitted").unwrap().as_usize(), Some(3));
+        let gate = j.get("gate").unwrap();
+        for key in
+            ["mode", "tiles_clean", "tiles_dirty", "frames_gated", "frames_full", "hit_rate"]
+        {
+            assert!(gate.get(key).is_some(), "missing gate.{key}");
+        }
+        assert_eq!(
+            gate.get("mode").unwrap().as_str(),
+            Some(if delta == DeltaMode::Off { "off" } else { "0" })
+        );
+        let stages = j.get("stages").unwrap();
+        for span in ["decode", "front", "threshold", "hysteresis"] {
+            let s = stages.get(span).unwrap_or_else(|| panic!("missing stages.{span}"));
+            assert_eq!(s.get("frames").unwrap().as_usize(), Some(3));
+            for key in ["wall_ns", "cpu_ns", "tasks"] {
+                assert!(s.get(key).is_some(), "missing stages.{span}.{key}");
+            }
+        }
+        for key in ["n", "p50", "p95", "p99", "max", "mean"] {
+            assert!(j.get("jitter_ns").unwrap().get(key).is_some(), "missing jitter_ns.{key}");
+        }
+        let budget = j.get("budget").unwrap();
+        assert_eq!(budget.get("frame_budget_ns").unwrap().as_usize(), Some(0));
+        assert_eq!(budget.get("drop_policy").unwrap().as_str(), Some("drop"));
+        // The dump round-trips through the crate's parser.
+        assert_eq!(Json::parse(&out.report.to_json_string()).unwrap(), j);
+    }
+}
+
+/// In-memory frame sources drive the executor directly (the embedding
+/// API), and a mid-stream size change resets the gate instead of
+/// corrupting the cache.
+#[test]
+fn in_memory_source_and_size_change() {
+    let a = generate(Scene::Shapes { seed: 1 }, 64, 48);
+    let b = generate(Scene::Shapes { seed: 1 }, 48, 64);
+    let frames: Vec<ImageF32> = vec![a.clone(), a.clone(), b.clone(), b];
+    let src = FrameSource::Frames(frames);
+    let det = detector(Engine::Patterns, 2);
+    let out = run(&det, &src, DeltaMode::default());
+    let want = det.detect(&a, &CannyParams::default()).unwrap();
+    assert_eq!(want.diff_count(out.frames[0].edges.as_ref().unwrap()), 0);
+    // Frames 0 and 2 are full (first frame, size change); 1 and 3 gate
+    // against an identical predecessor.
+    assert_eq!(out.report.gate.frames_full, 2);
+    assert_eq!(out.report.gate.frames_gated, 2);
+    assert_eq!(out.report.gate.tiles_dirty, 0);
+    assert_eq!(
+        out.frames[2].edges.as_ref().unwrap().diff_count(out.frames[3].edges.as_ref().unwrap()),
+        0
+    );
+}
