@@ -1,0 +1,205 @@
+//! Content-addressed cache keys: a 128-bit FNV-style digest over the
+//! image bytes, a parameter fingerprint, and the pipeline span the
+//! artifact covers.
+//!
+//! Content addressing (rather than `(scene, shape)` identity, which the
+//! old per-lane `SuppressedCache` used) is what lets *different*
+//! producers deduplicate: a serving lane warming the cache with a
+//! front-only request and a stream executor offering a decoded frame
+//! produce the same key whenever the pixels are the same — so a
+//! re-threshold request can hit an artifact a video stream computed.
+//!
+//! The digest is two independent 64-bit FNV-style streams over the
+//! same input (different offset bases), concatenated to 128 bits.
+//! Pixel data is folded a **word at a time** (one XOR + multiply per
+//! u32 per stream, not per byte) so the digest runs at multiple GB/s —
+//! it sits on the hot path of every stream frame and every
+//! partial-kind request, and the virtual clock's modeled lookup cost
+//! ([`crate::service::server::CACHE_HASH_PIXELS_PER_NS`]) assumes this
+//! rate. Byte-slice input still folds per byte; the two forms are
+//! deliberately not byte-compatible with standard FNV-1a.
+//! Non-cryptographic by design: keys never cross a trust boundary, and
+//! 128 bits keeps accidental collisions out of reach for any realistic
+//! working set. No external dependencies.
+//!
+//! The parameter fingerprint folds in only the parameters the span's
+//! *output* depends on. Every engine produces bit-identical artifacts
+//! (the determinism invariant), and the front (Pad→NMS) ignores the
+//! hysteresis thresholds entirely — so a `Suppressed` artifact computed
+//! for one `lo`/`hi` pair is correctly shared across a whole
+//! re-threshold sweep. Spans covering Threshold or Hysteresis do fold
+//! `lo`/`hi` in, since those stages' outputs depend on them.
+
+use crate::canny::{CannyParams, StageKind};
+use crate::image::ImageF32;
+
+const FNV_OFFSET_A: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_OFFSET_B: u64 = 0xcbf2_9ce4_8422_2325 ^ 0x9e37_79b9_7f4a_7c15;
+const FNV_PRIME: u64 = 0x1_0000_0000_01b3;
+
+/// A 128-bit content digest — the cache's lookup key.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ArtifactKey {
+    pub hi: u64,
+    pub lo: u64,
+}
+
+impl ArtifactKey {
+    /// Which of `n` shards this key lives in.
+    pub fn shard(&self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // hi and lo are independent streams; fold both so shard choice
+        // is not blind to half the digest.
+        ((self.hi ^ self.lo.rotate_left(32)) % n as u64) as usize
+    }
+
+    /// Key for the suppressed-magnitude artifact of `img` — the
+    /// Pad→NMS span. Threshold-free by construction: every `lo`/`hi`
+    /// re-threshold of the same content shares this key.
+    pub fn suppressed(img: &ImageF32) -> ArtifactKey {
+        ArtifactKey::for_span(img, None, StageKind::Pad, StageKind::Nms)
+    }
+
+    /// General form: digest `img`'s bytes, the `first..=last` span tag,
+    /// and the parameters `last` depends on (`lo`/`hi` once the span
+    /// reaches Threshold; earlier stages are parameter-free — tiling
+    /// and grain choices never change artifact bytes).
+    pub fn for_span(
+        img: &ImageF32,
+        params: Option<&CannyParams>,
+        first: StageKind,
+        last: StageKind,
+    ) -> ArtifactKey {
+        let mut h = KeyHasher::new();
+        h.write_u64(first as u64);
+        h.write_u64(last as u64);
+        h.write_u64(img.width() as u64);
+        h.write_u64(img.height() as u64);
+        if last >= StageKind::Threshold {
+            let p = params.copied().unwrap_or_default();
+            h.write_u64(p.lo.to_bits() as u64);
+            h.write_u64(p.hi.to_bits() as u64);
+        }
+        for &v in img.data() {
+            h.write_u32(v.to_bits());
+        }
+        h.finish()
+    }
+}
+
+/// Incremental digest builder (two FNV-1a streams).
+#[derive(Clone, Debug)]
+pub struct KeyHasher {
+    a: u64,
+    b: u64,
+}
+
+impl Default for KeyHasher {
+    fn default() -> Self {
+        KeyHasher::new()
+    }
+}
+
+impl KeyHasher {
+    pub fn new() -> KeyHasher {
+        KeyHasher { a: FNV_OFFSET_A, b: FNV_OFFSET_B }
+    }
+
+    #[inline]
+    pub fn write_byte(&mut self, v: u8) {
+        self.a = (self.a ^ v as u64).wrapping_mul(FNV_PRIME);
+        self.b = (self.b ^ v as u64).wrapping_mul(FNV_PRIME);
+    }
+
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &v in bytes {
+            self.write_byte(v);
+        }
+    }
+
+    /// Fold a whole word per stream — the pixel-data fast path (4 bytes
+    /// per multiply instead of 1).
+    #[inline]
+    pub fn write_u32(&mut self, v: u32) {
+        self.a = (self.a ^ v as u64).wrapping_mul(FNV_PRIME);
+        self.b = (self.b ^ v as u64).wrapping_mul(FNV_PRIME);
+    }
+
+    #[inline]
+    pub fn write_u64(&mut self, v: u64) {
+        self.a = (self.a ^ v).wrapping_mul(FNV_PRIME);
+        self.b = (self.b ^ v).wrapping_mul(FNV_PRIME);
+    }
+
+    pub fn finish(self) -> ArtifactKey {
+        ArtifactKey { hi: self.a, lo: self.b }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::synth::{generate, Scene};
+
+    #[test]
+    fn identical_content_identical_key() {
+        let a = generate(Scene::Shapes { seed: 5 }, 48, 32);
+        let b = generate(Scene::Shapes { seed: 5 }, 48, 32);
+        assert_eq!(ArtifactKey::suppressed(&a), ArtifactKey::suppressed(&b));
+    }
+
+    #[test]
+    fn different_content_different_key() {
+        let a = generate(Scene::Shapes { seed: 5 }, 48, 32);
+        let b = generate(Scene::Shapes { seed: 6 }, 48, 32);
+        assert_ne!(ArtifactKey::suppressed(&a), ArtifactKey::suppressed(&b));
+        // A single-pixel flip changes the digest.
+        let mut c = a.clone();
+        c.set(7, 7, c.get(7, 7) + 0.25);
+        assert_ne!(ArtifactKey::suppressed(&a), ArtifactKey::suppressed(&c));
+    }
+
+    #[test]
+    fn dimensions_are_part_of_the_key() {
+        // Same bytes, transposed geometry: distinct artifacts, distinct
+        // keys.
+        let a = ImageF32::from_vec(4, 2, vec![0.5; 8]).unwrap();
+        let b = ImageF32::from_vec(2, 4, vec![0.5; 8]).unwrap();
+        assert_ne!(ArtifactKey::suppressed(&a), ArtifactKey::suppressed(&b));
+    }
+
+    #[test]
+    fn span_is_part_of_the_key() {
+        let img = generate(Scene::Gradient, 16, 16);
+        let front = ArtifactKey::for_span(&img, None, StageKind::Pad, StageKind::Nms);
+        let grad = ArtifactKey::for_span(&img, None, StageKind::Pad, StageKind::Sobel);
+        assert_ne!(front, grad);
+    }
+
+    #[test]
+    fn thresholds_fingerprint_only_threshold_spans() {
+        let img = generate(Scene::Gradient, 16, 16);
+        let p1 = CannyParams { lo: 0.05, hi: 0.15, ..CannyParams::default() };
+        let p2 = CannyParams { lo: 0.02, hi: 0.30, ..CannyParams::default() };
+        // The front ignores lo/hi: a re-threshold sweep shares one key.
+        assert_eq!(
+            ArtifactKey::for_span(&img, Some(&p1), StageKind::Pad, StageKind::Nms),
+            ArtifactKey::for_span(&img, Some(&p2), StageKind::Pad, StageKind::Nms),
+        );
+        // A span reaching Threshold depends on them.
+        assert_ne!(
+            ArtifactKey::for_span(&img, Some(&p1), StageKind::Pad, StageKind::Threshold),
+            ArtifactKey::for_span(&img, Some(&p2), StageKind::Pad, StageKind::Threshold),
+        );
+    }
+
+    #[test]
+    fn shard_choice_in_range_and_stable() {
+        let img = generate(Scene::Shapes { seed: 1 }, 24, 24);
+        let k = ArtifactKey::suppressed(&img);
+        for n in 1..9 {
+            assert!(k.shard(n) < n);
+            assert_eq!(k.shard(n), k.shard(n));
+        }
+    }
+}

@@ -1,0 +1,359 @@
+//! The **shared artifact cache tier** — process-wide, content-addressed
+//! reuse of pipeline artifacts across serving lanes *and* stream
+//! executors.
+//!
+//! The paper's thesis is keeping every core busy; at serving scale the
+//! complementary lever is not recomputing at all when content repeats.
+//! Hot images — thumbnails, static frames, repeated re-threshold
+//! sweeps — show up on many lanes and many streams; the per-lane
+//! suppressed-magnitude LRU from the stage-graph PR could only reuse
+//! within one lane. This tier promotes it to one process-wide store:
+//!
+//! ```text
+//!              ArtifactKey = FNV-128(image bytes ++ params ++ span)
+//!                         │
+//! lane 0 ──┐              ▼
+//! lane 1 ──┤      ┌─ shard 0 (Mutex + LRU, budget/N bytes) ─┐
+//!   …      ├────> ├─ shard 1                                ├─> stats
+//! lane N ──┤      │   …                                     │   (per-tier
+//! stream ──┘      └─ shard S-1 ─────────────────────────────┘    counters)
+//! ```
+//!
+//! * [`key`] — content-addressed 128-bit digests: identical pixels
+//!   produce identical keys regardless of which tier computed them, so
+//!   a stream's decoded frame can serve a lane's re-threshold request.
+//! * [`shard`] — N-way sharded `Mutex` LRU stores under one global
+//!   **byte budget** (entries costed by artifact size); a lookup locks
+//!   only its shard, so the hot path never serializes.
+//! * [`policy`] — cost-aware admission: an artifact is admitted only
+//!   when its calibrated recompute cost per byte clears
+//!   [`CacheConfig::admit_min_ns_per_byte`], so cheap tiny artifacts
+//!   cannot evict expensive ones.
+//! * [`stats`] — hit/miss/eviction/admission accounting per caller
+//!   tier, snapshotted into the reports' `cache` JSON section.
+//!
+//! Configured via `--cache-mb`, `--cache-shards`,
+//! `--cache-admit-ns-per-byte` (see [`crate::config::RunConfig`]);
+//! `--cache-mb 0` disables the tier entirely (every consult misses
+//! without counting, every offer is dropped).
+
+pub mod key;
+pub mod policy;
+pub mod shard;
+pub mod stats;
+
+pub use key::{ArtifactKey, KeyHasher};
+pub use policy::AdmissionPolicy;
+pub use stats::{CacheSnapshot, CacheTier, TierSnapshot};
+
+use std::sync::atomic::Ordering;
+
+use crate::cache::shard::{InsertOutcome, ShardStore};
+use crate::cache::stats::CacheStats;
+use crate::canny::Artifact;
+use crate::config::RunConfig;
+
+/// Resolved cache configuration (the `cache-*` config keys).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CacheConfig {
+    /// Global byte budget over all shards; 0 disables the tier.
+    pub budget_bytes: u64,
+    /// Shard count (lock granularity), clamped to >= 1. Trade-off: a
+    /// single artifact can never exceed its shard's slice of the
+    /// budget (`budget_bytes / shards`), so more shards means less
+    /// lock contention *and* a smaller largest-cacheable artifact
+    /// (rejections land in the `too_large` counter). The default 8
+    /// shards over 64 MiB caps entries at 8 MiB — a 2-megapixel f32
+    /// suppressed map.
+    pub shards: usize,
+    /// Admission bar in recompute-ns per byte (0 admits everything).
+    pub admit_min_ns_per_byte: f64,
+}
+
+impl Default for CacheConfig {
+    /// 64 MiB over 8 shards, admit-all — enough for dozens of
+    /// megapixel-class suppressed maps.
+    fn default() -> Self {
+        CacheConfig { budget_bytes: 64 << 20, shards: 8, admit_min_ns_per_byte: 0.0 }
+    }
+}
+
+impl CacheConfig {
+    /// Build from the resolved [`RunConfig`] (`cache-mb`,
+    /// `cache-shards`, `cache-admit-ns-per-byte`).
+    pub fn from_config(cfg: &RunConfig) -> CacheConfig {
+        CacheConfig {
+            budget_bytes: (cfg.cache_mb as u64) << 20,
+            shards: cfg.cache_shards.max(1),
+            admit_min_ns_per_byte: cfg.cache_admit_ns_per_byte.max(0.0),
+        }
+    }
+
+    /// The disabled tier (`--cache-mb 0`).
+    pub fn disabled() -> CacheConfig {
+        CacheConfig { budget_bytes: 0, ..CacheConfig::default() }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.budget_bytes > 0
+    }
+}
+
+/// The process-wide artifact cache: share one `Arc<ArtifactCache>`
+/// between every serving lane and stream executor that should
+/// deduplicate work. All methods take `&self` — the sharded interior
+/// carries its own locking.
+#[derive(Debug)]
+pub struct ArtifactCache {
+    cfg: CacheConfig,
+    shards: Vec<ShardStore>,
+    policy: AdmissionPolicy,
+    stats: CacheStats,
+}
+
+impl ArtifactCache {
+    /// Build with the budget split evenly over the shards (remainder
+    /// bytes go to the lowest shards, so the slices sum exactly to the
+    /// budget and `bytes() <= budget` holds globally).
+    pub fn new(cfg: CacheConfig) -> ArtifactCache {
+        let n = cfg.shards.max(1);
+        let base = cfg.budget_bytes / n as u64;
+        let rem = cfg.budget_bytes % n as u64;
+        let shards = (0..n)
+            .map(|i| ShardStore::new(base + u64::from((i as u64) < rem)))
+            .collect();
+        ArtifactCache {
+            policy: AdmissionPolicy::new(cfg.admit_min_ns_per_byte),
+            shards,
+            stats: CacheStats::default(),
+            cfg,
+        }
+    }
+
+    /// A permanently-empty tier (every get misses silently, every offer
+    /// is dropped) — the `--cache-mb 0` path.
+    pub fn disabled() -> ArtifactCache {
+        ArtifactCache::new(CacheConfig::disabled())
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled()
+    }
+
+    pub fn config(&self) -> &CacheConfig {
+        &self.cfg
+    }
+
+    /// Look up an artifact, counting a hit or miss for `tier`. Returns
+    /// an owned clone — callers consume entry artifacts (plan entry
+    /// points take them by value). The pixel copy happens *outside* the
+    /// shard lock (entries are `Arc`-shared internally), so concurrent
+    /// hits on one shard never serialize on a memcpy. A disabled cache
+    /// returns `None` without counting anything.
+    pub fn get(&self, key: &ArtifactKey, tier: CacheTier) -> Option<Artifact> {
+        if !self.enabled() {
+            return None;
+        }
+        let t = self.stats.tier(tier);
+        t.lookups.fetch_add(1, Ordering::Relaxed);
+        match self.shards[key.shard(self.shards.len())].get(key) {
+            Some(shared) => {
+                t.hits.fetch_add(1, Ordering::Relaxed);
+                Some((*shared).clone())
+            }
+            None => {
+                t.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Offer an artifact for residency. `recompute_ns` is the caller's
+    /// estimate of what a future hit saves (calibrated kind cost for
+    /// serving lanes, measured front wall for streams); the admission
+    /// policy weighs it against the artifact's byte cost. Returns true
+    /// when the artifact was stored.
+    pub fn offer(
+        &self,
+        key: ArtifactKey,
+        artifact: Artifact,
+        recompute_ns: u64,
+        tier: CacheTier,
+    ) -> bool {
+        if !self.enabled() {
+            return false;
+        }
+        let bytes = artifact.byte_size() as u64;
+        let t = self.stats.tier(tier);
+        if !self.policy.admits(recompute_ns, bytes) {
+            t.admission_rejects.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        match self.shards[key.shard(self.shards.len())].insert(key, artifact, bytes) {
+            InsertOutcome::Stored { evicted, .. } => {
+                t.inserts.fetch_add(1, Ordering::Relaxed);
+                self.stats.evictions.fetch_add(evicted, Ordering::Relaxed);
+                true
+            }
+            // Larger than a shard's slice of the budget
+            // (`budget / shards`): structurally uncacheable under this
+            // configuration, counted apart from the policy rejects so
+            // operators can tell "raise --cache-mb or lower
+            // --cache-shards" from "raise the admission bar".
+            InsertOutcome::TooLarge => {
+                t.too_large.fetch_add(1, Ordering::Relaxed);
+                false
+            }
+        }
+    }
+
+    /// Authoritative byte occupancy (sums the shards).
+    pub fn bytes(&self) -> u64 {
+        self.shards.iter().map(ShardStore::bytes).sum()
+    }
+
+    /// Total live entries.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(ShardStore::len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Counter + occupancy snapshot for the reports' `cache` section.
+    /// `high_water_bytes` sums the per-shard peaks (tracked under each
+    /// shard's lock): an upper bound on peak global occupancy that can
+    /// never exceed the budget.
+    pub fn snapshot(&self) -> CacheSnapshot {
+        CacheSnapshot {
+            enabled: self.enabled(),
+            budget_bytes: self.cfg.budget_bytes,
+            shards: self.shards.len(),
+            admit_min_ns_per_byte: self.cfg.admit_min_ns_per_byte,
+            bytes: self.bytes(),
+            entries: self.len() as u64,
+            high_water_bytes: self.shards.iter().map(ShardStore::high_water_bytes).sum(),
+            evictions: self.stats.evictions.load(Ordering::Relaxed),
+            tiers: self.stats.snapshot_tiers(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::synth::{generate, Scene};
+    use crate::image::ImageF32;
+
+    fn suppressed(px_w: usize) -> Artifact {
+        Artifact::Suppressed(ImageF32::zeros(px_w, 1))
+    }
+
+    fn key_n(n: u64) -> ArtifactKey {
+        ArtifactKey { hi: n.wrapping_mul(0x9e37_79b9_7f4a_7c15), lo: n }
+    }
+
+    #[test]
+    fn hit_miss_roundtrip_and_tier_counters() {
+        let c = ArtifactCache::new(CacheConfig { budget_bytes: 1 << 20, ..Default::default() });
+        let img = generate(Scene::Shapes { seed: 3 }, 32, 24);
+        let key = ArtifactKey::suppressed(&img);
+        assert!(c.get(&key, CacheTier::Serve).is_none());
+        assert!(c.offer(key, suppressed(32 * 24), 1_000_000, CacheTier::Stream));
+        match c.get(&key, CacheTier::Serve) {
+            Some(Artifact::Suppressed(nm)) => assert_eq!(nm.len(), 32 * 24),
+            other => panic!("unexpected {other:?}"),
+        }
+        let snap = c.snapshot();
+        assert_eq!(snap.lookups(), 2);
+        assert_eq!(snap.hits(), 1);
+        assert_eq!(snap.misses(), 1);
+        assert_eq!(snap.hits() + snap.misses(), snap.lookups());
+        let serve = snap.tiers.iter().find(|(n, _)| *n == "serve").unwrap().1;
+        let stream = snap.tiers.iter().find(|(n, _)| *n == "stream").unwrap().1;
+        assert_eq!((serve.lookups, serve.hits, serve.misses), (2, 1, 1));
+        assert_eq!((stream.inserts, stream.lookups), (1, 0));
+        assert_eq!(snap.entries, 1);
+        assert_eq!(snap.bytes, (32 * 24 * 4) as u64);
+    }
+
+    #[test]
+    fn byte_budget_enforced_across_shards_with_evictions() {
+        // 4 shards x 1 KiB slices; 40 KiB of offers must evict.
+        let c = ArtifactCache::new(CacheConfig {
+            budget_bytes: 4096,
+            shards: 4,
+            admit_min_ns_per_byte: 0.0,
+        });
+        for n in 0..40 {
+            c.offer(key_n(n), suppressed(256), 1_000_000, CacheTier::Serve);
+        }
+        let snap = c.snapshot();
+        assert!(snap.bytes <= 4096, "bytes {} over budget", snap.bytes);
+        assert_eq!(snap.bytes, c.bytes());
+        assert!(snap.evictions > 0);
+        assert!(snap.high_water_bytes <= 4096);
+        assert!(snap.entries < 40);
+    }
+
+    #[test]
+    fn admission_policy_rejects_cheap_bulk() {
+        let c = ArtifactCache::new(CacheConfig {
+            budget_bytes: 1 << 20,
+            shards: 2,
+            admit_min_ns_per_byte: 10.0,
+        });
+        // 1024 bytes at 100 ns: 0.1 ns/byte, far under the 10 ns bar.
+        assert!(!c.offer(key_n(1), suppressed(256), 100, CacheTier::Serve));
+        // Same bytes at 1 ms recompute: ~1000 ns/byte, admitted.
+        assert!(c.offer(key_n(2), suppressed(256), 1_000_000, CacheTier::Serve));
+        let snap = c.snapshot();
+        assert_eq!(snap.admission_rejects(), 1);
+        assert_eq!(snap.inserts(), 1);
+        assert_eq!(snap.entries, 1);
+    }
+
+    #[test]
+    fn disabled_cache_is_inert() {
+        let c = ArtifactCache::disabled();
+        assert!(!c.enabled());
+        let key = key_n(7);
+        assert!(!c.offer(key, suppressed(16), u64::MAX, CacheTier::Serve));
+        assert!(c.get(&key, CacheTier::Serve).is_none());
+        let snap = c.snapshot();
+        assert!(!snap.enabled);
+        assert_eq!((snap.lookups(), snap.inserts(), snap.bytes), (0, 0, 0));
+        // Schema stays complete: both tiers present even when inert.
+        assert_eq!(snap.tiers.len(), 2);
+    }
+
+    #[test]
+    fn oversize_artifact_counts_as_too_large() {
+        // 8 KiB budget over 4 shards: the per-shard slice is 2 KiB, so
+        // a 4 KiB artifact can never fit even though the global budget
+        // could hold it — counted apart from policy rejects.
+        let c = ArtifactCache::new(CacheConfig {
+            budget_bytes: 8192,
+            shards: 4,
+            admit_min_ns_per_byte: 0.0,
+        });
+        assert!(!c.offer(key_n(1), suppressed(1024), u64::MAX, CacheTier::Stream));
+        let snap = c.snapshot();
+        assert_eq!(snap.too_large(), 1);
+        assert_eq!(snap.admission_rejects(), 0);
+        assert_eq!(snap.entries, 0);
+    }
+
+    #[test]
+    fn budget_split_sums_exactly_with_remainder_low() {
+        let c = ArtifactCache::new(CacheConfig {
+            budget_bytes: 10,
+            shards: 4,
+            admit_min_ns_per_byte: 0.0,
+        });
+        let slices: Vec<u64> = c.shards.iter().map(ShardStore::budget_bytes).collect();
+        assert_eq!(slices, vec![3, 3, 2, 2]);
+        assert_eq!(slices.iter().sum::<u64>(), 10);
+    }
+}

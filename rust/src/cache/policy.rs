@@ -1,0 +1,73 @@
+//! Cost-aware admission: an artifact earns cache residency by the
+//! recompute time a future hit saves **per byte it occupies**, not by
+//! mere recency. Without this, a burst of tiny cheap artifacts (small
+//! re-threshold probes) can evict a handful of expensive megapixel
+//! fronts that took orders of magnitude longer to build — strictly
+//! worse for aggregate throughput.
+//!
+//! The caller supplies `recompute_ns`: the serving tier passes its
+//! calibrated kind cost ([`crate::service::ServeOptions::service_ns_kind`],
+//! which uses the per-stage [`crate::service::calibrate::StageCost`]
+//! fits when a calibration is installed), and the stream tier passes
+//! the measured wall time of the last *full* front pass (a delta-gated
+//! frame's own wall covers only its dirty tiles, but a hit on its
+//! exact map still saves a whole front). Both are estimates of the
+//! same quantity: what a hit saves.
+
+/// Admission threshold in nanoseconds-of-recompute per byte-of-cache.
+/// `0.0` admits everything (the default — pure LRU behavior).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AdmissionPolicy {
+    pub min_ns_per_byte: f64,
+}
+
+impl Default for AdmissionPolicy {
+    fn default() -> Self {
+        AdmissionPolicy { min_ns_per_byte: 0.0 }
+    }
+}
+
+impl AdmissionPolicy {
+    pub fn new(min_ns_per_byte: f64) -> AdmissionPolicy {
+        AdmissionPolicy { min_ns_per_byte: min_ns_per_byte.max(0.0) }
+    }
+
+    /// Does an artifact costing `recompute_ns` to rebuild and `bytes`
+    /// to keep clear the bar? Zero-byte artifacts are vacuously free to
+    /// keep.
+    pub fn admits(&self, recompute_ns: u64, bytes: u64) -> bool {
+        if self.min_ns_per_byte <= 0.0 || bytes == 0 {
+            return true;
+        }
+        recompute_ns as f64 / bytes as f64 >= self.min_ns_per_byte
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_threshold_admits_everything() {
+        let p = AdmissionPolicy::default();
+        assert!(p.admits(0, u64::MAX));
+        assert!(p.admits(u64::MAX, 1));
+    }
+
+    #[test]
+    fn threshold_gates_on_ns_per_byte() {
+        // 2 ns/byte bar: 1000 ns over 400 bytes (2.5) clears it, over
+        // 600 bytes (1.67) does not.
+        let p = AdmissionPolicy::new(2.0);
+        assert!(p.admits(1_000, 400));
+        assert!(!p.admits(1_000, 600));
+        assert!(p.admits(1_000, 500), "exactly at the bar admits");
+        assert!(p.admits(123, 0), "zero-byte artifacts are free");
+    }
+
+    #[test]
+    fn negative_threshold_clamps_to_admit_all() {
+        let p = AdmissionPolicy::new(-5.0);
+        assert!(p.admits(0, 1_000_000));
+    }
+}

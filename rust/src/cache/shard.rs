@@ -1,0 +1,217 @@
+//! The sharded stores behind [`crate::cache::ArtifactCache`]: N
+//! independent `Mutex`-guarded LRU maps, each owning a slice of the
+//! global byte budget.
+//!
+//! Sharding is the concurrency design (A Survey of Multithreading Image
+//! Analysis: shared state must not serialize the hot path): a lookup
+//! locks only the one shard its key hashes to, so lanes and stream
+//! executors hitting different shards never contend. Entries are costed
+//! by **artifact bytes**, not entry count — a 4 MB suppressed map and a
+//! 16 kB thumbnail are not the same occupancy — and each shard evicts
+//! its own least-recently-used entries whenever its byte slice
+//! overflows, so the global invariant `sum(shard bytes) <= budget`
+//! holds without any cross-shard coordination.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use crate::cache::key::ArtifactKey;
+use crate::canny::Artifact;
+
+/// What [`ShardStore::insert`] did.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InsertOutcome {
+    /// Stored (possibly replacing the same key), evicting `evicted`
+    /// LRU entries worth `removed_bytes` (replacement bytes included).
+    Stored { evicted: u64, added_bytes: u64, removed_bytes: u64 },
+    /// The artifact alone exceeds this shard's byte slice — never
+    /// admissible, nothing changed.
+    TooLarge,
+}
+
+#[derive(Debug)]
+struct Entry {
+    /// `Arc`-wrapped so a lookup hands back a reference-count bump, not
+    /// a multi-megabyte deep copy made while holding the shard lock.
+    artifact: Arc<Artifact>,
+    bytes: u64,
+    /// Recency tick (monotonic per shard); the `recency` index maps it
+    /// back to the key, so LRU order is a `BTreeMap` range scan.
+    tick: u64,
+}
+
+#[derive(Debug, Default)]
+struct ShardState {
+    entries: BTreeMap<ArtifactKey, Entry>,
+    /// tick -> key, oldest first. In lockstep with `entries`.
+    recency: BTreeMap<u64, ArtifactKey>,
+    tick: u64,
+    bytes: u64,
+    /// Peak post-insert occupancy of this shard. Tracked under the
+    /// lock — a detached global counter would race across the
+    /// insert/account boundary and could wrap.
+    high_water: u64,
+}
+
+/// One shard: a byte-budgeted LRU map behind its own lock.
+#[derive(Debug)]
+pub struct ShardStore {
+    budget_bytes: u64,
+    state: Mutex<ShardState>,
+}
+
+impl ShardStore {
+    pub fn new(budget_bytes: u64) -> ShardStore {
+        ShardStore { budget_bytes, state: Mutex::new(ShardState::default()) }
+    }
+
+    /// Look up a key, refreshing its recency. Returns the shared
+    /// handle; only the reference count is touched under the lock, so
+    /// concurrent same-shard lookups never serialize on a pixel copy.
+    pub fn get(&self, key: &ArtifactKey) -> Option<Arc<Artifact>> {
+        let mut s = self.state.lock().expect("cache shard lock");
+        let old_tick = s.entries.get(key)?.tick;
+        s.tick += 1;
+        let tick = s.tick;
+        s.recency.remove(&old_tick);
+        s.recency.insert(tick, *key);
+        let e = s.entries.get_mut(key).expect("entry present");
+        e.tick = tick;
+        Some(Arc::clone(&e.artifact))
+    }
+
+    /// Insert (or refresh) an entry of `bytes` cost, then evict LRU
+    /// entries until this shard is back under its byte slice. The entry
+    /// just inserted is the most recent, so it is never the eviction
+    /// victim.
+    pub fn insert(&self, key: ArtifactKey, artifact: Artifact, bytes: u64) -> InsertOutcome {
+        if bytes > self.budget_bytes {
+            return InsertOutcome::TooLarge;
+        }
+        let mut s = self.state.lock().expect("cache shard lock");
+        let mut evicted = 0u64;
+        let mut removed_bytes = 0u64;
+        if let Some(old) = s.entries.remove(&key) {
+            s.recency.remove(&old.tick);
+            s.bytes -= old.bytes;
+            removed_bytes += old.bytes;
+        }
+        s.tick += 1;
+        let tick = s.tick;
+        s.bytes += bytes;
+        s.entries.insert(key, Entry { artifact: Arc::new(artifact), bytes, tick });
+        s.recency.insert(tick, key);
+        while s.bytes > self.budget_bytes {
+            let (&t, &k) = s.recency.iter().next().expect("over budget implies entries");
+            s.recency.remove(&t);
+            let e = s.entries.remove(&k).expect("recency index in lockstep");
+            s.bytes -= e.bytes;
+            removed_bytes += e.bytes;
+            evicted += 1;
+        }
+        s.high_water = s.high_water.max(s.bytes);
+        InsertOutcome::Stored { evicted, added_bytes: bytes, removed_bytes }
+    }
+
+    /// This shard's slice of the global byte budget.
+    pub fn budget_bytes(&self) -> u64 {
+        self.budget_bytes
+    }
+
+    /// Current byte occupancy.
+    pub fn bytes(&self) -> u64 {
+        self.state.lock().expect("cache shard lock").bytes
+    }
+
+    /// Peak post-insert occupancy this shard has seen (never exceeds
+    /// its budget slice).
+    pub fn high_water_bytes(&self) -> u64 {
+        self.state.lock().expect("cache shard lock").high_water
+    }
+
+    /// Current entry count.
+    pub fn len(&self) -> usize {
+        self.state.lock().expect("cache shard lock").entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::ImageF32;
+
+    fn key(n: u64) -> ArtifactKey {
+        ArtifactKey { hi: n, lo: !n }
+    }
+
+    fn art(px: usize) -> Artifact {
+        Artifact::Suppressed(ImageF32::zeros(px, 1))
+    }
+
+    #[test]
+    fn get_refreshes_recency_and_evicts_lru() {
+        // Budget fits two 32-byte entries (8 px * 4 B).
+        let s = ShardStore::new(64);
+        assert_eq!(
+            s.insert(key(1), art(8), 32),
+            InsertOutcome::Stored { evicted: 0, added_bytes: 32, removed_bytes: 0 }
+        );
+        s.insert(key(2), art(8), 32);
+        assert!(s.get(&key(1)).is_some(), "refresh 1");
+        // 3 overflows the budget: 2 is now the LRU and must go.
+        match s.insert(key(3), art(8), 32) {
+            InsertOutcome::Stored { evicted, removed_bytes, .. } => {
+                assert_eq!(evicted, 1);
+                assert_eq!(removed_bytes, 32);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert!(s.get(&key(2)).is_none());
+        assert!(s.get(&key(1)).is_some());
+        assert!(s.get(&key(3)).is_some());
+        assert_eq!(s.len(), 2);
+        assert!(s.bytes() <= 64);
+    }
+
+    #[test]
+    fn replacement_updates_bytes_not_count() {
+        let s = ShardStore::new(1000);
+        s.insert(key(1), art(8), 32);
+        match s.insert(key(1), art(16), 64) {
+            InsertOutcome::Stored { evicted, added_bytes, removed_bytes } => {
+                assert_eq!(evicted, 0);
+                assert_eq!(added_bytes, 64);
+                assert_eq!(removed_bytes, 32);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.bytes(), 64);
+    }
+
+    #[test]
+    fn oversize_entry_rejected_untouched() {
+        let s = ShardStore::new(16);
+        assert_eq!(s.insert(key(1), art(8), 32), InsertOutcome::TooLarge);
+        assert!(s.is_empty());
+        assert_eq!(s.bytes(), 0);
+    }
+
+    #[test]
+    fn overfill_stays_under_budget_with_evictions() {
+        let s = ShardStore::new(100);
+        let mut evictions = 0;
+        for n in 0..50 {
+            if let InsertOutcome::Stored { evicted, .. } = s.insert(key(n), art(8), 32) {
+                evictions += evicted;
+            }
+        }
+        assert!(s.bytes() <= 100, "bytes {} over budget", s.bytes());
+        assert!(evictions > 0);
+        assert_eq!(s.len() as u64 * 32, s.bytes());
+    }
+}

@@ -1,0 +1,257 @@
+//! Cache accounting: lock-free counters updated on the hot path,
+//! snapshotted into the deterministic JSON `cache` section the serve
+//! and stream reports carry.
+//!
+//! Counters are per **caller tier** (`serve` lanes vs the `stream`
+//! executor) so a shared cache's report shows who is producing and who
+//! is consuming — the cross-tier dedup story is visible, not inferred.
+//! All counters are `Relaxed` atomics: totals are exact once the run's
+//! threads have joined (which is when reports are built), and the
+//! virtual driver is single-threaded, so its reports are byte-identical
+//! across runs.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::json::Json;
+
+/// Who is calling into the cache (the per-tier counter index).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CacheTier {
+    /// A serving lane (front-only warms, re-threshold consults).
+    Serve,
+    /// The stream executor (frames consult, computed fronts offer).
+    Stream,
+}
+
+impl CacheTier {
+    pub const ALL: [CacheTier; 2] = [CacheTier::Serve, CacheTier::Stream];
+
+    /// Report key.
+    pub fn name(&self) -> &'static str {
+        match self {
+            CacheTier::Serve => "serve",
+            CacheTier::Stream => "stream",
+        }
+    }
+
+    fn index(&self) -> usize {
+        match self {
+            CacheTier::Serve => 0,
+            CacheTier::Stream => 1,
+        }
+    }
+}
+
+/// One tier's counters.
+#[derive(Debug, Default)]
+pub struct TierCounters {
+    pub lookups: AtomicU64,
+    pub hits: AtomicU64,
+    pub misses: AtomicU64,
+    pub inserts: AtomicU64,
+    pub admission_rejects: AtomicU64,
+    /// Offers whose artifact exceeds a shard's budget slice
+    /// (`budget / shards`) — structurally uncacheable under the current
+    /// configuration, as opposed to failing the cost-per-byte policy.
+    pub too_large: AtomicU64,
+}
+
+impl TierCounters {
+    fn snapshot(&self) -> TierSnapshot {
+        TierSnapshot {
+            lookups: self.lookups.load(Ordering::Relaxed),
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            inserts: self.inserts.load(Ordering::Relaxed),
+            admission_rejects: self.admission_rejects.load(Ordering::Relaxed),
+            too_large: self.too_large.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Live counters owned by [`crate::cache::ArtifactCache`]. Byte
+/// occupancy and high-water marks live in the shards (updated under
+/// their locks — a detached global counter would race across the
+/// insert/account boundary); only cross-shard event counts live here.
+#[derive(Debug, Default)]
+pub struct CacheStats {
+    tiers: [TierCounters; 2],
+    pub evictions: AtomicU64,
+}
+
+impl CacheStats {
+    pub fn tier(&self, tier: CacheTier) -> &TierCounters {
+        &self.tiers[tier.index()]
+    }
+
+    pub fn snapshot_tiers(&self) -> Vec<(&'static str, TierSnapshot)> {
+        CacheTier::ALL.iter().map(|t| (t.name(), self.tier(*t).snapshot())).collect()
+    }
+}
+
+/// One tier's totals at snapshot time.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TierSnapshot {
+    pub lookups: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub inserts: u64,
+    pub admission_rejects: u64,
+    pub too_large: u64,
+}
+
+impl TierSnapshot {
+    fn to_json(self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("lookups".into(), Json::Num(self.lookups as f64));
+        m.insert("hits".into(), Json::Num(self.hits as f64));
+        m.insert("misses".into(), Json::Num(self.misses as f64));
+        m.insert("inserts".into(), Json::Num(self.inserts as f64));
+        m.insert("admission_rejects".into(), Json::Num(self.admission_rejects as f64));
+        m.insert("too_large".into(), Json::Num(self.too_large as f64));
+        Json::Obj(m)
+    }
+}
+
+/// Everything the report's `cache` section carries: configuration echo
+/// plus counter totals. [`Default`] is the disabled cache (all zeros).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CacheSnapshot {
+    pub enabled: bool,
+    pub budget_bytes: u64,
+    pub shards: usize,
+    pub admit_min_ns_per_byte: f64,
+    pub bytes: u64,
+    pub entries: u64,
+    /// Sum of per-shard post-insert peaks — an upper bound on the peak
+    /// global occupancy, and never above `budget_bytes`.
+    pub high_water_bytes: u64,
+    pub evictions: u64,
+    /// Per-tier counters, every tier always present (stable schema).
+    pub tiers: Vec<(&'static str, TierSnapshot)>,
+}
+
+impl CacheSnapshot {
+    /// Aggregate over tiers.
+    pub fn lookups(&self) -> u64 {
+        self.tiers.iter().map(|(_, t)| t.lookups).sum()
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.tiers.iter().map(|(_, t)| t.hits).sum()
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.tiers.iter().map(|(_, t)| t.misses).sum()
+    }
+
+    pub fn inserts(&self) -> u64 {
+        self.tiers.iter().map(|(_, t)| t.inserts).sum()
+    }
+
+    pub fn admission_rejects(&self) -> u64 {
+        self.tiers.iter().map(|(_, t)| t.admission_rejects).sum()
+    }
+
+    pub fn too_large(&self) -> u64 {
+        self.tiers.iter().map(|(_, t)| t.too_large).sum()
+    }
+
+    /// The `cache` report section (schema documented in
+    /// [`crate::service`] and [`crate::stream`]).
+    pub fn to_json(&self) -> Json {
+        let num = |v: u64| Json::Num(v as f64);
+        let mut m = BTreeMap::new();
+        m.insert("enabled".into(), Json::Bool(self.enabled));
+        m.insert("budget_bytes".into(), num(self.budget_bytes));
+        m.insert("shards".into(), Json::Num(self.shards as f64));
+        m.insert("admit_min_ns_per_byte".into(), Json::Num(self.admit_min_ns_per_byte));
+        m.insert("bytes".into(), num(self.bytes));
+        m.insert("entries".into(), num(self.entries));
+        m.insert("high_water_bytes".into(), num(self.high_water_bytes));
+        m.insert("evictions".into(), num(self.evictions));
+        m.insert("lookups".into(), num(self.lookups()));
+        m.insert("hits".into(), num(self.hits()));
+        m.insert("misses".into(), num(self.misses()));
+        m.insert("inserts".into(), num(self.inserts()));
+        m.insert("admission_rejects".into(), num(self.admission_rejects()));
+        m.insert("too_large".into(), num(self.too_large()));
+        m.insert(
+            "tiers".into(),
+            Json::Obj(
+                self.tiers.iter().map(|(name, t)| (name.to_string(), t.to_json())).collect(),
+            ),
+        );
+        Json::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tier_names_distinct() {
+        assert_ne!(CacheTier::Serve.name(), CacheTier::Stream.name());
+        assert_ne!(CacheTier::Serve.index(), CacheTier::Stream.index());
+    }
+
+    #[test]
+    fn tier_counters_snapshot_roundtrip() {
+        let s = CacheStats::default();
+        s.tier(CacheTier::Serve).lookups.fetch_add(3, Ordering::Relaxed);
+        s.tier(CacheTier::Serve).hits.fetch_add(2, Ordering::Relaxed);
+        s.tier(CacheTier::Stream).too_large.fetch_add(1, Ordering::Relaxed);
+        s.evictions.fetch_add(4, Ordering::Relaxed);
+        let tiers = s.snapshot_tiers();
+        assert_eq!(tiers.len(), 2);
+        assert_eq!(tiers[0].0, "serve");
+        assert_eq!((tiers[0].1.lookups, tiers[0].1.hits), (3, 2));
+        assert_eq!(tiers[1].1.too_large, 1);
+        assert_eq!(s.evictions.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn snapshot_json_has_stable_schema() {
+        let snap = CacheSnapshot {
+            enabled: true,
+            budget_bytes: 1024,
+            shards: 4,
+            admit_min_ns_per_byte: 0.5,
+            bytes: 96,
+            entries: 3,
+            high_water_bytes: 128,
+            evictions: 2,
+            tiers: vec![
+                (
+                    "serve",
+                    TierSnapshot {
+                        lookups: 5,
+                        hits: 3,
+                        misses: 2,
+                        inserts: 2,
+                        admission_rejects: 1,
+                        too_large: 0,
+                    },
+                ),
+                ("stream", TierSnapshot::default()),
+            ],
+        };
+        assert_eq!(snap.lookups(), 5);
+        assert_eq!(snap.hits() + snap.misses(), snap.lookups());
+        let j = snap.to_json();
+        assert_eq!(j.get("enabled"), Some(&Json::Bool(true)));
+        assert_eq!(j.get("hits").unwrap().as_usize(), Some(3));
+        assert_eq!(
+            j.get("tiers").unwrap().get("serve").unwrap().get("lookups").unwrap().as_usize(),
+            Some(5)
+        );
+        assert!(j.get("tiers").unwrap().get("stream").is_some());
+        // Round-trips through the parser (report embedding).
+        assert_eq!(Json::parse(&j.dump()).unwrap(), j);
+        // The disabled default is all-zero and schema-complete once the
+        // tiers are filled in (ArtifactCache::disabled_snapshot does).
+        assert!(!CacheSnapshot::default().enabled);
+    }
+}

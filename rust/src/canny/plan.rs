@@ -113,6 +113,19 @@ impl Artifact {
             Artifact::Edges(_) => "edges",
         }
     }
+
+    /// Payload bytes of the artifact's pixel data — the cache tier's
+    /// cost unit ([`crate::cache`] budgets by size, not entry count).
+    pub fn byte_size(&self) -> usize {
+        const F32: usize = std::mem::size_of::<f32>();
+        match self {
+            Artifact::Gray(g) => g.len() * F32,
+            Artifact::Gradient { mag, dir } => (mag.len() + dir.len()) * F32,
+            Artifact::Suppressed(nm) => nm.len() * F32,
+            Artifact::ClassMap(c) => c.len() * F32,
+            Artifact::Edges(e) => e.data().len(),
+        }
+    }
 }
 
 /// Where a plan starts.
@@ -453,6 +466,21 @@ mod tests {
         assert_eq!(plain.span_name(), "nms");
         assert!(plain.covers(StageKind::Nms));
         assert!(!plain.covers(StageKind::Sobel));
+    }
+
+    #[test]
+    fn artifact_byte_sizes() {
+        let f32s = |px: usize| px * 4;
+        assert_eq!(Artifact::Gray(ImageF32::zeros(8, 4)).byte_size(), f32s(32));
+        assert_eq!(
+            Artifact::Gradient { mag: ImageF32::zeros(8, 4), dir: ImageF32::zeros(8, 4) }
+                .byte_size(),
+            f32s(64)
+        );
+        assert_eq!(Artifact::Suppressed(ImageF32::zeros(3, 3)).byte_size(), f32s(9));
+        assert_eq!(Artifact::ClassMap(ImageF32::zeros(3, 3)).byte_size(), f32s(9));
+        let edges = crate::image::EdgeMap::new(4, 2, vec![0; 8]).unwrap();
+        assert_eq!(Artifact::Edges(edges).byte_size(), 8);
     }
 
     #[test]

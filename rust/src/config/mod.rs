@@ -52,10 +52,21 @@ pub struct RunConfig {
     /// `virtual` (deterministic modeled-time replay, the default) or
     /// `wall` (real lane threads + monotonic time).
     pub clock: ClockMode,
-    /// Serving tier: per-lane suppressed-magnitude LRU capacity in
-    /// entries (the `re-threshold` request-kind fast path; 0 disables
-    /// the cache so every re-threshold recomputes the front).
-    pub rethreshold_cache: usize,
+    /// Shared artifact-cache tier ([`crate::cache`]): global byte
+    /// budget in MiB over all shards (0 disables the tier — every
+    /// re-threshold recomputes the front).
+    pub cache_mb: usize,
+    /// Cache tier: shard count (lock granularity across lanes/streams).
+    pub cache_shards: usize,
+    /// Cache tier: admission bar in recompute-nanoseconds per byte —
+    /// artifacts cheaper to rebuild than this are not cached (0 admits
+    /// everything).
+    pub cache_admit_ns_per_byte: f64,
+    /// Stream tier: offer each frame's suppressed-magnitude artifact
+    /// into the shared cache (and consult it before running the front),
+    /// so identical frames across streams — and serve requests on the
+    /// same content — deduplicate.
+    pub stream_cache: bool,
     /// Stream tier (`cannyd stream`): bounded in-flight window — the
     /// capacity of each inter-stage queue in the frame pipeline.
     pub inflight: usize,
@@ -90,7 +101,10 @@ impl Default for RunConfig {
             slo_p99_ms: 50.0,
             max_pixels: 0,
             clock: ClockMode::Virtual,
-            rethreshold_cache: 32,
+            cache_mb: 64,
+            cache_shards: 8,
+            cache_admit_ns_per_byte: 0.0,
+            stream_cache: false,
             inflight: 4,
             delta_gate: DeltaMode::default(),
             frame_budget_ms: 0.0,
@@ -149,8 +163,17 @@ impl RunConfig {
             "clock" => {
                 self.clock = ClockMode::parse(value).ok_or_else(|| bad("clock"))?
             }
-            "rethreshold-cache" | "rethreshold_cache" => {
-                self.rethreshold_cache = value.parse().map_err(|_| bad("usize"))?
+            "cache-mb" | "cache_mb" => {
+                self.cache_mb = value.parse().map_err(|_| bad("usize"))?
+            }
+            "cache-shards" | "cache_shards" => {
+                self.cache_shards = value.parse().map_err(|_| bad("usize"))?
+            }
+            "cache-admit-ns-per-byte" | "cache_admit_ns_per_byte" => {
+                self.cache_admit_ns_per_byte = value.parse().map_err(|_| bad("f64"))?
+            }
+            "stream-cache" | "stream_cache" => {
+                self.stream_cache = parse_bool(value).ok_or_else(|| bad("bool"))?
             }
             "inflight" => self.inflight = value.parse().map_err(|_| bad("usize"))?,
             "delta-gate" | "delta_gate" => {
@@ -204,8 +227,14 @@ impl RunConfig {
         "max-pixels",
         "max_pixels",
         "clock",
-        "rethreshold-cache",
-        "rethreshold_cache",
+        "cache-mb",
+        "cache_mb",
+        "cache-shards",
+        "cache_shards",
+        "cache-admit-ns-per-byte",
+        "cache_admit_ns_per_byte",
+        "stream-cache",
+        "stream_cache",
         "inflight",
         "delta-gate",
         "delta_gate",
@@ -224,7 +253,10 @@ impl RunConfig {
     /// `true`. The single source of the flag grammar — `apply_cli` and
     /// `cannyd`'s pre-parser both consult it.
     pub fn is_flag_key(key: &str) -> bool {
-        matches!(key, "parallel-hysteresis" | "parallel_hysteresis")
+        matches!(
+            key,
+            "parallel-hysteresis" | "parallel_hysteresis" | "stream-cache" | "stream_cache"
+        )
     }
 
     /// Load `key = value` lines (# comments, blank lines ok).
@@ -291,6 +323,12 @@ impl RunConfig {
         if !(self.slo_p99_ms.is_finite() && self.slo_p99_ms > 0.0) {
             return Err(Error::Config("slo-p99-ms must be > 0".into()));
         }
+        if self.cache_shards == 0 {
+            return Err(Error::Config("cache-shards must be >= 1".into()));
+        }
+        if !(self.cache_admit_ns_per_byte.is_finite() && self.cache_admit_ns_per_byte >= 0.0) {
+            return Err(Error::Config("cache-admit-ns-per-byte must be >= 0".into()));
+        }
         if self.inflight == 0 {
             return Err(Error::Config("inflight must be >= 1".into()));
         }
@@ -323,7 +361,13 @@ impl RunConfig {
         m.insert("slo-p99-ms".into(), self.slo_p99_ms.to_string());
         m.insert("max-pixels".into(), self.max_pixels.to_string());
         m.insert("clock".into(), self.clock.name().to_string());
-        m.insert("rethreshold-cache".into(), self.rethreshold_cache.to_string());
+        m.insert("cache-mb".into(), self.cache_mb.to_string());
+        m.insert("cache-shards".into(), self.cache_shards.to_string());
+        m.insert(
+            "cache-admit-ns-per-byte".into(),
+            self.cache_admit_ns_per_byte.to_string(),
+        );
+        m.insert("stream-cache".into(), self.stream_cache.to_string());
         m.insert("inflight".into(), self.inflight.to_string());
         m.insert("delta-gate".into(), self.delta_gate.name());
         m.insert("frame-budget-ms".into(), self.frame_budget_ms.to_string());
@@ -450,10 +494,6 @@ mod tests {
         c.set("batch-max", "12").unwrap();
         c.set("arrival-rate", "1500.5").unwrap();
         c.set("slo-p99-ms", "10").unwrap();
-        c.set("rethreshold-cache", "8").unwrap();
-        assert_eq!(c.rethreshold_cache, 8);
-        c.set("rethreshold_cache", "0").unwrap();
-        assert_eq!(c.rethreshold_cache, 0, "0 disables the cache and still validates");
         assert_eq!(c.lanes, 4);
         assert_eq!(c.queue_depth, 16);
         assert_eq!(c.batch_window_us, 500);
@@ -462,6 +502,40 @@ mod tests {
         c.validate().unwrap();
         c.set("lanes", "0").unwrap();
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn cache_keys_set_and_validate() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.cache_mb, 64, "cache tier enabled by default");
+        assert_eq!(c.cache_shards, 8);
+        assert!(!c.stream_cache, "stream sharing is opt-in");
+        c.set("cache-mb", "16").unwrap();
+        c.set("cache-shards", "4").unwrap();
+        c.set("cache-admit-ns-per-byte", "2.5").unwrap();
+        c.set("stream-cache", "true").unwrap();
+        assert_eq!(c.cache_mb, 16);
+        assert_eq!(c.cache_shards, 4);
+        assert!((c.cache_admit_ns_per_byte - 2.5).abs() < 1e-12);
+        assert!(c.stream_cache);
+        c.validate().unwrap();
+        c.set("cache_mb", "0").unwrap();
+        assert_eq!(c.cache_mb, 0, "0 disables the tier and still validates");
+        c.validate().unwrap();
+        c.set("cache-shards", "0").unwrap();
+        assert!(c.validate().is_err());
+        c.set("cache-shards", "2").unwrap();
+        c.set("cache-admit-ns-per-byte", "-1").unwrap();
+        assert!(c.validate().is_err());
+        // `--stream-cache` is a bare flag on the CLI.
+        assert!(RunConfig::is_flag_key("stream-cache"));
+        let mut f = RunConfig::default();
+        f.apply_cli(&["--stream-cache".to_string()]).unwrap();
+        assert!(f.stream_cache);
+        let m = RunConfig::default().to_map();
+        assert_eq!(m.get("cache-mb").map(String::as_str), Some("64"));
+        assert_eq!(m.get("cache-shards").map(String::as_str), Some("8"));
+        assert_eq!(m.get("stream-cache").map(String::as_str), Some("false"));
     }
 
     #[test]
@@ -502,6 +576,7 @@ mod tests {
                 "artifacts" | "artifacts-dir" => "artifacts",
                 "tile-name" | "tile_name" => "t128",
                 "parallel-hysteresis" | "parallel_hysteresis" => "true",
+                "stream-cache" | "stream_cache" => "true",
                 "clock" => "wall",
                 "delta-gate" | "delta_gate" => "0.05",
                 "drop-policy" | "drop_policy" => "degrade",

@@ -28,6 +28,13 @@
 //!   suppressed-magnitude artifact — exact at the default threshold 0),
 //!   and a real-time frame budget that drops or degrades late frames
 //!   (`cannyd stream`).
+//! * **L3 cache tier** ([`cache`]) — a process-wide, content-addressed,
+//!   sharded artifact cache under a global **byte budget** with
+//!   cost-aware admission, shared by serving lanes and stream
+//!   executors alike: a front computed anywhere (a `front-only`
+//!   request, a decoded frame) serves re-thresholds and duplicate
+//!   frames everywhere, bit-exactly (`--cache-mb`, `--cache-shards`,
+//!   `--cache-admit-ns-per-byte`, `--stream-cache`).
 //! * **L2/L1 (python/, build-time only)** — the Canny front-end
 //!   (Gaussian → Sobel → NMS → double threshold) as JAX + Pallas
 //!   kernels, AOT-lowered to HLO text consumed by [`runtime`] through
@@ -80,6 +87,38 @@
 //! }
 //! ```
 //!
+//! Sharing work through the **artifact cache** ([`cache`]): offer a
+//! computed front once, then serve bit-identical re-thresholds of the
+//! same content from the tier — across lanes, streams, or your own
+//! embedding:
+//!
+//! ```no_run
+//! use canny_par::cache::{ArtifactCache, ArtifactKey, CacheConfig, CacheTier};
+//! use canny_par::canny::{Artifact, CannyParams, StageKind};
+//! use canny_par::coordinator::Detector;
+//! use canny_par::image::synth::{Scene, generate};
+//!
+//! let det = Detector::builder().workers(2).build().unwrap();
+//! let cache = ArtifactCache::new(CacheConfig::default());
+//! let img = generate(Scene::Shapes { seed: 7 }, 256, 256);
+//! // Warm: run the front once and offer the suppressed map.
+//! let front = det.plan().stop_after(StageKind::Nms);
+//! let mut out = det.run_plan(&front, Some(&img), det.params()).unwrap();
+//! let nm = out.take_suppressed().unwrap();
+//! cache.offer(ArtifactKey::suppressed(&img), Artifact::Suppressed(nm),
+//!             out.total_ns, CacheTier::Serve);
+//! // Hit: any consumer with the same bytes skips the front entirely.
+//! if let Some(Artifact::Suppressed(nm)) =
+//!     cache.get(&ArtifactKey::suppressed(&img), CacheTier::Serve)
+//! {
+//!     let re = det.plan().from_suppressed(nm);
+//!     let tighter = CannyParams { lo: 0.02, hi: 0.25, ..CannyParams::default() };
+//!     let out = det.run_plan(&re, None, &tighter).unwrap();
+//!     println!("{} edge pixels, {:?}", out.edges().unwrap().count_edges(),
+//!              cache.snapshot());
+//! }
+//! ```
+//!
 //! Serving a request stream (the CLI equivalent is
 //! `cannyd serve --synthetic 200 --lanes 2`):
 //!
@@ -119,6 +158,7 @@
 
 pub mod amdahl;
 pub mod bench;
+pub mod cache;
 pub mod canny;
 pub mod config;
 pub mod coordinator;

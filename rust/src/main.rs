@@ -189,8 +189,8 @@ USAGE: cannyd <run|gen|batch|serve|stream|calibrate|profile|info> [flags]
                                  --calibration file.json|probe swaps the
                                  virtual cost model for a measured one;
                                  requests may carry "kind": full | front-only
-                                 | re-threshold {lo, hi} — re-threshold hits a
-                                 per-lane suppressed-magnitude LRU)
+                                 | re-threshold {lo, hi} — re-threshold hits the
+                                 shared content-addressed artifact cache)
   stream     frame-stream tier: --synthetic-frames 32 [--size 512x512]
                                 | --source video:SEED|SCENE|dir:PATH|trace:PATH
                                 (decode -> delta-gated front -> finish, pipeline-
@@ -207,11 +207,15 @@ Config flags (all commands): --engine serial|patterns|tiled|xla
   --artifacts DIR --tile-name tNNN --sim-cpus N --seed N --config FILE
 Serve flags: --lanes N --queue-depth N --batch-window-us N --batch-max N
   --arrival-rate HZ --slo-p99-ms F --max-pixels N --clock virtual|wall
-  --rethreshold-cache N (per-lane suppressed-map LRU entries, 0 = off)
+Cache flags (shared artifact tier, serve + stream):
+  --cache-mb N (global byte budget in MiB, 0 = off; default 64)
+  --cache-shards N (lock granularity; default 8)
+  --cache-admit-ns-per-byte F (cost-aware admission bar, 0 = admit all)
 Stream flags: --inflight N (bounded in-flight window)
   --delta-gate off|THRESH (temporal per-tile reuse; 0 = exact, default)
   --frame-budget-ms F (real-time deadline per frame, 0 = offline)
   --drop-policy drop|degrade|none (late-frame handling under a budget)
+  --stream-cache (consult/offer frames in the shared artifact tier)
 
 Unknown flags and subcommands are errors, not ignored.
 ";

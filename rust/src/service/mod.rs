@@ -49,18 +49,52 @@
 //! serving boundary:
 //!
 //! * `full` (default) — the whole pipeline, edge totals in the report;
-//! * `front-only` — Gaussian→Sobel→NMS only; warms the lane's
-//!   suppressed-magnitude LRU (capacity per lane:
-//!   `--rethreshold-cache N`, 0 disables);
+//! * `front-only` — Gaussian→Sobel→NMS only; warms the **shared
+//!   artifact cache** ([`crate::cache::ArtifactCache`]) with the
+//!   suppressed-magnitude map under a content-addressed key;
 //! * `re-threshold` — re-run Threshold + Hysteresis with new `lo`/`hi`
 //!   against the cached suppressed map: a hit skips
 //!   Gaussian/Sobel/NMS entirely (the report's `stages` section counts
-//!   executed phases, and `rethreshold_cache.hits/misses` the LRU).
+//!   executed phases, and the `cache` section the shared tier).
+//!
+//! The cache is one process-wide, sharded, byte-budgeted tier shared by
+//! **all** lanes (and by stream executors handed the same handle via
+//! [`server::ServeOptions::shared_cache`]): sized by `--cache-mb`
+//! (0 disables), sharded by `--cache-shards`, with cost-aware admission
+//! under `--cache-admit-ns-per-byte`. Keys digest the image bytes, so a
+//! warm-up on one lane serves every lane, and identical content
+//! deduplicates across clients and tiers.
 //!
 //! Batches never mix kinds (their stage sets, and so their service
 //! costs, differ), and the virtual clock charges each kind only its
 //! stage set — per-stage calibration fits when installed, synthetic
-//! fractions of the full cost otherwise.
+//! fractions of the full cost otherwise — plus a modeled cache-lookup
+//! cost for the kinds that hash content and probe the tier.
+//!
+//! ### Cache report section (`"cache"`, same schema in stream reports)
+//!
+//! ```json
+//! {
+//!   "enabled": true, "budget_bytes": 67108864, "shards": 8,
+//!   "admit_min_ns_per_byte": 0,
+//!   "bytes": 1048576, "entries": 4, "high_water_bytes": 1310720,
+//!   "evictions": 1, "lookups": 12, "hits": 9, "misses": 3,
+//!   "inserts": 4, "admission_rejects": 0, "too_large": 0,
+//!   "tiers": {
+//!     "serve":  {"lookups": 12, "hits": 9, "misses": 3, "inserts": 4,
+//!                "admission_rejects": 0, "too_large": 0},
+//!     "stream": {"lookups": 0, "hits": 0, "misses": 0, "inserts": 0,
+//!                "admission_rejects": 0, "too_large": 0}
+//!   }
+//! }
+//! ```
+//!
+//! Top-level counters aggregate the per-tier ones; `hits + misses ==
+//! lookups` always, and `bytes <= budget_bytes` is enforced by
+//! per-shard LRU eviction. `admission_rejects` counts offers that
+//! failed the cost-per-byte bar; `too_large` counts artifacts bigger
+//! than a shard's slice of the budget (`budget_bytes / shards`), which
+//! no eviction could ever make room for.
 //!
 //! ### Request JSON schema (`cannyd serve --requests trace.json`)
 //!
@@ -144,5 +178,5 @@ pub use calibrate::{Calibration, ProbePoint, StageCost};
 pub use clock::{ClockMode, WallClock};
 pub use queue::{AdmissionQueue, RejectReason};
 pub use request::{Request, RequestKind, Shape, Trace};
-pub use server::{calibrate_for, install_sigint_drain, serve, ServeOptions, SuppressedCache};
+pub use server::{calibrate_for, install_sigint_drain, serve, ServeOptions};
 pub use slo::{CostModel, LaneReport, LatencyStats, LatencySummary, ServeReport, SloStatus};

@@ -59,6 +59,13 @@ impl RequestKind {
             RequestKind::ReThreshold { .. } => 2,
         }
     }
+
+    /// Does this kind touch the shared [`crate::cache::ArtifactCache`]
+    /// (warm it, or consult it)? Drives both the real execution path
+    /// and the virtual clock's modeled lookup charge.
+    pub fn uses_artifact_cache(&self) -> bool {
+        !matches!(self, RequestKind::Full)
+    }
 }
 
 /// One client request, timestamped in virtual nanoseconds since serve
@@ -372,6 +379,13 @@ mod tests {
                 assert_eq!(i == j, a.name() == b.name());
             }
         }
+    }
+
+    #[test]
+    fn only_partial_kinds_use_the_artifact_cache() {
+        assert!(!RequestKind::Full.uses_artifact_cache());
+        assert!(RequestKind::FrontOnly.uses_artifact_cache());
+        assert!(RequestKind::ReThreshold { lo: 0.1, hi: 0.2 }.uses_artifact_cache());
     }
 
     #[test]

@@ -25,34 +25,48 @@
 //! model of the wall mode — which is what makes calibration
 //! ([`crate::service::calibrate`]) meaningful.
 //!
-//! ## Request kinds and the suppressed-magnitude cache
+//! ## Request kinds and the shared artifact cache
 //!
 //! Requests carry a [`RequestKind`] selecting which pipeline span runs
 //! (a [`crate::canny::StagePlan`] at the serving boundary):
 //!
 //! * `full` — the whole pipeline (the classic path);
-//! * `front-only` — stop after NMS and warm the lane's
-//!   [`SuppressedCache`] with the suppressed-magnitude map;
+//! * `front-only` — stop after NMS and warm the **shared**
+//!   [`crate::cache::ArtifactCache`] with the suppressed-magnitude map
+//!   under its content-addressed key;
 //! * `re-threshold {lo, hi}` — re-run only Threshold + Hysteresis from
 //!   the cached map. On a cache hit, Gaussian/Sobel/NMS never run —
 //!   the report's `stages` section proves it.
 //!
+//! The cache is one `Arc<ArtifactCache>` shared by *every* lane (and
+//! any stream executor handed the same handle): a front-only request
+//! served on lane 0 warms re-thresholds on lane 3, and identical
+//! content deduplicates across clients. Under the wall clock the lanes
+//! exercise real cross-shard contention; under the virtual clock the
+//! single-threaded replay keeps cache state — and so the report's
+//! `cache` section — byte-identical across runs.
+//!
 //! The virtual clock charges each kind only its stage set: per-stage
 //! calibration fits when installed, synthetic fractions of the full
 //! cost otherwise (re-threshold is modeled as a cache hit; the wall
-//! driver measures reality).
+//! driver measures reality). Kinds that consult the cache are
+//! additionally charged a modeled lookup cost
+//! ([`CACHE_LOOKUP_OVERHEAD_NS`] plus a per-pixel hash term), so the
+//! deterministic replay stays honest about the content digest the real
+//! path computes.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
-use crate::canny::{CannyParams, Engine, StageKind};
+use crate::cache::{ArtifactCache, ArtifactKey, CacheConfig, CacheSnapshot, CacheTier};
+use crate::canny::{Artifact, CannyParams, Engine, StageKind};
 use crate::config::RunConfig;
 use crate::coordinator::planner::Workload;
 use crate::coordinator::{CpuTopology, Detector, Planner};
 use crate::error::{Error, Result};
-use crate::image::synth::{generate, Scene};
+use crate::image::synth::generate;
 use crate::image::ImageF32;
 use crate::service::batcher::{Batcher, FormedBatch};
 use crate::service::calibrate::{Calibration, DEFAULT_PROBE_SHAPES, PROBE_REPEATS};
@@ -82,6 +96,14 @@ pub const SYNTH_RETHRESHOLD_PCT: u64 = 15;
 const FRONT_STAGES: &[&str] = &["pad", "gaussian", "sobel", "nms"];
 /// The stage spans a re-threshold request executes on a cache hit.
 const RETHRESHOLD_STAGES: &[&str] = &["threshold", "hysteresis"];
+
+/// Modeled fixed cost of one shared-cache consult (shard probe + LRU
+/// touch), charged by the virtual clock for kinds that use the cache.
+pub const CACHE_LOOKUP_OVERHEAD_NS: u64 = 2_000;
+/// Modeled content-digest throughput: the word-folding FNV digest
+/// ([`crate::cache::KeyHasher`]) costs two dependent multiply chains
+/// per pixel, charged as two pixels per nanosecond (~8 GB/s).
+pub const CACHE_HASH_PIXELS_PER_NS: u64 = 2;
 
 /// How often a wall-clock arrival sleep re-checks the interrupt flag.
 const INTERRUPT_POLL_NS: u64 = 20_000_000; // 20 ms
@@ -115,9 +137,13 @@ pub struct ServeOptions {
     pub clock: ClockMode,
     /// Worker threads per lane (0 = split host CPUs evenly over lanes).
     pub workers_per_lane: usize,
-    /// Per-lane suppressed-magnitude LRU capacity, entries
-    /// (0 = disabled: every re-threshold recomputes the front).
-    pub rethreshold_cache: usize,
+    /// Shared artifact-cache tier configuration (budget 0 disables it:
+    /// every re-threshold recomputes the front).
+    pub cache: CacheConfig,
+    /// An externally-owned cache to serve from instead of building a
+    /// fresh one per run — how a process shares one tier between
+    /// serving and streaming (see [`crate::stream::StreamOptions`]).
+    pub shared_cache: Option<Arc<ArtifactCache>>,
     /// Base detection parameters (the planner may adapt tile/grain).
     pub params: CannyParams,
     /// When set, a raised flag drains a wall-clock run gracefully
@@ -142,7 +168,8 @@ impl ServeOptions {
             calibration: None,
             clock: cfg.clock,
             workers_per_lane: 0,
-            rethreshold_cache: cfg.rethreshold_cache,
+            cache: CacheConfig::from_config(cfg),
+            shared_cache: None,
             params: cfg.params,
             interrupt: None,
             seed: cfg.seed,
@@ -160,11 +187,36 @@ impl ServeOptions {
         }
     }
 
+    /// Is the cache tier this run will actually serve from enabled?
+    /// The injected [`ServeOptions::shared_cache`] takes precedence
+    /// over the run's own [`CacheConfig`] — exactly mirroring which
+    /// cache the execution path uses — so the modeled lookup charge and
+    /// the real digest/probe can never disagree.
+    pub fn cache_enabled(&self) -> bool {
+        match &self.shared_cache {
+            Some(shared) => shared.enabled(),
+            None => self.cache.enabled(),
+        }
+    }
+
+    /// Modeled cost of one shared-cache consult for a request of
+    /// `pixels` pixels: the content digest walks every pixel, plus a
+    /// fixed shard-probe cost. Zero when the effective cache tier is
+    /// disabled — the real path skips the hash too.
+    pub fn cache_lookup_ns(&self, pixels: usize) -> u64 {
+        if !self.cache_enabled() {
+            return 0;
+        }
+        CACHE_LOOKUP_OVERHEAD_NS.saturating_add(pixels as u64 / CACHE_HASH_PIXELS_PER_NS)
+    }
+
     /// Modeled service cost of one dispatch of `kind`: full dispatches
     /// use the end-to-end model; partial kinds use the per-stage
     /// calibration fits when they cover the kind's stage set, else a
-    /// synthetic fraction of the full per-pixel cost. Re-threshold is
-    /// modeled as a cache hit (the wall driver measures misses).
+    /// synthetic fraction of the full per-pixel cost, plus the modeled
+    /// cache-lookup cost (those kinds hash content and probe a shard).
+    /// Re-threshold is modeled as a cache hit (the wall driver measures
+    /// misses).
     pub fn service_ns_kind(&self, kind: RequestKind, pixels: usize) -> u64 {
         let fraction = |pct: u64| {
             self.batch_overhead_ns.saturating_add(
@@ -174,8 +226,8 @@ impl ServeOptions {
                     / 100,
             )
         };
-        match kind {
-            RequestKind::Full => self.service_ns(pixels),
+        let base = match kind {
+            RequestKind::Full => return self.service_ns(pixels),
             RequestKind::FrontOnly => match &self.calibration {
                 Some(c) => c
                     .stage_service_ns(FRONT_STAGES, pixels)
@@ -188,6 +240,22 @@ impl ServeOptions {
                     .unwrap_or_else(|| c.service_ns(pixels) * SYNTH_RETHRESHOLD_PCT / 100),
                 None => fraction(SYNTH_RETHRESHOLD_PCT),
             },
+        };
+        debug_assert!(kind.uses_artifact_cache());
+        base.saturating_add(self.cache_lookup_ns(pixels))
+    }
+
+    /// Modeled service cost of one dispatched batch: `n` same-kind
+    /// requests totalling `pixels` pixels. The per-pixel terms already
+    /// scale with the batch total, but the real path hashes and probes
+    /// the cache once *per request*, so cache-using kinds are charged
+    /// the fixed probe overhead `n` times, not once.
+    pub fn service_ns_batch(&self, kind: RequestKind, pixels: usize, n: usize) -> u64 {
+        let base = self.service_ns_kind(kind, pixels);
+        if kind.uses_artifact_cache() && self.cache_enabled() && n > 1 {
+            base.saturating_add(CACHE_LOOKUP_OVERHEAD_NS.saturating_mul(n as u64 - 1))
+        } else {
+            base
         }
     }
 
@@ -297,64 +365,30 @@ pub fn calibrate_for(trace: &Trace, opts: &ServeOptions) -> Result<Calibration> 
     Calibration::probe(&det, &shapes, PROBE_REPEATS)
 }
 
-// ---- Suppressed-magnitude cache -----------------------------------------
+// ---- Shared artifact cache ----------------------------------------------
 
-/// Per-lane LRU of suppressed-magnitude maps keyed by (scene, shape):
-/// the re-threshold fast path. Small and exact — the maps are one f32
-/// per pixel and lanes see only their own dispatches.
-pub struct SuppressedCache {
-    cap: usize,
-    /// Most-recently-used last.
-    entries: Vec<(String, ImageF32)>,
+/// The cache every lane of this run serves from: the caller-supplied
+/// handle when one was injected ([`ServeOptions::shared_cache`], the
+/// cross-tier sharing path), else a fresh tier built from the run's
+/// [`CacheConfig`].
+fn build_cache(opts: &ServeOptions) -> Arc<ArtifactCache> {
+    match &opts.shared_cache {
+        Some(shared) => Arc::clone(shared),
+        None => Arc::new(ArtifactCache::new(opts.cache.clone())),
+    }
 }
 
-impl SuppressedCache {
-    pub fn new(cap: usize) -> SuppressedCache {
-        SuppressedCache { cap, entries: Vec::new() }
-    }
-
-    fn key(scene: &Scene, width: usize, height: usize) -> String {
-        format!("{scene:?}@{width}x{height}")
-    }
-
-    /// Look up a map, refreshing its recency. Returns a clone (the
-    /// plan's entry artifact takes ownership).
-    pub fn get(&mut self, scene: &Scene, width: usize, height: usize) -> Option<ImageF32> {
-        let key = Self::key(scene, width, height);
-        let i = self.entries.iter().position(|(k, _)| *k == key)?;
-        let entry = self.entries.remove(i);
-        let nm = entry.1.clone();
-        self.entries.push(entry);
-        Some(nm)
-    }
-
-    /// Insert (or refresh) a map, evicting the least-recently-used
-    /// entry past capacity. No-op with capacity 0.
-    pub fn put(&mut self, scene: &Scene, width: usize, height: usize, nm: ImageF32) {
-        if self.cap == 0 {
-            return;
-        }
-        let key = Self::key(scene, width, height);
-        self.entries.retain(|(k, _)| *k != key);
-        self.entries.push((key, nm));
-        if self.entries.len() > self.cap {
-            self.entries.remove(0);
-        }
-    }
-
-    pub fn len(&self) -> usize {
-        self.entries.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
-    }
-
-    /// False when capacity is 0 — callers can skip the clone a `put`
-    /// would immediately discard.
-    pub fn is_enabled(&self) -> bool {
-        self.cap > 0
-    }
+/// Offer a freshly-computed front to the shared tier under the image's
+/// content key — the one warm path both the front-only kind and the
+/// re-threshold miss use, so their key span and recompute estimate (the
+/// calibrated front cost) can never diverge.
+fn offer_front(cache: &ArtifactCache, opts: &ServeOptions, img: &ImageF32, nm: ImageF32) {
+    cache.offer(
+        ArtifactKey::suppressed(img),
+        Artifact::Suppressed(nm),
+        opts.service_ns_kind(RequestKind::FrontOnly, img.len()),
+        CacheTier::Serve,
+    );
 }
 
 // ---- Clock-agnostic core ------------------------------------------------
@@ -415,8 +449,6 @@ struct LaneStats {
     kinds: BTreeMap<&'static str, u64>,
     /// Executed pipeline phases per stage-span name (execution only).
     stage_runs: BTreeMap<&'static str, u64>,
-    cache_hits: u64,
-    cache_misses: u64,
 }
 
 impl LaneStats {
@@ -439,12 +471,25 @@ impl LaneStats {
         }
     }
 
+    /// Run the front over `img` and return its suppressed-magnitude
+    /// map, recording the executed stages.
+    fn run_front(&mut self, det: &Detector, img: &ImageF32) -> Result<ImageF32> {
+        let plan = det.plan().stop_after(StageKind::Nms);
+        let mut out = det.run_plan(&plan, Some(img), det.params())?;
+        self.note_stage_runs(&out.records);
+        out.take_suppressed()
+            .ok_or_else(|| Error::Scheduler("front-only plan yielded no suppressed map".into()))
+    }
+
     /// Run the real pipeline over the batch per its request kind
-    /// (no-op without a detector).
+    /// (no-op without a detector). Partial kinds go through the shared
+    /// artifact cache under content-addressed keys; `opts` supplies the
+    /// calibrated recompute estimate the admission policy weighs.
     fn execute_batch(
         &mut self,
         det: Option<&Detector>,
-        cache: &mut SuppressedCache,
+        cache: &ArtifactCache,
+        opts: &ServeOptions,
         batch: &FormedBatch,
     ) -> Result<()> {
         let Some(det) = det else {
@@ -460,37 +505,36 @@ impl LaneStats {
                 }
                 RequestKind::FrontOnly => {
                     let img = generate(req.scene, req.width, req.height);
-                    let plan = det.plan().stop_after(StageKind::Nms);
-                    let mut out = det.run_plan(&plan, Some(&img), det.params())?;
-                    self.note_stage_runs(&out.records);
-                    let nm = out.take_suppressed().ok_or_else(|| {
-                        Error::Scheduler("front-only plan yielded no suppressed map".into())
-                    })?;
-                    cache.put(&req.scene, req.width, req.height, nm);
+                    let nm = self.run_front(det, &img)?;
+                    if cache.enabled() {
+                        offer_front(cache, opts, &img, nm);
+                    }
                 }
                 RequestKind::ReThreshold { lo, hi } => {
                     let params = CannyParams { lo, hi, ..*det.params() };
-                    let nm = match cache.get(&req.scene, req.width, req.height) {
-                        Some(nm) => {
-                            self.cache_hits += 1;
-                            nm
+                    // Content addressing needs the content: generate
+                    // the scene, hash it, then consult the shared tier.
+                    let img = generate(req.scene, req.width, req.height);
+                    let cached = if cache.enabled() {
+                        let key = ArtifactKey::suppressed(&img);
+                        match cache.get(&key, CacheTier::Serve) {
+                            Some(Artifact::Suppressed(nm)) => Some(nm),
+                            // Key spans pin the artifact kind; anything
+                            // else recomputes defensively.
+                            Some(_) | None => None,
                         }
+                    } else {
+                        None
+                    };
+                    let nm = match cached {
+                        Some(nm) => nm,
                         None => {
-                            // Miss: compute the front once, cache it,
+                            // Miss: compute the front once, offer it,
                             // then resume — the next re-threshold of
-                            // this scene hits.
-                            self.cache_misses += 1;
-                            let img = generate(req.scene, req.width, req.height);
-                            let plan = det.plan().stop_after(StageKind::Nms);
-                            let mut out = det.run_plan(&plan, Some(&img), det.params())?;
-                            self.note_stage_runs(&out.records);
-                            let nm = out.take_suppressed().ok_or_else(|| {
-                                Error::Scheduler(
-                                    "front-only plan yielded no suppressed map".into(),
-                                )
-                            })?;
-                            if cache.is_enabled() {
-                                cache.put(&req.scene, req.width, req.height, nm.clone());
+                            // this content hits, on any lane.
+                            let nm = self.run_front(det, &img)?;
+                            if cache.enabled() {
+                                offer_front(cache, opts, &img, nm.clone());
                             }
                             nm
                         }
@@ -509,13 +553,20 @@ impl LaneStats {
     }
 }
 
+/// Driver-level totals the lanes cannot see (arrival accounting and
+/// the end-of-run cache snapshot).
+struct RunTotals {
+    offered: u64,
+    interrupted: bool,
+    cache: CacheSnapshot,
+}
+
 /// Roll driver results into the report (identical schema either way).
 fn build_report(
     label: &str,
     opts: &ServeOptions,
     plan: (Engine, usize),
-    offered: u64,
-    interrupted: bool,
+    totals: RunTotals,
     intake: &Intake,
     lanes: Vec<LaneStats>,
 ) -> ServeReport {
@@ -526,7 +577,6 @@ fn build_report(
     let mut edge_pixels = 0u64;
     let mut kinds: BTreeMap<String, u64> = BTreeMap::new();
     let mut stage_runs: BTreeMap<String, u64> = BTreeMap::new();
-    let (mut cache_hits, mut cache_misses) = (0u64, 0u64);
     for l in &lanes {
         total_latency.merge(&l.latency);
         queue_wait.merge(&l.queue_wait);
@@ -539,8 +589,6 @@ fn build_report(
         for (&k, &v) in &l.stage_runs {
             *stage_runs.entry(k.to_string()).or_insert(0) += v;
         }
-        cache_hits += l.cache_hits;
-        cache_misses += l.cache_misses;
     }
     let lane_reports = lanes
         .iter()
@@ -559,8 +607,8 @@ fn build_report(
         clock: opts.clock.name().to_string(),
         engine: plan.0.name().to_string(),
         workers_per_lane: plan.1,
-        interrupted,
-        offered,
+        interrupted: totals.interrupted,
+        offered: totals.offered,
         admitted: intake.queue.admitted,
         rejected_full: intake.queue.rejected_full,
         rejected_oversize: intake.queue.rejected_oversize,
@@ -580,8 +628,7 @@ fn build_report(
         cost_model: opts.cost_model(),
         kinds,
         stage_runs,
-        cache_hits,
-        cache_misses,
+        cache: totals.cache,
     }
 }
 
@@ -608,15 +655,17 @@ fn serve_virtual(label: &str, trace: &Trace, opts: &ServeOptions) -> Result<Serv
     let (engine, workers_per_lane, params) = plan_lanes(trace, opts);
     struct VirtualLane {
         det: Option<Detector>,
-        cache: SuppressedCache,
         busy_until_ns: u64,
         stats: LaneStats,
     }
+    // One shared tier across every lane; the single-threaded replay
+    // touches it in a deterministic order, so the report's `cache`
+    // section is as replayable as the latencies.
+    let cache = build_cache(opts);
     let mut lanes: Vec<VirtualLane> = Vec::with_capacity(opts.lanes);
     for _ in 0..opts.lanes {
         lanes.push(VirtualLane {
             det: build_lane_detector(engine, workers_per_lane, params, opts.execute)?,
-            cache: SuppressedCache::new(opts.rethreshold_cache),
             busy_until_ns: 0,
             stats: LaneStats::default(),
         });
@@ -635,13 +684,13 @@ fn serve_virtual(label: &str, trace: &Trace, opts: &ServeOptions) -> Result<Serv
                 break;
             };
             let batch = ready.pop_front().expect("checked non-empty");
-            let service_ns = opts.service_ns_kind(batch.kind, batch.pixels());
+            let service_ns = opts.service_ns_batch(batch.kind, batch.pixels(), batch.len());
             let complete_ns = now + service_ns;
             intake.release(batch.len());
             let lane = &mut lanes[idx];
             lane.busy_until_ns = complete_ns;
             lane.stats.record_batch(&batch, now, complete_ns);
-            lane.stats.execute_batch(lane.det.as_ref(), &mut lane.cache, &batch)?;
+            lane.stats.execute_batch(lane.det.as_ref(), &cache, opts, &batch)?;
         }
 
         // Next event: arrival, batch-window deadline, or (if work is
@@ -680,15 +729,9 @@ fn serve_virtual(label: &str, trace: &Trace, opts: &ServeOptions) -> Result<Serv
     debug_assert_eq!(intake.queue.occupancy(), 0);
 
     let stats = lanes.into_iter().map(|l| l.stats).collect();
-    Ok(build_report(
-        label,
-        opts,
-        (engine, workers_per_lane),
-        trace.len() as u64,
-        false,
-        &intake,
-        stats,
-    ))
+    let totals =
+        RunTotals { offered: trace.len() as u64, interrupted: false, cache: cache.snapshot() };
+    Ok(build_report(label, opts, (engine, workers_per_lane), totals, &intake, stats))
 }
 
 // ---- Wall driver --------------------------------------------------------
@@ -712,10 +755,10 @@ fn wall_lane(
     det: Option<Detector>,
     opts: &ServeOptions,
     shared: &WallShared,
+    cache: &ArtifactCache,
     clock: WallClock,
 ) -> Result<LaneStats> {
     let mut stats = LaneStats::default();
-    let mut cache = SuppressedCache::new(opts.rethreshold_cache);
     loop {
         let batch = {
             let mut d = shared.dispatch.lock().expect("dispatch lock");
@@ -735,13 +778,13 @@ fn wall_lane(
         shared.intake.lock().expect("intake lock").release(batch.len());
         let dispatch_ns = clock.now_ns();
         if opts.execute {
-            stats.execute_batch(det.as_ref(), &mut cache, &batch)?;
+            stats.execute_batch(det.as_ref(), cache, opts, &batch)?;
         } else {
             // Scheduling-only runs still occupy the lane for the
             // modeled service time so wall studies work without
             // compute.
             std::thread::sleep(Duration::from_nanos(
-                opts.service_ns_kind(batch.kind, batch.pixels()),
+                opts.service_ns_batch(batch.kind, batch.pixels(), batch.len()),
             ));
         }
         stats.record_batch(&batch, dispatch_ns, clock.now_ns());
@@ -767,12 +810,16 @@ fn serve_wall(label: &str, trace: &Trace, opts: &ServeOptions) -> Result<ServeRe
         dispatch: Mutex::new(WallDispatch { ready: VecDeque::new(), closed: false }),
         cv: Condvar::new(),
     });
+    // One shared tier drained by every lane thread — this is where the
+    // sharded locking earns its keep (real cross-lane contention).
+    let cache = build_cache(opts);
     let clock = WallClock::start();
     let mut handles = Vec::with_capacity(opts.lanes);
     for det in dets {
         let shared = Arc::clone(&shared);
+        let cache = Arc::clone(&cache);
         let opts = opts.clone();
-        handles.push(std::thread::spawn(move || wall_lane(det, &opts, &shared, clock)));
+        handles.push(std::thread::spawn(move || wall_lane(det, &opts, &shared, &cache, clock)));
     }
 
     // Arrival replay on this thread: sleep to the next event (arrival
@@ -886,20 +933,14 @@ fn serve_wall(label: &str, trace: &Trace, opts: &ServeOptions) -> Result<ServeRe
     debug_assert_eq!(intake.queue.occupancy(), 0);
     // `offered` counts arrivals that reached an admission decision —
     // equal to the trace length unless the replay was interrupted.
-    Ok(build_report(
-        label,
-        opts,
-        (engine, workers_per_lane),
-        next as u64,
-        interrupted,
-        &intake,
-        stats,
-    ))
+    let totals = RunTotals { offered: next as u64, interrupted, cache: cache.snapshot() };
+    Ok(build_report(label, opts, (engine, workers_per_lane), totals, &intake, stats))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::image::synth::Scene;
     use crate::service::slo::SloStatus;
 
     fn opts() -> ServeOptions {
@@ -1019,14 +1060,17 @@ mod tests {
     #[test]
     fn kind_costs_scale_with_their_stage_sets() {
         let o = opts();
-        let px = 10_000usize;
+        // Large enough that the per-pixel terms dominate the fixed
+        // cache-lookup overhead (kind ordering is a per-pixel claim).
+        let px = 100_000usize;
         let full = o.service_ns_kind(RequestKind::Full, px);
         let front = o.service_ns_kind(RequestKind::FrontOnly, px);
         let re = o.service_ns_kind(RequestKind::ReThreshold { lo: 0.1, hi: 0.2 }, px);
         assert!(re < front && front < full, "re {re} front {front} full {full}");
         assert_eq!(full, o.service_ns(px));
 
-        // Per-stage calibration beats the synthetic fractions.
+        // Per-stage calibration beats the synthetic fractions; cache
+        // kinds additionally pay the modeled lookup (hash + probe).
         let mut c = opts();
         c.calibration = Some(Calibration {
             engine: "patterns".into(),
@@ -1043,36 +1087,65 @@ mod tests {
                 .collect(),
             probes: Vec::new(),
         });
+        let lookup = c.cache_lookup_ns(px);
+        assert_eq!(lookup, CACHE_LOOKUP_OVERHEAD_NS + px as u64 / 2);
         assert_eq!(
             c.service_ns_kind(RequestKind::FrontOnly, px),
-            4 * (1_000 + px as u64 / 2)
+            4 * (1_000 + px as u64 / 2) + lookup
         );
         assert_eq!(
             c.service_ns_kind(RequestKind::ReThreshold { lo: 0.1, hi: 0.2 }, px),
-            2 * (1_000 + px as u64 / 2)
+            2 * (1_000 + px as u64 / 2) + lookup
+        );
+        // A disabled tier charges no lookup — the real path skips the
+        // hash too.
+        let mut off = opts();
+        off.cache = CacheConfig::disabled();
+        assert_eq!(off.cache_lookup_ns(px), 0);
+        assert_eq!(
+            off.service_ns_kind(RequestKind::FrontOnly, px),
+            o.service_ns_kind(RequestKind::FrontOnly, px) - lookup
         );
     }
 
     #[test]
-    fn suppressed_cache_lru_evicts_oldest() {
-        let mut c = SuppressedCache::new(2);
-        let a = Scene::Shapes { seed: 1 };
-        let b = Scene::Shapes { seed: 2 };
-        let d = Scene::Shapes { seed: 3 };
-        c.put(&a, 8, 8, ImageF32::zeros(8, 8));
-        c.put(&b, 8, 8, ImageF32::zeros(8, 8));
-        assert!(c.get(&a, 8, 8).is_some(), "a refreshed");
-        c.put(&d, 8, 8, ImageF32::zeros(8, 8));
-        assert_eq!(c.len(), 2);
-        assert!(c.get(&b, 8, 8).is_none(), "b was LRU and evicted");
-        assert!(c.get(&a, 8, 8).is_some());
-        assert!(c.get(&d, 8, 8).is_some());
-        // Shape is part of the key.
-        assert!(c.get(&a, 4, 4).is_none());
-        // Capacity 0 disables the cache entirely.
-        let mut off = SuppressedCache::new(0);
-        off.put(&a, 8, 8, ImageF32::zeros(8, 8));
-        assert!(off.is_empty());
+    fn batch_costs_charge_the_probe_per_request() {
+        let o = opts();
+        let (px, n) = (10_000usize, 4usize);
+        let re = RequestKind::ReThreshold { lo: 0.1, hi: 0.2 };
+        // Each of the n requests hashes and probes the tier.
+        assert_eq!(
+            o.service_ns_batch(re, px, n),
+            o.service_ns_kind(re, px) + (n as u64 - 1) * CACHE_LOOKUP_OVERHEAD_NS
+        );
+        assert_eq!(o.service_ns_batch(re, px, 1), o.service_ns_kind(re, px));
+        // Full batches never touch the cache; neither does a disabled
+        // tier.
+        assert_eq!(
+            o.service_ns_batch(RequestKind::Full, px, n),
+            o.service_ns_kind(RequestKind::Full, px)
+        );
+        let mut off = opts();
+        off.cache = CacheConfig::disabled();
+        assert_eq!(off.service_ns_batch(re, px, n), off.service_ns_kind(re, px));
+    }
+
+    #[test]
+    fn effective_cache_follows_the_injected_handle() {
+        let mut o = opts();
+        o.cache = CacheConfig::disabled();
+        assert!(!o.cache_enabled());
+        assert_eq!(o.cache_lookup_ns(100), 0);
+        // An injected enabled tier wins over a disabled run config…
+        o.shared_cache = Some(Arc::new(ArtifactCache::new(CacheConfig::default())));
+        assert!(o.cache_enabled());
+        assert!(o.cache_lookup_ns(100) > 0);
+        // …and an injected disabled tier wins over an enabled one, so
+        // the modeled lookup charge always matches the executed path.
+        o.cache = CacheConfig::default();
+        o.shared_cache = Some(Arc::new(ArtifactCache::disabled()));
+        assert!(!o.cache_enabled());
+        assert_eq!(o.cache_lookup_ns(100), 0);
     }
 
     #[test]

@@ -8,6 +8,7 @@
 
 use std::collections::BTreeMap;
 
+use crate::cache::CacheSnapshot;
 use crate::service::calibrate::Calibration;
 use crate::util::json::Json;
 
@@ -200,10 +201,10 @@ pub struct ServeReport {
     /// a re-threshold serving path must grow `threshold`/`hysteresis`
     /// without growing `gaussian`/`sobel`/`nms`.
     pub stage_runs: BTreeMap<String, u64>,
-    /// Per-lane suppressed-magnitude LRU hit/miss totals (re-threshold
-    /// requests only).
-    pub cache_hits: u64,
-    pub cache_misses: u64,
+    /// End-of-run snapshot of the shared artifact cache
+    /// ([`crate::cache::ArtifactCache`]): config echo, hit/miss/insert
+    /// counters per caller tier, byte occupancy and evictions.
+    pub cache: CacheSnapshot,
 }
 
 impl ServeReport {
@@ -291,10 +292,7 @@ impl ServeReport {
             "stages".into(),
             Json::Obj(self.stage_runs.iter().map(|(k, &v)| (k.clone(), num(v))).collect()),
         );
-        let mut cache = BTreeMap::new();
-        cache.insert("hits".into(), num(self.cache_hits));
-        cache.insert("misses".into(), num(self.cache_misses));
-        m.insert("rethreshold_cache".into(), Json::Obj(cache));
+        m.insert("cache".into(), self.cache.to_json());
 
         m.insert("latency_ns".into(), self.latency.to_json());
         m.insert("queue_wait_ns".into(), self.queue_wait.to_json());
@@ -437,8 +435,7 @@ mod tests {
             cost_model: CostModel::Synthetic { overhead_ns: 100_000, cost_ns_per_pixel: 4 },
             kinds: [("full".to_string(), 8u64)].into_iter().collect(),
             stage_runs: BTreeMap::new(),
-            cache_hits: 0,
-            cache_misses: 0,
+            cache: crate::cache::ArtifactCache::disabled().snapshot(),
         }
     }
 
@@ -468,10 +465,11 @@ mod tests {
         let j = report().to_json();
         assert_eq!(j.get("interrupted"), Some(&Json::Bool(false)));
         assert_eq!(j.get("kinds").unwrap().get("full").unwrap().as_usize(), Some(8));
-        assert_eq!(
-            j.get("rethreshold_cache").unwrap().get("hits").unwrap().as_usize(),
-            Some(0)
-        );
+        let cache = j.get("cache").unwrap();
+        assert_eq!(cache.get("enabled"), Some(&Json::Bool(false)));
+        assert_eq!(cache.get("hits").unwrap().as_usize(), Some(0));
+        assert!(cache.get("tiers").unwrap().get("serve").is_some());
+        assert!(cache.get("tiers").unwrap().get("stream").is_some());
         assert!(j.get("stages").unwrap().as_obj().unwrap().is_empty());
         assert_eq!(j.get("queue").unwrap().get("high_water").unwrap().as_usize(), Some(4));
         assert_eq!(j.get("batch").unwrap().get("formed").unwrap().as_usize(), Some(2));

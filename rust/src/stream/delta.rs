@@ -153,6 +153,27 @@ impl DeltaGate {
         self.nm.as_ref()
     }
 
+    /// Install an externally-computed `(frame, suppressed)` pair as the
+    /// gate's reference — the shared-artifact-cache hit path: when a
+    /// frame's exact front came from [`crate::cache::ArtifactCache`]
+    /// (computed by another stream or a serving lane), the gate must
+    /// adopt it as the new temporal baseline or the *next* frame would
+    /// diff against a stale predecessor. The pair is exact by
+    /// construction (content-addressed keys), so the drift accumulator
+    /// resets to zero. No-op in [`DeltaMode::Off`], which keeps no
+    /// state.
+    pub fn install(&mut self, img: ImageF32, nm: ImageF32) -> Result<()> {
+        if !self.mode.is_on() {
+            return Ok(());
+        }
+        debug_assert_eq!((img.width(), img.height()), (nm.width(), nm.height()));
+        let grid = TileGrid::new(img.width(), img.height(), self.tile, self.tile, consts::HALO)?;
+        self.acc = vec![0.0; grid.tiles().count()];
+        self.prev = Some(img);
+        self.nm = Some(nm);
+        Ok(())
+    }
+
     /// Gate one frame: classify every tile, recompute the dirty ones
     /// (on `pool` when given, serially otherwise — both produce
     /// identical bytes), update the cache, and return the stitched map.
@@ -359,6 +380,32 @@ mod tests {
         let mut gate = DeltaGate::with_tile(DeltaMode::Off, 16);
         gate.advance(None, img).unwrap();
         assert!(gate.cached_nm().is_none(), "off mode must not pay for a cache");
+    }
+
+    #[test]
+    fn install_becomes_the_gate_baseline() {
+        // Frame 0's exact front arrives from the shared cache; the gate
+        // adopts it and frame 0 replayed is then fully clean.
+        let img = generate(Scene::Shapes { seed: 11 }, 64, 48);
+        let (_, nm) = front_serial(&img, 0.05, 0.15);
+        let mut gate = DeltaGate::with_tile(DeltaMode::default(), 16);
+        gate.install(img.clone(), nm.clone()).unwrap();
+        let run = gate.advance(None, img.clone()).unwrap();
+        assert!(run.gated, "installed baseline must gate the next frame");
+        assert_eq!(run.dirty, 0);
+        assert_eq!(run.nm, nm);
+        // A moving next frame stays exact against the installed
+        // reference.
+        let next = generate(Scene::Video { seed: 11, frame: 1 }, 64, 48);
+        let mut gate2 = DeltaGate::with_tile(DeltaMode::Gate(0.0), 16);
+        gate2.install(img, nm).unwrap();
+        let run2 = gate2.advance(None, next.clone()).unwrap();
+        let (_, want) = front_serial(&next, 0.05, 0.15);
+        assert_eq!(run2.nm, want);
+        // Off mode ignores installs entirely.
+        let mut off = DeltaGate::with_tile(DeltaMode::Off, 16);
+        off.install(generate(Scene::Gradient, 32, 32), ImageF32::zeros(32, 32)).unwrap();
+        assert!(off.cached_nm().is_none());
     }
 
     #[test]

@@ -10,9 +10,11 @@
 //! within a frame: the paper's two patterns composed).
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 use std::time::Duration;
 
-use crate::canny::{CannyParams, Engine, StageKind, StagePlan, StageRecord};
+use crate::cache::{ArtifactCache, ArtifactKey, CacheConfig, CacheTier};
+use crate::canny::{Artifact, CannyParams, Engine, StageKind, StagePlan, StageRecord};
 use crate::config::RunConfig;
 use crate::coordinator::Detector;
 use crate::error::{Error, Result};
@@ -39,6 +41,14 @@ pub enum DropPolicy {
     /// Process anyway; lateness is only counted.
     Keep,
 }
+
+/// Lower bound on a full front's cost used as an offer's admission
+/// estimate when no ungated front has been measured yet (a stream that
+/// opens on cache hits has nothing to extrapolate from). Real fronts
+/// run several ns/pixel single-threaded; 1 ns/pixel keeps the estimate
+/// conservative but never zero, so an evicted hot entry can still
+/// clear a reasonable admission bar and re-instate itself.
+pub const FRONT_ESTIMATE_FLOOR_NS_PER_PIXEL: u64 = 1;
 
 impl DropPolicy {
     /// Parse a `--drop-policy` value.
@@ -81,10 +91,19 @@ pub struct StreamOptions {
     /// Keep each emitted frame's [`EdgeMap`] in the outcome (tests,
     /// embedding programs); the CLI leaves this off.
     pub keep_edges: bool,
+    /// Shared artifact cache to consult before each front pass and to
+    /// offer computed suppressed maps into ([`crate::cache`]). Hand the
+    /// same `Arc` to several streams (or to a serving run via
+    /// [`crate::service::ServeOptions::shared_cache`]) and identical
+    /// frames deduplicate across them. `None` = the stream keeps only
+    /// its own per-stream temporal gate.
+    pub cache: Option<Arc<ArtifactCache>>,
 }
 
 impl StreamOptions {
-    /// Build from the resolved [`RunConfig`] (the CLI path).
+    /// Build from the resolved [`RunConfig`] (the CLI path). The shared
+    /// cache is attached when `stream-cache` is set and the tier is
+    /// enabled (`cache-mb > 0`).
     pub fn from_config(cfg: &RunConfig) -> StreamOptions {
         StreamOptions {
             inflight: cfg.inflight,
@@ -93,6 +112,11 @@ impl StreamOptions {
             drop_policy: cfg.drop_policy,
             params: cfg.params,
             keep_edges: false,
+            cache: if cfg.stream_cache && cfg.cache_mb > 0 {
+                Some(Arc::new(ArtifactCache::new(CacheConfig::from_config(cfg))))
+            } else {
+                None
+            },
         }
     }
 }
@@ -106,6 +130,7 @@ impl Default for StreamOptions {
             drop_policy: DropPolicy::Drop,
             params: CannyParams::default(),
             keep_edges: false,
+            cache: None,
         }
     }
 }
@@ -122,6 +147,8 @@ pub struct FrameResult {
     pub late: bool,
     /// Counted toward the gate hit-rate (a reference frame existed).
     pub gated: bool,
+    /// Served whole from the shared artifact cache (no gate, no front).
+    pub cached: bool,
     pub tiles_clean: usize,
     pub tiles_dirty: usize,
     pub edge_pixels: u64,
@@ -153,6 +180,7 @@ struct Slot {
     degraded: bool,
     late: bool,
     gated: bool,
+    cached: bool,
     clean: usize,
     dirty: usize,
     edge_pixels: u64,
@@ -219,6 +247,7 @@ pub fn run_stream(
             degraded: false,
             late: false,
             gated: false,
+            cached: false,
             clean: 0,
             dirty: 0,
             edge_pixels: 0,
@@ -242,6 +271,23 @@ pub fn run_stream(
     // maintained only when the policy can use it.
     let mut degrade_nm: Option<crate::image::ImageF32> = None;
     let drop_policy = opts.drop_policy;
+    let cache = opts.cache.clone();
+    // The shared tier is content-addressed and its consumers (serve
+    // re-threshold, other streams) assume bit-exact artifacts. A gated
+    // frame under a nonzero threshold may carry tolerated drift, so
+    // only exact maps are offered: ungated full fronts always, gated
+    // ones only when the gate threshold is 0.
+    let gate_exact = match opts.delta {
+        DeltaMode::Off => true,
+        DeltaMode::Gate(t) => t == 0.0,
+    };
+    // Admission estimate for gated offers: what a cross-tier hit
+    // *saves* is a full front, not the delta-check + dirty-tile sliver
+    // this frame happened to pay — a near-static frame's exact map is
+    // exactly as valuable as a fully-recomputed one. Updated by every
+    // ungated frame; until one has been measured (a stream can open on
+    // a cache hit), offers fall back to a conservative per-pixel floor.
+    let mut last_full_front_ns = 0u64;
     let front: DynStage<Slot> = Box::new(move |mut s: Slot| {
         if s.error.is_some() {
             return s;
@@ -269,6 +315,30 @@ pub fn run_stream(
                 DropPolicy::Keep => {}
             }
         }
+        // Consult the shared tier first: another stream (or a serving
+        // lane) may already have this exact frame's front. A hit skips
+        // the gate and the front entirely; the pair is installed as the
+        // gate's new temporal baseline so the *next* frame diffs
+        // against the right predecessor.
+        let key = cache
+            .as_ref()
+            .filter(|c| c.enabled())
+            .map(|_| ArtifactKey::suppressed(&img));
+        if let (Some(c), Some(k)) = (cache.as_deref(), key.as_ref()) {
+            if let Some(Artifact::Suppressed(nm)) = c.get(k, CacheTier::Stream) {
+                if gate.mode().is_on() {
+                    if let Err(e) = gate.install(img, nm.clone()) {
+                        s.error = Some(e);
+                        return s;
+                    }
+                } else if drop_policy == DropPolicy::Degrade {
+                    degrade_nm = Some(nm.clone());
+                }
+                s.cached = true;
+                s.nm = Some(nm);
+                return s;
+            }
+        }
         match gate.advance(pool, img) {
             Ok(run) => {
                 s.clean = run.clean;
@@ -285,6 +355,26 @@ pub fn run_stream(
                 });
                 if drop_policy == DropPolicy::Degrade && !gate.mode().is_on() {
                     degrade_nm = Some(run.nm.clone());
+                }
+                if !run.gated {
+                    last_full_front_ns = run.wall_ns;
+                }
+                // Offer this frame's front to the shared tier. This
+                // path runs only after a cache miss (hits returned
+                // above), so the key is known absent — offer every
+                // exact map, including fully-clean gated frames (that's
+                // how an evicted static stream re-instates itself).
+                // Inexact gated maps never enter the tier.
+                if let (Some(c), Some(k)) = (cache.as_deref(), key) {
+                    if !run.gated || gate_exact {
+                        let floor = s.pixels * FRONT_ESTIMATE_FLOOR_NS_PER_PIXEL;
+                        c.offer(
+                            k,
+                            Artifact::Suppressed(run.nm.clone()),
+                            run.wall_ns.max(last_full_front_ns).max(floor),
+                            CacheTier::Stream,
+                        );
+                    }
                 }
                 s.nm = Some(run.nm);
             }
@@ -340,6 +430,7 @@ pub fn run_stream(
         frames_emitted: 0,
         dropped: 0,
         degraded: 0,
+        cached: 0,
         late: 0,
         wall_ns,
         pixels: 0,
@@ -355,6 +446,8 @@ pub fn run_stream(
         drop_policy: opts.drop_policy.name().to_string(),
         stages: BTreeMap::new(),
         jitter: Default::default(),
+        // Placeholder; refreshed below once the pipeline has joined.
+        cache: ArtifactCache::disabled().snapshot(),
     };
     let mut jitter = LatencyStats::new();
     let mut last_emit: Option<u64> = None;
@@ -389,7 +482,11 @@ pub fn run_stream(
             }
             last_emit = Some(s.emit_ns);
         }
-        if s.degraded {
+        if s.cached {
+            // Served whole from the shared tier: no gate verdict, no
+            // front — its own bucket, like degraded frames.
+            report.cached += 1;
+        } else if s.degraded {
             report.degraded += 1;
         } else if !s.dropped {
             if s.gated {
@@ -406,11 +503,17 @@ pub fn run_stream(
             degraded: s.degraded,
             late: s.late,
             gated: s.gated,
+            cached: s.cached,
             tiles_clean: s.clean,
             tiles_dirty: s.dirty,
             edge_pixels: s.edge_pixels,
             edges: s.edges.take(),
         });
+    }
+    // Refresh the snapshot after the fold: the pipeline threads have
+    // joined, so the counters are final.
+    if let Some(c) = &opts.cache {
+        report.cache = c.snapshot();
     }
     report.jitter = jitter.summary();
     Ok(StreamOutcome { report, frames })
@@ -442,6 +545,15 @@ mod tests {
         assert_eq!(opts.frame_budget_ns, 2_500_000);
         assert_eq!(opts.drop_policy, DropPolicy::Degrade);
         assert!(!opts.keep_edges);
+        assert!(opts.cache.is_none(), "cache sharing is opt-in");
+        cfg.set("stream-cache", "true").unwrap();
+        let shared = StreamOptions::from_config(&cfg);
+        assert!(shared.cache.as_ref().is_some_and(|c| c.enabled()));
+        cfg.set("cache-mb", "0").unwrap();
+        assert!(
+            StreamOptions::from_config(&cfg).cache.is_none(),
+            "a zero budget disables sharing even with --stream-cache"
+        );
     }
 
     #[test]

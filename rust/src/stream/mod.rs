@@ -43,7 +43,7 @@
 //!   "source": "video:7 n=32 512x512",
 //!   "engine": "patterns", "workers": 4, "inflight": 4,
 //!   "frames": {"offered": 32, "emitted": 32, "dropped": 0,
-//!              "degraded": 0, "late": 0},
+//!              "degraded": 0, "cached": 0, "late": 0},
 //!   "wall_ns": 812345678, "fps": 39.4, "mpix_per_s": 10.3,
 //!   "edge_pixels": 104882,
 //!   "gate": {"mode": "0", "tiles_clean": 5890, "tiles_dirty": 2046,
@@ -55,7 +55,8 @@
 //!     "threshold":  {"wall_ns": 1, "cpu_ns": 1, "tasks": 256, "frames": 32},
 //!     "hysteresis": {"wall_ns": 1, "cpu_ns": 1, "tasks": 32, "frames": 32}
 //!   },
-//!   "jitter_ns": {"n": 31, "p50": 1, "p95": 1, "p99": 1, "max": 1, "mean": 1.0}
+//!   "jitter_ns": {"n": 31, "p50": 1, "p95": 1, "p99": 1, "max": 1, "mean": 1.0},
+//!   "cache": {"enabled": false, "...": "see the crate::service docs"}
 //! }
 //! ```
 //!
@@ -65,6 +66,23 @@
 //! misses). `stages` aggregates one entry per executed
 //! [`crate::canny::StageRecord`] span plus the synthesized `decode`
 //! span; `jitter_ns` summarizes inter-emission gaps.
+//!
+//! ## The shared artifact cache (`--stream-cache`)
+//!
+//! With `--stream-cache` (and `--cache-mb > 0`) the executor plugs into
+//! the process-wide [`crate::cache::ArtifactCache`]: before running the
+//! front it consults the tier under the frame's content-addressed key —
+//! a hit reuses the suppressed map whole (counted in `frames.cached`
+//! and the gate adopts it as its temporal baseline) — and every *exact*
+//! computed front is offered back (measured wall time as the admission
+//! policy's recompute estimate; gated maps under a nonzero threshold
+//! are never offered, since they may carry tolerated drift). Two
+//! streams playing the same content — or a stream and a serving run
+//! handed the same `Arc` via
+//! [`crate::service::ServeOptions::shared_cache`] — deduplicate their
+//! fronts. The report's `cache` section (schema in [`crate::service`])
+//! snapshots the tier; per-tier counters separate `stream` from `serve`
+//! traffic.
 //!
 //! ## Frame-trace JSON schema (`--source trace:frames.json`)
 //!

@@ -6,6 +6,7 @@
 
 use std::collections::BTreeMap;
 
+use crate::cache::CacheSnapshot;
 use crate::service::LatencySummary;
 use crate::util::json::Json;
 
@@ -96,10 +97,14 @@ pub struct StreamReport {
     pub workers: usize,
     pub inflight: usize,
     pub frames_offered: u64,
-    /// Frames that produced an edge map (includes degraded ones).
+    /// Frames that produced an edge map (includes degraded and cached
+    /// ones).
     pub frames_emitted: u64,
     pub dropped: u64,
     pub degraded: u64,
+    /// Frames whose suppressed map came whole from the shared artifact
+    /// cache (no gate, no front) — cross-stream dedup at work.
+    pub cached: u64,
     /// Frames past their deadline at front entry, whatever the policy.
     pub late: u64,
     pub wall_ns: u64,
@@ -116,6 +121,10 @@ pub struct StreamReport {
     pub stages: BTreeMap<String, StageAgg>,
     /// Inter-emission gap percentiles (the pacing smoothness measure).
     pub jitter: LatencySummary,
+    /// Snapshot of the shared artifact cache (`--stream-cache`); the
+    /// disabled all-zero snapshot when no cache is attached. Same
+    /// schema as the serve report's `cache` section.
+    pub cache: CacheSnapshot,
 }
 
 impl StreamReport {
@@ -151,6 +160,7 @@ impl StreamReport {
         f.insert("emitted".into(), num(self.frames_emitted));
         f.insert("dropped".into(), num(self.dropped));
         f.insert("degraded".into(), num(self.degraded));
+        f.insert("cached".into(), num(self.cached));
         f.insert("late".into(), num(self.late));
         m.insert("frames".into(), Json::Obj(f));
 
@@ -170,6 +180,7 @@ impl StreamReport {
             Json::Obj(self.stages.iter().map(|(k, v)| (k.clone(), v.to_json())).collect()),
         );
         m.insert("jitter_ns".into(), self.jitter.to_json());
+        m.insert("cache".into(), self.cache.to_json());
         Json::Obj(m)
     }
 
@@ -199,6 +210,7 @@ mod tests {
             frames_emitted: 2,
             dropped: 0,
             degraded: 0,
+            cached: 0,
             late: 0,
             wall_ns: 1_000_000_000,
             pixels: 2 * 64 * 48,
@@ -214,6 +226,7 @@ mod tests {
             drop_policy: "drop".into(),
             stages,
             jitter: LatencySummary::default(),
+            cache: crate::cache::ArtifactCache::disabled().snapshot(),
         }
     }
 
@@ -246,9 +259,12 @@ mod tests {
         let j = report().to_json();
         assert_eq!(j.get("engine").unwrap().as_str(), Some("patterns"));
         let frames = j.get("frames").unwrap();
-        for k in ["offered", "emitted", "dropped", "degraded", "late"] {
+        for k in ["offered", "emitted", "dropped", "degraded", "cached", "late"] {
             assert!(frames.get(k).is_some(), "frames.{k} missing");
         }
+        let cache = j.get("cache").unwrap();
+        assert_eq!(cache.get("enabled"), Some(&Json::Bool(false)));
+        assert!(cache.get("tiers").unwrap().get("stream").is_some());
         let gate = j.get("gate").unwrap();
         assert_eq!(gate.get("mode").unwrap().as_str(), Some("0"));
         assert!((gate.get("hit_rate").unwrap().as_f64().unwrap() - 0.875).abs() < 1e-12);

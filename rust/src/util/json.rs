@@ -100,8 +100,13 @@ impl Json {
                 if !n.is_finite() {
                     // JSON has no Inf/NaN; null is the conventional stand-in.
                     out.push_str("null");
-                } else if n.fract() == 0.0 && n.abs() < 9.007_199_254_740_992e15 {
-                    out.push_str(&format!("{}", *n as i64));
+                } else if n.fract() == 0.0 {
+                    // Full integral value, however large: u64-scale
+                    // byte counters must not saturate through an i64
+                    // cast or degrade to a rounded shortest-round-trip
+                    // decimal. `{:.0}` prints the exact integer this
+                    // f64 holds (every integral f64 is exact).
+                    out.push_str(&format!("{n:.0}"));
                 } else {
                     out.push_str(&format!("{n}"));
                 }
@@ -176,6 +181,17 @@ impl<'a> Parser<'a> {
         } else {
             self.err(&format!("expected `{}`", c as char))
         }
+    }
+
+    /// Parse 4 hex digits starting at byte `start` (a `\uXXXX` payload).
+    fn hex4(&self, start: usize) -> Result<u32> {
+        let end = start + 4;
+        if end > self.b.len() {
+            return Err(Error::Artifact("truncated \\u escape".into()));
+        }
+        let hex = std::str::from_utf8(&self.b[start..end])
+            .map_err(|_| Error::Artifact("bad \\u escape".into()))?;
+        u32::from_str_radix(hex, 16).map_err(|_| Error::Artifact("bad \\u escape".into()))
     }
 
     fn lit(&mut self, s: &str, v: Json) -> Result<Json> {
@@ -272,15 +288,29 @@ impl<'a> Parser<'a> {
                         Some(b'b') => s.push('\u{8}'),
                         Some(b'f') => s.push('\u{c}'),
                         Some(b'u') => {
-                            if self.i + 4 >= self.b.len() {
-                                return self.err("truncated \\u escape");
-                            }
-                            let hex = std::str::from_utf8(&self.b[self.i + 1..self.i + 5])
-                                .map_err(|_| Error::Artifact("bad \\u escape".into()))?;
-                            let cp = u32::from_str_radix(hex, 16)
-                                .map_err(|_| Error::Artifact("bad \\u escape".into()))?;
-                            s.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                            let hi = self.hex4(self.i + 1)?;
                             self.i += 4;
+                            let cp = if (0xD800..0xDC00).contains(&hi) {
+                                // A high surrogate: JSON encodes
+                                // non-BMP characters as a UTF-16 pair
+                                // of escapes — combine with the low
+                                // half when one follows, else fall
+                                // through to U+FFFD (lone surrogate).
+                                let lo_follows = self.b.get(self.i + 1) == Some(&b'\\')
+                                    && self.b.get(self.i + 2) == Some(&b'u');
+                                match lo_follows.then(|| self.hex4(self.i + 3)) {
+                                    Some(Ok(lo)) if (0xDC00..0xE000).contains(&lo) => {
+                                        // Past `\u` + the low half's 4
+                                        // hex digits.
+                                        self.i += 6;
+                                        0x1_0000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                                    }
+                                    _ => hi,
+                                }
+                            } else {
+                                hi
+                            };
+                            s.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
                         }
                         _ => return self.err("bad escape"),
                     }
@@ -346,6 +376,65 @@ mod tests {
     fn parses_escapes() {
         let j = Json::parse(r#""a\nb\t\"q\" A""#).unwrap();
         assert_eq!(j.as_str(), Some("a\nb\t\"q\" A"));
+    }
+
+    #[test]
+    fn surrogate_pairs_combine() {
+        // U+1F600 (😀) in JSON's UTF-16 escape form: a \ud83d\ude00
+        // pair must decode to one character, not two U+FFFD.
+        let j = Json::parse(r#""\ud83d\ude00""#).unwrap();
+        assert_eq!(j.as_str(), Some("😀"));
+        // Pairs embedded in surrounding text, twice over (U+1F4A9).
+        let j = Json::parse(r#""a\ud83d\ude00b\ud83d\udca9""#).unwrap();
+        assert_eq!(j.as_str(), Some("a😀b💩"));
+        // The combined character survives a dump/parse round trip.
+        assert_eq!(Json::parse(&j.dump()).unwrap(), j);
+        // Raw (non-escaped) UTF-8 still passes through untouched.
+        assert_eq!(Json::parse(r#""😀""#).unwrap().as_str(), Some("😀"));
+    }
+
+    #[test]
+    fn lone_surrogates_become_replacement_chars() {
+        // High half with nothing after it.
+        assert_eq!(Json::parse(r#""\ud83d""#).unwrap().as_str(), Some("\u{fffd}"));
+        // High half followed by a non-escape.
+        assert_eq!(Json::parse(r#""\ud83dxy""#).unwrap().as_str(), Some("\u{fffd}xy"));
+        // High half followed by a non-surrogate escape: both survive
+        // on their own terms.
+        assert_eq!(Json::parse(r#""\ud83dA""#).unwrap().as_str(), Some("\u{fffd}A"));
+        // Two high halves: neither combines.
+        assert_eq!(
+            Json::parse(r#""\ud83d\ud83d""#).unwrap().as_str(),
+            Some("\u{fffd}\u{fffd}")
+        );
+        // A lone low half.
+        assert_eq!(Json::parse(r#""\ude00""#).unwrap().as_str(), Some("\u{fffd}"));
+        // Truncated escapes still error.
+        assert!(Json::parse(r#""\ud83d\u00""#).is_err());
+        assert!(Json::parse(r#""\u12""#).is_err());
+    }
+
+    #[test]
+    fn dump_emits_full_u64_scale_integers() {
+        // 2^63 (as f64): above i64::MAX, so an `as i64` rendering would
+        // saturate to 2^63 - 1, and the pre-fix fallback printed the
+        // shortest-round-trip decimal (…776000) instead of the exact
+        // integral value. Byte counters live at this scale.
+        let big = 9_223_372_036_854_775_808.0f64;
+        let text = Json::Num(big).dump();
+        assert_eq!(text, "9223372036854775808");
+        assert_eq!(Json::parse(&text).unwrap(), Json::Num(big));
+        // 2^64 (u64::MAX rounds here as f64): full digits, round trip.
+        let two64 = 18_446_744_073_709_551_616.0f64;
+        assert_eq!(Json::Num(two64).dump(), "18446744073709551616");
+        assert_eq!(Json::parse(&Json::Num(two64).dump()).unwrap(), Json::Num(two64));
+        // Negative side too.
+        assert_eq!(Json::Num(-two64).dump(), "-18446744073709551616");
+        // Small integral values keep their classic rendering.
+        assert_eq!(Json::Num(4.0).dump(), "4");
+        assert_eq!(Json::Num(-12.0).dump(), "-12");
+        // Fractional values are untouched.
+        assert_eq!(Json::Num(2.5).dump(), "2.5");
     }
 
     #[test]

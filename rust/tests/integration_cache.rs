@@ -1,0 +1,297 @@
+//! Integration: the shared artifact-cache tier ([`canny_par::cache`])
+//! — bit-exactness of cache-served partial pipelines across engines,
+//! byte-budget eviction, deterministic virtual-time reports with the
+//! cache enabled, wall-clock multi-lane hammering, and cross-tier
+//! (stream → serve) deduplication.
+
+use std::sync::Arc;
+
+use canny_par::cache::{ArtifactCache, ArtifactKey, CacheConfig, CacheTier};
+use canny_par::canny::{Artifact, CannyParams, Engine, StageKind};
+use canny_par::config::RunConfig;
+use canny_par::coordinator::Detector;
+use canny_par::image::synth::{generate, Scene};
+use canny_par::service::{serve, ClockMode, Request, RequestKind, ServeOptions, Trace};
+use canny_par::stream::{run_stream, FrameSource, StreamOptions};
+
+fn exec_opts() -> ServeOptions {
+    let mut o = ServeOptions::from_config(&RunConfig::default());
+    o.execute = true;
+    o.lanes = 1;
+    o.max_batch = 1;
+    o.batch_window_ns = 0;
+    o.workers_per_lane = 1;
+    o
+}
+
+fn mk(id: u64, arrival_us: u64, scene: Scene, w: usize, h: usize, kind: RequestKind) -> Request {
+    Request { id, arrival_ns: arrival_us * 1_000, scene, width: w, height: h, kind }
+}
+
+/// Property: a re-threshold served from the shared cache is
+/// bit-identical to a fresh full detection at the same thresholds —
+/// for every engine, across scenes, shapes and threshold pairs — and
+/// every engine offers byte-identical artifacts (so any engine may
+/// consume any other engine's cache entries).
+#[test]
+fn cached_rethreshold_bit_identical_across_engines() {
+    let shapes = [(48usize, 32usize), (64, 64)];
+    let thresholds = [(0.02f32, 0.30f32), (0.05, 0.15), (0.10, 0.20)];
+    for seed in [1u64, 9, 21] {
+        for &(w, h) in &shapes {
+            let img = generate(Scene::Shapes { seed }, w, h);
+            let key = ArtifactKey::suppressed(&img);
+            let mut reference_nm: Option<Vec<f32>> = None;
+            for engine in [Engine::Serial, Engine::Patterns, Engine::TiledPatterns] {
+                let det =
+                    Detector::builder().engine(engine).workers(2).build().unwrap();
+                let cache = ArtifactCache::new(CacheConfig::default());
+                // Warm the tier the way a front-only request does.
+                let front = det.plan().stop_after(StageKind::Nms);
+                let mut out = det.run_plan(&front, Some(&img), det.params()).unwrap();
+                let nm = out.take_suppressed().unwrap();
+                // Engines must agree on the artifact bytes, or
+                // cross-engine sharing would be unsound.
+                match &reference_nm {
+                    Some(want) => assert_eq!(
+                        want.as_slice(),
+                        nm.data(),
+                        "{} front diverged for seed {seed} {w}x{h}",
+                        engine.name()
+                    ),
+                    None => reference_nm = Some(nm.data().to_vec()),
+                }
+                assert!(cache.offer(key, Artifact::Suppressed(nm), 1_000_000, CacheTier::Serve));
+                for &(lo, hi) in &thresholds {
+                    let got = match cache.get(&key, CacheTier::Serve) {
+                        Some(Artifact::Suppressed(nm)) => nm,
+                        other => panic!("expected a suppressed artifact, got {other:?}"),
+                    };
+                    let params = CannyParams { lo, hi, ..CannyParams::default() };
+                    let re = det.plan().from_suppressed(got);
+                    let out = det.run_plan(&re, None, &params).unwrap();
+                    let fresh = det.detect(&img, &params).unwrap();
+                    assert_eq!(
+                        out.edges().unwrap(),
+                        &fresh,
+                        "{} cache-served re-threshold diverged (seed {seed} {w}x{h} \
+                         lo={lo} hi={hi})",
+                        engine.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Acceptance: over-filling the budget keeps `bytes <= budget` via LRU
+/// eviction, end to end through a serve run.
+#[test]
+fn serve_overfill_enforces_byte_budget_with_evictions() {
+    let (w, h) = (64usize, 64);
+    let entry_bytes = (w * h * 4) as u64;
+    let mut o = exec_opts();
+    // Room for ~3 entries over one shard; 10 distinct scenes offered.
+    o.cache = CacheConfig {
+        budget_bytes: 3 * entry_bytes + entry_bytes / 2,
+        shards: 1,
+        admit_min_ns_per_byte: 0.0,
+    };
+    let trace = Trace {
+        requests: (0..10)
+            .map(|k| {
+                mk(k, k * 100, Scene::Shapes { seed: 100 + k }, w, h, RequestKind::FrontOnly)
+            })
+            .collect(),
+    };
+    let report = serve("overfill", &trace, &o).unwrap();
+    assert_eq!(report.completed, 10);
+    assert!(report.cache.enabled);
+    assert_eq!(report.cache.inserts(), 10, "every distinct front is offered");
+    assert!(
+        report.cache.bytes <= o.cache.budget_bytes,
+        "bytes {} over budget {}",
+        report.cache.bytes,
+        o.cache.budget_bytes
+    );
+    assert!(report.cache.evictions > 0, "over-filling must evict");
+    assert!(report.cache.entries <= 3);
+    assert!(report.cache.high_water_bytes <= o.cache.budget_bytes);
+}
+
+/// Acceptance: deterministic virtual-time serve reports stay
+/// byte-identical across runs with the cache enabled (mixed kinds, so
+/// the cache section carries non-trivial counts).
+#[test]
+fn virtual_replay_with_cache_is_byte_identical() {
+    let scene = Scene::Shapes { seed: 77 };
+    let trace = Trace {
+        requests: vec![
+            mk(0, 0, scene, 64, 64, RequestKind::FrontOnly),
+            mk(1, 150, scene, 64, 64, RequestKind::ReThreshold { lo: 0.04, hi: 0.2 }),
+            mk(2, 300, Scene::Checker { cell: 8 }, 64, 64, RequestKind::Full),
+            mk(3, 450, scene, 64, 64, RequestKind::ReThreshold { lo: 0.02, hi: 0.3 }),
+            mk(4, 600, Scene::Shapes { seed: 78 }, 48, 48, RequestKind::ReThreshold {
+                lo: 0.05,
+                hi: 0.15,
+            }),
+        ],
+    };
+    let mut o = exec_opts();
+    o.workers_per_lane = 2;
+    assert!(o.cache.enabled(), "default config must enable the tier");
+    let a = serve("det", &trace, &o).unwrap();
+    let b = serve("det", &trace, &o).unwrap();
+    assert_eq!(a.to_json_string(), b.to_json_string());
+    // The cache did real work in that replay: requests 1 and 3 hit the
+    // front request 0 offered; request 4 (new content) misses and
+    // fills.
+    assert_eq!(a.cache.hits(), 2);
+    assert_eq!(a.cache.misses(), 1);
+    assert_eq!(a.cache.hits() + a.cache.misses(), a.cache.lookups());
+}
+
+/// Satellite: wall-clock multi-lane hammer — many lanes sharing one
+/// tier under real contention must lose no updates (`hits + misses ==
+/// lookups`, inserts accounted) and must produce exactly the edge
+/// totals the deterministic virtual replay produces (a hit and a miss
+/// are bit-equivalent, so cache races can never change results).
+#[test]
+fn wall_multi_lane_hammer_keeps_stats_and_results_consistent() {
+    let scenes: Vec<Scene> = (0..4).map(|k| Scene::Shapes { seed: 50 + k }).collect();
+    let n = 80u64;
+    let trace = Trace {
+        requests: (0..n)
+            .map(|k| {
+                let scene = scenes[(k % 4) as usize];
+                let kind = if k % 5 == 0 {
+                    RequestKind::FrontOnly
+                } else {
+                    RequestKind::ReThreshold { lo: 0.03 + 0.01 * ((k % 3) as f32), hi: 0.3 }
+                };
+                // 20 µs gaps: lanes overlap heavily on the wall clock.
+                mk(k, k * 20, scene, 32, 32, kind)
+            })
+            .collect(),
+    };
+    let mut o = exec_opts();
+    o.lanes = 4;
+    o.queue_depth = 512; // deep enough that nothing is rejected
+    let virt = serve("virt", &trace, &o).unwrap();
+    let mut wo = o.clone();
+    wo.clock = ClockMode::Wall;
+    let wall = serve("wall", &trace, &wo).unwrap();
+
+    for r in [&virt, &wall] {
+        assert_eq!(r.offered, n);
+        assert_eq!(r.completed, n, "deep queue must admit everything");
+        let rethresholds = trace
+            .requests
+            .iter()
+            .filter(|q| matches!(q.kind, RequestKind::ReThreshold { .. }))
+            .count() as u64;
+        // Every re-threshold consults exactly once; hits + misses must
+        // account for every lookup even under cross-lane contention.
+        assert_eq!(r.cache.lookups(), rethresholds, "clock {}", r.clock);
+        assert_eq!(
+            r.cache.hits() + r.cache.misses(),
+            r.cache.lookups(),
+            "clock {}",
+            r.clock
+        );
+        assert!(r.cache.hits() > 0, "hot scenes must hit (clock {})", r.clock);
+        assert_eq!(r.cache.bytes, r.cache.entries * 32 * 32 * 4);
+    }
+    // No lost updates: cache races may change who fills an entry but
+    // never the bytes served, so edge totals agree across clocks.
+    assert!(virt.edge_pixels > 0);
+    assert_eq!(virt.edge_pixels, wall.edge_pixels);
+}
+
+/// Cross-tier dedup: a stream offers its frame fronts into a shared
+/// tier; a serve run handed the same `Arc` re-thresholds the same
+/// content and hits artifacts it never computed — and a second stream
+/// over the same content is served whole from the cache, bit-identical.
+#[test]
+fn stream_offers_serve_and_streams_consume() {
+    let (seed, frames, w, h) = (9u64, 5usize, 64usize, 48);
+    let cache = Arc::new(ArtifactCache::new(CacheConfig::default()));
+    let det = Detector::builder().workers(2).build().unwrap();
+    let src = FrameSource::synthetic(seed, frames, w, h);
+
+    let mut sopts = StreamOptions { cache: Some(Arc::clone(&cache)), ..Default::default() };
+    sopts.keep_edges = true;
+    let first = run_stream("warm", &src, &det, &sopts).unwrap();
+    assert_eq!(first.report.frames_emitted, frames as u64);
+    assert_eq!(first.report.cached, 0, "a cold tier serves nothing");
+    let after_warm = cache.snapshot();
+    assert!(after_warm.inserts() >= 1, "moving frames must be offered");
+    assert_eq!(
+        after_warm.tiers.iter().find(|(n, _)| *n == "stream").unwrap().1.inserts,
+        after_warm.inserts(),
+        "all inserts came from the stream tier"
+    );
+
+    // A serving run on the same content hits fronts the stream built.
+    let trace = Trace {
+        requests: (0..3)
+            .map(|k| {
+                mk(
+                    k,
+                    k * 100,
+                    Scene::Video { seed, frame: k as usize },
+                    w,
+                    h,
+                    RequestKind::ReThreshold { lo: 0.05, hi: 0.15 },
+                )
+            })
+            .collect(),
+    };
+    let mut o = exec_opts();
+    o.shared_cache = Some(Arc::clone(&cache));
+    let report = serve("consume", &trace, &o).unwrap();
+    assert_eq!(report.completed, 3);
+    let serve_tier = report.cache.tiers.iter().find(|(n, _)| *n == "serve").unwrap().1;
+    assert_eq!(serve_tier.hits, 3, "serve hit stream-built artifacts: {:?}", report.cache);
+    assert_eq!(serve_tier.misses, 0);
+    // The front never ran inside the serve run.
+    assert_eq!(report.stage_runs.get("gaussian"), None, "stages: {:?}", report.stage_runs);
+    assert_eq!(report.stage_runs.get("front"), None);
+    assert_eq!(report.stage_runs.get("threshold"), Some(&3));
+
+    // A second identical stream is served whole from the cache,
+    // bit-identically.
+    let second = run_stream("replay", &src, &det, &sopts).unwrap();
+    assert_eq!(second.report.cached, frames as u64, "every frame deduped");
+    assert_eq!(second.report.gate.frames_gated + second.report.gate.frames_full, 0);
+    for (a, b) in first.frames.iter().zip(&second.frames) {
+        assert!(b.cached);
+        assert_eq!(a.edge_pixels, b.edge_pixels);
+        assert_eq!(a.edges, b.edges, "frame {} diverged through the cache", a.index);
+    }
+}
+
+/// The stream tier never offers inexact (nonzero-threshold gated)
+/// maps: a lossy stream cannot poison exact consumers.
+#[test]
+fn lossy_gate_does_not_poison_the_shared_tier() {
+    let cache = Arc::new(ArtifactCache::new(CacheConfig::default()));
+    let det = Detector::builder().workers(1).build().unwrap();
+    // Moving video under a generous threshold: frame 0 is ungated
+    // (exact, offered); later frames are gated and — with drift
+    // tolerated — potentially inexact, so they must never be offered
+    // even when tiles recompute.
+    let src = FrameSource::synthetic(3, 4, 48, 48);
+    let opts = StreamOptions {
+        cache: Some(Arc::clone(&cache)),
+        delta: canny_par::stream::DeltaMode::Gate(0.5),
+        ..Default::default()
+    };
+    let out = run_stream("lossy", &src, &det, &opts).unwrap();
+    assert_eq!(out.report.frames_emitted, 4);
+    let snap = cache.snapshot();
+    // Frame 0 (ungated full front) is exact and offered; the gated
+    // frames (cache misses — the content moves) must not be.
+    assert!(out.report.gate.frames_gated > 0, "{:?}", out.report.gate);
+    assert_eq!(snap.inserts(), 1, "{snap:?}");
+}

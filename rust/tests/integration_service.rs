@@ -5,6 +5,7 @@
 
 use std::sync::atomic::{AtomicBool, Ordering};
 
+use canny_par::cache::CacheConfig;
 use canny_par::canny::CannyParams;
 use canny_par::config::RunConfig;
 use canny_par::coordinator::Detector;
@@ -193,7 +194,7 @@ fn wall_clock_report_keeps_the_virtual_schema() {
     assert_eq!(vj.get("clock").unwrap().as_str(), Some("virtual"));
     let keys = |j: &Json| j.as_obj().unwrap().keys().cloned().collect::<Vec<_>>();
     assert_eq!(keys(&wj), keys(&vj));
-    for section in ["queue", "batch", "slo", "latency_ns", "calibration"] {
+    for section in ["queue", "batch", "slo", "latency_ns", "calibration", "cache"] {
         assert_eq!(
             keys(wj.get(section).unwrap()),
             keys(vj.get(section).unwrap()),
@@ -279,9 +280,15 @@ fn rethreshold_hits_the_cache_and_matches_full_detection() {
     assert_eq!(report.completed, 3);
     assert_eq!(report.kinds.get("front-only"), Some(&1));
     assert_eq!(report.kinds.get("re-threshold"), Some(&2));
-    // Both re-thresholds hit the map the front-only request cached.
-    assert_eq!(report.cache_hits, 2, "stages: {:?}", report.stage_runs);
-    assert_eq!(report.cache_misses, 0);
+    // Both re-thresholds hit the map the front-only request offered
+    // into the shared artifact tier (the report's `cache` section).
+    assert!(report.cache.enabled);
+    assert_eq!(report.cache.hits(), 2, "stages: {:?}", report.stage_runs);
+    assert_eq!(report.cache.misses(), 0);
+    assert_eq!(report.cache.inserts(), 1, "one front-only warm-up");
+    let serve_tier = report.cache.tiers.iter().find(|(n, _)| *n == "serve").unwrap().1;
+    assert_eq!(serve_tier.hits, 2, "hits are attributed to the serve tier");
+    assert_eq!(report.cache.hits() + report.cache.misses(), report.cache.lookups());
     // The front ran exactly once (the warmer); re-thresholds ran only
     // threshold + hysteresis. Lane engines are planner-chosen, so the
     // front shows up as per-stage spans (patterns) or one fused span
@@ -330,10 +337,13 @@ fn rethreshold_with_cache_disabled_recomputes_the_front() {
     o.max_batch = 1;
     o.batch_window_ns = 0;
     o.workers_per_lane = 1;
-    o.rethreshold_cache = 0; // disabled: every re-threshold misses
+    o.cache = CacheConfig::disabled(); // --cache-mb 0: recompute every time
     let report = serve("nocache", &trace, &o).unwrap();
-    assert_eq!(report.cache_hits, 0);
-    assert_eq!(report.cache_misses, 2);
+    assert!(!report.cache.enabled);
+    // A disabled tier is never consulted: no lookups, no hits — and
+    // the front really ran twice.
+    assert_eq!(report.cache.lookups(), 0);
+    assert_eq!(report.cache.inserts(), 0);
     let front_runs = report.stage_runs.get("gaussian").copied().unwrap_or(0)
         + report.stage_runs.get("front").copied().unwrap_or(0);
     assert_eq!(front_runs, 2, "stages: {:?}", report.stage_runs);

@@ -163,14 +163,16 @@ fn report_schema_matches_documentation() {
         for key in
             ["label", "source", "engine", "workers", "inflight", "wall_ns", "fps",
              "mpix_per_s", "edge_pixels", "frames", "gate", "budget", "stages",
-             "jitter_ns"]
+             "jitter_ns", "cache"]
         {
             assert!(j.get(key).is_some(), "missing `{key}` ({delta:?})");
         }
         let frames = j.get("frames").unwrap();
-        for key in ["offered", "emitted", "dropped", "degraded", "late"] {
+        for key in ["offered", "emitted", "dropped", "degraded", "cached", "late"] {
             assert!(frames.get(key).is_some(), "missing frames.{key}");
         }
+        // No cache attached: the section is the disabled snapshot.
+        assert_eq!(j.get("cache").unwrap().get("enabled"), Some(&Json::Bool(false)));
         assert_eq!(frames.get("offered").unwrap().as_usize(), Some(3));
         assert_eq!(frames.get("emitted").unwrap().as_usize(), Some(3));
         let gate = j.get("gate").unwrap();
