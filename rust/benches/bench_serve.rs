@@ -1,0 +1,75 @@
+//! Serving-tier throughput bench: a wall-clock `serve` run with real
+//! detection, reported as Mpix/s and latency percentiles — and written
+//! to `BENCH_serve.json` so CI can archive the numbers as a non-gating
+//! artifact (regressions show up in the artifact history, not as a red
+//! build on a noisy shared runner).
+//!
+//! Run: `cargo bench --bench bench_serve`
+//! Output: `BENCH_serve.json` (override with `BENCH_SERVE_JSON=path`).
+
+use std::collections::BTreeMap;
+
+use canny_par::bench::Table;
+use canny_par::config::RunConfig;
+use canny_par::service::{serve, ClockMode, ServeOptions, Trace};
+use canny_par::util::json::Json;
+use canny_par::util::timer::human_ns;
+
+fn main() {
+    let (w, h) = (256usize, 256);
+    let n = 48usize;
+    let mut opts = ServeOptions::from_config(&RunConfig::default());
+    opts.clock = ClockMode::Wall;
+    opts.execute = true;
+    opts.lanes = 2;
+    opts.workers_per_lane = 2;
+    opts.max_batch = 4;
+    opts.batch_window_ns = 200_000;
+
+    // 2 kHz arrivals: fast enough to keep both lanes busy, slow enough
+    // that the queue never overflows on a laptop-class host.
+    let mut trace = Trace::synthetic(n, 7, 2_000.0);
+    for r in &mut trace.requests {
+        r.width = w;
+        r.height = h;
+    }
+
+    let report = serve("bench_serve", &trace, &opts).expect("serve run");
+    let wall_s = report.makespan_ns as f64 / 1e9;
+    let mpix = (report.completed as usize * w * h) as f64 / 1e6;
+    let mpix_per_s = if wall_s > 0.0 { mpix / wall_s } else { 0.0 };
+
+    let mut t = Table::new(&["requests", "completed", "makespan", "Mpix/s", "p50", "p99"]);
+    t.row(&[
+        n.to_string(),
+        report.completed.to_string(),
+        human_ns(report.makespan_ns),
+        format!("{mpix_per_s:.2}"),
+        human_ns(report.latency.p50_ns),
+        human_ns(report.latency.p99_ns),
+    ]);
+    println!("serve tier, wall clock, {} lanes x {} workers:", opts.lanes, opts.workers_per_lane);
+    t.print();
+
+    // The machine-readable artifact CI uploads.
+    let mut m = BTreeMap::new();
+    let num = Json::Num;
+    m.insert("bench".into(), Json::Str("serve".into()));
+    m.insert("clock".into(), Json::Str("wall".into()));
+    m.insert("lanes".into(), num(opts.lanes as f64));
+    m.insert("workers_per_lane".into(), num(opts.workers_per_lane as f64));
+    m.insert("width".into(), num(w as f64));
+    m.insert("height".into(), num(h as f64));
+    m.insert("requests".into(), num(n as f64));
+    m.insert("completed".into(), num(report.completed as f64));
+    m.insert("rejected".into(), num(report.rejected() as f64));
+    m.insert("makespan_ns".into(), num(report.makespan_ns as f64));
+    m.insert("mpix_per_s".into(), num(mpix_per_s));
+    m.insert("p50_ns".into(), num(report.latency.p50_ns as f64));
+    m.insert("p95_ns".into(), num(report.latency.p95_ns as f64));
+    m.insert("p99_ns".into(), num(report.latency.p99_ns as f64));
+    m.insert("edge_pixels".into(), num(report.edge_pixels as f64));
+    let path = std::env::var("BENCH_SERVE_JSON").unwrap_or_else(|_| "BENCH_serve.json".into());
+    std::fs::write(&path, Json::Obj(m).dump() + "\n").expect("write bench artifact");
+    println!("wrote {path}");
+}

@@ -102,10 +102,21 @@ pub struct TierSnapshot {
 }
 
 impl TierSnapshot {
+    /// Fraction of this tier's lookups served from the cache (0 when
+    /// the tier never looked anything up) — the per-tier effectiveness
+    /// number ops dashboards plot from the telemetry stream.
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups == 0 {
+            return 0.0;
+        }
+        self.hits as f64 / self.lookups as f64
+    }
+
     fn to_json(self) -> Json {
         let mut m = BTreeMap::new();
         m.insert("lookups".into(), Json::Num(self.lookups as f64));
         m.insert("hits".into(), Json::Num(self.hits as f64));
+        m.insert("hit_rate".into(), Json::Num(self.hit_rate()));
         m.insert("misses".into(), Json::Num(self.misses as f64));
         m.insert("inserts".into(), Json::Num(self.inserts as f64));
         m.insert("admission_rejects".into(), Json::Num(self.admission_rejects as f64));
@@ -240,12 +251,21 @@ mod tests {
         };
         assert_eq!(snap.lookups(), 5);
         assert_eq!(snap.hits() + snap.misses(), snap.lookups());
+        assert!((snap.tiers[0].1.hit_rate() - 0.6).abs() < 1e-12);
+        assert_eq!(TierSnapshot::default().hit_rate(), 0.0);
         let j = snap.to_json();
         assert_eq!(j.get("enabled"), Some(&Json::Bool(true)));
         assert_eq!(j.get("hits").unwrap().as_usize(), Some(3));
         assert_eq!(
             j.get("tiers").unwrap().get("serve").unwrap().get("lookups").unwrap().as_usize(),
             Some(5)
+        );
+        assert!(
+            (j.get("tiers").unwrap().get("serve").unwrap().get("hit_rate").unwrap().as_f64()
+                .unwrap()
+                - 0.6)
+                .abs()
+                < 1e-12
         );
         assert!(j.get("tiers").unwrap().get("stream").is_some());
         // Round-trips through the parser (report embedding).

@@ -7,7 +7,9 @@ use std::path::Path;
 
 use crate::canny::{CannyParams, Engine};
 use crate::error::{Error, Result};
+use crate::obs::OverloadPolicy;
 use crate::service::clock::ClockMode;
+use crate::service::slo::DEFAULT_SLO_WINDOW;
 use crate::stream::{DeltaMode, DropPolicy};
 
 /// Fully-resolved run configuration for the `cannyd` launcher and the
@@ -79,6 +81,17 @@ pub struct RunConfig {
     /// Stream tier: what to do with frames past their deadline —
     /// `drop`, `degrade`, or `none`.
     pub drop_policy: DropPolicy,
+    /// Ops plane: telemetry JSONL sink path ("" disables the snapshot
+    /// stream; the final report's ops sections are always present).
+    pub telemetry_log: String,
+    /// Ops plane: snapshot tick interval, milliseconds (in the active
+    /// clock — modeled time under `clock = virtual`).
+    pub telemetry_interval_ms: f64,
+    /// Ops plane: what to do with serve arrivals while the rolling SLO
+    /// is missed — `none`, `reject-new`, or `degrade-to-front-only`.
+    pub overload_policy: OverloadPolicy,
+    /// Ops plane: rolling SLO window capacity, in completions.
+    pub slo_window: usize,
 }
 
 impl Default for RunConfig {
@@ -109,6 +122,10 @@ impl Default for RunConfig {
             delta_gate: DeltaMode::default(),
             frame_budget_ms: 0.0,
             drop_policy: DropPolicy::Drop,
+            telemetry_log: String::new(),
+            telemetry_interval_ms: 100.0,
+            overload_policy: OverloadPolicy::None,
+            slo_window: DEFAULT_SLO_WINDOW,
         }
     }
 }
@@ -185,6 +202,16 @@ impl RunConfig {
             "drop-policy" | "drop_policy" => {
                 self.drop_policy = DropPolicy::parse(value).ok_or_else(|| bad("drop-policy"))?
             }
+            "telemetry-log" | "telemetry_log" => self.telemetry_log = value.to_string(),
+            "telemetry-interval-ms" | "telemetry_interval_ms" => {
+                self.telemetry_interval_ms = value.parse().map_err(|_| bad("f64"))?
+            }
+            "overload-policy" | "overload_policy" => {
+                self.overload_policy = OverloadPolicy::parse(value)?
+            }
+            "slo-window" | "slo_window" => {
+                self.slo_window = value.parse().map_err(|_| bad("usize"))?
+            }
             _ => return Err(Error::Config(format!("unknown config key `{key}`"))),
         }
         Ok(())
@@ -242,6 +269,14 @@ impl RunConfig {
         "frame_budget_ms",
         "drop-policy",
         "drop_policy",
+        "telemetry-log",
+        "telemetry_log",
+        "telemetry-interval-ms",
+        "telemetry_interval_ms",
+        "overload-policy",
+        "overload_policy",
+        "slo-window",
+        "slo_window",
     ];
 
     /// Is `key` a config key `set` would accept?
@@ -335,6 +370,12 @@ impl RunConfig {
         if !(self.frame_budget_ms.is_finite() && self.frame_budget_ms >= 0.0) {
             return Err(Error::Config("frame-budget-ms must be >= 0".into()));
         }
+        if !(self.telemetry_interval_ms.is_finite() && self.telemetry_interval_ms > 0.0) {
+            return Err(Error::Config("telemetry-interval-ms must be > 0".into()));
+        }
+        if self.slo_window == 0 {
+            return Err(Error::Config("slo-window must be >= 1".into()));
+        }
         Ok(())
     }
 
@@ -372,6 +413,10 @@ impl RunConfig {
         m.insert("delta-gate".into(), self.delta_gate.name());
         m.insert("frame-budget-ms".into(), self.frame_budget_ms.to_string());
         m.insert("drop-policy".into(), self.drop_policy.name().to_string());
+        m.insert("telemetry-log".into(), self.telemetry_log.clone());
+        m.insert("telemetry-interval-ms".into(), self.telemetry_interval_ms.to_string());
+        m.insert("overload-policy".into(), self.overload_policy.name().to_string());
+        m.insert("slo-window".into(), self.slo_window.to_string());
         m
     }
 }
@@ -568,6 +613,34 @@ mod tests {
     }
 
     #[test]
+    fn ops_plane_keys_set_and_validate() {
+        let mut c = RunConfig::default();
+        assert!(c.telemetry_log.is_empty(), "telemetry stream is opt-in");
+        assert!((c.telemetry_interval_ms - 100.0).abs() < 1e-9);
+        assert_eq!(c.overload_policy, OverloadPolicy::None);
+        assert_eq!(c.slo_window, DEFAULT_SLO_WINDOW);
+        c.set("telemetry-log", "/tmp/t.jsonl").unwrap();
+        c.set("telemetry-interval-ms", "2.5").unwrap();
+        c.set("overload-policy", "degrade-to-front-only").unwrap();
+        c.set("slo_window", "16").unwrap();
+        assert_eq!(c.telemetry_log, "/tmp/t.jsonl");
+        assert!((c.telemetry_interval_ms - 2.5).abs() < 1e-12);
+        assert_eq!(c.overload_policy, OverloadPolicy::DegradeFront);
+        assert_eq!(c.slo_window, 16);
+        c.validate().unwrap();
+        assert!(c.set("overload-policy", "panic").is_err());
+        c.set("telemetry-interval-ms", "0").unwrap();
+        assert!(c.validate().is_err());
+        c.set("telemetry-interval-ms", "100").unwrap();
+        c.set("slo-window", "0").unwrap();
+        assert!(c.validate().is_err());
+        let m = RunConfig::default().to_map();
+        assert_eq!(m.get("overload-policy").map(String::as_str), Some("none"));
+        assert_eq!(m.get("slo-window").map(String::as_str), Some("64"));
+        assert_eq!(m.get("telemetry-interval-ms").map(String::as_str), Some("100"));
+    }
+
+    #[test]
     fn every_known_key_is_settable() {
         for &key in RunConfig::KEYS {
             let mut c = RunConfig::default();
@@ -580,6 +653,8 @@ mod tests {
                 "clock" => "wall",
                 "delta-gate" | "delta_gate" => "0.05",
                 "drop-policy" | "drop_policy" => "degrade",
+                "telemetry-log" | "telemetry_log" => "/tmp/telemetry.jsonl",
+                "overload-policy" | "overload_policy" => "reject-new",
                 _ => "4", // parses as usize / u64 / f32 / f64 alike
             };
             c.set(key, sample).unwrap_or_else(|e| panic!("KEYS lists `{key}` but set failed: {e}"));

@@ -35,6 +35,16 @@
 //!   request, a decoded frame) serves re-thresholds and duplicate
 //!   frames everywhere, bit-exactly (`--cache-mb`, `--cache-shards`,
 //!   `--cache-admit-ns-per-byte`, `--stream-cache`).
+//! * **L3 ops plane** ([`obs`]) — live telemetry for both tiers: a
+//!   process-wide registry of atomic counters/gauges/histograms, a
+//!   snapshot engine emitting periodic machine-readable JSONL
+//!   (`--telemetry-log file.jsonl --telemetry-interval-ms N`;
+//!   byte-identical across deterministic virtual replays), rolling SLO
+//!   windows with a met/missed/no-data transition timeline
+//!   (`--slo-window`), per-lane `healthy | degraded | stalled` health
+//!   states, and explicit overload policies that shed or degrade new
+//!   arrivals while the rolling SLO is missed (`--overload-policy
+//!   none | reject-new | degrade-to-front-only`).
 //! * **L2/L1 (python/, build-time only)** — the Canny front-end
 //!   (Gaussian → Sobel → NMS → double threshold) as JAX + Pallas
 //!   kernels, AOT-lowered to HLO text consumed by [`runtime`] through
@@ -120,15 +130,25 @@
 //! ```
 //!
 //! Serving a request stream (the CLI equivalent is
-//! `cannyd serve --synthetic 200 --lanes 2`):
+//! `cannyd serve --synthetic 200 --lanes 2`), with the ops plane
+//! writing a live telemetry stream and shedding under a missed SLO
+//! (`cannyd serve --synthetic 200 --telemetry-log t.jsonl
+//! --telemetry-interval-ms 5 --overload-policy reject-new`):
 //!
 //! ```no_run
 //! use canny_par::config::RunConfig;
 //! use canny_par::service::{serve, ServeOptions, Trace};
 //!
-//! let cfg = RunConfig::default();
+//! let mut cfg = RunConfig::default();
+//! cfg.set("telemetry-log", "/tmp/telemetry.jsonl").unwrap();
+//! cfg.set("telemetry-interval-ms", "5").unwrap();
+//! cfg.set("overload-policy", "reject-new").unwrap();
 //! let trace = Trace::synthetic(200, cfg.seed, cfg.arrival_rate_hz);
 //! let report = serve("quickstart", &trace, &ServeOptions::from_config(&cfg)).unwrap();
+//! // The report's `overload` and `slo.window` sections carry the shed
+//! // totals and the rolling-window status timeline; the JSONL file
+//! // holds one snapshot per tick (byte-identical across virtual
+//! // replays of the same trace).
 //! println!("{}", report.to_json_string());
 //! ```
 //!
@@ -165,6 +185,7 @@ pub mod coordinator;
 pub mod error;
 pub mod image;
 pub mod metrics;
+pub mod obs;
 pub mod patterns;
 pub mod profiler;
 pub mod runtime;

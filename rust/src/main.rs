@@ -5,10 +5,14 @@
 //!   gen        --scene shapes:7 --size 512x512 --output img.pgm
 //!   batch      --count 16 --size 512x512 [--scene …]   (farm throughput)
 //!   serve      --synthetic 200 | --requests trace.json   (serving tier;
-//!              --clock virtual|wall, --calibration file.json|probe)
+//!              --clock virtual|wall, --calibration file.json|probe,
+//!              --overload-policy none|reject-new|degrade-to-front-only)
 //!   stream     --synthetic-frames 32 | --source dir:frames/   (frame-stream
 //!              tier; --inflight, --delta-gate, --frame-budget-ms,
 //!              --drop-policy)
+//!
+//! Both tiers take `--telemetry-log file.jsonl --telemetry-interval-ms N
+//! --slo-window N` (the ops plane; see the `obs` module docs).
 //!   calibrate  [--output calib.json]   (probe the service-cost model)
 //!   profile    [--sim-cpus 4|8] [--engine serial|patterns]   (figures)
 //!   info       (topology, artifacts, resolved config)
@@ -216,6 +220,15 @@ Stream flags: --inflight N (bounded in-flight window)
   --frame-budget-ms F (real-time deadline per frame, 0 = offline)
   --drop-policy drop|degrade|none (late-frame handling under a budget)
   --stream-cache (consult/offer frames in the shared artifact tier)
+Ops-plane flags (serve + stream):
+  --telemetry-log FILE.jsonl (periodic snapshot stream; schema in the
+    obs module docs; byte-identical across virtual serve replays)
+  --telemetry-interval-ms F (snapshot period; default 100)
+  --slo-window N (rolling SLO window over the last N completions;
+    default 64; drives health states and overload decisions)
+  --overload-policy none|reject-new|degrade-to-front-only (what happens
+    to new serve arrivals while the rolling SLO is missed; default none
+    = observe only)
 
 Unknown flags and subcommands are errors, not ignored.
 ";

@@ -1,0 +1,150 @@
+//! The fault manager: explicit overload policies for the serving tier,
+//! generalizing the stream tier's deadline `--drop-policy` to
+//! SLO-driven admission control. When the rolling SLO window
+//! ([`crate::service::slo::SloWindow`]) reports `missed`, every new
+//! arrival passes through [`FaultManager::decide`] and is admitted,
+//! rejected, or degraded per the configured [`OverloadPolicy`] — and
+//! every shed decision is counted in the telemetry registry
+//! ([`crate::obs::registry::Telemetry`]) so it is visible both live
+//! (JSONL ticks) and in the final report.
+
+use crate::error::{Error, Result};
+
+/// What to do with new arrivals while the rolling SLO is missed.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum OverloadPolicy {
+    /// Never shed: admit everything, let the queue's own backpressure
+    /// (and the report's `missed` status) tell the story. This is the
+    /// default, and it leaves a run byte-identical to one built before
+    /// the ops plane existed.
+    #[default]
+    None,
+    /// Reject new arrivals outright (counted as `rejected_shed` —
+    /// conservation still holds: offered = completed + rejected).
+    RejectNew,
+    /// Rewrite `full` arrivals to `front-only` — the client gets the
+    /// Gaussian→Sobel→NMS front (which also warms the shared artifact
+    /// cache) at a fraction of the cost; partial-pipeline kinds pass
+    /// through untouched, they are already cheap.
+    DegradeFront,
+}
+
+impl OverloadPolicy {
+    /// Config/report string.
+    pub fn name(&self) -> &'static str {
+        match self {
+            OverloadPolicy::None => "none",
+            OverloadPolicy::RejectNew => "reject-new",
+            OverloadPolicy::DegradeFront => "degrade-to-front-only",
+        }
+    }
+
+    /// Parse a `--overload-policy` value.
+    pub fn parse(s: &str) -> Result<OverloadPolicy> {
+        match s {
+            "none" => Ok(OverloadPolicy::None),
+            "reject-new" | "reject_new" | "reject" => Ok(OverloadPolicy::RejectNew),
+            "degrade-to-front-only" | "degrade_to_front_only" | "degrade-front" | "degrade" => {
+                Ok(OverloadPolicy::DegradeFront)
+            }
+            other => Err(Error::Config(format!(
+                "unknown overload policy `{other}` (none | reject-new | degrade-to-front-only)"
+            ))),
+        }
+    }
+}
+
+/// The verdict for one arrival.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedDecision {
+    /// Let it through unchanged.
+    Admit,
+    /// Turn it away before the queue.
+    Reject,
+    /// Admit, but rewritten to the front-only pipeline.
+    Degrade,
+}
+
+/// Per-run policy engine. Stateless beyond its policy: the state it
+/// reacts to is the rolling SLO status the caller reads from its
+/// window, so virtual replays make identical decisions at identical
+/// modeled times.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultManager {
+    policy: OverloadPolicy,
+}
+
+impl FaultManager {
+    pub fn new(policy: OverloadPolicy) -> FaultManager {
+        FaultManager { policy }
+    }
+
+    pub fn policy(&self) -> OverloadPolicy {
+        self.policy
+    }
+
+    /// Can this manager ever shed? (Drives the `degraded` health state:
+    /// a missed SLO under `none` is reported, not acted on.)
+    pub fn active(&self) -> bool {
+        self.policy != OverloadPolicy::None
+    }
+
+    /// Decide one arrival's fate. `slo_missed` is the rolling window's
+    /// current status; `degradable` says whether the request kind has a
+    /// cheaper form to fall back to (`full` does, partial pipelines do
+    /// not).
+    pub fn decide(&self, slo_missed: bool, degradable: bool) -> ShedDecision {
+        if !slo_missed {
+            return ShedDecision::Admit;
+        }
+        match self.policy {
+            OverloadPolicy::None => ShedDecision::Admit,
+            OverloadPolicy::RejectNew => ShedDecision::Reject,
+            OverloadPolicy::DegradeFront => {
+                if degradable {
+                    ShedDecision::Degrade
+                } else {
+                    ShedDecision::Admit
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_name_roundtrip() {
+        for p in [OverloadPolicy::None, OverloadPolicy::RejectNew, OverloadPolicy::DegradeFront] {
+            assert_eq!(OverloadPolicy::parse(p.name()).unwrap(), p);
+        }
+        assert_eq!(OverloadPolicy::parse("reject_new").unwrap(), OverloadPolicy::RejectNew);
+        assert_eq!(OverloadPolicy::parse("degrade").unwrap(), OverloadPolicy::DegradeFront);
+        assert!(OverloadPolicy::parse("shrug").is_err());
+        assert_eq!(OverloadPolicy::default(), OverloadPolicy::None);
+    }
+
+    #[test]
+    fn decisions_follow_policy() {
+        use ShedDecision::*;
+        let none = FaultManager::new(OverloadPolicy::None);
+        let reject = FaultManager::new(OverloadPolicy::RejectNew);
+        let degrade = FaultManager::new(OverloadPolicy::DegradeFront);
+        // SLO met: everyone admits.
+        for m in [none, reject, degrade] {
+            assert_eq!(m.decide(false, true), Admit);
+            assert_eq!(m.decide(false, false), Admit);
+        }
+        // SLO missed.
+        assert_eq!(none.decide(true, true), Admit);
+        assert!(!none.active());
+        assert_eq!(reject.decide(true, true), Reject);
+        assert_eq!(reject.decide(true, false), Reject);
+        assert!(reject.active());
+        assert_eq!(degrade.decide(true, true), Degrade);
+        // Nothing cheaper to fall back to: pass through.
+        assert_eq!(degrade.decide(true, false), Admit);
+    }
+}

@@ -1,0 +1,107 @@
+//! Liveness and health derivation: each lane (and the tier as a whole)
+//! is classified `healthy | degraded | stalled` from the heartbeat
+//! gauges the workers publish ([`crate::obs::registry::LaneTelemetry`])
+//! — the live equivalent of eyeballing a profiler timeline for a stuck
+//! worker.
+
+/// How long a lane may hold in-flight work without a heartbeat
+/// (dispatch or completion) before it is reported stalled. Compared in
+/// the driver's own clock domain — modeled nanoseconds under the
+/// virtual clock, monotonic nanoseconds under wall — so the derivation
+/// stays deterministic in replays.
+pub const DEFAULT_STALL_AFTER_NS: u64 = 1_000_000_000;
+
+/// A lane's (or the tier's) operational state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Health {
+    /// Alive and serving at full fidelity.
+    Healthy,
+    /// Alive, but the overload policy is actively shedding or degrading
+    /// work (the tier's rolling SLO is missed).
+    Degraded,
+    /// Holding in-flight work with no heartbeat for longer than the
+    /// stall threshold.
+    Stalled,
+}
+
+impl Health {
+    /// Snapshot/report string.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Health::Healthy => "healthy",
+            Health::Degraded => "degraded",
+            Health::Stalled => "stalled",
+        }
+    }
+
+    /// Classify one lane. `shedding` is the tier-wide overload signal
+    /// (rolling SLO missed under an active policy): a silent-but-busy
+    /// lane is stalled regardless, an idle lane is never stalled (no
+    /// work, no heartbeat expected).
+    pub fn derive(
+        now_ns: u64,
+        heartbeat_ns: u64,
+        inflight: u64,
+        stall_after_ns: u64,
+        shedding: bool,
+    ) -> Health {
+        if inflight > 0 && now_ns.saturating_sub(heartbeat_ns) > stall_after_ns {
+            Health::Stalled
+        } else if shedding {
+            Health::Degraded
+        } else {
+            Health::Healthy
+        }
+    }
+
+    /// The tier is as bad as its worst lane.
+    pub fn worst(states: impl IntoIterator<Item = Health>) -> Health {
+        let mut worst = Health::Healthy;
+        for h in states {
+            worst = match (worst, h) {
+                (_, Health::Stalled) | (Health::Stalled, _) => Health::Stalled,
+                (_, Health::Degraded) | (Health::Degraded, _) => Health::Degraded,
+                _ => Health::Healthy,
+            };
+        }
+        worst
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names() {
+        assert_eq!(Health::Healthy.name(), "healthy");
+        assert_eq!(Health::Degraded.name(), "degraded");
+        assert_eq!(Health::Stalled.name(), "stalled");
+    }
+
+    #[test]
+    fn derivation_matrix() {
+        let stall = DEFAULT_STALL_AFTER_NS;
+        // Fresh heartbeat, no shedding.
+        assert_eq!(Health::derive(100, 90, 1, stall, false), Health::Healthy);
+        // In-flight work, heartbeat too old.
+        assert_eq!(Health::derive(stall + 200, 100, 1, stall, false), Health::Stalled);
+        // Same silence but idle: not stalled.
+        assert_eq!(Health::derive(stall + 200, 100, 0, stall, false), Health::Healthy);
+        // Shedding marks a live lane degraded...
+        assert_eq!(Health::derive(100, 90, 1, stall, true), Health::Degraded);
+        // ...but a stall outranks it.
+        assert_eq!(Health::derive(stall + 200, 100, 1, stall, true), Health::Stalled);
+        // Clock going backwards (wall resets) never underflows.
+        assert_eq!(Health::derive(50, 100, 1, stall, false), Health::Healthy);
+    }
+
+    #[test]
+    fn worst_ranks() {
+        use Health::*;
+        assert_eq!(Health::worst([Healthy, Healthy]), Healthy);
+        assert_eq!(Health::worst([Healthy, Degraded]), Degraded);
+        assert_eq!(Health::worst([Degraded, Stalled, Healthy]), Stalled);
+        assert_eq!(Health::worst([]), Healthy);
+    }
+}

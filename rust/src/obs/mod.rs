@@ -1,0 +1,104 @@
+//! The **ops plane** — live telemetry, rolling SLO evaluation, health
+//! states and overload shedding for the serve and stream tiers. The
+//! paper's scalability story was watched through an offline sampling
+//! profiler (§3.1); a long-lived `cannyd` needs the live equivalent:
+//! every report used to be end-of-run only, this module makes the same
+//! numbers observable *while the run is in flight*.
+//!
+//! Four pieces:
+//!
+//! * [`registry::Telemetry`] — the process-wide registry of atomic
+//!   counters, gauges and fixed-bucket latency histograms that serve
+//!   lanes, the stream executor and the artifact cache publish into.
+//! * [`snapshot::SnapshotEngine`] — turns the registry into periodic
+//!   JSONL lines (`--telemetry-log file.jsonl
+//!   --telemetry-interval-ms N`). Under the **wall** clock a real
+//!   sampler thread ([`snapshot::WallSnapshotter`]) emits every
+//!   interval and samples per-core busy flags into a `utilization`
+//!   section (accumulated into a [`crate::profiler::UsageTrace`] — the
+//!   Figure-8/9 data free of charge); under the **virtual** clock the
+//!   deterministic event loop emits ticks at modeled times, so two
+//!   replays of the same trace write **byte-identical** files.
+//! * [`health::Health`] — `healthy | degraded | stalled` per lane and
+//!   for the tier, derived from heartbeat gauges (stall detection) and
+//!   the shedding state (degradation).
+//! * [`fault::FaultManager`] — explicit overload policies
+//!   (`--overload-policy none | reject-new | degrade-to-front-only`)
+//!   generalizing the stream tier's drop/degrade to the serve tier:
+//!   when the rolling SLO window ([`crate::service::slo::SloWindow`])
+//!   is missed, new arrivals are rejected or rewritten to the cheap
+//!   front-only pipeline, every decision counted in the telemetry
+//!   stream and the final report.
+//!
+//! ## Telemetry JSONL schema (one object per line)
+//!
+//! ```json
+//! {
+//!   "cache": {"enabled": true, "...": "the serve/stream cache section",
+//!             "tiers": {"serve": {"hit_rate": 0.75, "...": "…"},
+//!                       "stream": {"hit_rate": 0.0, "...": "…"}}},
+//!   "gate": {"hit_rate": 0.92, "tiles_clean": 736, "tiles_dirty": 64},
+//!   "health": "healthy",
+//!   "lanes": [{"batches": 12, "busy_ns": 81234567, "completed": 40,
+//!              "health": "healthy", "heartbeat_ns": 99120334, "id": 0,
+//!              "inflight": 2}],
+//!   "latency_ns": {"count": 80, "max": 4123000, "mean": 1082350.5,
+//!                  "p50": 1048575, "p95": 2097151, "p99": 4194303},
+//!   "overload": {"policy": "reject-new", "shed_degraded": 0,
+//!                "shed_rejected": 3},
+//!   "queue": {"admitted": 83, "depth": 4, "high_water": 9,
+//!             "offered": 90, "rejected": 7},
+//!   "seq": 41,
+//!   "slo": {"n": 64, "p50_ns": 1048575, "p95_ns": 2097151,
+//!           "p99_ns": 4123000, "status": "met", "target_p99_ns": 50000000,
+//!           "transitions": [{"status": "met", "t_ns": 1201000}],
+//!           "transitions_truncated": 0, "window": 64},
+//!   "stages": {"gaussian": {"cpu_ns": 0, "runs": 12, "wall_ns": 0}},
+//!   "t_ns": 4100000,
+//!   "tier": "serve",
+//!   "utilization": {"busy": 3, "cores": 4, "pct": 75,
+//!                   "per_core": [1, 1, 1, 0]}
+//! }
+//! ```
+//!
+//! Field notes:
+//!
+//! * Every line carries [`snapshot::REQUIRED_LINE_KEYS`] (what the CI
+//!   schema check asserts). `utilization` is **wall-clock only**: a
+//!   measured sample would break virtual-replay byte-identity, so
+//!   deterministic replays omit the key rather than fake it.
+//! * `latency_ns` quantiles are bucket-resolution approximations from
+//!   the cumulative power-of-two histogram (`count`/`mean`/`max` are
+//!   exact); `slo` quantiles are exact nearest-rank over the rolling
+//!   window of recent completions.
+//! * `stages.*.wall_ns`/`cpu_ns` are measured under wall clocks and
+//!   zero (runs only) under the virtual clock, for the same
+//!   determinism reason the end-of-run report only carries run counts.
+//! * `tier` is `"serve"` or `"stream"`; stream lines use the same
+//!   schema with one `lanes` entry per pipeline stage (decode, front,
+//!   finish), `gate` fed by the delta-gate, and `overload` counting
+//!   deadline drops (`shed_rejected`) and degraded emissions
+//!   (`shed_degraded`) under the stream's `--drop-policy`.
+//! * The file is truncated at run start and each line ends in `\n`;
+//!   `seq` is dense from 0. The last line is emitted at shutdown (wall)
+//!   or after the final modeled completion (virtual), so the end state
+//!   is always captured.
+//!
+//! The serve/stream **final reports** gain matching sections: `overload`
+//! (policy + shed totals) and `slo.window` (rolling-window quantiles,
+//! status and the met/missed/no-data transition timeline) — see
+//! [`crate::service::slo::ServeReport`] and
+//! [`crate::stream::StreamReport`].
+
+pub mod fault;
+pub mod health;
+pub mod registry;
+pub mod snapshot;
+
+pub use fault::{FaultManager, OverloadPolicy, ShedDecision};
+pub use health::{Health, DEFAULT_STALL_AFTER_NS};
+pub use registry::{Counter, Gauge, Histogram, HistogramSnapshot, LaneTelemetry, StageTally, Telemetry};
+pub use snapshot::{
+    CacheProbe, ClockProbe, SloProbe, SnapshotEngine, TickInputs, WallSnapshotter,
+    REQUIRED_LINE_KEYS,
+};

@@ -1,0 +1,376 @@
+//! The process-wide telemetry registry: lock-free counters, gauges and
+//! fixed-bucket latency histograms that the serve lanes, the stream
+//! executor and the artifact cache publish into while they run.
+//!
+//! Everything here is written on hot paths, so the primitives are
+//! `Relaxed` atomics (the same discipline as
+//! [`crate::cache::stats::CacheStats`]): totals are exact whenever a
+//! snapshot is taken after the publishing threads have quiesced, and
+//! under the single-threaded virtual driver every intermediate snapshot
+//! is exact too — which is what makes telemetry ticks byte-identical
+//! across deterministic replays.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// A monotonically increasing event count.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A last-writer-wins instantaneous value (queue depth, heartbeat).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// Raise the gauge to `v` if above the current value (high-water
+    /// marks).
+    pub fn raise(&self, v: u64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn sub(&self, n: u64) {
+        // Saturating: a racy decrement below zero must not wrap to
+        // u64::MAX in a live gauge.
+        let mut cur = self.0.load(Ordering::Relaxed);
+        loop {
+            let next = cur.saturating_sub(n);
+            match self.0.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Number of power-of-two buckets: bucket `i` counts values in
+/// `[2^i, 2^(i+1))` nanoseconds (bucket 0 also holds zero), so the full
+/// `u64` range is covered with no configuration.
+pub const HIST_BUCKETS: usize = 64;
+
+/// A fixed-bucket latency histogram. Recording is one atomic add; the
+/// quantiles read out of a snapshot are *bucket-resolution
+/// approximations* (the bucket's inclusive upper bound), while `count`,
+/// `sum`/`mean` and `max` are exact.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram {
+            buckets: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+}
+
+fn bucket_of(ns: u64) -> usize {
+    if ns == 0 {
+        0
+    } else {
+        (63 - ns.leading_zeros() as usize).min(HIST_BUCKETS - 1)
+    }
+}
+
+/// Inclusive upper bound of bucket `i` (what approximate quantiles
+/// report).
+fn bucket_hi(i: usize) -> u64 {
+    if i >= 63 {
+        u64::MAX
+    } else {
+        (1u64 << (i + 1)) - 1
+    }
+}
+
+impl Histogram {
+    pub fn record(&self, ns: u64) {
+        self.buckets[bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            counts: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            count: self.count.load(Ordering::Relaxed),
+            sum_ns: self.sum_ns.load(Ordering::Relaxed),
+            max_ns: self.max_ns.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A point-in-time copy of a [`Histogram`].
+#[derive(Clone, Debug, Default)]
+pub struct HistogramSnapshot {
+    pub counts: Vec<u64>,
+    pub count: u64,
+    pub sum_ns: u64,
+    pub max_ns: u64,
+}
+
+impl HistogramSnapshot {
+    /// Approximate quantile: the inclusive upper bound of the bucket
+    /// holding the nearest-rank sample (0 with no samples). Never
+    /// reports above the exact observed `max_ns`.
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((self.count - 1) as f64 * q).round() as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen > rank {
+                return bucket_hi(i).min(self.max_ns);
+            }
+        }
+        self.max_ns
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.sum_ns as f64 / self.count as f64
+    }
+}
+
+/// Live per-lane registers: the serve lanes (or, for the stream tier,
+/// the pipeline stages) publish into one of these each.
+#[derive(Debug, Default)]
+pub struct LaneTelemetry {
+    /// Requests currently executing on the lane.
+    pub inflight: Gauge,
+    /// Requests completed by the lane.
+    pub completed: Counter,
+    /// Batches dispatched to the lane.
+    pub batches: Counter,
+    /// Modeled/measured busy nanoseconds.
+    pub busy_ns: Counter,
+    /// Clock reading (virtual or wall, per the driver) of the lane's
+    /// last sign of life: a dispatch or a completion. Health derivation
+    /// ([`crate::obs::health`]) compares it against now.
+    pub heartbeat_ns: Gauge,
+}
+
+/// One stage span's running totals (keyed by
+/// [`crate::canny::StageRecord::span_name`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StageTally {
+    pub wall_ns: u64,
+    pub cpu_ns: u64,
+    pub runs: u64,
+}
+
+/// The registry one tier (serve run or stream run) publishes into.
+///
+/// Shared as an `Arc` between lane/stage threads and the snapshot
+/// engine under wall clocks; plainly owned by the single-threaded
+/// virtual driver. The snapshot engine
+/// ([`crate::obs::snapshot::SnapshotEngine`]) turns this into one
+/// JSONL line per tick.
+#[derive(Debug)]
+pub struct Telemetry {
+    /// `"serve"` or `"stream"` — echoed on every snapshot line.
+    pub tier: &'static str,
+    /// Instantaneous admission-queue occupancy.
+    pub queue_depth: Gauge,
+    /// Highest occupancy seen.
+    pub queue_high_water: Gauge,
+    /// Requests (or frames) that arrived, whatever their fate.
+    pub offered: Counter,
+    /// Requests admitted past the queue (frames entering the pipeline).
+    pub admitted: Counter,
+    /// All rejections: queue-full + oversize + shed.
+    pub rejected: Counter,
+    /// Completed requests (emitted frames).
+    pub completed: Counter,
+    /// Overload decisions: arrivals turned away by the fault manager
+    /// (serve `reject-new`) or frames dropped at their deadline
+    /// (stream `drop`).
+    pub shed_rejected: Counter,
+    /// Overload decisions: work completed in degraded form — serve
+    /// `degrade-to-front-only` rewrites, stream `degrade` emissions.
+    pub shed_degraded: Counter,
+    /// Cumulative completion latency (request enqueue→complete, or
+    /// frame capture→emit).
+    pub latency: Histogram,
+    /// One register per serve lane; for the stream tier, one per
+    /// pipeline stage (decode, front, finish).
+    pub lanes: Vec<LaneTelemetry>,
+    /// Delta-gate tiles served from the temporal cache (stream).
+    pub gate_tiles_clean: Counter,
+    /// Delta-gate tiles recomputed (stream).
+    pub gate_tiles_dirty: Counter,
+    /// Per-stage wall/cpu/run aggregates. A `Mutex` (not a lock-free
+    /// map) because stages complete at batch granularity — a few locks
+    /// per batch, never per pixel.
+    stages: Mutex<BTreeMap<String, StageTally>>,
+}
+
+impl Telemetry {
+    pub fn new(tier: &'static str, lanes: usize) -> Telemetry {
+        Telemetry {
+            tier,
+            queue_depth: Gauge::default(),
+            queue_high_water: Gauge::default(),
+            offered: Counter::default(),
+            admitted: Counter::default(),
+            rejected: Counter::default(),
+            completed: Counter::default(),
+            shed_rejected: Counter::default(),
+            shed_degraded: Counter::default(),
+            latency: Histogram::default(),
+            lanes: (0..lanes).map(|_| LaneTelemetry::default()).collect(),
+            gate_tiles_clean: Counter::default(),
+            gate_tiles_dirty: Counter::default(),
+            stages: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    pub fn lane(&self, i: usize) -> &LaneTelemetry {
+        &self.lanes[i]
+    }
+
+    /// Fold one executed stage span into the per-stage aggregates.
+    /// Virtual replays pass zero wall/cpu (measured times are not
+    /// deterministic; run counts are).
+    pub fn note_stage(&self, name: &str, wall_ns: u64, cpu_ns: u64) {
+        let mut map = self.stages.lock().expect("stage tallies poisoned");
+        let t = map.entry(name.to_string()).or_default();
+        t.wall_ns += wall_ns;
+        t.cpu_ns += cpu_ns;
+        t.runs += 1;
+    }
+
+    pub fn stage_tallies(&self) -> BTreeMap<String, StageTally> {
+        self.stages.lock().expect("stage tallies poisoned").clone()
+    }
+
+    /// Gate hit rate so far (0 when nothing was gated).
+    pub fn gate_hit_rate(&self) -> f64 {
+        let clean = self.gate_tiles_clean.get();
+        let total = clean + self.gate_tiles_dirty.get();
+        if total == 0 {
+            return 0.0;
+        }
+        clean as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let c = Counter::default();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::default();
+        g.set(7);
+        g.raise(3);
+        assert_eq!(g.get(), 7);
+        g.raise(9);
+        assert_eq!(g.get(), 9);
+        g.add(2);
+        g.sub(100);
+        assert_eq!(g.get(), 0, "gauge decrement saturates at zero");
+    }
+
+    #[test]
+    fn histogram_buckets_cover_u64() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 0);
+        assert_eq!(bucket_of(2), 1);
+        assert_eq!(bucket_of(3), 1);
+        assert_eq!(bucket_of(1024), 10);
+        assert_eq!(bucket_of(u64::MAX), 63);
+        assert_eq!(bucket_hi(0), 1);
+        assert_eq!(bucket_hi(10), 2047);
+        assert_eq!(bucket_hi(63), u64::MAX);
+    }
+
+    #[test]
+    fn histogram_quantiles_approximate_within_bucket() {
+        let h = Histogram::default();
+        for ns in [100u64, 200, 300, 400, 1_000_000] {
+            h.record(ns);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 5);
+        assert_eq!(s.max_ns, 1_000_000);
+        assert!((s.mean_ns() - 200_200.0).abs() < 1e-9);
+        // p50 falls in the [256,512) bucket -> reports 511.
+        assert_eq!(s.quantile_ns(0.5), 511);
+        // p99 -> the max sample's bucket, clamped to the exact max.
+        assert_eq!(s.quantile_ns(0.99), 1_000_000);
+        // Empty histogram.
+        assert_eq!(HistogramSnapshot::default().quantile_ns(0.5), 0);
+        assert_eq!(HistogramSnapshot::default().mean_ns(), 0.0);
+    }
+
+    #[test]
+    fn quantile_never_exceeds_max() {
+        let h = Histogram::default();
+        h.record(1_025);
+        let s = h.snapshot();
+        // Bucket hi is 2047 but the only sample is 1025.
+        assert_eq!(s.quantile_ns(1.0), 1_025);
+    }
+
+    #[test]
+    fn telemetry_registers() {
+        let t = Telemetry::new("serve", 2);
+        assert_eq!(t.tier, "serve");
+        assert_eq!(t.lanes.len(), 2);
+        t.lane(0).inflight.add(3);
+        t.lane(0).completed.add(3);
+        t.lane(0).inflight.sub(3);
+        assert_eq!(t.lane(0).inflight.get(), 0);
+        assert_eq!(t.lane(0).completed.get(), 3);
+        t.note_stage("gaussian", 10, 8);
+        t.note_stage("gaussian", 5, 4);
+        let stages = t.stage_tallies();
+        assert_eq!(stages["gaussian"], StageTally { wall_ns: 15, cpu_ns: 12, runs: 2 });
+        assert_eq!(t.gate_hit_rate(), 0.0);
+        t.gate_tiles_clean.add(3);
+        t.gate_tiles_dirty.add(1);
+        assert!((t.gate_hit_rate() - 0.75).abs() < 1e-12);
+    }
+}

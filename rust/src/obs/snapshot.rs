@@ -1,0 +1,584 @@
+//! The snapshot engine: turns the live [`Telemetry`] registry into
+//! periodic machine-readable JSONL lines (`--telemetry-log file.jsonl
+//! --telemetry-interval-ms N`; schema documented in [`crate::obs`]).
+//!
+//! Two drive modes, one emitter:
+//!
+//! * **virtual** — the deterministic serve driver calls
+//!   [`SnapshotEngine::take_tick`] from its event loop, interleaving
+//!   ticks with modeled completions in time order. Every value on a
+//!   line is modeled, so two replays of the same trace produce
+//!   byte-identical files.
+//! * **wall** — [`WallSnapshotter`] runs a real sampler thread
+//!   (the ops-plane sibling of [`crate::profiler::Sampler`]) that
+//!   emits a line every interval, samples the worker pools' busy flags
+//!   into a per-tick `utilization` section, and accumulates them into a
+//!   [`UsageTrace`] — the paper's Figure-8/9 core-usage data without a
+//!   separate profiler invocation.
+//!
+//! Lines are appended with a trailing newline each; the file is
+//! truncated at engine creation so a run's log is self-contained.
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::cache::CacheSnapshot;
+use crate::error::{Error, Result};
+use crate::obs::health::{Health, DEFAULT_STALL_AFTER_NS};
+use crate::obs::registry::Telemetry;
+use crate::profiler::{UsageSample, UsageTrace};
+use crate::scheduler::PoolStats;
+use crate::util::json::Json;
+
+/// Everything one tick needs beyond the registry itself: the sections
+/// owned by the driver (rolling SLO window, cache snapshot, wall-only
+/// utilization sample).
+pub struct TickInputs<'a> {
+    /// Tick time in the driver's clock domain (modeled ns under the
+    /// virtual clock, monotonic ns under wall).
+    pub t_ns: u64,
+    pub telemetry: &'a Telemetry,
+    /// Snapshot of the shared artifact cache (the disabled all-zero
+    /// snapshot when no cache is attached).
+    pub cache: CacheSnapshot,
+    /// The rolling-SLO section ([`crate::service::slo::SloWindow`]'s
+    /// JSON), carrying at least a `status` key.
+    pub slo: Json,
+    /// Is the rolling SLO currently missed? Drives the `degraded`
+    /// health state when shedding is possible.
+    pub slo_missed: bool,
+    /// Can the run's overload policy shed at all? (`false` for policy
+    /// `none`: a missed SLO is then reported, not acted on, and health
+    /// stays `healthy`.)
+    pub shedding_possible: bool,
+    /// Per-core busy sample (wall snapshotter only; omitted — not
+    /// zeroed — in virtual replays, where measured utilization would
+    /// break byte-identity).
+    pub utilization: Option<Json>,
+}
+
+/// The JSONL emitter. Owns the output file, the line sequence number
+/// and the periodic-tick schedule; disabled (no `--telemetry-log`) it
+/// is a no-op whose next tick never arrives.
+#[derive(Debug)]
+pub struct SnapshotEngine {
+    out: Option<BufWriter<File>>,
+    path: Option<PathBuf>,
+    interval_ns: u64,
+    policy: String,
+    stall_after_ns: u64,
+    seq: u64,
+    ticks: u64,
+    lines: u64,
+}
+
+impl SnapshotEngine {
+    /// The inert engine: `enabled()` is false, `take_tick` never fires,
+    /// `emit` does nothing.
+    pub fn disabled() -> SnapshotEngine {
+        SnapshotEngine {
+            out: None,
+            path: None,
+            interval_ns: u64::MAX,
+            policy: "none".into(),
+            stall_after_ns: DEFAULT_STALL_AFTER_NS,
+            seq: 0,
+            ticks: 0,
+            lines: 0,
+        }
+    }
+
+    /// Open (truncating) `path` for a run with the given tick interval
+    /// and overload/drop policy name (echoed on every line).
+    pub fn create(path: &Path, interval_ns: u64, policy: &str) -> Result<SnapshotEngine> {
+        if interval_ns == 0 {
+            return Err(Error::Config("telemetry interval must be > 0".into()));
+        }
+        let file = File::create(path)
+            .map_err(|e| Error::Config(format!("telemetry log {}: {e}", path.display())))?;
+        Ok(SnapshotEngine {
+            out: Some(BufWriter::new(file)),
+            path: Some(path.to_path_buf()),
+            interval_ns,
+            policy: policy.to_string(),
+            stall_after_ns: DEFAULT_STALL_AFTER_NS,
+            seq: 0,
+            ticks: 0,
+            lines: 0,
+        })
+    }
+
+    /// Build from options: `Some(path)` opens, `None` disables.
+    pub fn from_options(
+        path: Option<&Path>,
+        interval_ns: u64,
+        policy: &str,
+    ) -> Result<SnapshotEngine> {
+        match path {
+            Some(p) => SnapshotEngine::create(p, interval_ns, policy),
+            None => Ok(SnapshotEngine::disabled()),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.out.is_some()
+    }
+
+    pub fn interval_ns(&self) -> u64 {
+        self.interval_ns
+    }
+
+    /// Lines written so far.
+    pub fn lines(&self) -> u64 {
+        self.lines
+    }
+
+    /// When the next periodic tick is due (`u64::MAX` when disabled).
+    /// The first tick fires at one interval, not at zero — a t=0 line
+    /// would only ever hold zeros.
+    pub fn next_tick_ns(&self) -> u64 {
+        if !self.enabled() {
+            return u64::MAX;
+        }
+        (self.ticks + 1).saturating_mul(self.interval_ns)
+    }
+
+    /// Claim the next periodic tick if it is due at `now_ns`, returning
+    /// its scheduled time. Drivers loop this to emit every tick that
+    /// has become due, each stamped at its own grid point:
+    ///
+    /// ```ignore
+    /// while let Some(t) = engine.take_tick(now_ns) {
+    ///     engine.emit(TickInputs { t_ns: t, /* … */ })?;
+    /// }
+    /// ```
+    pub fn take_tick(&mut self, now_ns: u64) -> Option<u64> {
+        let due = self.next_tick_ns();
+        if due > now_ns {
+            return None;
+        }
+        self.ticks += 1;
+        Some(due)
+    }
+
+    /// Append one snapshot line. No-op when disabled.
+    pub fn emit(&mut self, inputs: TickInputs) -> Result<()> {
+        if self.out.is_none() {
+            return Ok(());
+        }
+        let line = self.build_line(&inputs).dump();
+        let out = self.out.as_mut().expect("checked above");
+        out.write_all(line.as_bytes())?;
+        out.write_all(b"\n")?;
+        self.seq += 1;
+        self.lines += 1;
+        Ok(())
+    }
+
+    /// Flush and close, returning the number of lines written.
+    pub fn close(mut self) -> Result<u64> {
+        if let Some(mut out) = self.out.take() {
+            out.flush()?;
+        }
+        Ok(self.lines)
+    }
+
+    pub fn path(&self) -> Option<&Path> {
+        self.path.as_deref()
+    }
+
+    /// One snapshot line (the JSONL schema documented in
+    /// [`crate::obs`]). Key order is `BTreeMap` order, values are
+    /// whatever the registry holds — deterministic inputs, identical
+    /// bytes.
+    fn build_line(&self, inputs: &TickInputs) -> Json {
+        let tel = inputs.telemetry;
+        let num = |v: u64| Json::Num(v as f64);
+        let shedding = inputs.slo_missed && inputs.shedding_possible;
+
+        let mut lanes = Vec::with_capacity(tel.lanes.len());
+        let mut states = Vec::with_capacity(tel.lanes.len());
+        for (i, lane) in tel.lanes.iter().enumerate() {
+            let health = Health::derive(
+                inputs.t_ns,
+                lane.heartbeat_ns.get(),
+                lane.inflight.get(),
+                self.stall_after_ns,
+                shedding,
+            );
+            states.push(health);
+            let mut m = BTreeMap::new();
+            m.insert("batches".into(), num(lane.batches.get()));
+            m.insert("busy_ns".into(), num(lane.busy_ns.get()));
+            m.insert("completed".into(), num(lane.completed.get()));
+            m.insert("health".into(), Json::Str(health.name().into()));
+            m.insert("heartbeat_ns".into(), num(lane.heartbeat_ns.get()));
+            m.insert("id".into(), Json::Num(i as f64));
+            m.insert("inflight".into(), num(lane.inflight.get()));
+            lanes.push(Json::Obj(m));
+        }
+
+        let lat = tel.latency.snapshot();
+        let mut latency = BTreeMap::new();
+        latency.insert("count".into(), num(lat.count));
+        latency.insert("max".into(), num(lat.max_ns));
+        latency.insert("mean".into(), Json::Num(lat.mean_ns()));
+        latency.insert("p50".into(), num(lat.quantile_ns(0.50)));
+        latency.insert("p95".into(), num(lat.quantile_ns(0.95)));
+        latency.insert("p99".into(), num(lat.quantile_ns(0.99)));
+
+        let mut queue = BTreeMap::new();
+        queue.insert("admitted".into(), num(tel.admitted.get()));
+        queue.insert("depth".into(), num(tel.queue_depth.get()));
+        queue.insert("high_water".into(), num(tel.queue_high_water.get()));
+        queue.insert("offered".into(), num(tel.offered.get()));
+        queue.insert("rejected".into(), num(tel.rejected.get()));
+
+        let mut gate = BTreeMap::new();
+        gate.insert("hit_rate".into(), Json::Num(tel.gate_hit_rate()));
+        gate.insert("tiles_clean".into(), num(tel.gate_tiles_clean.get()));
+        gate.insert("tiles_dirty".into(), num(tel.gate_tiles_dirty.get()));
+
+        let mut overload = BTreeMap::new();
+        overload.insert("policy".into(), Json::Str(self.policy.clone()));
+        overload.insert("shed_degraded".into(), num(tel.shed_degraded.get()));
+        overload.insert("shed_rejected".into(), num(tel.shed_rejected.get()));
+
+        let stages: BTreeMap<String, Json> = tel
+            .stage_tallies()
+            .into_iter()
+            .map(|(name, t)| {
+                let mut m = BTreeMap::new();
+                m.insert("cpu_ns".into(), num(t.cpu_ns));
+                m.insert("runs".into(), num(t.runs));
+                m.insert("wall_ns".into(), num(t.wall_ns));
+                (name, Json::Obj(m))
+            })
+            .collect();
+
+        let mut line = BTreeMap::new();
+        line.insert("cache".into(), inputs.cache.to_json());
+        line.insert("gate".into(), Json::Obj(gate));
+        line.insert("health".into(), Json::Str(Health::worst(states).name().into()));
+        line.insert("lanes".into(), Json::Arr(lanes));
+        line.insert("latency_ns".into(), Json::Obj(latency));
+        line.insert("overload".into(), Json::Obj(overload));
+        line.insert("queue".into(), Json::Obj(queue));
+        line.insert("seq".into(), num(self.seq));
+        line.insert("slo".into(), inputs.slo.clone());
+        line.insert("stages".into(), Json::Obj(stages));
+        line.insert("t_ns".into(), num(inputs.t_ns));
+        line.insert("tier".into(), Json::Str(tel.tier.into()));
+        if let Some(util) = &inputs.utilization {
+            line.insert("utilization".into(), util.clone());
+        }
+        Json::Obj(line)
+    }
+}
+
+/// Keys every telemetry line carries (the CI schema check asserts
+/// these; `utilization` is additionally present under wall clocks).
+pub const REQUIRED_LINE_KEYS: [&str; 12] = [
+    "cache",
+    "gate",
+    "health",
+    "lanes",
+    "latency_ns",
+    "overload",
+    "queue",
+    "seq",
+    "slo",
+    "stages",
+    "t_ns",
+    "tier",
+];
+
+/// Callback supplying the rolling-SLO section and its missed flag at
+/// sample time (a lock around [`crate::service::slo::SloWindow`] on the
+/// serve side).
+pub type SloProbe = Box<dyn Fn() -> (Json, bool) + Send>;
+/// Callback snapshotting the shared artifact cache at sample time.
+pub type CacheProbe = Box<dyn Fn() -> CacheSnapshot + Send>;
+/// Callback reading the run's clock (wall ns since the run started).
+pub type ClockProbe = Box<dyn Fn() -> u64 + Send>;
+
+/// The wall-clock sampler thread: emits a telemetry line every
+/// interval (plus one final line at shutdown, so even a short run logs
+/// its end state), sampling per-core busy flags from the lanes' worker
+/// pools into the per-tick `utilization` section and into a
+/// [`UsageTrace`].
+pub struct WallSnapshotter {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<Result<(SnapshotEngine, Vec<UsageSample>)>>>,
+    /// The engine when no thread was spawned (telemetry disabled).
+    inert: Option<SnapshotEngine>,
+    period_ns: u64,
+    cores: usize,
+}
+
+impl WallSnapshotter {
+    /// Spawn the sampler (or return an inert handle when the engine is
+    /// disabled). `pools` are the lanes' worker pools — their
+    /// concatenated busy flags form the utilization sample.
+    #[allow(clippy::too_many_arguments)]
+    pub fn start(
+        engine: SnapshotEngine,
+        telemetry: Arc<Telemetry>,
+        pools: Vec<PoolStats>,
+        now_fn: ClockProbe,
+        cache_fn: CacheProbe,
+        slo_fn: SloProbe,
+        shedding_possible: bool,
+    ) -> WallSnapshotter {
+        let period_ns = engine.interval_ns();
+        let cores: usize = pools.iter().map(|p| p.n_workers()).sum();
+        if !engine.enabled() {
+            return WallSnapshotter {
+                stop: Arc::new(AtomicBool::new(true)),
+                handle: None,
+                inert: Some(engine),
+                period_ns,
+                cores,
+            };
+        }
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("canny-telemetry".into())
+            .spawn(move || {
+                let mut engine = engine;
+                let mut samples = Vec::new();
+                loop {
+                    let stopping = stop2.load(Ordering::Acquire);
+                    let t_ns = now_fn();
+                    let busy: Vec<bool> = pools
+                        .iter()
+                        .flat_map(|p| p.snapshot().into_iter().map(|w| w.busy))
+                        .collect();
+                    let utilization = usage_json(&busy);
+                    samples.push(UsageSample { t_ns, busy });
+                    let (slo, slo_missed) = slo_fn();
+                    engine.emit(TickInputs {
+                        t_ns,
+                        telemetry: &telemetry,
+                        cache: cache_fn(),
+                        slo,
+                        slo_missed,
+                        shedding_possible,
+                        utilization: Some(utilization),
+                    })?;
+                    if stopping {
+                        return Ok((engine, samples));
+                    }
+                    std::thread::sleep(Duration::from_nanos(period_ns));
+                }
+            })
+            .expect("spawn telemetry snapshotter");
+        WallSnapshotter { stop, handle: Some(handle), inert: None, period_ns, cores }
+    }
+
+    /// Stop the sampler (after its final line) and collect the engine
+    /// plus the per-core usage trace it accumulated.
+    pub fn finish(mut self, label: &str) -> Result<(SnapshotEngine, UsageTrace)> {
+        self.stop.store(true, Ordering::Release);
+        let (engine, samples) = match self.handle.take() {
+            Some(h) => h.join().expect("telemetry snapshotter panicked")?,
+            None => (self.inert.take().expect("inert engine present"), Vec::new()),
+        };
+        let trace = UsageTrace {
+            cores: self.cores,
+            period_ns: if self.period_ns == u64::MAX { 0 } else { self.period_ns },
+            samples,
+            label: label.into(),
+        };
+        Ok((engine, trace))
+    }
+}
+
+impl Drop for WallSnapshotter {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The per-tick `utilization` section from one busy-flag sample.
+fn usage_json(busy: &[bool]) -> Json {
+    let n = busy.iter().filter(|&&b| b).count();
+    let mut m = BTreeMap::new();
+    m.insert("busy".into(), Json::Num(n as f64));
+    m.insert("cores".into(), Json::Num(busy.len() as f64));
+    m.insert(
+        "pct".into(),
+        Json::Num(if busy.is_empty() { 0.0 } else { 100.0 * n as f64 / busy.len() as f64 }),
+    );
+    m.insert(
+        "per_core".into(),
+        Json::Arr(busy.iter().map(|&b| Json::Num(if b { 1.0 } else { 0.0 })).collect()),
+    );
+    Json::Obj(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn slo_stub(status: &str) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("status".into(), Json::Str(status.into()));
+        Json::Obj(m)
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("canny_obs_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn disabled_engine_is_inert() {
+        let mut e = SnapshotEngine::disabled();
+        assert!(!e.enabled());
+        assert_eq!(e.next_tick_ns(), u64::MAX);
+        assert_eq!(e.take_tick(u64::MAX - 1), None);
+        let tel = Telemetry::new("serve", 1);
+        e.emit(TickInputs {
+            t_ns: 5,
+            telemetry: &tel,
+            cache: CacheSnapshot::default(),
+            slo: slo_stub("no-data"),
+            slo_missed: false,
+            shedding_possible: false,
+            utilization: None,
+        })
+        .unwrap();
+        assert_eq!(e.close().unwrap(), 0);
+    }
+
+    #[test]
+    fn tick_schedule_is_a_grid() {
+        let path = tmp("grid.jsonl");
+        let mut e = SnapshotEngine::create(&path, 100, "none").unwrap();
+        assert_eq!(e.next_tick_ns(), 100);
+        assert_eq!(e.take_tick(99), None);
+        assert_eq!(e.take_tick(100), Some(100));
+        assert_eq!(e.take_tick(350), Some(200));
+        assert_eq!(e.take_tick(350), Some(300));
+        assert_eq!(e.take_tick(350), None);
+        assert_eq!(e.next_tick_ns(), 400);
+        assert!(SnapshotEngine::create(&path, 0, "none").is_err());
+    }
+
+    #[test]
+    fn lines_carry_required_keys_and_are_deterministic() {
+        let write = |path: &PathBuf| {
+            let mut e = SnapshotEngine::create(path, 100, "reject-new").unwrap();
+            let tel = Telemetry::new("serve", 2);
+            tel.offered.add(5);
+            tel.admitted.add(4);
+            tel.rejected.inc();
+            tel.completed.add(3);
+            tel.queue_depth.set(1);
+            tel.queue_high_water.raise(2);
+            tel.lane(0).completed.add(3);
+            tel.lane(0).heartbeat_ns.set(90);
+            tel.latency.record(1000);
+            tel.latency.record(3000);
+            tel.note_stage("gaussian", 0, 0);
+            for t in [100u64, 200] {
+                e.emit(TickInputs {
+                    t_ns: t,
+                    telemetry: &tel,
+                    cache: CacheSnapshot::default(),
+                    slo: slo_stub("met"),
+                    slo_missed: false,
+                    shedding_possible: true,
+                    utilization: None,
+                })
+                .unwrap();
+            }
+            e.close().unwrap();
+            std::fs::read_to_string(path).unwrap()
+        };
+        let a = write(&tmp("det_a.jsonl"));
+        let b = write(&tmp("det_b.jsonl"));
+        assert_eq!(a, b, "identical inputs must produce identical bytes");
+        let lines: Vec<&str> = a.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for (i, line) in lines.iter().enumerate() {
+            let j = Json::parse(line).unwrap();
+            for key in REQUIRED_LINE_KEYS {
+                assert!(j.get(key).is_some(), "line {i} missing `{key}`");
+            }
+            assert_eq!(j.get("seq").unwrap().as_usize(), Some(i));
+            assert_eq!(j.get("tier").unwrap().as_str(), Some("serve"));
+            assert_eq!(j.get("health").unwrap().as_str(), Some("healthy"));
+            assert_eq!(
+                j.get("overload").unwrap().get("policy").unwrap().as_str(),
+                Some("reject-new")
+            );
+            let lanes = j.get("lanes").unwrap().as_arr().unwrap();
+            assert_eq!(lanes.len(), 2);
+            assert_eq!(lanes[0].get("completed").unwrap().as_usize(), Some(3));
+            assert_eq!(j.get("stages").unwrap().get("gaussian").unwrap().get("runs"), Some(&Json::Num(1.0)));
+        }
+    }
+
+    #[test]
+    fn shedding_and_stalls_reach_health() {
+        let path = tmp("health.jsonl");
+        let mut e = SnapshotEngine::create(&path, 10, "degrade-to-front-only").unwrap();
+        let tel = Telemetry::new("serve", 1);
+        // Missed SLO + active policy: degraded.
+        e.emit(TickInputs {
+            t_ns: 10,
+            telemetry: &tel,
+            cache: CacheSnapshot::default(),
+            slo: slo_stub("missed"),
+            slo_missed: true,
+            shedding_possible: true,
+            utilization: None,
+        })
+        .unwrap();
+        // Stalled lane outranks: in-flight work, ancient heartbeat.
+        tel.lane(0).inflight.set(1);
+        tel.lane(0).heartbeat_ns.set(0);
+        e.emit(TickInputs {
+            t_ns: DEFAULT_STALL_AFTER_NS + 20,
+            telemetry: &tel,
+            cache: CacheSnapshot::default(),
+            slo: slo_stub("missed"),
+            slo_missed: true,
+            shedding_possible: true,
+            utilization: None,
+        })
+        .unwrap();
+        e.close().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<Json> = text.lines().map(|l| Json::parse(l).unwrap()).collect();
+        assert_eq!(lines[0].get("health").unwrap().as_str(), Some("degraded"));
+        assert_eq!(lines[1].get("health").unwrap().as_str(), Some("stalled"));
+        assert_eq!(
+            lines[1].get("lanes").unwrap().as_arr().unwrap()[0].get("health").unwrap().as_str(),
+            Some("stalled")
+        );
+    }
+
+    #[test]
+    fn usage_section_shape() {
+        let j = usage_json(&[true, false, true, true]);
+        assert_eq!(j.get("cores").unwrap().as_usize(), Some(4));
+        assert_eq!(j.get("busy").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("pct").unwrap().as_f64(), Some(75.0));
+        assert_eq!(j.get("per_core").unwrap().as_arr().unwrap().len(), 4);
+        assert_eq!(usage_json(&[]).get("pct").unwrap().as_f64(), Some(0.0));
+    }
+}

@@ -6,6 +6,12 @@
 //!   from a live [`crate::scheduler::PoolStats`];
 //! * [`UsageTrace::from_sim`] — sampled from a deterministic
 //!   [`crate::simsched::SimResult`] (virtual topology).
+//! * [`crate::obs::WallSnapshotter`] — the ops plane's telemetry
+//!   sampler accumulates the same [`UsageTrace`] while it writes each
+//!   busy-flag sample into the per-tick `utilization` section of the
+//!   `--telemetry-log` JSONL stream, so a serving or stream run gets
+//!   the Figure-8/9 core-usage data without a separate profiler
+//!   invocation.
 //!
 //! [`UsageTrace`] renders the paper's figures: total-CPU% over
 //! wall-clock (Figures 8/9) and per-core% (Figures 9b–12), as CSV for

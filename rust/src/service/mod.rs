@@ -27,7 +27,28 @@
 //! * [`slo`] — per-request latency tracking (enqueue→dispatch→
 //!   complete) rolled into p50/p95/p99 summaries per lane and in
 //!   aggregate, emitted as a deterministic JSON report with a
-//!   three-state `slo.status` (`met`/`missed`/`no-data`).
+//!   three-state `slo.status` (`met`/`missed`/`no-data`), plus a
+//!   **rolling** SLO window ([`slo::SloWindow`], `--slo-window N`)
+//!   evaluating the same target over the most recent N completions,
+//!   with a met/missed/no-data transition timeline in the report's
+//!   `slo.window` section.
+//!
+//! ## The ops plane ([`crate::obs`])
+//!
+//! Serving runs publish live telemetry: every lane feeds a
+//! [`crate::obs::Telemetry`] registry (queue depths, per-lane
+//! in-flight/completed, latency histograms, per-stage tallies, shed
+//! counters), which `--telemetry-log file.jsonl
+//! --telemetry-interval-ms N` turns into a periodic JSONL snapshot
+//! stream — emitted at modeled tick times under the virtual clock
+//! (byte-identical across replays) and by a real sampler thread with a
+//! per-core `utilization` section under wall. While the rolling SLO is
+//! missed, `--overload-policy` decides the fate of new arrivals:
+//! `none` (observe only — the default, byte-identical to pre-ops-plane
+//! runs), `reject-new` (shed at the door, counted as `rejected_shed`),
+//! or `degrade-to-front-only` (rewrite `full` requests to the cheap
+//! cache-warming front). Every shed decision is visible both live and
+//! in the final report's `overload` section.
 //!
 //! ## Two clocks
 //!
@@ -81,10 +102,10 @@
 //!   "evictions": 1, "lookups": 12, "hits": 9, "misses": 3,
 //!   "inserts": 4, "admission_rejects": 0, "too_large": 0,
 //!   "tiers": {
-//!     "serve":  {"lookups": 12, "hits": 9, "misses": 3, "inserts": 4,
-//!                "admission_rejects": 0, "too_large": 0},
-//!     "stream": {"lookups": 0, "hits": 0, "misses": 0, "inserts": 0,
-//!                "admission_rejects": 0, "too_large": 0}
+//!     "serve":  {"lookups": 12, "hits": 9, "hit_rate": 0.75, "misses": 3,
+//!                "inserts": 4, "admission_rejects": 0, "too_large": 0},
+//!     "stream": {"lookups": 0, "hits": 0, "hit_rate": 0, "misses": 0,
+//!                "inserts": 0, "admission_rejects": 0, "too_large": 0}
 //!   }
 //! }
 //! ```
@@ -179,4 +200,7 @@ pub use clock::{ClockMode, WallClock};
 pub use queue::{AdmissionQueue, RejectReason};
 pub use request::{Request, RequestKind, Shape, Trace};
 pub use server::{calibrate_for, install_sigint_drain, serve, ServeOptions};
-pub use slo::{CostModel, LaneReport, LatencyStats, LatencySummary, ServeReport, SloStatus};
+pub use slo::{
+    CostModel, LaneReport, LatencyStats, LatencySummary, ServeReport, SloStatus, SloWindow,
+    WindowReport, DEFAULT_SLO_WINDOW,
+};

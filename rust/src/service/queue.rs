@@ -14,6 +14,9 @@ pub enum RejectReason {
     QueueFull { depth: usize },
     /// The request exceeds the per-request pixel budget.
     Oversize { pixels: usize, max_pixels: usize },
+    /// The overload policy shed the arrival while the rolling SLO was
+    /// missed ([`crate::obs::OverloadPolicy::RejectNew`]).
+    Shed,
 }
 
 impl RejectReason {
@@ -21,6 +24,7 @@ impl RejectReason {
         match self {
             RejectReason::QueueFull { .. } => "queue-full",
             RejectReason::Oversize { .. } => "oversize",
+            RejectReason::Shed => "shed",
         }
     }
 }
@@ -32,6 +36,7 @@ impl std::fmt::Display for RejectReason {
             RejectReason::Oversize { pixels, max_pixels } => {
                 write!(f, "request too large ({pixels} px > {max_pixels} px budget)")
             }
+            RejectReason::Shed => write!(f, "shed by the overload policy (rolling SLO missed)"),
         }
     }
 }
@@ -49,6 +54,8 @@ pub struct AdmissionQueue {
     pub admitted: u64,
     pub rejected_full: u64,
     pub rejected_oversize: u64,
+    /// Arrivals shed by the overload policy before reaching the room.
+    pub rejected_shed: u64,
 }
 
 impl AdmissionQueue {
@@ -61,6 +68,7 @@ impl AdmissionQueue {
             admitted: 0,
             rejected_full: 0,
             rejected_oversize: 0,
+            rejected_shed: 0,
         }
     }
 
@@ -87,6 +95,15 @@ impl AdmissionQueue {
         Ok(())
     }
 
+    /// Count one arrival shed by the overload policy. Sheds happen
+    /// *before* the room (the request never occupies a slot) but are
+    /// part of the queue's conservation arithmetic:
+    /// `offered == admitted + rejected()`.
+    pub fn reject_shed(&mut self) -> RejectReason {
+        self.rejected_shed += 1;
+        RejectReason::Shed
+    }
+
     /// `n` requests left the waiting room (dispatched to a lane).
     pub fn release(&mut self, n: usize) {
         self.occupancy = self.occupancy.saturating_sub(n);
@@ -102,7 +119,7 @@ impl AdmissionQueue {
 
     /// Total rejections, all reasons.
     pub fn rejected(&self) -> u64 {
-        self.rejected_full + self.rejected_oversize
+        self.rejected_full + self.rejected_oversize + self.rejected_shed
     }
 }
 
@@ -149,5 +166,20 @@ mod tests {
     fn reasons_render() {
         assert_eq!(RejectReason::QueueFull { depth: 4 }.name(), "queue-full");
         assert!(RejectReason::QueueFull { depth: 4 }.to_string().contains("4"));
+        assert_eq!(RejectReason::Shed.name(), "shed");
+        assert!(RejectReason::Shed.to_string().contains("overload"));
+    }
+
+    #[test]
+    fn sheds_count_without_occupying_the_room() {
+        let mut q = AdmissionQueue::new(2);
+        assert!(q.try_admit(1).is_ok());
+        assert_eq!(q.reject_shed(), RejectReason::Shed);
+        assert_eq!(q.reject_shed(), RejectReason::Shed);
+        assert_eq!(q.occupancy(), 1, "shed arrivals never enter the room");
+        assert_eq!(q.rejected_shed, 2);
+        assert_eq!(q.rejected(), 2);
+        // Conservation at the queue: offered = admitted + rejected.
+        assert_eq!(q.admitted + q.rejected(), 3);
     }
 }

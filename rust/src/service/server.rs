@@ -55,7 +55,9 @@
 //! deterministic replay stays honest about the content digest the real
 //! path computes.
 
-use std::collections::{BTreeMap, VecDeque};
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap, VecDeque};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
@@ -68,12 +70,17 @@ use crate::coordinator::{CpuTopology, Detector, Planner};
 use crate::error::{Error, Result};
 use crate::image::synth::generate;
 use crate::image::ImageF32;
+use crate::obs::{
+    FaultManager, OverloadPolicy, ShedDecision, SnapshotEngine, Telemetry, TickInputs,
+    WallSnapshotter,
+};
+use crate::scheduler::PoolStats;
 use crate::service::batcher::{Batcher, FormedBatch};
 use crate::service::calibrate::{Calibration, DEFAULT_PROBE_SHAPES, PROBE_REPEATS};
 use crate::service::clock::{ClockMode, WallClock};
 use crate::service::queue::AdmissionQueue;
 use crate::service::request::{Request, RequestKind, Shape, Trace};
-use crate::service::slo::{CostModel, LaneReport, LatencyStats, ServeReport};
+use crate::service::slo::{CostModel, LaneReport, LatencyStats, ServeReport, SloWindow, WindowReport};
 
 /// Virtual per-dispatch overhead (scheduling + lane wake-up), ns —
 /// used when no [`Calibration`] is installed.
@@ -151,6 +158,18 @@ pub struct ServeOptions {
     pub interrupt: Option<&'static AtomicBool>,
     /// Echoed into the report for provenance.
     pub seed: u64,
+    /// Telemetry JSONL sink (`--telemetry-log`); `None` disables the
+    /// ops plane's snapshot stream (the registry still runs — it is
+    /// how the report's overload section is fed).
+    pub telemetry_log: Option<PathBuf>,
+    /// Snapshot tick interval in the active clock's nanoseconds
+    /// (`--telemetry-interval-ms`).
+    pub telemetry_interval_ns: u64,
+    /// What to do with new arrivals while the rolling SLO is missed
+    /// (`--overload-policy`).
+    pub overload_policy: OverloadPolicy,
+    /// Rolling SLO window capacity in completions (`--slo-window`).
+    pub slo_window: usize,
 }
 
 impl ServeOptions {
@@ -173,6 +192,14 @@ impl ServeOptions {
             params: cfg.params,
             interrupt: None,
             seed: cfg.seed,
+            telemetry_log: if cfg.telemetry_log.is_empty() {
+                None
+            } else {
+                Some(PathBuf::from(&cfg.telemetry_log))
+            },
+            telemetry_interval_ns: (cfg.telemetry_interval_ms.max(0.0) * 1e6) as u64,
+            overload_policy: cfg.overload_policy,
+            slo_window: cfg.slo_window.max(1),
         }
     }
 
@@ -465,18 +492,39 @@ impl LaneStats {
         }
     }
 
-    fn note_stage_runs(&mut self, records: &[crate::canny::StageRecord]) {
+    /// Tally executed stage spans, mirroring them into the live
+    /// telemetry registry when one is attached. `measured` gates the
+    /// wall/cpu columns: wall drivers publish the measured spans,
+    /// virtual replays publish runs only (zero time — measured
+    /// durations would break byte-identical replay, the same rule the
+    /// end-of-run report follows).
+    fn note_stage_runs(
+        &mut self,
+        records: &[crate::canny::StageRecord],
+        tel: Option<&Telemetry>,
+        measured: bool,
+    ) {
         for r in records {
             *self.stage_runs.entry(r.span_name()).or_insert(0) += 1;
+            if let Some(t) = tel {
+                let (wall, cpu) = if measured { (r.wall_ns, r.cpu_ns) } else { (0, 0) };
+                t.note_stage(r.span_name(), wall, cpu);
+            }
         }
     }
 
     /// Run the front over `img` and return its suppressed-magnitude
     /// map, recording the executed stages.
-    fn run_front(&mut self, det: &Detector, img: &ImageF32) -> Result<ImageF32> {
+    fn run_front(
+        &mut self,
+        det: &Detector,
+        img: &ImageF32,
+        tel: Option<&Telemetry>,
+        measured: bool,
+    ) -> Result<ImageF32> {
         let plan = det.plan().stop_after(StageKind::Nms);
         let mut out = det.run_plan(&plan, Some(img), det.params())?;
-        self.note_stage_runs(&out.records);
+        self.note_stage_runs(&out.records, tel, measured);
         out.take_suppressed()
             .ok_or_else(|| Error::Scheduler("front-only plan yielded no suppressed map".into()))
     }
@@ -491,6 +539,8 @@ impl LaneStats {
         cache: &ArtifactCache,
         opts: &ServeOptions,
         batch: &FormedBatch,
+        tel: Option<&Telemetry>,
+        measured: bool,
     ) -> Result<()> {
         let Some(det) = det else {
             return Ok(());
@@ -500,12 +550,12 @@ impl LaneStats {
                 RequestKind::Full => {
                     let img = generate(req.scene, req.width, req.height);
                     let out = det.detect_full(&img, det.params())?;
-                    self.note_stage_runs(&out.records);
+                    self.note_stage_runs(&out.records, tel, measured);
                     self.edge_pixels += out.edges.count_edges() as u64;
                 }
                 RequestKind::FrontOnly => {
                     let img = generate(req.scene, req.width, req.height);
-                    let nm = self.run_front(det, &img)?;
+                    let nm = self.run_front(det, &img, tel, measured)?;
                     if cache.enabled() {
                         offer_front(cache, opts, &img, nm);
                     }
@@ -532,7 +582,7 @@ impl LaneStats {
                             // Miss: compute the front once, offer it,
                             // then resume — the next re-threshold of
                             // this content hits, on any lane.
-                            let nm = self.run_front(det, &img)?;
+                            let nm = self.run_front(det, &img, tel, measured)?;
                             if cache.enabled() {
                                 offer_front(cache, opts, &img, nm.clone());
                             }
@@ -541,7 +591,7 @@ impl LaneStats {
                     };
                     let plan = det.plan().from_suppressed(nm);
                     let out = det.run_plan(&plan, None, &params)?;
-                    self.note_stage_runs(&out.records);
+                    self.note_stage_runs(&out.records, tel, measured);
                     let edges = out.edges().ok_or_else(|| {
                         Error::Scheduler("re-threshold plan yielded no edges".into())
                     })?;
@@ -553,12 +603,58 @@ impl LaneStats {
     }
 }
 
-/// Driver-level totals the lanes cannot see (arrival accounting and
-/// the end-of-run cache snapshot).
+/// One arrival through the fault manager and the intake, with the
+/// telemetry that goes with it — the one admission path both drivers
+/// share, so a shed decision is counted identically under either
+/// clock. Returns whatever batch the admission closed.
+fn admit_one(
+    intake: &mut Intake,
+    fault: &FaultManager,
+    slo_missed: bool,
+    telemetry: &Telemetry,
+    mut req: Request,
+    now_ns: u64,
+) -> Option<FormedBatch> {
+    telemetry.offered.inc();
+    match fault.decide(slo_missed, matches!(req.kind, RequestKind::Full)) {
+        ShedDecision::Reject => {
+            intake.queue.reject_shed();
+            telemetry.rejected.inc();
+            telemetry.shed_rejected.inc();
+            return None;
+        }
+        ShedDecision::Degrade => {
+            // The client still gets an answer — the cache-warming
+            // front-only form at a fraction of the cost.
+            req.kind = RequestKind::FrontOnly;
+            telemetry.shed_degraded.inc();
+        }
+        ShedDecision::Admit => {}
+    }
+    let admitted_before = intake.queue.admitted;
+    let formed = intake.arrive(req, now_ns);
+    if intake.queue.admitted > admitted_before {
+        telemetry.admitted.inc();
+    } else {
+        telemetry.rejected.inc();
+    }
+    telemetry.queue_depth.set(intake.queue.occupancy() as u64);
+    telemetry.queue_high_water.raise(intake.queue.high_water as u64);
+    formed
+}
+
+/// Driver-level totals the lanes cannot see (arrival accounting, the
+/// end-of-run cache snapshot and the ops plane's final state).
 struct RunTotals {
     offered: u64,
     interrupted: bool,
     cache: CacheSnapshot,
+    /// Arrivals completed in degraded (front-only) form by the
+    /// overload policy.
+    shed_degraded: u64,
+    /// The rolling SLO window's end state (quantiles, status,
+    /// transition timeline).
+    slo_window: WindowReport,
 }
 
 /// Roll driver results into the report (identical schema either way).
@@ -612,6 +708,9 @@ fn build_report(
         admitted: intake.queue.admitted,
         rejected_full: intake.queue.rejected_full,
         rejected_oversize: intake.queue.rejected_oversize,
+        rejected_shed: intake.queue.rejected_shed,
+        shed_degraded: totals.shed_degraded,
+        overload_policy: opts.overload_policy.name().to_string(),
         completed,
         queue_depth: intake.queue.depth(),
         queue_high_water: intake.queue.high_water,
@@ -625,6 +724,7 @@ fn build_report(
         queue_wait: queue_wait.summary(),
         lanes: lane_reports,
         slo_target_p99_ns: opts.slo_p99_ns,
+        slo_window: totals.slo_window,
         cost_model: opts.cost_model(),
         kinds,
         stage_runs,
@@ -651,6 +751,14 @@ pub fn serve(label: &str, trace: &Trace, opts: &ServeOptions) -> Result<ServeRep
 ///   a lane freed at `t` can take a batch formed at `t`;
 /// * dispatch is FIFO over closed batches onto the lowest-numbered
 ///   idle lane.
+///
+/// The ops plane rides the same event loop: modeled completions are
+/// queued on a min-heap and folded into the telemetry registry and the
+/// rolling SLO window in `(complete_ns, lane)` order, interleaved with
+/// snapshot ticks at their grid times (completions first at an equal
+/// instant). Every quantity on a telemetry line is modeled, so two
+/// replays of the same trace write byte-identical JSONL — the
+/// determinism contract extends from the report to the live stream.
 fn serve_virtual(label: &str, trace: &Trace, opts: &ServeOptions) -> Result<ServeReport> {
     let (engine, workers_per_lane, params) = plan_lanes(trace, opts);
     struct VirtualLane {
@@ -658,6 +766,58 @@ fn serve_virtual(label: &str, trace: &Trace, opts: &ServeOptions) -> Result<Serv
         busy_until_ns: u64,
         stats: LaneStats,
     }
+    /// One modeled batch completion, ordered by time then lane (the
+    /// heap key) so equal-time completions fold deterministically.
+    #[derive(PartialEq, Eq, PartialOrd, Ord)]
+    struct Completion {
+        complete_ns: u64,
+        lane: usize,
+        latencies: Vec<u64>,
+    }
+    /// Fold every completion and snapshot tick due at or before
+    /// `up_to_ns` into the registry/window/log, in time order.
+    fn drain_obs(
+        up_to_ns: u64,
+        completions: &mut BinaryHeap<Reverse<Completion>>,
+        snap: &mut SnapshotEngine,
+        window: &mut SloWindow,
+        telemetry: &Telemetry,
+        cache: &ArtifactCache,
+        shedding_possible: bool,
+    ) -> Result<()> {
+        loop {
+            let next_completion =
+                completions.peek().map(|Reverse(c)| c.complete_ns).unwrap_or(u64::MAX);
+            let next_tick = snap.next_tick_ns();
+            if next_completion > up_to_ns && next_tick > up_to_ns {
+                return Ok(());
+            }
+            if next_completion <= next_tick {
+                let Reverse(c) = completions.pop().expect("peeked non-empty");
+                let n = c.latencies.len() as u64;
+                let lane = telemetry.lane(c.lane);
+                lane.completed.add(n);
+                lane.inflight.sub(n);
+                lane.heartbeat_ns.raise(c.complete_ns);
+                telemetry.completed.add(n);
+                for &lat in &c.latencies {
+                    telemetry.latency.record(lat);
+                    window.record(c.complete_ns, lat);
+                }
+            } else if let Some(t) = snap.take_tick(up_to_ns) {
+                snap.emit(TickInputs {
+                    t_ns: t,
+                    telemetry,
+                    cache: cache.snapshot(),
+                    slo: window.to_json(),
+                    slo_missed: window.missed(),
+                    shedding_possible,
+                    utilization: None,
+                })?;
+            }
+        }
+    }
+
     // One shared tier across every lane; the single-threaded replay
     // touches it in a deterministic order, so the report's `cache`
     // section is as replayable as the latencies.
@@ -670,6 +830,16 @@ fn serve_virtual(label: &str, trace: &Trace, opts: &ServeOptions) -> Result<Serv
             stats: LaneStats::default(),
         });
     }
+
+    let telemetry = Telemetry::new("serve", opts.lanes);
+    let mut window = SloWindow::new(opts.slo_p99_ns, opts.slo_window);
+    let fault = FaultManager::new(opts.overload_policy);
+    let mut snap = SnapshotEngine::from_options(
+        opts.telemetry_log.as_deref(),
+        opts.telemetry_interval_ns,
+        opts.overload_policy.name(),
+    )?;
+    let mut completions: BinaryHeap<Reverse<Completion>> = BinaryHeap::new();
 
     let mut intake = Intake::new(opts);
     let mut ready: VecDeque<FormedBatch> = VecDeque::new();
@@ -687,10 +857,32 @@ fn serve_virtual(label: &str, trace: &Trace, opts: &ServeOptions) -> Result<Serv
             let service_ns = opts.service_ns_batch(batch.kind, batch.pixels(), batch.len());
             let complete_ns = now + service_ns;
             intake.release(batch.len());
+            telemetry.queue_depth.set(intake.queue.occupancy() as u64);
+            let tl = telemetry.lane(idx);
+            tl.batches.inc();
+            tl.inflight.add(batch.len() as u64);
+            tl.busy_ns.add(service_ns);
+            tl.heartbeat_ns.raise(now);
+            completions.push(Reverse(Completion {
+                complete_ns,
+                lane: idx,
+                latencies: batch
+                    .requests
+                    .iter()
+                    .map(|r| complete_ns.saturating_sub(r.arrival_ns))
+                    .collect(),
+            }));
             let lane = &mut lanes[idx];
             lane.busy_until_ns = complete_ns;
             lane.stats.record_batch(&batch, now, complete_ns);
-            lane.stats.execute_batch(lane.det.as_ref(), &cache, opts, &batch)?;
+            lane.stats.execute_batch(
+                lane.det.as_ref(),
+                &cache,
+                opts,
+                &batch,
+                Some(&telemetry),
+                false,
+            )?;
         }
 
         // Next event: arrival, batch-window deadline, or (if work is
@@ -714,13 +906,28 @@ fn serve_virtual(label: &str, trace: &Trace, opts: &ServeOptions) -> Result<Serv
         }
         now = now.max(t);
 
+        // Completions (and any telemetry ticks) up to `now` land before
+        // new arrivals are judged — the fault manager sees the same
+        // window state a wall driver's lanes would have published.
+        drain_obs(
+            now,
+            &mut completions,
+            &mut snap,
+            &mut window,
+            &telemetry,
+            &cache,
+            fault.active(),
+        )?;
+
         for b in intake.expire(now) {
             ready.push_back(b);
         }
         while next < trace.requests.len() && trace.requests[next].arrival_ns <= now {
             let req = trace.requests[next];
             next += 1;
-            if let Some(b) = intake.arrive(req, req.arrival_ns) {
+            if let Some(b) =
+                admit_one(&mut intake, &fault, window.missed(), &telemetry, req, req.arrival_ns)
+            {
                 ready.push_back(b);
             }
         }
@@ -728,9 +935,43 @@ fn serve_virtual(label: &str, trace: &Trace, opts: &ServeOptions) -> Result<Serv
     debug_assert_eq!(intake.batcher.pending(), 0);
     debug_assert_eq!(intake.queue.occupancy(), 0);
 
+    // Fold the in-flight tail, then stamp the end state (the last line
+    // of the log always shows the completed run). `now` can be past the
+    // last completion when a tail of arrivals was shed without ever
+    // occupying a lane — the end stamp is the later of the two, so
+    // `t_ns` stays monotonic across the file.
+    let end_ns = now.max(lanes.iter().map(|l| l.busy_until_ns).max().unwrap_or(0));
+    drain_obs(
+        end_ns,
+        &mut completions,
+        &mut snap,
+        &mut window,
+        &telemetry,
+        &cache,
+        fault.active(),
+    )?;
+    debug_assert!(completions.is_empty());
+    if snap.enabled() {
+        snap.emit(TickInputs {
+            t_ns: end_ns,
+            telemetry: &telemetry,
+            cache: cache.snapshot(),
+            slo: window.to_json(),
+            slo_missed: window.missed(),
+            shedding_possible: fault.active(),
+            utilization: None,
+        })?;
+    }
+    snap.close()?;
+
     let stats = lanes.into_iter().map(|l| l.stats).collect();
-    let totals =
-        RunTotals { offered: trace.len() as u64, interrupted: false, cache: cache.snapshot() };
+    let totals = RunTotals {
+        offered: trace.len() as u64,
+        interrupted: false,
+        cache: cache.snapshot(),
+        shed_degraded: telemetry.shed_degraded.get(),
+        slo_window: window.report(),
+    };
     Ok(build_report(label, opts, (engine, workers_per_lane), totals, &intake, stats))
 }
 
@@ -751,12 +992,16 @@ struct WallDispatch {
     closed: bool,
 }
 
+#[allow(clippy::too_many_arguments)]
 fn wall_lane(
+    lane_id: usize,
     det: Option<Detector>,
     opts: &ServeOptions,
     shared: &WallShared,
     cache: &ArtifactCache,
     clock: WallClock,
+    telemetry: &Telemetry,
+    window: &Mutex<SloWindow>,
 ) -> Result<LaneStats> {
     let mut stats = LaneStats::default();
     loop {
@@ -775,10 +1020,19 @@ fn wall_lane(
         let Some(batch) = batch else {
             return Ok(stats);
         };
-        shared.intake.lock().expect("intake lock").release(batch.len());
+        {
+            let mut intake = shared.intake.lock().expect("intake lock");
+            intake.release(batch.len());
+            telemetry.queue_depth.set(intake.queue.occupancy() as u64);
+        }
+        let n = batch.len() as u64;
+        let tl = telemetry.lane(lane_id);
         let dispatch_ns = clock.now_ns();
+        tl.batches.inc();
+        tl.inflight.add(n);
+        tl.heartbeat_ns.raise(dispatch_ns);
         if opts.execute {
-            stats.execute_batch(det.as_ref(), cache, opts, &batch)?;
+            stats.execute_batch(det.as_ref(), cache, opts, &batch, Some(telemetry), true)?;
         } else {
             // Scheduling-only runs still occupy the lane for the
             // modeled service time so wall studies work without
@@ -787,7 +1041,19 @@ fn wall_lane(
                 opts.service_ns_batch(batch.kind, batch.pixels(), batch.len()),
             ));
         }
-        stats.record_batch(&batch, dispatch_ns, clock.now_ns());
+        let complete_ns = clock.now_ns();
+        stats.record_batch(&batch, dispatch_ns, complete_ns);
+        tl.busy_ns.add(complete_ns.saturating_sub(dispatch_ns));
+        tl.completed.add(n);
+        tl.inflight.sub(n);
+        tl.heartbeat_ns.raise(complete_ns);
+        telemetry.completed.add(n);
+        let mut w = window.lock().expect("slo window lock");
+        for req in &batch.requests {
+            let lat = complete_ns.saturating_sub(req.arrival_ns);
+            telemetry.latency.record(lat);
+            w.record(complete_ns, lat);
+        }
     }
 }
 
@@ -804,6 +1070,9 @@ fn serve_wall(label: &str, trace: &Trace, opts: &ServeOptions) -> Result<ServeRe
     for _ in 0..opts.lanes {
         dets.push(build_lane_detector(engine, workers_per_lane, params, opts.execute)?);
     }
+    // Per-lane pool handles for the telemetry sampler's utilization
+    // section (empty when `execute` is off — nothing computes).
+    let pools: Vec<PoolStats> = dets.iter().flatten().map(|d| d.pool_stats()).collect();
 
     let shared = Arc::new(WallShared {
         intake: Mutex::new(Intake::new(opts)),
@@ -813,13 +1082,42 @@ fn serve_wall(label: &str, trace: &Trace, opts: &ServeOptions) -> Result<ServeRe
     // One shared tier drained by every lane thread — this is where the
     // sharded locking earns its keep (real cross-lane contention).
     let cache = build_cache(opts);
+    let telemetry = Arc::new(Telemetry::new("serve", opts.lanes));
+    let window = Arc::new(Mutex::new(SloWindow::new(opts.slo_p99_ns, opts.slo_window)));
+    let fault = FaultManager::new(opts.overload_policy);
+    let snap = SnapshotEngine::from_options(
+        opts.telemetry_log.as_deref(),
+        opts.telemetry_interval_ns,
+        opts.overload_policy.name(),
+    )?;
     let clock = WallClock::start();
+    let snapshotter = {
+        let telemetry = Arc::clone(&telemetry);
+        let cache = Arc::clone(&cache);
+        let window = Arc::clone(&window);
+        WallSnapshotter::start(
+            snap,
+            telemetry,
+            pools,
+            Box::new(move || clock.now_ns()),
+            Box::new(move || cache.snapshot()),
+            Box::new(move || {
+                let w = window.lock().expect("slo window lock");
+                (w.to_json(), w.missed())
+            }),
+            fault.active(),
+        )
+    };
     let mut handles = Vec::with_capacity(opts.lanes);
-    for det in dets {
+    for (lane_id, det) in dets.into_iter().enumerate() {
         let shared = Arc::clone(&shared);
         let cache = Arc::clone(&cache);
+        let telemetry = Arc::clone(&telemetry);
+        let window = Arc::clone(&window);
         let opts = opts.clone();
-        handles.push(std::thread::spawn(move || wall_lane(det, &opts, &shared, &cache, clock)));
+        handles.push(std::thread::spawn(move || {
+            wall_lane(lane_id, det, &opts, &shared, &cache, clock, &telemetry, &window)
+        }));
     }
 
     // Arrival replay on this thread: sleep to the next event (arrival
@@ -864,6 +1162,10 @@ fn serve_wall(label: &str, trace: &Trace, opts: &ServeOptions) -> Result<ServeRe
             }
         }
         let now = clock.now_ns();
+        // Read the rolling SLO status before taking the intake lock
+        // (lanes take the window lock on completion; never nested with
+        // the intake lock on either side).
+        let slo_missed = window.lock().expect("slo window lock").missed();
         let mut formed = Vec::new();
         {
             let mut intake = shared.intake.lock().expect("intake lock");
@@ -874,7 +1176,8 @@ fn serve_wall(label: &str, trace: &Trace, opts: &ServeOptions) -> Result<ServeRe
                 // Window deadlines run on the wall clock (`now`), so a
                 // late-woken arrival can never create an already-expired
                 // group.
-                if let Some(b) = intake.arrive(req, now) {
+                if let Some(b) = admit_one(&mut intake, &fault, slo_missed, &telemetry, req, now)
+                {
                     formed.push(b);
                 }
             }
@@ -925,6 +1228,10 @@ fn serve_wall(label: &str, trace: &Trace, opts: &ServeOptions) -> Result<ServeRe
             }
         }
     }
+    // Lanes have quiesced: stop the telemetry sampler (it emits one
+    // final line first, so the log always ends on the drained state).
+    let (snap, _usage) = snapshotter.finish(label)?;
+    snap.close()?;
     if let Some(e) = first_err {
         return Err(e);
     }
@@ -933,7 +1240,13 @@ fn serve_wall(label: &str, trace: &Trace, opts: &ServeOptions) -> Result<ServeRe
     debug_assert_eq!(intake.queue.occupancy(), 0);
     // `offered` counts arrivals that reached an admission decision —
     // equal to the trace length unless the replay was interrupted.
-    let totals = RunTotals { offered: next as u64, interrupted, cache: cache.snapshot() };
+    let totals = RunTotals {
+        offered: next as u64,
+        interrupted,
+        cache: cache.snapshot(),
+        shed_degraded: telemetry.shed_degraded.get(),
+        slo_window: window.lock().expect("slo window lock").report(),
+    };
     Ok(build_report(label, opts, (engine, workers_per_lane), totals, &intake, stats))
 }
 

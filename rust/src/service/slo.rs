@@ -5,8 +5,17 @@
 //! `clock` field says whether the numbers are modeled or measured, and
 //! the `calibration` section says which cost model produced (or would
 //! predict) them.
+//!
+//! End-of-run quantiles answer "did the run meet its SLO"; the
+//! **rolling window** ([`SloWindow`]) answers "is it meeting it *right
+//! now*": a ring of the most recent completions, re-evaluated on every
+//! record into a windowed p50/p95/p99 and a
+//! `met | missed | no-data` status timeline. The ops plane
+//! ([`crate::obs`]) reads the window live — each telemetry tick carries
+//! its JSON, and the fault manager sheds new arrivals while it reports
+//! `missed` — and the final report carries it as `slo.window`.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 
 use crate::cache::CacheSnapshot;
 use crate::service::calibrate::Calibration;
@@ -115,6 +124,178 @@ impl SloStatus {
     }
 }
 
+/// Default rolling-window capacity (`--slo-window`).
+pub const DEFAULT_SLO_WINDOW: usize = 64;
+
+/// Cap on the recorded status timeline: a pathological run flapping
+/// met↔missed every completion must not grow the report without bound.
+/// Transitions past the cap are counted in `transitions_truncated`.
+pub const MAX_TRANSITIONS: usize = 256;
+
+/// Rolling-window SLO evaluation: a ring of the most recent completion
+/// latencies, re-evaluated on every [`SloWindow::record`] into exact
+/// nearest-rank windowed quantiles and a three-state status. Status
+/// *changes* are appended to a timeline stamped with the completion
+/// time that caused them — under the virtual clock these are modeled
+/// times, so the timeline is deterministic across replays.
+#[derive(Clone, Debug)]
+pub struct SloWindow {
+    target_p99_ns: u64,
+    capacity: usize,
+    ring: VecDeque<u64>,
+    status: SloStatus,
+    transitions: Vec<(u64, SloStatus)>,
+    truncated: u64,
+}
+
+impl SloWindow {
+    /// `target_p99_ns == 0` means "no target": the window still tracks
+    /// quantiles but the status stays `no-data` (the stream tier with
+    /// no frame budget). Capacity is clamped to at least 1.
+    pub fn new(target_p99_ns: u64, capacity: usize) -> SloWindow {
+        SloWindow {
+            target_p99_ns,
+            capacity: capacity.max(1),
+            ring: VecDeque::new(),
+            status: SloStatus::NoData,
+            transitions: Vec::new(),
+            truncated: 0,
+        }
+    }
+
+    pub fn target_p99_ns(&self) -> u64 {
+        self.target_p99_ns
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Completions currently in the window.
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ring.is_empty()
+    }
+
+    /// Fold one completion (at time `t_ns`, with end-to-end latency
+    /// `latency_ns`) into the window and re-evaluate the status.
+    pub fn record(&mut self, t_ns: u64, latency_ns: u64) {
+        if self.ring.len() == self.capacity {
+            self.ring.pop_front();
+        }
+        self.ring.push_back(latency_ns);
+        let next = if self.target_p99_ns == 0 {
+            SloStatus::NoData
+        } else if self.summary().p99_ns <= self.target_p99_ns {
+            SloStatus::Met
+        } else {
+            SloStatus::Missed
+        };
+        if next != self.status {
+            if self.transitions.len() < MAX_TRANSITIONS {
+                self.transitions.push((t_ns, next));
+            } else {
+                self.truncated += 1;
+            }
+            self.status = next;
+        }
+    }
+
+    pub fn status(&self) -> SloStatus {
+        self.status
+    }
+
+    /// Is the rolling SLO currently missed? (The fault manager's shed
+    /// signal.)
+    pub fn missed(&self) -> bool {
+        self.status == SloStatus::Missed
+    }
+
+    /// Exact nearest-rank quantiles over the current window contents
+    /// (the same convention as [`LatencyStats::summary`]).
+    pub fn summary(&self) -> LatencySummary {
+        let mut stats = LatencyStats::new();
+        for &ns in &self.ring {
+            stats.record(ns);
+        }
+        stats.summary()
+    }
+
+    pub fn transitions(&self) -> &[(u64, SloStatus)] {
+        &self.transitions
+    }
+
+    /// Freeze the window into its report form.
+    pub fn report(&self) -> WindowReport {
+        WindowReport {
+            capacity: self.capacity,
+            target_p99_ns: self.target_p99_ns,
+            summary: self.summary(),
+            status: self.status,
+            transitions: self.transitions.clone(),
+            transitions_truncated: self.truncated,
+        }
+    }
+
+    /// The `slo` telemetry-tick section / the report's `slo.window`.
+    pub fn to_json(&self) -> Json {
+        self.report().to_json()
+    }
+}
+
+/// A frozen [`SloWindow`]: what the final report's `slo.window` section
+/// and each telemetry tick's `slo` section carry.
+#[derive(Clone, Debug)]
+pub struct WindowReport {
+    pub capacity: usize,
+    pub target_p99_ns: u64,
+    /// Exact quantiles over the window contents at freeze time.
+    pub summary: LatencySummary,
+    pub status: SloStatus,
+    /// `(t_ns, status)` timeline of status *changes*, capped at
+    /// [`MAX_TRANSITIONS`].
+    pub transitions: Vec<(u64, SloStatus)>,
+    pub transitions_truncated: u64,
+}
+
+impl WindowReport {
+    /// The no-completions window (reports built without a live window).
+    pub fn empty(target_p99_ns: u64, capacity: usize) -> WindowReport {
+        SloWindow::new(target_p99_ns, capacity).report()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let num = |v: u64| Json::Num(v as f64);
+        let mut m = BTreeMap::new();
+        m.insert("window".into(), Json::Num(self.capacity as f64));
+        m.insert("target_p99_ns".into(), num(self.target_p99_ns));
+        m.insert("n".into(), Json::Num(self.summary.n as f64));
+        m.insert("p50_ns".into(), num(self.summary.p50_ns));
+        m.insert("p95_ns".into(), num(self.summary.p95_ns));
+        m.insert("p99_ns".into(), num(self.summary.p99_ns));
+        m.insert("status".into(), Json::Str(self.status.name().into()));
+        m.insert(
+            "transitions".into(),
+            Json::Arr(
+                self.transitions
+                    .iter()
+                    .map(|(t, s)| {
+                        let mut tm = BTreeMap::new();
+                        tm.insert("status".into(), Json::Str(s.name().into()));
+                        tm.insert("t_ns".into(), num(*t));
+                        Json::Obj(tm)
+                    })
+                    .collect(),
+            ),
+        );
+        m.insert("transitions_truncated".into(), num(self.transitions_truncated));
+        Json::Obj(m)
+    }
+}
+
 /// Which service-cost model timed (virtual) or would predict (wall) the
 /// run — echoed in the report's `calibration` section.
 #[derive(Clone, Debug)]
@@ -170,6 +351,17 @@ pub struct ServeReport {
     pub admitted: u64,
     pub rejected_full: u64,
     pub rejected_oversize: u64,
+    /// Arrivals turned away by the overload policy (`reject-new` while
+    /// the rolling SLO was missed). Part of [`ServeReport::rejected`]:
+    /// conservation (`offered == completed + rejected`) still holds.
+    pub rejected_shed: u64,
+    /// `full` arrivals rewritten to `front-only` by the
+    /// `degrade-to-front-only` policy (these complete, in degraded
+    /// form).
+    pub shed_degraded: u64,
+    /// The overload policy in effect ([`crate::obs::OverloadPolicy`]
+    /// name).
+    pub overload_policy: String,
     pub completed: u64,
     pub queue_depth: usize,
     pub queue_high_water: usize,
@@ -191,6 +383,9 @@ pub struct ServeReport {
     pub queue_wait: LatencySummary,
     pub lanes: Vec<LaneReport>,
     pub slo_target_p99_ns: u64,
+    /// The rolling SLO window frozen at run end: windowed quantiles,
+    /// live status, and the met/missed/no-data transition timeline.
+    pub slo_window: WindowReport,
     /// The service-cost model in effect (see [`CostModel`]).
     pub cost_model: CostModel,
     /// Completed requests per [`RequestKind`](crate::service::RequestKind)
@@ -208,9 +403,9 @@ pub struct ServeReport {
 }
 
 impl ServeReport {
-    /// Total rejections, all reasons.
+    /// Total rejections, all reasons (queue-full, oversize, shed).
     pub fn rejected(&self) -> u64 {
-        self.rejected_full + self.rejected_oversize
+        self.rejected_full + self.rejected_oversize + self.rejected_shed
     }
 
     /// Three-state SLO verdict on the aggregate p99. Zero completions
@@ -274,7 +469,14 @@ impl ServeReport {
         queue.insert("high_water".into(), Json::Num(self.queue_high_water as f64));
         queue.insert("rejected_full".into(), num(self.rejected_full));
         queue.insert("rejected_oversize".into(), num(self.rejected_oversize));
+        queue.insert("rejected_shed".into(), num(self.rejected_shed));
         m.insert("queue".into(), Json::Obj(queue));
+
+        let mut overload = BTreeMap::new();
+        overload.insert("policy".into(), Json::Str(self.overload_policy.clone()));
+        overload.insert("shed_degraded".into(), num(self.shed_degraded));
+        overload.insert("shed_rejected".into(), num(self.rejected_shed));
+        m.insert("overload".into(), Json::Obj(overload));
 
         let mut batch = BTreeMap::new();
         batch.insert("window_ns".into(), num(self.batch_window_ns));
@@ -324,6 +526,7 @@ impl ServeReport {
         slo.insert("target_p99_ns".into(), num(self.slo_target_p99_ns));
         slo.insert("p99_ns".into(), num(self.latency.p99_ns));
         slo.insert("status".into(), Json::Str(self.slo_status().name().into()));
+        slo.insert("window".into(), self.slo_window.to_json());
         m.insert("slo".into(), Json::Obj(slo));
 
         Json::Obj(m)
@@ -413,6 +616,9 @@ mod tests {
             admitted: 8,
             rejected_full: 2,
             rejected_oversize: 0,
+            rejected_shed: 0,
+            shed_degraded: 0,
+            overload_policy: "none".into(),
             completed: 8,
             queue_depth: 4,
             queue_high_water: 4,
@@ -432,6 +638,7 @@ mod tests {
                 latency: LatencySummary::default(),
             }],
             slo_target_p99_ns: 50_000_000,
+            slo_window: WindowReport::empty(50_000_000, DEFAULT_SLO_WINDOW),
             cost_model: CostModel::Synthetic { overhead_ns: 100_000, cost_ns_per_pixel: 4 },
             kinds: [("full".to_string(), 8u64)].into_iter().collect(),
             stage_runs: BTreeMap::new(),
@@ -481,9 +688,116 @@ mod tests {
         let lanes = j.get("lanes").unwrap().as_arr().unwrap();
         assert!(lanes[0].get("latency_ns").unwrap().get("p99").is_some());
         assert_eq!(j.get("slo").unwrap().get("status").unwrap().as_str(), Some("met"));
+        let window = j.get("slo").unwrap().get("window").unwrap();
+        assert_eq!(window.get("status").unwrap().as_str(), Some("no-data"));
+        assert_eq!(window.get("window").unwrap().as_usize(), Some(DEFAULT_SLO_WINDOW));
+        assert_eq!(window.get("transitions").unwrap().as_arr().unwrap().len(), 0);
+        let overload = j.get("overload").unwrap();
+        assert_eq!(overload.get("policy").unwrap().as_str(), Some("none"));
+        assert_eq!(overload.get("shed_rejected").unwrap().as_usize(), Some(0));
+        assert_eq!(j.get("queue").unwrap().get("rejected_shed").unwrap().as_usize(), Some(0));
         // The dump round-trips through the parser.
         let text = report().to_json_string();
         assert_eq!(Json::parse(&text).unwrap(), j);
+    }
+
+    #[test]
+    fn shed_rejections_count_toward_conservation() {
+        let mut r = report();
+        r.rejected_shed = 3;
+        r.offered = 13;
+        assert_eq!(r.rejected(), 5);
+        assert_eq!(r.offered, r.completed + r.rejected());
+        let j = r.to_json();
+        assert_eq!(j.get("rejected").unwrap().as_usize(), Some(5));
+        assert_eq!(j.get("overload").unwrap().get("shed_rejected").unwrap().as_usize(), Some(3));
+    }
+
+    #[test]
+    fn window_transitions_met_missed_met() {
+        // Capacity 4, target 100ns: a latency step up then back down
+        // must walk the status met -> missed -> met with timestamps.
+        let mut w = SloWindow::new(100, 4);
+        assert_eq!(w.status(), SloStatus::NoData);
+        w.record(10, 50);
+        w.record(20, 60);
+        assert_eq!(w.status(), SloStatus::Met);
+        // Step: slow completions flood the window.
+        w.record(30, 500);
+        assert_eq!(w.status(), SloStatus::Missed);
+        assert!(w.missed());
+        w.record(40, 600);
+        // Recovery: fast completions push the slow ones out of the ring.
+        for t in [50, 60, 70, 80] {
+            w.record(t, 40);
+        }
+        assert_eq!(w.status(), SloStatus::Met);
+        let transitions: Vec<_> = w.transitions().to_vec();
+        assert_eq!(
+            transitions,
+            vec![(10, SloStatus::Met), (30, SloStatus::Missed), (80, SloStatus::Met)]
+        );
+        let j = w.to_json();
+        assert_eq!(j.get("status").unwrap().as_str(), Some("met"));
+        let ts = j.get("transitions").unwrap().as_arr().unwrap();
+        assert_eq!(ts.len(), 3);
+        assert_eq!(ts[1].get("status").unwrap().as_str(), Some("missed"));
+        assert_eq!(ts[1].get("t_ns").unwrap().as_usize(), Some(30));
+    }
+
+    #[test]
+    fn window_nearest_rank_edges() {
+        // n = 1: the single sample is every quantile; it alone decides.
+        let mut w = SloWindow::new(100, 8);
+        w.record(1, 101);
+        assert_eq!(w.status(), SloStatus::Missed);
+        assert_eq!(w.summary().p99_ns, 101);
+        assert_eq!(w.summary().n, 1);
+
+        // Window smaller than the completion stream: only the last
+        // `capacity` samples count. 10 slow then 2 fast with capacity
+        // 2 -> the slow ones are gone.
+        let mut w = SloWindow::new(100, 2);
+        for t in 0..10 {
+            w.record(t, 1_000);
+        }
+        assert_eq!(w.len(), 2);
+        assert_eq!(w.status(), SloStatus::Missed);
+        w.record(10, 10);
+        w.record(11, 20);
+        assert_eq!(w.summary().max_ns, 20);
+        assert_eq!(w.status(), SloStatus::Met);
+
+        // Capacity clamps to 1; exactly-at-target is met (<=).
+        let mut w = SloWindow::new(100, 0);
+        assert_eq!(w.capacity(), 1);
+        w.record(1, 100);
+        assert_eq!(w.status(), SloStatus::Met);
+
+        // Zero target: quantiles tracked, status pinned to no-data.
+        let mut w = SloWindow::new(0, 4);
+        w.record(1, 42);
+        assert_eq!(w.status(), SloStatus::NoData);
+        assert!(w.transitions().is_empty());
+        assert_eq!(w.summary().p50_ns, 42);
+    }
+
+    #[test]
+    fn window_transition_timeline_truncates() {
+        // Alternate fast/slow with capacity 1 so every completion flips
+        // the status: the timeline must cap at MAX_TRANSITIONS and
+        // count the overflow instead of growing without bound.
+        let mut w = SloWindow::new(100, 1);
+        for t in 0..(MAX_TRANSITIONS as u64 + 50) {
+            w.record(t, if t % 2 == 0 { 10 } else { 1_000 });
+        }
+        assert_eq!(w.transitions().len(), MAX_TRANSITIONS);
+        let r = w.report();
+        assert_eq!(r.transitions_truncated, 50);
+        assert_eq!(
+            r.to_json().get("transitions_truncated").unwrap().as_usize(),
+            Some(50)
+        );
     }
 
     #[test]

@@ -10,7 +10,8 @@
 //! within a frame: the paper's two patterns composed).
 
 use std::collections::BTreeMap;
-use std::sync::Arc;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::cache::{ArtifactCache, ArtifactKey, CacheConfig, CacheTier};
@@ -19,8 +20,9 @@ use crate::config::RunConfig;
 use crate::coordinator::Detector;
 use crate::error::{Error, Result};
 use crate::image::EdgeMap;
+use crate::obs::{SnapshotEngine, Telemetry, WallSnapshotter};
 use crate::patterns::pipeline::{pipeline_stages, DynStage};
-use crate::service::LatencyStats;
+use crate::service::{LatencyStats, SloWindow, DEFAULT_SLO_WINDOW};
 use crate::stream::delta::{DeltaGate, DeltaMode};
 use crate::stream::report::{GateReport, StreamReport};
 use crate::stream::source::FrameSource;
@@ -98,6 +100,14 @@ pub struct StreamOptions {
     /// frames deduplicate across them. `None` = the stream keeps only
     /// its own per-stream temporal gate.
     pub cache: Option<Arc<ArtifactCache>>,
+    /// Telemetry JSONL destination (`--telemetry-log`); `None` disables
+    /// the snapshot stream (see [`crate::obs`]).
+    pub telemetry_log: Option<PathBuf>,
+    /// Snapshot period in ns (`--telemetry-interval-ms`).
+    pub telemetry_interval_ns: u64,
+    /// Rolling frame-SLO window size (`--slo-window`): the last N
+    /// emitted frames' latencies vs. the frame budget.
+    pub slo_window: usize,
 }
 
 impl StreamOptions {
@@ -117,6 +127,13 @@ impl StreamOptions {
             } else {
                 None
             },
+            telemetry_log: if cfg.telemetry_log.is_empty() {
+                None
+            } else {
+                Some(PathBuf::from(&cfg.telemetry_log))
+            },
+            telemetry_interval_ns: (cfg.telemetry_interval_ms.max(0.0) * 1e6) as u64,
+            slo_window: cfg.slo_window.max(1),
         }
     }
 }
@@ -131,6 +148,9 @@ impl Default for StreamOptions {
             params: CannyParams::default(),
             keep_edges: false,
             cache: None,
+            telemetry_log: None,
+            telemetry_interval_ns: 100_000_000,
+            slo_window: DEFAULT_SLO_WINDOW,
         }
     }
 }
@@ -217,8 +237,46 @@ pub fn run_stream(
     let budget = opts.frame_budget_ns;
     let t0 = Stopwatch::start();
 
+    // -- Ops plane: a "stream"-tier telemetry registry with one logical
+    //    lane per pipeline stage (0 = decode, 1 = front, 2 = finish), a
+    //    rolling frame-SLO window (emission latency vs. the frame
+    //    budget; `no-data` offline, where there is no deadline), and —
+    //    under `--telemetry-log` — the wall sampler thread emitting
+    //    periodic JSONL snapshots. The stream tier is always
+    //    wall-measured, so there is no virtual drive mode here.
+    let telemetry = Arc::new(Telemetry::new("stream", 3));
+    let window = Arc::new(Mutex::new(SloWindow::new(budget, opts.slo_window.max(1))));
+    let snap = SnapshotEngine::from_options(
+        opts.telemetry_log.as_deref(),
+        opts.telemetry_interval_ns,
+        opts.drop_policy.name(),
+    )?;
+    // Late frames can only be shed (dropped/degraded) under a real-time
+    // budget with a policy that acts on them.
+    let shedding_possible = budget > 0 && opts.drop_policy != DropPolicy::Keep;
+    let snapshotter = {
+        let win = Arc::clone(&window);
+        let cache_probe = opts.cache.clone();
+        WallSnapshotter::start(
+            snap,
+            Arc::clone(&telemetry),
+            vec![det.pool_stats()],
+            Box::new(move || t0.elapsed_ns()),
+            Box::new(move || match &cache_probe {
+                Some(c) => c.snapshot(),
+                None => ArtifactCache::disabled().snapshot(),
+            }),
+            Box::new(move || {
+                let w = win.lock().expect("slo window lock");
+                (w.to_json(), w.missed())
+            }),
+            shedding_possible,
+        )
+    };
+
     // -- Stage 1 (source thread): acquire + decode, paced to the frame
     //    budget like a camera: frame k becomes available at k*budget.
+    let tel_src = Arc::clone(&telemetry);
     let inputs = (0..n).map(move |k| {
         if budget > 0 {
             let target = k as u64 * budget;
@@ -235,13 +293,24 @@ pub fn run_stream(
             }
             Err(e) => (None, 0, Some(e)),
         };
+        let decode_ns = sw.elapsed_ns();
+        // Every frame the source yields is "offered" and "admitted":
+        // the stream tier has no front door to reject at — sheds happen
+        // at the front stage's deadline check and count there.
+        tel_src.offered.inc();
+        tel_src.admitted.inc();
+        let lane = tel_src.lane(0);
+        lane.busy_ns.add(decode_ns);
+        lane.completed.inc();
+        lane.heartbeat_ns.raise(t0.elapsed_ns());
+        tel_src.note_stage("decode", decode_ns, decode_ns);
         Slot {
             index: k,
             image,
             nm: None,
             pixels,
             deadline_ns: if budget > 0 { (k as u64 + 1) * budget } else { 0 },
-            decode_ns: sw.elapsed_ns(),
+            decode_ns,
             emit_ns: 0,
             dropped: false,
             degraded: false,
@@ -288,7 +357,7 @@ pub fn run_stream(
     // ungated frame; until one has been measured (a stream can open on
     // a cache hit), offers fall back to a conservative per-pixel floor.
     let mut last_full_front_ns = 0u64;
-    let front: DynStage<Slot> = Box::new(move |mut s: Slot| {
+    let mut front_core: DynStage<Slot> = Box::new(move |mut s: Slot| {
         if s.error.is_some() {
             return s;
         }
@@ -382,12 +451,43 @@ pub fn run_stream(
         }
         s
     });
+    // Telemetry shell around the front stage: lane 1 liveness/busy
+    // accounting, shed counters (a dropped frame is a shed-rejected
+    // arrival, a stale-map emission a shed-degraded one), gate tile
+    // tallies and the front stage record.
+    let tel_front = Arc::clone(&telemetry);
+    let front: DynStage<Slot> = Box::new(move |s: Slot| {
+        let lane = tel_front.lane(1);
+        lane.inflight.set(1);
+        lane.heartbeat_ns.raise(t0.elapsed_ns());
+        let sw = Stopwatch::start();
+        let s = front_core(s);
+        lane.busy_ns.add(sw.elapsed_ns());
+        lane.inflight.set(0);
+        lane.completed.inc();
+        lane.heartbeat_ns.raise(t0.elapsed_ns());
+        // Dropped frames were already admitted at decode, so they count
+        // only in the overload section (`queue.rejected` stays 0 for
+        // the stream tier — there is no door to turn frames away at).
+        if s.dropped {
+            tel_front.shed_rejected.inc();
+        }
+        if s.degraded {
+            tel_front.shed_degraded.inc();
+        }
+        tel_front.gate_tiles_clean.add(s.clean as u64);
+        tel_front.gate_tiles_dirty.add(s.dirty as u64);
+        if let Some(r) = s.records.last() {
+            tel_front.note_stage(r.span_name(), r.wall_ns, r.cpu_ns);
+        }
+        s
+    });
 
     // -- Stage 3 (collector thread): global threshold + hysteresis from
     //    the stitched suppressed map, through the stage-graph API.
     let params = opts.params;
     let keep_edges = opts.keep_edges;
-    let finish: DynStage<Slot> = Box::new(move |mut s: Slot| {
+    let mut finish_core: DynStage<Slot> = Box::new(move |mut s: Slot| {
         if s.error.is_some() || s.dropped {
             return s;
         }
@@ -415,9 +515,46 @@ pub fn run_stream(
         }
         s
     });
+    // Telemetry shell around the finish stage: lane 2 accounting, the
+    // finish stage records (the front's own record was already tallied
+    // by its stage), the global completion counter, and — under a
+    // real-time budget — the per-frame emission latency
+    // (`emit_ns - k*budget`, i.e. lateness past the camera's capture
+    // time) into both the histogram and the rolling SLO window.
+    let tel_fin = Arc::clone(&telemetry);
+    let win_fin = Arc::clone(&window);
+    let finish: DynStage<Slot> = Box::new(move |s: Slot| {
+        let lane = tel_fin.lane(2);
+        lane.inflight.set(1);
+        lane.heartbeat_ns.raise(t0.elapsed_ns());
+        let seen = s.records.len();
+        let sw = Stopwatch::start();
+        let s = finish_core(s);
+        lane.busy_ns.add(sw.elapsed_ns());
+        lane.inflight.set(0);
+        lane.heartbeat_ns.raise(t0.elapsed_ns());
+        for r in &s.records[seen.min(s.records.len())..] {
+            tel_fin.note_stage(r.span_name(), r.wall_ns, r.cpu_ns);
+        }
+        if !s.dropped && s.error.is_none() {
+            lane.completed.inc();
+            tel_fin.completed.inc();
+            if budget > 0 {
+                let lat = s.emit_ns.saturating_sub(s.index as u64 * budget);
+                tel_fin.latency.record(lat);
+                win_fin.lock().expect("slo window lock").record(s.emit_ns, lat);
+            }
+        }
+        s
+    });
 
     let slots = pipeline_stages(inputs, opts.inflight, vec![front, finish]);
     let wall_ns = t0.elapsed_ns();
+
+    // Stop the sampler (it writes one final end-state line) and flush
+    // the JSONL before folding the report.
+    let (snap, _usage) = snapshotter.finish(label)?;
+    snap.close()?;
 
     // -- Fold the ordered slots into the report.
     let mut report = StreamReport {
@@ -448,6 +585,7 @@ pub fn run_stream(
         jitter: Default::default(),
         // Placeholder; refreshed below once the pipeline has joined.
         cache: ArtifactCache::disabled().snapshot(),
+        slo: window.lock().expect("slo window lock").report(),
     };
     let mut jitter = LatencyStats::new();
     let mut last_emit: Option<u64> = None;
@@ -539,6 +677,8 @@ mod tests {
         cfg.set("delta-gate", "off").unwrap();
         cfg.set("frame-budget-ms", "2.5").unwrap();
         cfg.set("drop-policy", "degrade").unwrap();
+        cfg.set("telemetry-interval-ms", "2").unwrap();
+        cfg.set("slo-window", "16").unwrap();
         let opts = StreamOptions::from_config(&cfg);
         assert_eq!(opts.inflight, 7);
         assert_eq!(opts.delta, DeltaMode::Off);
@@ -546,6 +686,14 @@ mod tests {
         assert_eq!(opts.drop_policy, DropPolicy::Degrade);
         assert!(!opts.keep_edges);
         assert!(opts.cache.is_none(), "cache sharing is opt-in");
+        assert!(opts.telemetry_log.is_none(), "telemetry log is opt-in");
+        assert_eq!(opts.telemetry_interval_ns, 2_000_000);
+        assert_eq!(opts.slo_window, 16);
+        cfg.set("telemetry-log", "/tmp/stream_t.jsonl").unwrap();
+        assert_eq!(
+            StreamOptions::from_config(&cfg).telemetry_log.as_deref(),
+            Some(std::path::Path::new("/tmp/stream_t.jsonl"))
+        );
         cfg.set("stream-cache", "true").unwrap();
         let shared = StreamOptions::from_config(&cfg);
         assert!(shared.cache.as_ref().is_some_and(|c| c.enabled()));

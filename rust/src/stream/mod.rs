@@ -56,7 +56,10 @@
 //!     "hysteresis": {"wall_ns": 1, "cpu_ns": 1, "tasks": 32, "frames": 32}
 //!   },
 //!   "jitter_ns": {"n": 31, "p50": 1, "p95": 1, "p99": 1, "max": 1, "mean": 1.0},
-//!   "cache": {"enabled": false, "...": "see the crate::service docs"}
+//!   "cache": {"enabled": false, "...": "see the crate::service docs"},
+//!   "overload": {"policy": "drop", "shed_rejected": 0, "shed_degraded": 0},
+//!   "slo": {"window": 64, "target_p99_ns": 0, "n": 0, "status": "no-data",
+//!           "...": "same schema as the serve report's slo.window"}
 //! }
 //! ```
 //!
@@ -66,6 +69,24 @@
 //! misses). `stages` aggregates one entry per executed
 //! [`crate::canny::StageRecord`] span plus the synthesized `decode`
 //! span; `jitter_ns` summarizes inter-emission gaps.
+//!
+//! ## The ops plane ([`crate::obs`])
+//!
+//! Stream runs publish into a `"stream"`-tier [`crate::obs::Telemetry`]
+//! registry — one logical lane per pipeline stage (decode / front /
+//! finish), the gate's tile tallies, and the drop policy's shed
+//! decisions (`dropped` → `shed_rejected`, `degraded` →
+//! `shed_degraded`). `--telemetry-log file.jsonl
+//! --telemetry-interval-ms N` attaches the wall sampler thread, which
+//! emits one JSONL snapshot per interval (schema in [`crate::obs`],
+//! `tier: "stream"`) plus a final end-state line, with a per-core
+//! `utilization` section sampled from the detector's worker pool.
+//! Under a real-time budget the rolling frame-SLO window
+//! (`--slo-window N`) tracks emission latency — `emit_ns - k*budget`,
+//! lateness past the camera's capture time — against a target of one
+//! frame budget; the report's `slo` section carries its windowed
+//! percentiles and met/missed transition timeline (`no-data` offline,
+//! where frames have no deadlines).
 //!
 //! ## The shared artifact cache (`--stream-cache`)
 //!

@@ -7,7 +7,7 @@
 use std::collections::BTreeMap;
 
 use crate::cache::CacheSnapshot;
-use crate::service::LatencySummary;
+use crate::service::{LatencySummary, WindowReport};
 use crate::util::json::Json;
 
 /// Aggregate of the [`crate::canny::StageRecord`]s one stage span
@@ -125,6 +125,11 @@ pub struct StreamReport {
     /// disabled all-zero snapshot when no cache is attached. Same
     /// schema as the serve report's `cache` section.
     pub cache: CacheSnapshot,
+    /// Rolling frame-SLO window over emission latency vs. the frame
+    /// budget (`--slo-window`): `no-data` offline (budget 0), otherwise
+    /// the last-N windowed percentiles and the met/missed transition
+    /// timeline. Same schema as the serve report's `slo.window`.
+    pub slo: WindowReport,
 }
 
 impl StreamReport {
@@ -174,6 +179,16 @@ impl StreamReport {
         b.insert("frame_budget_ns".into(), num(self.frame_budget_ns));
         b.insert("drop_policy".into(), Json::Str(self.drop_policy.clone()));
         m.insert("budget".into(), Json::Obj(b));
+
+        // Overload section, mirroring the serve report's: the stream
+        // tier's shed decisions are its dropped (shed_rejected) and
+        // degraded (shed_degraded) late frames under the drop policy.
+        let mut o = BTreeMap::new();
+        o.insert("policy".into(), Json::Str(self.drop_policy.clone()));
+        o.insert("shed_rejected".into(), num(self.dropped));
+        o.insert("shed_degraded".into(), num(self.degraded));
+        m.insert("overload".into(), Json::Obj(o));
+        m.insert("slo".into(), self.slo.to_json());
 
         m.insert(
             "stages".into(),
@@ -227,6 +242,7 @@ mod tests {
             stages,
             jitter: LatencySummary::default(),
             cache: crate::cache::ArtifactCache::disabled().snapshot(),
+            slo: WindowReport::empty(0, 64),
         }
     }
 
@@ -273,6 +289,11 @@ mod tests {
         assert_eq!(front.get("frames").unwrap().as_usize(), Some(2));
         assert!(j.get("jitter_ns").unwrap().get("p99").is_some());
         assert_eq!(j.get("budget").unwrap().get("drop_policy").unwrap().as_str(), Some("drop"));
+        let overload = j.get("overload").unwrap();
+        assert_eq!(overload.get("policy").unwrap().as_str(), Some("drop"));
+        assert_eq!(overload.get("shed_rejected").unwrap().as_usize(), Some(0));
+        assert_eq!(overload.get("shed_degraded").unwrap().as_usize(), Some(0));
+        assert_eq!(j.get("slo").unwrap().get("status").unwrap().as_str(), Some("no-data"));
         // Round-trips through the parser.
         let text = report().to_json_string();
         assert_eq!(Json::parse(&text).unwrap(), j);

@@ -3,6 +3,7 @@
 //! wall-clock driver, and StageTimes-calibrated virtual predictions,
 //! end to end through `service::serve`.
 
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 
 use canny_par::cache::CacheConfig;
@@ -10,10 +11,17 @@ use canny_par::canny::CannyParams;
 use canny_par::config::RunConfig;
 use canny_par::coordinator::Detector;
 use canny_par::image::synth::{generate, Scene};
+use canny_par::obs::{OverloadPolicy, REQUIRED_LINE_KEYS};
 use canny_par::service::{
     calibrate_for, serve, ClockMode, Request, RequestKind, ServeOptions, Trace,
 };
 use canny_par::util::json::Json;
+
+fn tmp_jsonl(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("canny_serve_itests");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("{}_{name}", std::process::id()))
+}
 
 /// Default options with real execution off — pure scheduling, fast.
 fn sched_opts() -> ServeOptions {
@@ -391,6 +399,170 @@ fn wall_interrupt_drains_and_reports_partial() {
     assert_eq!(report.completed, 5, "admitted requests drained to completion");
     let json = report.to_json_string();
     assert!(json.contains("\"interrupted\":true"), "{json}");
+}
+
+/// Tentpole acceptance: a deterministic virtual replay with
+/// `--telemetry-log` produces a byte-identical JSONL stream across two
+/// runs, and every line carries the documented schema.
+#[test]
+fn telemetry_jsonl_is_byte_identical_across_virtual_replays() {
+    let run = |path: PathBuf| {
+        let mut o = sched_opts();
+        o.lanes = 2;
+        o.telemetry_log = Some(path.clone());
+        o.telemetry_interval_ns = 1_000_000; // 1 ms of modeled time
+        let trace = Trace::synthetic(200, 42, 20_000.0);
+        let report = serve("telemetry", &trace, &o).unwrap();
+        (std::fs::read_to_string(&path).unwrap(), report)
+    };
+    let (a, ra) = run(tmp_jsonl("tel_a.jsonl"));
+    let (b, rb) = run(tmp_jsonl("tel_b.jsonl"));
+    assert_eq!(a, b, "virtual telemetry replay must be byte-identical");
+    assert_eq!(ra.to_json_string(), rb.to_json_string());
+    let lines: Vec<&str> = a.lines().collect();
+    assert!(lines.len() >= 2, "expected ticks plus the end-state line, got {}", lines.len());
+    let mut prev_t = 0u64;
+    for (i, line) in lines.iter().enumerate() {
+        let j = Json::parse(line).unwrap_or_else(|e| panic!("line {i} unparseable: {e:?}"));
+        for key in REQUIRED_LINE_KEYS {
+            assert!(j.get(key).is_some(), "line {i} missing `{key}`");
+        }
+        assert_eq!(j.get("seq").unwrap().as_usize(), Some(i), "seq must count lines");
+        assert_eq!(j.get("tier").unwrap().as_str(), Some("serve"));
+        assert_eq!(j.get("lanes").unwrap().as_arr().unwrap().len(), 2);
+        let t = j.get("t_ns").unwrap().as_usize().unwrap() as u64;
+        assert!(t >= prev_t, "t_ns must be monotonic (line {i})");
+        prev_t = t;
+        assert!(j.get("utilization").is_none(), "virtual lines never carry utilization");
+    }
+    // The final end-state line accounts for the whole run.
+    let last = Json::parse(lines.last().unwrap()).unwrap();
+    assert_eq!(last.get("queue").unwrap().get("offered").unwrap().as_usize(), Some(200));
+    let completed: usize = last
+        .get("lanes")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|l| l.get("completed").unwrap().as_usize().unwrap())
+        .sum();
+    assert_eq!(completed as u64, ra.completed);
+}
+
+/// Tentpole acceptance: under a hopeless SLO target, `reject-new`
+/// sheds every arrival after the first completion — counted in the
+/// report *and* on the telemetry stream's final line.
+#[test]
+fn reject_new_sheds_a_burst_and_counts_everywhere() {
+    let path = tmp_jsonl("shed_reject.jsonl");
+    let mut o = sched_opts();
+    o.lanes = 1;
+    o.max_batch = 1;
+    o.batch_window_ns = 0;
+    o.batch_overhead_ns = 1_000;
+    o.cost_ns_per_pixel = 0;
+    o.slo_p99_ns = 1; // unmeetable: every completion misses
+    o.slo_window = 4;
+    o.overload_policy = OverloadPolicy::RejectNew;
+    o.telemetry_log = Some(path.clone());
+    o.telemetry_interval_ns = 1_000_000;
+    // Arrivals 0.5 ms apart: request 0 completes (~1 µs) long before
+    // request 1 arrives, so the window is `missed` at every later door.
+    let report = serve("reject", &burst(10, 32, 32, 500_000), &o).unwrap();
+    assert_eq!(report.completed, 1, "only the pre-miss request runs");
+    assert_eq!(report.rejected_shed, 9);
+    assert_eq!(report.offered, report.completed + report.rejected());
+    assert_eq!(report.overload_policy, "reject-new");
+    assert!(!report.slo_window.transitions.is_empty(), "missed transition recorded");
+    let json = report.to_json_string();
+    assert!(json.contains("\"rejected_shed\":9"), "{json}");
+    // The stream agrees with the report.
+    let text = std::fs::read_to_string(&path).unwrap();
+    let last = Json::parse(text.lines().last().unwrap()).unwrap();
+    let overload = last.get("overload").unwrap();
+    assert_eq!(overload.get("policy").unwrap().as_str(), Some("reject-new"));
+    assert_eq!(overload.get("shed_rejected").unwrap().as_usize(), Some(9));
+    assert_eq!(last.get("slo").unwrap().get("status").unwrap().as_str(), Some("missed"));
+    assert_eq!(last.get("health").unwrap().as_str(), Some("degraded"));
+}
+
+/// Tentpole acceptance: `degrade-to-front-only` admits everything but
+/// rewrites full requests to the cheap front while the SLO is missed.
+#[test]
+fn degrade_to_front_only_rewrites_full_requests() {
+    let mut o = sched_opts();
+    o.lanes = 1;
+    o.max_batch = 1;
+    o.batch_window_ns = 0;
+    o.batch_overhead_ns = 1_000;
+    o.cost_ns_per_pixel = 0;
+    o.slo_p99_ns = 1;
+    o.slo_window = 4;
+    o.overload_policy = OverloadPolicy::DegradeFront;
+    let report = serve("degrade", &burst(10, 32, 32, 500_000), &o).unwrap();
+    assert_eq!(report.completed, 10, "degraded requests still complete");
+    assert_eq!(report.rejected(), 0, "degrade admits; it never rejects");
+    assert_eq!(report.shed_degraded, 9);
+    assert_eq!(report.kinds.get("full"), Some(&1));
+    assert_eq!(report.kinds.get("front-only"), Some(&9));
+    assert_eq!(report.overload_policy, "degrade-to-front-only");
+    let j = report.to_json();
+    assert_eq!(
+        j.get("overload").unwrap().get("shed_degraded").unwrap().as_usize(),
+        Some(9)
+    );
+}
+
+/// Policy `none` observes the missed window but never sheds — and the
+/// replay stays byte-identical run to run.
+#[test]
+fn overload_policy_none_only_observes() {
+    let mut o = sched_opts();
+    o.slo_p99_ns = 1;
+    o.slo_window = 8;
+    assert_eq!(o.overload_policy, OverloadPolicy::None, "none is the default");
+    let trace = Trace::synthetic(100, 5, 20_000.0);
+    let a = serve("observe", &trace, &o).unwrap();
+    let b = serve("observe", &trace, &o).unwrap();
+    assert_eq!(a.to_json_string(), b.to_json_string());
+    assert_eq!(a.completed, 100, "nothing shed");
+    assert_eq!(a.rejected_shed, 0);
+    assert_eq!(a.shed_degraded, 0);
+    assert!(a.slo_window.status.name() == "missed", "window still reports the miss");
+}
+
+/// Rolling-window CI schema check: validates the JSONL file the CI
+/// serve step produced (`CANNYD_TELEMETRY_JSONL=...`), or generates one
+/// in-process when the env var is absent (local runs).
+#[test]
+fn telemetry_jsonl_matches_documented_schema() {
+    let text = match std::env::var("CANNYD_TELEMETRY_JSONL") {
+        Ok(path) => std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("CANNYD_TELEMETRY_JSONL={path}: {e}")),
+        Err(_) => {
+            let path = tmp_jsonl("schema_local.jsonl");
+            let mut o = sched_opts();
+            o.telemetry_log = Some(path.clone());
+            o.telemetry_interval_ns = 1_000_000;
+            serve("schema", &Trace::synthetic(50, 3, 20_000.0), &o).unwrap();
+            std::fs::read_to_string(&path).unwrap()
+        }
+    };
+    let lines: Vec<&str> = text.lines().collect();
+    assert!(!lines.is_empty(), "telemetry log must not be empty");
+    for (i, line) in lines.iter().enumerate() {
+        let j = Json::parse(line).unwrap_or_else(|e| panic!("line {i} unparseable: {e:?}"));
+        for key in REQUIRED_LINE_KEYS {
+            assert!(j.get(key).is_some(), "line {i} missing `{key}`");
+        }
+        assert_eq!(j.get("seq").unwrap().as_usize(), Some(i));
+        let tier = j.get("tier").unwrap().as_str().unwrap();
+        assert!(tier == "serve" || tier == "stream", "unknown tier {tier}");
+        let status = j.get("slo").unwrap().get("status").unwrap().as_str().unwrap();
+        assert!(["met", "missed", "no-data"].contains(&status), "bad status {status}");
+        let health = j.get("health").unwrap().as_str().unwrap();
+        assert!(["healthy", "degraded", "stalled"].contains(&health), "bad health {health}");
+    }
 }
 
 #[test]

@@ -6,6 +6,7 @@ use canny_par::canny::{CannyParams, Engine};
 use canny_par::coordinator::Detector;
 use canny_par::image::synth::{generate, Scene};
 use canny_par::image::ImageF32;
+use canny_par::obs::REQUIRED_LINE_KEYS;
 use canny_par::stream::{
     run_stream, DeltaMode, DropPolicy, FrameSource, StreamOptions, StreamOutcome,
 };
@@ -163,10 +164,14 @@ fn report_schema_matches_documentation() {
         for key in
             ["label", "source", "engine", "workers", "inflight", "wall_ns", "fps",
              "mpix_per_s", "edge_pixels", "frames", "gate", "budget", "stages",
-             "jitter_ns", "cache"]
+             "jitter_ns", "cache", "overload", "slo"]
         {
             assert!(j.get(key).is_some(), "missing `{key}` ({delta:?})");
         }
+        // Offline (budget 0): no deadlines, so the frame SLO has no
+        // target and the overload counters are zero.
+        assert_eq!(j.get("slo").unwrap().get("status").unwrap().as_str(), Some("no-data"));
+        assert_eq!(j.get("overload").unwrap().get("shed_rejected").unwrap().as_usize(), Some(0));
         let frames = j.get("frames").unwrap();
         for key in ["offered", "emitted", "dropped", "degraded", "cached", "late"] {
             assert!(frames.get(key).is_some(), "missing frames.{key}");
@@ -202,6 +207,87 @@ fn report_schema_matches_documentation() {
         // The dump round-trips through the crate's parser.
         assert_eq!(Json::parse(&out.report.to_json_string()).unwrap(), j);
     }
+}
+
+/// Ops plane, stream tier: `--telemetry-log` attaches the wall sampler
+/// — every JSONL line carries the documented schema with
+/// `tier: "stream"`, a per-core `utilization` section, and shed counts
+/// (dropped frames) that agree with the final report.
+#[test]
+fn stream_telemetry_jsonl_counts_dropped_frames_as_sheds() {
+    let dir = std::env::temp_dir().join("canny_stream_itests");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("{}_drop.jsonl", std::process::id()));
+    let src = FrameSource::parse("shapes:9", 6, 32, 24, 7).unwrap();
+    let det = detector(Engine::Serial, 1);
+    let opts = StreamOptions {
+        frame_budget_ns: 100, // deadlines in the past by front entry
+        drop_policy: DropPolicy::Drop,
+        telemetry_log: Some(path.clone()),
+        telemetry_interval_ns: 5_000_000,
+        ..StreamOptions::default()
+    };
+    let out = run_stream("shed", &src, &det, &opts).unwrap();
+    let r = &out.report;
+    assert!(r.dropped >= 1, "a 100ns budget must drop frames");
+    let text = std::fs::read_to_string(&path).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert!(lines.len() >= 2, "initial sample plus final line expected");
+    for (i, line) in lines.iter().enumerate() {
+        let j = Json::parse(line).unwrap_or_else(|e| panic!("line {i} unparseable: {e:?}"));
+        for key in REQUIRED_LINE_KEYS {
+            assert!(j.get(key).is_some(), "line {i} missing `{key}`");
+        }
+        assert_eq!(j.get("tier").unwrap().as_str(), Some("stream"));
+        assert_eq!(j.get("seq").unwrap().as_usize(), Some(i));
+        // Wall sampler lines always carry the per-core busy sample.
+        let util = j.get("utilization").unwrap_or_else(|| panic!("line {i} no utilization"));
+        assert_eq!(util.get("cores").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("lanes").unwrap().as_arr().unwrap().len(), 3, "decode/front/finish");
+    }
+    let last = Json::parse(lines.last().unwrap()).unwrap();
+    let overload = last.get("overload").unwrap();
+    assert_eq!(overload.get("policy").unwrap().as_str(), Some("drop"));
+    assert_eq!(overload.get("shed_rejected").unwrap().as_usize(), Some(r.dropped as usize));
+    assert_eq!(overload.get("shed_degraded").unwrap().as_usize(), Some(0));
+    assert_eq!(
+        last.get("queue").unwrap().get("offered").unwrap().as_usize(),
+        Some(r.frames_offered as usize)
+    );
+    let status = last.get("slo").unwrap().get("status").unwrap().as_str().unwrap();
+    assert!(["met", "missed", "no-data"].contains(&status), "bad status {status}");
+}
+
+/// Ops plane, stream tier: under a hopeless frame budget the degrade
+/// policy's sheds land in the report's `overload` section and the
+/// rolling frame-SLO window reports `missed` with its transition.
+#[test]
+fn stream_degrade_sheds_count_and_slo_window_misses() {
+    let src = FrameSource::parse("shapes:9", 6, 48, 48, 7).unwrap();
+    let det = detector(Engine::Serial, 1);
+    let opts = StreamOptions {
+        frame_budget_ns: 100,
+        drop_policy: DropPolicy::Degrade,
+        slo_window: 4,
+        ..StreamOptions::default()
+    };
+    let out = run_stream("degrade-slo", &src, &det, &opts).unwrap();
+    let r = &out.report;
+    assert_eq!(r.frames_emitted, r.frames_offered, "degrade never drops");
+    assert!(r.degraded >= 1, "late frames with a warm cache must degrade");
+    // Every emitted frame's latency (vs. its 100ns capture slot) blows
+    // the one-budget target, so the rolling window is missed and the
+    // timeline records the transition.
+    assert_eq!(r.slo.target_p99_ns, 100);
+    assert_eq!(r.slo.status.name(), "missed");
+    assert!(!r.slo.transitions.is_empty());
+    let j = r.to_json();
+    let overload = j.get("overload").unwrap();
+    assert_eq!(overload.get("policy").unwrap().as_str(), Some("degrade"));
+    assert_eq!(overload.get("shed_degraded").unwrap().as_usize(), Some(r.degraded as usize));
+    assert_eq!(overload.get("shed_rejected").unwrap().as_usize(), Some(0));
+    assert_eq!(j.get("slo").unwrap().get("status").unwrap().as_str(), Some("missed"));
+    assert_eq!(j.get("slo").unwrap().get("window").unwrap().as_usize(), Some(4));
 }
 
 /// In-memory frame sources drive the executor directly (the embedding
