@@ -10,6 +10,27 @@
 use std::collections::BTreeMap;
 
 use canny_par::bench::Table;
+
+/// The artifact schema CI archives: exactly these keys, no drift. The
+/// assertion below fails the bench (not just the archive diff) when an
+/// emitted key is renamed, dropped, or added without updating the list.
+const REQUIRED_BENCH_KEYS: [&str; 15] = [
+    "bench",
+    "clock",
+    "lanes",
+    "workers_per_lane",
+    "width",
+    "height",
+    "requests",
+    "completed",
+    "rejected",
+    "makespan_ns",
+    "mpix_per_s",
+    "p50_ns",
+    "p95_ns",
+    "p99_ns",
+    "edge_pixels",
+];
 use canny_par::config::RunConfig;
 use canny_par::service::{serve, ClockMode, ServeOptions, Trace};
 use canny_par::util::json::Json;
@@ -69,6 +90,10 @@ fn main() {
     m.insert("p95_ns".into(), num(report.latency.p95_ns as f64));
     m.insert("p99_ns".into(), num(report.latency.p99_ns as f64));
     m.insert("edge_pixels".into(), num(report.edge_pixels as f64));
+    for key in REQUIRED_BENCH_KEYS {
+        assert!(m.contains_key(key), "bench artifact is missing required key `{key}`");
+    }
+    assert_eq!(m.len(), REQUIRED_BENCH_KEYS.len(), "bench artifact emits undeclared keys");
     let path = std::env::var("BENCH_SERVE_JSON").unwrap_or_else(|_| "BENCH_serve.json".into());
     std::fs::write(&path, Json::Obj(m).dump() + "\n").expect("write bench artifact");
     println!("wrote {path}");

@@ -39,6 +39,7 @@ pub fn figures_dir() -> PathBuf {
 }
 
 /// Simple aligned table printer for bench output.
+#[derive(Clone, Debug)]
 pub struct Table {
     headers: Vec<String>,
     rows: Vec<Vec<String>>,

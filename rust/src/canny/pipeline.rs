@@ -232,6 +232,7 @@ impl DetectOutput {
 
 /// The configured pipeline. Borrows its pool / XLA engine so the same
 /// resources serve many detections (the batch server reuses both).
+#[derive(Debug)]
 pub struct CannyPipeline<'a> {
     pub engine: Engine,
     pub pool: Option<&'a Pool>,
@@ -617,6 +618,7 @@ impl<'a> CannyPipeline<'a> {
                     // SAFETY: tiles cover disjoint output regions.
                     let crow = unsafe { cls_s.range_mut(row0, row0 + t.core_w) };
                     crow.copy_from_slice(&tc.data()[ty * t.core_w..(ty + 1) * t.core_w]);
+                    // SAFETY: same disjoint tile region, distinct buffer.
                     let nrow = unsafe { nm_s.range_mut(row0, row0 + t.core_w) };
                     nrow.copy_from_slice(&tn.data()[ty * t.core_w..(ty + 1) * t.core_w]);
                 }
@@ -708,10 +710,12 @@ impl<'a> CannyPipeline<'a> {
                             // SAFETY: disjoint tile regions / indices.
                             let crow = unsafe { cls_s.range_mut(row0, row0 + t.core_w) };
                             crow.copy_from_slice(&tc.data()[ty * core_w..ty * core_w + t.core_w]);
+                            // SAFETY: same disjoint tile region, distinct buffer.
                             let nrow = unsafe { nm_s.range_mut(row0, row0 + t.core_w) };
                             nrow.copy_from_slice(&tn.data()[ty * core_w..ty * core_w + t.core_w]);
                         }
                     }
+                    // SAFETY: one writer per tile index `i`.
                     Err(e) => unsafe { err_s.write(i, Some(e)) },
                 }
                 // SAFETY: one writer per index.

@@ -11,6 +11,7 @@ use crate::patterns::farm::{farm_stream, FarmStats};
 use crate::util::timer::Stopwatch;
 
 /// One batch job.
+#[derive(Clone, Debug)]
 pub struct BatchJob {
     pub id: usize,
     pub image: ImageF32,
@@ -36,6 +37,7 @@ impl BatchReport {
 }
 
 /// Farm-based batch executor over a detector's resources.
+#[derive(Debug)]
 pub struct BatchServer<'a> {
     detector: &'a Detector,
     /// Max images in flight (queue bound / backpressure).

@@ -32,6 +32,7 @@ use crate::scheduler::{Pool, PoolStats};
 
 /// The end-user entry point: owns the pool (and XLA engine when
 /// configured) and runs detections through the configured engine.
+#[derive(Debug)]
 pub struct Detector {
     engine: Engine,
     pool: Arc<Pool>,
@@ -128,7 +129,7 @@ impl Detector {
 }
 
 /// Builder for [`Detector`].
-#[derive(Default)]
+#[derive(Debug, Default)]
 pub struct DetectorBuilder {
     engine: Option<Engine>,
     workers: usize,

@@ -32,6 +32,7 @@ pub struct Plan {
 }
 
 /// GCP kernel-layer planner.
+#[derive(Clone, Debug)]
 pub struct Planner {
     pub topology: CpuTopology,
     /// Whether XLA artifacts are available.

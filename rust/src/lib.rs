@@ -175,6 +175,39 @@
 //! );
 //! println!("{}", out.report.to_json_string());
 //! ```
+//!
+//! ## Soundness
+//!
+//! Every scaling claim above rides on hand-rolled concurrency — the
+//! disjoint-write [`util::shared_slice::SharedSlice`], the
+//! work-stealing [`scheduler::Pool`], wall-clock serve lanes, the
+//! sharded cache — so the invariants that keep it sound are enforced
+//! mechanically, not by convention:
+//!
+//! * **`unsafe` is audited.** The crate denies `unsafe_op_in_unsafe_fn`
+//!   (every unsafe operation sits in an explicit `unsafe {}` block, even
+//!   inside `unsafe fn`), and the `pallas-lint` workspace tool
+//!   (`tools/pallas-lint`, a gating CI job) requires every `unsafe`
+//!   block/impl to carry an adjacent `// SAFETY:` justification and
+//!   every `unsafe fn` a `# Safety` doc section.
+//! * **Virtual-clock purity.** `Instant::now` / `SystemTime` are
+//!   lint-forbidden outside `service/clock.rs`, `util/timer.rs` and
+//!   `obs/snapshot.rs`; everything else takes time through injected
+//!   clocks, which is what makes `--clock virtual` replays (and their
+//!   telemetry streams) byte-identical.
+//! * **Schema and flag parity.** The JSON keys the report/snapshot
+//!   builders emit must match the schema blocks in the [`obs`],
+//!   [`service`] and [`stream`] module docs, and the `cannyd` HELP text
+//!   must match [`config::RunConfig::KEYS`] — both directions linted.
+//! * **Lock discipline.** The lint rejects holding one mutex guard
+//!   while locking another in `cache/shard.rs` / `service/server.rs`,
+//!   and non-gating nightly CI runs ThreadSanitizer over the wall-clock
+//!   integration tests plus Miri over the `SharedSlice` and pool unit
+//!   tests. See `tools/pallas-lint/README.md` for running all of it
+//!   locally.
+
+#![deny(unsafe_op_in_unsafe_fn)]
+#![warn(missing_debug_implementations)]
 
 pub mod amdahl;
 pub mod bench;

@@ -189,10 +189,10 @@ USAGE: cannyd <run|gen|batch|serve|stream|calibrate|profile|info> [flags]
                                  prints a JSON SLO report; --clock virtual
                                  replays deterministically, --clock wall runs
                                  real lane threads on monotonic time and drains
-                                 gracefully on SIGINT ("interrupted": true);
+                                 gracefully on SIGINT (\"interrupted\": true);
                                  --calibration file.json|probe swaps the
                                  virtual cost model for a measured one;
-                                 requests may carry "kind": full | front-only
+                                 requests may carry \"kind\": full | front-only
                                  | re-threshold {lo, hi} — re-threshold hits the
                                  shared content-addressed artifact cache)
   stream     frame-stream tier: --synthetic-frames 32 [--size 512x512]
@@ -208,7 +208,11 @@ USAGE: cannyd <run|gen|batch|serve|stream|calibrate|profile|info> [flags]
 
 Config flags (all commands): --engine serial|patterns|tiled|xla
   --workers N  --lo F --hi F --tile N --parallel-hysteresis
-  --artifacts DIR --tile-name tNNN --sim-cpus N --seed N --config FILE
+  --band-grain N (hysteresis band rows per task, 0 = auto from planner)
+  --artifacts DIR (alias: --artifacts-dir) --tile-name tNNN
+  --xla-replicas N (compiled copies per entry, 0 = auto)
+  --sample-period-us N (profiler usage-sampler period; default 200)
+  --sim-cpus N --seed N --config FILE
 Serve flags: --lanes N --queue-depth N --batch-window-us N --batch-max N
   --arrival-rate HZ --slo-p99-ms F --max-pixels N --clock virtual|wall
 Cache flags (shared artifact tier, serve + stream):

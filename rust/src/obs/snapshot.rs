@@ -39,6 +39,7 @@ use crate::util::json::Json;
 /// Everything one tick needs beyond the registry itself: the sections
 /// owned by the driver (rolling SLO window, cache snapshot, wall-only
 /// utilization sample).
+#[derive(Debug)]
 pub struct TickInputs<'a> {
     /// Tick time in the driver's clock domain (modeled ns under the
     /// virtual clock, monotonic ns under wall).
@@ -313,6 +314,7 @@ pub type ClockProbe = Box<dyn Fn() -> u64 + Send>;
 /// its end state), sampling per-core busy flags from the lanes' worker
 /// pools into the per-tick `utilization` section and into a
 /// [`UsageTrace`].
+#[derive(Debug)]
 pub struct WallSnapshotter {
     stop: Arc<AtomicBool>,
     handle: Option<JoinHandle<Result<(SnapshotEngine, Vec<UsageSample>)>>>,

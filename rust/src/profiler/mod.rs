@@ -22,11 +22,12 @@ use std::path::Path;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::error::Result;
 use crate::scheduler::PoolStats;
 use crate::simsched::SimResult;
+use crate::util::timer::Stopwatch;
 
 /// One sample: which workers were busy at a point in time.
 #[derive(Clone, Debug)]
@@ -190,6 +191,7 @@ pub fn ascii_chart(title: &str, series: &[f64], width: usize, height: usize) -> 
 }
 
 /// Live sampler over a pool's stats (the VS-profiler substitute).
+#[derive(Debug)]
 pub struct Sampler {
     stop: Arc<AtomicBool>,
     handle: Option<JoinHandle<Vec<UsageSample>>>,
@@ -207,12 +209,15 @@ impl Sampler {
         let handle = std::thread::Builder::new()
             .name("canny-sampler".into())
             .spawn(move || {
-                let t0 = Instant::now();
+                // Monotonic time through the shared Stopwatch, not a
+                // bare Instant — the clock-purity lint allows direct
+                // wall reads only inside util/timer.rs.
+                let sw = Stopwatch::start();
                 let mut samples = Vec::new();
                 while !stop2.load(Ordering::Acquire) {
                     let snap = stats.snapshot();
                     samples.push(UsageSample {
-                        t_ns: t0.elapsed().as_nanos() as u64,
+                        t_ns: sw.elapsed_ns(),
                         busy: snap.iter().map(|w| w.busy).collect(),
                     });
                     std::thread::sleep(period);

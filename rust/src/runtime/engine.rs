@@ -39,6 +39,19 @@ pub struct XlaEngine {
     entries: BTreeMap<String, Entry>,
 }
 
+// Manual impl: the PJRT client handle is opaque.
+impl std::fmt::Debug for XlaEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("XlaEngine")
+            .field("tile_name", &self.tile_name)
+            .field("core_h", &self.core_h)
+            .field("core_w", &self.core_w)
+            .field("halo", &self.halo)
+            .field("entries", &self.entries.len())
+            .finish()
+    }
+}
+
 // SAFETY: the client handle is only used for compile (startup) and is
 // thread-safe in the CPU plugin; see ExeSlot for executables.
 unsafe impl Send for XlaEngine {}

@@ -119,6 +119,13 @@ pub struct Pool {
     n_workers: usize,
 }
 
+// Manual impl: `Shared` holds deques of opaque task closures.
+impl std::fmt::Debug for Pool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Pool").field("n_workers", &self.n_workers).finish()
+    }
+}
+
 impl Pool {
     /// Spawn a pool with `n_workers` worker threads (>= 1).
     pub fn new(n_workers: usize) -> Result<Pool> {
@@ -215,6 +222,13 @@ pub struct Scope<'env> {
     shared: Arc<Shared>,
     inner: Arc<ScopeInner>,
     _marker: std::marker::PhantomData<&'env mut &'env ()>,
+}
+
+// Manual impl: both fields are opaque scheduler state.
+impl std::fmt::Debug for Scope<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Scope").finish_non_exhaustive()
+    }
 }
 
 impl<'env> Scope<'env> {

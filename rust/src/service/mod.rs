@@ -117,6 +117,49 @@
 //! than a shard's slice of the budget (`budget_bytes / shards`), which
 //! no eviction could ever make room for.
 //!
+//! ### Serve report schema (what `cannyd serve` prints)
+//!
+//! One JSON object per run ([`slo::ServeReport::to_json`]); keys are
+//! sorted, so virtual-clock reports diff cleanly. Abridged example —
+//! `latency_ns` sections share the `queue_wait_ns` summary shape, the
+//! `cache` section is documented above, and `kinds` / `stages` carry
+//! one counter per request kind / executed stage:
+//!
+//! ```json
+//! {
+//!   "label": "serve", "seed": 42, "clock": "virtual",
+//!   "engine": "patterns", "workers_per_lane": 2, "interrupted": false,
+//!   "offered": 200, "admitted": 198, "rejected": 2, "completed": 198,
+//!   "makespan_ns": 812345678, "throughput_rps": 243.7,
+//!   "edge_pixels": 1048576,
+//!   "calibration": {"source": "synthetic", "overhead_ns": 120000,
+//!                   "cost_ns_per_pixel": 3.72, "engine": "patterns",
+//!                   "workers": 4, "probes": 9, "stages": 6},
+//!   "queue": {"depth": 64, "high_water": 17, "rejected_full": 2,
+//!             "rejected_oversize": 0, "rejected_shed": 0},
+//!   "overload": {"policy": "none", "shed_degraded": 0,
+//!                "shed_rejected": 0},
+//!   "batch": {"window_ns": 2000000, "max": 8, "formed": 51,
+//!             "requests": 198, "mean_fill": 3.88},
+//!   "kinds": {"full": 180}, "stages": {"gaussian": 192},
+//!   "cache": {"enabled": true},
+//!   "latency_ns": {"n": 198, "p50": 3100000, "p95": 5200000,
+//!                  "p99": 6900000, "max": 7400000, "mean": 3400000.5},
+//!   "queue_wait_ns": {"n": 198},
+//!   "lanes": [{"lane": 0, "requests": 99, "batches": 26,
+//!              "busy_ns": 700000000, "utilization": 0.86,
+//!              "latency_ns": {"n": 99}}],
+//!   "slo": {
+//!     "target_p99_ns": 8000000, "p99_ns": 6900000, "status": "met",
+//!     "window": {"window": 64, "target_p99_ns": 8000000, "n": 64,
+//!                "p50_ns": 3100000, "p95_ns": 5200000,
+//!                "p99_ns": 6900000, "status": "met",
+//!                "transitions": [{"status": "met", "t_ns": 12000000}],
+//!                "transitions_truncated": false}
+//!   }
+//! }
+//! ```
+//!
 //! ### Request JSON schema (`cannyd serve --requests trace.json`)
 //!
 //! ```json

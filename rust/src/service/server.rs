@@ -317,9 +317,9 @@ extern "C" fn sigint_handler(_: libc::c_int) {
 /// multiple runs is not instantly drained by a previous run's Ctrl-C.
 pub fn install_sigint_drain() -> &'static AtomicBool {
     SIGINT_DRAIN.store(false, Ordering::SeqCst);
+    let handler = sigint_handler as extern "C" fn(libc::c_int);
     // SAFETY: installing a signal handler that only stores to an
     // AtomicBool (async-signal-safe).
-    let handler = sigint_handler as extern "C" fn(libc::c_int);
     unsafe {
         libc::signal(libc::SIGINT, handler as libc::sighandler_t);
     }
@@ -1235,6 +1235,9 @@ fn serve_wall(label: &str, trace: &Trace, opts: &ServeOptions) -> Result<ServeRe
     if let Some(e) = first_err {
         return Err(e);
     }
+    // Take the window report before the intake lock: never hold two
+    // serve-side mutexes at once (the lock-discipline lint enforces it).
+    let slo_window = window.lock().expect("slo window lock").report();
     let intake = shared.intake.lock().expect("intake lock");
     debug_assert_eq!(intake.batcher.pending(), 0);
     debug_assert_eq!(intake.queue.occupancy(), 0);
@@ -1245,7 +1248,7 @@ fn serve_wall(label: &str, trace: &Trace, opts: &ServeOptions) -> Result<ServeRe
         interrupted,
         cache: cache.snapshot(),
         shed_degraded: telemetry.shed_degraded.get(),
-        slo_window: window.lock().expect("slo window lock").report(),
+        slo_window,
     };
     Ok(build_report(label, opts, (engine, workers_per_lane), totals, &intake, stats))
 }

@@ -50,8 +50,13 @@ impl<'a, T> SharedSlice<'a, T> {
     #[allow(clippy::mut_from_ref)]
     pub unsafe fn range_mut(&self, start: usize, end: usize) -> &mut [T] {
         debug_assert!(start <= end && end <= self.len());
-        let base = (*self.data.get()).as_mut_ptr();
-        std::slice::from_raw_parts_mut(base.add(start), end - start)
+        // SAFETY: the pointer covers the whole backing slice by
+        // construction and `range` is in bounds (debug-asserted); the
+        // caller upholds exclusivity per this fn's contract.
+        unsafe {
+            let base = (*self.data.get()).as_mut_ptr();
+            std::slice::from_raw_parts_mut(base.add(start), end - start)
+        }
     }
 
     /// Write one element.
@@ -61,8 +66,21 @@ impl<'a, T> SharedSlice<'a, T> {
     /// index `i`.
     pub unsafe fn write(&self, i: usize, value: T) {
         debug_assert!(i < self.len());
-        let base = (*self.data.get()).as_mut_ptr();
-        base.add(i).write(value);
+        // SAFETY: `i` is in bounds (debug-asserted) and the caller
+        // upholds exclusivity per this fn's contract.
+        unsafe {
+            let base = (*self.data.get()).as_mut_ptr();
+            base.add(i).write(value);
+        }
+    }
+}
+
+// Manual impl: shows only the length — reading elements through `&self`
+// would race with concurrent writers, and `T: Debug` must not be
+// required of callers.
+impl<T> std::fmt::Debug for SharedSlice<'_, T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SharedSlice").field("len", &self.len()).finish()
     }
 }
 

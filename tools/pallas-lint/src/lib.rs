@@ -1,0 +1,999 @@
+//! `pallas-lint` — repo-specific invariant checks over `rust/src`.
+//!
+//! The checker walks Rust sources at the line/brace level (no external
+//! parser dependencies): fast, dependency-free, and precise enough for
+//! the five invariants this codebase otherwise keeps only by
+//! convention:
+//!
+//! 1. **unsafe-safety** — every `unsafe` block/impl carries an adjacent
+//!    `// SAFETY:` justification; `unsafe fn` declarations may carry a
+//!    `# Safety` doc section instead. A comment directly above counts,
+//!    reached through attribute lines and other `unsafe` lines (so an
+//!    `unsafe impl Send`/`Sync` pair may share one justification).
+//! 2. **clock-purity** — `Instant::now` / `SystemTime` are forbidden
+//!    outside [`CLOCK_ALLOWLIST`]: every other module must take time
+//!    through an injected clock so virtual-replay output stays
+//!    byte-identical.
+//! 3. **schema-parity** — JSON keys emitted by the report/snapshot
+//!    builders (string-literal `.insert("key", …)` calls) must appear
+//!    in the fenced `json` blocks of the owning module docs
+//!    ([`SCHEMA_PAIRS`]), and every `REQUIRED_LINE_KEYS` entry must be
+//!    both documented and emitted.
+//! 4. **flag-parity** — every dashed `RunConfig::KEYS` spelling appears
+//!    as `--key` in the `cannyd` HELP text, and every `--flag` in HELP
+//!    is either a config key or a command-level flag (`allowed_extras`).
+//! 5. **lock-order** — within [`LOCK_SCOPED_FILES`], no `.lock()` on
+//!    one named mutex while a `let`-bound guard on a *different* mutex
+//!    is still in scope (the deadlock-by-ordering smell).
+//!
+//! Test code — everything from the first `#[cfg(test)]` line to end of
+//! file, which is where this repo's test modules live — is exempt from
+//! rules 1, 2 and 5 and never contributes emitted keys to rule 3.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+/// Files allowed to read the wall clock directly. Everything else goes
+/// through the injected clocks these modules provide.
+pub const CLOCK_ALLOWLIST: &[&str] = &["service/clock.rs", "util/timer.rs", "obs/snapshot.rs"];
+
+/// Files subject to the lock-order rule (the two places where more
+/// than one mutex lives in the same function's reach).
+pub const LOCK_SCOPED_FILES: &[&str] = &["cache/shard.rs", "service/server.rs"];
+
+/// (module-doc file, report/snapshot builder files) pairs: keys the
+/// builders emit must be documented in the module doc's `json` blocks.
+pub const SCHEMA_PAIRS: &[(&str, &[&str])] = &[
+    ("obs/mod.rs", &["obs/snapshot.rs"]),
+    ("service/mod.rs", &["service/slo.rs", "service/calibrate.rs", "cache/stats.rs"]),
+    ("stream/mod.rs", &["stream/report.rs"]),
+];
+
+/// One rule violation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Finding {
+    pub file: String,
+    /// 1-based.
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+fn note(file: &SourceFile, line: usize, rule: &'static str, message: String) -> Finding {
+    Finding { file: file.rel.clone(), line, rule, message }
+}
+
+/// A source file plus comment/string-stripped views. All three views
+/// share newline positions, so line numbers agree everywhere.
+#[derive(Clone, Debug)]
+pub struct SourceFile {
+    /// Path relative to the scanned root, `/`-separated.
+    pub rel: String,
+    pub raw: String,
+    /// Comments blanked to spaces; string literals kept verbatim.
+    pub code: String,
+    /// Comments *and* string/char literal contents blanked.
+    pub tokens: String,
+    /// 0-based line index of the first `#[cfg(test)]`; `usize::MAX`
+    /// when the file has no test module.
+    pub test_start: usize,
+}
+
+impl SourceFile {
+    pub fn new(rel: &str, text: &str) -> SourceFile {
+        let (code, tokens) = scrub(text);
+        let test_start =
+            tokens.lines().position(|l| l.contains("#[cfg(test)]")).unwrap_or(usize::MAX);
+        SourceFile { rel: rel.to_string(), raw: text.to_string(), code, tokens, test_start }
+    }
+}
+
+/// Blank `c` in both views (newlines survive to keep line alignment).
+fn blank(c: char, code: &mut String, tokens: &mut String) {
+    let keep = if c == '\n' { '\n' } else { ' ' };
+    code.push(keep);
+    tokens.push(keep);
+}
+
+/// Push `c` verbatim to `code`, blanked to `tokens`.
+fn literal(c: char, code: &mut String, tokens: &mut String) {
+    code.push(c);
+    tokens.push(if c == '\n' { '\n' } else { ' ' });
+}
+
+/// Build the `code` and `tokens` views: a character state machine over
+/// line comments, nesting block comments, string/byte-string literals
+/// (escape-aware), raw strings, and char-literal-vs-lifetime cases.
+fn scrub(text: &str) -> (String, String) {
+    let chars: Vec<char> = text.chars().collect();
+    let mut code = String::with_capacity(text.len());
+    let mut tokens = String::with_capacity(text.len());
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        // Line comment.
+        if c == '/' && chars.get(i + 1) == Some(&'/') {
+            while i < chars.len() && chars[i] != '\n' {
+                blank(chars[i], &mut code, &mut tokens);
+                i += 1;
+            }
+            continue;
+        }
+        // Block comment (they nest in Rust).
+        if c == '/' && chars.get(i + 1) == Some(&'*') {
+            let mut depth = 0usize;
+            while i < chars.len() {
+                if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    blank('/', &mut code, &mut tokens);
+                    blank('*', &mut code, &mut tokens);
+                    i += 2;
+                } else if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                    depth -= 1;
+                    blank('*', &mut code, &mut tokens);
+                    blank('/', &mut code, &mut tokens);
+                    i += 2;
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    blank(chars[i], &mut code, &mut tokens);
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Raw (and raw byte) string literals: r"…", r#"…"#, br"…".
+        if (c == 'r' || c == 'b') && !(i > 0 && is_ident_char(chars[i - 1])) {
+            let mut r_at = i;
+            if c == 'b' && chars.get(i + 1) == Some(&'r') {
+                r_at = i + 1;
+            }
+            if chars.get(r_at) == Some(&'r') {
+                let mut k = r_at + 1;
+                let mut hashes = 0usize;
+                while chars.get(k) == Some(&'#') {
+                    hashes += 1;
+                    k += 1;
+                }
+                if chars.get(k) == Some(&'"') {
+                    while i <= k {
+                        literal(chars[i], &mut code, &mut tokens);
+                        i += 1;
+                    }
+                    while i < chars.len() {
+                        let close = chars[i] == '"'
+                            && (1..=hashes).all(|h| chars.get(i + h) == Some(&'#'));
+                        if close {
+                            for _ in 0..=hashes {
+                                literal(chars[i], &mut code, &mut tokens);
+                                i += 1;
+                            }
+                            break;
+                        }
+                        literal(chars[i], &mut code, &mut tokens);
+                        i += 1;
+                    }
+                    continue;
+                }
+            }
+        }
+        // Normal string literal (incl. b"…").
+        if c == '"' {
+            literal('"', &mut code, &mut tokens);
+            i += 1;
+            while i < chars.len() {
+                let d = chars[i];
+                if d == '\\' && i + 1 < chars.len() {
+                    literal(d, &mut code, &mut tokens);
+                    literal(chars[i + 1], &mut code, &mut tokens);
+                    i += 2;
+                    continue;
+                }
+                literal(d, &mut code, &mut tokens);
+                i += 1;
+                if d == '"' {
+                    break;
+                }
+            }
+            continue;
+        }
+        // Char literal vs lifetime: `'x'` / `'\n'` are literals, `'a`
+        // followed by anything but a closing quote is a lifetime.
+        if c == '\'' {
+            let is_char = match chars.get(i + 1) {
+                Some('\\') => true,
+                Some(_) => chars.get(i + 2) == Some(&'\''),
+                None => false,
+            };
+            if is_char {
+                literal('\'', &mut code, &mut tokens);
+                i += 1;
+                while i < chars.len() {
+                    let d = chars[i];
+                    if d == '\\' && i + 1 < chars.len() {
+                        literal(d, &mut code, &mut tokens);
+                        literal(chars[i + 1], &mut code, &mut tokens);
+                        i += 2;
+                        continue;
+                    }
+                    literal(d, &mut code, &mut tokens);
+                    i += 1;
+                    if d == '\'' {
+                        break;
+                    }
+                }
+                continue;
+            }
+        }
+        code.push(c);
+        tokens.push(c);
+        i += 1;
+    }
+    (code, tokens)
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Byte offset of `word` in `line` with identifier-boundary checks on
+/// both sides.
+fn find_word(line: &str, word: &str) -> Option<usize> {
+    let bytes = line.as_bytes();
+    let mut from = 0;
+    while let Some(pos) = line[from..].find(word) {
+        let at = from + pos;
+        let end = at + word.len();
+        let before = at == 0 || !is_ident_byte(bytes[at - 1]);
+        let after = end >= bytes.len() || !is_ident_byte(bytes[end]);
+        if before && after {
+            return Some(at);
+        }
+        from = end;
+    }
+    None
+}
+
+fn has_word(line: &str, word: &str) -> bool {
+    find_word(line, word).is_some()
+}
+
+/// 1-based line number of byte offset `at`.
+fn line_of(text: &str, at: usize) -> usize {
+    text[..at].matches('\n').count() + 1
+}
+
+/// Byte offset where 0-based line `line` starts, if it exists.
+fn byte_of_line(text: &str, line: usize) -> Option<usize> {
+    if line == 0 {
+        return Some(0);
+    }
+    if line == usize::MAX {
+        return None;
+    }
+    let mut seen = 0;
+    for (i, b) in text.bytes().enumerate() {
+        if b == b'\n' {
+            seen += 1;
+            if seen == line {
+                return Some(i + 1);
+            }
+        }
+    }
+    None
+}
+
+/// All `"…"` contents in `text` (run on the code view, where string
+/// literals survive; assumes no escaped quotes in scanned literals).
+fn all_quoted(text: &str) -> Vec<String> {
+    let bytes = text.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < bytes.len() {
+        if bytes[i] == b'"' {
+            if let Some(len) = text[i + 1..].find('"') {
+                out.push(text[i + 1..i + 1 + len].to_string());
+                i += len + 2;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+/// The dotted receiver path immediately before byte offset `at`
+/// (`shared.dispatch.lock()` at the `.lock` dot → `shared.dispatch`).
+fn receiver_before(line: &str, at: usize) -> String {
+    let bytes = line.as_bytes();
+    let mut start = at;
+    while start > 0 && (is_ident_byte(bytes[start - 1]) || bytes[start - 1] == b'.') {
+        start -= 1;
+    }
+    line[start..at].trim_matches('.').to_string()
+}
+
+/// Rule 1: every `unsafe` site outside test code carries an adjacent
+/// `// SAFETY:` justification (`unsafe fn` declarations may carry a
+/// `# Safety` doc section instead).
+pub fn rule_safety(file: &SourceFile) -> Vec<Finding> {
+    let tok: Vec<&str> = file.tokens.lines().collect();
+    let raw: Vec<&str> = file.raw.lines().collect();
+    let mut out = Vec::new();
+    for (i, line) in tok.iter().enumerate() {
+        if i >= file.test_start {
+            break;
+        }
+        let Some(at) = find_word(line, "unsafe") else {
+            continue;
+        };
+        let is_fn = line[at + "unsafe".len()..].trim_start().starts_with("fn");
+        if raw[i].contains("SAFETY:") || safety_above(&tok, &raw, i, is_fn) {
+            continue;
+        }
+        let message = if is_fn {
+            "`unsafe fn` without a `# Safety` doc section or `// SAFETY:` comment".to_string()
+        } else {
+            "`unsafe` without an adjacent `// SAFETY:` comment".to_string()
+        };
+        out.push(note(file, i + 1, "unsafe-safety", message));
+    }
+    out
+}
+
+/// Walk upward over contiguous comment / attribute / `unsafe` lines
+/// looking for a safety justification for the site at `site`.
+fn safety_above(tok: &[&str], raw: &[&str], site: usize, is_fn: bool) -> bool {
+    let mut i = site;
+    while i > 0 {
+        i -= 1;
+        let t = tok[i].trim();
+        let r = raw[i].trim();
+        let is_comment =
+            t.is_empty() && (r.starts_with("//") || r.starts_with("/*") || r.starts_with('*'));
+        if is_comment {
+            if r.contains("SAFETY:") || (is_fn && r.contains("# Safety")) {
+                return true;
+            }
+            continue;
+        }
+        if t.starts_with("#[") || has_word(t, "unsafe") {
+            continue;
+        }
+        return false;
+    }
+    false
+}
+
+/// Rule 2: virtual-clock purity — direct wall-clock reads live only in
+/// the allowlisted clock modules.
+pub fn rule_clock(file: &SourceFile) -> Vec<Finding> {
+    if CLOCK_ALLOWLIST.contains(&file.rel.as_str()) {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    for (i, line) in file.tokens.lines().enumerate() {
+        if i >= file.test_start {
+            break;
+        }
+        for needle in ["Instant::now", "SystemTime"] {
+            if has_word(line, needle) {
+                let message = format!(
+                    "`{needle}` outside the clock allowlist breaks virtual-replay determinism"
+                );
+                out.push(note(file, i + 1, "clock-purity", message));
+            }
+        }
+    }
+    out
+}
+
+/// JSON keys documented in the fenced `json` blocks of a module's
+/// `//!` docs (a quoted identifier followed by `:`).
+pub fn doc_json_keys(file: &SourceFile) -> BTreeSet<String> {
+    let mut keys = BTreeSet::new();
+    let mut in_json = false;
+    for line in file.raw.lines() {
+        let Some(rest) = line.trim_start().strip_prefix("//!") else {
+            continue;
+        };
+        let body = rest.trim();
+        if let Some(fence) = body.strip_prefix("```") {
+            in_json = fence.starts_with("json");
+            continue;
+        }
+        if in_json {
+            collect_doc_keys(body, &mut keys);
+        }
+    }
+    keys
+}
+
+fn collect_doc_keys(text: &str, keys: &mut BTreeSet<String>) {
+    let bytes = text.as_bytes();
+    let mut i = 0;
+    while i < bytes.len() {
+        if bytes[i] == b'"' {
+            if let Some(len) = text[i + 1..].find('"') {
+                let key = &text[i + 1..i + 1 + len];
+                let after = text[i + len + 2..].trim_start();
+                if after.starts_with(':') && !key.is_empty() && key.bytes().all(is_ident_byte) {
+                    keys.insert(key.to_string());
+                }
+                i += len + 2;
+                continue;
+            }
+        }
+        i += 1;
+    }
+}
+
+/// String-literal keys passed to `.insert("…", …)` in non-test code,
+/// with their 1-based lines. The key may start on the line after the
+/// `insert(` (rustfmt wraps long builder lines).
+pub fn emitted_keys(file: &SourceFile) -> Vec<(String, usize)> {
+    let code = &file.code;
+    let stop = byte_of_line(code, file.test_start).unwrap_or(code.len());
+    let bytes = code.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < stop {
+        if bytes[i] == b'i' && code[i..].starts_with("insert") {
+            let boundary = i == 0 || !is_ident_byte(bytes[i - 1]);
+            let mut j = i + "insert".len();
+            if boundary && bytes.get(j) == Some(&b'(') {
+                j += 1;
+                while j < bytes.len() && bytes[j].is_ascii_whitespace() {
+                    j += 1;
+                }
+                if bytes.get(j) == Some(&b'"') {
+                    if let Some(len) = code[j + 1..].find('"') {
+                        out.push((code[j + 1..j + 1 + len].to_string(), line_of(code, i)));
+                    }
+                }
+            }
+            i += "insert".len();
+            continue;
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Elements of the first `NAME … = [ "…", … ]` string-array literal at
+/// or after the first occurrence of `marker` in the code view.
+pub fn const_str_array(file: &SourceFile, marker: &str) -> Vec<String> {
+    let code = &file.code;
+    let Some(at) = code.find(marker) else {
+        return Vec::new();
+    };
+    let tail = &code[at..];
+    let Some(eq) = tail.find('=') else {
+        return Vec::new();
+    };
+    let Some(end) = tail[eq..].find(']') else {
+        return Vec::new();
+    };
+    all_quoted(&tail[eq..eq + end])
+}
+
+/// Rule 3: schema parity between module-doc `json` blocks and the keys
+/// the report/snapshot builders actually emit, plus the explicit
+/// `REQUIRED_LINE_KEYS` contract in both directions.
+pub fn rule_schema(files: &BTreeMap<String, SourceFile>) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for (doc_rel, builders) in SCHEMA_PAIRS {
+        let Some(doc) = files.get(*doc_rel) else {
+            continue;
+        };
+        let documented = doc_json_keys(doc);
+        if documented.is_empty() {
+            continue;
+        }
+        for rel in *builders {
+            let Some(builder) = files.get(*rel) else {
+                continue;
+            };
+            for (key, line) in emitted_keys(builder) {
+                if !documented.contains(&key) {
+                    let message = format!("emitted key `{key}` is not documented in {doc_rel}");
+                    out.push(note(builder, line, "schema-parity", message));
+                }
+            }
+        }
+    }
+    if let (Some(snap), Some(doc)) = (files.get("obs/snapshot.rs"), files.get("obs/mod.rs")) {
+        let documented = doc_json_keys(doc);
+        let emitted: BTreeSet<String> = emitted_keys(snap).into_iter().map(|(k, _)| k).collect();
+        for key in const_str_array(snap, "REQUIRED_LINE_KEYS") {
+            if !documented.contains(&key) {
+                let message = format!("REQUIRED_LINE_KEYS `{key}` missing from obs/mod.rs docs");
+                out.push(note(doc, 1, "schema-parity", message));
+            }
+            if !emitted.contains(&key) {
+                let message = format!("REQUIRED_LINE_KEYS `{key}` is never emitted");
+                out.push(note(snap, 1, "schema-parity", message));
+            }
+        }
+    }
+    out
+}
+
+/// The contents of the string literal after `marker` (escape-tolerant:
+/// escaped chars are kept raw — flag scanning only needs text shape),
+/// plus the marker's 1-based line.
+pub fn string_const(file: &SourceFile, marker: &str) -> Option<(String, usize)> {
+    let code = &file.code;
+    let at = code.find(marker)?;
+    let line = line_of(code, at);
+    let open = at + code[at..].find('"')?;
+    let bytes = code.as_bytes();
+    let mut i = open + 1;
+    let mut out = String::new();
+    while i < bytes.len() {
+        let b = bytes[i];
+        if b == b'\\' && i + 1 < bytes.len() {
+            out.push(bytes[i + 1] as char);
+            i += 2;
+            continue;
+        }
+        if b == b'"' {
+            break;
+        }
+        out.push(b as char);
+        i += 1;
+    }
+    Some((out, line))
+}
+
+/// `--flag` tokens in the HELP text (lowercase/digit/dash runs after a
+/// literal `--`, trailing dashes trimmed).
+pub fn help_flags(help: &str) -> BTreeSet<String> {
+    let chars: Vec<char> = help.chars().collect();
+    let mut out = BTreeSet::new();
+    let mut i = 0;
+    while i + 1 < chars.len() {
+        let dash = chars[i] == '-' && chars[i + 1] == '-' && (i == 0 || chars[i - 1] != '-');
+        if dash {
+            let mut j = i + 2;
+            while j < chars.len()
+                && (chars[j].is_ascii_lowercase() || chars[j].is_ascii_digit() || chars[j] == '-')
+            {
+                j += 1;
+            }
+            let word: String = chars[i + 2..j].iter().collect();
+            let flag = word.trim_matches('-');
+            if !flag.is_empty() {
+                out.insert(flag.to_string());
+            }
+            i = j + 1;
+            continue;
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Command-level flags from `allowed_extras` (command names from the
+/// match arms come along for the ride; they are harmless here).
+fn extras_set(main: &SourceFile) -> BTreeSet<String> {
+    let code = &main.code;
+    let Some(start) = code.find("fn allowed_extras") else {
+        return BTreeSet::new();
+    };
+    let tail = &code[start..];
+    let end = tail.find("\n}").unwrap_or(tail.len());
+    all_quoted(&tail[..end]).into_iter().collect()
+}
+
+/// Rule 4: HELP-text ↔ `RunConfig::KEYS` flag parity in both
+/// directions. Only dashed KEYS spellings are required in HELP (the
+/// `snake_case` variants are config-file aliases).
+pub fn rule_flags(files: &BTreeMap<String, SourceFile>) -> Vec<Finding> {
+    let (Some(main), Some(config)) = (files.get("main.rs"), files.get("config/mod.rs")) else {
+        return Vec::new();
+    };
+    let mut out = Vec::new();
+    let keys: BTreeSet<String> = const_str_array(config, "const KEYS").into_iter().collect();
+    let Some((help, help_line)) = string_const(main, "const HELP") else {
+        out.push(note(main, 1, "flag-parity", "could not locate `const HELP`".to_string()));
+        return out;
+    };
+    if keys.is_empty() {
+        out.push(note(config, 1, "flag-parity", "could not locate `const KEYS`".to_string()));
+        return out;
+    }
+    let extras = extras_set(main);
+    let flags = help_flags(&help);
+    for key in keys.iter().filter(|k| !k.contains('_')) {
+        if !flags.contains(key) {
+            let message = format!("config key `--{key}` is not documented in the cannyd HELP");
+            out.push(note(config, 1, "flag-parity", message));
+        }
+    }
+    for flag in &flags {
+        if !keys.contains(flag) && !extras.contains(flag) && flag.as_str() != "help" {
+            let message = format!("HELP flag `--{flag}` is not a config key or command flag");
+            out.push(note(main, help_line, "flag-parity", message));
+        }
+    }
+    out
+}
+
+/// Receivers of `.lock()` calls on this (token-view) line.
+fn lock_receivers(line: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(pos) = line[from..].find(".lock()") {
+        let at = from + pos;
+        let recv = receiver_before(line, at);
+        if !recv.is_empty() {
+            out.push(recv);
+        }
+        from = at + ".lock()".len();
+    }
+    out
+}
+
+/// `drop(x)` / `mem::drop(x)` argument names on this line.
+fn dropped_names(line: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(pos) = line[from..].find("drop(") {
+        let at = from + pos;
+        let boundary = at == 0 || !is_ident_byte(line.as_bytes()[at - 1]);
+        let rest = &line[at + "drop(".len()..];
+        if boundary {
+            if let Some(end) = rest.find(')') {
+                let name = rest[..end].trim();
+                if !name.is_empty() && name.bytes().all(is_ident_byte) {
+                    out.push(name.to_string());
+                }
+            }
+        }
+        from = at + "drop(".len();
+    }
+    out
+}
+
+/// Net `{`/`}` balance of a token-view line.
+fn brace_net(line: &str) -> i64 {
+    let mut net = 0;
+    for c in line.chars() {
+        if c == '{' {
+            net += 1;
+        } else if c == '}' {
+            net -= 1;
+        }
+    }
+    net
+}
+
+/// `let <pat> = <recv>.lock()…` where the lock result is actually
+/// *held* (bound as a guard) rather than consumed by a trailing method
+/// call on the same line. Returns (binding name, receiver).
+fn lock_guard_binding(line: &str) -> Option<(String, String)> {
+    let let_at = find_word(line, "let")?;
+    let eq = let_at + line[let_at..].find('=')?;
+    let lock_at = eq + line[eq..].find(".lock()")?;
+    // What trails `.lock()` decides held vs temporary: `.unwrap()` /
+    // `.expect("…")` keep the guard; any further call consumes it.
+    let mut rest = &line[lock_at + ".lock()".len()..];
+    loop {
+        if let Some(r) = rest.strip_prefix(".unwrap()") {
+            rest = r;
+        } else if rest.starts_with(".expect(") {
+            match rest.find(')') {
+                Some(p) => rest = &rest[p + 1..],
+                None => break,
+            }
+        } else {
+            break;
+        }
+    }
+    let rest = rest.trim_start();
+    let held = rest.is_empty() || rest.starts_with(';') || rest.starts_with('{');
+    if !held {
+        return None;
+    }
+    // Binding name: the last identifier in the pattern between `let`
+    // and `=` (`let mut intake` → `intake`, `let Ok(mut d)` → `d`).
+    let pat = &line[let_at + "let".len()..eq];
+    let mut cur = String::new();
+    let mut last = String::new();
+    for c in pat.chars() {
+        if is_ident_char(c) {
+            cur.push(c);
+        } else {
+            if !cur.is_empty() {
+                last = cur.clone();
+            }
+            cur.clear();
+        }
+    }
+    if !cur.is_empty() {
+        last = cur;
+    }
+    if last.is_empty() || last == "mut" || last == "_" {
+        return None;
+    }
+    let recv = receiver_before(line, lock_at);
+    if recv.is_empty() {
+        return None;
+    }
+    Some((last, recv))
+}
+
+/// Rule 5: lock-order smells — a `.lock()` on one mutex while a guard
+/// on a *different* mutex is still in scope. Guards die when their
+/// scope closes or when `drop(name)` appears.
+pub fn rule_locks(file: &SourceFile) -> Vec<Finding> {
+    if !LOCK_SCOPED_FILES.contains(&file.rel.as_str()) {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    let mut depth: i64 = 0;
+    // (binding name, receiver, scope depth at binding)
+    let mut guards: Vec<(String, String, i64)> = Vec::new();
+    for (i, line) in file.tokens.lines().enumerate() {
+        if i >= file.test_start {
+            break;
+        }
+        for name in dropped_names(line) {
+            guards.retain(|(g, _, _)| *g != name);
+        }
+        for recv in lock_receivers(line) {
+            for (_, held, _) in &guards {
+                if *held != recv {
+                    let message = format!("`.lock()` on `{recv}` while `{held}` guard is held");
+                    out.push(note(file, i + 1, "lock-order", message));
+                }
+            }
+        }
+        let net = brace_net(line);
+        if let Some((name, recv)) = lock_guard_binding(line) {
+            guards.push((name, recv, depth + net.max(0)));
+        }
+        depth += net;
+        guards.retain(|(_, _, d)| *d <= depth);
+    }
+    out
+}
+
+/// Run every rule over a set of sources keyed by root-relative path.
+pub fn check_sources(files: &BTreeMap<String, SourceFile>) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for file in files.values() {
+        out.extend(rule_safety(file));
+        out.extend(rule_clock(file));
+        out.extend(rule_locks(file));
+    }
+    out.extend(rule_schema(files));
+    out.extend(rule_flags(files));
+    out.sort_by(|a, b| (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule)));
+    out
+}
+
+/// Load every `.rs` file under `root` keyed by root-relative path.
+pub fn load_tree(root: &Path) -> io::Result<BTreeMap<String, SourceFile>> {
+    let mut files = BTreeMap::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        for entry in fs::read_dir(&dir)? {
+            let path = entry?.path();
+            if path.is_dir() {
+                stack.push(path);
+                continue;
+            }
+            if path.extension().and_then(|e| e.to_str()) != Some("rs") {
+                continue;
+            }
+            let rel_path = path.strip_prefix(root).unwrap_or(&path);
+            let rel = rel_path.to_string_lossy().replace('\\', "/");
+            let text = fs::read_to_string(&path)?;
+            files.insert(rel.clone(), SourceFile::new(&rel, &text));
+        }
+    }
+    Ok(files)
+}
+
+/// Load `root` and run every rule.
+pub fn check_tree(root: &Path) -> io::Result<Vec<Finding>> {
+    Ok(check_sources(&load_tree(root)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one(rel: &str, text: &str) -> BTreeMap<String, SourceFile> {
+        let mut m = BTreeMap::new();
+        m.insert(rel.to_string(), SourceFile::new(rel, text));
+        m
+    }
+
+    fn rules_of(findings: &[Finding]) -> Vec<&'static str> {
+        findings.iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn safety_flags_bare_unsafe_block() {
+        let src = "fn f() -> u32 {\n    unsafe { danger() }\n}\n";
+        let found = rule_safety(&SourceFile::new("x.rs", src));
+        assert_eq!(rules_of(&found), ["unsafe-safety"]);
+        assert_eq!(found[0].line, 2);
+    }
+
+    #[test]
+    fn safety_accepts_adjacent_comment_and_test_code() {
+        let src = "fn f() -> u32 {\n    // SAFETY: f is only called single-threaded.\n    \
+                   unsafe { danger() }\n}\n#[cfg(test)]\nmod tests {\n    fn g() -> u32 {\n        \
+                   unsafe { danger() }\n    }\n}\n";
+        assert!(rule_safety(&SourceFile::new("x.rs", src)).is_empty());
+    }
+
+    #[test]
+    fn safety_shared_comment_covers_impl_pair_and_doc_covers_fn() {
+        let src = "// SAFETY: disjoint ranges only, per the module contract.\n\
+                   unsafe impl<T: Send> Send for S<T> {}\n\
+                   unsafe impl<T: Send> Sync for S<T> {}\n\
+                   /// Doc.\n///\n/// # Safety\n/// Caller keeps `i` exclusive.\n\
+                   #[allow(clippy::mut_from_ref)]\n\
+                   pub unsafe fn write(&self, i: usize) {}\n";
+        assert!(rule_safety(&SourceFile::new("x.rs", src)).is_empty());
+    }
+
+    #[test]
+    fn safety_ignores_commented_and_quoted_unsafe() {
+        let src = "fn f() {\n    // unsafe is discussed here only\n    \
+                   let s = \"unsafe { }\";\n}\n";
+        assert!(rule_safety(&SourceFile::new("x.rs", src)).is_empty());
+    }
+
+    #[test]
+    fn clock_flags_instant_now_outside_allowlist() {
+        let src = "fn f() {\n    let t = Instant::now();\n}\n";
+        let found = rule_clock(&SourceFile::new("canny/pipeline.rs", src));
+        assert_eq!(rules_of(&found), ["clock-purity"]);
+        assert_eq!(found[0].line, 2);
+    }
+
+    #[test]
+    fn clock_allows_allowlisted_files_and_test_code() {
+        let src = "fn f() {\n    let t = Instant::now();\n}\n";
+        assert!(rule_clock(&SourceFile::new("util/timer.rs", src)).is_empty());
+        let test_only = "fn f() {}\n#[cfg(test)]\nmod tests {\n    \
+                         fn g() { let t = Instant::now(); }\n}\n";
+        assert!(rule_clock(&SourceFile::new("canny/pipeline.rs", test_only)).is_empty());
+    }
+
+    const OBS_DOC: &str = "//! Telemetry.\n//!\n//! ```json\n//! {\"seq\": 0, \"tier\": \
+                           \"serve\"}\n//! ```\npub struct T;\n";
+
+    #[test]
+    fn schema_flags_undocumented_emitted_key() {
+        let mut files = one("obs/mod.rs", OBS_DOC);
+        let snap = "fn build(m: &mut M) {\n    m.insert(\"seq\".into(), 1);\n    \
+                    m.insert(\"stray\".into(), 2);\n}\n";
+        files.insert("obs/snapshot.rs".into(), SourceFile::new("obs/snapshot.rs", snap));
+        let found = rule_schema(&files);
+        assert_eq!(rules_of(&found), ["schema-parity"]);
+        assert!(found[0].message.contains("`stray`"));
+        assert_eq!(found[0].line, 3);
+    }
+
+    #[test]
+    fn schema_accepts_documented_keys_and_checks_required_list() {
+        let mut files = one("obs/mod.rs", OBS_DOC);
+        let snap = "pub const REQUIRED_LINE_KEYS: [&str; 2] = [\"seq\", \"tier\"];\n\
+                    fn build(m: &mut M) {\n    m.insert(\"seq\".into(), 1);\n    \
+                    m.insert(\"tier\".into(), 2);\n}\n";
+        files.insert("obs/snapshot.rs".into(), SourceFile::new("obs/snapshot.rs", snap));
+        assert!(rule_schema(&files).is_empty());
+    }
+
+    #[test]
+    fn schema_flags_required_key_never_emitted_or_documented() {
+        let mut files = one("obs/mod.rs", OBS_DOC);
+        let snap = "pub const REQUIRED_LINE_KEYS: [&str; 2] = [\"seq\", \"ghost\"];\n\
+                    fn build(m: &mut M) {\n    m.insert(\"seq\".into(), 1);\n}\n";
+        files.insert("obs/snapshot.rs".into(), SourceFile::new("obs/snapshot.rs", snap));
+        let found = rule_schema(&files);
+        assert_eq!(found.len(), 2, "{found:?}");
+        assert!(found.iter().all(|f| f.message.contains("`ghost`")));
+    }
+
+    #[test]
+    fn schema_reads_multiline_inserts_and_skips_tests() {
+        let mut files = one("obs/mod.rs", OBS_DOC);
+        let snap = "fn build(m: &mut M) {\n    m.insert(\n        \"seq\".into(),\n        \
+                    1,\n    );\n}\n#[cfg(test)]\nmod tests {\n    fn t(m: &mut M) { \
+                    m.insert(\"not_a_schema_key\".into(), 3); }\n}\n";
+        files.insert("obs/snapshot.rs".into(), SourceFile::new("obs/snapshot.rs", snap));
+        assert!(rule_schema(&files).is_empty());
+    }
+
+    const CONFIG_SRC: &str = "impl RunConfig {\n    pub const KEYS: &'static [&'static str] = \
+                              &[\"alpha\", \"beta\", \"beta_us\"];\n}\n";
+
+    fn main_src(help_flags_line: &str) -> String {
+        format!(
+            "const HELP: &str = \"\\\nUSAGE: cannyd run\n{help_flags_line}\n\";\n\
+             fn allowed_extras(cmd: &str) -> &'static [&'static str] {{\n    match cmd {{\n        \
+             \"run\" => &[\"config\", \"input\"],\n        _ => &[\"config\"],\n    }}\n}}\n"
+        )
+    }
+
+    #[test]
+    fn flags_accepts_matching_help_and_keys() {
+        let mut files = one("main.rs", &main_src("--alpha N --beta F --input X --config FILE"));
+        files.insert("config/mod.rs".into(), SourceFile::new("config/mod.rs", CONFIG_SRC));
+        let found = rule_flags(&files);
+        assert!(found.is_empty(), "{found:?}");
+    }
+
+    #[test]
+    fn flags_catches_orphan_help_flag_and_missing_key() {
+        let mut files = one("main.rs", &main_src("--alpha N --gamma Q"));
+        files.insert("config/mod.rs".into(), SourceFile::new("config/mod.rs", CONFIG_SRC));
+        let found = rule_flags(&files);
+        assert_eq!(rules_of(&found), ["flag-parity", "flag-parity"]);
+        let all = format!("{found:?}");
+        assert!(all.contains("`--beta`"), "{all}");
+        assert!(all.contains("`--gamma`"), "{all}");
+    }
+
+    #[test]
+    fn locks_flags_nested_distinct_mutexes() {
+        let src = "fn f(a: &S, b: &S) {\n    let g = a.inner.lock().unwrap();\n    \
+                   let h = b.other.lock().unwrap();\n}\n";
+        let found = rule_locks(&SourceFile::new("cache/shard.rs", src));
+        assert_eq!(rules_of(&found), ["lock-order"]);
+        assert_eq!(found[0].line, 3);
+    }
+
+    #[test]
+    fn locks_allows_sequential_scopes_temporaries_and_other_files() {
+        let seq = "fn f(a: &S, b: &S) {\n    {\n        let g = a.inner.lock().unwrap();\n        \
+                   g.touch();\n    }\n    {\n        let h = b.other.lock().unwrap();\n        \
+                   h.touch();\n    }\n}\n";
+        assert!(rule_locks(&SourceFile::new("cache/shard.rs", seq)).is_empty());
+        let tmp = "fn f(a: &S, b: &S) {\n    let missed = a.inner.lock().unwrap().missed();\n    \
+                   let h = b.other.lock().unwrap();\n}\n";
+        assert!(rule_locks(&SourceFile::new("service/server.rs", tmp)).is_empty());
+        let nested = "fn f(a: &S, b: &S) {\n    let g = a.inner.lock().unwrap();\n    \
+                      let h = b.other.lock().unwrap();\n}\n";
+        assert!(rule_locks(&SourceFile::new("stream/mod.rs", nested)).is_empty());
+    }
+
+    #[test]
+    fn locks_respects_explicit_drop() {
+        let src = "fn f(a: &S, b: &S) {\n    let g = a.inner.lock().unwrap();\n    \
+                   drop(g);\n    let h = b.other.lock().unwrap();\n}\n";
+        assert!(rule_locks(&SourceFile::new("cache/shard.rs", src)).is_empty());
+    }
+
+    #[test]
+    fn check_sources_orders_findings_by_file_and_line() {
+        let mut files = one("b.rs", "fn f() { unsafe { x() } }\n");
+        files.insert("a.rs".into(), SourceFile::new("a.rs", "fn g() { unsafe { y() } }\n"));
+        let found = check_sources(&files);
+        assert_eq!(found.len(), 2);
+        assert_eq!(found[0].file, "a.rs");
+        assert_eq!(found[1].file, "b.rs");
+    }
+}

@@ -1,0 +1,37 @@
+//! `pallas-lint` binary: run every repo-invariant rule over a source
+//! tree (default `rust/src`) and exit non-zero on findings.
+//!
+//! Exit codes: 0 = clean, 1 = findings, 2 = usage or I/O error.
+
+use std::path::Path;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a == "--help" || a == "-h") {
+        eprintln!("usage: pallas-lint [SRC_ROOT]   (default: rust/src)");
+        return ExitCode::from(2);
+    }
+    if args.len() > 1 {
+        eprintln!("pallas-lint: expected at most one source root, got {}", args.len());
+        return ExitCode::from(2);
+    }
+    let root = args.first().map(String::as_str).unwrap_or("rust/src");
+    match pallas_lint::check_tree(Path::new(root)) {
+        Ok(findings) if findings.is_empty() => {
+            println!("pallas-lint: {root}: clean");
+            ExitCode::SUCCESS
+        }
+        Ok(findings) => {
+            for f in &findings {
+                println!("{f}");
+            }
+            println!("pallas-lint: {} finding(s) in {root}", findings.len());
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("pallas-lint: {root}: {e}");
+            ExitCode::from(2)
+        }
+    }
+}

@@ -1,0 +1,46 @@
+//! The lint must pass on the repo it ships in: zero findings over
+//! `rust/src`, through both the library entry point and the binary.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn src_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../../rust/src")
+}
+
+#[test]
+fn repo_sources_have_zero_findings() {
+    let findings = pallas_lint::check_tree(&src_root()).expect("walk rust/src");
+    let rendered: Vec<String> = findings.iter().map(|f| f.to_string()).collect();
+    assert!(findings.is_empty(), "lint findings:\n{}", rendered.join("\n"));
+}
+
+#[test]
+fn repo_rules_actually_ran() {
+    // Guard against the silent-pass failure mode: if the tree moved or
+    // the markers rot, the rules would "pass" by scanning nothing.
+    let files = pallas_lint::load_tree(&src_root()).expect("walk rust/src");
+    assert!(files.len() > 30, "expected a real tree, got {} files", files.len());
+    for rel in ["main.rs", "config/mod.rs", "obs/mod.rs", "obs/snapshot.rs"] {
+        assert!(files.contains_key(rel), "missing {rel}");
+    }
+    let snap = &files["obs/snapshot.rs"];
+    assert!(!pallas_lint::const_str_array(snap, "REQUIRED_LINE_KEYS").is_empty());
+    let main = &files["main.rs"];
+    let (help, _) = pallas_lint::string_const(main, "const HELP").expect("HELP const");
+    assert!(pallas_lint::help_flags(&help).len() > 20, "HELP flag extraction rotted");
+}
+
+#[test]
+fn binary_exits_zero_on_repo() {
+    let out = Command::new(env!("CARGO_BIN_EXE_pallas-lint"))
+        .arg(src_root())
+        .output()
+        .expect("run pallas-lint binary");
+    assert!(
+        out.status.success(),
+        "stdout:\n{}\nstderr:\n{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
