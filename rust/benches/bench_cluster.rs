@@ -1,0 +1,119 @@
+//! Cluster-tier scaling bench: the same synthetic trace through real
+//! `cannyd worker` process fleets of 1, 2 and 4, reported as Mpix/s
+//! and latency percentiles per fleet size — and written to
+//! `BENCH_cluster.json` so CI can archive the numbers as a non-gating
+//! artifact (process spawn + loopback framing make these even noisier
+//! than the serve bench; regressions are read from the artifact
+//! history, never from a red build).
+//!
+//! Run: `cargo bench --bench bench_cluster`
+//! Output: `BENCH_cluster.json` (override with `BENCH_CLUSTER_JSON=path`).
+
+use std::collections::BTreeMap;
+
+use canny_par::bench::Table;
+use canny_par::cluster::{run_cluster, ClusterOptions, WORKER_EXE_ENV};
+use canny_par::config::RunConfig;
+use canny_par::service::Trace;
+use canny_par::util::json::Json;
+use canny_par::util::timer::human_ns;
+
+/// The artifact schema CI archives: exactly these keys at the top
+/// level, and exactly the fleet keys in every `fleets` entry. The
+/// assertions below fail the bench when a key drifts.
+const REQUIRED_BENCH_KEYS: [&str; 5] = ["bench", "width", "height", "requests", "fleets"];
+const REQUIRED_FLEET_KEYS: [&str; 8] = [
+    "workers",
+    "completed",
+    "requeued",
+    "restarts",
+    "makespan_ns",
+    "mpix_per_s",
+    "p50_ns",
+    "p99_ns",
+];
+
+/// Nearest-rank percentile over an already-sorted slice.
+fn pct(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+fn main() {
+    // The bench harness is not `cannyd`; point worker respawns at the
+    // binary cargo built alongside this bench.
+    std::env::set_var(WORKER_EXE_ENV, env!("CARGO_BIN_EXE_cannyd"));
+
+    let (w, h) = (256usize, 256);
+    let n = 32usize;
+    let mut trace = Trace::synthetic(n, 7, 2_000.0);
+    for r in &mut trace.requests {
+        r.width = w;
+        r.height = h;
+    }
+
+    let mut t = Table::new(&["workers", "completed", "makespan", "Mpix/s", "p50", "p99"]);
+    let mut fleets = Vec::new();
+    for workers in [1usize, 2, 4] {
+        let mut cfg = RunConfig::default();
+        cfg.set("workers", &workers.to_string()).expect("set workers");
+        let opts = ClusterOptions::from_config(&cfg);
+        let label = format!("bench_cluster[workers={workers}]");
+        let out = run_cluster(&label, &trace, &opts).expect("cluster run");
+        let report = &out.report;
+
+        let wall_s = report.makespan_ns as f64 / 1e9;
+        let mpix = (report.completed as usize * w * h) as f64 / 1e6;
+        let mpix_per_s = if wall_s > 0.0 { mpix / wall_s } else { 0.0 };
+        let mut sorted = report.latencies_ns.clone();
+        sorted.sort_unstable();
+        let (p50, p99) = (pct(&sorted, 50.0), pct(&sorted, 99.0));
+
+        t.row(&[
+            workers.to_string(),
+            report.completed.to_string(),
+            human_ns(report.makespan_ns),
+            format!("{mpix_per_s:.2}"),
+            human_ns(p50),
+            human_ns(p99),
+        ]);
+
+        let num = Json::Num;
+        let mut f = BTreeMap::new();
+        f.insert("workers".into(), num(workers as f64));
+        f.insert("completed".into(), num(report.completed as f64));
+        f.insert("requeued".into(), num(report.requeued as f64));
+        f.insert("restarts".into(), num(report.restarts as f64));
+        f.insert("makespan_ns".into(), num(report.makespan_ns as f64));
+        f.insert("mpix_per_s".into(), num(mpix_per_s));
+        f.insert("p50_ns".into(), num(p50 as f64));
+        f.insert("p99_ns".into(), num(p99 as f64));
+        for key in REQUIRED_FLEET_KEYS {
+            assert!(f.contains_key(key), "fleet entry is missing required key `{key}`");
+        }
+        assert_eq!(f.len(), REQUIRED_FLEET_KEYS.len(), "fleet entry emits undeclared keys");
+        fleets.push(Json::Obj(f));
+    }
+
+    println!("cluster tier, {n} requests at {w}x{h}, process fleets of 1/2/4:");
+    t.print();
+
+    let num = Json::Num;
+    let mut m = BTreeMap::new();
+    m.insert("bench".into(), Json::Str("cluster".into()));
+    m.insert("width".into(), num(w as f64));
+    m.insert("height".into(), num(h as f64));
+    m.insert("requests".into(), num(n as f64));
+    m.insert("fleets".into(), Json::Arr(fleets));
+    for key in REQUIRED_BENCH_KEYS {
+        assert!(m.contains_key(key), "bench artifact is missing required key `{key}`");
+    }
+    assert_eq!(m.len(), REQUIRED_BENCH_KEYS.len(), "bench artifact emits undeclared keys");
+    let path =
+        std::env::var("BENCH_CLUSTER_JSON").unwrap_or_else(|_| "BENCH_cluster.json".into());
+    std::fs::write(&path, Json::Obj(m).dump() + "\n").expect("write bench artifact");
+    println!("wrote {path}");
+}

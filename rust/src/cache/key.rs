@@ -31,7 +31,7 @@
 //! `lo`/`hi` in, since those stages' outputs depend on them.
 
 use crate::canny::{CannyParams, StageKind};
-use crate::image::ImageF32;
+use crate::image::{EdgeMap, ImageF32};
 
 const FNV_OFFSET_A: u64 = 0xcbf2_9ce4_8422_2325;
 const FNV_OFFSET_B: u64 = 0xcbf2_9ce4_8422_2325 ^ 0x9e37_79b9_7f4a_7c15;
@@ -58,6 +58,19 @@ impl ArtifactKey {
     /// re-threshold of the same content shares this key.
     pub fn suppressed(img: &ImageF32) -> ArtifactKey {
         ArtifactKey::for_span(img, None, StageKind::Pad, StageKind::Nms)
+    }
+
+    /// Digest of a finished edge map — dimensions plus the 0/1 mask
+    /// bytes. Not a cache key (edge maps are cheap to rebuild from a
+    /// suppressed artifact); the cluster tier uses it to assert that a
+    /// routed worker produced bit-identical output to the
+    /// single-process path.
+    pub fn edges(edges: &EdgeMap) -> ArtifactKey {
+        let mut h = KeyHasher::new();
+        h.write_u64(edges.width() as u64);
+        h.write_u64(edges.height() as u64);
+        h.write(edges.data());
+        h.finish()
     }
 
     /// General form: digest `img`'s bytes, the `first..=last` span tag,
@@ -191,6 +204,22 @@ mod tests {
             ArtifactKey::for_span(&img, Some(&p1), StageKind::Pad, StageKind::Threshold),
             ArtifactKey::for_span(&img, Some(&p2), StageKind::Pad, StageKind::Threshold),
         );
+    }
+
+    #[test]
+    fn edge_digest_tracks_content_and_geometry() {
+        use crate::image::EdgeMap;
+        let mut bytes = vec![0u8; 24];
+        bytes[8] = 255;
+        let a = EdgeMap::new(6, 4, bytes.clone()).unwrap();
+        let b = EdgeMap::new(6, 4, bytes.clone()).unwrap();
+        assert_eq!(ArtifactKey::edges(&a), ArtifactKey::edges(&b));
+        bytes[15] = 255;
+        let c = EdgeMap::new(6, 4, bytes.clone()).unwrap();
+        assert_ne!(ArtifactKey::edges(&a), ArtifactKey::edges(&c));
+        // Same bytes, transposed geometry: distinct digests.
+        let d = EdgeMap::new(4, 6, bytes).unwrap();
+        assert_ne!(ArtifactKey::edges(&c), ArtifactKey::edges(&d));
     }
 
     #[test]

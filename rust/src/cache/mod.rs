@@ -32,6 +32,15 @@
 //! * [`stats`] — hit/miss/eviction/admission accounting per caller
 //!   tier, snapshotted into the reports' `cache` JSON section.
 //!
+//! Rejected offers are additionally remembered in a small bounded
+//! **negative set**: a repeat offer of a digest the cache has already
+//! turned away (policy reject or too-large) is refused from that set
+//! without re-running admission math or taking a shard lock, and
+//! callers can probe [`ArtifactCache::was_rejected`] before even
+//! materializing an artifact. Refusals replay the original reject
+//! counter and add to `negative_hits`, so counter totals match what
+//! the slow path would have produced.
+//!
 //! Configured via `--cache-mb`, `--cache-shards`,
 //! `--cache-admit-ns-per-byte` (see [`crate::config::RunConfig`]);
 //! `--cache-mb 0` disables the tier entirely (every consult misses
@@ -46,7 +55,9 @@ pub use key::{ArtifactKey, KeyHasher};
 pub use policy::AdmissionPolicy;
 pub use stats::{CacheSnapshot, CacheTier, TierSnapshot};
 
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::Ordering;
+use std::sync::Mutex;
 
 use crate::cache::shard::{InsertOutcome, ShardStore};
 use crate::cache::stats::CacheStats;
@@ -99,6 +110,53 @@ impl CacheConfig {
     }
 }
 
+/// How many rejected digests the negative set remembers before the
+/// oldest age out (FIFO). Keys are 16 bytes, so the whole set costs a
+/// few tens of KiB — noise next to the byte budget it protects.
+const NEGATIVE_CAP: usize = 1024;
+
+/// Why an offer was refused — replayed on negative hits so the
+/// per-tier reject counters stay exactly what re-running the slow
+/// path would have produced.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum RejectReason {
+    /// Failed the cost-per-byte admission policy.
+    Policy,
+    /// Exceeded a shard's slice of the byte budget.
+    TooLarge,
+}
+
+/// Bounded FIFO memory of rejected digests — the negative cache.
+/// Rejection is sticky: once a digest is remembered, repeat offers are
+/// refused without re-running admission until the entry ages out
+/// (`NEGATIVE_CAP` newer rejects later).
+#[derive(Debug, Default)]
+struct NegativeSet {
+    reasons: BTreeMap<ArtifactKey, RejectReason>,
+    order: VecDeque<ArtifactKey>,
+}
+
+impl NegativeSet {
+    fn remember(&mut self, key: ArtifactKey, reason: RejectReason) {
+        if self.reasons.insert(key, reason).is_none() {
+            self.order.push_back(key);
+            while self.order.len() > NEGATIVE_CAP {
+                if let Some(old) = self.order.pop_front() {
+                    self.reasons.remove(&old);
+                }
+            }
+        }
+    }
+
+    fn reason(&self, key: &ArtifactKey) -> Option<RejectReason> {
+        self.reasons.get(key).copied()
+    }
+
+    fn len(&self) -> usize {
+        self.reasons.len()
+    }
+}
+
 /// The process-wide artifact cache: share one `Arc<ArtifactCache>`
 /// between every serving lane and stream executor that should
 /// deduplicate work. All methods take `&self` — the sharded interior
@@ -109,6 +167,9 @@ pub struct ArtifactCache {
     shards: Vec<ShardStore>,
     policy: AdmissionPolicy,
     stats: CacheStats,
+    /// Rejected-key memory. Locked only on offers and `was_rejected`
+    /// probes, released before any shard lock is taken (never nested).
+    negative: Mutex<NegativeSet>,
 }
 
 impl ArtifactCache {
@@ -126,6 +187,7 @@ impl ArtifactCache {
             policy: AdmissionPolicy::new(cfg.admit_min_ns_per_byte),
             shards,
             stats: CacheStats::default(),
+            negative: Mutex::new(NegativeSet::default()),
             cfg,
         }
     }
@@ -168,11 +230,25 @@ impl ArtifactCache {
         }
     }
 
+    /// Has this digest already been turned away (policy reject or
+    /// too-large)? A true answer means a repeat [`ArtifactCache::offer`]
+    /// would be refused from the negative set — callers can skip
+    /// materializing the artifact at all. Does not count anything.
+    pub fn was_rejected(&self, key: &ArtifactKey) -> bool {
+        self.enabled()
+            && self.negative.lock().expect("negative set lock poisoned").reason(key).is_some()
+    }
+
     /// Offer an artifact for residency. `recompute_ns` is the caller's
     /// estimate of what a future hit saves (calibrated kind cost for
     /// serving lanes, measured front wall for streams); the admission
     /// policy weighs it against the artifact's byte cost. Returns true
     /// when the artifact was stored.
+    ///
+    /// A digest the cache has already rejected is refused straight from
+    /// the negative set (sticky until it ages out): the original reject
+    /// counter is replayed — totals match the slow path — plus one
+    /// `negative_hits`, and no shard lock is taken.
     pub fn offer(
         &self,
         key: ArtifactKey,
@@ -185,8 +261,21 @@ impl ArtifactCache {
         }
         let bytes = artifact.byte_size() as u64;
         let t = self.stats.tier(tier);
+        let remembered = self.negative.lock().expect("negative set lock poisoned").reason(&key);
+        if let Some(reason) = remembered {
+            match reason {
+                RejectReason::Policy => t.admission_rejects.fetch_add(1, Ordering::Relaxed),
+                RejectReason::TooLarge => t.too_large.fetch_add(1, Ordering::Relaxed),
+            };
+            self.stats.negative_hits.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
         if !self.policy.admits(recompute_ns, bytes) {
             t.admission_rejects.fetch_add(1, Ordering::Relaxed);
+            self.negative
+                .lock()
+                .expect("negative set lock poisoned")
+                .remember(key, RejectReason::Policy);
             return false;
         }
         match self.shards[key.shard(self.shards.len())].insert(key, artifact, bytes) {
@@ -202,6 +291,10 @@ impl ArtifactCache {
             // --cache-shards" from "raise the admission bar".
             InsertOutcome::TooLarge => {
                 t.too_large.fetch_add(1, Ordering::Relaxed);
+                self.negative
+                    .lock()
+                    .expect("negative set lock poisoned")
+                    .remember(key, RejectReason::TooLarge);
                 false
             }
         }
@@ -235,6 +328,9 @@ impl ArtifactCache {
             entries: self.len() as u64,
             high_water_bytes: self.shards.iter().map(ShardStore::high_water_bytes).sum(),
             evictions: self.stats.evictions.load(Ordering::Relaxed),
+            negative_hits: self.stats.negative_hits.load(Ordering::Relaxed),
+            negative_entries: self.negative.lock().expect("negative set lock poisoned").len()
+                as u64,
             tiers: self.stats.snapshot_tiers(),
         }
     }
@@ -343,6 +439,78 @@ mod tests {
         assert_eq!(snap.too_large(), 1);
         assert_eq!(snap.admission_rejects(), 0);
         assert_eq!(snap.entries, 0);
+    }
+
+    #[test]
+    fn repeat_rejected_offers_hit_the_negative_set() {
+        let c = ArtifactCache::new(CacheConfig {
+            budget_bytes: 1 << 20,
+            shards: 2,
+            admit_min_ns_per_byte: 10.0,
+        });
+        assert!(!c.was_rejected(&key_n(1)));
+        // First cheap offer runs the policy and is remembered.
+        assert!(!c.offer(key_n(1), suppressed(256), 100, CacheTier::Serve));
+        assert!(c.was_rejected(&key_n(1)));
+        let snap = c.snapshot();
+        assert_eq!((snap.admission_rejects(), snap.negative_hits, snap.negative_entries), (1, 0, 1));
+        // Repeat offer — even with a recompute cost that would now
+        // clear the bar — is refused from the negative set (sticky),
+        // replaying the policy-reject counter plus one negative hit.
+        assert!(!c.offer(key_n(1), suppressed(256), u64::MAX, CacheTier::Serve));
+        let snap = c.snapshot();
+        assert_eq!((snap.admission_rejects(), snap.negative_hits, snap.negative_entries), (2, 1, 1));
+        assert_eq!((snap.inserts(), snap.entries), (0, 0));
+        // Admitted digests never enter the set.
+        assert!(c.offer(key_n(2), suppressed(256), 1_000_000, CacheTier::Serve));
+        assert!(!c.was_rejected(&key_n(2)));
+    }
+
+    #[test]
+    fn too_large_rejects_replay_their_own_counter() {
+        // 2 KiB shard slices: a 4 KiB artifact is structurally
+        // uncacheable; the repeat refusal must count as too_large
+        // again, not as a policy reject.
+        let c = ArtifactCache::new(CacheConfig {
+            budget_bytes: 8192,
+            shards: 4,
+            admit_min_ns_per_byte: 0.0,
+        });
+        assert!(!c.offer(key_n(9), suppressed(1024), u64::MAX, CacheTier::Stream));
+        assert!(!c.offer(key_n(9), suppressed(1024), u64::MAX, CacheTier::Stream));
+        let snap = c.snapshot();
+        assert_eq!(snap.too_large(), 2);
+        assert_eq!(snap.admission_rejects(), 0);
+        assert_eq!((snap.negative_hits, snap.negative_entries), (1, 1));
+    }
+
+    #[test]
+    fn negative_set_is_bounded_fifo() {
+        let c = ArtifactCache::new(CacheConfig {
+            budget_bytes: 1 << 20,
+            shards: 2,
+            admit_min_ns_per_byte: 10.0,
+        });
+        let extra = 40;
+        for n in 0..(NEGATIVE_CAP + extra) as u64 {
+            c.offer(key_n(n), suppressed(256), 100, CacheTier::Serve);
+        }
+        let snap = c.snapshot();
+        assert_eq!(snap.negative_entries, NEGATIVE_CAP as u64);
+        // Oldest rejects aged out, newest are still remembered.
+        assert!(!c.was_rejected(&key_n(0)));
+        assert!(!c.was_rejected(&key_n(extra as u64 - 1)));
+        assert!(c.was_rejected(&key_n(extra as u64)));
+        assert!(c.was_rejected(&key_n((NEGATIVE_CAP + extra - 1) as u64)));
+    }
+
+    #[test]
+    fn disabled_cache_has_no_negative_memory() {
+        let c = ArtifactCache::disabled();
+        assert!(!c.offer(key_n(3), suppressed(16), 0, CacheTier::Serve));
+        assert!(!c.was_rejected(&key_n(3)));
+        let snap = c.snapshot();
+        assert_eq!((snap.negative_hits, snap.negative_entries), (0, 0));
     }
 
     #[test]

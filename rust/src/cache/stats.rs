@@ -78,6 +78,10 @@ impl TierCounters {
 pub struct CacheStats {
     tiers: [TierCounters; 2],
     pub evictions: AtomicU64,
+    /// Consults (gets or offers) answered from the negative set — a
+    /// previously-rejected digest refused again without touching its
+    /// shard. Cross-tier like `evictions`: the set is global.
+    pub negative_hits: AtomicU64,
 }
 
 impl CacheStats {
@@ -139,6 +143,11 @@ pub struct CacheSnapshot {
     /// global occupancy, and never above `budget_bytes`.
     pub high_water_bytes: u64,
     pub evictions: u64,
+    /// Consults refused by the negative (rejected-key) set without
+    /// re-running admission or touching a shard lock.
+    pub negative_hits: u64,
+    /// Rejected digests currently remembered by the negative set.
+    pub negative_entries: u64,
     /// Per-tier counters, every tier always present (stable schema).
     pub tiers: Vec<(&'static str, TierSnapshot)>,
 }
@@ -182,6 +191,8 @@ impl CacheSnapshot {
         m.insert("entries".into(), num(self.entries));
         m.insert("high_water_bytes".into(), num(self.high_water_bytes));
         m.insert("evictions".into(), num(self.evictions));
+        m.insert("negative_hits".into(), num(self.negative_hits));
+        m.insert("negative_entries".into(), num(self.negative_entries));
         m.insert("lookups".into(), num(self.lookups()));
         m.insert("hits".into(), num(self.hits()));
         m.insert("misses".into(), num(self.misses()));
@@ -234,6 +245,8 @@ mod tests {
             entries: 3,
             high_water_bytes: 128,
             evictions: 2,
+            negative_hits: 4,
+            negative_entries: 1,
             tiers: vec![
                 (
                     "serve",
@@ -256,6 +269,8 @@ mod tests {
         let j = snap.to_json();
         assert_eq!(j.get("enabled"), Some(&Json::Bool(true)));
         assert_eq!(j.get("hits").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("negative_hits").unwrap().as_usize(), Some(4));
+        assert_eq!(j.get("negative_entries").unwrap().as_usize(), Some(1));
         assert_eq!(
             j.get("tiers").unwrap().get("serve").unwrap().get("lookups").unwrap().as_usize(),
             Some(5)

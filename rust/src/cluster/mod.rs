@@ -1,0 +1,98 @@
+//! The **cluster tier** — multi-process `cannyd`: a front-door router
+//! that spawns and supervises N `cannyd worker` processes over loopback
+//! TCP and routes requests to them by content digest.
+//!
+//! The paper scales one detection across the cores of one process;
+//! PR 4's serve tier scales a request stream across lanes *in* one
+//! process. This tier is the next rung: the same request stream spread
+//! over separate OS processes, which buys crash isolation (a worker
+//! segfault costs a restart, not the run — exercised by the
+//! kill/restart tests) and a sharded cluster cache for free. Routing is
+//! **digest-affine** ([`router::RoutingRing`]): the worker whose hash
+//! range owns a content digest serves *every* request about that
+//! content, so each worker's private [`crate::cache::ArtifactCache`]
+//! holds a disjoint content shard and a re-threshold sweep hits the
+//! front its own worker warmed — no cross-process cache coherence
+//! needed, the same trick that made the in-process cache shardable.
+//!
+//! Four moving parts:
+//!
+//! * [`proto`] — u32 big-endian length-prefixed JSON frames (schema
+//!   below). Requests carry scene *specs*, never pixels: both ends
+//!   regenerate content deterministically, the trace-file trick at the
+//!   process boundary.
+//! * [`worker`] — the child process: a full single-process serving
+//!   stack (detector + cache + telemetry) behind a blocking frame loop.
+//! * [`supervisor`] — spawn, `hello` handshake, and restart-on-death
+//!   with health-transition alerts through the `--alert-log` sink.
+//! * [`router`] — consistent-hash routing, closed-loop dispatch with
+//!   requeue-on-death, and the merged [`report::ClusterReport`].
+//!
+//! Determinism carries across the process boundary: every engine
+//! produces bit-identical artifacts, so `cannyd cluster --workers N` is
+//! byte-identical in its responses to single-process `cannyd serve` on
+//! the same trace — the integration suite asserts it, restarts and all.
+//!
+//! ## Wire frames (one JSON object per length-prefixed frame)
+//!
+//! ```json
+//! {"frame": "hello", "worker": 0}
+//! {"frame": "request", "id": 7, "arrival_ns": 1250000, "width": 128,
+//!  "height": 96, "scene": "shapes:11", "kind": "re-threshold",
+//!  "lo": 0.03, "hi": 0.21}
+//! {"frame": "response", "id": 7, "edge_pixels": 1834,
+//!  "digest": "9f8a3c00112233445566778899aabbcc"}
+//! {"frame": "ping", "t_ns": 41000000}
+//! {"frame": "pong", "t_ns": 41000000}
+//! {"frame": "report"}
+//! {"frame": "worker_report", "body": {"...": "see per_worker below"}}
+//! {"frame": "shutdown"}
+//! ```
+//!
+//! `digest` is the 128-bit artifact digest as a 32-hex-char string
+//! (JSON numbers are f64 and would round above 2^53).
+//!
+//! ## Merged cluster report (`cannyd cluster` stdout)
+//!
+//! ```json
+//! {
+//!   "label": "cluster[synthetic n=40 seed=7]",
+//!   "tier": "cluster",
+//!   "workers": 2,
+//!   "requests": 40,
+//!   "completed": 40,
+//!   "requeued": 1,
+//!   "restarts": 1,
+//!   "alerts": 2,
+//!   "makespan_ns": 182000000,
+//!   "edge_pixels": 51234,
+//!   "latency_ns": {"n": 40, "p50": 2100000, "p95": 5400000,
+//!                  "p99": 8100000, "max": 9000000, "mean": 2512000.5},
+//!   "per_worker": [
+//!     {"worker": 0, "served": 23, "edge_pixels": 30000,
+//!      "kinds": {"full": 20, "front-only": 1, "re-threshold": 2},
+//!      "cache": {"...": "a cache section, schema in service/mod.rs"},
+//!      "telemetry": {"...": "a snapshot line, schema in obs/mod.rs"}}
+//!   ]
+//! }
+//! ```
+//!
+//! `requests` counts trace arrivals, `completed` counts responses
+//! (equal once every requeued request lands), `requeued`/`restarts`
+//! count the recovery work, and `alerts` the health-transition lines
+//! the supervisor emitted (two per restart). `per_worker` bodies are
+//! exactly the `worker_report` frame bodies, slot order.
+
+pub mod proto;
+pub mod report;
+pub mod router;
+pub mod supervisor;
+pub mod worker;
+
+pub use report::{ClusterReport, WorkerReport, REQUIRED_CLUSTER_KEYS, REQUIRED_WORKER_KEYS};
+pub use router::{
+    route_digest, run_cluster, ClusterOptions, ClusterOutcome, ResponseRecord, RoutingRing,
+    DEFAULT_WORKERS,
+};
+pub use supervisor::{Supervisor, WorkerFault, WorkerLink, WORKER_EXE_ENV};
+pub use worker::{run_worker, WorkerCore, WORKER_FAULT_ENV};

@@ -1,0 +1,340 @@
+//! Wire frames for the cluster tier: u32 big-endian length-prefixed
+//! JSON over loopback TCP, reusing the dependency-free
+//! [`crate::util::json`] codec. One frame = one JSON object with a
+//! `frame` discriminator; the full schema lives in the
+//! [`crate::cluster`] module docs (linted for parity by pallas-lint).
+//!
+//! JSON-over-TCP is deliberate: the frames are small (requests carry a
+//! scene *spec*, never pixels — both sides regenerate content from the
+//! deterministic scene generators, the same trick the trace file format
+//! uses), the router is not the hot path (workers are), and a
+//! text-diffable protocol keeps the kill/restart tests and the merged
+//! report byte-deterministic. Digests are shipped as fixed-width hex
+//! strings because `Json::Num` is an `f64` and would silently round a
+//! full 64-bit FNV stream above 2^53.
+
+use std::io::{Read, Write};
+
+use crate::cache::ArtifactKey;
+use crate::error::{Error, Result};
+use crate::image::synth::Scene;
+use crate::service::{Request, RequestKind};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Hard cap on one frame's payload. Frames carry specs and reports,
+/// not pixels; anything near this size is a protocol violation, and
+/// the cap keeps a corrupt length prefix from allocating gigabytes.
+pub const MAX_FRAME_BYTES: usize = 16 * 1024 * 1024;
+
+/// Write one length-prefixed frame and flush it (requests are
+/// latency-sensitive; a buffered unflushed frame would stall the
+/// worker's blocking read).
+pub fn write_frame(w: &mut impl Write, frame: &Json) -> Result<()> {
+    let bytes = frame.dump().into_bytes();
+    if bytes.len() > MAX_FRAME_BYTES {
+        return Err(Error::Config(format!(
+            "cluster frame of {} bytes exceeds the {MAX_FRAME_BYTES}-byte cap",
+            bytes.len()
+        )));
+    }
+    w.write_all(&(bytes.len() as u32).to_be_bytes())?;
+    w.write_all(&bytes)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one length-prefixed frame. I/O errors (including read
+/// timeouts, surfaced as `WouldBlock`/`TimedOut`) pass through as
+/// [`Error::Io`] so the router can distinguish a slow worker from a
+/// dead one.
+pub fn read_frame(r: &mut impl Read) -> Result<Json> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len)?;
+    let len = u32::from_be_bytes(len) as usize;
+    if len > MAX_FRAME_BYTES {
+        return Err(Error::Config(format!(
+            "cluster frame length {len} exceeds the {MAX_FRAME_BYTES}-byte cap"
+        )));
+    }
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf)?;
+    let text = std::str::from_utf8(&buf)
+        .map_err(|_| Error::Config("cluster frame is not UTF-8".into()))?;
+    Json::parse(text)
+}
+
+/// The `frame` discriminator of a parsed frame.
+pub fn frame_kind(frame: &Json) -> Option<&str> {
+    frame.get("frame")?.as_str()
+}
+
+/// A worker's 128-bit artifact digest as the fixed-width hex string
+/// the wire carries (see the module doc for why not a number).
+pub fn digest_string(key: &ArtifactKey) -> String {
+    format!("{:016x}{:016x}", key.hi, key.lo)
+}
+
+/// `hello` — the first frame a worker sends after connecting; maps the
+/// fresh TCP connection to its supervisor slot.
+pub fn hello_frame(worker: usize) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("frame".into(), Json::Str("hello".into()));
+    m.insert("worker".into(), Json::Num(worker as f64));
+    Json::Obj(m)
+}
+
+/// Which slot a `hello` frame announces.
+pub fn parse_hello(frame: &Json) -> Result<usize> {
+    frame
+        .get("worker")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| Error::Config("hello frame is missing `worker`".into()))
+}
+
+/// `request` — one serve request, content shipped as a scene spec.
+pub fn request_frame(req: &Request) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("frame".into(), Json::Str("request".into()));
+    m.insert("id".into(), Json::Num(req.id as f64));
+    m.insert("arrival_ns".into(), Json::Num(req.arrival_ns as f64));
+    m.insert("width".into(), Json::Num(req.width as f64));
+    m.insert("height".into(), Json::Num(req.height as f64));
+    m.insert("scene".into(), Json::Str(req.scene.spec()));
+    m.insert("kind".into(), Json::Str(req.kind.name().into()));
+    if let RequestKind::ReThreshold { lo, hi } = req.kind {
+        m.insert("lo".into(), Json::Num(lo as f64));
+        m.insert("hi".into(), Json::Num(hi as f64));
+    }
+    Json::Obj(m)
+}
+
+/// Decode a `request` frame back into a [`Request`].
+pub fn parse_request(frame: &Json) -> Result<Request> {
+    let bad = |what: &str| Error::Config(format!("request frame is missing `{what}`"));
+    let num =
+        |key: &'static str| frame.get(key).and_then(Json::as_f64).ok_or_else(|| bad(key));
+    let spec = frame.get("scene").and_then(Json::as_str).ok_or_else(|| bad("scene"))?;
+    let scene = Scene::parse(spec)
+        .ok_or_else(|| Error::Config(format!("request frame has unknown scene `{spec}`")))?;
+    let kind = match frame.get("kind").and_then(Json::as_str).ok_or_else(|| bad("kind"))? {
+        "full" => RequestKind::Full,
+        "front-only" => RequestKind::FrontOnly,
+        "re-threshold" => RequestKind::ReThreshold {
+            lo: num("lo")? as f32,
+            hi: num("hi")? as f32,
+        },
+        other => {
+            return Err(Error::Config(format!("request frame has unknown kind `{other}`")))
+        }
+    };
+    Ok(Request {
+        id: num("id")? as u64,
+        arrival_ns: num("arrival_ns")? as u64,
+        scene,
+        width: num("width")? as usize,
+        height: num("height")? as usize,
+        kind,
+    })
+}
+
+/// `response` — the worker's answer to one request.
+pub fn response_frame(id: u64, edge_pixels: u64, digest: &str) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("frame".into(), Json::Str("response".into()));
+    m.insert("id".into(), Json::Num(id as f64));
+    m.insert("edge_pixels".into(), Json::Num(edge_pixels as f64));
+    m.insert("digest".into(), Json::Str(digest.into()));
+    Json::Obj(m)
+}
+
+/// A decoded `response` frame.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WireResponse {
+    pub id: u64,
+    pub edge_pixels: u64,
+    /// 32-hex-char artifact digest (see [`digest_string`]).
+    pub digest: String,
+}
+
+pub fn parse_response(frame: &Json) -> Result<WireResponse> {
+    let bad = |what: &str| Error::Config(format!("response frame is missing `{what}`"));
+    Ok(WireResponse {
+        id: frame.get("id").and_then(Json::as_f64).ok_or_else(|| bad("id"))? as u64,
+        edge_pixels: frame
+            .get("edge_pixels")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| bad("edge_pixels"))? as u64,
+        digest: frame
+            .get("digest")
+            .and_then(Json::as_str)
+            .ok_or_else(|| bad("digest"))?
+            .to_string(),
+    })
+}
+
+/// `ping` / `pong` — supervisor liveness probes between requests.
+pub fn ping_frame(t_ns: u64) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("frame".into(), Json::Str("ping".into()));
+    m.insert("t_ns".into(), Json::Num(t_ns as f64));
+    Json::Obj(m)
+}
+
+pub fn pong_frame(t_ns: u64) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("frame".into(), Json::Str("pong".into()));
+    m.insert("t_ns".into(), Json::Num(t_ns as f64));
+    Json::Obj(m)
+}
+
+/// `report` — ask the worker for its end-of-run report.
+pub fn report_frame() -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("frame".into(), Json::Str("report".into()));
+    Json::Obj(m)
+}
+
+/// `worker_report` — the worker's answer: its per-process serve report
+/// body (built by [`crate::cluster::report`]).
+pub fn worker_report_frame(body: Json) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("frame".into(), Json::Str("worker_report".into()));
+    m.insert("body".into(), body);
+    Json::Obj(m)
+}
+
+pub fn parse_worker_report(frame: &Json) -> Result<Json> {
+    frame
+        .get("body")
+        .cloned()
+        .ok_or_else(|| Error::Config("worker_report frame is missing `body`".into()))
+}
+
+/// `shutdown` — the worker loop exits cleanly on receipt.
+pub fn shutdown_frame() -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("frame".into(), Json::Str("shutdown".into()));
+    Json::Obj(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn round_trip(frame: &Json) -> Json {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, frame).unwrap();
+        // Prefix is big-endian payload length.
+        let len = u32::from_be_bytes([buf[0], buf[1], buf[2], buf[3]]) as usize;
+        assert_eq!(len, buf.len() - 4);
+        read_frame(&mut Cursor::new(buf)).unwrap()
+    }
+
+    #[test]
+    fn frames_round_trip_bytes() {
+        for f in [
+            hello_frame(3),
+            ping_frame(42),
+            pong_frame(42),
+            report_frame(),
+            shutdown_frame(),
+            response_frame(7, 1234, "00ff"),
+        ] {
+            assert_eq!(round_trip(&f), f);
+        }
+        assert_eq!(frame_kind(&hello_frame(0)), Some("hello"));
+        assert_eq!(parse_hello(&hello_frame(5)).unwrap(), 5);
+    }
+
+    #[test]
+    fn back_to_back_frames_parse_in_order() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &hello_frame(1)).unwrap();
+        write_frame(&mut buf, &shutdown_frame()).unwrap();
+        let mut r = Cursor::new(buf);
+        assert_eq!(frame_kind(&read_frame(&mut r).unwrap()), Some("hello"));
+        assert_eq!(frame_kind(&read_frame(&mut r).unwrap()), Some("shutdown"));
+        // Stream exhausted -> clean I/O error, not garbage.
+        assert!(read_frame(&mut r).is_err());
+    }
+
+    #[test]
+    fn request_frames_round_trip_every_kind() {
+        for kind in [
+            RequestKind::Full,
+            RequestKind::FrontOnly,
+            RequestKind::ReThreshold { lo: 0.03, hi: 0.21 },
+        ] {
+            let req = Request {
+                id: 9,
+                arrival_ns: 1_250_000,
+                scene: Scene::Shapes { seed: 11 },
+                width: 128,
+                height: 96,
+                kind,
+            };
+            let back = parse_request(&round_trip(&request_frame(&req))).unwrap();
+            assert_eq!(back.id, req.id);
+            assert_eq!(back.arrival_ns, req.arrival_ns);
+            assert_eq!(back.scene, req.scene);
+            assert_eq!((back.width, back.height), (req.width, req.height));
+            assert_eq!(back.kind.name(), req.kind.name());
+            if let (
+                RequestKind::ReThreshold { lo: a, hi: b },
+                RequestKind::ReThreshold { lo: c, hi: d },
+            ) = (req.kind, back.kind)
+            {
+                assert!((a - c).abs() < 1e-6 && (b - d).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn response_frames_round_trip() {
+        let key = ArtifactKey { hi: 0xdead_beef_0102_0304, lo: 0x0a0b_0c0d_0e0f_1011 };
+        let digest = digest_string(&key);
+        assert_eq!(digest.len(), 32);
+        let f = response_frame(41, 512, &digest);
+        let r = parse_response(&round_trip(&f)).unwrap();
+        assert_eq!(r, WireResponse { id: 41, edge_pixels: 512, digest });
+    }
+
+    #[test]
+    fn digest_string_keeps_all_bits() {
+        // Two keys that differ only above f64's 2^53 integer range must
+        // still produce distinct wire digests.
+        let a = ArtifactKey { hi: (1u64 << 60) | 1, lo: 0 };
+        let b = ArtifactKey { hi: 1u64 << 60, lo: 0 };
+        assert_ne!(digest_string(&a), digest_string(&b));
+    }
+
+    #[test]
+    fn worker_report_carries_body() {
+        let mut body = BTreeMap::new();
+        body.insert("served".to_string(), Json::Num(4.0));
+        let f = worker_report_frame(Json::Obj(body.clone()));
+        assert_eq!(parse_worker_report(&round_trip(&f)).unwrap(), Json::Obj(body));
+    }
+
+    #[test]
+    fn oversized_and_corrupt_frames_are_rejected() {
+        // A forged length prefix beyond the cap is refused before any
+        // allocation of that size.
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(u32::MAX).to_be_bytes());
+        assert!(read_frame(&mut Cursor::new(buf)).is_err());
+        // Truncated payload.
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &hello_frame(0)).unwrap();
+        buf.truncate(buf.len() - 2);
+        assert!(read_frame(&mut Cursor::new(buf)).is_err());
+        // Bad discriminator handling stays at the caller; unknown scene
+        // and kind are parse errors here.
+        let mut m = BTreeMap::new();
+        m.insert("frame".to_string(), Json::Str("request".into()));
+        m.insert("scene".to_string(), Json::Str("nope".into()));
+        assert!(parse_request(&Json::Obj(m)).is_err());
+    }
+}

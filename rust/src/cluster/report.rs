@@ -1,0 +1,244 @@
+//! Cluster reporting: the per-worker report body each worker ships
+//! over the wire, and the merged cluster report the front-door prints —
+//! per-worker serve totals, the sharded-cache picture across processes,
+//! forwarded telemetry snapshot lines, and router-side round-trip
+//! latency percentiles. Schemas are documented in the
+//! [`crate::cluster`] module docs and linted for parity.
+
+use std::collections::BTreeMap;
+
+use crate::cache::CacheSnapshot;
+use crate::util::json::Json;
+
+/// Keys of the merged cluster report object — what the CI smoke step
+/// and the integration schema test assert against, and the contract
+/// the `cluster/mod.rs` schema block documents.
+pub const REQUIRED_CLUSTER_KEYS: [&str; 12] = [
+    "alerts",
+    "completed",
+    "edge_pixels",
+    "label",
+    "latency_ns",
+    "makespan_ns",
+    "per_worker",
+    "requests",
+    "requeued",
+    "restarts",
+    "tier",
+    "workers",
+];
+
+/// Keys of each entry in the merged report's `per_worker` array (the
+/// same object a worker ships as its `worker_report` frame body).
+pub const REQUIRED_WORKER_KEYS: [&str; 6] =
+    ["cache", "edge_pixels", "kinds", "served", "telemetry", "worker"];
+
+/// One worker process's end-of-run totals, built worker-side and
+/// shipped as the `worker_report` frame body.
+#[derive(Clone, Debug)]
+pub struct WorkerReport {
+    /// Supervisor slot index.
+    pub worker: usize,
+    /// Requests this incarnation served.
+    pub served: u64,
+    /// Edge pixels across its `full`/`re-threshold` responses.
+    pub edge_pixels: u64,
+    /// Per-request-kind counts (kind name -> served).
+    pub kinds: BTreeMap<String, u64>,
+    /// The worker's private [`crate::cache::ArtifactCache`] totals —
+    /// one shard of the cluster-wide cache picture.
+    pub cache: CacheSnapshot,
+    /// The worker's final telemetry snapshot line (the PR 6 follow-up:
+    /// the snapshot stream crossing the process boundary).
+    pub telemetry: Json,
+}
+
+impl WorkerReport {
+    /// The `worker_report` frame body / `per_worker` array entry.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("worker".into(), Json::Num(self.worker as f64));
+        m.insert("served".into(), Json::Num(self.served as f64));
+        m.insert("edge_pixels".into(), Json::Num(self.edge_pixels as f64));
+        m.insert(
+            "kinds".into(),
+            Json::Obj(
+                self.kinds.iter().map(|(k, v)| (k.clone(), Json::Num(*v as f64))).collect(),
+            ),
+        );
+        m.insert("cache".into(), self.cache.to_json());
+        m.insert("telemetry".into(), self.telemetry.clone());
+        Json::Obj(m)
+    }
+}
+
+/// Nearest-rank percentile over an already-sorted slice (0 when empty)
+/// — the same rank rule the serve tier's latency summaries use.
+fn pct_ns(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// The merged end-of-run cluster report (`cannyd cluster` prints its
+/// JSON to stdout).
+#[derive(Clone, Debug)]
+pub struct ClusterReport {
+    pub label: String,
+    /// Worker slots (not incarnations — restarts are counted apart).
+    pub workers: usize,
+    /// Requests the trace offered to the router.
+    pub requests: u64,
+    /// Responses received (== `requests` on a clean run; the router
+    /// requeues on worker death, so a completed run converges here).
+    pub completed: u64,
+    /// Requests resent to a restarted worker after their first
+    /// dispatch died with the previous incarnation.
+    pub requeued: u64,
+    /// Worker restarts the supervisor performed.
+    pub restarts: u64,
+    /// Health-transition alert lines the supervisor emitted.
+    pub alerts: u64,
+    /// Wall nanoseconds from first dispatch to last response.
+    pub makespan_ns: u64,
+    /// Router-measured round-trip latencies (dispatch -> response).
+    pub latencies_ns: Vec<u64>,
+    /// One [`WorkerReport::to_json`] body per worker slot.
+    pub per_worker: Vec<Json>,
+}
+
+impl ClusterReport {
+    /// Edge pixels summed over the per-worker bodies.
+    pub fn edge_pixels(&self) -> u64 {
+        self.per_worker
+            .iter()
+            .filter_map(|w| w.get("edge_pixels").and_then(Json::as_f64))
+            .map(|v| v as u64)
+            .sum()
+    }
+
+    /// The merged report object (schema in [`crate::cluster`]).
+    pub fn to_json(&self) -> Json {
+        let num = |v: u64| Json::Num(v as f64);
+        let mut sorted = self.latencies_ns.clone();
+        sorted.sort_unstable();
+        let mean = if sorted.is_empty() {
+            0.0
+        } else {
+            sorted.iter().sum::<u64>() as f64 / sorted.len() as f64
+        };
+        let mut lat = BTreeMap::new();
+        lat.insert("n".to_string(), num(sorted.len() as u64));
+        lat.insert("p50".to_string(), num(pct_ns(&sorted, 0.50)));
+        lat.insert("p95".to_string(), num(pct_ns(&sorted, 0.95)));
+        lat.insert("p99".to_string(), num(pct_ns(&sorted, 0.99)));
+        lat.insert("max".to_string(), num(sorted.last().copied().unwrap_or(0)));
+        lat.insert("mean".to_string(), Json::Num(mean));
+
+        let mut m = BTreeMap::new();
+        m.insert("label".into(), Json::Str(self.label.clone()));
+        m.insert("tier".into(), Json::Str("cluster".into()));
+        m.insert("workers".into(), num(self.workers as u64));
+        m.insert("requests".into(), num(self.requests));
+        m.insert("completed".into(), num(self.completed));
+        m.insert("requeued".into(), num(self.requeued));
+        m.insert("restarts".into(), num(self.restarts));
+        m.insert("alerts".into(), num(self.alerts));
+        m.insert("makespan_ns".into(), num(self.makespan_ns));
+        m.insert("edge_pixels".into(), num(self.edge_pixels()));
+        m.insert("latency_ns".into(), Json::Obj(lat));
+        m.insert("per_worker".into(), Json::Arr(self.per_worker.clone()));
+        Json::Obj(m)
+    }
+
+    /// Compact JSON text (what `cannyd cluster` prints).
+    pub fn to_json_string(&self) -> String {
+        self.to_json().dump()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_worker(worker: usize, served: u64, edge_pixels: u64) -> WorkerReport {
+        let mut kinds = BTreeMap::new();
+        kinds.insert("full".to_string(), served);
+        WorkerReport {
+            worker,
+            served,
+            edge_pixels,
+            kinds,
+            cache: CacheSnapshot::default(),
+            telemetry: Json::Null,
+        }
+    }
+
+    #[test]
+    fn worker_report_carries_required_keys() {
+        let j = sample_worker(1, 4, 99).to_json();
+        for key in REQUIRED_WORKER_KEYS {
+            assert!(j.get(key).is_some(), "worker report is missing `{key}`");
+        }
+        assert_eq!(j.as_obj().unwrap().len(), REQUIRED_WORKER_KEYS.len());
+        assert_eq!(j.get("kinds").unwrap().get("full").unwrap().as_usize(), Some(4));
+        // Round-trips through the wire codec's parser.
+        assert_eq!(Json::parse(&j.dump()).unwrap(), j);
+    }
+
+    #[test]
+    fn merged_report_has_stable_schema() {
+        let report = ClusterReport {
+            label: "cluster[test]".into(),
+            workers: 2,
+            requests: 8,
+            completed: 8,
+            requeued: 1,
+            restarts: 1,
+            alerts: 2,
+            makespan_ns: 5_000_000,
+            latencies_ns: vec![300, 100, 200, 400, 800],
+            per_worker: vec![
+                sample_worker(0, 5, 70).to_json(),
+                sample_worker(1, 3, 30).to_json(),
+            ],
+        };
+        let j = report.to_json();
+        for key in REQUIRED_CLUSTER_KEYS {
+            assert!(j.get(key).is_some(), "cluster report is missing `{key}`");
+        }
+        assert_eq!(j.as_obj().unwrap().len(), REQUIRED_CLUSTER_KEYS.len());
+        assert_eq!(j.get("tier").unwrap().as_str(), Some("cluster"));
+        assert_eq!(j.get("edge_pixels").unwrap().as_usize(), Some(100));
+        assert_eq!(j.get("per_worker").unwrap().as_arr().unwrap().len(), 2);
+        let lat = j.get("latency_ns").unwrap();
+        assert_eq!(lat.get("n").unwrap().as_usize(), Some(5));
+        assert_eq!(lat.get("p50").unwrap().as_usize(), Some(300));
+        assert_eq!(lat.get("max").unwrap().as_usize(), Some(800));
+        assert!((lat.get("mean").unwrap().as_f64().unwrap() - 360.0).abs() < 1e-9);
+        assert_eq!(Json::parse(&j.dump()).unwrap(), j);
+    }
+
+    #[test]
+    fn empty_latencies_report_zeros() {
+        let report = ClusterReport {
+            label: "cluster[empty]".into(),
+            workers: 1,
+            requests: 0,
+            completed: 0,
+            requeued: 0,
+            restarts: 0,
+            alerts: 0,
+            makespan_ns: 0,
+            latencies_ns: vec![],
+            per_worker: vec![],
+        };
+        let lat = report.to_json();
+        let lat = lat.get("latency_ns").unwrap();
+        assert_eq!(lat.get("p99").unwrap().as_usize(), Some(0));
+        assert_eq!(lat.get("mean").unwrap().as_f64(), Some(0.0));
+        assert_eq!(report.edge_pixels(), 0);
+    }
+}

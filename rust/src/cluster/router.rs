@@ -1,0 +1,435 @@
+//! The front-door router: digest-affine dispatch of a request trace
+//! over the worker fleet, with requeue-on-death.
+//!
+//! Routing is a consistent-hash ring ([`RoutingRing`]) over a content
+//! digest of `(scene spec, width, height)` — deliberately *not* the
+//! request kind or thresholds. Every request about the same content
+//! lands on the same worker, so a `front-only` warm and the
+//! `re-threshold` sweep that follows it hit one process's private
+//! [`crate::cache::ArtifactCache`]: N worker caches behave like one
+//! sharded cluster cache with zero cross-process invalidation traffic.
+//! Virtual points (64 per slot) keep the content shares roughly even,
+//! and the ring's stability property keeps most digests on their slot
+//! when the fleet grows.
+//!
+//! Dispatch is closed-loop, one in-flight request per worker: the
+//! cluster tier's first job is correctness (bit-identity with the
+//! single-process path, restart-survival), and one-at-a-time dispatch
+//! makes the requeue logic exact — a dead connection has at most one
+//! un-answered request, which is resent to the restarted incarnation.
+//! Reads poll at the heartbeat interval; a timeout probes the child
+//! (`try_wait`) to distinguish a busy worker from a dead one, and the
+//! poll loop buffers partial frames so a timeout mid-frame never
+//! desyncs the stream.
+
+use std::collections::BTreeMap;
+use std::io::Read;
+use std::process::Child;
+use std::sync::Arc;
+
+use crate::cache::KeyHasher;
+use crate::cluster::proto::{
+    parse_response, parse_worker_report, report_frame, request_frame, shutdown_frame,
+    write_frame, MAX_FRAME_BYTES,
+};
+use crate::cluster::report::ClusterReport;
+use crate::cluster::supervisor::{Supervisor, WorkerFault, WorkerLink};
+use crate::config::RunConfig;
+use crate::error::{Error, Result};
+use crate::obs::HealthTracker;
+use crate::service::clock::WallClock;
+use crate::service::{Request, Trace};
+use crate::util::json::Json;
+
+/// Virtual points per worker slot — enough to keep slot shares within
+/// a few percent of even without making ring construction noticeable.
+pub const VIRTUAL_POINTS: usize = 64;
+
+/// Worker processes when `--workers` is 0/unset at the cluster layer.
+pub const DEFAULT_WORKERS: usize = 2;
+
+/// Incarnations one request may be dispatched to before the run fails:
+/// the injected fault is one-shot, so a request that dies this often
+/// points at a real crash loop.
+const MAX_ATTEMPTS: u64 = 4;
+
+/// Salt folded into every ring point so ring positions are unrelated
+/// to any other use of the digest space.
+const RING_SALT: u64 = 0x636c_7573_7465_7231;
+
+/// The content digest a request is routed by: scene spec + geometry,
+/// never the kind — kind-blindness is what gives re-thresholds cache
+/// affinity with their warming front-only request.
+pub fn route_digest(spec: &str, width: usize, height: usize) -> u64 {
+    let mut h = KeyHasher::new();
+    h.write(spec.as_bytes());
+    h.write_u64(width as u64);
+    h.write_u64(height as u64);
+    let k = h.finish();
+    k.hi ^ k.lo.rotate_left(32)
+}
+
+/// The consistent-hash routing ring: each slot owns the digests that
+/// fall between its virtual points and their predecessors.
+#[derive(Clone, Debug)]
+pub struct RoutingRing {
+    points: BTreeMap<u64, usize>,
+    workers: usize,
+}
+
+impl RoutingRing {
+    pub fn new(workers: usize) -> RoutingRing {
+        let workers = workers.max(1);
+        let mut points = BTreeMap::new();
+        for slot in 0..workers {
+            for v in 0..VIRTUAL_POINTS {
+                let mut h = KeyHasher::new();
+                h.write_u64(RING_SALT);
+                h.write_u64(slot as u64);
+                h.write_u64(v as u64);
+                let k = h.finish();
+                points.insert(k.hi ^ k.lo.rotate_left(32), slot);
+            }
+        }
+        RoutingRing { points, workers }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// First virtual point at or after `digest`, wrapping at the top.
+    pub fn route(&self, digest: u64) -> usize {
+        self.points
+            .range(digest..)
+            .next()
+            .or_else(|| self.points.iter().next())
+            .map(|(_, slot)| *slot)
+            .unwrap_or(0)
+    }
+
+    pub fn route_request(&self, req: &Request) -> usize {
+        self.route(route_digest(&req.scene.spec(), req.width, req.height))
+    }
+}
+
+/// How to run a cluster (built by `cannyd cluster` from the resolved
+/// config; tests construct it directly to inject faults).
+#[derive(Clone, Debug)]
+pub struct ClusterOptions {
+    /// Worker *processes* (the `--workers` flag reinterpreted at this
+    /// layer; [`DEFAULT_WORKERS`] when 0).
+    pub workers: usize,
+    /// Front-door port (`--cluster-port`; 0 binds an ephemeral port).
+    pub port: u16,
+    /// Socket poll interval for death detection
+    /// (`--worker-heartbeat-ms`).
+    pub heartbeat_ms: u64,
+    /// Alert sink spec (`--alert-log`): restarts emit health
+    /// transitions through it.
+    pub alert_log: String,
+    /// The resolved config; the supervisor forwards its detector/cache
+    /// allowlist to every worker.
+    pub cfg: RunConfig,
+    /// One-shot crash injection (tests only; `None` from the CLI).
+    pub fault: Option<WorkerFault>,
+}
+
+impl ClusterOptions {
+    pub fn from_config(cfg: &RunConfig) -> ClusterOptions {
+        ClusterOptions {
+            workers: if cfg.workers > 0 { cfg.workers } else { DEFAULT_WORKERS },
+            port: cfg.cluster_port,
+            heartbeat_ms: cfg.worker_heartbeat_ms,
+            alert_log: cfg.alert_log.clone(),
+            cfg: cfg.clone(),
+            fault: None,
+        }
+    }
+}
+
+/// One routed response, kept in request order for the bit-identity
+/// checks (`digest` is the wire's 32-hex-char artifact digest).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ResponseRecord {
+    pub id: u64,
+    pub slot: usize,
+    pub edge_pixels: u64,
+    pub digest: String,
+}
+
+/// What [`run_cluster`] hands back: the merged report plus every
+/// routed response (sorted by request id).
+#[derive(Clone, Debug)]
+pub struct ClusterOutcome {
+    pub report: ClusterReport,
+    pub responses: Vec<ResponseRecord>,
+}
+
+/// Per-slot dispatch result, merged after the joins.
+#[derive(Debug)]
+struct SlotOutcome {
+    slot: usize,
+    records: Vec<ResponseRecord>,
+    latencies: Vec<u64>,
+    requeued: u64,
+    /// Clock reading after the slot's last response (excludes the
+    /// report/shutdown exchange).
+    finished_ns: u64,
+    body: Json,
+}
+
+/// Read one frame, tolerating heartbeat-interval timeouts: partial
+/// bytes stay buffered (a timeout mid-frame must not desync the
+/// stream), and each timeout probes the child. `Ok(None)` means the
+/// worker is dead (EOF or a reaped child).
+fn read_or_died(stream: &mut std::net::TcpStream, child: &mut Child) -> Result<Option<Json>> {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut payload: Option<usize> = None;
+    let mut scratch = [0u8; 4096];
+    loop {
+        let target = match payload {
+            None => 4,
+            Some(l) => 4 + l,
+        };
+        if buf.len() >= target {
+            match payload {
+                None => {
+                    let len = u32::from_be_bytes([buf[0], buf[1], buf[2], buf[3]]) as usize;
+                    if len > MAX_FRAME_BYTES {
+                        return Err(Error::Config(format!(
+                            "cluster frame length {len} exceeds the {MAX_FRAME_BYTES}-byte cap"
+                        )));
+                    }
+                    payload = Some(len);
+                }
+                Some(l) => {
+                    let text = std::str::from_utf8(&buf[4..4 + l])
+                        .map_err(|_| Error::Config("cluster frame is not UTF-8".into()))?;
+                    return Ok(Some(Json::parse(text)?));
+                }
+            }
+            continue;
+        }
+        let want = (target - buf.len()).min(scratch.len());
+        match stream.read(&mut scratch[..want]) {
+            Ok(0) => return Ok(None),
+            Ok(n) => buf.extend_from_slice(&scratch[..n]),
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::Interrupted
+                ) =>
+            {
+                if let Ok(Some(_)) = child.try_wait() {
+                    return Ok(None);
+                }
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+}
+
+/// Drive one slot's queue to completion, restarting its worker as many
+/// times as it takes (bounded by [`MAX_ATTEMPTS`] per request), then
+/// collect the worker's report and shut it down.
+fn drive_slot(
+    mut link: WorkerLink,
+    queue: Vec<Request>,
+    sup: Arc<Supervisor>,
+    clock: WallClock,
+) -> Result<SlotOutcome> {
+    let slot = link.slot;
+    link.stream.set_read_timeout(Some(sup.heartbeat()))?;
+    let mut records = Vec::with_capacity(queue.len());
+    let mut latencies = Vec::with_capacity(queue.len());
+    let mut requeued = 0u64;
+    for req in &queue {
+        let mut attempts = 0u64;
+        loop {
+            attempts += 1;
+            if attempts > MAX_ATTEMPTS {
+                return Err(Error::Config(format!(
+                    "slot {slot}: request {} failed across {MAX_ATTEMPTS} worker incarnations",
+                    req.id
+                )));
+            }
+            let sent_ns = clock.now_ns();
+            let died = match write_frame(&mut link.stream, &request_frame(req)) {
+                Err(_) => true,
+                Ok(()) => match read_or_died(&mut link.stream, &mut link.child)? {
+                    None => true,
+                    Some(frame) => {
+                        let resp = parse_response(&frame)?;
+                        if resp.id != req.id {
+                            return Err(Error::Config(format!(
+                                "slot {slot}: got response {} while waiting on request {}",
+                                resp.id, req.id
+                            )));
+                        }
+                        latencies.push(clock.now_ns().saturating_sub(sent_ns));
+                        records.push(ResponseRecord {
+                            id: resp.id,
+                            slot,
+                            edge_pixels: resp.edge_pixels,
+                            digest: resp.digest,
+                        });
+                        false
+                    }
+                },
+            };
+            if !died {
+                break;
+            }
+            link = sup.respawn(link)?;
+            link.stream.set_read_timeout(Some(sup.heartbeat()))?;
+            requeued += 1;
+        }
+    }
+    let finished_ns = clock.now_ns();
+    write_frame(&mut link.stream, &report_frame())?;
+    let frame = read_or_died(&mut link.stream, &mut link.child)?
+        .ok_or_else(|| Error::Config(format!("worker {slot} died before reporting")))?;
+    let body = parse_worker_report(&frame)?;
+    write_frame(&mut link.stream, &shutdown_frame())?;
+    let _ = link.child.wait();
+    Ok(SlotOutcome { slot, records, latencies, requeued, finished_ns, body })
+}
+
+/// Spawn the fleet, route and dispatch the whole trace, merge the
+/// per-worker reports. The entry point behind `cannyd cluster`.
+pub fn run_cluster(label: &str, trace: &Trace, opts: &ClusterOptions) -> Result<ClusterOutcome> {
+    let workers = opts.workers.max(1);
+    let tracker = HealthTracker::from_spec(&opts.alert_log)?;
+    let (sup, links) = Supervisor::start(
+        workers,
+        opts.port,
+        opts.heartbeat_ms,
+        &opts.cfg,
+        opts.fault,
+        tracker,
+    )?;
+    let sup = Arc::new(sup);
+    let ring = RoutingRing::new(workers);
+    let mut queues: Vec<Vec<Request>> = vec![Vec::new(); workers];
+    for req in &trace.requests {
+        queues[ring.route_request(req)].push(*req);
+    }
+    let clock = WallClock::start();
+    let mut handles = Vec::with_capacity(links.len());
+    for link in links {
+        let queue = std::mem::take(&mut queues[link.slot]);
+        let sup = Arc::clone(&sup);
+        handles.push(std::thread::spawn(move || drive_slot(link, queue, sup, clock)));
+    }
+    let mut outcomes: Vec<SlotOutcome> = Vec::with_capacity(handles.len());
+    for h in handles {
+        let outcome =
+            h.join().map_err(|_| Error::Config("cluster dispatch thread panicked".into()))??;
+        outcomes.push(outcome);
+    }
+    outcomes.sort_by_key(|o| o.slot);
+
+    let mut responses: Vec<ResponseRecord> =
+        outcomes.iter().flat_map(|o| o.records.iter().cloned()).collect();
+    responses.sort_by_key(|r| r.id);
+    let mut latencies_ns: Vec<u64> =
+        outcomes.iter().flat_map(|o| o.latencies.iter().copied()).collect();
+    latencies_ns.sort_unstable();
+    let report = ClusterReport {
+        label: label.to_string(),
+        workers,
+        requests: trace.len() as u64,
+        completed: responses.len() as u64,
+        requeued: outcomes.iter().map(|o| o.requeued).sum(),
+        restarts: sup.restarts(),
+        alerts: sup.alerts_emitted(),
+        makespan_ns: outcomes.iter().map(|o| o.finished_ns).max().unwrap_or(0),
+        latencies_ns,
+        per_worker: outcomes.iter().map(|o| o.body.clone()).collect(),
+    };
+    Ok(ClusterOutcome { report, responses })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::synth::Scene;
+    use crate::service::RequestKind;
+
+    #[test]
+    fn ring_routes_deterministically_and_in_range() {
+        let a = RoutingRing::new(4);
+        let b = RoutingRing::new(4);
+        for d in (0..2000u64).map(|i| i.wrapping_mul(0x9e37_79b9_7f4a_7c15)) {
+            let slot = a.route(d);
+            assert!(slot < 4);
+            assert_eq!(slot, b.route(d), "ring construction must be deterministic");
+        }
+    }
+
+    #[test]
+    fn ring_spreads_load_over_every_slot() {
+        let ring = RoutingRing::new(4);
+        let mut counts = [0usize; 4];
+        for i in 0..4000u64 {
+            counts[ring.route(i.wrapping_mul(0x9e37_79b9_7f4a_7c15))] += 1;
+        }
+        for (slot, &n) in counts.iter().enumerate() {
+            assert!(n > 400, "slot {slot} got {n}/4000 digests — ring badly skewed");
+        }
+    }
+
+    #[test]
+    fn growing_the_ring_moves_a_minority_of_digests() {
+        let three = RoutingRing::new(3);
+        let four = RoutingRing::new(4);
+        let total = 4000u64;
+        let moved = (0..total)
+            .map(|i| i.wrapping_mul(0x9e37_79b9_7f4a_7c15))
+            .filter(|&d| three.route(d) != four.route(d))
+            .count();
+        // Ideal consistent hashing moves 1/4 of the space; allow slack
+        // for virtual-point variance but fail on rehash-everything.
+        assert!(
+            moved < (total as usize) / 2,
+            "{moved}/{total} digests moved when adding one slot"
+        );
+    }
+
+    #[test]
+    fn routing_is_content_affine_not_kind_affine() {
+        let ring = RoutingRing::new(4);
+        let mk = |kind| Request {
+            id: 0,
+            arrival_ns: 0,
+            scene: Scene::Shapes { seed: 77 },
+            width: 128,
+            height: 96,
+            kind,
+        };
+        let full = ring.route_request(&mk(RequestKind::Full));
+        let front = ring.route_request(&mk(RequestKind::FrontOnly));
+        let re = ring.route_request(&mk(RequestKind::ReThreshold { lo: 0.02, hi: 0.3 }));
+        assert_eq!(full, front);
+        assert_eq!(front, re, "re-thresholds must land on the warming worker");
+        // Different content usually lands elsewhere; at minimum the
+        // digest must change.
+        let other = route_digest(&Scene::Shapes { seed: 78 }.spec(), 128, 96);
+        assert_ne!(route_digest(&Scene::Shapes { seed: 77 }.spec(), 128, 96), other);
+    }
+
+    #[test]
+    fn options_from_config_defaults() {
+        let cfg = RunConfig::default();
+        let opts = ClusterOptions::from_config(&cfg);
+        assert_eq!(opts.workers, DEFAULT_WORKERS, "workers=0 means the cluster default");
+        assert_eq!(opts.port, 0, "ephemeral port by default");
+        assert!(opts.fault.is_none());
+        let mut cfg = RunConfig::default();
+        cfg.set("workers", "3").unwrap();
+        assert_eq!(ClusterOptions::from_config(&cfg).workers, 3);
+    }
+}

@@ -1,0 +1,294 @@
+//! Process supervision for the cluster tier: spawn `cannyd worker`
+//! children, map their loopback connections to slots via the `hello`
+//! handshake, and restart dead workers on demand — each death and
+//! recovery emitted as a health-transition alert through the shared
+//! [`HealthTracker`] (satellite 2's sink, reused across the process
+//! boundary) and counted into the merged cluster report.
+//!
+//! The supervisor is deliberately passive about liveness: the router's
+//! dispatch threads are the ones blocked on worker sockets, so *they*
+//! detect death (EOF, broken pipe, or a heartbeat-interval read timeout
+//! whose `try_wait` probe finds the child gone) and call
+//! [`Supervisor::respawn`]. The supervisor owns what must be shared:
+//! the listener, the spawn recipe, the restart counter and the alert
+//! tracker.
+//!
+//! Workers are spawned from an explicit config allowlist
+//! ([`FORWARDED_KEYS`]) rather than the whole `to_map()`: a worker must
+//! inherit the detector parameters and cache geometry (so its output
+//! and cache behavior match the single-process tier bit-for-bit), but
+//! must *not* inherit `workers` (a process count here, a thread count
+//! there), the cluster/alert flags, or the serve-tier lane knobs.
+
+use std::collections::BTreeMap;
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::cluster::proto::{parse_hello, read_frame};
+use crate::cluster::worker::WORKER_FAULT_ENV;
+use crate::config::RunConfig;
+use crate::error::{Error, Result};
+use crate::obs::{Health, HealthTracker};
+use crate::service::clock::WallClock;
+
+/// Env override for the worker executable. The integration tests set
+/// it to `CARGO_BIN_EXE_cannyd` (the test process is not the `cannyd`
+/// binary); unset, workers are respawns of the current executable.
+pub const WORKER_EXE_ENV: &str = "CANNYD_CLUSTER_EXE";
+
+/// Config keys the supervisor re-sends on each worker's command line:
+/// detector parameters (output bits) and cache geometry (shard
+/// behavior). Everything else stays at the worker's defaults.
+pub const FORWARDED_KEYS: &[&str] = &[
+    "engine",
+    "lo",
+    "hi",
+    "tile",
+    "parallel-hysteresis",
+    "seed",
+    "cache-mb",
+    "cache-shards",
+    "cache-admit-ns-per-byte",
+    "max-pixels",
+];
+
+/// How long a spawned worker gets to connect and say `hello` before
+/// the cluster gives up on it.
+const HANDSHAKE_TIMEOUT_NS: u64 = 30_000_000_000;
+
+/// One-shot fault injection for the restart tests: the first
+/// incarnation of `slot` is spawned with [`WORKER_FAULT_ENV`] set to
+/// `after`, so it kills itself on request `after + 1`. Respawns never
+/// carry the variable — the restarted worker serves normally.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WorkerFault {
+    pub slot: usize,
+    pub after: u64,
+}
+
+/// A live worker incarnation: the child process plus the connected,
+/// hello-verified stream. Owned by the slot's dispatch thread; the
+/// supervisor only sees it again inside [`Supervisor::respawn`].
+#[derive(Debug)]
+pub struct WorkerLink {
+    pub slot: usize,
+    pub stream: TcpStream,
+    pub child: Child,
+}
+
+/// Listener state shared by startup and restarts. Hellos can arrive in
+/// any order when several workers boot at once, so connections for
+/// other slots are parked in `pending` instead of dropped.
+#[derive(Debug)]
+struct AcceptState {
+    listener: TcpListener,
+    pending: Vec<(usize, TcpStream)>,
+}
+
+/// The shared supervision core (one per `cannyd cluster` run).
+#[derive(Debug)]
+pub struct Supervisor {
+    exe: PathBuf,
+    args: Vec<String>,
+    port: u16,
+    heartbeat_ms: u64,
+    accept: Mutex<AcceptState>,
+    restarts: AtomicU64,
+    tracker: Mutex<HealthTracker>,
+    clock: WallClock,
+}
+
+/// The `--key=value` args forwarded to every worker (the
+/// [`FORWARDED_KEYS`] slice of the resolved config).
+pub fn forwarded_args(cfg: &RunConfig) -> Vec<String> {
+    let map: BTreeMap<String, String> = cfg.to_map();
+    FORWARDED_KEYS
+        .iter()
+        .filter_map(|k| map.get(*k).map(|v| format!("--{k}={v}")))
+        .collect()
+}
+
+fn worker_exe() -> Result<PathBuf> {
+    match std::env::var(WORKER_EXE_ENV) {
+        Ok(path) if !path.is_empty() => Ok(PathBuf::from(path)),
+        _ => Ok(std::env::current_exe()?),
+    }
+}
+
+impl Supervisor {
+    /// Bind the front door, spawn `workers` children and complete every
+    /// handshake. Returns the supervisor plus one [`WorkerLink`] per
+    /// slot, in slot order.
+    pub fn start(
+        workers: usize,
+        port: u16,
+        heartbeat_ms: u64,
+        cfg: &RunConfig,
+        fault: Option<WorkerFault>,
+        tracker: HealthTracker,
+    ) -> Result<(Supervisor, Vec<WorkerLink>)> {
+        let listener = TcpListener::bind(("127.0.0.1", port))?;
+        // Nonblocking accepts let the handshake loop interleave child
+        // liveness probes instead of hanging on a worker that died
+        // before connecting.
+        listener.set_nonblocking(true)?;
+        let port = listener.local_addr()?.port();
+        let sup = Supervisor {
+            exe: worker_exe()?,
+            args: forwarded_args(cfg),
+            port,
+            heartbeat_ms: heartbeat_ms.max(1),
+            accept: Mutex::new(AcceptState { listener, pending: Vec::new() }),
+            restarts: AtomicU64::new(0),
+            tracker: Mutex::new(tracker),
+            clock: WallClock::start(),
+        };
+        let mut children = Vec::with_capacity(workers);
+        for slot in 0..workers {
+            let with_fault = fault.filter(|f| f.slot == slot).map(|f| f.after);
+            children.push(sup.spawn_child(slot, with_fault)?);
+        }
+        let mut links = Vec::with_capacity(workers);
+        for (slot, child) in children.into_iter().enumerate() {
+            links.push(sup.accept_link(slot, child)?);
+        }
+        Ok((sup, links))
+    }
+
+    /// The actual bound port (resolves `--cluster-port 0`).
+    pub fn port(&self) -> u16 {
+        self.port
+    }
+
+    /// The read-timeout the dispatch threads poll worker sockets with.
+    pub fn heartbeat(&self) -> Duration {
+        Duration::from_millis(self.heartbeat_ms)
+    }
+
+    /// Worker restarts performed so far.
+    pub fn restarts(&self) -> u64 {
+        self.restarts.load(Ordering::Relaxed)
+    }
+
+    /// Health-transition alert lines emitted so far (two per restart:
+    /// `healthy -> stalled` at death, `stalled -> healthy` once the
+    /// replacement has said hello).
+    pub fn alerts_emitted(&self) -> u64 {
+        self.tracker.lock().expect("alert tracker poisoned").emitted()
+    }
+
+    /// Replace a dead incarnation: reap the old child, spawn a fresh
+    /// one for the same slot (never with the fault env — the injected
+    /// crash is one-shot) and complete its handshake.
+    pub fn respawn(&self, old: WorkerLink) -> Result<WorkerLink> {
+        let WorkerLink { slot, stream, mut child } = old;
+        drop(stream);
+        let _ = child.kill();
+        let _ = child.wait();
+        self.observe(slot, Health::Stalled);
+        self.restarts.fetch_add(1, Ordering::Relaxed);
+        let fresh = self.spawn_child(slot, None)?;
+        let link = self.accept_link(slot, fresh)?;
+        self.observe(slot, Health::Healthy);
+        Ok(link)
+    }
+
+    fn observe(&self, slot: usize, health: Health) {
+        let mut t = self.tracker.lock().expect("alert tracker poisoned");
+        t.observe(self.clock.now_ns(), &format!("cluster/worker{slot}"), health);
+    }
+
+    fn spawn_child(&self, slot: usize, fault_after: Option<u64>) -> Result<Child> {
+        let mut cmd = Command::new(&self.exe);
+        cmd.arg("worker")
+            .arg(format!("--worker-id={slot}"))
+            .arg(format!("--cluster-port={}", self.port))
+            .args(&self.args)
+            .stdin(Stdio::null())
+            // The merged cluster report owns stdout; worker noise would
+            // corrupt it. Stderr passes through for alerts/panics.
+            .stdout(Stdio::null())
+            .stderr(Stdio::inherit());
+        if let Some(after) = fault_after {
+            cmd.env(WORKER_FAULT_ENV, after.to_string());
+        }
+        Ok(cmd.spawn()?)
+    }
+
+    /// Accept connections until `slot`'s hello arrives (other slots'
+    /// hellos are parked), failing fast if the child exits first.
+    fn accept_link(&self, slot: usize, mut child: Child) -> Result<WorkerLink> {
+        let mut st = self.accept.lock().expect("cluster listener poisoned");
+        if let Some(pos) = st.pending.iter().position(|(s, _)| *s == slot) {
+            let (_, stream) = st.pending.remove(pos);
+            return Ok(WorkerLink { slot, stream, child });
+        }
+        let t0 = self.clock.now_ns();
+        loop {
+            match st.listener.accept() {
+                Ok((mut stream, _)) => {
+                    stream.set_nonblocking(false)?;
+                    stream.set_nodelay(true).ok();
+                    stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+                    let hello = read_frame(&mut stream)?;
+                    let s = parse_hello(&hello)?;
+                    stream.set_read_timeout(None)?;
+                    if s == slot {
+                        return Ok(WorkerLink { slot, stream, child });
+                    }
+                    st.pending.push((s, stream));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if let Ok(Some(status)) = child.try_wait() {
+                        return Err(Error::Config(format!(
+                            "worker {slot} exited during handshake ({status})"
+                        )));
+                    }
+                    if self.clock.now_ns().saturating_sub(t0) > HANDSHAKE_TIMEOUT_NS {
+                        return Err(Error::Config(format!(
+                            "worker {slot} did not say hello within the handshake timeout"
+                        )));
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forwarded_args_cover_the_allowlist_and_nothing_else() {
+        let mut cfg = RunConfig::default();
+        cfg.set("engine", "serial").unwrap();
+        cfg.set("workers", "7").unwrap();
+        cfg.set("cache-mb", "16").unwrap();
+        cfg.set("cluster-port", "9999").unwrap();
+        cfg.set("alert-log", "stderr").unwrap();
+        let args = forwarded_args(&cfg);
+        assert_eq!(args.len(), FORWARDED_KEYS.len());
+        assert!(args.contains(&"--engine=serial".to_string()));
+        assert!(args.contains(&"--cache-mb=16".to_string()));
+        // `workers` means processes at the cluster layer and threads in
+        // the worker: never forwarded. Cluster/alert plumbing stays
+        // router-side too.
+        assert!(args.iter().all(|a| !a.starts_with("--workers")));
+        assert!(args.iter().all(|a| !a.starts_with("--cluster-port")));
+        assert!(args.iter().all(|a| !a.starts_with("--alert-log")));
+    }
+
+    #[test]
+    fn fault_is_slot_scoped() {
+        let fault = Some(WorkerFault { slot: 1, after: 2 });
+        assert_eq!(fault.filter(|f| f.slot == 1).map(|f| f.after), Some(2));
+        assert_eq!(fault.filter(|f| f.slot == 0).map(|f| f.after), None);
+    }
+}

@@ -1,0 +1,326 @@
+//! The worker-process side of the cluster tier: one `cannyd worker`
+//! process per supervisor slot, each owning a full single-process
+//! serving stack — a [`Detector`], a private [`ArtifactCache`] shard of
+//! the cluster-wide cache picture, and a [`Telemetry`] registry whose
+//! final snapshot line ships home inside the worker's report.
+//!
+//! The loop is deliberately dumb: connect to the front door, announce
+//! the slot with a `hello`, then serve one frame at a time. Requests
+//! regenerate their image from the scene spec (the wire never carries
+//! pixels), execute through the exact same detector/plan/cache idioms
+//! the in-process serve tier uses, and answer with the edge count plus
+//! a content digest of the output — the router's cross-process
+//! bit-identity check. Determinism does the heavy lifting here: every
+//! engine produces bit-identical artifacts, so a worker's answer for a
+//! request is byte-equal to what `cannyd serve` would have produced.
+//!
+//! Fault injection for the restart tests rides an environment variable
+//! ([`WORKER_FAULT_ENV`]): when set, the worker calls
+//! `std::process::exit(3)` *before* executing the fatal request, so the
+//! router sees a dead connection with a request in flight — the
+//! requeue path, not the clean-shutdown path.
+
+use std::collections::BTreeMap;
+use std::net::TcpStream;
+
+use crate::cache::{ArtifactCache, ArtifactKey, CacheConfig, CacheTier};
+use crate::canny::{Artifact, CannyParams, StageKind};
+use crate::cluster::proto::{
+    digest_string, frame_kind, hello_frame, parse_request, pong_frame, read_frame,
+    response_frame, worker_report_frame, write_frame,
+};
+use crate::cluster::report::WorkerReport;
+use crate::config::RunConfig;
+use crate::coordinator::Detector;
+use crate::error::{Error, Result};
+use crate::image::synth::generate;
+use crate::obs::{SnapshotEngine, Telemetry, TickInputs};
+use crate::service::clock::WallClock;
+use crate::service::{Request, RequestKind};
+use crate::util::json::Json;
+
+/// Environment variable for the kill/restart tests: `<n>` makes the
+/// worker process exit (status 3) on receipt of its `n+1`-th request,
+/// before executing it. The supervisor only sets it on the first
+/// incarnation of the faulted slot, so the restarted process serves
+/// normally.
+pub const WORKER_FAULT_ENV: &str = "CANNYD_WORKER_EXIT_AFTER";
+
+/// One executed request's answer, before it is framed for the wire.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkerAnswer {
+    /// Edge pixels in the output (0 for `front-only`, which produces
+    /// no edges — it warms the cache).
+    pub edge_pixels: u64,
+    /// Content digest of the produced artifact: the edge map for
+    /// `full`/`re-threshold`, the suppressed-magnitude key for
+    /// `front-only`.
+    pub digest: ArtifactKey,
+}
+
+/// The per-process serving engine: detector + cache + telemetry plus
+/// the running totals the end-of-run [`WorkerReport`] is built from.
+/// Pure compute — no sockets — so the unit tests drive it directly and
+/// the wire loop ([`run_worker`]) stays a thin shell.
+#[derive(Debug)]
+pub struct WorkerCore {
+    det: Detector,
+    cache: ArtifactCache,
+    telemetry: Telemetry,
+    clock: WallClock,
+    served: u64,
+    edge_pixels: u64,
+    kinds: BTreeMap<String, u64>,
+}
+
+impl WorkerCore {
+    /// Build from the forwarded [`RunConfig`] (the supervisor re-sends
+    /// the detector/cache flags on the worker command line).
+    pub fn from_config(cfg: &RunConfig) -> Result<WorkerCore> {
+        Ok(WorkerCore {
+            det: Detector::from_config(cfg)?,
+            cache: ArtifactCache::new(CacheConfig::from_config(cfg)),
+            telemetry: Telemetry::new("serve", 1),
+            clock: WallClock::start(),
+            served: 0,
+            edge_pixels: 0,
+            kinds: BTreeMap::new(),
+        })
+    }
+
+    /// Requests this incarnation has completed.
+    pub fn served(&self) -> u64 {
+        self.served
+    }
+
+    /// Execute one request: regenerate the scene, run the kind's
+    /// pipeline span (consulting/warming the private artifact cache for
+    /// partial kinds), and fold the totals into telemetry.
+    pub fn execute(&mut self, req: &Request) -> Result<WorkerAnswer> {
+        let t0 = self.clock.now_ns();
+        self.telemetry.offered.inc();
+        self.telemetry.admitted.inc();
+        self.telemetry.lane(0).inflight.add(1);
+        self.telemetry.lane(0).batches.inc();
+        let img = generate(req.scene, req.width, req.height);
+        let answer = match req.kind {
+            RequestKind::Full => {
+                let out = self.det.detect_full(&img, self.det.params())?;
+                WorkerAnswer {
+                    edge_pixels: out.edges.count_edges() as u64,
+                    digest: ArtifactKey::edges(&out.edges),
+                }
+            }
+            RequestKind::FrontOnly => {
+                let key = ArtifactKey::suppressed(&img);
+                let plan = self.det.plan().stop_after(StageKind::Nms);
+                let mut out = self.det.run_plan(&plan, Some(&img), self.det.params())?;
+                if let Some(nm) = out.take_suppressed() {
+                    self.cache.offer(key, Artifact::Suppressed(nm), out.total_ns, CacheTier::Serve);
+                }
+                WorkerAnswer { edge_pixels: 0, digest: key }
+            }
+            RequestKind::ReThreshold { lo, hi } => {
+                let params = CannyParams { lo, hi, ..*self.det.params() };
+                let key = ArtifactKey::suppressed(&img);
+                // Digest affinity is what makes this hit: the router
+                // pins a scene's re-thresholds to this worker, so the
+                // front computed once (here or by a front-only warm) is
+                // reused across the whole threshold sweep.
+                let nm = match self.cache.get(&key, CacheTier::Serve) {
+                    Some(Artifact::Suppressed(nm)) => nm,
+                    _ => {
+                        let plan = self.det.plan().stop_after(StageKind::Nms);
+                        let mut out =
+                            self.det.run_plan(&plan, Some(&img), self.det.params())?;
+                        let nm = out.take_suppressed().ok_or_else(|| {
+                            Error::Config("front plan produced no suppressed artifact".into())
+                        })?;
+                        self.cache.offer(
+                            key,
+                            Artifact::Suppressed(nm.clone()),
+                            out.total_ns,
+                            CacheTier::Serve,
+                        );
+                        nm
+                    }
+                };
+                let plan = self.det.plan().from_suppressed(nm);
+                let out = self.det.run_plan(&plan, None, &params)?;
+                let edges = out.edges().ok_or_else(|| {
+                    Error::Config("re-threshold plan produced no edge map".into())
+                })?;
+                WorkerAnswer {
+                    edge_pixels: edges.count_edges() as u64,
+                    digest: ArtifactKey::edges(edges),
+                }
+            }
+        };
+        let now = self.clock.now_ns();
+        self.telemetry.completed.inc();
+        self.telemetry.latency.record(now.saturating_sub(t0));
+        self.telemetry.lane(0).completed.inc();
+        self.telemetry.lane(0).busy_ns.add(now.saturating_sub(t0));
+        self.telemetry.lane(0).heartbeat_ns.set(now);
+        self.telemetry.lane(0).inflight.sub(1);
+        self.served += 1;
+        self.edge_pixels += answer.edge_pixels;
+        *self.kinds.entry(req.kind.name().to_string()).or_insert(0) += 1;
+        Ok(answer)
+    }
+
+    /// The end-of-run report body, with the worker's final telemetry
+    /// snapshot line rendered through the same
+    /// [`SnapshotEngine`] line builder the in-process tiers log from —
+    /// the snapshot stream crossing the process boundary.
+    pub fn report(&mut self, worker: usize) -> WorkerReport {
+        let mut slo = BTreeMap::new();
+        slo.insert("status".to_string(), Json::Str("none".into()));
+        let inputs = TickInputs {
+            t_ns: self.clock.now_ns(),
+            telemetry: &self.telemetry,
+            cache: self.cache.snapshot(),
+            slo: Json::Obj(slo),
+            slo_missed: false,
+            shedding_possible: false,
+            utilization: None,
+        };
+        let telemetry = SnapshotEngine::disabled().render_line(&inputs);
+        WorkerReport {
+            worker,
+            served: self.served,
+            edge_pixels: self.edge_pixels,
+            kinds: self.kinds.clone(),
+            cache: self.cache.snapshot(),
+            telemetry,
+        }
+    }
+}
+
+/// The `cannyd worker` entry point: connect to the front door on
+/// loopback, announce the slot, then serve frames until `shutdown` (or
+/// until the connection drops — the supervisor owns our lifetime, so a
+/// dead front door means exit).
+pub fn run_worker(cfg: &RunConfig, worker: usize, port: u16) -> Result<()> {
+    let mut stream = TcpStream::connect(("127.0.0.1", port))?;
+    stream.set_nodelay(true).ok();
+    write_frame(&mut stream, &hello_frame(worker))?;
+    let mut core = WorkerCore::from_config(cfg)?;
+    let fault: Option<u64> =
+        std::env::var(WORKER_FAULT_ENV).ok().and_then(|v| v.parse().ok());
+    loop {
+        let frame = read_frame(&mut stream)?;
+        match frame_kind(&frame) {
+            Some("request") => {
+                let req = parse_request(&frame)?;
+                if fault.is_some_and(|after| core.served() >= after) {
+                    // Die with the request un-answered: the router must
+                    // detect the dead connection and requeue it onto
+                    // our restarted incarnation.
+                    std::process::exit(3);
+                }
+                let ans = core.execute(&req)?;
+                let resp = response_frame(req.id, ans.edge_pixels, &digest_string(&ans.digest));
+                write_frame(&mut stream, &resp)?;
+            }
+            Some("ping") => {
+                let t = frame.get("t_ns").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+                write_frame(&mut stream, &pong_frame(t))?;
+            }
+            Some("report") => {
+                let body = core.report(worker).to_json();
+                write_frame(&mut stream, &worker_report_frame(body))?;
+            }
+            Some("shutdown") => return Ok(()),
+            other => {
+                return Err(Error::Config(format!(
+                    "worker {worker}: unexpected frame `{}`",
+                    other.unwrap_or("<none>")
+                )))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::report::REQUIRED_WORKER_KEYS;
+    use crate::image::synth::Scene;
+    use crate::obs::REQUIRED_LINE_KEYS;
+
+    fn test_cfg() -> RunConfig {
+        let mut cfg = RunConfig::default();
+        cfg.set("engine", "serial").unwrap();
+        cfg.set("workers", "1").unwrap();
+        cfg.set("cache-mb", "8").unwrap();
+        cfg
+    }
+
+    fn req(id: u64, kind: RequestKind) -> Request {
+        Request {
+            id,
+            arrival_ns: id * 1_000,
+            scene: Scene::Shapes { seed: 21 },
+            width: 64,
+            height: 48,
+            kind,
+        }
+    }
+
+    #[test]
+    fn full_requests_match_the_detector_exactly() {
+        let mut core = WorkerCore::from_config(&test_cfg()).unwrap();
+        let r = req(0, RequestKind::Full);
+        let ans = core.execute(&r).unwrap();
+        let det = Detector::from_config(&test_cfg()).unwrap();
+        let img = generate(r.scene, r.width, r.height);
+        let edges = det.detect_full(&img, det.params()).unwrap().edges;
+        assert_eq!(ans.edge_pixels, edges.count_edges() as u64);
+        assert_eq!(ans.digest, ArtifactKey::edges(&edges));
+        assert_eq!(core.served(), 1);
+    }
+
+    #[test]
+    fn rethreshold_hits_the_cache_after_a_front_warm() {
+        let mut core = WorkerCore::from_config(&test_cfg()).unwrap();
+        core.execute(&req(0, RequestKind::FrontOnly)).unwrap();
+        let a = core.execute(&req(1, RequestKind::ReThreshold { lo: 0.04, hi: 0.2 })).unwrap();
+        let snap = core.cache.snapshot();
+        let serve = snap.tiers.iter().find(|(name, _)| *name == "serve").unwrap();
+        assert_eq!(serve.1.hits, 1, "re-threshold should hit the warmed front");
+        // The cached path produces the same bits as a cold worker.
+        let mut cold = WorkerCore::from_config(&test_cfg()).unwrap();
+        let b = cold.execute(&req(1, RequestKind::ReThreshold { lo: 0.04, hi: 0.2 })).unwrap();
+        assert_eq!(a.digest, b.digest);
+        assert_eq!(a.edge_pixels, b.edge_pixels);
+    }
+
+    #[test]
+    fn report_carries_totals_and_a_telemetry_line() {
+        let mut core = WorkerCore::from_config(&test_cfg()).unwrap();
+        core.execute(&req(0, RequestKind::Full)).unwrap();
+        core.execute(&req(1, RequestKind::FrontOnly)).unwrap();
+        let rep = core.report(3);
+        assert_eq!(rep.worker, 3);
+        assert_eq!(rep.served, 2);
+        assert_eq!(rep.kinds.get("full"), Some(&1));
+        assert_eq!(rep.kinds.get("front-only"), Some(&1));
+        let j = rep.to_json();
+        for key in REQUIRED_WORKER_KEYS {
+            assert!(j.get(key).is_some(), "worker report is missing `{key}`");
+        }
+        // The forwarded telemetry line is a full snapshot line.
+        for key in REQUIRED_LINE_KEYS {
+            assert!(
+                rep.telemetry.get(key).is_some(),
+                "forwarded telemetry line is missing `{key}`"
+            );
+        }
+        assert_eq!(
+            rep.telemetry.get("lanes").unwrap().as_arr().unwrap().len(),
+            1,
+            "worker telemetry has exactly one lane"
+        );
+    }
+}

@@ -92,6 +92,18 @@ pub struct RunConfig {
     pub overload_policy: OverloadPolicy,
     /// Ops plane: rolling SLO window capacity, in completions.
     pub slo_window: usize,
+    /// Ops plane: health-transition alert sink — "" disables, `stderr`
+    /// streams to stderr, anything else is an alert-log file path.
+    pub alert_log: String,
+    /// Cluster tier: loopback TCP port the front-door listens on for
+    /// worker connections (0 = ephemeral, the default; `cannyd worker`
+    /// is told the real port via `--cluster-port`).
+    pub cluster_port: u16,
+    /// Cluster tier: per-dispatch read timeout, milliseconds — how long
+    /// the router waits on a silent worker before probing its process
+    /// for liveness (dead workers are restarted and the request
+    /// requeued).
+    pub worker_heartbeat_ms: u64,
 }
 
 impl Default for RunConfig {
@@ -126,6 +138,9 @@ impl Default for RunConfig {
             telemetry_interval_ms: 100.0,
             overload_policy: OverloadPolicy::None,
             slo_window: DEFAULT_SLO_WINDOW,
+            alert_log: String::new(),
+            cluster_port: 0,
+            worker_heartbeat_ms: 500,
         }
     }
 }
@@ -212,6 +227,13 @@ impl RunConfig {
             "slo-window" | "slo_window" => {
                 self.slo_window = value.parse().map_err(|_| bad("usize"))?
             }
+            "alert-log" | "alert_log" => self.alert_log = value.to_string(),
+            "cluster-port" | "cluster_port" => {
+                self.cluster_port = value.parse().map_err(|_| bad("u16"))?
+            }
+            "worker-heartbeat-ms" | "worker_heartbeat_ms" => {
+                self.worker_heartbeat_ms = value.parse().map_err(|_| bad("u64"))?
+            }
             _ => return Err(Error::Config(format!("unknown config key `{key}`"))),
         }
         Ok(())
@@ -277,6 +299,12 @@ impl RunConfig {
         "overload_policy",
         "slo-window",
         "slo_window",
+        "alert-log",
+        "alert_log",
+        "cluster-port",
+        "cluster_port",
+        "worker-heartbeat-ms",
+        "worker_heartbeat_ms",
     ];
 
     /// Is `key` a config key `set` would accept?
@@ -376,6 +404,9 @@ impl RunConfig {
         if self.slo_window == 0 {
             return Err(Error::Config("slo-window must be >= 1".into()));
         }
+        if self.worker_heartbeat_ms == 0 {
+            return Err(Error::Config("worker-heartbeat-ms must be >= 1".into()));
+        }
         Ok(())
     }
 
@@ -417,6 +448,9 @@ impl RunConfig {
         m.insert("telemetry-interval-ms".into(), self.telemetry_interval_ms.to_string());
         m.insert("overload-policy".into(), self.overload_policy.name().to_string());
         m.insert("slo-window".into(), self.slo_window.to_string());
+        m.insert("alert-log".into(), self.alert_log.clone());
+        m.insert("cluster-port".into(), self.cluster_port.to_string());
+        m.insert("worker-heartbeat-ms".into(), self.worker_heartbeat_ms.to_string());
         m
     }
 }
@@ -641,6 +675,28 @@ mod tests {
     }
 
     #[test]
+    fn cluster_and_alert_keys_set_and_validate() {
+        let mut c = RunConfig::default();
+        assert!(c.alert_log.is_empty(), "alerting is opt-in");
+        assert_eq!(c.cluster_port, 0, "ephemeral port by default");
+        assert_eq!(c.worker_heartbeat_ms, 500);
+        c.set("alert-log", "stderr").unwrap();
+        c.set("cluster-port", "40123").unwrap();
+        c.set("worker-heartbeat-ms", "250").unwrap();
+        assert_eq!(c.alert_log, "stderr");
+        assert_eq!(c.cluster_port, 40123);
+        assert_eq!(c.worker_heartbeat_ms, 250);
+        c.validate().unwrap();
+        assert!(c.set("cluster-port", "70000").is_err(), "u16 range enforced");
+        c.set("worker_heartbeat_ms", "0").unwrap();
+        assert!(c.validate().is_err());
+        let m = RunConfig::default().to_map();
+        assert_eq!(m.get("cluster-port").map(String::as_str), Some("0"));
+        assert_eq!(m.get("worker-heartbeat-ms").map(String::as_str), Some("500"));
+        assert_eq!(m.get("alert-log").map(String::as_str), Some(""));
+    }
+
+    #[test]
     fn every_known_key_is_settable() {
         for &key in RunConfig::KEYS {
             let mut c = RunConfig::default();
@@ -655,6 +711,7 @@ mod tests {
                 "drop-policy" | "drop_policy" => "degrade",
                 "telemetry-log" | "telemetry_log" => "/tmp/telemetry.jsonl",
                 "overload-policy" | "overload_policy" => "reject-new",
+                "alert-log" | "alert_log" => "stderr",
                 _ => "4", // parses as usize / u64 / f32 / f64 alike
             };
             c.set(key, sample).unwrap_or_else(|e| panic!("KEYS lists `{key}` but set failed: {e}"));

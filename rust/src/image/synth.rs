@@ -68,6 +68,23 @@ impl Scene {
             _ => None,
         }
     }
+
+    /// Render the spec string [`Scene::parse`] accepts back from the
+    /// value — the wire form the cluster tier ships requests as, and
+    /// the content label the routing ring hashes. Round-trips through
+    /// `parse` for every scene a trace can carry (`RemoteSensing`
+    /// keeps the parser's fixed noise; `parse` never reads noise from
+    /// the spec).
+    pub fn spec(&self) -> String {
+        match self {
+            Scene::Shapes { seed } => format!("shapes:{seed}"),
+            Scene::RemoteSensing { seed, .. } => format!("remote:{seed}"),
+            Scene::Text { seed } => format!("text:{seed}"),
+            Scene::Checker { cell } => format!("checker:{cell}"),
+            Scene::Gradient => "gradient".into(),
+            Scene::Video { seed, frame } => format!("video:{seed}:{frame}"),
+        }
+    }
 }
 
 /// Generate a scene at the given size.
@@ -271,6 +288,20 @@ mod tests {
         assert_eq!(Scene::parse("gradient"), Some(Scene::Gradient));
         assert_eq!(Scene::parse("checker:32"), Some(Scene::Checker { cell: 32 }));
         assert!(Scene::parse("nope").is_none());
+    }
+
+    #[test]
+    fn spec_round_trips_through_parse() {
+        for scene in [
+            Scene::Shapes { seed: 9 },
+            Scene::RemoteSensing { seed: 3, noise: 0.08 },
+            Scene::Text { seed: 4 },
+            Scene::Checker { cell: 32 },
+            Scene::Gradient,
+            Scene::Video { seed: 5, frame: 12 },
+        ] {
+            assert_eq!(Scene::parse(&scene.spec()), Some(scene), "{scene:?}");
+        }
     }
 
     #[test]

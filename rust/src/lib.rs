@@ -35,6 +35,16 @@
 //!   request, a decoded frame) serves re-thresholds and duplicate
 //!   frames everywhere, bit-exactly (`--cache-mb`, `--cache-shards`,
 //!   `--cache-admit-ns-per-byte`, `--stream-cache`).
+//! * **L3 cluster tier** ([`cluster`]) — multi-process `cannyd`: a
+//!   front-door router spawns and supervises N worker processes over
+//!   loopback TCP (`cannyd cluster --workers N`), routing every request
+//!   to the worker whose consistent-hash range owns its content digest
+//!   — so the per-worker artifact caches behave like one sharded
+//!   cluster cache — with heartbeat death detection, automatic restart
+//!   + requeue, health-transition alerts (`--alert-log`), and a merged
+//!   cluster report carrying per-worker serve/cache/telemetry
+//!   sections. Responses are byte-identical to the single-process
+//!   serve path (`--cluster-port`, `--worker-heartbeat-ms`).
 //! * **L3 ops plane** ([`obs`]) — live telemetry for both tiers: a
 //!   process-wide registry of atomic counters/gauges/histograms, a
 //!   snapshot engine emitting periodic machine-readable JSONL
@@ -152,6 +162,25 @@
 //! println!("{}", report.to_json_string());
 //! ```
 //!
+//! Spreading the same trace over worker **processes** ([`cluster`]) —
+//! the CLI equivalent is `cannyd cluster --workers 2 --synthetic 40`;
+//! responses are bit-identical to the in-process serve above, and the
+//! merged report carries one serve/cache/telemetry section per worker:
+//!
+//! ```no_run
+//! use canny_par::cluster::{run_cluster, ClusterOptions};
+//! use canny_par::config::RunConfig;
+//! use canny_par::service::Trace;
+//!
+//! let mut cfg = RunConfig::default();
+//! cfg.set("workers", "2").unwrap();       // processes, at this layer
+//! cfg.set("alert-log", "stderr").unwrap(); // restart alerts, if any
+//! let trace = Trace::synthetic(40, cfg.seed, cfg.arrival_rate_hz);
+//! let out = run_cluster("quickstart", &trace, &ClusterOptions::from_config(&cfg)).unwrap();
+//! assert_eq!(out.report.completed, 40);
+//! println!("{}", out.report.to_json_string());
+//! ```
+//!
 //! Processing a **frame stream** ([`stream`]) with temporal
 //! delta-gating — clean tiles reuse the previous frame's cached
 //! suppressed-magnitude artifact, dirty tiles recompute, and the
@@ -213,6 +242,7 @@ pub mod amdahl;
 pub mod bench;
 pub mod cache;
 pub mod canny;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod error;

@@ -10,6 +10,11 @@
 //!   stream     --synthetic-frames 32 | --source dir:frames/   (frame-stream
 //!              tier; --inflight, --delta-gate, --frame-budget-ms,
 //!              --drop-policy)
+//!   cluster    --workers 2 --synthetic 200   (multi-process front door:
+//!              spawns `cannyd worker` children, digest-affine routing,
+//!              restart-on-death, merged JSON cluster report)
+//!   worker     (internal: spawned by `cluster`; --worker-id N
+//!              --cluster-port P)
 //!
 //! Both tiers take `--telemetry-log file.jsonl --telemetry-interval-ms N
 //! --slo-window N` (the ops plane; see the `obs` module docs).
@@ -26,6 +31,7 @@ use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
 use canny_par::canny::{Engine, StageKind};
+use canny_par::cluster::{run_cluster, run_worker, ClusterOptions};
 use canny_par::config::RunConfig;
 use canny_par::service::clock::ClockMode;
 use canny_par::service::install_sigint_drain;
@@ -54,8 +60,10 @@ fn main() -> ExitCode {
 }
 
 /// Every subcommand (also the source of the command-flag union below).
-const COMMANDS: &[&str] =
-    &["run", "gen", "batch", "serve", "stream", "calibrate", "profile", "info", "help"];
+const COMMANDS: &[&str] = &[
+    "run", "gen", "batch", "serve", "stream", "cluster", "worker", "calibrate", "profile",
+    "info", "help",
+];
 
 /// Command-level flags (not config keys) each subcommand accepts.
 fn allowed_extras(cmd: &str) -> &'static [&'static str] {
@@ -65,6 +73,8 @@ fn allowed_extras(cmd: &str) -> &'static [&'static str] {
         "batch" => &["config", "count", "size", "scene"],
         "serve" => &["config", "requests", "synthetic", "calibration"],
         "stream" => &["config", "source", "synthetic-frames", "size"],
+        "cluster" => &["config", "requests", "synthetic"],
+        "worker" => &["config", "worker-id"],
         "calibrate" => &["config", "output"],
         "profile" => &["config", "figure"],
         _ => &["config"],
@@ -161,6 +171,8 @@ fn run(args: Vec<String>) -> anyhow::Result<()> {
         "batch" => cmd_batch(&cfg, get("count"), get("size"), get("scene")),
         "serve" => cmd_serve(&cfg, get("requests"), get("synthetic"), get("calibration")),
         "stream" => cmd_stream(&cfg, get("source"), get("synthetic-frames"), get("size")),
+        "cluster" => cmd_cluster(&cfg, get("requests"), get("synthetic")),
+        "worker" => cmd_worker(&cfg, get("worker-id")),
         "calibrate" => cmd_calibrate(&cfg, get("output")),
         "profile" => cmd_profile(&cfg, get("figure")),
         "info" => cmd_info(&cfg),
@@ -175,7 +187,7 @@ fn run(args: Vec<String>) -> anyhow::Result<()> {
 const HELP: &str = "\
 cannyd — high-performance parallel Canny edge detector (CS.DC 2017 repro)
 
-USAGE: cannyd <run|gen|batch|serve|stream|calibrate|profile|info> [flags]
+USAGE: cannyd <run|gen|batch|serve|stream|cluster|worker|calibrate|profile|info> [flags]
 
   run        detect edges:      --input x.pgm | --scene shapes:7 --size 512x512
                                 [--output edges.pgm]
@@ -201,6 +213,16 @@ USAGE: cannyd <run|gen|batch|serve|stream|calibrate|profile|info> [flags]
                                  parallel with a bounded in-flight window; prints
                                  a JSON stream report: fps, Mpix/s, gate hit-rate,
                                  per-stage aggregates, jitter p50/p95/p99)
+  cluster    multi-process tier: --workers N processes behind a loopback
+                                front door; --synthetic 200 | --requests
+                                trace.json (digest-affine routing keeps each
+                                content shard on one worker's cache; dead
+                                workers are restarted and their in-flight
+                                request requeued; prints a merged JSON
+                                cluster report, schema in the cluster
+                                module docs)
+  worker     internal: one cluster worker process (spawned by `cluster`;
+                                --worker-id N, connects to --cluster-port)
   calibrate  probe the service-cost model on this host and print/save it
                                 [--output calib.json]
   profile    paper figures:     [--figure fig8|fig9|percore] [--sim-cpus 4|8]
@@ -224,6 +246,10 @@ Stream flags: --inflight N (bounded in-flight window)
   --frame-budget-ms F (real-time deadline per frame, 0 = offline)
   --drop-policy drop|degrade|none (late-frame handling under a budget)
   --stream-cache (consult/offer frames in the shared artifact tier)
+Cluster flags: --cluster-port P (front-door loopback port, 0 = ephemeral)
+  --worker-heartbeat-ms N (dispatch read-timeout / liveness probe period)
+  --alert-log stderr|FILE (health-transition alert sink, also honored by
+    serve; empty = off)
 Ops-plane flags (serve + stream):
   --telemetry-log FILE.jsonl (periodic snapshot stream; schema in the
     obs module docs; byte-identical across virtual serve replays)
@@ -538,6 +564,46 @@ fn cmd_stream(
     let label = format!("stream[{}]", src.describe());
     let out = run_stream(&label, &src, &det, &opts)?;
     println!("{}", out.report.to_json_string());
+    Ok(())
+}
+
+/// `cannyd cluster`: spawn `--workers` worker processes, route the
+/// trace across them by content digest, and print the merged cluster
+/// report (schema documented in `canny_par::cluster`).
+fn cmd_cluster(
+    cfg: &RunConfig,
+    requests: Option<String>,
+    synthetic: Option<String>,
+) -> anyhow::Result<()> {
+    let (label, trace) = match requests {
+        Some(path) => {
+            if synthetic.is_some() {
+                anyhow::bail!("--requests and --synthetic are mutually exclusive");
+            }
+            (format!("cluster[{path}]"), Trace::from_json_file(Path::new(&path))?)
+        }
+        None => {
+            let n: usize = synthetic.unwrap_or_else(|| "200".into()).parse()?;
+            (
+                format!("cluster[synthetic n={n} seed={}]", cfg.seed),
+                Trace::synthetic(n, cfg.seed, cfg.arrival_rate_hz),
+            )
+        }
+    };
+    let opts = ClusterOptions::from_config(cfg);
+    let out = run_cluster(&label, &trace, &opts)?;
+    println!("{}", out.report.to_json_string());
+    Ok(())
+}
+
+/// `cannyd worker`: one cluster worker process. Connects back to the
+/// front door, says hello, then serves request frames until `shutdown`.
+/// Internal — spawned by `cmd_cluster`, not meant for direct use.
+fn cmd_worker(cfg: &RunConfig, worker_id: Option<String>) -> anyhow::Result<()> {
+    let id: usize = worker_id
+        .ok_or_else(|| anyhow::anyhow!("worker needs --worker-id (spawned by `cluster`)"))?
+        .parse()?;
+    run_worker(cfg, id, cfg.cluster_port)?;
     Ok(())
 }
 

@@ -3,6 +3,19 @@
 //! gauges the workers publish ([`crate::obs::registry::LaneTelemetry`])
 //! — the live equivalent of eyeballing a profiler timeline for a stuck
 //! worker.
+//!
+//! [`HealthTracker`] is the alerting hook on top: it remembers the
+//! last state per scope (a lane, a tier, a cluster worker) and emits
+//! one timestamped transition line per state change to an
+//! [`AlertSink`] (`--alert-log stderr|FILE`), counted into the
+//! telemetry registry's `alerts` counter.
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::Write;
+use std::path::Path;
+
+use crate::error::{Error, Result};
 
 /// How long a lane may hold in-flight work without a heartbeat
 /// (dispatch or completion) before it is reported stalled. Compared in
@@ -68,6 +81,107 @@ impl Health {
     }
 }
 
+/// Where health-transition alert lines go.
+#[derive(Debug)]
+pub enum AlertSink {
+    /// No alerting (the default — transitions are tracked nowhere).
+    Off,
+    /// `eprintln!` — rides whatever stderr the process inherited, which
+    /// is how cluster workers' alerts surface in the front-door's
+    /// stderr.
+    Stderr,
+    /// An append-only alert log opened by `--alert-log FILE`.
+    File(File),
+}
+
+/// Tracks the last observed [`Health`] per scope and emits one line
+/// per transition:
+///
+/// ```text
+/// ALERT t_ns=1200000000 scope=serve/lane1 from=healthy to=stalled
+/// ```
+///
+/// `t_ns` is whatever clock domain the caller observes in (modeled ns
+/// under the virtual clock — byte-identical across replays — and
+/// monotonic ns under wall), so the tracker itself never reads a
+/// clock. The first observation of a scope is diffed against an
+/// implicit `healthy` baseline: a tier that comes up healthy emits
+/// nothing, a worker first seen dead alerts immediately.
+#[derive(Debug)]
+pub struct HealthTracker {
+    sink: AlertSink,
+    last: BTreeMap<String, Health>,
+    emitted: u64,
+}
+
+impl HealthTracker {
+    /// The inert tracker: `observe` updates no state, emits nothing.
+    pub fn off() -> HealthTracker {
+        HealthTracker { sink: AlertSink::Off, last: BTreeMap::new(), emitted: 0 }
+    }
+
+    pub fn stderr() -> HealthTracker {
+        HealthTracker { sink: AlertSink::Stderr, last: BTreeMap::new(), emitted: 0 }
+    }
+
+    /// Open (truncating) an alert log — a run's alerts are
+    /// self-contained, like the telemetry JSONL.
+    pub fn to_file(path: &Path) -> Result<HealthTracker> {
+        let file = File::create(path)
+            .map_err(|e| Error::Config(format!("alert log {}: {e}", path.display())))?;
+        Ok(HealthTracker { sink: AlertSink::File(file), last: BTreeMap::new(), emitted: 0 })
+    }
+
+    /// Resolve the `--alert-log` spec: empty disables, the literal
+    /// `stderr` streams to stderr, anything else is a file path.
+    pub fn from_spec(spec: &str) -> Result<HealthTracker> {
+        match spec {
+            "" => Ok(HealthTracker::off()),
+            "stderr" => Ok(HealthTracker::stderr()),
+            path => HealthTracker::to_file(Path::new(path)),
+        }
+    }
+
+    /// Is any sink attached? (Inert trackers skip all bookkeeping.)
+    pub fn active(&self) -> bool {
+        !matches!(self.sink, AlertSink::Off)
+    }
+
+    /// Transition lines emitted so far.
+    pub fn emitted(&self) -> u64 {
+        self.emitted
+    }
+
+    /// Record `scope`'s state at `t_ns`; emit and count a line when it
+    /// changed. Returns whether a line was emitted. Sink write errors
+    /// are swallowed — alerting is best-effort and must never take the
+    /// serving path down with it.
+    pub fn observe(&mut self, t_ns: u64, scope: &str, health: Health) -> bool {
+        if !self.active() {
+            return false;
+        }
+        let from = self.last.insert(scope.to_string(), health).unwrap_or(Health::Healthy);
+        if from == health {
+            return false;
+        }
+        let line = format!(
+            "ALERT t_ns={t_ns} scope={scope} from={} to={}",
+            from.name(),
+            health.name()
+        );
+        match &mut self.sink {
+            AlertSink::Off => unreachable!("checked active above"),
+            AlertSink::Stderr => eprintln!("{line}"),
+            AlertSink::File(f) => {
+                let _ = writeln!(f, "{line}");
+                let _ = f.flush();
+            }
+        }
+        self.emitted += 1;
+        true
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -103,5 +217,48 @@ mod tests {
         assert_eq!(Health::worst([Healthy, Degraded]), Degraded);
         assert_eq!(Health::worst([Degraded, Stalled, Healthy]), Stalled);
         assert_eq!(Health::worst([]), Healthy);
+    }
+
+    #[test]
+    fn inert_tracker_never_emits() {
+        let mut t = HealthTracker::off();
+        assert!(!t.active());
+        assert!(!t.observe(10, "serve", Health::Stalled));
+        assert!(!t.observe(20, "serve", Health::Healthy));
+        assert_eq!(t.emitted(), 0);
+    }
+
+    #[test]
+    fn file_tracker_emits_one_line_per_transition() {
+        let dir = std::env::temp_dir().join("canny_obs_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("{}_alerts.log", std::process::id()));
+        let mut t = HealthTracker::to_file(&path).unwrap();
+        assert!(t.active());
+        // First-seen healthy: matches the implicit baseline, no line.
+        assert!(!t.observe(100, "serve", Health::Healthy));
+        // Transition, repeat (held state), recovery, independent scope.
+        assert!(t.observe(200, "serve", Health::Degraded));
+        assert!(!t.observe(300, "serve", Health::Degraded));
+        assert!(t.observe(400, "serve", Health::Healthy));
+        assert!(t.observe(500, "cluster/worker1", Health::Stalled));
+        assert_eq!(t.emitted(), 3);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(
+            lines,
+            vec![
+                "ALERT t_ns=200 scope=serve from=healthy to=degraded",
+                "ALERT t_ns=400 scope=serve from=degraded to=healthy",
+                "ALERT t_ns=500 scope=cluster/worker1 from=healthy to=stalled",
+            ]
+        );
+    }
+
+    #[test]
+    fn spec_resolution() {
+        assert!(!HealthTracker::from_spec("").unwrap().active());
+        assert!(HealthTracker::from_spec("stderr").unwrap().active());
+        assert!(matches!(HealthTracker::from_spec("stderr").unwrap().sink, AlertSink::Stderr));
     }
 }

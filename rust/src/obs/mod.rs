@@ -34,6 +34,7 @@
 //!
 //! ```json
 //! {
+//!   "alerts": 0,
 //!   "cache": {"enabled": true, "...": "the serve/stream cache section",
 //!             "tiers": {"serve": {"hit_rate": 0.75, "...": "…"},
 //!                       "stream": {"hit_rate": 0.0, "...": "…"}}},
@@ -67,6 +68,11 @@
 //!   schema check asserts). `utilization` is **wall-clock only**: a
 //!   measured sample would break virtual-replay byte-identity, so
 //!   deterministic replays omit the key rather than fake it.
+//! * `alerts` counts health-transition lines the run's
+//!   [`health::HealthTracker`] has emitted so far (`--alert-log
+//!   stderr|FILE`; format `ALERT t_ns=… scope=… from=… to=…`, one line
+//!   per healthy↔degraded↔stalled change per lane/tier/worker scope).
+//!   Zero when alerting is off.
 //! * `latency_ns` quantiles are bucket-resolution approximations from
 //!   the cumulative power-of-two histogram (`count`/`mean`/`max` are
 //!   exact); `slo` quantiles are exact nearest-rank over the rolling
@@ -96,7 +102,7 @@ pub mod registry;
 pub mod snapshot;
 
 pub use fault::{FaultManager, OverloadPolicy, ShedDecision};
-pub use health::{Health, DEFAULT_STALL_AFTER_NS};
+pub use health::{AlertSink, Health, HealthTracker, DEFAULT_STALL_AFTER_NS};
 pub use registry::{Counter, Gauge, Histogram, HistogramSnapshot, LaneTelemetry, StageTally, Telemetry};
 pub use snapshot::{
     CacheProbe, ClockProbe, SloProbe, SnapshotEngine, TickInputs, WallSnapshotter,

@@ -226,6 +226,9 @@ pub struct Telemetry {
     /// Overload decisions: work completed in degraded form — serve
     /// `degrade-to-front-only` rewrites, stream `degrade` emissions.
     pub shed_degraded: Counter,
+    /// Health-transition alert lines emitted by the run's
+    /// [`crate::obs::health::HealthTracker`] (`--alert-log`).
+    pub alerts: Counter,
     /// Cumulative completion latency (request enqueue→complete, or
     /// frame capture→emit).
     pub latency: Histogram,
@@ -254,6 +257,7 @@ impl Telemetry {
             completed: Counter::default(),
             shed_rejected: Counter::default(),
             shed_degraded: Counter::default(),
+            alerts: Counter::default(),
             latency: Histogram::default(),
             lanes: (0..lanes).map(|_| LaneTelemetry::default()).collect(),
             gate_tiles_clean: Counter::default(),

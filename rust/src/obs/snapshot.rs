@@ -30,7 +30,7 @@ use std::time::Duration;
 
 use crate::cache::CacheSnapshot;
 use crate::error::{Error, Result};
-use crate::obs::health::{Health, DEFAULT_STALL_AFTER_NS};
+use crate::obs::health::{Health, HealthTracker, DEFAULT_STALL_AFTER_NS};
 use crate::obs::registry::Telemetry;
 use crate::profiler::{UsageSample, UsageTrace};
 use crate::scheduler::PoolStats;
@@ -77,6 +77,10 @@ pub struct SnapshotEngine {
     seq: u64,
     ticks: u64,
     lines: u64,
+    /// Health-transition alerting (`--alert-log`): each tick's derived
+    /// lane and tier states are diffed against the last tick's, one
+    /// line per change, counted into the registry's `alerts` counter.
+    tracker: HealthTracker,
 }
 
 impl SnapshotEngine {
@@ -92,6 +96,7 @@ impl SnapshotEngine {
             seq: 0,
             ticks: 0,
             lines: 0,
+            tracker: HealthTracker::off(),
         }
     }
 
@@ -112,10 +117,14 @@ impl SnapshotEngine {
             seq: 0,
             ticks: 0,
             lines: 0,
+            tracker: HealthTracker::off(),
         })
     }
 
-    /// Build from options: `Some(path)` opens, `None` disables.
+    /// Build from options: `Some(path)` opens, `None` disables the
+    /// JSONL sink but keeps the tick grid — so an attached alert
+    /// tracker ([`SnapshotEngine::with_alerts`]) still gets health
+    /// evaluated every interval even with no telemetry log.
     pub fn from_options(
         path: Option<&Path>,
         interval_ns: u64,
@@ -123,8 +132,30 @@ impl SnapshotEngine {
     ) -> Result<SnapshotEngine> {
         match path {
             Some(p) => SnapshotEngine::create(p, interval_ns, policy),
-            None => Ok(SnapshotEngine::disabled()),
+            None => {
+                let mut e = SnapshotEngine::disabled();
+                e.interval_ns = interval_ns.max(1);
+                e.policy = policy.to_string();
+                Ok(e)
+            }
         }
+    }
+
+    /// Attach a health-transition alert tracker (`--alert-log`).
+    pub fn with_alerts(mut self, tracker: HealthTracker) -> SnapshotEngine {
+        self.tracker = tracker;
+        self
+    }
+
+    /// Is alerting attached? (Ticks fire for alert evaluation even
+    /// when the JSONL sink is disabled.)
+    pub fn alerts_active(&self) -> bool {
+        self.tracker.active()
+    }
+
+    /// Alert lines emitted so far.
+    pub fn alerts_emitted(&self) -> u64 {
+        self.tracker.emitted()
     }
 
     pub fn enabled(&self) -> bool {
@@ -144,7 +175,7 @@ impl SnapshotEngine {
     /// The first tick fires at one interval, not at zero — a t=0 line
     /// would only ever hold zeros.
     pub fn next_tick_ns(&self) -> u64 {
-        if !self.enabled() {
+        if !self.enabled() && !self.tracker.active() {
             return u64::MAX;
         }
         (self.ticks + 1).saturating_mul(self.interval_ns)
@@ -168,17 +199,21 @@ impl SnapshotEngine {
         Some(due)
     }
 
-    /// Append one snapshot line. No-op when disabled.
+    /// Append one snapshot line (and run alert evaluation). No-op when
+    /// the sink is disabled and no alert tracker is attached; with only
+    /// a tracker, the line is built for its health derivation but not
+    /// written.
     pub fn emit(&mut self, inputs: TickInputs) -> Result<()> {
-        if self.out.is_none() {
+        if self.out.is_none() && !self.tracker.active() {
             return Ok(());
         }
-        let line = self.build_line(&inputs).dump();
-        let out = self.out.as_mut().expect("checked above");
-        out.write_all(line.as_bytes())?;
-        out.write_all(b"\n")?;
-        self.seq += 1;
-        self.lines += 1;
+        let line = self.build_line(&inputs);
+        if let Some(out) = self.out.as_mut() {
+            out.write_all(line.dump().as_bytes())?;
+            out.write_all(b"\n")?;
+            self.seq += 1;
+            self.lines += 1;
+        }
         Ok(())
     }
 
@@ -198,7 +233,7 @@ impl SnapshotEngine {
     /// [`crate::obs`]). Key order is `BTreeMap` order, values are
     /// whatever the registry holds — deterministic inputs, identical
     /// bytes.
-    fn build_line(&self, inputs: &TickInputs) -> Json {
+    fn build_line(&mut self, inputs: &TickInputs) -> Json {
         let tel = inputs.telemetry;
         let num = |v: u64| Json::Num(v as f64);
         let shedding = inputs.slo_missed && inputs.shedding_possible;
@@ -213,6 +248,9 @@ impl SnapshotEngine {
                 self.stall_after_ns,
                 shedding,
             );
+            if self.tracker.observe(inputs.t_ns, &format!("{}/lane{i}", tel.tier), health) {
+                tel.alerts.inc();
+            }
             states.push(health);
             let mut m = BTreeMap::new();
             m.insert("batches".into(), num(lane.batches.get()));
@@ -263,10 +301,16 @@ impl SnapshotEngine {
             })
             .collect();
 
+        let tier_health = Health::worst(states);
+        if self.tracker.observe(inputs.t_ns, tel.tier, tier_health) {
+            tel.alerts.inc();
+        }
+
         let mut line = BTreeMap::new();
+        line.insert("alerts".into(), num(tel.alerts.get()));
         line.insert("cache".into(), inputs.cache.to_json());
         line.insert("gate".into(), Json::Obj(gate));
-        line.insert("health".into(), Json::Str(Health::worst(states).name().into()));
+        line.insert("health".into(), Json::Str(tier_health.name().into()));
         line.insert("lanes".into(), Json::Arr(lanes));
         line.insert("latency_ns".into(), Json::Obj(latency));
         line.insert("overload".into(), Json::Obj(overload));
@@ -281,11 +325,21 @@ impl SnapshotEngine {
         }
         Json::Obj(line)
     }
+
+    /// Build one snapshot line without writing it anywhere — how a
+    /// cluster worker renders its final telemetry state into the
+    /// `worker_report` frame body (the snapshot stream crossing the
+    /// process boundary). Runs the same alert evaluation as
+    /// [`SnapshotEngine::emit`].
+    pub fn render_line(&mut self, inputs: &TickInputs) -> Json {
+        self.build_line(inputs)
+    }
 }
 
 /// Keys every telemetry line carries (the CI schema check asserts
 /// these; `utilization` is additionally present under wall clocks).
-pub const REQUIRED_LINE_KEYS: [&str; 12] = [
+pub const REQUIRED_LINE_KEYS: [&str; 13] = [
+    "alerts",
     "cache",
     "gate",
     "health",
@@ -340,7 +394,9 @@ impl WallSnapshotter {
     ) -> WallSnapshotter {
         let period_ns = engine.interval_ns();
         let cores: usize = pools.iter().map(|p| p.n_workers()).sum();
-        if !engine.enabled() {
+        // Spawn when either output is live: the JSONL sink, or alert
+        // evaluation (`--alert-log` with no `--telemetry-log`).
+        if !engine.enabled() && !engine.alerts_active() {
             return WallSnapshotter {
                 stop: Arc::new(AtomicBool::new(true)),
                 handle: None,
@@ -389,13 +445,14 @@ impl WallSnapshotter {
     /// plus the per-core usage trace it accumulated.
     pub fn finish(mut self, label: &str) -> Result<(SnapshotEngine, UsageTrace)> {
         self.stop.store(true, Ordering::Release);
+        let had_thread = self.handle.is_some();
         let (engine, samples) = match self.handle.take() {
             Some(h) => h.join().expect("telemetry snapshotter panicked")?,
             None => (self.inert.take().expect("inert engine present"), Vec::new()),
         };
         let trace = UsageTrace {
             cores: self.cores,
-            period_ns: if self.period_ns == u64::MAX { 0 } else { self.period_ns },
+            period_ns: if !had_thread || self.period_ns == u64::MAX { 0 } else { self.period_ns },
             samples,
             label: label.into(),
         };
@@ -572,6 +629,68 @@ mod tests {
             lines[1].get("lanes").unwrap().as_arr().unwrap()[0].get("health").unwrap().as_str(),
             Some("stalled")
         );
+    }
+
+    #[test]
+    fn alerts_fire_without_a_telemetry_log() {
+        use crate::obs::health::HealthTracker;
+        let alert_path = tmp("alerts_only.log");
+        let mut e = SnapshotEngine::from_options(None, 100, "degrade-to-front-only")
+            .unwrap()
+            .with_alerts(HealthTracker::to_file(&alert_path).unwrap());
+        assert!(!e.enabled());
+        assert!(e.alerts_active());
+        // The tick grid stays live for alert evaluation.
+        assert_eq!(e.next_tick_ns(), 100);
+        assert_eq!(e.take_tick(100), Some(100));
+        let tel = Telemetry::new("serve", 1);
+        let degraded = |t_ns| TickInputs {
+            t_ns,
+            telemetry: &tel,
+            cache: CacheSnapshot::default(),
+            slo: slo_stub("missed"),
+            slo_missed: true,
+            shedding_possible: true,
+            utilization: None,
+        };
+        e.emit(degraded(100)).unwrap();
+        e.emit(degraded(200)).unwrap();
+        // Lane + tier each transitioned healthy→degraded exactly once,
+        // counted into the registry; no JSONL line was written.
+        assert_eq!(e.alerts_emitted(), 2);
+        assert_eq!(tel.alerts.get(), 2);
+        assert_eq!(e.lines(), 0);
+        let text = std::fs::read_to_string(&alert_path).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        assert!(text.contains("scope=serve/lane0 from=healthy to=degraded"));
+        assert!(text.contains("ALERT t_ns=100 scope=serve from=healthy to=degraded"));
+    }
+
+    #[test]
+    fn alert_count_rides_the_snapshot_line() {
+        use crate::obs::health::HealthTracker;
+        let log = tmp("alerts_on_line.jsonl");
+        let alert_path = tmp("alerts_on_line.log");
+        let mut e = SnapshotEngine::create(&log, 10, "reject-new")
+            .unwrap()
+            .with_alerts(HealthTracker::to_file(&alert_path).unwrap());
+        let tel = Telemetry::new("serve", 1);
+        e.emit(TickInputs {
+            t_ns: 10,
+            telemetry: &tel,
+            cache: CacheSnapshot::default(),
+            slo: slo_stub("missed"),
+            slo_missed: true,
+            shedding_possible: true,
+            utilization: None,
+        })
+        .unwrap();
+        e.close().unwrap();
+        let text = std::fs::read_to_string(&log).unwrap();
+        let j = Json::parse(text.lines().next().unwrap()).unwrap();
+        // lane0 and the tier both transitioned on this tick.
+        assert_eq!(j.get("alerts").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("health").unwrap().as_str(), Some("degraded"));
     }
 
     #[test]

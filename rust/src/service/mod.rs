@@ -101,6 +101,7 @@
 //!   "bytes": 1048576, "entries": 4, "high_water_bytes": 1310720,
 //!   "evictions": 1, "lookups": 12, "hits": 9, "misses": 3,
 //!   "inserts": 4, "admission_rejects": 0, "too_large": 0,
+//!   "negative_hits": 0, "negative_entries": 0,
 //!   "tiers": {
 //!     "serve":  {"lookups": 12, "hits": 9, "hit_rate": 0.75, "misses": 3,
 //!                "inserts": 4, "admission_rejects": 0, "too_large": 0},
@@ -115,7 +116,11 @@
 //! per-shard LRU eviction. `admission_rejects` counts offers that
 //! failed the cost-per-byte bar; `too_large` counts artifacts bigger
 //! than a shard's slice of the budget (`budget_bytes / shards`), which
-//! no eviction could ever make room for.
+//! no eviction could ever make room for. Rejected digests are
+//! remembered in a bounded negative set: `negative_hits` counts repeat
+//! offers refused straight from it (the original reject counter is
+//! replayed too, so totals stay comparable), `negative_entries` is its
+//! current size.
 //!
 //! ### Serve report schema (what `cannyd serve` prints)
 //!

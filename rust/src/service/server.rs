@@ -71,8 +71,8 @@ use crate::error::{Error, Result};
 use crate::image::synth::generate;
 use crate::image::ImageF32;
 use crate::obs::{
-    FaultManager, OverloadPolicy, ShedDecision, SnapshotEngine, Telemetry, TickInputs,
-    WallSnapshotter,
+    FaultManager, HealthTracker, OverloadPolicy, ShedDecision, SnapshotEngine, Telemetry,
+    TickInputs, WallSnapshotter,
 };
 use crate::scheduler::PoolStats;
 use crate::service::batcher::{Batcher, FormedBatch};
@@ -170,6 +170,11 @@ pub struct ServeOptions {
     pub overload_policy: OverloadPolicy,
     /// Rolling SLO window capacity in completions (`--slo-window`).
     pub slo_window: usize,
+    /// Health-transition alert sink spec (`--alert-log`): "" disables,
+    /// `stderr` streams, anything else is a file path. Transitions are
+    /// evaluated on the telemetry tick grid, so alerts work with or
+    /// without a `--telemetry-log`.
+    pub alert_log: String,
 }
 
 impl ServeOptions {
@@ -200,6 +205,7 @@ impl ServeOptions {
             telemetry_interval_ns: (cfg.telemetry_interval_ms.max(0.0) * 1e6) as u64,
             overload_policy: cfg.overload_policy,
             slo_window: cfg.slo_window.max(1),
+            alert_log: cfg.alert_log.clone(),
         }
     }
 
@@ -838,7 +844,8 @@ fn serve_virtual(label: &str, trace: &Trace, opts: &ServeOptions) -> Result<Serv
         opts.telemetry_log.as_deref(),
         opts.telemetry_interval_ns,
         opts.overload_policy.name(),
-    )?;
+    )?
+    .with_alerts(HealthTracker::from_spec(&opts.alert_log)?);
     let mut completions: BinaryHeap<Reverse<Completion>> = BinaryHeap::new();
 
     let mut intake = Intake::new(opts);
@@ -951,7 +958,7 @@ fn serve_virtual(label: &str, trace: &Trace, opts: &ServeOptions) -> Result<Serv
         fault.active(),
     )?;
     debug_assert!(completions.is_empty());
-    if snap.enabled() {
+    if snap.enabled() || snap.alerts_active() {
         snap.emit(TickInputs {
             t_ns: end_ns,
             telemetry: &telemetry,
@@ -1089,7 +1096,8 @@ fn serve_wall(label: &str, trace: &Trace, opts: &ServeOptions) -> Result<ServeRe
         opts.telemetry_log.as_deref(),
         opts.telemetry_interval_ns,
         opts.overload_policy.name(),
-    )?;
+    )?
+    .with_alerts(HealthTracker::from_spec(&opts.alert_log)?);
     let clock = WallClock::start();
     let snapshotter = {
         let telemetry = Arc::clone(&telemetry);

@@ -1,0 +1,243 @@
+//! Integration: the multi-process cluster tier — real `cannyd worker`
+//! child processes behind the front-door router, end to end through
+//! `cluster::run_cluster`.
+//!
+//! Covers the four cluster guarantees: bit-identity with the
+//! single-process path, survival of a worker kill mid-trace (restart +
+//! requeue + alerts), digest-affine routing stability, and the merged
+//! report schema.
+
+use std::path::PathBuf;
+
+use canny_par::cluster::proto::digest_string;
+use canny_par::cluster::{
+    run_cluster, ClusterOptions, RoutingRing, WorkerCore, WorkerFault, REQUIRED_CLUSTER_KEYS,
+    REQUIRED_WORKER_KEYS, WORKER_EXE_ENV,
+};
+use canny_par::config::RunConfig;
+use canny_par::image::synth::Scene;
+use canny_par::service::{Request, RequestKind, Trace};
+use canny_par::util::json::Json;
+
+/// Point the supervisor at the freshly built `cannyd` binary (the test
+/// process itself is the libtest harness, not `cannyd`, so respawning
+/// `current_exe` would loop the test suite). `Once` so parallel tests
+/// never race the env write against a `Command::spawn` env read.
+fn use_test_binary() {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| std::env::set_var(WORKER_EXE_ENV, env!("CARGO_BIN_EXE_cannyd")));
+}
+
+fn tmp_path(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("canny_cluster_itests");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("{}_{name}", std::process::id()))
+}
+
+/// A fast deterministic config: serial engine (one thread per worker
+/// process), small cache.
+fn cluster_cfg() -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.set("engine", "serial").unwrap();
+    cfg.set("workers", "2").unwrap();
+    cfg.set("cache-mb", "8").unwrap();
+    cfg.validate().unwrap();
+    cfg
+}
+
+/// A mixed-kind trace over several distinct contents: full detections
+/// plus front-only warms followed by re-threshold sweeps of the same
+/// content (the pattern digest-affine routing exists for). Small frames
+/// keep the suite fast.
+fn mixed_trace(contents: u64) -> Trace {
+    let mut requests = Vec::new();
+    let mut id = 0u64;
+    let mut push = |scene: Scene, kind: RequestKind| {
+        requests.push(Request {
+            id,
+            arrival_ns: id * 50_000,
+            scene,
+            width: 96,
+            height: 64,
+            kind,
+        });
+        id += 1;
+    };
+    for seed in 0..contents {
+        push(Scene::Shapes { seed }, RequestKind::Full);
+        push(Scene::Shapes { seed }, RequestKind::FrontOnly);
+        push(Scene::Shapes { seed }, RequestKind::ReThreshold { lo: 0.03, hi: 0.25 });
+    }
+    Trace { requests }
+}
+
+/// The single-process reference: the same requests through one
+/// in-process `WorkerCore` (detector + cache), no sockets involved.
+fn single_process_answers(cfg: &RunConfig, trace: &Trace) -> Vec<(u64, u64, String)> {
+    let mut core = WorkerCore::from_config(cfg).unwrap();
+    trace
+        .requests
+        .iter()
+        .map(|req| {
+            let a = core.execute(req).unwrap();
+            (req.id, a.edge_pixels, digest_string(&a.digest))
+        })
+        .collect()
+}
+
+#[test]
+fn cluster_is_bit_identical_to_the_single_process_path() {
+    use_test_binary();
+    let cfg = cluster_cfg();
+    let trace = mixed_trace(4);
+    let opts = ClusterOptions::from_config(&cfg);
+    let out = run_cluster("itest-identity", &trace, &opts).unwrap();
+
+    assert_eq!(out.report.requests, trace.len() as u64);
+    assert_eq!(out.report.completed, trace.len() as u64);
+    assert_eq!(out.report.requeued, 0);
+    assert_eq!(out.report.restarts, 0);
+    assert_eq!(out.responses.len(), trace.len());
+
+    let reference = single_process_answers(&cfg, &trace);
+    for (resp, (id, edge_pixels, digest)) in out.responses.iter().zip(&reference) {
+        assert_eq!(resp.id, *id);
+        assert_eq!(
+            resp.edge_pixels, *edge_pixels,
+            "request {id}: cluster edge count diverged from the single-process path"
+        );
+        assert_eq!(
+            &resp.digest, digest,
+            "request {id}: cluster artifact digest diverged from the single-process path"
+        );
+    }
+}
+
+#[test]
+fn cluster_survives_a_worker_kill_mid_trace() {
+    use_test_binary();
+    let cfg = cluster_cfg();
+    let trace = mixed_trace(5);
+
+    // Inject the crash on whichever slot owns the most requests, so the
+    // death lands mid-queue rather than after the slot is already done.
+    let ring = RoutingRing::new(2);
+    let mut load = [0u64; 2];
+    for req in &trace.requests {
+        load[ring.route_request(req)] += 1;
+    }
+    let busy = if load[0] >= load[1] { 0 } else { 1 };
+
+    let alert_log = tmp_path("kill_alerts.log");
+    let mut opts = ClusterOptions::from_config(&cfg);
+    opts.alert_log = alert_log.display().to_string();
+    opts.fault = Some(WorkerFault { slot: busy, after: 1 });
+
+    let out = run_cluster("itest-kill", &trace, &opts).unwrap();
+    assert_eq!(
+        out.report.completed,
+        trace.len() as u64,
+        "every request must complete despite the mid-trace worker death"
+    );
+    assert!(out.report.restarts >= 1, "the faulted worker must have been restarted");
+    assert!(out.report.requeued >= 1, "the in-flight request must have been requeued");
+    assert_eq!(
+        out.report.alerts,
+        2 * out.report.restarts,
+        "each restart emits a stalled + recovered transition pair"
+    );
+    let alerts = std::fs::read_to_string(&alert_log).unwrap();
+    let lines: Vec<&str> = alerts.lines().collect();
+    assert_eq!(lines.len() as u64, out.report.alerts);
+    assert!(lines
+        .iter()
+        .all(|l| l.starts_with("ALERT ") && l.contains(&format!("scope=cluster/worker{busy}"))));
+
+    // Bit-identity holds across the restart: the respawned worker
+    // recomputes (or re-warms) exactly what its predecessor would have.
+    let reference = single_process_answers(&cfg, &trace);
+    for (resp, (id, edge_pixels, digest)) in out.responses.iter().zip(&reference) {
+        assert_eq!(resp.id, *id);
+        assert_eq!(resp.edge_pixels, *edge_pixels, "request {id} diverged across the restart");
+        assert_eq!(&resp.digest, digest, "request {id} digest diverged across the restart");
+    }
+    std::fs::remove_file(&alert_log).ok();
+}
+
+#[test]
+fn routing_is_stable_and_digest_affine() {
+    use_test_binary();
+    let cfg = cluster_cfg();
+    let trace = mixed_trace(6);
+    let opts = ClusterOptions::from_config(&cfg);
+    let out = run_cluster("itest-routing", &trace, &opts).unwrap();
+
+    // Every response came from the slot the ring predicts — routing is
+    // a pure function of content, reproducible outside the cluster.
+    let ring = RoutingRing::new(opts.workers);
+    for resp in &out.responses {
+        let req = &trace.requests[resp.id as usize];
+        assert_eq!(
+            resp.slot,
+            ring.route_request(req),
+            "request {} was served off its ring slot",
+            resp.id
+        );
+    }
+    // Kind-blind affinity: all three kinds about one content share a
+    // slot, so the re-threshold found the front its own worker warmed.
+    for chunk in out.responses.chunks(3) {
+        assert_eq!(chunk[0].slot, chunk[1].slot);
+        assert_eq!(chunk[1].slot, chunk[2].slot);
+    }
+    // The warm actually paid off somewhere: with 6 contents over 2
+    // workers, at least one per-worker cache section must show hits.
+    let cache_hits: f64 = out
+        .report
+        .per_worker
+        .iter()
+        .map(|w| match w.get("cache").and_then(|c| c.get("hits")) {
+            Some(Json::Num(n)) => *n,
+            _ => 0.0,
+        })
+        .sum();
+    assert!(cache_hits >= 1.0, "no worker cache hits — digest affinity is not paying off");
+}
+
+#[test]
+fn merged_report_has_the_documented_schema() {
+    use_test_binary();
+    let cfg = cluster_cfg();
+    let trace = mixed_trace(3);
+    let opts = ClusterOptions::from_config(&cfg);
+    let out = run_cluster("itest-schema", &trace, &opts).unwrap();
+
+    let parsed = Json::parse(&out.report.to_json_string()).unwrap();
+    for key in REQUIRED_CLUSTER_KEYS {
+        assert!(parsed.get(key).is_some(), "cluster report is missing `{key}`");
+    }
+    assert!(matches!(parsed.get("tier"), Some(Json::Str(t)) if t == "cluster"));
+    assert!(matches!(parsed.get("workers"), Some(Json::Num(n)) if *n == 2.0));
+    for sub in ["n", "p50", "p95", "p99", "max", "mean"] {
+        assert!(
+            parsed.get("latency_ns").and_then(|l| l.get(sub)).is_some(),
+            "latency_ns is missing `{sub}`"
+        );
+    }
+    let per_worker = match parsed.get("per_worker") {
+        Some(Json::Arr(a)) => a,
+        other => panic!("per_worker must be an array, got {other:?}"),
+    };
+    assert_eq!(per_worker.len(), 2);
+    let mut served_total = 0.0;
+    for (slot, body) in per_worker.iter().enumerate() {
+        for key in REQUIRED_WORKER_KEYS {
+            assert!(body.get(key).is_some(), "worker {slot} report is missing `{key}`");
+        }
+        assert!(matches!(body.get("worker"), Some(Json::Num(n)) if *n == slot as f64));
+        if let Some(Json::Num(n)) = body.get("served") {
+            served_total += *n;
+        }
+    }
+    assert_eq!(served_total, trace.len() as f64, "per-worker served counts must sum to the trace");
+}

@@ -50,6 +50,7 @@ pub const SCHEMA_PAIRS: &[(&str, &[&str])] = &[
     ("obs/mod.rs", &["obs/snapshot.rs"]),
     ("service/mod.rs", &["service/slo.rs", "service/calibrate.rs", "cache/stats.rs"]),
     ("stream/mod.rs", &["stream/report.rs"]),
+    ("cluster/mod.rs", &["cluster/proto.rs", "cluster/report.rs"]),
 ];
 
 /// One rule violation.
