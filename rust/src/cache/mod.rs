@@ -239,6 +239,26 @@ impl ArtifactCache {
             && self.negative.lock().expect("negative set lock poisoned").reason(key).is_some()
     }
 
+    /// Look up an artifact *and* name the outcome for a trace span:
+    /// `disabled`, `hit`, `miss`, or `negative` (a miss whose digest is
+    /// in the rejected-key memory, so recomputing it for a re-offer is
+    /// wasted work). Counts exactly what [`ArtifactCache::get`] counts —
+    /// the negative probe itself counts nothing — so traced and
+    /// untraced runs keep byte-identical cache statistics.
+    pub fn consult(&self, key: &ArtifactKey, tier: CacheTier) -> (Option<Artifact>, &'static str) {
+        if !self.enabled() {
+            return (None, "disabled");
+        }
+        let negative = self.was_rejected(key);
+        let art = self.get(key, tier);
+        let outcome = match (&art, negative) {
+            (Some(_), _) => "hit",
+            (None, true) => "negative",
+            (None, false) => "miss",
+        };
+        (art, outcome)
+    }
+
     /// Offer an artifact for residency. `recompute_ns` is the caller's
     /// estimate of what a future hit saves (calibrated kind cost for
     /// serving lanes, measured front wall for streams); the admission
@@ -372,6 +392,39 @@ mod tests {
         assert_eq!((stream.inserts, stream.lookups), (1, 0));
         assert_eq!(snap.entries, 1);
         assert_eq!(snap.bytes, (32 * 24 * 4) as u64);
+    }
+
+    #[test]
+    fn consult_names_outcomes_and_counts_like_get() {
+        let c = ArtifactCache::new(CacheConfig { budget_bytes: 1 << 20, ..Default::default() });
+        let (art, outcome) = c.consult(&key_n(1), CacheTier::Serve);
+        assert!(art.is_none());
+        assert_eq!(outcome, "miss");
+        assert!(c.offer(key_n(1), suppressed(64), 1_000_000, CacheTier::Serve));
+        let (art, outcome) = c.consult(&key_n(1), CacheTier::Serve);
+        assert!(art.is_some());
+        assert_eq!(outcome, "hit");
+        // A digest refused by the admission policy lands in the
+        // negative set; consulting it names the wasted-recompute case.
+        let picky = ArtifactCache::new(CacheConfig {
+            budget_bytes: 1 << 20,
+            shards: 2,
+            admit_min_ns_per_byte: 1e12,
+        });
+        assert!(!picky.offer(key_n(2), suppressed(64), 1, CacheTier::Serve));
+        let (art, outcome) = picky.consult(&key_n(2), CacheTier::Serve);
+        assert!(art.is_none());
+        assert_eq!(outcome, "negative");
+        // Counter parity with get: the negative probe adds nothing.
+        let snap = picky.snapshot();
+        assert_eq!(snap.lookups(), 1);
+        assert_eq!(snap.misses(), 1);
+        // Disabled tier: no outcome counting at all.
+        let off = ArtifactCache::disabled();
+        let (art, outcome) = off.consult(&key_n(3), CacheTier::Serve);
+        assert!(art.is_none());
+        assert_eq!(outcome, "disabled");
+        assert_eq!(off.snapshot().lookups(), 0);
     }
 
     #[test]

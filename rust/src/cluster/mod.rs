@@ -39,9 +39,13 @@
 //! {"frame": "hello", "worker": 0}
 //! {"frame": "request", "id": 7, "arrival_ns": 1250000, "width": 128,
 //!  "height": 96, "scene": "shapes:11", "kind": "re-threshold",
-//!  "lo": 0.03, "hi": 0.21}
+//!  "lo": 0.03, "hi": 0.21,
+//!  "trace": "9f8a3c001122334400000007", "parent": 3}
 //! {"frame": "response", "id": 7, "edge_pixels": 1834,
-//!  "digest": "9f8a3c00112233445566778899aabbcc"}
+//!  "digest": "9f8a3c00112233445566778899aabbcc", "t_ns": 2000000,
+//!  "spans": [{"...": "span objects, schema in obs/mod.rs"}]}
+//! {"frame": "telemetry", "worker": 0,
+//!  "line": {"...": "a snapshot line, schema in obs/mod.rs"}}
 //! {"frame": "ping", "t_ns": 41000000}
 //! {"frame": "pong", "t_ns": 41000000}
 //! {"frame": "report"}
@@ -50,7 +54,13 @@
 //! ```
 //!
 //! `digest` is the 128-bit artifact digest as a 32-hex-char string
-//! (JSON numbers are f64 and would round above 2^53).
+//! (JSON numbers are f64 and would round above 2^53). `trace`/`parent`
+//! (request) and `t_ns`/`spans` (response) carry the distributed-trace
+//! context when `--trace-log` is active: the worker's service subtree
+//! stitches under the front door's wire span for that request.
+//! `telemetry` frames stream each worker's periodic snapshot lines to
+//! the front door, which merges them into the cluster-wide telemetry
+//! stream (schema in `obs/mod.rs`).
 //!
 //! ## Merged cluster report (`cannyd cluster` stdout)
 //!

@@ -18,6 +18,7 @@ use std::io::{Read, Write};
 use crate::cache::ArtifactKey;
 use crate::error::{Error, Result};
 use crate::image::synth::Scene;
+use crate::obs::trace::Span;
 use crate::service::{Request, RequestKind};
 use crate::util::json::Json;
 use std::collections::BTreeMap;
@@ -93,7 +94,10 @@ pub fn parse_hello(frame: &Json) -> Result<usize> {
 }
 
 /// `request` — one serve request, content shipped as a scene spec.
-pub fn request_frame(req: &Request) -> Json {
+/// `trace` is the front door's trace context when tracing is enabled:
+/// the request's trace id plus the parent span id the worker's
+/// service subtree stitches under.
+pub fn request_frame(req: &Request, trace: Option<(&str, u64)>) -> Json {
     let mut m = BTreeMap::new();
     m.insert("frame".into(), Json::Str("request".into()));
     m.insert("id".into(), Json::Num(req.id as f64));
@@ -106,7 +110,19 @@ pub fn request_frame(req: &Request) -> Json {
         m.insert("lo".into(), Json::Num(lo as f64));
         m.insert("hi".into(), Json::Num(hi as f64));
     }
+    if let Some((id, parent)) = trace {
+        m.insert("trace".into(), Json::Str(id.into()));
+        m.insert("parent".into(), Json::Num(parent as f64));
+    }
     Json::Obj(m)
+}
+
+/// A `request` frame's trace context — `(trace id, parent span id)` —
+/// if the front door attached one.
+pub fn parse_trace(frame: &Json) -> Option<(String, u64)> {
+    let id = frame.get("trace")?.as_str()?.to_string();
+    let parent = frame.get("parent")?.as_f64()? as u64;
+    Some((id, parent))
 }
 
 /// Decode a `request` frame back into a [`Request`].
@@ -138,13 +154,17 @@ pub fn parse_request(frame: &Json) -> Result<Request> {
     })
 }
 
-/// `response` — the worker's answer to one request.
-pub fn response_frame(id: u64, edge_pixels: u64, digest: &str) -> Json {
+/// `response` — the worker's answer to one request: edge count and
+/// artifact digest, the worker-clock completion time, and (when the
+/// request carried trace context) the worker's span subtree.
+pub fn response_frame(id: u64, edge_pixels: u64, digest: &str, t_ns: u64, spans: &[Span]) -> Json {
     let mut m = BTreeMap::new();
     m.insert("frame".into(), Json::Str("response".into()));
     m.insert("id".into(), Json::Num(id as f64));
     m.insert("edge_pixels".into(), Json::Num(edge_pixels as f64));
     m.insert("digest".into(), Json::Str(digest.into()));
+    m.insert("t_ns".into(), Json::Num(t_ns as f64));
+    m.insert("spans".into(), Json::Arr(spans.iter().map(Span::to_json).collect()));
     Json::Obj(m)
 }
 
@@ -155,6 +175,12 @@ pub struct WireResponse {
     pub edge_pixels: u64,
     /// 32-hex-char artifact digest (see [`digest_string`]).
     pub digest: String,
+    /// Completion time in the worker's clock domain (modeled ns under
+    /// the virtual clock) — the end of the worker's service span.
+    pub t_ns: u64,
+    /// The worker's span subtree for this request (empty when the
+    /// request carried no trace context).
+    pub spans: Vec<Span>,
 }
 
 pub fn parse_response(frame: &Json) -> Result<WireResponse> {
@@ -170,7 +196,36 @@ pub fn parse_response(frame: &Json) -> Result<WireResponse> {
             .and_then(Json::as_str)
             .ok_or_else(|| bad("digest"))?
             .to_string(),
+        t_ns: frame.get("t_ns").and_then(Json::as_f64).ok_or_else(|| bad("t_ns"))? as u64,
+        spans: frame
+            .get("spans")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| bad("spans"))?
+            .iter()
+            .map(Span::from_json)
+            .collect::<Option<Vec<_>>>()
+            .ok_or_else(|| bad("spans"))?,
     })
+}
+
+/// `telemetry` — a worker streams its current snapshot line to the
+/// front door (periodically, and once just before its final report),
+/// where lines merge into the cluster-wide telemetry stream
+/// ([`crate::obs::merge`]).
+pub fn telemetry_frame(worker: usize, line: Json) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("frame".into(), Json::Str("telemetry".into()));
+    m.insert("worker".into(), Json::Num(worker as f64));
+    m.insert("line".into(), line);
+    Json::Obj(m)
+}
+
+/// Decode a `telemetry` frame into `(slot, snapshot line)`.
+pub fn parse_telemetry(frame: &Json) -> Result<(usize, Json)> {
+    let bad = |what: &str| Error::Config(format!("telemetry frame is missing `{what}`"));
+    let worker = frame.get("worker").and_then(Json::as_usize).ok_or_else(|| bad("worker"))?;
+    let line = frame.get("line").cloned().ok_or_else(|| bad("line"))?;
+    Ok((worker, line))
 }
 
 /// `ping` / `pong` — supervisor liveness probes between requests.
@@ -240,7 +295,7 @@ mod tests {
             pong_frame(42),
             report_frame(),
             shutdown_frame(),
-            response_frame(7, 1234, "00ff"),
+            response_frame(7, 1234, "00ff", 0, &[]),
         ] {
             assert_eq!(round_trip(&f), f);
         }
@@ -275,7 +330,7 @@ mod tests {
                 height: 96,
                 kind,
             };
-            let back = parse_request(&round_trip(&request_frame(&req))).unwrap();
+            let back = parse_request(&round_trip(&request_frame(&req, None))).unwrap();
             assert_eq!(back.id, req.id);
             assert_eq!(back.arrival_ns, req.arrival_ns);
             assert_eq!(back.scene, req.scene);
@@ -293,12 +348,48 @@ mod tests {
 
     #[test]
     fn response_frames_round_trip() {
+        use crate::obs::trace::{TraceId, SPAN_SERVICE, SPAN_WIRE};
         let key = ArtifactKey { hi: 0xdead_beef_0102_0304, lo: 0x0a0b_0c0d_0e0f_1011 };
         let digest = digest_string(&key);
         assert_eq!(digest.len(), 32);
-        let f = response_frame(41, 512, &digest);
+        let trace = TraceId::derive(5, 2);
+        let span = Span::new(&trace, SPAN_SERVICE, Some(SPAN_WIRE), "service", "exec", 1, 10, 90)
+            .attr("outcome", "hit");
+        let f = response_frame(41, 512, &digest, 2_000_000, &[span.clone()]);
         let r = parse_response(&round_trip(&f)).unwrap();
-        assert_eq!(r, WireResponse { id: 41, edge_pixels: 512, digest });
+        let expect =
+            WireResponse { id: 41, edge_pixels: 512, digest, t_ns: 2_000_000, spans: vec![span] };
+        assert_eq!(r, expect);
+    }
+
+    #[test]
+    fn trace_context_rides_the_request_frame() {
+        let req = Request {
+            id: 3,
+            arrival_ns: 50_000,
+            scene: Scene::Shapes { seed: 1 },
+            width: 64,
+            height: 48,
+            kind: RequestKind::Full,
+        };
+        assert_eq!(parse_trace(&request_frame(&req, None)), None);
+        let f = round_trip(&request_frame(&req, Some(("00ab00ab00ab00ab00000003", 3))));
+        assert_eq!(parse_trace(&f), Some(("00ab00ab00ab00ab00000003".to_string(), 3)));
+        // The trace keys do not disturb request decoding.
+        assert_eq!(parse_request(&f).unwrap().id, 3);
+    }
+
+    #[test]
+    fn telemetry_frames_round_trip() {
+        let mut line = BTreeMap::new();
+        line.insert("seq".to_string(), Json::Num(4.0));
+        line.insert("tier".to_string(), Json::Str("worker".into()));
+        let f = telemetry_frame(1, Json::Obj(line.clone()));
+        assert_eq!(frame_kind(&f), Some("telemetry"));
+        let (slot, got) = parse_telemetry(&round_trip(&f)).unwrap();
+        assert_eq!(slot, 1);
+        assert_eq!(got, Json::Obj(line));
+        assert!(parse_telemetry(&hello_frame(0)).is_err());
     }
 
     #[test]

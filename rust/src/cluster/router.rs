@@ -24,20 +24,25 @@
 
 use std::collections::BTreeMap;
 use std::io::Read;
+use std::path::Path;
 use std::process::Child;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::cache::KeyHasher;
 use crate::cluster::proto::{
-    parse_response, parse_worker_report, report_frame, request_frame, shutdown_frame,
-    write_frame, MAX_FRAME_BYTES,
+    frame_kind, parse_response, parse_telemetry, parse_worker_report, report_frame,
+    request_frame, shutdown_frame, write_frame, MAX_FRAME_BYTES,
 };
 use crate::cluster::report::ClusterReport;
 use crate::cluster::supervisor::{Supervisor, WorkerFault, WorkerLink};
 use crate::config::RunConfig;
 use crate::error::{Error, Result};
-use crate::obs::HealthTracker;
-use crate::service::clock::WallClock;
+use crate::obs::trace::SPAN_WIRE;
+use crate::obs::{
+    cluster_front_spans, content_digest, merged_line, HealthTracker, ObsEndpoint, TraceCollector,
+    TraceId,
+};
+use crate::service::clock::{ClockMode, WallClock};
 use crate::service::{Request, Trace};
 use crate::util::json::Json;
 
@@ -177,6 +182,63 @@ struct SlotOutcome {
     /// report/shutdown exchange).
     finished_ns: u64,
     body: Json,
+    /// Every `telemetry` frame this slot's workers streamed, arrival
+    /// order — merged into the cluster-wide stream after the joins.
+    telemetry: Vec<(usize, Json)>,
+}
+
+/// The front door's live telemetry state, shared by every slot thread:
+/// the latest snapshot line per worker plus the `--obs-port` endpoint
+/// the merged cluster view is published to as frames arrive.
+#[derive(Debug)]
+struct TelemetryHub {
+    endpoint: Option<Arc<ObsEndpoint>>,
+    /// Latest line per worker slot and a running merge counter — the
+    /// live view's `seq` (the deterministic file gets its own).
+    latest: Mutex<(BTreeMap<usize, Json>, u64)>,
+}
+
+impl TelemetryHub {
+    fn note(&self, worker: usize, line: &Json) {
+        let Some(endpoint) = &self.endpoint else { return };
+        let mut guard = self.latest.lock().expect("telemetry hub poisoned");
+        guard.0.insert(worker, line.clone());
+        guard.1 += 1;
+        let merged = merged_line(&guard.0, guard.1);
+        drop(guard);
+        endpoint.publish(&merged.dump());
+    }
+}
+
+/// Shared observability handles for the slot threads: the optional
+/// trace collector, the live telemetry hub, and whether span times are
+/// modeled (virtual clock, byte-identical replays) or measured.
+#[derive(Debug)]
+struct ObsHandles {
+    trace: Option<Arc<TraceCollector>>,
+    hub: TelemetryHub,
+    virtual_clock: bool,
+}
+
+/// Read frames until a non-`telemetry` one arrives, folding telemetry
+/// frames into the slot's collected stream and the live hub along the
+/// way (workers interleave snapshot lines with responses on the same
+/// connection). `Ok(None)` means the worker died.
+fn read_data_frame(
+    stream: &mut std::net::TcpStream,
+    child: &mut Child,
+    telemetry: &mut Vec<(usize, Json)>,
+    obs: &ObsHandles,
+) -> Result<Option<Json>> {
+    loop {
+        let Some(frame) = read_or_died(stream, child)? else { return Ok(None) };
+        if frame_kind(&frame) != Some("telemetry") {
+            return Ok(Some(frame));
+        }
+        let (worker, line) = parse_telemetry(&frame)?;
+        obs.hub.note(worker, &line);
+        telemetry.push((worker, line));
+    }
 }
 
 /// Read one frame, tolerating heartbeat-interval timeouts: partial
@@ -240,14 +302,21 @@ fn drive_slot(
     queue: Vec<Request>,
     sup: Arc<Supervisor>,
     clock: WallClock,
+    obs: Arc<ObsHandles>,
 ) -> Result<SlotOutcome> {
     let slot = link.slot;
     link.stream.set_read_timeout(Some(sup.heartbeat()))?;
     let mut records = Vec::with_capacity(queue.len());
     let mut latencies = Vec::with_capacity(queue.len());
+    let mut telemetry: Vec<(usize, Json)> = Vec::new();
     let mut requeued = 0u64;
     for req in &queue {
         let mut attempts = 0u64;
+        // The trace id derives from content + request id, so a
+        // requeued request keeps its identity across incarnations.
+        let trace_id =
+            TraceId::derive(content_digest(&req.scene.spec(), req.width, req.height), req.id);
+        let ctx = obs.trace.as_ref().map(|_| (trace_id.as_str(), SPAN_WIRE));
         loop {
             attempts += 1;
             if attempts > MAX_ATTEMPTS {
@@ -257,28 +326,43 @@ fn drive_slot(
                 )));
             }
             let sent_ns = clock.now_ns();
-            let died = match write_frame(&mut link.stream, &request_frame(req)) {
+            let died = match write_frame(&mut link.stream, &request_frame(req, ctx)) {
                 Err(_) => true,
-                Ok(()) => match read_or_died(&mut link.stream, &mut link.child)? {
-                    None => true,
-                    Some(frame) => {
-                        let resp = parse_response(&frame)?;
-                        if resp.id != req.id {
-                            return Err(Error::Config(format!(
-                                "slot {slot}: got response {} while waiting on request {}",
-                                resp.id, req.id
-                            )));
+                Ok(()) => {
+                    match read_data_frame(&mut link.stream, &mut link.child, &mut telemetry, &obs)?
+                    {
+                        None => true,
+                        Some(frame) => {
+                            let resp = parse_response(&frame)?;
+                            if resp.id != req.id {
+                                return Err(Error::Config(format!(
+                                    "slot {slot}: got response {} while waiting on request {}",
+                                    resp.id, req.id
+                                )));
+                            }
+                            latencies.push(clock.now_ns().saturating_sub(sent_ns));
+                            if let Some(trace) = &obs.trace {
+                                // Virtual spans live on the modeled
+                                // timeline both ends share; wall spans
+                                // are measured here.
+                                let (t0, t1) = if obs.virtual_clock {
+                                    (req.arrival_ns, resp.t_ns)
+                                } else {
+                                    (sent_ns, clock.now_ns())
+                                };
+                                trace.record_all(cluster_front_spans(&trace_id, slot, t0, t1));
+                                trace.record_all(resp.spans);
+                            }
+                            records.push(ResponseRecord {
+                                id: resp.id,
+                                slot,
+                                edge_pixels: resp.edge_pixels,
+                                digest: resp.digest,
+                            });
+                            false
                         }
-                        latencies.push(clock.now_ns().saturating_sub(sent_ns));
-                        records.push(ResponseRecord {
-                            id: resp.id,
-                            slot,
-                            edge_pixels: resp.edge_pixels,
-                            digest: resp.digest,
-                        });
-                        false
                     }
-                },
+                }
             };
             if !died {
                 break;
@@ -290,12 +374,18 @@ fn drive_slot(
     }
     let finished_ns = clock.now_ns();
     write_frame(&mut link.stream, &report_frame())?;
-    let frame = read_or_died(&mut link.stream, &mut link.child)?
+    let frame = read_data_frame(&mut link.stream, &mut link.child, &mut telemetry, &obs)?
         .ok_or_else(|| Error::Config(format!("worker {slot} died before reporting")))?;
     let body = parse_worker_report(&frame)?;
     write_frame(&mut link.stream, &shutdown_frame())?;
     let _ = link.child.wait();
-    Ok(SlotOutcome { slot, records, latencies, requeued, finished_ns, body })
+    Ok(SlotOutcome { slot, records, latencies, requeued, finished_ns, body, telemetry })
+}
+
+/// A numeric field off a snapshot line, for the deterministic sort of
+/// the merged telemetry stream.
+fn line_u64(line: &Json, key: &str) -> u64 {
+    line.get(key).and_then(Json::as_f64).unwrap_or(0.0) as u64
 }
 
 /// Spawn the fleet, route and dispatch the whole trace, merge the
@@ -303,6 +393,17 @@ fn drive_slot(
 pub fn run_cluster(label: &str, trace: &Trace, opts: &ClusterOptions) -> Result<ClusterOutcome> {
     let workers = opts.workers.max(1);
     let tracker = HealthTracker::from_spec(&opts.alert_log)?;
+    let endpoint = crate::obs::endpoint::from_config_port(opts.cfg.obs_port)?;
+    if let Some(e) = &endpoint {
+        // Prime the live window with an empty merged line so an early
+        // probe sees the cluster schema, not a worker's raw line.
+        e.publish(&merged_line(&BTreeMap::new(), 0).dump());
+    }
+    let obs = Arc::new(ObsHandles {
+        trace: TraceCollector::from_spec(&opts.cfg.trace_log),
+        hub: TelemetryHub { endpoint, latest: Mutex::new((BTreeMap::new(), 0)) },
+        virtual_clock: opts.cfg.clock == ClockMode::Virtual,
+    });
     let (sup, links) = Supervisor::start(
         workers,
         opts.port,
@@ -322,7 +423,8 @@ pub fn run_cluster(label: &str, trace: &Trace, opts: &ClusterOptions) -> Result<
     for link in links {
         let queue = std::mem::take(&mut queues[link.slot]);
         let sup = Arc::clone(&sup);
-        handles.push(std::thread::spawn(move || drive_slot(link, queue, sup, clock)));
+        let obs = Arc::clone(&obs);
+        handles.push(std::thread::spawn(move || drive_slot(link, queue, sup, clock, obs)));
     }
     let mut outcomes: Vec<SlotOutcome> = Vec::with_capacity(handles.len());
     for h in handles {
@@ -331,6 +433,31 @@ pub fn run_cluster(label: &str, trace: &Trace, opts: &ClusterOptions) -> Result<
         outcomes.push(outcome);
     }
     outcomes.sort_by_key(|o| o.slot);
+
+    // Merged cluster telemetry: replay every worker frame in one
+    // deterministic order — worker clock, then slot, then per-worker
+    // seq (each worker's frames arrive in seq order, so ties on a
+    // modeled clock cannot reorder within a worker). Under the virtual
+    // clock two runs of the same trace produce a byte-identical file.
+    if !opts.cfg.telemetry_log.is_empty() {
+        let mut frames: Vec<&(usize, Json)> =
+            outcomes.iter().flat_map(|o| o.telemetry.iter()).collect();
+        frames.sort_by_key(|(slot, line)| (line_u64(line, "t_ns"), *slot, line_u64(line, "seq")));
+        let mut latest: BTreeMap<usize, Json> = BTreeMap::new();
+        let mut out = String::new();
+        for (seq, (slot, line)) in frames.iter().enumerate() {
+            latest.insert(*slot, line.clone());
+            out.push_str(&merged_line(&latest, seq as u64 + 1).dump());
+            out.push('\n');
+        }
+        std::fs::write(Path::new(&opts.cfg.telemetry_log), out)?;
+    }
+    if let Some(trace_log) = &obs.trace {
+        trace_log.write()?;
+    }
+    if let Some(e) = &obs.hub.endpoint {
+        e.stop();
+    }
 
     let mut responses: Vec<ResponseRecord> =
         outcomes.iter().flat_map(|o| o.records.iter().cloned()).collect();

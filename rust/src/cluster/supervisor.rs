@@ -41,8 +41,13 @@ use crate::service::clock::WallClock;
 pub const WORKER_EXE_ENV: &str = "CANNYD_CLUSTER_EXE";
 
 /// Config keys the supervisor re-sends on each worker's command line:
-/// detector parameters (output bits) and cache geometry (shard
-/// behavior). Everything else stays at the worker's defaults.
+/// detector parameters (output bits), cache geometry (shard behavior),
+/// and the observability knobs workers must agree with the front door
+/// on — the clock mode (so worker span times live in the same domain
+/// the front door merges) and the telemetry-frame cadence. Everything
+/// else stays at the worker's defaults; in particular `trace-log` and
+/// `telemetry-log` are *not* forwarded — spans and snapshot lines ship
+/// home over the wire, and only the front door writes files.
 pub const FORWARDED_KEYS: &[&str] = &[
     "engine",
     "lo",
@@ -54,6 +59,8 @@ pub const FORWARDED_KEYS: &[&str] = &[
     "cache-shards",
     "cache-admit-ns-per-byte",
     "max-pixels",
+    "clock",
+    "worker-telemetry-ms",
 ];
 
 /// How long a spawned worker gets to connect and say `hello` before

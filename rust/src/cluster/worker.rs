@@ -1,8 +1,10 @@
 //! The worker-process side of the cluster tier: one `cannyd worker`
 //! process per supervisor slot, each owning a full single-process
 //! serving stack — a [`Detector`], a private [`ArtifactCache`] shard of
-//! the cluster-wide cache picture, and a [`Telemetry`] registry whose
-//! final snapshot line ships home inside the worker's report.
+//! the cluster-wide cache picture, and a [`Telemetry`] registry
+//! rendered through a **persistent** [`SnapshotEngine`], so the
+//! snapshot lines this worker streams home carry a real monotonic
+//! `seq`/`t_ns`, not a fresh engine's zeros.
 //!
 //! The loop is deliberately dumb: connect to the front door, announce
 //! the slot with a `hello`, then serve one frame at a time. Requests
@@ -14,6 +16,22 @@
 //! engine produces bit-identical artifacts, so a worker's answer for a
 //! request is byte-equal to what `cannyd serve` would have produced.
 //!
+//! Two observability streams ride the same connection:
+//!
+//! * **Spans.** When a request frame carries trace context
+//!   (`trace`/`parent`), the worker builds its service subtree with
+//!   [`service_spans`] and ships it back inside the response — the
+//!   front door stitches it under its wire span. Under the virtual
+//!   clock the worker keeps a modeled logical clock (`vclock`): each
+//!   request completes at `max(vclock, arrival) + service_ns`, the
+//!   same cost model [`ServeOptions::service_ns_kind`] gives the
+//!   in-process tier, so replays are byte-identical.
+//! * **Telemetry frames.** The worker sends one snapshot line after
+//!   `hello` (seq 0), another whenever `--worker-telemetry-ms` of its
+//!   own clock has elapsed (at most one per request), and a final one
+//!   on `report` — so the merged cluster stream always ends on this
+//!   worker's drained state with a nonzero `seq`.
+//!
 //! Fault injection for the restart tests rides an environment variable
 //! ([`WORKER_FAULT_ENV`]): when set, the worker calls
 //! `std::process::exit(3)` *before* executing the fatal request, so the
@@ -24,19 +42,21 @@ use std::collections::BTreeMap;
 use std::net::TcpStream;
 
 use crate::cache::{ArtifactCache, ArtifactKey, CacheConfig, CacheTier};
-use crate::canny::{Artifact, CannyParams, StageKind};
+use crate::canny::{Artifact, CannyParams, StageKind, StageRecord};
 use crate::cluster::proto::{
-    digest_string, frame_kind, hello_frame, parse_request, pong_frame, read_frame,
-    response_frame, worker_report_frame, write_frame,
+    digest_string, frame_kind, hello_frame, parse_request, parse_trace, pong_frame, read_frame,
+    response_frame, telemetry_frame, worker_report_frame, write_frame,
 };
 use crate::cluster::report::WorkerReport;
 use crate::config::RunConfig;
 use crate::coordinator::Detector;
 use crate::error::{Error, Result};
 use crate::image::synth::generate;
-use crate::obs::{SnapshotEngine, Telemetry, TickInputs};
-use crate::service::clock::WallClock;
-use crate::service::{Request, RequestKind};
+use crate::obs::{
+    modeled_stage_durs, service_spans, SnapshotEngine, Span, Telemetry, TickInputs, TraceId,
+};
+use crate::service::clock::{ClockMode, WallClock};
+use crate::service::{Request, RequestKind, ServeOptions};
 use crate::util::json::Json;
 
 /// Environment variable for the kill/restart tests: `<n>` makes the
@@ -47,7 +67,7 @@ use crate::util::json::Json;
 pub const WORKER_FAULT_ENV: &str = "CANNYD_WORKER_EXIT_AFTER";
 
 /// One executed request's answer, before it is framed for the wire.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct WorkerAnswer {
     /// Edge pixels in the output (0 for `front-only`, which produces
     /// no edges — it warms the cache).
@@ -56,6 +76,13 @@ pub struct WorkerAnswer {
     /// `full`/`re-threshold`, the suppressed-magnitude key for
     /// `front-only`.
     pub digest: ArtifactKey,
+    /// Completion time on the worker's clock: the modeled logical
+    /// clock under `--clock virtual` (deterministic), measured
+    /// monotonic ns under `--clock wall`.
+    pub t_ns: u64,
+    /// The request's service subtree ([`service_spans`]) when the
+    /// request frame carried trace context; empty otherwise.
+    pub spans: Vec<Span>,
 }
 
 /// The per-process serving engine: detector + cache + telemetry plus
@@ -68,20 +95,52 @@ pub struct WorkerCore {
     cache: ArtifactCache,
     telemetry: Telemetry,
     clock: WallClock,
+    opts: ServeOptions,
+    snap: SnapshotEngine,
+    worker: usize,
+    virtual_clock: bool,
+    vclock: u64,
     served: u64,
     edge_pixels: u64,
     kinds: BTreeMap<String, u64>,
 }
 
+/// Fold freshly executed stage `records` into the worker's telemetry
+/// and the request's stage-span skeleton. Measured walls are kept only
+/// under the wall clock; virtual workers publish run counts with zero
+/// walls and model span durations at completion time, keeping replays
+/// byte-identical.
+fn note_stages(
+    tel: &Telemetry,
+    stages: &mut Vec<(String, u64)>,
+    records: &[StageRecord],
+    measured: bool,
+) {
+    for r in records {
+        let (wall, cpu) = if measured { (r.wall_ns, r.cpu_ns) } else { (0, 0) };
+        tel.note_stage(r.span_name(), wall, cpu);
+        stages.push((r.span_name().to_string(), wall));
+    }
+}
+
 impl WorkerCore {
     /// Build from the forwarded [`RunConfig`] (the supervisor re-sends
-    /// the detector/cache flags on the worker command line).
-    pub fn from_config(cfg: &RunConfig) -> Result<WorkerCore> {
+    /// the detector/cache/clock flags on the worker command line).
+    /// `worker` is the supervisor slot — the report identity and the
+    /// Chrome-trace lane (`tid = worker + 1`) its spans render on.
+    pub fn from_config(cfg: &RunConfig, worker: usize) -> Result<WorkerCore> {
+        let opts = ServeOptions::from_config(cfg);
+        let interval_ns = (cfg.worker_telemetry_ms.max(0.001) * 1e6) as u64;
         Ok(WorkerCore {
             det: Detector::from_config(cfg)?,
             cache: ArtifactCache::new(CacheConfig::from_config(cfg)),
-            telemetry: Telemetry::new("serve", 1),
+            telemetry: Telemetry::new("worker", 1),
             clock: WallClock::start(),
+            snap: SnapshotEngine::from_options(None, interval_ns, opts.overload_policy.name())?,
+            worker,
+            virtual_clock: opts.clock == ClockMode::Virtual,
+            opts,
+            vclock: 0,
             served: 0,
             edge_pixels: 0,
             kinds: BTreeMap::new(),
@@ -93,32 +152,52 @@ impl WorkerCore {
         self.served
     }
 
+    /// The worker's current clock reading: the modeled completion
+    /// cursor under the virtual clock, measured monotonic ns otherwise.
+    pub fn now_ns(&self) -> u64 {
+        if self.virtual_clock {
+            self.vclock
+        } else {
+            self.clock.now_ns()
+        }
+    }
+
     /// Execute one request: regenerate the scene, run the kind's
     /// pipeline span (consulting/warming the private artifact cache for
-    /// partial kinds), and fold the totals into telemetry.
-    pub fn execute(&mut self, req: &Request) -> Result<WorkerAnswer> {
-        let t0 = self.clock.now_ns();
+    /// partial kinds), and fold the totals into telemetry. With trace
+    /// context `(trace_id, parent_span_id)` from the request frame, the
+    /// answer carries the service subtree to stitch under the front
+    /// door's wire span.
+    pub fn execute(&mut self, req: &Request, trace: Option<(&str, u64)>) -> Result<WorkerAnswer> {
+        let measured = !self.virtual_clock;
+        let t0 = if self.virtual_clock {
+            self.vclock.max(req.arrival_ns)
+        } else {
+            self.clock.now_ns()
+        };
         self.telemetry.offered.inc();
         self.telemetry.admitted.inc();
         self.telemetry.lane(0).inflight.add(1);
         self.telemetry.lane(0).batches.inc();
         let img = generate(req.scene, req.width, req.height);
-        let answer = match req.kind {
+        let mut stages: Vec<(String, u64)> = Vec::new();
+        let mut consult: Option<&'static str> = None;
+        let (edge_pixels, digest) = match req.kind {
             RequestKind::Full => {
                 let out = self.det.detect_full(&img, self.det.params())?;
-                WorkerAnswer {
-                    edge_pixels: out.edges.count_edges() as u64,
-                    digest: ArtifactKey::edges(&out.edges),
-                }
+                note_stages(&self.telemetry, &mut stages, &out.records, measured);
+                (out.edges.count_edges() as u64, ArtifactKey::edges(&out.edges))
             }
             RequestKind::FrontOnly => {
                 let key = ArtifactKey::suppressed(&img);
                 let plan = self.det.plan().stop_after(StageKind::Nms);
                 let mut out = self.det.run_plan(&plan, Some(&img), self.det.params())?;
+                note_stages(&self.telemetry, &mut stages, &out.records, measured);
+                consult = Some(if self.cache.enabled() { "offer" } else { "disabled" });
                 if let Some(nm) = out.take_suppressed() {
                     self.cache.offer(key, Artifact::Suppressed(nm), out.total_ns, CacheTier::Serve);
                 }
-                WorkerAnswer { edge_pixels: 0, digest: key }
+                (0, key)
             }
             RequestKind::ReThreshold { lo, hi } => {
                 let params = CannyParams { lo, hi, ..*self.det.params() };
@@ -127,12 +206,15 @@ impl WorkerCore {
                 // pins a scene's re-thresholds to this worker, so the
                 // front computed once (here or by a front-only warm) is
                 // reused across the whole threshold sweep.
-                let nm = match self.cache.get(&key, CacheTier::Serve) {
+                let (art, outcome) = self.cache.consult(&key, CacheTier::Serve);
+                consult = Some(outcome);
+                let nm = match art {
                     Some(Artifact::Suppressed(nm)) => nm,
                     _ => {
                         let plan = self.det.plan().stop_after(StageKind::Nms);
                         let mut out =
                             self.det.run_plan(&plan, Some(&img), self.det.params())?;
+                        note_stages(&self.telemetry, &mut stages, &out.records, measured);
                         let nm = out.take_suppressed().ok_or_else(|| {
                             Error::Config("front plan produced no suppressed artifact".into())
                         })?;
@@ -147,37 +229,72 @@ impl WorkerCore {
                 };
                 let plan = self.det.plan().from_suppressed(nm);
                 let out = self.det.run_plan(&plan, None, &params)?;
+                note_stages(&self.telemetry, &mut stages, &out.records, measured);
                 let edges = out.edges().ok_or_else(|| {
                     Error::Config("re-threshold plan produced no edge map".into())
                 })?;
-                WorkerAnswer {
-                    edge_pixels: edges.count_edges() as u64,
-                    digest: ArtifactKey::edges(edges),
-                }
+                (edges.count_edges() as u64, ArtifactKey::edges(edges))
             }
         };
-        let now = self.clock.now_ns();
+        let t_ns = if self.virtual_clock {
+            let end = t0 + self.opts.service_ns_kind(req.kind, req.pixels());
+            self.vclock = end;
+            end
+        } else {
+            self.clock.now_ns()
+        };
+        // Virtual latency is modeled end-to-end (arrival → completion);
+        // wall workers measure service time only — request arrival
+        // offsets live on the front door's clock, not ours.
+        let latency =
+            if self.virtual_clock { t_ns.saturating_sub(req.arrival_ns) } else { t_ns - t0 };
         self.telemetry.completed.inc();
-        self.telemetry.latency.record(now.saturating_sub(t0));
+        self.telemetry.latency.record(latency);
         self.telemetry.lane(0).completed.inc();
-        self.telemetry.lane(0).busy_ns.add(now.saturating_sub(t0));
-        self.telemetry.lane(0).heartbeat_ns.set(now);
+        self.telemetry.lane(0).busy_ns.add(t_ns.saturating_sub(t0));
+        self.telemetry.lane(0).heartbeat_ns.raise(t_ns);
         self.telemetry.lane(0).inflight.sub(1);
         self.served += 1;
-        self.edge_pixels += answer.edge_pixels;
+        self.edge_pixels += edge_pixels;
         *self.kinds.entry(req.kind.name().to_string()).or_insert(0) += 1;
-        Ok(answer)
+        let spans = match trace {
+            None => Vec::new(),
+            Some((id, parent)) => {
+                let cache = consult.map(|o| (o, self.opts.cache_lookup_ns(req.pixels())));
+                let stage_spans: Vec<(String, u64)> = if measured {
+                    stages
+                } else {
+                    let span = t_ns
+                        .saturating_sub(t0)
+                        .saturating_sub(cache.map_or(0, |(_, d)| d));
+                    let durs = modeled_stage_durs(span, stages.len());
+                    stages.into_iter().map(|(n, _)| n).zip(durs).collect()
+                };
+                service_spans(
+                    &TraceId::from_wire(id),
+                    self.worker as u64 + 1,
+                    parent,
+                    t0,
+                    t_ns,
+                    cache,
+                    &stage_spans,
+                )
+            }
+        };
+        Ok(WorkerAnswer { edge_pixels, digest, t_ns, spans })
     }
 
-    /// The end-of-run report body, with the worker's final telemetry
-    /// snapshot line rendered through the same
-    /// [`SnapshotEngine`] line builder the in-process tiers log from —
-    /// the snapshot stream crossing the process boundary.
-    pub fn report(&mut self, worker: usize) -> WorkerReport {
+    /// Render the worker's current snapshot line through the
+    /// persistent [`SnapshotEngine`] — the body of `telemetry` frames
+    /// and of the report's `telemetry` section. Every call advances the
+    /// engine's dense `seq`, so the merged cluster stream sees a
+    /// meaningful per-worker sequence, not a fresh engine's zero.
+    pub fn snapshot_line(&mut self) -> Json {
+        let t_ns = self.now_ns();
         let mut slo = BTreeMap::new();
         slo.insert("status".to_string(), Json::Str("none".into()));
         let inputs = TickInputs {
-            t_ns: self.clock.now_ns(),
+            t_ns,
             telemetry: &self.telemetry,
             cache: self.cache.snapshot(),
             slo: Json::Obj(slo),
@@ -185,14 +302,21 @@ impl WorkerCore {
             shedding_possible: false,
             utilization: None,
         };
-        let telemetry = SnapshotEngine::disabled().render_line(&inputs);
+        self.snap.render_line(&inputs)
+    }
+
+    /// The end-of-run report body, with the worker's final telemetry
+    /// snapshot line rendered through the same persistent
+    /// [`SnapshotEngine`] every `telemetry` frame used — the snapshot
+    /// stream crosses the process boundary with a continuous `seq`.
+    pub fn report(&mut self) -> WorkerReport {
         WorkerReport {
-            worker,
+            worker: self.worker,
             served: self.served,
             edge_pixels: self.edge_pixels,
             kinds: self.kinds.clone(),
             cache: self.cache.snapshot(),
-            telemetry,
+            telemetry: self.snapshot_line(),
         }
     }
 }
@@ -205,9 +329,17 @@ pub fn run_worker(cfg: &RunConfig, worker: usize, port: u16) -> Result<()> {
     let mut stream = TcpStream::connect(("127.0.0.1", port))?;
     stream.set_nodelay(true).ok();
     write_frame(&mut stream, &hello_frame(worker))?;
-    let mut core = WorkerCore::from_config(cfg)?;
+    let mut core = WorkerCore::from_config(cfg, worker)?;
     let fault: Option<u64> =
         std::env::var(WORKER_FAULT_ENV).ok().and_then(|v| v.parse().ok());
+    // Snapshot cadence on the worker's own clock — modeled (and so
+    // deterministic) under virtual, measured under wall. Bounded to at
+    // most one frame per request: the loop only wakes on frames.
+    let interval_ns = (cfg.worker_telemetry_ms.max(0.001) * 1e6) as u64;
+    let mut next_tel = interval_ns;
+    // Announce-alive line (seq 0): the front door's merged stream shows
+    // this incarnation before its first request lands.
+    write_frame(&mut stream, &telemetry_frame(worker, core.snapshot_line()))?;
     loop {
         let frame = read_frame(&mut stream)?;
         match frame_kind(&frame) {
@@ -219,16 +351,32 @@ pub fn run_worker(cfg: &RunConfig, worker: usize, port: u16) -> Result<()> {
                     // our restarted incarnation.
                     std::process::exit(3);
                 }
-                let ans = core.execute(&req)?;
-                let resp = response_frame(req.id, ans.edge_pixels, &digest_string(&ans.digest));
+                let trace = parse_trace(&frame);
+                let ctx = trace.as_ref().map(|(id, parent)| (id.as_str(), *parent));
+                let ans = core.execute(&req, ctx)?;
+                let resp = response_frame(
+                    req.id,
+                    ans.edge_pixels,
+                    &digest_string(&ans.digest),
+                    ans.t_ns,
+                    &ans.spans,
+                );
                 write_frame(&mut stream, &resp)?;
+                if core.now_ns() >= next_tel {
+                    write_frame(&mut stream, &telemetry_frame(worker, core.snapshot_line()))?;
+                    next_tel = (core.now_ns() / interval_ns + 1).saturating_mul(interval_ns);
+                }
             }
             Some("ping") => {
                 let t = frame.get("t_ns").and_then(Json::as_f64).unwrap_or(0.0) as u64;
                 write_frame(&mut stream, &pong_frame(t))?;
             }
             Some("report") => {
-                let body = core.report(worker).to_json();
+                // One final snapshot frame (seq ≥ 1) so the merged
+                // stream ends on this worker's drained state, then the
+                // report body.
+                write_frame(&mut stream, &telemetry_frame(worker, core.snapshot_line()))?;
+                let body = core.report().to_json();
                 write_frame(&mut stream, &worker_report_frame(body))?;
             }
             Some("shutdown") => return Ok(()),
@@ -270,9 +418,9 @@ mod tests {
 
     #[test]
     fn full_requests_match_the_detector_exactly() {
-        let mut core = WorkerCore::from_config(&test_cfg()).unwrap();
+        let mut core = WorkerCore::from_config(&test_cfg(), 0).unwrap();
         let r = req(0, RequestKind::Full);
-        let ans = core.execute(&r).unwrap();
+        let ans = core.execute(&r, None).unwrap();
         let det = Detector::from_config(&test_cfg()).unwrap();
         let img = generate(r.scene, r.width, r.height);
         let edges = det.detect_full(&img, det.params()).unwrap().edges;
@@ -283,25 +431,27 @@ mod tests {
 
     #[test]
     fn rethreshold_hits_the_cache_after_a_front_warm() {
-        let mut core = WorkerCore::from_config(&test_cfg()).unwrap();
-        core.execute(&req(0, RequestKind::FrontOnly)).unwrap();
-        let a = core.execute(&req(1, RequestKind::ReThreshold { lo: 0.04, hi: 0.2 })).unwrap();
+        let mut core = WorkerCore::from_config(&test_cfg(), 0).unwrap();
+        core.execute(&req(0, RequestKind::FrontOnly), None).unwrap();
+        let a =
+            core.execute(&req(1, RequestKind::ReThreshold { lo: 0.04, hi: 0.2 }), None).unwrap();
         let snap = core.cache.snapshot();
         let serve = snap.tiers.iter().find(|(name, _)| *name == "serve").unwrap();
         assert_eq!(serve.1.hits, 1, "re-threshold should hit the warmed front");
         // The cached path produces the same bits as a cold worker.
-        let mut cold = WorkerCore::from_config(&test_cfg()).unwrap();
-        let b = cold.execute(&req(1, RequestKind::ReThreshold { lo: 0.04, hi: 0.2 })).unwrap();
+        let mut cold = WorkerCore::from_config(&test_cfg(), 0).unwrap();
+        let b =
+            cold.execute(&req(1, RequestKind::ReThreshold { lo: 0.04, hi: 0.2 }), None).unwrap();
         assert_eq!(a.digest, b.digest);
         assert_eq!(a.edge_pixels, b.edge_pixels);
     }
 
     #[test]
     fn report_carries_totals_and_a_telemetry_line() {
-        let mut core = WorkerCore::from_config(&test_cfg()).unwrap();
-        core.execute(&req(0, RequestKind::Full)).unwrap();
-        core.execute(&req(1, RequestKind::FrontOnly)).unwrap();
-        let rep = core.report(3);
+        let mut core = WorkerCore::from_config(&test_cfg(), 3).unwrap();
+        core.execute(&req(0, RequestKind::Full), None).unwrap();
+        core.execute(&req(1, RequestKind::FrontOnly), None).unwrap();
+        let rep = core.report();
         assert_eq!(rep.worker, 3);
         assert_eq!(rep.served, 2);
         assert_eq!(rep.kinds.get("full"), Some(&1));
@@ -322,5 +472,39 @@ mod tests {
             1,
             "worker telemetry has exactly one lane"
         );
+    }
+
+    #[test]
+    fn snapshot_lines_advance_seq_through_one_persistent_engine() {
+        let mut core = WorkerCore::from_config(&test_cfg(), 0).unwrap();
+        let first = core.snapshot_line();
+        core.execute(&req(0, RequestKind::Full), None).unwrap();
+        let second = core.snapshot_line();
+        let seq = |line: &Json| line.get("seq").and_then(Json::as_f64).unwrap() as u64;
+        assert_eq!(seq(&first), 0);
+        assert_eq!(seq(&second), 1, "seq must advance across snapshot lines");
+        assert_eq!(seq(&core.report().telemetry), 2, "the report line continues the stream");
+    }
+
+    #[test]
+    fn trace_context_yields_a_stitched_deterministic_subtree() {
+        let ctx = Some(("00112233445566770000002a", 3u64));
+        let mut core = WorkerCore::from_config(&test_cfg(), 1).unwrap();
+        let r = req(2, RequestKind::ReThreshold { lo: 0.04, hi: 0.2 });
+        let ans = core.execute(&r, ctx).unwrap();
+        assert!(!ans.spans.is_empty());
+        let svc = &ans.spans[0];
+        assert_eq!(svc.name, "service");
+        assert_eq!(svc.parent, Some(3), "service stitches under the wire span");
+        assert_eq!(svc.tid, 2, "worker slot 1 renders on lane 2");
+        assert!(ans.spans.iter().any(|s| s.name == "cache_consult"));
+        assert!(ans.spans.iter().any(|s| s.name.starts_with("stage:")));
+        // Default clock is virtual: completion is modeled past arrival
+        // and a fresh core replays the exact same spans.
+        assert!(ans.t_ns > r.arrival_ns);
+        let mut again = WorkerCore::from_config(&test_cfg(), 1).unwrap();
+        let b = again.execute(&r, ctx).unwrap();
+        assert_eq!(ans.spans, b.spans, "virtual-clock spans replay identically");
+        assert_eq!(ans.t_ns, b.t_ns);
     }
 }

@@ -104,6 +104,18 @@ pub struct RunConfig {
     /// for liveness (dead workers are restarted and the request
     /// requeued).
     pub worker_heartbeat_ms: u64,
+    /// Observability: per-request trace sink path ("" disables
+    /// tracing). A `.jsonl` extension writes span-JSONL; any other
+    /// extension writes Chrome trace-event JSON (see [`crate::obs`]).
+    pub trace_log: String,
+    /// Observability: loopback TCP port serving the tier's current
+    /// snapshot line (connect → one JSON line → close). 0 disables the
+    /// endpoint.
+    pub obs_port: u16,
+    /// Cluster tier: how often each worker streams a `telemetry` frame
+    /// (its current snapshot line) to the front door, milliseconds in
+    /// the worker's clock domain.
+    pub worker_telemetry_ms: f64,
 }
 
 impl Default for RunConfig {
@@ -141,6 +153,9 @@ impl Default for RunConfig {
             alert_log: String::new(),
             cluster_port: 0,
             worker_heartbeat_ms: 500,
+            trace_log: String::new(),
+            obs_port: 0,
+            worker_telemetry_ms: 100.0,
         }
     }
 }
@@ -234,6 +249,13 @@ impl RunConfig {
             "worker-heartbeat-ms" | "worker_heartbeat_ms" => {
                 self.worker_heartbeat_ms = value.parse().map_err(|_| bad("u64"))?
             }
+            "trace-log" | "trace_log" => self.trace_log = value.to_string(),
+            "obs-port" | "obs_port" => {
+                self.obs_port = value.parse().map_err(|_| bad("u16"))?
+            }
+            "worker-telemetry-ms" | "worker_telemetry_ms" => {
+                self.worker_telemetry_ms = value.parse().map_err(|_| bad("f64"))?
+            }
             _ => return Err(Error::Config(format!("unknown config key `{key}`"))),
         }
         Ok(())
@@ -305,6 +327,12 @@ impl RunConfig {
         "cluster_port",
         "worker-heartbeat-ms",
         "worker_heartbeat_ms",
+        "trace-log",
+        "trace_log",
+        "obs-port",
+        "obs_port",
+        "worker-telemetry-ms",
+        "worker_telemetry_ms",
     ];
 
     /// Is `key` a config key `set` would accept?
@@ -407,6 +435,9 @@ impl RunConfig {
         if self.worker_heartbeat_ms == 0 {
             return Err(Error::Config("worker-heartbeat-ms must be >= 1".into()));
         }
+        if !(self.worker_telemetry_ms.is_finite() && self.worker_telemetry_ms > 0.0) {
+            return Err(Error::Config("worker-telemetry-ms must be > 0".into()));
+        }
         Ok(())
     }
 
@@ -451,6 +482,9 @@ impl RunConfig {
         m.insert("alert-log".into(), self.alert_log.clone());
         m.insert("cluster-port".into(), self.cluster_port.to_string());
         m.insert("worker-heartbeat-ms".into(), self.worker_heartbeat_ms.to_string());
+        m.insert("trace-log".into(), self.trace_log.clone());
+        m.insert("obs-port".into(), self.obs_port.to_string());
+        m.insert("worker-telemetry-ms".into(), self.worker_telemetry_ms.to_string());
         m
     }
 }
@@ -694,6 +728,28 @@ mod tests {
         assert_eq!(m.get("cluster-port").map(String::as_str), Some("0"));
         assert_eq!(m.get("worker-heartbeat-ms").map(String::as_str), Some("500"));
         assert_eq!(m.get("alert-log").map(String::as_str), Some(""));
+    }
+
+    #[test]
+    fn observability_keys_set_and_validate() {
+        let mut c = RunConfig::default();
+        assert!(c.trace_log.is_empty(), "tracing is opt-in");
+        assert_eq!(c.obs_port, 0, "endpoint disabled by default");
+        assert!((c.worker_telemetry_ms - 100.0).abs() < 1e-9);
+        c.set("trace-log", "/tmp/trace.json").unwrap();
+        c.set("obs-port", "47117").unwrap();
+        c.set("worker-telemetry-ms", "25.5").unwrap();
+        assert_eq!(c.trace_log, "/tmp/trace.json");
+        assert_eq!(c.obs_port, 47117);
+        assert!((c.worker_telemetry_ms - 25.5).abs() < 1e-12);
+        c.validate().unwrap();
+        assert!(c.set("obs-port", "70000").is_err(), "u16 range enforced");
+        c.set("worker_telemetry_ms", "0").unwrap();
+        assert!(c.validate().is_err());
+        let m = RunConfig::default().to_map();
+        assert_eq!(m.get("trace-log").map(String::as_str), Some(""));
+        assert_eq!(m.get("obs-port").map(String::as_str), Some("0"));
+        assert_eq!(m.get("worker-telemetry-ms").map(String::as_str), Some("100"));
     }
 
     #[test]

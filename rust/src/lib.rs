@@ -54,7 +54,15 @@
 //!   (`--slo-window`), per-lane `healthy | degraded | stalled` health
 //!   states, and explicit overload policies that shed or degrade new
 //!   arrivals while the rolling SLO is missed (`--overload-policy
-//!   none | reject-new | degrade-to-front-only`).
+//!   none | reject-new | degrade-to-front-only`). On top of the
+//!   counters sits **distributed tracing** ([`obs::trace`]): every
+//!   admitted request carries a deterministic trace id through queue
+//!   wait, batch coalesce, cache consult and per-stage execution — and
+//!   across the cluster wire, so worker spans stitch under the front
+//!   door's parent — exported as span JSONL or Chrome trace-event JSON
+//!   (`--trace-log file.json`). The current merged telemetry snapshot
+//!   is also served live over loopback TCP (`--obs-port`): connect,
+//!   read one JSON line, done.
 //! * **L2/L1 (python/, build-time only)** — the Canny front-end
 //!   (Gaussian → Sobel → NMS → double threshold) as JAX + Pallas
 //!   kernels, AOT-lowered to HLO text consumed by [`runtime`] through
@@ -161,6 +169,35 @@
 //! // replays of the same trace).
 //! println!("{}", report.to_json_string());
 //! ```
+//!
+//! **Tracing** the same run ([`obs::trace`]): name the export file and
+//! every admitted request becomes a span tree — root, queue wait, batch
+//! coalesce, cache consult, one span per executed stage. A `.jsonl`
+//! path selects span JSONL (one span object per line); a `.json` path
+//! selects Chrome trace-event JSON — load it in `chrome://tracing` or
+//! Perfetto, lanes as rows. Under `--clock virtual` two replays of the
+//! same trace write byte-identical files:
+//!
+//! ```no_run
+//! use canny_par::config::RunConfig;
+//! use canny_par::service::{serve, ServeOptions, Trace};
+//!
+//! let mut cfg = RunConfig::default();
+//! cfg.set("trace-log", "/tmp/spans.jsonl").unwrap();
+//! let trace = Trace::synthetic(200, cfg.seed, cfg.arrival_rate_hz);
+//! serve("traced", &trace, &ServeOptions::from_config(&cfg)).unwrap();
+//! // /tmp/spans.jsonl now holds one span per line, grouped by a
+//! // deterministic 24-hex trace id (content digest + admission seq).
+//! ```
+//!
+//! The CLI equivalents are `cannyd serve --synthetic 200 --trace-log
+//! spans.jsonl` and, for the multi-process tier, `cannyd cluster
+//! --workers 2 --trace-log trace.json` — there the worker-side spans
+//! travel back over the wire and stitch under the front door's
+//! route/dispatch/wire spans, one trace per request end-to-end. Adding
+//! `--obs-port P` (serve, stream or cluster) serves the newest merged
+//! telemetry snapshot line to any loopback TCP client — connect, read
+//! one JSON line, connection closes.
 //!
 //! Spreading the same trace over worker **processes** ([`cluster`]) —
 //! the CLI equivalent is `cannyd cluster --workers 2 --synthetic 40`;

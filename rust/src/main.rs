@@ -17,7 +17,10 @@
 //!              --cluster-port P)
 //!
 //! Both tiers take `--telemetry-log file.jsonl --telemetry-interval-ms N
-//! --slo-window N` (the ops plane; see the `obs` module docs).
+//! --slo-window N` (the ops plane; see the `obs` module docs), plus
+//! `--trace-log FILE` (serve + cluster: per-request distributed trace,
+//! span JSONL or Chrome trace-event JSON by extension) and
+//! `--obs-port P` (live snapshot line over loopback TCP).
 //!   calibrate  [--output calib.json]   (probe the service-cost model)
 //!   profile    [--sim-cpus 4|8] [--engine serial|patterns]   (figures)
 //!   info       (topology, artifacts, resolved config)
@@ -248,9 +251,12 @@ Stream flags: --inflight N (bounded in-flight window)
   --stream-cache (consult/offer frames in the shared artifact tier)
 Cluster flags: --cluster-port P (front-door loopback port, 0 = ephemeral)
   --worker-heartbeat-ms N (dispatch read-timeout / liveness probe period)
+  --worker-telemetry-ms N (how often each worker streams a telemetry
+    frame to the front door on its own clock; default 100)
   --alert-log stderr|FILE (health-transition alert sink, also honored by
     serve; empty = off)
-Ops-plane flags (serve + stream):
+Ops-plane flags (serve + stream; --telemetry-log and --obs-port also
+  honored by cluster, which merges every worker's stream):
   --telemetry-log FILE.jsonl (periodic snapshot stream; schema in the
     obs module docs; byte-identical across virtual serve replays)
   --telemetry-interval-ms F (snapshot period; default 100)
@@ -259,6 +265,11 @@ Ops-plane flags (serve + stream):
   --overload-policy none|reject-new|degrade-to-front-only (what happens
     to new serve arrivals while the rolling SLO is missed; default none
     = observe only)
+  --trace-log FILE (per-request distributed trace: .jsonl = span JSONL,
+    anything else = Chrome trace-event JSON for chrome://tracing;
+    serve + cluster; byte-identical across virtual replays)
+  --obs-port P (loopback TCP: connect, read the current snapshot line
+    as one JSON object, connection closes; 0 = off)
 
 Unknown flags and subcommands are errors, not ignored.
 ";
@@ -541,6 +552,7 @@ fn cmd_serve(
         // with "interrupted": true.
         opts.interrupt = Some(install_sigint_drain());
     }
+    opts.obs_endpoint = canny_par::obs::endpoint::from_config_port(cfg.obs_port)?;
     let report = serve(&label, &trace, &opts)?;
     println!("{}", report.to_json_string());
     Ok(())
@@ -560,7 +572,8 @@ fn cmd_stream(
     let spec = source.unwrap_or_else(|| format!("video:{}", cfg.seed));
     let src = FrameSource::parse(&spec, frames, w, h, cfg.seed)?;
     let det = Detector::from_config(cfg)?;
-    let opts = StreamOptions::from_config(cfg);
+    let mut opts = StreamOptions::from_config(cfg);
+    opts.obs_endpoint = canny_par::obs::endpoint::from_config_port(cfg.obs_port)?;
     let label = format!("stream[{}]", src.describe());
     let out = run_stream(&label, &src, &det, &opts)?;
     println!("{}", out.report.to_json_string());

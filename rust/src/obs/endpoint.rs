@@ -1,0 +1,128 @@
+//! `--obs-port`: a loopback TCP endpoint serving the tier's current
+//! snapshot line. Protocol: connect → read one JSON line → the server
+//! closes the connection. No HTTP, no request parsing — `nc` or
+//! `bash -c 'cat </dev/tcp/127.0.0.1/PORT'` is a complete client.
+//!
+//! The endpoint is a *window*, not a log: it always serves the latest
+//! published line, so polling it never perturbs the `--telemetry-log`
+//! stream (whose bytes stay replay-deterministic). The accept thread
+//! polls a nonblocking listener and so needs no clock reads — the
+//! pallas-lint clock-purity allowlist stays unchanged.
+
+use std::io::Write;
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+use crate::error::Result;
+
+/// The accept loop: serve the latest line to each connection, close,
+/// and re-check the stop flag between polls.
+fn serve_loop(listener: TcpListener, latest: Arc<Mutex<String>>, stop: Arc<AtomicBool>) {
+    while !stop.load(Ordering::Acquire) {
+        match listener.accept() {
+            Ok((mut conn, _)) => {
+                let line = latest.lock().expect("obs endpoint poisoned").clone();
+                let _ = conn.write_all(line.as_bytes());
+                let _ = conn.write_all(b"\n");
+            }
+            // WouldBlock (no pending connection) and transient accept
+            // errors both back off the same way.
+            Err(_) => thread::sleep(Duration::from_millis(5)),
+        }
+    }
+}
+
+/// A live snapshot endpoint on loopback TCP (see the module docs for
+/// the wire protocol). Created by [`ObsEndpoint::start`]; any tier
+/// publishes its current snapshot line via [`ObsEndpoint::publish`].
+#[derive(Debug)]
+pub struct ObsEndpoint {
+    port: u16,
+    latest: Arc<Mutex<String>>,
+    stop: Arc<AtomicBool>,
+    handle: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl ObsEndpoint {
+    /// Bind `127.0.0.1:port` (0 = OS-assigned, see
+    /// [`ObsEndpoint::port`]) and start the accept thread.
+    pub fn start(port: u16) -> Result<Arc<ObsEndpoint>> {
+        let listener = TcpListener::bind(("127.0.0.1", port))?;
+        listener.set_nonblocking(true)?;
+        let port = listener.local_addr()?.port();
+        let latest = Arc::new(Mutex::new(String::new()));
+        let stop = Arc::new(AtomicBool::new(false));
+        let thread_latest = Arc::clone(&latest);
+        let thread_stop = Arc::clone(&stop);
+        let handle = thread::Builder::new()
+            .name("obs-endpoint".to_string())
+            .spawn(move || serve_loop(listener, thread_latest, thread_stop))?;
+        Ok(Arc::new(ObsEndpoint { port, latest, stop, handle: Mutex::new(Some(handle)) }))
+    }
+
+    /// Replace the line served to subsequent connections.
+    pub fn publish(&self, line: &str) {
+        *self.latest.lock().expect("obs endpoint poisoned") = line.to_string();
+    }
+
+    /// The bound port — the OS-assigned one when `start` was given 0.
+    pub fn port(&self) -> u16 {
+        self.port
+    }
+
+    /// Stop and join the accept thread. Idempotent; also runs on drop.
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(handle) = self.handle.lock().expect("obs endpoint poisoned").take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for ObsEndpoint {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Endpoint for a config's `obs-port` value: `None` when the port is 0
+/// (the flag's default — endpoint disabled).
+pub fn from_config_port(port: u16) -> Result<Option<Arc<ObsEndpoint>>> {
+    if port == 0 {
+        return Ok(None);
+    }
+    Ok(Some(ObsEndpoint::start(port)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Read;
+    use std::net::TcpStream;
+
+    fn fetch(port: u16) -> String {
+        let mut line = String::new();
+        TcpStream::connect(("127.0.0.1", port)).unwrap().read_to_string(&mut line).unwrap();
+        line
+    }
+
+    #[test]
+    fn endpoint_serves_the_latest_line_per_connection() {
+        let ep = ObsEndpoint::start(0).unwrap();
+        assert_ne!(ep.port(), 0);
+        ep.publish("{\"tier\": \"serve\"}");
+        assert_eq!(fetch(ep.port()), "{\"tier\": \"serve\"}\n");
+        ep.publish("{\"tier\": \"cluster\"}");
+        assert_eq!(fetch(ep.port()), "{\"tier\": \"cluster\"}\n");
+        ep.stop();
+        ep.stop();
+    }
+
+    #[test]
+    fn port_zero_in_config_means_disabled() {
+        assert!(from_config_port(0).unwrap().is_none());
+    }
+}

@@ -1,0 +1,226 @@
+//! Cluster-wide telemetry merging: fold the per-worker snapshot lines
+//! streamed over `telemetry` frames into one cluster-tier line with
+//! aggregated totals plus raw per-worker sections (schema in
+//! [`crate::obs`]).
+//!
+//! The fold is schema-driven rather than hand-written per key: numeric
+//! fields sum (they are counters) unless named in [`MAX_KEYS`] (levels
+//! and percentiles take the max), booleans OR, health/status strings
+//! take the worst state, arrays concatenate, and objects recurse over
+//! the union of their keys. That keeps the merge correct as snapshot
+//! sections grow without this module needing to know about them.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::util::json::Json;
+
+/// Keys whose numeric values are *levels*, not totals: the merged
+/// value is the max across workers instead of the sum.
+const MAX_KEYS: &[&str] = &[
+    "heartbeat_ns",
+    "high_water",
+    "hit_rate",
+    "max",
+    "mean",
+    "p50",
+    "p50_ns",
+    "p95",
+    "p95_ns",
+    "p99",
+    "p99_ns",
+    "pct",
+    "seq",
+    "t_ns",
+    "target_p99_ns",
+];
+
+/// Rank a health/SLO state string; higher is worse. Unknown states
+/// rank worst so new states are never masked by the merge.
+fn severity(s: &str) -> u32 {
+    match s {
+        "healthy" | "met" | "ok" => 0,
+        "no-data" => 1,
+        "degraded" => 2,
+        "stalled" | "missed" => 3,
+        _ => 4,
+    }
+}
+
+/// Merge one field position across workers. `key` is the field's name
+/// in the enclosing object (`None` at the top level), which selects
+/// sum-vs-max for numbers and worst-state for strings.
+fn merge_values(key: Option<&str>, vals: &[&Json]) -> Json {
+    let vals: Vec<&Json> = vals.iter().copied().filter(|v| !matches!(v, Json::Null)).collect();
+    let Some(first) = vals.first() else {
+        return Json::Null;
+    };
+    match first {
+        Json::Null => Json::Null,
+        Json::Num(_) => {
+            let nums = vals.iter().filter_map(|v| v.as_f64());
+            if key.is_some_and(|k| MAX_KEYS.contains(&k)) {
+                Json::Num(nums.fold(0.0, f64::max))
+            } else {
+                Json::Num(nums.sum())
+            }
+        }
+        Json::Bool(_) => Json::Bool(vals.iter().any(|v| matches!(v, Json::Bool(true)))),
+        Json::Str(_) => {
+            if key.is_some_and(|k| k == "health" || k == "status") {
+                let worst = vals
+                    .iter()
+                    .filter_map(|v| v.as_str())
+                    .max_by_key(|s| severity(s))
+                    .unwrap_or("healthy");
+                Json::Str(worst.to_string())
+            } else {
+                (*first).clone()
+            }
+        }
+        Json::Arr(_) => {
+            let all = vals.iter().filter_map(|v| v.as_arr()).flatten().cloned().collect();
+            Json::Arr(all)
+        }
+        Json::Obj(_) => {
+            let keys: BTreeSet<&String> =
+                vals.iter().filter_map(|v| v.as_obj()).flat_map(|m| m.keys()).collect();
+            let mut out = BTreeMap::new();
+            for k in keys {
+                let sub: Vec<&Json> = vals.iter().filter_map(|v| v.get(k)).collect();
+                out.insert(k.clone(), merge_values(Some(k), &sub));
+            }
+            Json::Obj(out)
+        }
+    }
+}
+
+/// The sections a cluster line carries when no worker has reported
+/// yet: every key from [`crate::obs::snapshot::REQUIRED_LINE_KEYS`]
+/// that [`merged_line`] does not itself stamp, with empty/zero values.
+/// Also the backfill source, so a merged line always carries the full
+/// documented key set even while only some workers have reported.
+pub fn zero_line() -> BTreeMap<String, Json> {
+    let mut cache = BTreeMap::new();
+    cache.insert("enabled".to_string(), Json::Bool(false));
+    let mut slo = BTreeMap::new();
+    slo.insert("status".to_string(), Json::Str("no-data".to_string()));
+    let mut m = BTreeMap::new();
+    m.insert("alerts".to_string(), Json::Num(0.0));
+    m.insert("cache".to_string(), Json::Obj(cache));
+    m.insert("gate".to_string(), Json::Obj(BTreeMap::new()));
+    m.insert("health".to_string(), Json::Str("healthy".to_string()));
+    m.insert("lanes".to_string(), Json::Arr(Vec::new()));
+    m.insert("latency_ns".to_string(), Json::Obj(BTreeMap::new()));
+    m.insert("overload".to_string(), Json::Obj(BTreeMap::new()));
+    m.insert("queue".to_string(), Json::Obj(BTreeMap::new()));
+    m.insert("slo".to_string(), Json::Obj(slo));
+    m.insert("stages".to_string(), Json::Obj(BTreeMap::new()));
+    m.insert("t_ns".to_string(), Json::Num(0.0));
+    m
+}
+
+/// Merge the latest snapshot line from each worker (keyed by slot)
+/// into one cluster-tier line: aggregated totals at the top level and
+/// the raw per-worker lines under `workers`, each stamped with its
+/// slot as a `worker` key. `seq` is the merged stream's own dense
+/// sequence number (per-worker `seq`s stay visible in the sections).
+pub fn merged_line(latest: &BTreeMap<usize, Json>, seq: u64) -> Json {
+    let lines: Vec<&Json> = latest.values().collect();
+    let mut m = match merge_values(None, &lines) {
+        Json::Obj(m) => m,
+        _ => BTreeMap::new(),
+    };
+    for (key, value) in zero_line() {
+        m.entry(key).or_insert(value);
+    }
+    let workers: Vec<Json> = latest
+        .iter()
+        .map(|(slot, line)| {
+            let mut w = match line {
+                Json::Obj(o) => o.clone(),
+                _ => BTreeMap::new(),
+            };
+            w.insert("worker".to_string(), Json::Num(*slot as f64));
+            Json::Obj(w)
+        })
+        .collect();
+    m.insert("seq".to_string(), Json::Num(seq as f64));
+    m.insert("tier".to_string(), Json::Str("cluster".to_string()));
+    m.insert("workers".to_string(), Json::Arr(workers));
+    Json::Obj(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::snapshot::REQUIRED_LINE_KEYS;
+
+    fn worker_line(seq: u64, t_ns: u64, admitted: u64, health: &str, p99: u64) -> Json {
+        let text = format!(
+            "{{\"alerts\": 1, \"health\": \"{health}\", \
+             \"latency_ns\": {{\"count\": {admitted}, \"p99\": {p99}}}, \
+             \"queue\": {{\"admitted\": {admitted}}}, \
+             \"seq\": {seq}, \"t_ns\": {t_ns}, \"tier\": \"worker\"}}"
+        );
+        Json::parse(&text).unwrap()
+    }
+
+    #[test]
+    fn counters_sum_and_levels_max() {
+        let mut latest = BTreeMap::new();
+        latest.insert(0, worker_line(3, 500, 10, "healthy", 900));
+        latest.insert(1, worker_line(5, 700, 4, "healthy", 400));
+        let line = merged_line(&latest, 2);
+        assert_eq!(line.get("seq").unwrap().as_f64(), Some(2.0));
+        assert_eq!(line.get("t_ns").unwrap().as_f64(), Some(700.0));
+        assert_eq!(line.get("alerts").unwrap().as_f64(), Some(2.0));
+        let queue = line.get("queue").unwrap();
+        assert_eq!(queue.get("admitted").unwrap().as_f64(), Some(14.0));
+        let lat = line.get("latency_ns").unwrap();
+        assert_eq!(lat.get("count").unwrap().as_f64(), Some(14.0));
+        assert_eq!(lat.get("p99").unwrap().as_f64(), Some(900.0));
+        assert_eq!(line.get("tier").unwrap().as_str(), Some("cluster"));
+    }
+
+    #[test]
+    fn worst_health_state_wins() {
+        let mut latest = BTreeMap::new();
+        latest.insert(0, worker_line(1, 10, 1, "healthy", 1));
+        latest.insert(1, worker_line(1, 10, 1, "stalled", 1));
+        latest.insert(2, worker_line(1, 10, 1, "degraded", 1));
+        let line = merged_line(&latest, 0);
+        assert_eq!(line.get("health").unwrap().as_str(), Some("stalled"));
+    }
+
+    #[test]
+    fn empty_fleet_still_carries_the_documented_keys() {
+        let line = merged_line(&BTreeMap::new(), 0);
+        for key in REQUIRED_LINE_KEYS {
+            assert!(line.get(key).is_some(), "zero-worker line missing `{key}`");
+        }
+        assert_eq!(line.get("workers").unwrap().as_arr().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn worker_sections_keep_slots_and_their_own_seq() {
+        let mut latest = BTreeMap::new();
+        latest.insert(0, worker_line(7, 100, 2, "healthy", 5));
+        latest.insert(3, worker_line(9, 200, 2, "healthy", 5));
+        let line = merged_line(&latest, 4);
+        let workers = line.get("workers").unwrap().as_arr().unwrap();
+        assert_eq!(workers.len(), 2);
+        assert_eq!(workers[0].get("worker").unwrap().as_f64(), Some(0.0));
+        assert_eq!(workers[0].get("seq").unwrap().as_f64(), Some(7.0));
+        assert_eq!(workers[1].get("worker").unwrap().as_f64(), Some(3.0));
+        assert_eq!(workers[1].get("seq").unwrap().as_f64(), Some(9.0));
+    }
+
+    #[test]
+    fn merge_is_deterministic_in_report_order() {
+        let a = worker_line(1, 50, 3, "degraded", 70);
+        let b = worker_line(2, 60, 4, "healthy", 90);
+        let forward = merge_values(None, &[&a, &b]);
+        let reverse = merge_values(None, &[&b, &a]);
+        assert_eq!(forward.dump(), reverse.dump());
+    }
+}

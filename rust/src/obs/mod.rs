@@ -5,7 +5,7 @@
 //! every report used to be end-of-run only, this module makes the same
 //! numbers observable *while the run is in flight*.
 //!
-//! Four pieces:
+//! Core pieces:
 //!
 //! * [`registry::Telemetry`] — the process-wide registry of atomic
 //!   counters, gauges and fixed-bucket latency histograms that serve
@@ -29,6 +29,24 @@
 //!   is missed, new arrivals are rejected or rewritten to the cheap
 //!   front-only pipeline, every decision counted in the telemetry
 //!   stream and the final report.
+//!
+//! Distributed-observability pieces (PR 9):
+//!
+//! * [`trace::TraceCollector`] — per-request distributed tracing
+//!   (`--trace-log FILE`): every admitted request gets a deterministic
+//!   [`trace::TraceId`] and a tree of [`trace::Span`] records (queue
+//!   wait, batch coalesce, cache consult, per-stage execution, and in
+//!   cluster mode the route/wire hops, with worker spans stitched
+//!   under the front door's tree via trace context on the wire).
+//!   Exported as span-JSONL (`.jsonl`) or Chrome trace-event JSON
+//!   (any other extension) — schemas below.
+//! * [`merge::merged_line`] — cluster-wide telemetry aggregation: the
+//!   front door folds the workers' streamed snapshot lines into one
+//!   cluster-tier line with totals plus per-worker sections.
+//! * [`endpoint::ObsEndpoint`] — a live snapshot window on loopback
+//!   TCP (`--obs-port`): connect, read the tier's current snapshot
+//!   line, the server closes. No HTTP; polling it never perturbs the
+//!   deterministic `--telemetry-log` bytes.
 //!
 //! ## Telemetry JSONL schema (one object per line)
 //!
@@ -95,16 +113,101 @@
 //! status and the met/missed/no-data transition timeline) — see
 //! [`crate::service::slo::ServeReport`] and
 //! [`crate::stream::StreamReport`].
+//!
+//! ## Cluster merged telemetry schema (one object per line)
+//!
+//! The cluster front door's `--telemetry-log` carries the same
+//! top-level keys as above with `"tier": "cluster"`: counters are
+//! summed across workers, levels/percentiles take the max, health and
+//! SLO status take the worst state, and the raw per-worker lines ride
+//! under `workers`, each stamped with its slot as a `worker` key
+//! (nonzero `seq`/`t_ns` inside a section are the *worker's own*
+//! stream position). Sections a worker has not reported yet are backed
+//! by zero values, so every line carries the full documented key set:
+//!
+//! ```json
+//! {
+//!   "alerts": 0,
+//!   "cache": {"enabled": true, "...": "summed cache section"},
+//!   "gate": {},
+//!   "health": "healthy",
+//!   "lanes": [{"id": 0, "...": "all workers' lanes, concatenated"}],
+//!   "latency_ns": {"count": 24, "max": 4123000, "p99": 4194303},
+//!   "overload": {"policy": "none", "shed_degraded": 0, "shed_rejected": 0},
+//!   "queue": {"admitted": 24, "depth": 0},
+//!   "seq": 3,
+//!   "slo": {"status": "no-data"},
+//!   "stages": {"sobel": {"cpu_ns": 0, "runs": 24, "wall_ns": 0}},
+//!   "t_ns": 5100000,
+//!   "tier": "cluster",
+//!   "workers": [{"seq": 2, "t_ns": 5100000, "tier": "worker",
+//!                "worker": 0, "...": "the worker's full line"}]
+//! }
+//! ```
+//!
+//! ## Span JSONL schema (`--trace-log trace.jsonl`, one span per line)
+//!
+//! Spans are sorted by `(trace, id, t0_ns)` before writing, so the
+//! file's bytes are independent of thread interleaving — and under the
+//! virtual clock byte-identical across replays. `parent` is `null` on
+//! a trace's root span; `attrs` carries free-form strings such as the
+//! cache-consult `outcome` (`hit | miss | negative | disabled`, plus
+//! `offer` for a front-only warm and `modeled` on execute-off runs)
+//! and the route span's worker `slot`:
+//!
+//! ```json
+//! {
+//!   "attrs": {"outcome": "miss"},
+//!   "cat": "exec",
+//!   "dur_ns": 1350000,
+//!   "id": 4,
+//!   "name": "service",
+//!   "parent": 1,
+//!   "t0_ns": 50000,
+//!   "tid": 2,
+//!   "trace": "00779c4fb295f4db00000007"
+//! }
+//! ```
+//!
+//! ## Chrome trace-event schema (`--trace-log trace.json`)
+//!
+//! Any non-`.jsonl` extension writes one Chrome trace-event JSON
+//! document (loadable in `chrome://tracing` / Perfetto): complete
+//! events (`"ph": "X"`), `ts`/`dur` in microseconds, lanes = `tid`
+//! (0 = front door / intake, `n + 1` = serve lane / worker slot `n`),
+//! trace identity under `args`:
+//!
+//! ```json
+//! {
+//!   "traceEvents": [
+//!     {"args": {"id": 1, "parent": null, "slot": "0",
+//!               "trace": "00779c4fb295f4db00000007"},
+//!      "cat": "cluster", "dur": 1350.5, "name": "request", "ph": "X",
+//!      "pid": 1, "tid": 0, "ts": 50}
+//!   ]
+//! }
+//! ```
 
+pub mod endpoint;
 pub mod fault;
 pub mod health;
+pub mod merge;
 pub mod registry;
 pub mod snapshot;
+pub mod trace;
 
+pub use endpoint::ObsEndpoint;
 pub use fault::{FaultManager, OverloadPolicy, ShedDecision};
 pub use health::{AlertSink, Health, HealthTracker, DEFAULT_STALL_AFTER_NS};
-pub use registry::{Counter, Gauge, Histogram, HistogramSnapshot, LaneTelemetry, StageTally, Telemetry};
+pub use merge::{merged_line, zero_line};
+pub use registry::{
+    Counter, Gauge, Histogram, HistogramSnapshot, LaneTelemetry, StageTally, Telemetry,
+};
 pub use snapshot::{
     CacheProbe, ClockProbe, SloProbe, SnapshotEngine, TickInputs, WallSnapshotter,
     REQUIRED_LINE_KEYS,
+};
+pub use trace::{
+    cluster_front_spans, content_digest, modeled_stage_durs, request_spans, service_spans, Span,
+    TraceCollector, TraceId, REQUIRED_EVENT_KEYS, REQUIRED_SPAN_KEYS,
 };

@@ -30,6 +30,7 @@ use std::time::Duration;
 
 use crate::cache::CacheSnapshot;
 use crate::error::{Error, Result};
+use crate::obs::endpoint::ObsEndpoint;
 use crate::obs::health::{Health, HealthTracker, DEFAULT_STALL_AFTER_NS};
 use crate::obs::registry::Telemetry;
 use crate::profiler::{UsageSample, UsageTrace};
@@ -81,6 +82,10 @@ pub struct SnapshotEngine {
     /// lane and tier states are diffed against the last tick's, one
     /// line per change, counted into the registry's `alerts` counter.
     tracker: HealthTracker,
+    /// Live snapshot endpoint (`--obs-port`): every built line is also
+    /// published as the endpoint's current line, independent of whether
+    /// a JSONL sink is attached.
+    endpoint: Option<Arc<ObsEndpoint>>,
 }
 
 impl SnapshotEngine {
@@ -97,6 +102,7 @@ impl SnapshotEngine {
             ticks: 0,
             lines: 0,
             tracker: HealthTracker::off(),
+            endpoint: None,
         }
     }
 
@@ -118,6 +124,7 @@ impl SnapshotEngine {
             ticks: 0,
             lines: 0,
             tracker: HealthTracker::off(),
+            endpoint: None,
         })
     }
 
@@ -145,6 +152,20 @@ impl SnapshotEngine {
     pub fn with_alerts(mut self, tracker: HealthTracker) -> SnapshotEngine {
         self.tracker = tracker;
         self
+    }
+
+    /// Attach (or detach, with `None`) a live snapshot endpoint
+    /// (`--obs-port`): every line this engine builds is published as
+    /// the endpoint's current line, even when no JSONL sink is open.
+    pub fn with_endpoint(mut self, endpoint: Option<Arc<ObsEndpoint>>) -> SnapshotEngine {
+        self.endpoint = endpoint;
+        self
+    }
+
+    /// Is a live snapshot endpoint attached? (Like alerting, an
+    /// endpoint keeps the tick grid live without a JSONL sink.)
+    pub fn endpoint_active(&self) -> bool {
+        self.endpoint.is_some()
     }
 
     /// Is alerting attached? (Ticks fire for alert evaluation even
@@ -175,7 +196,7 @@ impl SnapshotEngine {
     /// The first tick fires at one interval, not at zero — a t=0 line
     /// would only ever hold zeros.
     pub fn next_tick_ns(&self) -> u64 {
-        if !self.enabled() && !self.tracker.active() {
+        if !self.enabled() && !self.tracker.active() && self.endpoint.is_none() {
             return u64::MAX;
         }
         (self.ticks + 1).saturating_mul(self.interval_ns)
@@ -199,21 +220,25 @@ impl SnapshotEngine {
         Some(due)
     }
 
-    /// Append one snapshot line (and run alert evaluation). No-op when
-    /// the sink is disabled and no alert tracker is attached; with only
-    /// a tracker, the line is built for its health derivation but not
+    /// Append one snapshot line (and run alert evaluation, and publish
+    /// to the live endpoint). No-op when the sink is disabled and
+    /// neither an alert tracker nor an endpoint is attached; with only
+    /// a tracker/endpoint, the line is built and published but not
     /// written.
     pub fn emit(&mut self, inputs: TickInputs) -> Result<()> {
-        if self.out.is_none() && !self.tracker.active() {
+        if self.out.is_none() && !self.tracker.active() && self.endpoint.is_none() {
             return Ok(());
         }
-        let line = self.build_line(&inputs);
+        let rendered = self.build_line(&inputs).dump();
+        if let Some(ep) = &self.endpoint {
+            ep.publish(&rendered);
+        }
         if let Some(out) = self.out.as_mut() {
-            out.write_all(line.dump().as_bytes())?;
+            out.write_all(rendered.as_bytes())?;
             out.write_all(b"\n")?;
-            self.seq += 1;
             self.lines += 1;
         }
+        self.seq += 1;
         Ok(())
     }
 
@@ -326,13 +351,20 @@ impl SnapshotEngine {
         Json::Obj(line)
     }
 
-    /// Build one snapshot line without writing it anywhere — how a
-    /// cluster worker renders its final telemetry state into the
-    /// `worker_report` frame body (the snapshot stream crossing the
-    /// process boundary). Runs the same alert evaluation as
-    /// [`SnapshotEngine::emit`].
+    /// Build one snapshot line without writing it to the JSONL sink —
+    /// how a cluster worker renders its telemetry state into
+    /// `telemetry` and `worker_report` frame bodies (the snapshot
+    /// stream crossing the process boundary). Runs the same alert
+    /// evaluation and endpoint publish as [`SnapshotEngine::emit`],
+    /// and advances `seq` the same way, so shipped worker lines carry
+    /// a meaningful dense sequence number.
     pub fn render_line(&mut self, inputs: &TickInputs) -> Json {
-        self.build_line(inputs)
+        let line = self.build_line(inputs);
+        if let Some(ep) = &self.endpoint {
+            ep.publish(&line.dump());
+        }
+        self.seq += 1;
+        line
     }
 }
 
@@ -394,9 +426,10 @@ impl WallSnapshotter {
     ) -> WallSnapshotter {
         let period_ns = engine.interval_ns();
         let cores: usize = pools.iter().map(|p| p.n_workers()).sum();
-        // Spawn when either output is live: the JSONL sink, or alert
-        // evaluation (`--alert-log` with no `--telemetry-log`).
-        if !engine.enabled() && !engine.alerts_active() {
+        // Spawn when any output is live: the JSONL sink, alert
+        // evaluation, or the `--obs-port` endpoint (each works with no
+        // `--telemetry-log`).
+        if !engine.enabled() && !engine.alerts_active() && !engine.endpoint_active() {
             return WallSnapshotter {
                 stop: Arc::new(AtomicBool::new(true)),
                 handle: None,

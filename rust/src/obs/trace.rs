@@ -1,0 +1,582 @@
+//! Distributed tracing: deterministic per-request trace ids and span
+//! records across tiers and processes, exported as span-JSONL or
+//! Chrome trace-event JSON (`--trace-log FILE`; both schemas are
+//! documented in [`crate::obs`] and lint-checked for parity).
+//!
+//! Determinism contract: a [`TraceId`] is derived from the request's
+//! *content digest* plus its *admission sequence number* — both modeled
+//! quantities — and every span in a virtual-clock run carries modeled
+//! times, so two replays of the same trace write byte-identical trace
+//! files. [`TraceCollector::write`] sorts the buffered spans before
+//! serializing, so thread interleaving never reaches the bytes.
+//!
+//! Span-id layout (fixed small ids, so cross-process stitching needs
+//! no id allocator): serve trees are `root(1) → batch_coalesce(2) /
+//! queue_wait(3) / service(4) → cache_consult(5) / stage(6+)`; cluster
+//! trees are `root(1) → route(2) / wire(3) → service(4) → …` where the
+//! service subtree is produced by the *worker process* and stitched
+//! under the front door's wire span via the trace context carried in
+//! the request/response frames ([`crate::cluster::proto`]).
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+use crate::error::Result;
+use crate::util::json::Json;
+
+/// Span id of a request's root span (serve and cluster trees alike).
+pub const SPAN_ROOT: u64 = 1;
+/// Serve tree: the batch-coalesce wait under the root.
+pub const SPAN_COALESCE: u64 = 2;
+/// Cluster tree: the routing decision (zero duration) under the root.
+pub const SPAN_ROUTE: u64 = 2;
+/// Serve tree: queue wait between batch formation and lane dispatch.
+pub const SPAN_QUEUE: u64 = 3;
+/// Cluster tree: the wire hop (dispatch → response) under the root;
+/// the worker's service subtree stitches under this id.
+pub const SPAN_WIRE: u64 = 3;
+/// The service span: lane execution (serve) or worker execution
+/// (cluster).
+pub const SPAN_SERVICE: u64 = 4;
+/// The cache-consult span under the service span.
+pub const SPAN_CACHE: u64 = 5;
+/// First stage span id; stage `i` of a plan is `SPAN_STAGE0 + i`.
+pub const SPAN_STAGE0: u64 = 6;
+
+/// Keys every span-JSONL line carries (schema in [`crate::obs`]).
+pub const REQUIRED_SPAN_KEYS: [&str; 9] =
+    ["attrs", "cat", "dur_ns", "id", "name", "parent", "t0_ns", "tid", "trace"];
+
+/// Keys every exported Chrome trace event carries — the documented key
+/// set the export tests validate against.
+pub const REQUIRED_EVENT_KEYS: [&str; 8] =
+    ["args", "cat", "dur", "name", "ph", "pid", "tid", "ts"];
+
+/// A deterministic trace id: content digest + admission sequence
+/// number, hex-packed. Virtual-clock replays of the same trace derive
+/// identical ids, which is what keeps `--trace-log` byte-identical.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TraceId(String);
+
+impl TraceId {
+    /// Derive from a content digest and the admission sequence number.
+    pub fn derive(digest: u64, seq: u64) -> TraceId {
+        TraceId(format!("{digest:016x}{seq:08x}"))
+    }
+
+    /// Rewrap an id received over the wire (cluster workers never
+    /// re-derive — the front door owns id assignment).
+    pub fn from_wire(id: &str) -> TraceId {
+        TraceId(id.to_string())
+    }
+
+    pub fn as_str(&self) -> &str {
+        &self.0
+    }
+}
+
+/// FNV-1a 64 over a request's content identity (scene spec + shape):
+/// the digest half of [`TraceId::derive`]. Deliberately independent of
+/// the cluster router's placement digest — tracing must neither
+/// perturb nor depend on routing.
+pub fn content_digest(spec: &str, width: usize, height: usize) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let eat = |h: &mut u64, b: u8| {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(0x100_0000_01b3);
+    };
+    for b in spec.bytes() {
+        eat(&mut h, b);
+    }
+    for v in [width as u64, height as u64] {
+        for b in v.to_le_bytes() {
+            eat(&mut h, b);
+        }
+    }
+    h
+}
+
+/// One completed span: a named interval in a request's trace tree.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Span {
+    /// Owning trace id ([`TraceId::derive`]).
+    pub trace: String,
+    /// Span id, unique within the trace (see the `SPAN_*` constants).
+    pub id: u64,
+    /// Parent span id; `None` for the root.
+    pub parent: Option<u64>,
+    /// Human-readable name (`request`, `queue_wait`, `stage:sobel`, …).
+    pub name: String,
+    /// Coarse category (`serve`, `cluster`, `stream`, `exec`, `cache`,
+    /// `stage`).
+    pub cat: String,
+    /// Chrome-trace lane: 0 = front door / intake, `n + 1` = serve
+    /// lane, worker slot, or stream pipeline stage `n`.
+    pub tid: u64,
+    /// Start time in the emitting process's clock domain (modeled ns
+    /// under the virtual clock, measured ns under wall).
+    pub t0_ns: u64,
+    pub dur_ns: u64,
+    /// Free-form string attributes (`outcome`, `slot`, …).
+    pub attrs: BTreeMap<String, String>,
+}
+
+impl Span {
+    /// Build a span with no attributes.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        trace: &TraceId,
+        id: u64,
+        parent: Option<u64>,
+        name: &str,
+        cat: &str,
+        tid: u64,
+        t0_ns: u64,
+        dur_ns: u64,
+    ) -> Span {
+        Span {
+            trace: trace.as_str().to_string(),
+            id,
+            parent,
+            name: name.to_string(),
+            cat: cat.to_string(),
+            tid,
+            t0_ns,
+            dur_ns,
+            attrs: BTreeMap::new(),
+        }
+    }
+
+    /// Add one string attribute (builder style).
+    pub fn attr(mut self, key: &str, value: &str) -> Span {
+        self.attrs.insert(key.to_string(), value.to_string());
+        self
+    }
+
+    /// The span-JSONL object for this span — also the wire form spans
+    /// take inside cluster `response` frames.
+    pub fn to_json(&self) -> Json {
+        let attrs: BTreeMap<String, Json> =
+            self.attrs.iter().map(|(k, v)| (k.clone(), Json::Str(v.clone()))).collect();
+        let parent = match self.parent {
+            Some(p) => Json::Num(p as f64),
+            None => Json::Null,
+        };
+        let mut m = BTreeMap::new();
+        m.insert("attrs".to_string(), Json::Obj(attrs));
+        m.insert("cat".to_string(), Json::Str(self.cat.clone()));
+        m.insert("dur_ns".to_string(), Json::Num(self.dur_ns as f64));
+        m.insert("id".to_string(), Json::Num(self.id as f64));
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        m.insert("parent".to_string(), parent);
+        m.insert("t0_ns".to_string(), Json::Num(self.t0_ns as f64));
+        m.insert("tid".to_string(), Json::Num(self.tid as f64));
+        m.insert("trace".to_string(), Json::Str(self.trace.clone()));
+        Json::Obj(m)
+    }
+
+    /// Parse a wire span (inverse of [`Span::to_json`]); `None` on any
+    /// missing or mistyped field.
+    pub fn from_json(j: &Json) -> Option<Span> {
+        let attrs = j
+            .get("attrs")?
+            .as_obj()?
+            .iter()
+            .map(|(k, v)| Some((k.clone(), v.as_str()?.to_string())))
+            .collect::<Option<BTreeMap<_, _>>>()?;
+        let parent = match j.get("parent")? {
+            Json::Null => None,
+            p => Some(p.as_f64()? as u64),
+        };
+        Some(Span {
+            trace: j.get("trace")?.as_str()?.to_string(),
+            id: j.get("id")?.as_f64()? as u64,
+            parent,
+            name: j.get("name")?.as_str()?.to_string(),
+            cat: j.get("cat")?.as_str()?.to_string(),
+            tid: j.get("tid")?.as_f64()? as u64,
+            t0_ns: j.get("t0_ns")?.as_f64()? as u64,
+            dur_ns: j.get("dur_ns")?.as_f64()? as u64,
+            attrs,
+        })
+    }
+}
+
+/// One Chrome trace event for a span: a complete event (`"ph": "X"`),
+/// `ts`/`dur` in microseconds per the trace-event format, lanes keyed
+/// by `tid`, trace identity preserved under `args`.
+fn chrome_event(s: &Span) -> Json {
+    let mut args = BTreeMap::new();
+    args.insert("id".to_string(), Json::Num(s.id as f64));
+    let parent = match s.parent {
+        Some(p) => Json::Num(p as f64),
+        None => Json::Null,
+    };
+    args.insert("parent".to_string(), parent);
+    args.insert("trace".to_string(), Json::Str(s.trace.clone()));
+    for (k, v) in &s.attrs {
+        args.insert(k.clone(), Json::Str(v.clone()));
+    }
+    let mut m = BTreeMap::new();
+    m.insert("args".to_string(), Json::Obj(args));
+    m.insert("cat".to_string(), Json::Str(s.cat.clone()));
+    m.insert("dur".to_string(), Json::Num(s.dur_ns as f64 / 1000.0));
+    m.insert("name".to_string(), Json::Str(s.name.clone()));
+    m.insert("ph".to_string(), Json::Str("X".to_string()));
+    m.insert("pid".to_string(), Json::Num(1.0));
+    m.insert("tid".to_string(), Json::Num(s.tid as f64));
+    m.insert("ts".to_string(), Json::Num(s.t0_ns as f64 / 1000.0));
+    Json::Obj(m)
+}
+
+/// Thread-safe span sink behind `--trace-log FILE`. Spans buffer in
+/// memory and are written once at [`TraceCollector::write`] time,
+/// sorted by `(trace, id, t0_ns)` — so the file's bytes never depend
+/// on thread interleaving, only on span values.
+///
+/// The output format follows the extension: `.jsonl` writes one
+/// span-JSONL object per line; anything else writes one Chrome
+/// trace-event JSON document (loadable in `chrome://tracing` /
+/// Perfetto; lanes = `tid`).
+#[derive(Debug)]
+pub struct TraceCollector {
+    path: PathBuf,
+    chrome: bool,
+    spans: Mutex<Vec<Span>>,
+}
+
+impl TraceCollector {
+    /// `Some` collector for a non-empty path spec, `None` (tracing
+    /// off) for the empty string — the `--trace-log` default.
+    pub fn from_spec(path: &str) -> Option<Arc<TraceCollector>> {
+        if path.is_empty() {
+            return None;
+        }
+        Some(Arc::new(TraceCollector {
+            path: PathBuf::from(path),
+            chrome: !path.ends_with(".jsonl"),
+            spans: Mutex::new(Vec::new()),
+        }))
+    }
+
+    /// Does this collector write Chrome trace-event JSON (vs
+    /// span-JSONL)?
+    pub fn is_chrome(&self) -> bool {
+        self.chrome
+    }
+
+    /// Buffer one span.
+    pub fn record(&self, span: Span) {
+        self.spans.lock().expect("trace collector poisoned").push(span);
+    }
+
+    /// Buffer a request's whole span tree.
+    pub fn record_all(&self, spans: Vec<Span>) {
+        self.spans.lock().expect("trace collector poisoned").extend(spans);
+    }
+
+    /// Spans buffered so far.
+    pub fn len(&self) -> usize {
+        self.spans.lock().expect("trace collector poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Sort every buffered span and write the trace file (truncating).
+    /// Called once at end of run.
+    pub fn write(&self) -> Result<()> {
+        let mut spans = self.spans.lock().expect("trace collector poisoned").clone();
+        spans.sort_by(|a, b| {
+            (a.trace.as_str(), a.id, a.t0_ns).cmp(&(b.trace.as_str(), b.id, b.t0_ns))
+        });
+        let mut out = String::new();
+        if self.chrome {
+            let events: Vec<Json> = spans.iter().map(chrome_event).collect();
+            let mut doc = BTreeMap::new();
+            doc.insert("traceEvents".to_string(), Json::Arr(events));
+            out.push_str(&Json::Obj(doc).dump());
+            out.push('\n');
+        } else {
+            for s in &spans {
+                out.push_str(&s.to_json().dump());
+                out.push('\n');
+            }
+        }
+        std::fs::write(&self.path, out)?;
+        Ok(())
+    }
+}
+
+/// Even split of `total_ns` across `n` stages, remainder on the last —
+/// the modeled per-stage durations virtual-clock traces carry (stage
+/// walls are only *measured* under wall clocks, where they feed spans
+/// directly).
+pub fn modeled_stage_durs(total_ns: u64, n: usize) -> Vec<u64> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let base = total_ns / n as u64;
+    let mut durs = vec![base; n];
+    *durs.last_mut().expect("n > 0") = total_ns - base * (n as u64 - 1);
+    durs
+}
+
+/// The service subtree (ids [`SPAN_SERVICE`], [`SPAN_CACHE`],
+/// [`SPAN_STAGE0`]` + i`) under `parent`: lane/worker execution, the
+/// optional cache consult (`(outcome, dur_ns)`), and one span per
+/// executed stage, laid out sequentially from `t0_ns`.
+pub fn service_spans(
+    trace: &TraceId,
+    tid: u64,
+    parent: u64,
+    t0_ns: u64,
+    end_ns: u64,
+    cache: Option<(&str, u64)>,
+    stages: &[(String, u64)],
+) -> Vec<Span> {
+    let dur = end_ns.saturating_sub(t0_ns);
+    let mut spans =
+        vec![Span::new(trace, SPAN_SERVICE, Some(parent), "service", "exec", tid, t0_ns, dur)];
+    let mut cursor = t0_ns;
+    if let Some((outcome, dur_ns)) = cache {
+        let span = Span::new(
+            trace,
+            SPAN_CACHE,
+            Some(SPAN_SERVICE),
+            "cache_consult",
+            "cache",
+            tid,
+            cursor,
+            dur_ns,
+        )
+        .attr("outcome", outcome);
+        spans.push(span);
+        cursor += dur_ns;
+    }
+    for (i, (name, d)) in stages.iter().enumerate() {
+        let id = SPAN_STAGE0 + i as u64;
+        let name = format!("stage:{name}");
+        spans.push(Span::new(trace, id, Some(SPAN_SERVICE), &name, "stage", tid, cursor, *d));
+        cursor += d;
+    }
+    spans
+}
+
+/// The serve tier's full request tree: root, batch-coalesce and
+/// queue-wait spans on the intake lane (`tid` 0), then the service
+/// subtree on the executing lane's `tid`.
+#[allow(clippy::too_many_arguments)]
+pub fn request_spans(
+    trace: &TraceId,
+    lane_tid: u64,
+    arrival_ns: u64,
+    formed_ns: u64,
+    dispatch_ns: u64,
+    complete_ns: u64,
+    cache: Option<(&str, u64)>,
+    stages: &[(String, u64)],
+) -> Vec<Span> {
+    let total = complete_ns.saturating_sub(arrival_ns);
+    let root = Span::new(trace, SPAN_ROOT, None, "request", "serve", 0, arrival_ns, total);
+    let coalesce = Span::new(
+        trace,
+        SPAN_COALESCE,
+        Some(SPAN_ROOT),
+        "batch_coalesce",
+        "serve",
+        0,
+        arrival_ns,
+        formed_ns.saturating_sub(arrival_ns),
+    );
+    let queue = Span::new(
+        trace,
+        SPAN_QUEUE,
+        Some(SPAN_ROOT),
+        "queue_wait",
+        "serve",
+        0,
+        formed_ns,
+        dispatch_ns.saturating_sub(formed_ns),
+    );
+    let mut spans = vec![root, coalesce, queue];
+    let svc = service_spans(trace, lane_tid, SPAN_ROOT, dispatch_ns, complete_ns, cache, stages);
+    spans.extend(svc);
+    spans
+}
+
+/// The cluster front door's half of a request tree: root, the routing
+/// decision (zero duration, `slot` attribute, intake lane) and the
+/// wire hop on the worker slot's lane — the span the worker's service
+/// subtree stitches under (its parent id travels in the request
+/// frame's trace context).
+pub fn cluster_front_spans(
+    trace: &TraceId,
+    slot: usize,
+    arrival_ns: u64,
+    complete_ns: u64,
+) -> Vec<Span> {
+    let dur = complete_ns.saturating_sub(arrival_ns);
+    let tid = slot as u64 + 1;
+    vec![
+        Span::new(trace, SPAN_ROOT, None, "request", "cluster", 0, arrival_ns, dur),
+        Span::new(trace, SPAN_ROUTE, Some(SPAN_ROOT), "route", "cluster", 0, arrival_ns, 0)
+            .attr("slot", &slot.to_string()),
+        Span::new(trace, SPAN_WIRE, Some(SPAN_ROOT), "wire", "cluster", tid, arrival_ns, dur),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("canny_trace_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn trace_ids_are_deterministic_and_distinct() {
+        let d = content_digest("synthetic:3", 96, 64);
+        assert_eq!(d, content_digest("synthetic:3", 96, 64));
+        assert_ne!(d, content_digest("synthetic:4", 96, 64));
+        assert_ne!(d, content_digest("synthetic:3", 64, 96));
+        let id = TraceId::derive(d, 7);
+        assert_eq!(id, TraceId::derive(d, 7));
+        assert_ne!(id, TraceId::derive(d, 8));
+        assert_eq!(id.as_str().len(), 24);
+        assert_eq!(TraceId::from_wire(id.as_str()), id);
+    }
+
+    #[test]
+    fn modeled_durs_sum_to_total() {
+        assert_eq!(modeled_stage_durs(10, 0), Vec::<u64>::new());
+        assert_eq!(modeled_stage_durs(10, 3), vec![3, 3, 4]);
+        assert_eq!(modeled_stage_durs(9, 3), vec![3, 3, 3]);
+        let durs = modeled_stage_durs(1_000_003, 4);
+        assert_eq!(durs.iter().sum::<u64>(), 1_000_003);
+    }
+
+    #[test]
+    fn span_json_round_trips() {
+        let trace = TraceId::derive(0xdead_beef, 3);
+        let span = Span::new(&trace, SPAN_CACHE, Some(SPAN_SERVICE), "cache", "cache", 2, 50, 9)
+            .attr("outcome", "negative");
+        let j = span.to_json();
+        for key in REQUIRED_SPAN_KEYS {
+            assert!(j.get(key).is_some(), "span json missing `{key}`");
+        }
+        assert_eq!(Span::from_json(&j), Some(span.clone()));
+        let root = Span::new(&trace, SPAN_ROOT, None, "request", "serve", 0, 0, 100);
+        let j = root.to_json();
+        assert_eq!(j.get("parent"), Some(&Json::Null));
+        assert_eq!(Span::from_json(&j), Some(root));
+    }
+
+    #[test]
+    fn chrome_events_carry_the_documented_keys() {
+        let trace = TraceId::derive(1, 1);
+        let spans = cluster_front_spans(&trace, 0, 50_000, 1_400_000);
+        for span in &spans {
+            let ev = chrome_event(span);
+            for key in REQUIRED_EVENT_KEYS {
+                assert!(ev.get(key).is_some(), "chrome event missing `{key}`");
+            }
+            assert_eq!(ev.get("ph").unwrap().as_str(), Some("X"));
+            let args = ev.get("args").unwrap();
+            assert_eq!(args.get("trace").unwrap().as_str(), Some(trace.as_str()));
+        }
+        assert_eq!(spans[1].attrs.get("slot").map(String::as_str), Some("0"));
+    }
+
+    #[test]
+    fn service_subtree_is_sequential_under_the_service_span() {
+        let trace = TraceId::derive(9, 0);
+        let stages = vec![("gaussian".to_string(), 40), ("sobel".to_string(), 60)];
+        let spans = service_spans(&trace, 2, SPAN_WIRE, 100, 210, Some(("miss", 10)), &stages);
+        assert_eq!(spans.len(), 4);
+        assert_eq!(spans[0].parent, Some(SPAN_WIRE));
+        assert_eq!(spans[0].dur_ns, 110);
+        assert_eq!((spans[1].t0_ns, spans[1].dur_ns), (100, 10));
+        assert_eq!((spans[2].t0_ns, spans[2].dur_ns), (110, 40));
+        assert_eq!((spans[3].t0_ns, spans[3].dur_ns), (150, 60));
+        assert_eq!(spans[3].name, "stage:sobel");
+        for s in &spans[1..] {
+            assert_eq!(s.parent, Some(SPAN_SERVICE));
+            assert_eq!(s.tid, 2);
+        }
+    }
+
+    #[test]
+    fn request_tree_links_to_one_root() {
+        let trace = TraceId::derive(5, 2);
+        let stages = vec![("full".to_string(), 100)];
+        let spans = request_spans(&trace, 1, 10, 30, 50, 150, None, &stages);
+        assert_eq!(spans[0].id, SPAN_ROOT);
+        assert_eq!(spans[0].parent, None);
+        for s in &spans[1..] {
+            assert!(s.parent.is_some());
+        }
+        let queue = spans.iter().find(|s| s.name == "queue_wait").unwrap();
+        assert_eq!((queue.t0_ns, queue.dur_ns), (30, 20));
+        let service = spans.iter().find(|s| s.id == SPAN_SERVICE).unwrap();
+        assert_eq!(service.tid, 1);
+        assert_eq!(service.parent, Some(SPAN_ROOT));
+    }
+
+    #[test]
+    fn collector_writes_are_sorted_and_deterministic() {
+        let trace_a = TraceId::derive(1, 0);
+        let trace_b = TraceId::derive(1, 1);
+        let path = tmp("sorted.jsonl");
+        let write = |flipped: bool| {
+            let c = TraceCollector::from_spec(path.to_str().unwrap()).unwrap();
+            let mut spans = vec![
+                Span::new(&trace_b, SPAN_ROOT, None, "request", "serve", 0, 40, 10),
+                Span::new(&trace_a, SPAN_ROOT, None, "request", "serve", 0, 0, 10),
+                Span::new(&trace_a, SPAN_SERVICE, Some(SPAN_ROOT), "service", "exec", 1, 2, 8),
+            ];
+            if flipped {
+                spans.reverse();
+            }
+            c.record_all(spans);
+            c.write().unwrap();
+            std::fs::read_to_string(&path).unwrap()
+        };
+        let a = write(false);
+        let b = write(true);
+        assert_eq!(a, b, "record order must not reach the bytes");
+        let lines: Vec<&str> = a.lines().collect();
+        assert_eq!(lines.len(), 3);
+        let first = Json::parse(lines[0]).unwrap();
+        assert_eq!(first.get("trace").unwrap().as_str(), Some(trace_a.as_str()));
+    }
+
+    #[test]
+    fn chrome_export_is_one_document() {
+        let path = tmp("chrome.json");
+        let c = TraceCollector::from_spec(path.to_str().unwrap()).unwrap();
+        assert!(c.is_chrome());
+        assert!(c.is_empty());
+        let trace = TraceId::derive(3, 0);
+        c.record(Span::new(&trace, SPAN_ROOT, None, "request", "serve", 0, 0, 10));
+        assert_eq!(c.len(), 1);
+        c.write().unwrap();
+        let doc = Json::parse(std::fs::read_to_string(&path).unwrap().trim()).unwrap();
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 1);
+        for key in REQUIRED_EVENT_KEYS {
+            assert!(events[0].get(key).is_some(), "missing `{key}`");
+        }
+    }
+
+    #[test]
+    fn empty_spec_disables_tracing() {
+        assert!(TraceCollector::from_spec("").is_none());
+        let c = TraceCollector::from_spec("t.jsonl").unwrap();
+        assert!(!c.is_chrome());
+    }
+}

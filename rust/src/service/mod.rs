@@ -247,7 +247,7 @@ pub use calibrate::{Calibration, ProbePoint, StageCost};
 pub use clock::{ClockMode, WallClock};
 pub use queue::{AdmissionQueue, RejectReason};
 pub use request::{Request, RequestKind, Shape, Trace};
-pub use server::{calibrate_for, install_sigint_drain, serve, ServeOptions};
+pub use server::{calibrate_for, install_sigint_drain, kind_stage_names, serve, ServeOptions};
 pub use slo::{
     CostModel, LaneReport, LatencyStats, LatencySummary, ServeReport, SloStatus, SloWindow,
     WindowReport, DEFAULT_SLO_WINDOW,

@@ -71,8 +71,9 @@ use crate::error::{Error, Result};
 use crate::image::synth::generate;
 use crate::image::ImageF32;
 use crate::obs::{
-    FaultManager, HealthTracker, OverloadPolicy, ShedDecision, SnapshotEngine, Telemetry,
-    TickInputs, WallSnapshotter,
+    content_digest, modeled_stage_durs, request_spans, FaultManager, HealthTracker, ObsEndpoint,
+    OverloadPolicy, ShedDecision, SnapshotEngine, Telemetry, TickInputs, TraceCollector, TraceId,
+    WallSnapshotter,
 };
 use crate::scheduler::PoolStats;
 use crate::service::batcher::{Batcher, FormedBatch};
@@ -103,6 +104,21 @@ pub const SYNTH_RETHRESHOLD_PCT: u64 = 15;
 const FRONT_STAGES: &[&str] = &["pad", "gaussian", "sobel", "nms"];
 /// The stage spans a re-threshold request executes on a cache hit.
 const RETHRESHOLD_STAGES: &[&str] = &["threshold", "hysteresis"];
+/// The stage spans a full request executes (the whole pipeline).
+const FULL_STAGES: &[&str] = &["pad", "gaussian", "sobel", "nms", "threshold", "hysteresis"];
+
+/// The stage-span names `kind` executes — the skeleton a trace models
+/// per-stage durations over when none were measured (virtual drivers,
+/// execute-off runs, the cluster worker's modeled clock). Re-threshold
+/// is modeled as a cache hit, matching
+/// [`ServeOptions::service_ns_kind`].
+pub fn kind_stage_names(kind: RequestKind) -> &'static [&'static str] {
+    match kind {
+        RequestKind::Full => FULL_STAGES,
+        RequestKind::FrontOnly => FRONT_STAGES,
+        RequestKind::ReThreshold { .. } => RETHRESHOLD_STAGES,
+    }
+}
 
 /// Modeled fixed cost of one shared-cache consult (shard probe + LRU
 /// touch), charged by the virtual clock for kinds that use the cache.
@@ -175,6 +191,14 @@ pub struct ServeOptions {
     /// evaluated on the telemetry tick grid, so alerts work with or
     /// without a `--telemetry-log`.
     pub alert_log: String,
+    /// Span sink behind `--trace-log`; `None` disables tracing. Every
+    /// admitted request gets a deterministic [`crate::obs::TraceId`]
+    /// and a span tree (root / coalesce / queue / service / cache /
+    /// stages) written at the end of the run.
+    pub trace: Option<Arc<TraceCollector>>,
+    /// Live snapshot endpoint (`--obs-port`), attached by the CLI so
+    /// the run's snapshot engine publishes every line it renders.
+    pub obs_endpoint: Option<Arc<ObsEndpoint>>,
 }
 
 impl ServeOptions {
@@ -206,6 +230,8 @@ impl ServeOptions {
             overload_policy: cfg.overload_policy,
             slo_window: cfg.slo_window.max(1),
             alert_log: cfg.alert_log.clone(),
+            trace: TraceCollector::from_spec(&cfg.trace_log),
+            obs_endpoint: None,
         }
     }
 
@@ -527,18 +553,22 @@ impl LaneStats {
         img: &ImageF32,
         tel: Option<&Telemetry>,
         measured: bool,
+        stages: &mut Vec<(String, u64)>,
     ) -> Result<ImageF32> {
         let plan = det.plan().stop_after(StageKind::Nms);
         let mut out = det.run_plan(&plan, Some(img), det.params())?;
         self.note_stage_runs(&out.records, tel, measured);
+        push_stages(stages, &out.records, measured);
         out.take_suppressed()
             .ok_or_else(|| Error::Scheduler("front-only plan yielded no suppressed map".into()))
     }
 
     /// Run the real pipeline over the batch per its request kind
-    /// (no-op without a detector). Partial kinds go through the shared
-    /// artifact cache under content-addressed keys; `opts` supplies the
-    /// calibrated recompute estimate the admission policy weighs.
+    /// (no records without a detector). Partial kinds go through the
+    /// shared artifact cache under content-addressed keys; `opts`
+    /// supplies the calibrated recompute estimate the admission policy
+    /// weighs. Returns one [`ExecRecord`] per request, batch order —
+    /// the trace evidence [`record_batch_spans`] turns into spans.
     fn execute_batch(
         &mut self,
         det: Option<&Detector>,
@@ -547,23 +577,30 @@ impl LaneStats {
         batch: &FormedBatch,
         tel: Option<&Telemetry>,
         measured: bool,
-    ) -> Result<()> {
+    ) -> Result<Vec<ExecRecord>> {
         let Some(det) = det else {
-            return Ok(());
+            return Ok(Vec::new());
         };
+        let mut recs = Vec::with_capacity(batch.requests.len());
         for req in &batch.requests {
-            match req.kind {
+            let mut stages = Vec::new();
+            let consult = match req.kind {
                 RequestKind::Full => {
                     let img = generate(req.scene, req.width, req.height);
                     let out = det.detect_full(&img, det.params())?;
                     self.note_stage_runs(&out.records, tel, measured);
+                    push_stages(&mut stages, &out.records, measured);
                     self.edge_pixels += out.edges.count_edges() as u64;
+                    None
                 }
                 RequestKind::FrontOnly => {
                     let img = generate(req.scene, req.width, req.height);
-                    let nm = self.run_front(det, &img, tel, measured)?;
+                    let nm = self.run_front(det, &img, tel, measured, &mut stages)?;
                     if cache.enabled() {
                         offer_front(cache, opts, &img, nm);
+                        Some("offer")
+                    } else {
+                        Some("disabled")
                     }
                 }
                 RequestKind::ReThreshold { lo, hi } => {
@@ -571,16 +608,16 @@ impl LaneStats {
                     // Content addressing needs the content: generate
                     // the scene, hash it, then consult the shared tier.
                     let img = generate(req.scene, req.width, req.height);
-                    let cached = if cache.enabled() {
+                    let (cached, outcome) = if cache.enabled() {
                         let key = ArtifactKey::suppressed(&img);
-                        match cache.get(&key, CacheTier::Serve) {
-                            Some(Artifact::Suppressed(nm)) => Some(nm),
+                        match cache.consult(&key, CacheTier::Serve) {
+                            (Some(Artifact::Suppressed(nm)), out) => (Some(nm), out),
                             // Key spans pin the artifact kind; anything
                             // else recomputes defensively.
-                            Some(_) | None => None,
+                            (_, out) => (None, out),
                         }
                     } else {
-                        None
+                        (None, "disabled")
                     };
                     let nm = match cached {
                         Some(nm) => nm,
@@ -588,7 +625,7 @@ impl LaneStats {
                             // Miss: compute the front once, offer it,
                             // then resume — the next re-threshold of
                             // this content hits, on any lane.
-                            let nm = self.run_front(det, &img, tel, measured)?;
+                            let nm = self.run_front(det, &img, tel, measured, &mut stages)?;
                             if cache.enabled() {
                                 offer_front(cache, opts, &img, nm.clone());
                             }
@@ -598,14 +635,101 @@ impl LaneStats {
                     let plan = det.plan().from_suppressed(nm);
                     let out = det.run_plan(&plan, None, &params)?;
                     self.note_stage_runs(&out.records, tel, measured);
+                    push_stages(&mut stages, &out.records, measured);
                     let edges = out.edges().ok_or_else(|| {
                         Error::Scheduler("re-threshold plan yielded no edges".into())
                     })?;
                     self.edge_pixels += edges.count_edges() as u64;
+                    Some(outcome)
                 }
-            }
+            };
+            recs.push(ExecRecord { cache: consult, stages });
         }
-        Ok(())
+        Ok(recs)
+    }
+}
+
+/// One request's execution evidence for tracing: the cache-consult
+/// outcome (`None` for kinds that never probe the tier) and the
+/// executed stage spans with measured durations (zeros under virtual
+/// drivers, which model durations instead).
+#[derive(Debug, Default)]
+struct ExecRecord {
+    cache: Option<&'static str>,
+    stages: Vec<(String, u64)>,
+}
+
+/// Append `(span name, duration)` entries for freshly executed stage
+/// `records`; durations are kept only when `measured` (wall drivers) —
+/// virtual traces model them from the service span instead.
+fn push_stages(
+    stages: &mut Vec<(String, u64)>,
+    records: &[crate::canny::StageRecord],
+    measured: bool,
+) {
+    for r in records {
+        stages.push((r.span_name().to_string(), if measured { r.wall_ns } else { 0 }));
+    }
+}
+
+/// Record the span tree of every request in one completed batch into
+/// the run's trace sink (no-op when `--trace-log` is off). Wall
+/// drivers with real execution pass `measured = true` and keep the
+/// stage walls; otherwise stage durations are modeled as an even split
+/// of the service span minus the cache consult, so virtual replays
+/// trace byte-identically.
+#[allow(clippy::too_many_arguments)]
+fn record_batch_spans(
+    opts: &ServeOptions,
+    lane: usize,
+    batch: &FormedBatch,
+    dispatch_ns: u64,
+    complete_ns: u64,
+    recs: &[ExecRecord],
+    measured: bool,
+) {
+    let Some(trace) = &opts.trace else {
+        return;
+    };
+    for (i, req) in batch.requests.iter().enumerate() {
+        let digest = content_digest(&req.scene.spec(), req.width, req.height);
+        let id = TraceId::derive(digest, req.id);
+        let rec = recs.get(i);
+        let cache = match rec.map(|r| r.cache) {
+            Some(Some(outcome)) => Some((outcome, opts.cache_lookup_ns(req.pixels()))),
+            Some(None) => None,
+            // Execute-off runs model the consult the real path would
+            // have done (the virtual clock charges it either way).
+            None if req.kind.uses_artifact_cache() => {
+                Some(("modeled", opts.cache_lookup_ns(req.pixels())))
+            }
+            None => None,
+        };
+        let executed = rec.filter(|r| !r.stages.is_empty());
+        let stages: Vec<(String, u64)> = match executed {
+            Some(r) if measured => r.stages.clone(),
+            other => {
+                let names: Vec<&str> = match other {
+                    Some(r) => r.stages.iter().map(|(n, _)| n.as_str()).collect(),
+                    None => kind_stage_names(batch.kind).to_vec(),
+                };
+                let span = complete_ns
+                    .saturating_sub(dispatch_ns)
+                    .saturating_sub(cache.map_or(0, |(_, d)| d));
+                let durs = modeled_stage_durs(span, names.len());
+                names.iter().map(|n| n.to_string()).zip(durs).collect()
+            }
+        };
+        trace.record_all(request_spans(
+            &id,
+            lane as u64 + 1,
+            req.arrival_ns,
+            batch.formed_ns,
+            dispatch_ns,
+            complete_ns,
+            cache,
+            &stages,
+        ));
     }
 }
 
@@ -845,7 +969,8 @@ fn serve_virtual(label: &str, trace: &Trace, opts: &ServeOptions) -> Result<Serv
         opts.telemetry_interval_ns,
         opts.overload_policy.name(),
     )?
-    .with_alerts(HealthTracker::from_spec(&opts.alert_log)?);
+    .with_alerts(HealthTracker::from_spec(&opts.alert_log)?)
+    .with_endpoint(opts.obs_endpoint.clone());
     let mut completions: BinaryHeap<Reverse<Completion>> = BinaryHeap::new();
 
     let mut intake = Intake::new(opts);
@@ -882,7 +1007,7 @@ fn serve_virtual(label: &str, trace: &Trace, opts: &ServeOptions) -> Result<Serv
             let lane = &mut lanes[idx];
             lane.busy_until_ns = complete_ns;
             lane.stats.record_batch(&batch, now, complete_ns);
-            lane.stats.execute_batch(
+            let recs = lane.stats.execute_batch(
                 lane.det.as_ref(),
                 &cache,
                 opts,
@@ -890,6 +1015,7 @@ fn serve_virtual(label: &str, trace: &Trace, opts: &ServeOptions) -> Result<Serv
                 Some(&telemetry),
                 false,
             )?;
+            record_batch_spans(opts, idx, &batch, now, complete_ns, &recs, false);
         }
 
         // Next event: arrival, batch-window deadline, or (if work is
@@ -958,7 +1084,7 @@ fn serve_virtual(label: &str, trace: &Trace, opts: &ServeOptions) -> Result<Serv
         fault.active(),
     )?;
     debug_assert!(completions.is_empty());
-    if snap.enabled() || snap.alerts_active() {
+    if snap.enabled() || snap.alerts_active() || snap.endpoint_active() {
         snap.emit(TickInputs {
             t_ns: end_ns,
             telemetry: &telemetry,
@@ -970,6 +1096,9 @@ fn serve_virtual(label: &str, trace: &Trace, opts: &ServeOptions) -> Result<Serv
         })?;
     }
     snap.close()?;
+    if let Some(trace) = &opts.trace {
+        trace.write()?;
+    }
 
     let stats = lanes.into_iter().map(|l| l.stats).collect();
     let totals = RunTotals {
@@ -1038,8 +1167,8 @@ fn wall_lane(
         tl.batches.inc();
         tl.inflight.add(n);
         tl.heartbeat_ns.raise(dispatch_ns);
-        if opts.execute {
-            stats.execute_batch(det.as_ref(), cache, opts, &batch, Some(telemetry), true)?;
+        let recs = if opts.execute {
+            stats.execute_batch(det.as_ref(), cache, opts, &batch, Some(telemetry), true)?
         } else {
             // Scheduling-only runs still occupy the lane for the
             // modeled service time so wall studies work without
@@ -1047,9 +1176,11 @@ fn wall_lane(
             std::thread::sleep(Duration::from_nanos(
                 opts.service_ns_batch(batch.kind, batch.pixels(), batch.len()),
             ));
-        }
+            Vec::new()
+        };
         let complete_ns = clock.now_ns();
         stats.record_batch(&batch, dispatch_ns, complete_ns);
+        record_batch_spans(opts, lane_id, &batch, dispatch_ns, complete_ns, &recs, opts.execute);
         tl.busy_ns.add(complete_ns.saturating_sub(dispatch_ns));
         tl.completed.add(n);
         tl.inflight.sub(n);
@@ -1097,7 +1228,8 @@ fn serve_wall(label: &str, trace: &Trace, opts: &ServeOptions) -> Result<ServeRe
         opts.telemetry_interval_ns,
         opts.overload_policy.name(),
     )?
-    .with_alerts(HealthTracker::from_spec(&opts.alert_log)?);
+    .with_alerts(HealthTracker::from_spec(&opts.alert_log)?)
+    .with_endpoint(opts.obs_endpoint.clone());
     let clock = WallClock::start();
     let snapshotter = {
         let telemetry = Arc::clone(&telemetry);
@@ -1242,6 +1374,9 @@ fn serve_wall(label: &str, trace: &Trace, opts: &ServeOptions) -> Result<ServeRe
     snap.close()?;
     if let Some(e) = first_err {
         return Err(e);
+    }
+    if let Some(trace) = &opts.trace {
+        trace.write()?;
     }
     // Take the window report before the intake lock: never hold two
     // serve-side mutexes at once (the lock-discipline lint enforces it).

@@ -20,7 +20,7 @@ use crate::config::RunConfig;
 use crate::coordinator::Detector;
 use crate::error::{Error, Result};
 use crate::image::EdgeMap;
-use crate::obs::{SnapshotEngine, Telemetry, WallSnapshotter};
+use crate::obs::{ObsEndpoint, SnapshotEngine, Telemetry, WallSnapshotter};
 use crate::patterns::pipeline::{pipeline_stages, DynStage};
 use crate::service::{LatencyStats, SloWindow, DEFAULT_SLO_WINDOW};
 use crate::stream::delta::{DeltaGate, DeltaMode};
@@ -108,6 +108,11 @@ pub struct StreamOptions {
     /// Rolling frame-SLO window size (`--slo-window`): the last N
     /// emitted frames' latencies vs. the frame budget.
     pub slo_window: usize,
+    /// Live snapshot endpoint (`--obs-port`): every telemetry line the
+    /// stream run builds is published as the endpoint's current line.
+    /// `None` (the default — the CLI attaches it) leaves the tier
+    /// unobserved over TCP.
+    pub obs_endpoint: Option<Arc<ObsEndpoint>>,
 }
 
 impl StreamOptions {
@@ -134,6 +139,7 @@ impl StreamOptions {
             },
             telemetry_interval_ns: (cfg.telemetry_interval_ms.max(0.0) * 1e6) as u64,
             slo_window: cfg.slo_window.max(1),
+            obs_endpoint: None,
         }
     }
 }
@@ -151,6 +157,7 @@ impl Default for StreamOptions {
             telemetry_log: None,
             telemetry_interval_ns: 100_000_000,
             slo_window: DEFAULT_SLO_WINDOW,
+            obs_endpoint: None,
         }
     }
 }
@@ -250,7 +257,8 @@ pub fn run_stream(
         opts.telemetry_log.as_deref(),
         opts.telemetry_interval_ns,
         opts.drop_policy.name(),
-    )?;
+    )?
+    .with_endpoint(opts.obs_endpoint.clone());
     // Late frames can only be shed (dropped/degraded) under a real-time
     // budget with a policy that acts on them.
     let shedding_possible = budget > 0 && opts.drop_policy != DropPolicy::Keep;

@@ -74,12 +74,12 @@ fn mixed_trace(contents: u64) -> Trace {
 /// The single-process reference: the same requests through one
 /// in-process `WorkerCore` (detector + cache), no sockets involved.
 fn single_process_answers(cfg: &RunConfig, trace: &Trace) -> Vec<(u64, u64, String)> {
-    let mut core = WorkerCore::from_config(cfg).unwrap();
+    let mut core = WorkerCore::from_config(cfg, 0).unwrap();
     trace
         .requests
         .iter()
         .map(|req| {
-            let a = core.execute(req).unwrap();
+            let a = core.execute(req, None).unwrap();
             (req.id, a.edge_pixels, digest_string(&a.digest))
         })
         .collect()

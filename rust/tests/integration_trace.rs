@@ -1,0 +1,244 @@
+//! Integration: the distributed-tracing and cluster-telemetry plane.
+//!
+//! Covers the PR's observability guarantees end to end: virtual-clock
+//! serve replays write byte-identical trace logs (span JSONL and
+//! Chrome trace-event JSON, both matching their documented schemas),
+//! and a real 2-worker cluster stitches worker service subtrees under
+//! the front door's spans while merging per-worker telemetry streams
+//! into one deterministic cluster-wide JSONL.
+
+use std::path::PathBuf;
+
+use canny_par::cluster::{run_cluster, ClusterOptions, WORKER_EXE_ENV};
+use canny_par::config::RunConfig;
+use canny_par::image::synth::Scene;
+use canny_par::obs::{REQUIRED_EVENT_KEYS, REQUIRED_SPAN_KEYS};
+use canny_par::service::{serve, Request, RequestKind, ServeOptions, Trace};
+use canny_par::util::json::Json;
+
+/// Point the supervisor at the freshly built `cannyd` binary (the test
+/// process is the libtest harness, not `cannyd`).
+fn use_test_binary() {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| std::env::set_var(WORKER_EXE_ENV, env!("CARGO_BIN_EXE_cannyd")));
+}
+
+fn tmp_path(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("canny_trace_itests");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("{}_{name}", std::process::id()))
+}
+
+/// A mixed-kind trace: full detections plus front-only warms followed
+/// by re-threshold sweeps, so traces carry every cache outcome.
+fn mixed_trace(contents: u64) -> Trace {
+    let mut requests = Vec::new();
+    let mut id = 0u64;
+    let mut push = |scene: Scene, kind: RequestKind| {
+        requests.push(Request {
+            id,
+            arrival_ns: id * 50_000,
+            scene,
+            width: 96,
+            height: 64,
+            kind,
+        });
+        id += 1;
+    };
+    for seed in 0..contents {
+        push(Scene::Shapes { seed }, RequestKind::Full);
+        push(Scene::Shapes { seed }, RequestKind::FrontOnly);
+        push(Scene::Shapes { seed }, RequestKind::ReThreshold { lo: 0.03, hi: 0.25 });
+    }
+    Trace { requests }
+}
+
+fn serve_cfg(trace_log: &str) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.set("engine", "serial").unwrap();
+    cfg.set("workers", "1").unwrap();
+    cfg.set("lanes", "2").unwrap();
+    cfg.set("cache-mb", "8").unwrap();
+    cfg.set("trace-log", trace_log).unwrap();
+    cfg.validate().unwrap();
+    cfg
+}
+
+fn run_serve_with_trace(path: &PathBuf) {
+    let cfg = serve_cfg(&path.display().to_string());
+    let opts = ServeOptions::from_config(&cfg);
+    serve("itest-trace", &mixed_trace(4), &opts).unwrap();
+}
+
+#[test]
+fn virtual_serve_replays_write_byte_identical_span_jsonl() {
+    let a = tmp_path("serve_a.jsonl");
+    let b = tmp_path("serve_b.jsonl");
+    run_serve_with_trace(&a);
+    run_serve_with_trace(&b);
+    let bytes_a = std::fs::read(&a).unwrap();
+    let bytes_b = std::fs::read(&b).unwrap();
+    assert!(!bytes_a.is_empty(), "trace log must not be empty");
+    assert_eq!(bytes_a, bytes_b, "virtual-clock replays must be byte-identical");
+
+    // Every line is a span object with exactly the documented keys,
+    // and every request tree stitches: root -> coalesce/queue on the
+    // intake lane, service (+ stages) under the root on a serve lane.
+    let text = String::from_utf8(bytes_a).unwrap();
+    let spans: Vec<Json> = text.lines().map(|l| Json::parse(l).unwrap()).collect();
+    for span in &spans {
+        for key in REQUIRED_SPAN_KEYS {
+            assert!(span.get(key).is_some(), "span line is missing `{key}`");
+        }
+    }
+    let trace_of = |s: &Json| s.get("trace").unwrap().as_str().unwrap().to_string();
+    let id_of = |s: &Json| s.get("id").unwrap().as_f64().unwrap() as u64;
+    let roots: Vec<&Json> = spans.iter().filter(|s| id_of(s) == 1).collect();
+    assert_eq!(roots.len(), 12, "one root span per request");
+    for root in roots {
+        let t = trace_of(root);
+        let tree: Vec<&Json> = spans.iter().filter(|s| trace_of(s) == t).collect();
+        assert!(tree.iter().any(|s| id_of(s) == 4), "trace {t} has no service span");
+        assert!(tree.iter().any(|s| id_of(s) >= 6), "trace {t} has no stage spans");
+    }
+    // The cache consult outcomes show up as span attributes.
+    let outcomes: Vec<String> = spans
+        .iter()
+        .filter_map(|s| s.get("attrs")?.get("outcome"))
+        .map(|o| o.as_str().unwrap().to_string())
+        .collect();
+    assert!(outcomes.iter().any(|o| o == "offer"), "front-only warms must trace as offers");
+    std::fs::remove_file(&a).ok();
+    std::fs::remove_file(&b).ok();
+}
+
+#[test]
+fn chrome_trace_export_has_the_documented_event_schema() {
+    let path = tmp_path("serve_chrome.json");
+    run_serve_with_trace(&path);
+    let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    let events = match doc.get("traceEvents") {
+        Some(Json::Arr(a)) => a,
+        other => panic!("traceEvents must be an array, got {other:?}"),
+    };
+    assert!(!events.is_empty());
+    for ev in events {
+        for key in REQUIRED_EVENT_KEYS {
+            assert!(ev.get(key).is_some(), "chrome event is missing `{key}`");
+        }
+        assert!(matches!(ev.get("ph"), Some(Json::Str(p)) if p == "X"));
+        assert!(ev.get("args").and_then(|a| a.get("trace")).is_some());
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+fn cluster_cfg(trace_log: &PathBuf, telemetry_log: &PathBuf) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.set("engine", "serial").unwrap();
+    cfg.set("workers", "2").unwrap();
+    cfg.set("cache-mb", "8").unwrap();
+    cfg.set("trace-log", &trace_log.display().to_string()).unwrap();
+    cfg.set("telemetry-log", &telemetry_log.display().to_string()).unwrap();
+    // Frequent worker frames on the modeled clock, so the merged
+    // stream carries periodic lines, not just the hello/report pair.
+    cfg.set("worker-telemetry-ms", "0.2").unwrap();
+    cfg.validate().unwrap();
+    cfg
+}
+
+fn run_cluster_with_obs(trace_log: &PathBuf, telemetry_log: &PathBuf) {
+    let cfg = cluster_cfg(trace_log, telemetry_log);
+    let opts = ClusterOptions::from_config(&cfg);
+    let out = run_cluster("itest-cluster-trace", &mixed_trace(4), &opts).unwrap();
+    assert_eq!(out.report.completed, 12);
+}
+
+#[test]
+fn cluster_traces_stitch_and_replay_byte_identical() {
+    use_test_binary();
+    let (ta, sa) = (tmp_path("cluster_a.jsonl"), tmp_path("cluster_a_tel.jsonl"));
+    let (tb, sb) = (tmp_path("cluster_b.jsonl"), tmp_path("cluster_b_tel.jsonl"));
+    run_cluster_with_obs(&ta, &sa);
+    run_cluster_with_obs(&tb, &sb);
+    let trace_a = std::fs::read(&ta).unwrap();
+    assert!(!trace_a.is_empty());
+    assert_eq!(trace_a, std::fs::read(&tb).unwrap(), "cluster trace replays must be identical");
+    let tel_a = std::fs::read(&sa).unwrap();
+    assert!(!tel_a.is_empty());
+    assert_eq!(tel_a, std::fs::read(&sb).unwrap(), "merged telemetry replays must be identical");
+
+    // Every request's tree stitches across the process boundary: the
+    // front door's root (id 1) and wire span (id 3), then the worker's
+    // service subtree (id 4, parent 3) with stage spans, all under one
+    // trace id.
+    let text = String::from_utf8(trace_a).unwrap();
+    let spans: Vec<Json> = text.lines().map(|l| Json::parse(l).unwrap()).collect();
+    let trace_of = |s: &Json| s.get("trace").unwrap().as_str().unwrap().to_string();
+    let id_of = |s: &Json| s.get("id").unwrap().as_f64().unwrap() as u64;
+    let roots: Vec<&Json> = spans.iter().filter(|s| id_of(s) == 1).collect();
+    assert_eq!(roots.len(), 12, "one root span per routed request");
+    for root in roots {
+        let t = trace_of(root);
+        assert!(matches!(root.get("cat"), Some(Json::Str(c)) if c == "cluster"));
+        let tree: Vec<&Json> = spans.iter().filter(|s| trace_of(s) == t).collect();
+        let wire = tree.iter().find(|s| id_of(s) == 3).expect("wire span");
+        let service = tree.iter().find(|s| id_of(s) == 4).expect("worker service span");
+        assert_eq!(
+            service.get("parent").unwrap().as_f64().unwrap() as u64,
+            3,
+            "the worker subtree must stitch under the wire span"
+        );
+        assert_eq!(
+            service.get("tid").unwrap().as_f64(),
+            wire.get("tid").unwrap().as_f64(),
+            "wire and service render on the owning slot's lane"
+        );
+        assert!(tree.iter().any(|s| id_of(s) >= 6), "trace {t} has no worker stage spans");
+    }
+    for f in [&ta, &sa, &tb, &sb] {
+        std::fs::remove_file(f).ok();
+    }
+}
+
+#[test]
+fn merged_cluster_telemetry_sums_the_worker_sections() {
+    use_test_binary();
+    let (trace_log, tel_log) = (tmp_path("merge.jsonl"), tmp_path("merge_tel.jsonl"));
+    run_cluster_with_obs(&trace_log, &tel_log);
+    let text = std::fs::read_to_string(&tel_log).unwrap();
+    let lines: Vec<Json> = text.lines().map(|l| Json::parse(l).unwrap()).collect();
+    assert!(lines.len() >= 3, "expected hello + periodic + final lines, got {}", lines.len());
+    // The merged stream's own seq is dense from 1.
+    for (i, line) in lines.iter().enumerate() {
+        assert_eq!(line.get("seq").unwrap().as_f64().unwrap() as usize, i + 1);
+        assert!(matches!(line.get("tier"), Some(Json::Str(t)) if t == "cluster"));
+    }
+    let last = lines.last().unwrap();
+    let workers = match last.get("workers") {
+        Some(Json::Arr(a)) => a,
+        other => panic!("merged line must carry a workers array, got {other:?}"),
+    };
+    assert_eq!(workers.len(), 2, "both workers report in the final merged line");
+    let admitted = |j: &Json| {
+        j.get("queue").unwrap().get("admitted").unwrap().as_f64().unwrap() as u64
+    };
+    let lane_total: u64 = workers
+        .iter()
+        .map(|w| w.get("lanes").unwrap().as_arr().unwrap().len() as u64)
+        .sum();
+    assert_eq!(lane_total, 2, "one lane per worker, concatenated totals");
+    assert_eq!(
+        admitted(last),
+        workers.iter().map(admitted).sum::<u64>(),
+        "merged counters must equal the sum of the per-worker sections"
+    );
+    assert_eq!(admitted(last), 12, "every routed request is admitted by some worker");
+    for w in workers {
+        let seq = w.get("seq").unwrap().as_f64().unwrap() as u64;
+        assert!(seq >= 1, "worker sections must carry a nonzero persistent-engine seq");
+        assert!(matches!(w.get("tier"), Some(Json::Str(t)) if t == "worker"));
+        assert!(w.get("worker").is_some());
+    }
+    std::fs::remove_file(&trace_log).ok();
+    std::fs::remove_file(&tel_log).ok();
+}
