@@ -40,7 +40,8 @@
 //! {"frame": "request", "id": 7, "arrival_ns": 1250000, "width": 128,
 //!  "height": 96, "scene": "shapes:11", "kind": "re-threshold",
 //!  "lo": 0.03, "hi": 0.21,
-//!  "trace": "9f8a3c001122334400000007", "parent": 3}
+//!  "trace": "9f8a3c001122334400000007", "parent": 3,
+//!  "sample": "slow:5000000"}
 //! {"frame": "response", "id": 7, "edge_pixels": 1834,
 //!  "digest": "9f8a3c00112233445566778899aabbcc", "t_ns": 2000000,
 //!  "spans": [{"...": "span objects, schema in obs/mod.rs"}]}
@@ -58,6 +59,12 @@
 //! (request) and `t_ns`/`spans` (response) carry the distributed-trace
 //! context when `--trace-log` is active: the worker's service subtree
 //! stitches under the front door's wire span for that request.
+//! `sample` rides with the trace context and is the front door's
+//! tail-sampling policy in resolved wire form (`all`, `slow:<ns>`,
+//! `errors:<slo_ns>`, `head:<n>` — see [`crate::obs::TraceSampler`]):
+//! a worker that can predict the front door's drop verdict skips
+//! building the subtree, and notes histogram exemplars only for
+//! traces the front door is guaranteed to keep.
 //! `telemetry` frames stream each worker's periodic snapshot lines to
 //! the front door, which merges them into the cluster-wide telemetry
 //! stream (schema in `obs/mod.rs`).

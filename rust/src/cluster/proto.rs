@@ -96,8 +96,12 @@ pub fn parse_hello(frame: &Json) -> Result<usize> {
 /// `request` — one serve request, content shipped as a scene spec.
 /// `trace` is the front door's trace context when tracing is enabled:
 /// the request's trace id plus the parent span id the worker's
-/// service subtree stitches under.
-pub fn request_frame(req: &Request, trace: Option<(&str, u64)>) -> Json {
+/// service subtree stitches under. `sample` is the front door's
+/// tail-sampling policy in resolved wire form
+/// ([`crate::obs::sample::TraceSampler::to_wire`]) — it rides with the
+/// trace context so the worker can skip building span subtrees the
+/// front door is guaranteed to discard.
+pub fn request_frame(req: &Request, trace: Option<(&str, u64)>, sample: Option<&str>) -> Json {
     let mut m = BTreeMap::new();
     m.insert("frame".into(), Json::Str("request".into()));
     m.insert("id".into(), Json::Num(req.id as f64));
@@ -114,6 +118,9 @@ pub fn request_frame(req: &Request, trace: Option<(&str, u64)>) -> Json {
         m.insert("trace".into(), Json::Str(id.into()));
         m.insert("parent".into(), Json::Num(parent as f64));
     }
+    if let Some(spec) = sample {
+        m.insert("sample".into(), Json::Str(spec.into()));
+    }
     Json::Obj(m)
 }
 
@@ -123,6 +130,12 @@ pub fn parse_trace(frame: &Json) -> Option<(String, u64)> {
     let id = frame.get("trace")?.as_str()?.to_string();
     let parent = frame.get("parent")?.as_f64()? as u64;
     Some((id, parent))
+}
+
+/// A `request` frame's tail-sampling wire spec, if the front door
+/// attached one.
+pub fn parse_sample(frame: &Json) -> Option<String> {
+    Some(frame.get("sample")?.as_str()?.to_string())
 }
 
 /// Decode a `request` frame back into a [`Request`].
@@ -330,7 +343,7 @@ mod tests {
                 height: 96,
                 kind,
             };
-            let back = parse_request(&round_trip(&request_frame(&req, None))).unwrap();
+            let back = parse_request(&round_trip(&request_frame(&req, None, None))).unwrap();
             assert_eq!(back.id, req.id);
             assert_eq!(back.arrival_ns, req.arrival_ns);
             assert_eq!(back.scene, req.scene);
@@ -372,10 +385,16 @@ mod tests {
             height: 48,
             kind: RequestKind::Full,
         };
-        assert_eq!(parse_trace(&request_frame(&req, None)), None);
-        let f = round_trip(&request_frame(&req, Some(("00ab00ab00ab00ab00000003", 3))));
+        assert_eq!(parse_trace(&request_frame(&req, None, None)), None);
+        assert_eq!(parse_sample(&request_frame(&req, None, None)), None);
+        let f = round_trip(&request_frame(
+            &req,
+            Some(("00ab00ab00ab00ab00000003", 3)),
+            Some("slow:2000000"),
+        ));
         assert_eq!(parse_trace(&f), Some(("00ab00ab00ab00ab00000003".to_string(), 3)));
-        // The trace keys do not disturb request decoding.
+        assert_eq!(parse_sample(&f).as_deref(), Some("slow:2000000"));
+        // The trace and sampling keys do not disturb request decoding.
         assert_eq!(parse_request(&f).unwrap().id, 3);
     }
 

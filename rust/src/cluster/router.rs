@@ -39,8 +39,8 @@ use crate::config::RunConfig;
 use crate::error::{Error, Result};
 use crate::obs::trace::SPAN_WIRE;
 use crate::obs::{
-    cluster_front_spans, content_digest, merged_line, HealthTracker, ObsEndpoint, TraceCollector,
-    TraceId,
+    cluster_front_spans, content_digest, merged_line, AnomalyMonitor, HealthTracker, ObsEndpoint,
+    TraceCollector, TraceId, TraceSampler,
 };
 use crate::service::clock::{ClockMode, WallClock};
 use crate::service::{Request, Trace};
@@ -211,11 +211,15 @@ impl TelemetryHub {
 }
 
 /// Shared observability handles for the slot threads: the optional
-/// trace collector, the live telemetry hub, and whether span times are
-/// modeled (virtual clock, byte-identical replays) or measured.
+/// trace collector, the tail-sampling policy whose front-door verdict
+/// governs each request's whole trace (front spans and the worker's
+/// shipped subtree together — never a torn trace), the live telemetry
+/// hub, and whether span times are modeled (virtual clock,
+/// byte-identical replays) or measured.
 #[derive(Debug)]
 struct ObsHandles {
     trace: Option<Arc<TraceCollector>>,
+    sampler: TraceSampler,
     hub: TelemetryHub,
     virtual_clock: bool,
 }
@@ -317,6 +321,10 @@ fn drive_slot(
         let trace_id =
             TraceId::derive(content_digest(&req.scene.spec(), req.width, req.height), req.id);
         let ctx = obs.trace.as_ref().map(|_| (trace_id.as_str(), SPAN_WIRE));
+        // The sampling policy rides the wire with the trace context so
+        // the worker can pre-judge span shipping; the wire form carries
+        // resolved-ns thresholds, never raw flag text.
+        let wire_sample = ctx.map(|_| obs.sampler.to_wire());
         loop {
             attempts += 1;
             if attempts > MAX_ATTEMPTS {
@@ -326,7 +334,9 @@ fn drive_slot(
                 )));
             }
             let sent_ns = clock.now_ns();
-            let died = match write_frame(&mut link.stream, &request_frame(req, ctx)) {
+            let died =
+                match write_frame(&mut link.stream, &request_frame(req, ctx, wire_sample.as_deref()))
+                {
                 Err(_) => true,
                 Ok(()) => {
                     match read_data_frame(&mut link.stream, &mut link.child, &mut telemetry, &obs)?
@@ -350,8 +360,17 @@ fn drive_slot(
                                 } else {
                                     (sent_ns, clock.now_ns())
                                 };
-                                trace.record_all(cluster_front_spans(&trace_id, slot, t0, t1));
-                                trace.record_all(resp.spans);
+                                // The front door owns the tail-sampling
+                                // verdict: a dropped request loses its
+                                // front spans and the worker subtree
+                                // together (a worker that shipped spans
+                                // conservatively is overridden here).
+                                if obs.sampler.keep(t1.saturating_sub(t0), req.id) {
+                                    trace.record_all(cluster_front_spans(
+                                        &trace_id, slot, t0, t1,
+                                    ));
+                                    trace.record_all(resp.spans);
+                                }
                             }
                             records.push(ResponseRecord {
                                 id: resp.id,
@@ -399,8 +418,13 @@ pub fn run_cluster(label: &str, trace: &Trace, opts: &ClusterOptions) -> Result<
         // probe sees the cluster schema, not a worker's raw line.
         e.publish(&merged_line(&BTreeMap::new(), 0).dump());
     }
+    let slo_p99_ns = (opts.cfg.slo_p99_ms.max(0.0) * 1e6) as u64;
     let obs = Arc::new(ObsHandles {
         trace: TraceCollector::from_spec(&opts.cfg.trace_log),
+        // `RunConfig::validate` rejects malformed specs; the
+        // keep-everything fallback only covers unvalidated configs.
+        sampler: TraceSampler::from_spec(&opts.cfg.trace_sample, slo_p99_ns)
+            .unwrap_or_else(|_| TraceSampler::all()),
         hub: TelemetryHub { endpoint, latest: Mutex::new((BTreeMap::new(), 0)) },
         virtual_clock: opts.cfg.clock == ClockMode::Virtual,
     });
@@ -439,18 +463,41 @@ pub fn run_cluster(label: &str, trace: &Trace, opts: &ClusterOptions) -> Result<
     // seq (each worker's frames arrive in seq order, so ties on a
     // modeled clock cannot reorder within a worker). Under the virtual
     // clock two runs of the same trace produce a byte-identical file.
-    if !opts.cfg.telemetry_log.is_empty() {
+    // The anomaly monitor (`--anomaly-sigma`) consumes the same merged
+    // stream in the same order, appending its alerts to the
+    // supervisor's sink — so cluster-level anomaly alerts are exactly
+    // as deterministic as the merged file.
+    let mut monitor = AnomalyMonitor::from_sigma(opts.cfg.anomaly_sigma);
+    let mut anomaly_alerts = 0u64;
+    if !opts.cfg.telemetry_log.is_empty() || monitor.is_some() {
         let mut frames: Vec<&(usize, Json)> =
             outcomes.iter().flat_map(|o| o.telemetry.iter()).collect();
         frames.sort_by_key(|(slot, line)| (line_u64(line, "t_ns"), *slot, line_u64(line, "seq")));
+        let mut anomaly_tracker = match monitor.is_some() {
+            true => Some(HealthTracker::from_spec_append(&opts.alert_log)?),
+            false => None,
+        };
         let mut latest: BTreeMap<usize, Json> = BTreeMap::new();
         let mut out = String::new();
         for (seq, (slot, line)) in frames.iter().enumerate() {
             latest.insert(*slot, line.clone());
-            out.push_str(&merged_line(&latest, seq as u64 + 1).dump());
-            out.push('\n');
+            let merged = merged_line(&latest, seq as u64 + 1);
+            if let (Some(mon), Some(tracker)) = (monitor.as_mut(), anomaly_tracker.as_mut()) {
+                for alert in mon.observe_line(&merged) {
+                    tracker.raise(alert.line());
+                }
+            }
+            if !opts.cfg.telemetry_log.is_empty() {
+                out.push_str(&merged.dump());
+                out.push('\n');
+            }
         }
-        std::fs::write(Path::new(&opts.cfg.telemetry_log), out)?;
+        if let Some(tracker) = &anomaly_tracker {
+            anomaly_alerts = tracker.emitted();
+        }
+        if !opts.cfg.telemetry_log.is_empty() {
+            std::fs::write(Path::new(&opts.cfg.telemetry_log), out)?;
+        }
     }
     if let Some(trace_log) = &obs.trace {
         trace_log.write()?;
@@ -472,7 +519,7 @@ pub fn run_cluster(label: &str, trace: &Trace, opts: &ClusterOptions) -> Result<
         completed: responses.len() as u64,
         requeued: outcomes.iter().map(|o| o.requeued).sum(),
         restarts: sup.restarts(),
-        alerts: sup.alerts_emitted(),
+        alerts: sup.alerts_emitted() + anomaly_alerts,
         makespan_ns: outcomes.iter().map(|o| o.finished_ns).max().unwrap_or(0),
         latencies_ns,
         per_worker: outcomes.iter().map(|o| o.body.clone()).collect(),

@@ -44,8 +44,8 @@ use std::net::TcpStream;
 use crate::cache::{ArtifactCache, ArtifactKey, CacheConfig, CacheTier};
 use crate::canny::{Artifact, CannyParams, StageKind, StageRecord};
 use crate::cluster::proto::{
-    digest_string, frame_kind, hello_frame, parse_request, parse_trace, pong_frame, read_frame,
-    response_frame, telemetry_frame, worker_report_frame, write_frame,
+    digest_string, frame_kind, hello_frame, parse_request, parse_sample, parse_trace, pong_frame,
+    read_frame, response_frame, telemetry_frame, worker_report_frame, write_frame,
 };
 use crate::cluster::report::WorkerReport;
 use crate::config::RunConfig;
@@ -54,6 +54,7 @@ use crate::error::{Error, Result};
 use crate::image::synth::generate;
 use crate::obs::{
     modeled_stage_durs, service_spans, SnapshotEngine, Span, Telemetry, TickInputs, TraceId,
+    TraceSampler,
 };
 use crate::service::clock::{ClockMode, WallClock};
 use crate::service::{Request, RequestKind, ServeOptions};
@@ -167,8 +168,18 @@ impl WorkerCore {
     /// partial kinds), and fold the totals into telemetry. With trace
     /// context `(trace_id, parent_span_id)` from the request frame, the
     /// answer carries the service subtree to stitch under the front
-    /// door's wire span.
-    pub fn execute(&mut self, req: &Request, trace: Option<(&str, u64)>) -> Result<WorkerAnswer> {
+    /// door's wire span. `sampler` is the frame's tail-sampling policy
+    /// ([`crate::cluster::proto::parse_sample`], decoded by
+    /// [`TraceSampler::from_wire`]): a definite drop verdict skips
+    /// building the subtree, a definite keep also pins this request as
+    /// its latency bucket's exemplar, and an undecidable verdict ships
+    /// the subtree conservatively for the front door to prune.
+    pub fn execute(
+        &mut self,
+        req: &Request,
+        trace: Option<(&str, u64)>,
+        sampler: Option<&TraceSampler>,
+    ) -> Result<WorkerAnswer> {
         let measured = !self.virtual_clock;
         let t0 = if self.virtual_clock {
             self.vclock.max(req.arrival_ns)
@@ -257,8 +268,22 @@ impl WorkerCore {
         self.served += 1;
         self.edge_pixels += edge_pixels;
         *self.kinds.entry(req.kind.name().to_string()).or_insert(0) += 1;
+        // The worker-side tail-sampling verdict: `Some(true)` only when
+        // the front door is guaranteed to reach the same keep decision
+        // (shared virtual timeline, or a latency-blind policy) — the
+        // only case where noting an exemplar is safe, since a worker
+        // histogram must never cite a trace the front door discards.
+        let verdict = match (&trace, sampler) {
+            (None, _) => Some(false),
+            (Some(_), None) => Some(true), // no policy on the wire = keep all
+            (Some(_), Some(s)) => s.remote_verdict(self.virtual_clock, latency, req.id),
+        };
+        if let (Some((id, _)), Some(true)) = (&trace, verdict) {
+            self.telemetry.latency.note_exemplar(latency, id);
+        }
         let spans = match trace {
             None => Vec::new(),
+            Some(_) if verdict == Some(false) => Vec::new(),
             Some((id, parent)) => {
                 let cache = consult.map(|o| (o, self.opts.cache_lookup_ns(req.pixels())));
                 let stage_spans: Vec<(String, u64)> = if measured {
@@ -353,7 +378,8 @@ pub fn run_worker(cfg: &RunConfig, worker: usize, port: u16) -> Result<()> {
                 }
                 let trace = parse_trace(&frame);
                 let ctx = trace.as_ref().map(|(id, parent)| (id.as_str(), *parent));
-                let ans = core.execute(&req, ctx)?;
+                let sampler = parse_sample(&frame).and_then(|s| TraceSampler::from_wire(&s));
+                let ans = core.execute(&req, ctx, sampler.as_ref())?;
                 let resp = response_frame(
                     req.id,
                     ans.edge_pixels,
@@ -420,7 +446,7 @@ mod tests {
     fn full_requests_match_the_detector_exactly() {
         let mut core = WorkerCore::from_config(&test_cfg(), 0).unwrap();
         let r = req(0, RequestKind::Full);
-        let ans = core.execute(&r, None).unwrap();
+        let ans = core.execute(&r, None, None).unwrap();
         let det = Detector::from_config(&test_cfg()).unwrap();
         let img = generate(r.scene, r.width, r.height);
         let edges = det.detect_full(&img, det.params()).unwrap().edges;
@@ -432,16 +458,18 @@ mod tests {
     #[test]
     fn rethreshold_hits_the_cache_after_a_front_warm() {
         let mut core = WorkerCore::from_config(&test_cfg(), 0).unwrap();
-        core.execute(&req(0, RequestKind::FrontOnly), None).unwrap();
-        let a =
-            core.execute(&req(1, RequestKind::ReThreshold { lo: 0.04, hi: 0.2 }), None).unwrap();
+        core.execute(&req(0, RequestKind::FrontOnly), None, None).unwrap();
+        let a = core
+            .execute(&req(1, RequestKind::ReThreshold { lo: 0.04, hi: 0.2 }), None, None)
+            .unwrap();
         let snap = core.cache.snapshot();
         let serve = snap.tiers.iter().find(|(name, _)| *name == "serve").unwrap();
         assert_eq!(serve.1.hits, 1, "re-threshold should hit the warmed front");
         // The cached path produces the same bits as a cold worker.
         let mut cold = WorkerCore::from_config(&test_cfg(), 0).unwrap();
-        let b =
-            cold.execute(&req(1, RequestKind::ReThreshold { lo: 0.04, hi: 0.2 }), None).unwrap();
+        let b = cold
+            .execute(&req(1, RequestKind::ReThreshold { lo: 0.04, hi: 0.2 }), None, None)
+            .unwrap();
         assert_eq!(a.digest, b.digest);
         assert_eq!(a.edge_pixels, b.edge_pixels);
     }
@@ -449,8 +477,8 @@ mod tests {
     #[test]
     fn report_carries_totals_and_a_telemetry_line() {
         let mut core = WorkerCore::from_config(&test_cfg(), 3).unwrap();
-        core.execute(&req(0, RequestKind::Full), None).unwrap();
-        core.execute(&req(1, RequestKind::FrontOnly), None).unwrap();
+        core.execute(&req(0, RequestKind::Full), None, None).unwrap();
+        core.execute(&req(1, RequestKind::FrontOnly), None, None).unwrap();
         let rep = core.report();
         assert_eq!(rep.worker, 3);
         assert_eq!(rep.served, 2);
@@ -478,7 +506,7 @@ mod tests {
     fn snapshot_lines_advance_seq_through_one_persistent_engine() {
         let mut core = WorkerCore::from_config(&test_cfg(), 0).unwrap();
         let first = core.snapshot_line();
-        core.execute(&req(0, RequestKind::Full), None).unwrap();
+        core.execute(&req(0, RequestKind::Full), None, None).unwrap();
         let second = core.snapshot_line();
         let seq = |line: &Json| line.get("seq").and_then(Json::as_f64).unwrap() as u64;
         assert_eq!(seq(&first), 0);
@@ -487,11 +515,33 @@ mod tests {
     }
 
     #[test]
+    fn wire_sampler_gates_spans_and_exemplars_under_the_virtual_clock() {
+        let ctx = Some(("00112233445566770000002a", 3u64));
+        let r = req(2, RequestKind::Full);
+        // Threshold far above any modeled latency: definite drop — no
+        // subtree ships and the histogram cites no exemplar.
+        let drop = TraceSampler::from_wire("slow:3600000000000").unwrap();
+        let mut core = WorkerCore::from_config(&test_cfg(), 1).unwrap();
+        let ans = core.execute(&r, ctx, Some(&drop)).unwrap();
+        assert!(ans.spans.is_empty(), "dropped traces ship no subtree");
+        assert!(core.telemetry.latency.snapshot().exemplars.is_empty());
+        // Threshold zero: every request is slow — definite keep, so the
+        // subtree ships and the kept trace becomes the exemplar.
+        let keep = TraceSampler::from_wire("slow:0").unwrap();
+        let mut core = WorkerCore::from_config(&test_cfg(), 1).unwrap();
+        let ans = core.execute(&r, ctx, Some(&keep)).unwrap();
+        assert!(!ans.spans.is_empty(), "kept traces ship the subtree");
+        let ex = core.telemetry.latency.snapshot().exemplars;
+        assert_eq!(ex.len(), 1);
+        assert!(ex.values().all(|(trace, _)| trace == "00112233445566770000002a"));
+    }
+
+    #[test]
     fn trace_context_yields_a_stitched_deterministic_subtree() {
         let ctx = Some(("00112233445566770000002a", 3u64));
         let mut core = WorkerCore::from_config(&test_cfg(), 1).unwrap();
         let r = req(2, RequestKind::ReThreshold { lo: 0.04, hi: 0.2 });
-        let ans = core.execute(&r, ctx).unwrap();
+        let ans = core.execute(&r, ctx, None).unwrap();
         assert!(!ans.spans.is_empty());
         let svc = &ans.spans[0];
         assert_eq!(svc.name, "service");
@@ -503,7 +553,7 @@ mod tests {
         // and a fresh core replays the exact same spans.
         assert!(ans.t_ns > r.arrival_ns);
         let mut again = WorkerCore::from_config(&test_cfg(), 1).unwrap();
-        let b = again.execute(&r, ctx).unwrap();
+        let b = again.execute(&r, ctx, None).unwrap();
         assert_eq!(ans.spans, b.spans, "virtual-clock spans replay identically");
         assert_eq!(ans.t_ns, b.t_ns);
     }

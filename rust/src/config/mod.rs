@@ -116,6 +116,15 @@ pub struct RunConfig {
     /// (its current snapshot line) to the front door, milliseconds in
     /// the worker's clock domain.
     pub worker_telemetry_ms: f64,
+    /// Observability: tail-based trace sampling policy — which
+    /// completed requests keep their spans in `--trace-log`:
+    /// `all` (default), `slow:<ms>`, `errors` (SLO violations), or
+    /// `head:<1-in-n>` (see [`crate::obs::sample`]).
+    pub trace_sample: String,
+    /// Observability: anomaly-detection threshold in standard
+    /// deviations over the rolling telemetry series (0 = off, the
+    /// default; see [`crate::obs::anomaly`]).
+    pub anomaly_sigma: f64,
 }
 
 impl Default for RunConfig {
@@ -156,6 +165,8 @@ impl Default for RunConfig {
             trace_log: String::new(),
             obs_port: 0,
             worker_telemetry_ms: 100.0,
+            trace_sample: "all".into(),
+            anomaly_sigma: 0.0,
         }
     }
 }
@@ -256,6 +267,10 @@ impl RunConfig {
             "worker-telemetry-ms" | "worker_telemetry_ms" => {
                 self.worker_telemetry_ms = value.parse().map_err(|_| bad("f64"))?
             }
+            "trace-sample" | "trace_sample" => self.trace_sample = value.to_string(),
+            "anomaly-sigma" | "anomaly_sigma" => {
+                self.anomaly_sigma = value.parse().map_err(|_| bad("f64"))?
+            }
             _ => return Err(Error::Config(format!("unknown config key `{key}`"))),
         }
         Ok(())
@@ -333,6 +348,10 @@ impl RunConfig {
         "obs_port",
         "worker-telemetry-ms",
         "worker_telemetry_ms",
+        "trace-sample",
+        "trace_sample",
+        "anomaly-sigma",
+        "anomaly_sigma",
     ];
 
     /// Is `key` a config key `set` would accept?
@@ -438,6 +457,12 @@ impl RunConfig {
         if !(self.worker_telemetry_ms.is_finite() && self.worker_telemetry_ms > 0.0) {
             return Err(Error::Config("worker-telemetry-ms must be > 0".into()));
         }
+        // Parse-check the sampling spec now (the SLO target passed here
+        // is irrelevant to validity).
+        crate::obs::sample::TraceSampler::from_spec(&self.trace_sample, 0)?;
+        if !(self.anomaly_sigma.is_finite() && self.anomaly_sigma >= 0.0) {
+            return Err(Error::Config("anomaly-sigma must be >= 0".into()));
+        }
         Ok(())
     }
 
@@ -485,6 +510,8 @@ impl RunConfig {
         m.insert("trace-log".into(), self.trace_log.clone());
         m.insert("obs-port".into(), self.obs_port.to_string());
         m.insert("worker-telemetry-ms".into(), self.worker_telemetry_ms.to_string());
+        m.insert("trace-sample".into(), self.trace_sample.clone());
+        m.insert("anomaly-sigma".into(), self.anomaly_sigma.to_string());
         m
     }
 }
@@ -736,20 +763,35 @@ mod tests {
         assert!(c.trace_log.is_empty(), "tracing is opt-in");
         assert_eq!(c.obs_port, 0, "endpoint disabled by default");
         assert!((c.worker_telemetry_ms - 100.0).abs() < 1e-9);
+        assert_eq!(c.trace_sample, "all", "tail sampling keeps everything by default");
+        assert_eq!(c.anomaly_sigma, 0.0, "anomaly detection is opt-in");
         c.set("trace-log", "/tmp/trace.json").unwrap();
         c.set("obs-port", "47117").unwrap();
         c.set("worker-telemetry-ms", "25.5").unwrap();
+        c.set("trace-sample", "slow:2.5").unwrap();
+        c.set("anomaly_sigma", "3.5").unwrap();
         assert_eq!(c.trace_log, "/tmp/trace.json");
         assert_eq!(c.obs_port, 47117);
         assert!((c.worker_telemetry_ms - 25.5).abs() < 1e-12);
+        assert_eq!(c.trace_sample, "slow:2.5");
+        assert!((c.anomaly_sigma - 3.5).abs() < 1e-12);
         c.validate().unwrap();
         assert!(c.set("obs-port", "70000").is_err(), "u16 range enforced");
+        assert!(c.set("anomaly-sigma", "three").is_err());
+        c.set("trace_sample", "sometimes").unwrap();
+        assert!(c.validate().is_err(), "bad sampling specs fail validate");
+        c.set("trace-sample", "head:8").unwrap();
+        c.set("anomaly-sigma", "-1").unwrap();
+        assert!(c.validate().is_err(), "negative sigma fails validate");
+        c.set("anomaly-sigma", "0").unwrap();
         c.set("worker_telemetry_ms", "0").unwrap();
         assert!(c.validate().is_err());
         let m = RunConfig::default().to_map();
         assert_eq!(m.get("trace-log").map(String::as_str), Some(""));
         assert_eq!(m.get("obs-port").map(String::as_str), Some("0"));
         assert_eq!(m.get("worker-telemetry-ms").map(String::as_str), Some("100"));
+        assert_eq!(m.get("trace-sample").map(String::as_str), Some("all"));
+        assert_eq!(m.get("anomaly-sigma").map(String::as_str), Some("0"));
     }
 
     #[test]

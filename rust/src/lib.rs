@@ -62,7 +62,16 @@
 //!   door's parent — exported as span JSONL or Chrome trace-event JSON
 //!   (`--trace-log file.json`). The current merged telemetry snapshot
 //!   is also served live over loopback TCP (`--obs-port`): connect,
-//!   read one JSON line, done.
+//!   read one JSON line, done. On top of the *recording* plane sits an
+//!   **analysis** plane ([`obs::sample`], [`obs::anomaly`],
+//!   [`obs::analyze`]): tail-based trace sampling decides keep/drop
+//!   *after* each request completes (`--trace-sample all | slow:<ms> |
+//!   errors | head:<n>`), histogram buckets cite their worst kept
+//!   trace as an exemplar in the telemetry stream, EWMA anomaly
+//!   detectors raise `ALERT … scope=anomaly:…` lines naming that
+//!   exemplar (`--anomaly-sigma`), and `cannyd analyze` aggregates any
+//!   recorded file offline — span p50/p99 per kind, per-trace critical
+//!   paths, deltas against a baseline (`--against`).
 //! * **L2/L1 (python/, build-time only)** — the Canny front-end
 //!   (Gaussian → Sobel → NMS → double threshold) as JAX + Pallas
 //!   kernels, AOT-lowered to HLO text consumed by [`runtime`] through
@@ -197,7 +206,40 @@
 //! route/dispatch/wire spans, one trace per request end-to-end. Adding
 //! `--obs-port P` (serve, stream or cluster) serves the newest merged
 //! telemetry snapshot line to any loopback TCP client — connect, read
-//! one JSON line, connection closes.
+//! one JSON line (plus the newest `ALERT` line once one has fired),
+//! connection closes.
+//!
+//! **Analyzing** a recorded run ([`obs::sample`], [`obs::analyze`]):
+//! tail-based sampling keeps only the traces worth reading — the
+//! verdict uses the request's *observed* latency, decided after it
+//! completes — and the analyzer turns the retained file into per-span
+//! aggregates and critical paths. Each exported histogram exemplar
+//! cites a kept trace, so an anomaly alert (`--anomaly-sigma`) always
+//! points at a trace that is actually in the file:
+//!
+//! ```no_run
+//! use std::path::Path;
+//! use canny_par::config::RunConfig;
+//! use canny_par::obs::analyze;
+//! use canny_par::service::{serve, ServeOptions, Trace};
+//!
+//! let mut cfg = RunConfig::default();
+//! cfg.set("trace-log", "/tmp/slow.jsonl").unwrap();
+//! cfg.set("trace-sample", "slow:2").unwrap(); // keep traces > 2 ms
+//! cfg.set("anomaly-sigma", "3").unwrap();     // alert at 3 sigma
+//! cfg.set("alert-log", "stderr").unwrap();
+//! let trace = Trace::synthetic(200, cfg.seed, cfg.arrival_rate_hz);
+//! serve("sampled", &trace, &ServeOptions::from_config(&cfg)).unwrap();
+//! // Aggregate what was kept: count/p50/p99 per span kind, critical
+//! // paths, optionally deltas against a baseline file.
+//! let report = analyze(Path::new("/tmp/slow.jsonl"), None).unwrap();
+//! println!("{}", report.dump());
+//! ```
+//!
+//! The CLI equivalent is `cannyd serve --synthetic 200 --trace-log
+//! slow.jsonl --trace-sample slow:2 --anomaly-sigma 3 --alert-log
+//! stderr` followed by `cannyd analyze slow.jsonl [--against
+//! baseline]` — bench baseline docs (`BENCH_*.json`) analyze too.
 //!
 //! Spreading the same trace over worker **processes** ([`cluster`]) —
 //! the CLI equivalent is `cannyd cluster --workers 2 --synthetic 40`;

@@ -23,6 +23,10 @@
 //! `--obs-port P` (live snapshot line over loopback TCP).
 //!   calibrate  [--output calib.json]   (probe the service-cost model)
 //!   profile    [--sim-cpus 4|8] [--engine serial|patterns]   (figures)
+//!   analyze    trace.jsonl | telemetry.jsonl | BENCH_*.json
+//!              [--against BASELINE]   (offline analytics over recorded
+//!              files: per-span/series aggregates, critical paths,
+//!              baseline deltas — one JSON report on stdout)
 //!   info       (topology, artifacts, resolved config)
 //!
 //! Global flags are config keys (`--engine`, `--workers`, `--lo`, …),
@@ -65,7 +69,7 @@ fn main() -> ExitCode {
 /// Every subcommand (also the source of the command-flag union below).
 const COMMANDS: &[&str] = &[
     "run", "gen", "batch", "serve", "stream", "cluster", "worker", "calibrate", "profile",
-    "info", "help",
+    "analyze", "info", "help",
 ];
 
 /// Command-level flags (not config keys) each subcommand accepts.
@@ -80,6 +84,7 @@ fn allowed_extras(cmd: &str) -> &'static [&'static str] {
         "worker" => &["config", "worker-id"],
         "calibrate" => &["config", "output"],
         "profile" => &["config", "figure"],
+        "analyze" => &["config", "against"],
         _ => &["config"],
     }
 }
@@ -151,7 +156,10 @@ fn run(args: Vec<String>) -> anyhow::Result<()> {
     let positional = cfg.apply_cli(&filtered)?;
     cfg.validate()?;
     let cmd = positional.first().map(|s| s.as_str()).unwrap_or("help");
-    if let Some(stray) = positional.get(1) {
+    // `analyze` takes one positional operand (the recorded file);
+    // every other command takes none.
+    let stray = if cmd == "analyze" { positional.get(2) } else { positional.get(1) };
+    if let Some(stray) = stray {
         anyhow::bail!("unexpected argument `{stray}` after `{cmd}`");
     }
     for (k, _) in &extra {
@@ -178,6 +186,7 @@ fn run(args: Vec<String>) -> anyhow::Result<()> {
         "worker" => cmd_worker(&cfg, get("worker-id")),
         "calibrate" => cmd_calibrate(&cfg, get("output")),
         "profile" => cmd_profile(&cfg, get("figure")),
+        "analyze" => cmd_analyze(positional.get(1), get("against")),
         "info" => cmd_info(&cfg),
         "help" => {
             print!("{}", HELP);
@@ -190,7 +199,7 @@ fn run(args: Vec<String>) -> anyhow::Result<()> {
 const HELP: &str = "\
 cannyd — high-performance parallel Canny edge detector (CS.DC 2017 repro)
 
-USAGE: cannyd <run|gen|batch|serve|stream|cluster|worker|calibrate|profile|info> [flags]
+USAGE: cannyd <run|gen|batch|serve|stream|cluster|worker|calibrate|profile|analyze|info> [flags]
 
   run        detect edges:      --input x.pgm | --scene shapes:7 --size 512x512
                                 [--output edges.pgm]
@@ -229,6 +238,13 @@ USAGE: cannyd <run|gen|batch|serve|stream|cluster|worker|calibrate|profile|info>
   calibrate  probe the service-cost model on this host and print/save it
                                 [--output calib.json]
   profile    paper figures:     [--figure fig8|fig9|percore] [--sim-cpus 4|8]
+  analyze    offline analytics: cannyd analyze trace.jsonl [--against FILE]
+                                (span JSONL, telemetry JSONL and bench
+                                 BENCH_*.json docs are sniffed by content;
+                                 prints one JSON report — count/p50/p99 per
+                                 span kind or telemetry series, per-trace
+                                 critical paths, and per-name deltas against
+                                 a baseline file; schema in the obs docs)
   info       topology + artifacts + resolved config
 
 Config flags (all commands): --engine serial|patterns|tiled|xla
@@ -268,8 +284,18 @@ Ops-plane flags (serve + stream; --telemetry-log and --obs-port also
   --trace-log FILE (per-request distributed trace: .jsonl = span JSONL,
     anything else = Chrome trace-event JSON for chrome://tracing;
     serve + cluster; byte-identical across virtual replays)
+  --trace-sample all|slow:MS|errors|head:N (tail-based trace sampling:
+    keep/drop is decided after a request completes, from its observed
+    latency — slow:MS keeps traces slower than MS ms, errors keeps
+    SLO-violating traces, head:N keeps 1-in-N; deterministic under
+    --clock virtual; in cluster mode the front door's verdict governs
+    the workers' subtrees; default all)
+  --anomaly-sigma N (EWMA anomaly detection over the telemetry series;
+    an observation more than N standard deviations from the running
+    mean raises an ALERT line naming the worst exemplar trace; 0 = off)
   --obs-port P (loopback TCP: connect, read the current snapshot line
-    as one JSON object, connection closes; 0 = off)
+    as one JSON object, then — when one has fired — the newest ALERT
+    line as a second line; connection closes after; 0 = off)
 
 Unknown flags and subcommands are errors, not ignored.
 ";
@@ -687,6 +713,19 @@ fn cmd_profile(cfg: &RunConfig, figure: Option<String>) -> anyhow::Result<()> {
         sub.busy_samples(),
         opt.mean_total_pct() / sub.mean_total_pct().max(1e-9),
     );
+    Ok(())
+}
+
+/// `cannyd analyze <file> [--against <file>]` — offline analytics over
+/// a recorded span/telemetry JSONL file or a bench baseline doc. Pure
+/// file-in, JSON-out; schema in the obs module docs.
+fn cmd_analyze(input: Option<&String>, against: Option<String>) -> anyhow::Result<()> {
+    let input = input.ok_or_else(|| {
+        anyhow::anyhow!("analyze needs a file operand: `cannyd analyze trace.jsonl`")
+    })?;
+    let report =
+        canny_par::obs::analyze(Path::new(input), against.as_deref().map(Path::new))?;
+    println!("{}", report.dump());
     Ok(())
 }
 

@@ -1,0 +1,410 @@
+//! Offline trace analytics — the engine behind `cannyd analyze <file>
+//! [--against <file>]`. The recording plane (`--trace-log`,
+//! `--telemetry-log`, the bench harness) writes deterministic JSON;
+//! this module reads it back and answers the questions a run raises:
+//! where did the time go per span kind, which call chain dominates a
+//! trace, and how does this run compare to a baseline.
+//!
+//! Three input shapes are sniffed from the bytes, no flag needed:
+//!
+//! * **span JSONL** (`--trace-log trace.jsonl`) — aggregates `dur_ns`
+//!   per span name and extracts each trace's *critical path* (the
+//!   longest-duration child at every depth, rendered `root>child>…`).
+//! * **telemetry JSONL** (`--telemetry-log`) — aggregates the same
+//!   rolling series the anomaly monitor watches
+//!   ([`crate::obs::anomaly::extract_series`]), one observation per
+//!   snapshot line, so an `ALERT … scope=anomaly:stage:sobel` can be
+//!   followed up with the series' full distribution.
+//! * **bench docs** (`rust/benches/baselines/BENCH_*.json`) — the
+//!   committed scalability baselines; each case's published
+//!   `p50_ns`/`p99_ns` load directly, so `--against` can diff a fresh
+//!   trace against the committed seed numbers.
+//!
+//! Quantiles are exact nearest-rank over the collected observations
+//! (not histogram-bucket approximations — offline we can afford to
+//! sort). The report is one [`Json`] document; schema and a worked
+//! example live in [`crate::obs`]. Everything is pure file-in,
+//! value-out: no clocks, no global state, byte-identical reports for
+//! byte-identical inputs.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::obs::anomaly::extract_series;
+use crate::util::json::Json;
+
+/// Critical-path extraction stops descending at this depth — a cycle
+/// in a corrupt span file must not hang the analyzer.
+const MAX_PATH_DEPTH: usize = 64;
+
+/// What one input file reduces to, before rendering.
+struct Loaded {
+    /// `spans`, `telemetry`, or `bench`.
+    kind: &'static str,
+    /// Series name → `(count, p50_ns, p99_ns)`.
+    aggregates: BTreeMap<String, (u64, u64, u64)>,
+    /// Distinct trace ids (span inputs only).
+    traces: Option<u64>,
+    /// Critical path → number of traces sharing it (span inputs only).
+    critical_paths: Option<BTreeMap<String, u64>>,
+}
+
+/// Analyze one recorded file, optionally diffing its aggregates
+/// against a second (`--against`). Returns the report document
+/// (schema in [`crate::obs`]); the caller prints it.
+pub fn analyze(input: &Path, against: Option<&Path>) -> Result<Json> {
+    let cur = load(input)?;
+    let mut m = BTreeMap::new();
+    m.insert("input".into(), Json::Str(input.display().to_string()));
+    m.insert("kind".into(), Json::Str(cur.kind.into()));
+    let mut aggregates = BTreeMap::new();
+    for (name, (count, p50, p99)) in &cur.aggregates {
+        let mut a = BTreeMap::new();
+        a.insert("count".into(), Json::Num(*count as f64));
+        a.insert("p50_ns".into(), Json::Num(*p50 as f64));
+        a.insert("p99_ns".into(), Json::Num(*p99 as f64));
+        aggregates.insert(name.clone(), Json::Obj(a));
+    }
+    m.insert("aggregates".into(), Json::Obj(aggregates));
+    if let Some(traces) = cur.traces {
+        m.insert("traces".into(), Json::Num(traces as f64));
+    }
+    if let Some(paths) = &cur.critical_paths {
+        let paths =
+            paths.iter().map(|(p, n)| (p.clone(), Json::Num(*n as f64))).collect::<BTreeMap<_, _>>();
+        m.insert("critical_paths".into(), Json::Obj(paths));
+    }
+    if let Some(base_path) = against {
+        let base = load(base_path)?;
+        m.insert("against".into(), Json::Str(base_path.display().to_string()));
+        let mut deltas = BTreeMap::new();
+        for (name, (_, cur_p50, cur_p99)) in &cur.aggregates {
+            let Some((_, base_p50, base_p99)) = base.aggregates.get(name) else { continue };
+            let mut d = BTreeMap::new();
+            d.insert("base_p50_ns".into(), Json::Num(*base_p50 as f64));
+            d.insert("base_p99_ns".into(), Json::Num(*base_p99 as f64));
+            d.insert("cur_p50_ns".into(), Json::Num(*cur_p50 as f64));
+            d.insert("cur_p99_ns".into(), Json::Num(*cur_p99 as f64));
+            d.insert("delta_p50_pct".into(), Json::Num(delta_pct(*base_p50, *cur_p50)));
+            d.insert("delta_p99_pct".into(), Json::Num(delta_pct(*base_p99, *cur_p99)));
+            deltas.insert(name.clone(), Json::Obj(d));
+        }
+        m.insert("deltas".into(), Json::Obj(deltas));
+    }
+    Ok(Json::Obj(m))
+}
+
+/// Percent change current-vs-base, rounded to 0.1 so reports stay
+/// byte-stable; positive means the current run is slower. A zero base
+/// has no meaningful ratio — reported as 0 when flat, 100 otherwise.
+fn delta_pct(base: u64, cur: u64) -> f64 {
+    if base == 0 {
+        return if cur == 0 { 0.0 } else { 100.0 };
+    }
+    let pct = (cur as f64 - base as f64) / base as f64 * 100.0;
+    (pct * 10.0).round() / 10.0
+}
+
+/// Exact nearest-rank quantile over an ascending-sorted slice.
+fn quantile(sorted: &[f64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = (q * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1].round() as u64
+}
+
+/// Read a file and sniff its shape: a whole-file JSON object with a
+/// `bench` key is a bench doc; otherwise it is JSONL whose first
+/// parseable line decides span vs telemetry.
+fn load(path: &Path) -> Result<Loaded> {
+    let text = fs::read_to_string(path)
+        .map_err(|e| Error::Config(format!("analyze: cannot read {}: {e}", path.display())))?;
+    if let Ok(doc) = Json::parse(&text) {
+        if doc.get("bench").is_some() {
+            return load_bench(&doc);
+        }
+    }
+    let mut lines = Vec::new();
+    for (n, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(line).map_err(|e| {
+            Error::Config(format!("analyze: {} line {}: {e}", path.display(), n + 1))
+        })?;
+        lines.push(j);
+    }
+    let Some(first) = lines.first() else {
+        return Err(Error::Config(format!("analyze: {} is empty", path.display())));
+    };
+    if first.get("trace").is_some() && first.get("t0_ns").is_some() {
+        Ok(load_spans(&lines))
+    } else if first.get("tier").is_some() && first.get("seq").is_some() {
+        Ok(load_telemetry(&lines))
+    } else {
+        Err(Error::Config(format!(
+            "analyze: {} is neither span JSONL, telemetry JSONL, nor a bench doc",
+            path.display()
+        )))
+    }
+}
+
+/// Bench docs publish their quantiles directly — one aggregate per
+/// case. `BENCH_serve.json` is one flat case; `BENCH_cluster.json`
+/// carries a `fleets` array, one case per fleet size.
+fn load_bench(doc: &Json) -> Result<Loaded> {
+    let bench = doc.get("bench").and_then(Json::as_str).unwrap_or("bench").to_string();
+    let mut aggregates = BTreeMap::new();
+    let case = |j: &Json, name: String, aggregates: &mut BTreeMap<String, (u64, u64, u64)>| {
+        let n = |key: &str| j.get(key).and_then(Json::as_f64).unwrap_or(0.0) as u64;
+        let count = if j.get("completed").is_some() { n("completed") } else { n("requests") };
+        aggregates.insert(name, (count, n("p50_ns"), n("p99_ns")));
+    };
+    match doc.get("fleets").and_then(Json::as_arr) {
+        Some(fleets) => {
+            for fleet in fleets {
+                let workers =
+                    fleet.get("workers").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+                case(fleet, format!("{bench}:workers={workers}"), &mut aggregates);
+            }
+        }
+        None => case(doc, bench, &mut aggregates),
+    }
+    Ok(Loaded { kind: "bench", aggregates, traces: None, critical_paths: None })
+}
+
+/// Span JSONL: `dur_ns` observations per span name, plus per-trace
+/// critical paths. Span files are written sorted by
+/// `(trace, id, t0_ns)`, but the walk re-groups defensively so a
+/// concatenation of two logs still analyzes.
+fn load_spans(lines: &[Json]) -> Loaded {
+    let mut durs: BTreeMap<String, Vec<f64>> = BTreeMap::new();
+    // trace → (id → (name, dur_ns, parent))
+    let mut traces: BTreeMap<String, BTreeMap<u64, (String, f64, Option<u64>)>> = BTreeMap::new();
+    for span in lines {
+        let name = span.get("name").and_then(Json::as_str).unwrap_or("?").to_string();
+        let dur = span.get("dur_ns").and_then(Json::as_f64).unwrap_or(0.0);
+        let trace = span.get("trace").and_then(Json::as_str).unwrap_or("").to_string();
+        let id = span.get("id").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+        let parent = span.get("parent").and_then(Json::as_f64).map(|p| p as u64);
+        durs.entry(name.clone()).or_default().push(dur);
+        traces.entry(trace).or_default().insert(id, (name, dur, parent));
+    }
+    let mut critical_paths: BTreeMap<String, u64> = BTreeMap::new();
+    for spans in traces.values() {
+        if let Some(path) = critical_path(spans) {
+            *critical_paths.entry(path).or_insert(0) += 1;
+        }
+    }
+    let mut aggregates = BTreeMap::new();
+    for (name, mut vals) in durs {
+        vals.sort_by(f64::total_cmp);
+        aggregates
+            .insert(name, (vals.len() as u64, quantile(&vals, 0.50), quantile(&vals, 0.99)));
+    }
+    Loaded {
+        kind: "spans",
+        aggregates,
+        traces: Some(traces.len() as u64),
+        critical_paths: Some(critical_paths),
+    }
+}
+
+/// One trace's critical path: start at the root (no parent), descend
+/// into the longest-duration child at every level (smallest id breaks
+/// ties so the path is deterministic), join names with `>`.
+fn critical_path(spans: &BTreeMap<u64, (String, f64, Option<u64>)>) -> Option<String> {
+    let mut children: BTreeMap<u64, Vec<u64>> = BTreeMap::new();
+    let mut root = None;
+    for (id, (_, _, parent)) in spans {
+        match parent {
+            Some(p) => children.entry(*p).or_default().push(*id),
+            None => root = root.or(Some(*id)),
+        }
+    }
+    let mut cur = root?;
+    let mut path = spans[&cur].0.clone();
+    for _ in 0..MAX_PATH_DEPTH {
+        let Some(kids) = children.get(&cur) else { break };
+        // BTreeMap insertion gave ascending ids; `>` keeps the first
+        // (smallest-id) maximum on duration ties.
+        let Some(next) = kids
+            .iter()
+            .copied()
+            .max_by(|a, b| match spans[a].1.total_cmp(&spans[b].1) {
+                std::cmp::Ordering::Equal => b.cmp(a),
+                o => o,
+            })
+        else {
+            break;
+        };
+        path.push('>');
+        path.push_str(&spans[&next].0);
+        cur = next;
+    }
+    Some(path)
+}
+
+/// Telemetry JSONL: one observation per snapshot line per watched
+/// series — the same extraction the live anomaly monitor uses, so
+/// offline aggregates and online alerts name identical series.
+fn load_telemetry(lines: &[Json]) -> Loaded {
+    let mut series: BTreeMap<String, Vec<f64>> = BTreeMap::new();
+    for line in lines {
+        for (name, value) in extract_series(line) {
+            series.entry(name).or_default().push(value);
+        }
+    }
+    let mut aggregates = BTreeMap::new();
+    for (name, mut vals) in series {
+        vals.sort_by(f64::total_cmp);
+        aggregates
+            .insert(name, (vals.len() as u64, quantile(&vals, 0.50), quantile(&vals, 0.99)));
+    }
+    Loaded { kind: "telemetry", aggregates, traces: None, critical_paths: None }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("canny_analyze_tests");
+        fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{}_{name}", std::process::id()))
+    }
+
+    fn span_line(trace: &str, id: u64, parent: Option<u64>, name: &str, dur: u64) -> String {
+        let parent = parent.map_or("null".to_string(), |p| p.to_string());
+        format!(
+            r#"{{"attrs": {{}}, "cat": "exec", "dur_ns": {dur}, "id": {id}, "name": "{name}", "parent": {parent}, "t0_ns": 0, "tid": 1, "trace": "{trace}"}}"#
+        )
+    }
+
+    #[test]
+    fn span_files_aggregate_and_extract_critical_paths() {
+        let path = tmp("spans.jsonl");
+        let mut text = String::new();
+        for trace in ["aaaa", "bbbb"] {
+            text.push_str(&span_line(trace, 1, None, "request", 5000));
+            text.push('\n');
+            text.push_str(&span_line(trace, 2, Some(1), "queue_wait", 500));
+            text.push('\n');
+            text.push_str(&span_line(trace, 3, Some(1), "service", 4000));
+            text.push('\n');
+            text.push_str(&span_line(trace, 4, Some(3), "stage:sobel", 3000));
+            text.push('\n');
+        }
+        fs::write(&path, text).unwrap();
+        let j = analyze(&path, None).unwrap();
+        assert_eq!(j.get("kind").unwrap().as_str(), Some("spans"));
+        assert_eq!(j.get("traces").unwrap().as_usize(), Some(2));
+        let agg = j.get("aggregates").unwrap();
+        assert_eq!(agg.get("service").unwrap().get("count").unwrap().as_usize(), Some(2));
+        assert_eq!(agg.get("service").unwrap().get("p50_ns").unwrap().as_usize(), Some(4000));
+        assert_eq!(agg.get("service").unwrap().get("p99_ns").unwrap().as_usize(), Some(4000));
+        let paths = j.get("critical_paths").unwrap().as_obj().unwrap();
+        assert_eq!(paths.len(), 1, "{paths:?}");
+        assert_eq!(
+            paths.get("request>service>stage:sobel").unwrap().as_usize(),
+            Some(2),
+            "both traces share the service-dominated path"
+        );
+    }
+
+    #[test]
+    fn telemetry_files_aggregate_the_monitored_series() {
+        let path = tmp("telemetry.jsonl");
+        let mut text = String::new();
+        for (seq, mean) in [(0u64, 1000.0), (1, 2000.0), (2, 3000.0)] {
+            text.push_str(&format!(
+                r#"{{"seq": {seq}, "t_ns": {}, "tier": "serve", "latency_ns": {{"mean": {mean}}}, "queue": {{"depth": {seq}}}}}"#,
+                seq * 100
+            ));
+            text.push('\n');
+        }
+        fs::write(&path, text).unwrap();
+        let j = analyze(&path, None).unwrap();
+        assert_eq!(j.get("kind").unwrap().as_str(), Some("telemetry"));
+        assert!(j.get("traces").is_none());
+        let lat = j.get("aggregates").unwrap().get("latency_mean").unwrap();
+        assert_eq!(lat.get("count").unwrap().as_usize(), Some(3));
+        assert_eq!(lat.get("p50_ns").unwrap().as_usize(), Some(2000));
+        assert_eq!(lat.get("p99_ns").unwrap().as_usize(), Some(3000));
+    }
+
+    #[test]
+    fn bench_docs_load_their_published_quantiles() {
+        let serve = tmp("BENCH_serve.json");
+        fs::write(
+            &serve,
+            r#"{"bench": "serve", "completed": 48, "p50_ns": 2450000, "p99_ns": 6200000}"#,
+        )
+        .unwrap();
+        let j = analyze(&serve, None).unwrap();
+        assert_eq!(j.get("kind").unwrap().as_str(), Some("bench"));
+        let a = j.get("aggregates").unwrap().get("serve").unwrap();
+        assert_eq!(a.get("count").unwrap().as_usize(), Some(48));
+        assert_eq!(a.get("p50_ns").unwrap().as_usize(), Some(2450000));
+        let cluster = tmp("BENCH_cluster.json");
+        fs::write(
+            &cluster,
+            r#"{"bench": "cluster", "fleets": [{"completed": 32, "p50_ns": 1800000, "p99_ns": 5400000, "workers": 1}, {"completed": 32, "p50_ns": 1900000, "p99_ns": 6100000, "workers": 4}]}"#,
+        )
+        .unwrap();
+        let j = analyze(&cluster, None).unwrap();
+        let agg = j.get("aggregates").unwrap().as_obj().unwrap();
+        assert_eq!(agg.len(), 2);
+        assert!(agg.contains_key("cluster:workers=1"));
+        assert_eq!(
+            agg["cluster:workers=4"].get("p99_ns").unwrap().as_usize(),
+            Some(6100000)
+        );
+    }
+
+    #[test]
+    fn against_diffs_shared_series_with_rounded_percentages() {
+        let base = tmp("delta_base.json");
+        let cur = tmp("delta_cur.json");
+        fs::write(&base, r#"{"bench": "serve", "completed": 10, "p50_ns": 1000, "p99_ns": 2000}"#)
+            .unwrap();
+        fs::write(&cur, r#"{"bench": "serve", "completed": 10, "p50_ns": 1047, "p99_ns": 1500}"#)
+            .unwrap();
+        let j = analyze(&cur, Some(&base)).unwrap();
+        assert_eq!(j.get("against").unwrap().as_str(), Some(base.to_str().unwrap()));
+        let d = j.get("deltas").unwrap().get("serve").unwrap();
+        assert_eq!(d.get("base_p50_ns").unwrap().as_usize(), Some(1000));
+        assert_eq!(d.get("cur_p50_ns").unwrap().as_usize(), Some(1047));
+        assert_eq!(d.get("delta_p50_pct").unwrap().as_f64(), Some(4.7));
+        assert_eq!(d.get("delta_p99_pct").unwrap().as_f64(), Some(-25.0));
+        // Self-comparison is an all-zero delta — and deterministic.
+        let same = analyze(&cur, Some(&cur)).unwrap();
+        let d = same.get("deltas").unwrap().get("serve").unwrap();
+        assert_eq!(d.get("delta_p50_pct").unwrap().as_f64(), Some(0.0));
+        assert_eq!(same.dump(), analyze(&cur, Some(&cur)).unwrap().dump());
+    }
+
+    #[test]
+    fn unrecognized_and_empty_inputs_are_config_errors() {
+        let path = tmp("garbage.jsonl");
+        fs::write(&path, "{\"what\": 1}\n").unwrap();
+        assert!(analyze(&path, None).is_err());
+        let empty = tmp("empty.jsonl");
+        fs::write(&empty, "").unwrap();
+        assert!(analyze(&empty, None).is_err());
+        assert!(analyze(Path::new("/nonexistent/nope.jsonl"), None).is_err());
+    }
+
+    #[test]
+    fn quantiles_are_nearest_rank() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(quantile(&v, 0.50), 50);
+        assert_eq!(quantile(&v, 0.99), 99);
+        assert_eq!(quantile(&[7.0], 0.99), 7);
+        assert_eq!(quantile(&[], 0.5), 0);
+    }
+}

@@ -1,0 +1,312 @@
+//! Streaming anomaly detection over the telemetry snapshot stream
+//! (`--anomaly-sigma`): EWMA mean/variance detectors watch rolling
+//! series extracted from each tick line — completion-latency mean,
+//! queue depth, cache and gate hit rates, per-stage mean wall — and
+//! raise an alert through the run's [`crate::obs::health::AlertSink`]
+//! when an observation lands more than `sigma` standard deviations
+//! from the running mean. Each alert names the worst latency exemplar
+//! exported on that line, so "queue depth spiked" comes with a
+//! concrete trace id to pull from `--trace-log`.
+//!
+//! Alert line format (documented next to the health-transition format
+//! in [`crate::obs`]):
+//!
+//! ```text
+//! ALERT t_ns=<tick> scope=anomaly:<series> z=<z> value=<v> mean=<m> exemplar=<trace-id|none>
+//! ```
+//!
+//! Determinism: detectors consume only values already on the built
+//! snapshot line (`t_ns` included), never a clock — under virtual
+//! replay the whole alert stream is byte-identical across runs, and
+//! pallas-lint's clock-purity allowlist is unchanged. Off by default
+//! (`--anomaly-sigma 0`).
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// Detectors stay silent for their first `WARMUP` observations — an
+/// EWMA needs history before a z-score means anything.
+pub const WARMUP: u64 = 8;
+
+/// EWMA smoothing factor: ~last 6 ticks dominate, old regimes decay
+/// fast enough that a recovered series stops alerting.
+pub const ALPHA: f64 = 0.3;
+
+/// One exponentially weighted mean/variance tracker.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EwmaDetector {
+    mean: f64,
+    var: f64,
+    n: u64,
+}
+
+impl EwmaDetector {
+    pub fn new() -> EwmaDetector {
+        EwmaDetector::default()
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn samples(&self) -> u64 {
+        self.n
+    }
+
+    /// Fold in one observation, returning its z-score against the
+    /// state *before* the fold (`None` during warmup). The standard
+    /// deviation is floored at 1% of the running mean so a flat-lined
+    /// series (zero variance — the virtual clock's modeled stage walls,
+    /// for instance) yields huge-but-finite z on a genuine jump and an
+    /// exact 0 while it stays flat.
+    pub fn observe(&mut self, x: f64) -> Option<f64> {
+        let z = if self.n >= WARMUP {
+            let sd = self.var.sqrt().max(self.mean.abs() * 0.01).max(1e-9);
+            Some((x - self.mean) / sd)
+        } else {
+            None
+        };
+        if self.n == 0 {
+            self.mean = x;
+        } else {
+            let d = x - self.mean;
+            self.mean += ALPHA * d;
+            self.var = (1.0 - ALPHA) * (self.var + ALPHA * d * d);
+        }
+        self.n += 1;
+        z
+    }
+}
+
+/// One raised anomaly, ready to be rendered as an alert line.
+#[derive(Clone, Debug)]
+pub struct AnomalyAlert {
+    /// Tick timestamp of the offending line.
+    pub t_ns: u64,
+    /// Which series deviated (`latency_mean`, `queue_depth`,
+    /// `gate_hit_rate`, `cache_hit_rate:<tier>`, `stage:<name>`).
+    pub series: String,
+    /// The offending observation.
+    pub value: f64,
+    /// The detector's running mean before the observation.
+    pub mean: f64,
+    /// How many standard deviations out it landed (signed).
+    pub z: f64,
+    /// Worst latency exemplar on the line, `"none"` when the line
+    /// carried no exemplars (tracing off, or nothing sampled yet).
+    pub exemplar: String,
+}
+
+impl AnomalyAlert {
+    /// Render the alert line (fixed decimal precision keeps replays
+    /// byte-identical).
+    pub fn line(&self) -> String {
+        format!(
+            "ALERT t_ns={} scope=anomaly:{} z={:.2} value={:.2} mean={:.2} exemplar={}",
+            self.t_ns, self.series, self.z, self.value, self.mean, self.exemplar
+        )
+    }
+}
+
+/// The per-run monitor: one [`EwmaDetector`] per telemetry series,
+/// created lazily as series appear (stages show up after their first
+/// run).
+#[derive(Debug)]
+pub struct AnomalyMonitor {
+    sigma: f64,
+    detectors: BTreeMap<String, EwmaDetector>,
+    raised: u64,
+}
+
+impl AnomalyMonitor {
+    /// `None` when `sigma <= 0` — the feature is off by default and
+    /// costs nothing when off.
+    pub fn from_sigma(sigma: f64) -> Option<AnomalyMonitor> {
+        if sigma > 0.0 {
+            Some(AnomalyMonitor { sigma, detectors: BTreeMap::new(), raised: 0 })
+        } else {
+            None
+        }
+    }
+
+    /// Alerts raised so far.
+    pub fn raised(&self) -> u64 {
+        self.raised
+    }
+
+    /// Feed one built snapshot line (serve/stream tick, worker line, or
+    /// a cluster merged line — they share the schema) and collect any
+    /// alerts it triggers.
+    pub fn observe_line(&mut self, line: &Json) -> Vec<AnomalyAlert> {
+        let t_ns = line.get("t_ns").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+        let exemplar = worst_exemplar(line).unwrap_or_else(|| "none".to_string());
+        let mut alerts = Vec::new();
+        for (series, value) in extract_series(line) {
+            let det = self.detectors.entry(series.clone()).or_default();
+            let mean = det.mean();
+            if let Some(z) = det.observe(value) {
+                if z.abs() >= self.sigma {
+                    alerts.push(AnomalyAlert {
+                        t_ns,
+                        series,
+                        value,
+                        mean,
+                        z,
+                        exemplar: exemplar.clone(),
+                    });
+                }
+            }
+        }
+        self.raised += alerts.len() as u64;
+        alerts
+    }
+}
+
+/// Pull the watched series off a snapshot line, in deterministic
+/// (sorted) order. Public because [`crate::obs::analyze`] aggregates
+/// the exact same series offline — the alert a run raised and the
+/// aggregate the report shows must name the same thing.
+pub fn extract_series(line: &Json) -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    if let Some(mean) = line.get("latency_ns").and_then(|l| l.get("mean")).and_then(Json::as_f64)
+    {
+        out.push(("latency_mean".to_string(), mean));
+    }
+    if let Some(depth) = line.get("queue").and_then(|q| q.get("depth")).and_then(Json::as_f64) {
+        out.push(("queue_depth".to_string(), depth));
+    }
+    if let Some(rate) = line.get("gate").and_then(|g| g.get("hit_rate")).and_then(Json::as_f64) {
+        out.push(("gate_hit_rate".to_string(), rate));
+    }
+    if let Some(tiers) = line.get("cache").and_then(|c| c.get("tiers")).and_then(Json::as_obj) {
+        for (tier, stats) in tiers {
+            if let Some(rate) = stats.get("hit_rate").and_then(Json::as_f64) {
+                out.push((format!("cache_hit_rate:{tier}"), rate));
+            }
+        }
+    }
+    if let Some(stages) = line.get("stages").and_then(Json::as_obj) {
+        for (name, tally) in stages {
+            let runs = tally.get("runs").and_then(Json::as_f64).unwrap_or(0.0);
+            let wall = tally.get("wall_ns").and_then(Json::as_f64).unwrap_or(0.0);
+            if runs > 0.0 {
+                // Cumulative wall over cumulative runs: mean wall per
+                // stage execution so far.
+                out.push((format!("stage:{name}"), wall / runs));
+            }
+        }
+    }
+    out
+}
+
+/// The trace id of the line's worst (highest-value) latency exemplar.
+fn worst_exemplar(line: &Json) -> Option<String> {
+    let sections = line.get("exemplars").and_then(Json::as_obj)?;
+    let mut best: Option<(f64, &str)> = None;
+    for buckets in sections.values() {
+        let Some(buckets) = buckets.as_obj() else { continue };
+        for ex in buckets.values() {
+            let v = ex.get("value_ns").and_then(Json::as_f64).unwrap_or(0.0);
+            let trace = ex.get("trace").and_then(Json::as_str).unwrap_or("");
+            if !trace.is_empty() && best.map_or(true, |(bv, _)| v >= bv) {
+                best = Some((v, trace));
+            }
+        }
+    }
+    best.map(|(_, t)| t.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn line(t_ns: u64, latency_mean: f64, stage_wall: f64, runs: f64, trace: &str) -> Json {
+        Json::parse(&format!(
+            r#"{{"t_ns": {t_ns}, "latency_ns": {{"mean": {latency_mean}}},
+                "queue": {{"depth": 1}}, "gate": {{"hit_rate": 0.5}},
+                "exemplars": {{"latency": {{"2047": {{"trace": "{trace}", "value_ns": 1500}}}}}},
+                "stages": {{"gaussian": {{"wall_ns": {stage_wall}, "runs": {runs}}}}}}}"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn detector_warms_up_then_scores() {
+        let mut d = EwmaDetector::new();
+        for _ in 0..WARMUP {
+            assert_eq!(d.observe(100.0), None);
+        }
+        // Flat series: exactly zero deviation.
+        assert_eq!(d.observe(100.0), Some(0.0));
+        // A 10x jump on a near-flat series scores far out.
+        let z = d.observe(1000.0).unwrap();
+        assert!(z > 50.0, "z={z}");
+    }
+
+    #[test]
+    fn monitor_is_off_at_zero_sigma() {
+        assert!(AnomalyMonitor::from_sigma(0.0).is_none());
+        assert!(AnomalyMonitor::from_sigma(-1.0).is_none());
+        assert!(AnomalyMonitor::from_sigma(3.0).is_some());
+    }
+
+    #[test]
+    fn slow_stage_fires_and_names_the_exemplar() {
+        let mut m = AnomalyMonitor::from_sigma(3.0).unwrap();
+        // Steady state: mean stage wall 1000ns per run.
+        for i in 0..12u64 {
+            let l = line(i * 1_000_000, 500.0, 1000.0 * (i + 1) as f64, (i + 1) as f64, "aaa");
+            assert!(m.observe_line(&l).is_empty(), "tick {i} should be quiet");
+        }
+        // Injected slow stage: one run that costs 50x the usual wall
+        // drags the cumulative mean up well past 3 sigma.
+        let l = line(13_000_000, 500.0, 1000.0 * 12.0 + 50_000.0, 13.0, "deadbeef");
+        let alerts = m.observe_line(&l);
+        assert_eq!(alerts.len(), 1, "{alerts:?}");
+        assert_eq!(alerts[0].series, "stage:gaussian");
+        assert_eq!(alerts[0].exemplar, "deadbeef");
+        assert_eq!(alerts[0].t_ns, 13_000_000);
+        assert!(alerts[0].z >= 3.0);
+        assert_eq!(m.raised(), 1);
+        let rendered = alerts[0].line();
+        assert!(rendered.starts_with("ALERT t_ns=13000000 scope=anomaly:stage:gaussian z="));
+        assert!(rendered.ends_with("exemplar=deadbeef"), "{rendered}");
+    }
+
+    #[test]
+    fn alert_stream_is_deterministic() {
+        let feed = |m: &mut AnomalyMonitor| -> Vec<String> {
+            let mut out = Vec::new();
+            for i in 0..15u64 {
+                let wall = if i == 13 { 90_000.0 } else { 1000.0 * (i + 1) as f64 };
+                let runs = (i + 1) as f64;
+                for a in m.observe_line(&line(i, 500.0, wall, runs, "t")) {
+                    out.push(a.line());
+                }
+            }
+            out
+        };
+        let mut a = AnomalyMonitor::from_sigma(3.0).unwrap();
+        let mut b = AnomalyMonitor::from_sigma(3.0).unwrap();
+        let (la, lb) = (feed(&mut a), feed(&mut b));
+        assert!(!la.is_empty());
+        assert_eq!(la, lb, "identical inputs must render identical alert lines");
+    }
+
+    #[test]
+    fn missing_sections_and_exemplars_are_tolerated() {
+        let mut m = AnomalyMonitor::from_sigma(1.0).unwrap();
+        let bare = Json::parse(r#"{"t_ns": 5}"#).unwrap();
+        assert!(m.observe_line(&bare).is_empty());
+        // A line with series but no exemplars alerts with "none".
+        let mut l = Json::parse(r#"{"t_ns": 1, "queue": {"depth": 0}}"#).unwrap();
+        for _ in 0..WARMUP {
+            m.observe_line(&l);
+        }
+        l = Json::parse(r#"{"t_ns": 2, "queue": {"depth": 1000}}"#).unwrap();
+        let alerts = m.observe_line(&l);
+        assert_eq!(alerts.len(), 1);
+        assert_eq!(alerts[0].exemplar, "none");
+    }
+}

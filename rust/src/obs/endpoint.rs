@@ -1,10 +1,22 @@
 //! `--obs-port`: a loopback TCP endpoint serving the tier's current
-//! snapshot line. Protocol: connect → read one JSON line → the server
-//! closes the connection. No HTTP, no request parsing — `nc` or
-//! `bash -c 'cat </dev/tcp/127.0.0.1/PORT'` is a complete client.
+//! snapshot line. Protocol: connect → read — the server writes its
+//! response and closes the connection. No HTTP, no request parsing —
+//! `nc` or `bash -c 'cat </dev/tcp/127.0.0.1/PORT'` is a complete
+//! client.
+//!
+//! **Framing** (newline-delimited, 0–2 lines then EOF):
+//!
+//! * line 1 — the newest snapshot JSON line;
+//! * line 2 — present only when the run has alerted: the newest alert
+//!   line (`ALERT …`, health transition or anomaly), distinguishable
+//!   from line 1 by its non-`{` first byte.
+//!
+//! Before anything has been published the server closes the
+//! connection without writing a byte (clean EOF, zero lines) — never
+//! an empty line a parser would trip over.
 //!
 //! The endpoint is a *window*, not a log: it always serves the latest
-//! published line, so polling it never perturbs the `--telemetry-log`
+//! published state, so polling it never perturbs the `--telemetry-log`
 //! stream (whose bytes stay replay-deterministic). The accept thread
 //! polls a nonblocking listener and so needs no clock reads — the
 //! pallas-lint clock-purity allowlist stays unchanged.
@@ -18,15 +30,30 @@ use std::time::Duration;
 
 use crate::error::Result;
 
-/// The accept loop: serve the latest line to each connection, close,
-/// and re-check the stop flag between polls.
-fn serve_loop(listener: TcpListener, latest: Arc<Mutex<String>>, stop: Arc<AtomicBool>) {
+/// The accept loop: serve the latest snapshot line (plus the latest
+/// alert line when one exists) to each connection, close, and re-check
+/// the stop flag between polls. Empty state closes without writing
+/// (see the module docs for the framing).
+fn serve_loop(
+    listener: TcpListener,
+    latest: Arc<Mutex<String>>,
+    latest_alert: Arc<Mutex<String>>,
+    stop: Arc<AtomicBool>,
+) {
     while !stop.load(Ordering::Acquire) {
         match listener.accept() {
             Ok((mut conn, _)) => {
                 let line = latest.lock().expect("obs endpoint poisoned").clone();
+                if line.is_empty() {
+                    continue;
+                }
                 let _ = conn.write_all(line.as_bytes());
                 let _ = conn.write_all(b"\n");
+                let alert = latest_alert.lock().expect("obs endpoint poisoned").clone();
+                if !alert.is_empty() {
+                    let _ = conn.write_all(alert.as_bytes());
+                    let _ = conn.write_all(b"\n");
+                }
             }
             // WouldBlock (no pending connection) and transient accept
             // errors both back off the same way.
@@ -42,6 +69,7 @@ fn serve_loop(listener: TcpListener, latest: Arc<Mutex<String>>, stop: Arc<Atomi
 pub struct ObsEndpoint {
     port: u16,
     latest: Arc<Mutex<String>>,
+    latest_alert: Arc<Mutex<String>>,
     stop: Arc<AtomicBool>,
     handle: Mutex<Option<JoinHandle<()>>>,
 }
@@ -54,18 +82,32 @@ impl ObsEndpoint {
         listener.set_nonblocking(true)?;
         let port = listener.local_addr()?.port();
         let latest = Arc::new(Mutex::new(String::new()));
+        let latest_alert = Arc::new(Mutex::new(String::new()));
         let stop = Arc::new(AtomicBool::new(false));
         let thread_latest = Arc::clone(&latest);
+        let thread_alert = Arc::clone(&latest_alert);
         let thread_stop = Arc::clone(&stop);
         let handle = thread::Builder::new()
             .name("obs-endpoint".to_string())
-            .spawn(move || serve_loop(listener, thread_latest, thread_stop))?;
-        Ok(Arc::new(ObsEndpoint { port, latest, stop, handle: Mutex::new(Some(handle)) }))
+            .spawn(move || serve_loop(listener, thread_latest, thread_alert, thread_stop))?;
+        Ok(Arc::new(ObsEndpoint {
+            port,
+            latest,
+            latest_alert,
+            stop,
+            handle: Mutex::new(Some(handle)),
+        }))
     }
 
-    /// Replace the line served to subsequent connections.
+    /// Replace the snapshot line served to subsequent connections.
     pub fn publish(&self, line: &str) {
         *self.latest.lock().expect("obs endpoint poisoned") = line.to_string();
+    }
+
+    /// Replace the alert line served (as line 2) to subsequent
+    /// connections.
+    pub fn publish_alert(&self, line: &str) {
+        *self.latest_alert.lock().expect("obs endpoint poisoned") = line.to_string();
     }
 
     /// The bound port — the OS-assigned one when `start` was given 0.
@@ -113,12 +155,31 @@ mod tests {
     fn endpoint_serves_the_latest_line_per_connection() {
         let ep = ObsEndpoint::start(0).unwrap();
         assert_ne!(ep.port(), 0);
+        // Nothing published yet: clean close, zero bytes — not an
+        // empty line.
+        assert_eq!(fetch(ep.port()), "");
         ep.publish("{\"tier\": \"serve\"}");
         assert_eq!(fetch(ep.port()), "{\"tier\": \"serve\"}\n");
         ep.publish("{\"tier\": \"cluster\"}");
         assert_eq!(fetch(ep.port()), "{\"tier\": \"cluster\"}\n");
         ep.stop();
         ep.stop();
+    }
+
+    #[test]
+    fn alert_line_rides_second() {
+        let ep = ObsEndpoint::start(0).unwrap();
+        ep.publish("{\"tier\": \"serve\"}");
+        ep.publish_alert("ALERT t_ns=5 scope=anomaly:queue_depth z=4.00");
+        assert_eq!(
+            fetch(ep.port()),
+            "{\"tier\": \"serve\"}\nALERT t_ns=5 scope=anomaly:queue_depth z=4.00\n"
+        );
+        // An alert with no snapshot line still closes cleanly empty:
+        // the snapshot line frames the response.
+        let ep2 = ObsEndpoint::start(0).unwrap();
+        ep2.publish_alert("ALERT t_ns=1 scope=serve from=healthy to=degraded");
+        assert_eq!(fetch(ep2.port()), "");
     }
 
     #[test]

@@ -112,16 +112,24 @@ pub struct HealthTracker {
     sink: AlertSink,
     last: BTreeMap<String, Health>,
     emitted: u64,
+    /// The newest alert line emitted through this tracker (health
+    /// transition or raised anomaly) — what the `--obs-port` endpoint
+    /// serves as its second line.
+    last_line: Option<String>,
 }
 
 impl HealthTracker {
+    fn with_sink(sink: AlertSink) -> HealthTracker {
+        HealthTracker { sink, last: BTreeMap::new(), emitted: 0, last_line: None }
+    }
+
     /// The inert tracker: `observe` updates no state, emits nothing.
     pub fn off() -> HealthTracker {
-        HealthTracker { sink: AlertSink::Off, last: BTreeMap::new(), emitted: 0 }
+        HealthTracker::with_sink(AlertSink::Off)
     }
 
     pub fn stderr() -> HealthTracker {
-        HealthTracker { sink: AlertSink::Stderr, last: BTreeMap::new(), emitted: 0 }
+        HealthTracker::with_sink(AlertSink::Stderr)
     }
 
     /// Open (truncating) an alert log — a run's alerts are
@@ -129,7 +137,20 @@ impl HealthTracker {
     pub fn to_file(path: &Path) -> Result<HealthTracker> {
         let file = File::create(path)
             .map_err(|e| Error::Config(format!("alert log {}: {e}", path.display())))?;
-        Ok(HealthTracker { sink: AlertSink::File(file), last: BTreeMap::new(), emitted: 0 })
+        Ok(HealthTracker::with_sink(AlertSink::File(file)))
+    }
+
+    /// Open an alert log for *appending* — for a second emitter joining
+    /// a log another tracker already owns (the cluster front door's
+    /// post-run anomaly fold appends after the supervisor's
+    /// restart/health alerts without truncating them away).
+    pub fn to_file_append(path: &Path) -> Result<HealthTracker> {
+        let file = File::options()
+            .create(true)
+            .append(true)
+            .open(path)
+            .map_err(|e| Error::Config(format!("alert log {}: {e}", path.display())))?;
+        Ok(HealthTracker::with_sink(AlertSink::File(file)))
     }
 
     /// Resolve the `--alert-log` spec: empty disables, the literal
@@ -142,6 +163,16 @@ impl HealthTracker {
         }
     }
 
+    /// Like [`HealthTracker::from_spec`], but file sinks open in append
+    /// mode.
+    pub fn from_spec_append(spec: &str) -> Result<HealthTracker> {
+        match spec {
+            "" => Ok(HealthTracker::off()),
+            "stderr" => Ok(HealthTracker::stderr()),
+            path => HealthTracker::to_file_append(Path::new(path)),
+        }
+    }
+
     /// Is any sink attached? (Inert trackers skip all bookkeeping.)
     pub fn active(&self) -> bool {
         !matches!(self.sink, AlertSink::Off)
@@ -150,6 +181,12 @@ impl HealthTracker {
     /// Transition lines emitted so far.
     pub fn emitted(&self) -> u64 {
         self.emitted
+    }
+
+    /// The newest alert line (health transition or raised anomaly),
+    /// whatever sink it went to. `None` until something alerted.
+    pub fn last_line(&self) -> Option<&str> {
+        self.last_line.as_deref()
     }
 
     /// Record `scope`'s state at `t_ns`; emit and count a line when it
@@ -169,16 +206,32 @@ impl HealthTracker {
             from.name(),
             health.name()
         );
+        self.write_line(line);
+        true
+    }
+
+    /// Emit a pre-rendered alert line (the anomaly monitor's
+    /// `scope=anomaly:*` lines arrive here already formatted). Unlike
+    /// [`HealthTracker::observe`], this works even with no sink
+    /// attached: the line is still remembered as
+    /// [`HealthTracker::last_line`] and counted, so `--anomaly-sigma`
+    /// alerts reach the `--obs-port` endpoint without requiring
+    /// `--alert-log`.
+    pub fn raise(&mut self, line: String) {
+        self.write_line(line);
+    }
+
+    fn write_line(&mut self, line: String) {
         match &mut self.sink {
-            AlertSink::Off => unreachable!("checked active above"),
+            AlertSink::Off => {}
             AlertSink::Stderr => eprintln!("{line}"),
             AlertSink::File(f) => {
                 let _ = writeln!(f, "{line}");
                 let _ = f.flush();
             }
         }
+        self.last_line = Some(line);
         self.emitted += 1;
-        true
     }
 }
 
@@ -260,5 +313,33 @@ mod tests {
         assert!(!HealthTracker::from_spec("").unwrap().active());
         assert!(HealthTracker::from_spec("stderr").unwrap().active());
         assert!(matches!(HealthTracker::from_spec("stderr").unwrap().sink, AlertSink::Stderr));
+        assert!(!HealthTracker::from_spec_append("").unwrap().active());
+    }
+
+    #[test]
+    fn raised_lines_are_remembered_even_without_a_sink() {
+        let mut t = HealthTracker::off();
+        assert_eq!(t.last_line(), None);
+        t.raise("ALERT t_ns=7 scope=anomaly:queue_depth z=5.00".to_string());
+        assert_eq!(t.last_line(), Some("ALERT t_ns=7 scope=anomaly:queue_depth z=5.00"));
+        assert_eq!(t.emitted(), 1);
+    }
+
+    #[test]
+    fn append_sink_joins_an_existing_log() {
+        let dir = std::env::temp_dir().join("canny_obs_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("{}_alerts_append.log", std::process::id()));
+        let mut first = HealthTracker::to_file(&path).unwrap();
+        assert!(first.observe(100, "serve", Health::Degraded));
+        assert_eq!(first.last_line(), Some("ALERT t_ns=100 scope=serve from=healthy to=degraded"));
+        drop(first);
+        let mut second = HealthTracker::to_file_append(&path).unwrap();
+        second.raise("ALERT t_ns=200 scope=anomaly:latency_mean z=4.10".to_string());
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2, "append must not truncate: {lines:?}");
+        assert!(lines[0].contains("to=degraded"));
+        assert!(lines[1].contains("anomaly:latency_mean"));
     }
 }

@@ -82,6 +82,20 @@ fn merge_values(key: Option<&str>, vals: &[&Json]) -> Json {
             Json::Arr(all)
         }
         Json::Obj(_) => {
+            // Exemplar objects (`{trace, value_ns}`) are atomic: the
+            // cluster-wide exemplar for a bucket is the single worst
+            // observation, not a sum of values with an arbitrary trace.
+            if vals.iter().all(|v| is_exemplar(v)) {
+                let worst = vals
+                    .iter()
+                    .max_by(|a, b| {
+                        let va = a.get("value_ns").and_then(Json::as_f64).unwrap_or(0.0);
+                        let vb = b.get("value_ns").and_then(Json::as_f64).unwrap_or(0.0);
+                        va.total_cmp(&vb)
+                    })
+                    .expect("non-empty checked above");
+                return (*worst).clone();
+            }
             let keys: BTreeSet<&String> =
                 vals.iter().filter_map(|v| v.as_obj()).flat_map(|m| m.keys()).collect();
             let mut out = BTreeMap::new();
@@ -92,6 +106,15 @@ fn merge_values(key: Option<&str>, vals: &[&Json]) -> Json {
             Json::Obj(out)
         }
     }
+}
+
+/// Is this object an exemplar leaf — exactly `{"trace": …,
+/// "value_ns": …}`? (The shape test keys the merge rule; no other
+/// snapshot object carries this exact key pair.)
+fn is_exemplar(v: &Json) -> bool {
+    v.as_obj().is_some_and(|m| {
+        m.len() == 2 && m.contains_key("trace") && m.contains_key("value_ns")
+    })
 }
 
 /// The sections a cluster line carries when no worker has reported
@@ -107,6 +130,7 @@ pub fn zero_line() -> BTreeMap<String, Json> {
     let mut m = BTreeMap::new();
     m.insert("alerts".to_string(), Json::Num(0.0));
     m.insert("cache".to_string(), Json::Obj(cache));
+    m.insert("exemplars".to_string(), Json::Obj(BTreeMap::new()));
     m.insert("gate".to_string(), Json::Obj(BTreeMap::new()));
     m.insert("health".to_string(), Json::Str("healthy".to_string()));
     m.insert("lanes".to_string(), Json::Arr(Vec::new()));
@@ -213,6 +237,33 @@ mod tests {
         assert_eq!(workers[0].get("seq").unwrap().as_f64(), Some(7.0));
         assert_eq!(workers[1].get("worker").unwrap().as_f64(), Some(3.0));
         assert_eq!(workers[1].get("seq").unwrap().as_f64(), Some(9.0));
+    }
+
+    #[test]
+    fn exemplars_take_the_single_worst_observation() {
+        let a = Json::parse(
+            r#"{"exemplars": {"latency": {"1023": {"trace": "aa", "value_ns": 900},
+                "8191": {"trace": "bb", "value_ns": 5000}}}}"#,
+        )
+        .unwrap();
+        let b = Json::parse(
+            r#"{"exemplars": {"latency": {"1023": {"trace": "cc", "value_ns": 1000}}}}"#,
+        )
+        .unwrap();
+        let mut latest = BTreeMap::new();
+        latest.insert(0, a);
+        latest.insert(1, b);
+        let line = merged_line(&latest, 0);
+        let buckets = line.get("exemplars").unwrap().get("latency").unwrap();
+        // Shared bucket: the worse observation wins wholesale — value
+        // and trace travel together, never a summed value with a
+        // first-seen trace.
+        let shared = buckets.get("1023").unwrap();
+        assert_eq!(shared.get("trace").unwrap().as_str(), Some("cc"));
+        assert_eq!(shared.get("value_ns").unwrap().as_f64(), Some(1000.0));
+        // A bucket only one worker reported passes through untouched.
+        let solo = buckets.get("8191").unwrap();
+        assert_eq!(solo.get("trace").unwrap().as_str(), Some("bb"));
     }
 
     #[test]

@@ -44,9 +44,41 @@
 //!   front door folds the workers' streamed snapshot lines into one
 //!   cluster-tier line with totals plus per-worker sections.
 //! * [`endpoint::ObsEndpoint`] — a live snapshot window on loopback
-//!   TCP (`--obs-port`): connect, read the tier's current snapshot
-//!   line, the server closes. No HTTP; polling it never perturbs the
-//!   deterministic `--telemetry-log` bytes.
+//!   TCP (`--obs-port`): connect and the server writes the tier's
+//!   current snapshot line, then — when one has fired — the newest
+//!   alert line as a second line, then closes. Framing is line-based
+//!   (`\n`-terminated JSON, then an optional `ALERT …` line); before
+//!   the first snapshot the connection closes clean with zero bytes.
+//!   No HTTP; polling it never perturbs the deterministic
+//!   `--telemetry-log` bytes.
+//!
+//! Trace-analytics pieces (PR 10):
+//!
+//! * [`sample::TraceSampler`] — **tail-based** trace sampling
+//!   (`--trace-sample all | slow:<ms> | errors | head:<1-in-n>`): the
+//!   keep/drop verdict is made *after* a request completes, from its
+//!   observed latency, so `slow:5` retains exactly the traces you
+//!   would grep for. Under the virtual clock verdicts derive from
+//!   modeled quantities only — two replays pick identical trace sets.
+//!   In cluster mode the front door's policy rides the request frame
+//!   (a `sample` key next to the trace context) so workers skip
+//!   building subtrees the front door will discard.
+//! * [`registry::Histogram`] exemplars — each latency bucket cites the
+//!   trace id + value of its worst **sampled** observation, exported
+//!   in the snapshot line's `exemplars` section. Exemplars are noted
+//!   only for kept traces, so every exported id resolves to a trace
+//!   retained in `--trace-log`.
+//! * [`anomaly::AnomalyMonitor`] — EWMA mean/variance detectors over
+//!   the rolling telemetry series (`--anomaly-sigma <n>`, off at 0):
+//!   each snapshot line is scored against the learned state and a
+//!   `|z| >= sigma` excursion raises an `ALERT … scope=anomaly:…`
+//!   line through the run's [`health::HealthTracker`], citing the
+//!   worst exemplar trace id on the offending line.
+//! * [`analyze::analyze`] — offline analytics over the files the run
+//!   wrote: `cannyd analyze trace.jsonl` aggregates span latencies
+//!   (count/p50/p99 per span kind) and extracts per-trace critical
+//!   paths; telemetry JSONL and bench-compare `BENCH_*.json` docs are
+//!   accepted too, and `--against baseline` adds per-name deltas.
 //!
 //! ## Telemetry JSONL schema (one object per line)
 //!
@@ -56,6 +88,8 @@
 //!   "cache": {"enabled": true, "...": "the serve/stream cache section",
 //!             "tiers": {"serve": {"hit_rate": 0.75, "...": "…"},
 //!                       "stream": {"hit_rate": 0.0, "...": "…"}}},
+//!   "exemplars": {"latency": {"1048575": {"trace": "00779c4fb295f4db00000007",
+//!                                         "value_ns": 1048000}}},
 //!   "gate": {"hit_rate": 0.92, "tiles_clean": 736, "tiles_dirty": 64},
 //!   "health": "healthy",
 //!   "lanes": [{"batches": 12, "busy_ns": 81234567, "completed": 40,
@@ -86,11 +120,21 @@
 //!   schema check asserts). `utilization` is **wall-clock only**: a
 //!   measured sample would break virtual-replay byte-identity, so
 //!   deterministic replays omit the key rather than fake it.
-//! * `alerts` counts health-transition lines the run's
-//!   [`health::HealthTracker`] has emitted so far (`--alert-log
-//!   stderr|FILE`; format `ALERT t_ns=… scope=… from=… to=…`, one line
-//!   per healthy↔degraded↔stalled change per lane/tier/worker scope).
-//!   Zero when alerting is off.
+//! * `alerts` counts alert lines the run's [`health::HealthTracker`]
+//!   has emitted so far (`--alert-log stderr|FILE`). Health
+//!   transitions use `ALERT t_ns=… scope=… from=… to=…`, one line per
+//!   healthy↔degraded↔stalled change per lane/tier/worker scope.
+//!   Anomaly excursions (`--anomaly-sigma`) use `ALERT t_ns=…
+//!   scope=anomaly:<series> z=… value=… mean=… exemplar=<trace|none>`
+//!   where `<series>` is `latency_mean`, `queue_depth`,
+//!   `gate_hit_rate`, `cache_hit_rate:<tier>` or `stage:<name>`.
+//!   Zero when alerting is off. Anomaly alerts raised while rendering
+//!   a line are counted into the *next* line's `alerts` value.
+//! * `exemplars.latency` maps a latency bucket's inclusive upper
+//!   bound (stringified ns) to the `trace` id and `value_ns` of the
+//!   worst observation sampled into that bucket; only tail-sampled
+//!   (kept) traces are cited, so every id resolves in `--trace-log`.
+//!   Empty when tracing or sampling retains nothing.
 //! * `latency_ns` quantiles are bucket-resolution approximations from
 //!   the cumulative power-of-two histogram (`count`/`mean`/`max` are
 //!   exact); `slo` quantiles are exact nearest-rank over the rolling
@@ -187,15 +231,48 @@
 //!   ]
 //! }
 //! ```
+//!
+//! ## Analyze report schema (`cannyd analyze <file> [--against <file>]`)
+//!
+//! One JSON document on stdout. `kind` sniffs the input: `spans`
+//! (span JSONL), `telemetry` (snapshot JSONL) or `bench`
+//! (bench-compare `BENCH_*.json`). `aggregates` maps a series name
+//! (span name, telemetry series, or bench case) to exact nearest-rank
+//! quantiles over its observations; `traces` and `critical_paths`
+//! (the per-trace longest child chain at each depth, rendered
+//! `root>child>…`, mapped to how many traces share it) appear for
+//! span inputs only. With `--against`, `deltas` carries the per-name
+//! comparison for every series present in both files (`delta_*_pct`
+//! rounded to 0.1, positive = current slower):
+//!
+//! ```json
+//! {
+//!   "against": "baseline.jsonl",
+//!   "aggregates": {"service": {"count": 40, "p50_ns": 1048000,
+//!                              "p99_ns": 4123000}},
+//!   "critical_paths": {"request>service>stage:sobel": 24},
+//!   "deltas": {"service": {"base_p50_ns": 1000000, "base_p99_ns": 4000000,
+//!                          "cur_p50_ns": 1048000, "cur_p99_ns": 4123000,
+//!                          "delta_p50_pct": 4.8, "delta_p99_pct": 3.1}},
+//!   "input": "trace.jsonl",
+//!   "kind": "spans",
+//!   "traces": 40
+//! }
+//! ```
 
+pub mod analyze;
+pub mod anomaly;
 pub mod endpoint;
 pub mod fault;
 pub mod health;
 pub mod merge;
 pub mod registry;
+pub mod sample;
 pub mod snapshot;
 pub mod trace;
 
+pub use analyze::analyze;
+pub use anomaly::{AnomalyAlert, AnomalyMonitor, EwmaDetector};
 pub use endpoint::ObsEndpoint;
 pub use fault::{FaultManager, OverloadPolicy, ShedDecision};
 pub use health::{AlertSink, Health, HealthTracker, DEFAULT_STALL_AFTER_NS};
@@ -203,6 +280,7 @@ pub use merge::{merged_line, zero_line};
 pub use registry::{
     Counter, Gauge, Histogram, HistogramSnapshot, LaneTelemetry, StageTally, Telemetry,
 };
+pub use sample::{SamplePolicy, TraceSampler};
 pub use snapshot::{
     CacheProbe, ClockProbe, SloProbe, SnapshotEngine, TickInputs, WallSnapshotter,
     REQUIRED_LINE_KEYS,

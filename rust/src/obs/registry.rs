@@ -78,12 +78,20 @@ pub const HIST_BUCKETS: usize = 64;
 /// quantiles read out of a snapshot are *bucket-resolution
 /// approximations* (the bucket's inclusive upper bound), while `count`,
 /// `sum`/`mean` and `max` are exact.
+///
+/// Each bucket may additionally carry an **exemplar** — the trace id
+/// and value of the worst observation that landed in it
+/// ([`Histogram::note_exemplar`]) — linking the metric back to a
+/// concrete retrievable trace. Exemplars live behind a `Mutex` (trace
+/// ids are strings), so they are noted only for *sampled* requests —
+/// at trace-retention granularity, never per hot-path record.
 #[derive(Debug)]
 pub struct Histogram {
     buckets: Vec<AtomicU64>,
     count: AtomicU64,
     sum_ns: AtomicU64,
     max_ns: AtomicU64,
+    exemplars: Mutex<BTreeMap<usize, (String, u64)>>,
 }
 
 impl Default for Histogram {
@@ -93,6 +101,7 @@ impl Default for Histogram {
             count: AtomicU64::new(0),
             sum_ns: AtomicU64::new(0),
             max_ns: AtomicU64::new(0),
+            exemplars: Mutex::new(BTreeMap::new()),
         }
     }
 }
@@ -123,12 +132,34 @@ impl Histogram {
         self.max_ns.fetch_max(ns, Ordering::Relaxed);
     }
 
+    /// Attach an exemplar to `ns`'s bucket: the bucket remembers the
+    /// worst (highest-value) observation it has seen and the trace id
+    /// that produced it. Does **not** touch the counts — callers still
+    /// [`Histogram::record`] every observation; exemplars are noted
+    /// only for observations whose trace the tail sampler retained, so
+    /// every exported exemplar resolves to a trace in `--trace-log`.
+    pub fn note_exemplar(&self, ns: u64, trace: &str) {
+        let mut map = self.exemplars.lock().expect("exemplars poisoned");
+        let slot = map.entry(bucket_of(ns)).or_insert_with(|| (trace.to_string(), ns));
+        if ns >= slot.1 {
+            *slot = (trace.to_string(), ns);
+        }
+    }
+
     pub fn snapshot(&self) -> HistogramSnapshot {
+        let exemplars = self
+            .exemplars
+            .lock()
+            .expect("exemplars poisoned")
+            .iter()
+            .map(|(&i, (trace, ns))| (bucket_hi(i), (trace.clone(), *ns)))
+            .collect();
         HistogramSnapshot {
             counts: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
             count: self.count.load(Ordering::Relaxed),
             sum_ns: self.sum_ns.load(Ordering::Relaxed),
             max_ns: self.max_ns.load(Ordering::Relaxed),
+            exemplars,
         }
     }
 }
@@ -140,6 +171,9 @@ pub struct HistogramSnapshot {
     pub count: u64,
     pub sum_ns: u64,
     pub max_ns: u64,
+    /// Worst observation per bucket, keyed by the bucket's inclusive
+    /// upper bound: `bucket_hi -> (trace id, observed ns)`.
+    pub exemplars: BTreeMap<u64, (String, u64)>,
 }
 
 impl HistogramSnapshot {
@@ -385,6 +419,27 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn exemplars_keep_the_worst_observation_per_bucket() {
+        let h = Histogram::default();
+        for ns in [100u64, 300, 310, 5_000] {
+            h.record(ns);
+        }
+        // 300 and 310 share the [256,512) bucket: the worse one wins.
+        h.note_exemplar(300, "trace-a");
+        h.note_exemplar(310, "trace-b");
+        h.note_exemplar(5_000, "trace-c");
+        let s = h.snapshot();
+        assert_eq!(s.exemplars.len(), 2);
+        assert_eq!(s.exemplars[&511], ("trace-b".to_string(), 310));
+        assert_eq!(s.exemplars[&8191], ("trace-c".to_string(), 5_000));
+        // Counts are untouched by exemplar notes.
+        assert_eq!(s.count, 4);
+        // Ties resolve to the latest writer (replay-stable ordering).
+        h.note_exemplar(310, "trace-d");
+        assert_eq!(h.snapshot().exemplars[&511], ("trace-d".to_string(), 310));
     }
 
     #[test]

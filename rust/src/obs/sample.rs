@@ -1,0 +1,246 @@
+//! Tail-based trace sampling (`--trace-sample`): the decision whether a
+//! request's buffered spans reach `--trace-log` is made *after* the
+//! request completes, when its end-to-end latency is known — so under
+//! real load only the interesting traces (slow, SLO-violating) are
+//! retained while the cheap majority is dropped before it ever touches
+//! the trace file.
+//!
+//! Policies (`--trace-sample all|slow:<ms>|errors|head:<1-in-n>`):
+//!
+//! * `all` — keep every trace (the default; PR 9 behavior).
+//! * `slow:<ms>` — keep traces whose end-to-end latency is at least
+//!   `<ms>` milliseconds (`slow:0` keeps everything and exercises the
+//!   sampling path end to end).
+//! * `errors` — keep traces that violated the run's p99 SLO target
+//!   (`--slo-p99-ms`); in this lossless pipeline an SLO violation *is*
+//!   the error signal, there are no failed requests to catch.
+//! * `head:<n>` — classic head sampling, kept for comparison: 1 in `n`
+//!   by admission sequence number (`seq % n == 0`).
+//!
+//! Determinism contract: every verdict is a pure function of modeled
+//! quantities — the virtual-clock latency and the admission sequence
+//! number — so two replays of the same trace keep *identical* trace
+//! sets and `--trace-log` stays byte-identical. No clock is read here
+//! (pallas-lint rule 2 holds with an unchanged allowlist).
+//!
+//! Cluster mode: the front door's verdict governs the whole tree. The
+//! sampler rides the request frame as the canonical wire form
+//! ([`TraceSampler::to_wire`], thresholds pre-resolved to ns) next to
+//! the trace context; a worker applies the verdict locally only when
+//! it is decidable on both ends ([`TraceSampler::remote_verdict`]:
+//! virtual clocks share the modeled latency, `head`/`all` need only the
+//! request id), otherwise it ships its spans and the front door drops
+//! the front half and the worker subtree *together* — a trace is never
+//! torn.
+
+use crate::error::{Error, Result};
+
+/// What `--trace-sample` keeps (thresholds resolved to ns at parse
+/// time, so verdicts need no further configuration).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SamplePolicy {
+    /// Keep every trace.
+    All,
+    /// Keep traces at least this slow (end-to-end ns).
+    Slow(u64),
+    /// Keep SLO-violating traces (latency above the stored target ns).
+    Errors,
+    /// Keep 1 in `n` by admission sequence number.
+    Head(u64),
+}
+
+/// The tail sampler: a parsed policy plus the resolved SLO target the
+/// `errors` policy compares against.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceSampler {
+    policy: SamplePolicy,
+    slo_ns: u64,
+}
+
+impl TraceSampler {
+    /// The keep-everything sampler (`--trace-sample all`, the default).
+    pub fn all() -> TraceSampler {
+        TraceSampler { policy: SamplePolicy::All, slo_ns: 0 }
+    }
+
+    /// Parse a `--trace-sample` spec. `slo_p99_ns` is the run's SLO
+    /// target, captured here so `errors` verdicts are self-contained.
+    pub fn from_spec(spec: &str, slo_p99_ns: u64) -> Result<TraceSampler> {
+        let bad = || {
+            Error::Config(format!(
+                "--trace-sample `{spec}` (expected all | slow:<ms> | errors | head:<1-in-n>)"
+            ))
+        };
+        let policy = match spec {
+            "" | "all" => SamplePolicy::All,
+            "errors" => SamplePolicy::Errors,
+            _ => match spec.split_once(':') {
+                Some(("slow", ms)) => {
+                    let ms: f64 = ms.parse().map_err(|_| bad())?;
+                    if !(ms >= 0.0) || !ms.is_finite() {
+                        return Err(bad());
+                    }
+                    SamplePolicy::Slow((ms * 1e6) as u64)
+                }
+                Some(("head", n)) => {
+                    let n: u64 = n.parse().map_err(|_| bad())?;
+                    if n == 0 {
+                        return Err(bad());
+                    }
+                    SamplePolicy::Head(n)
+                }
+                _ => return Err(bad()),
+            },
+        };
+        Ok(TraceSampler { policy, slo_ns: slo_p99_ns })
+    }
+
+    pub fn policy(&self) -> SamplePolicy {
+        self.policy
+    }
+
+    /// Does this sampler keep everything? (`all`, and `slow:0` — every
+    /// latency clears a zero bar.)
+    pub fn keeps_all(&self) -> bool {
+        matches!(self.policy, SamplePolicy::All | SamplePolicy::Slow(0))
+    }
+
+    /// The tail verdict for one completed request: `latency_ns` is its
+    /// end-to-end latency (modeled under the virtual clock), `seq` its
+    /// admission sequence number (the request id).
+    pub fn keep(&self, latency_ns: u64, seq: u64) -> bool {
+        match self.policy {
+            SamplePolicy::All => true,
+            SamplePolicy::Slow(t) => latency_ns >= t,
+            SamplePolicy::Errors => self.slo_ns > 0 && latency_ns > self.slo_ns,
+            SamplePolicy::Head(n) => seq % n == 0,
+        }
+    }
+
+    /// A worker-side verdict, or `None` when only the front door can
+    /// decide. Decidable when both ends compute the same latency
+    /// (virtual clocks share the modeled timeline) or when the policy
+    /// ignores latency (`all`, `head`). Undecidable (wall-clock
+    /// `slow`/`errors`, where the wire latency is measured at the front
+    /// door) means: ship the spans, the front door drops the whole tree
+    /// if its verdict says so.
+    pub fn remote_verdict(
+        &self,
+        virtual_clock: bool,
+        latency_ns: u64,
+        seq: u64,
+    ) -> Option<bool> {
+        let decidable = virtual_clock
+            || matches!(self.policy, SamplePolicy::All | SamplePolicy::Head(_));
+        if decidable {
+            Some(self.keep(latency_ns, seq))
+        } else {
+            None
+        }
+    }
+
+    /// The canonical wire form the request frame carries (thresholds in
+    /// resolved ns, so both ends apply bit-identical arithmetic):
+    /// `all`, `slow:<ns>`, `errors:<slo_ns>`, `head:<n>`.
+    pub fn to_wire(&self) -> String {
+        match self.policy {
+            SamplePolicy::All => "all".to_string(),
+            SamplePolicy::Slow(t) => format!("slow:{t}"),
+            SamplePolicy::Errors => format!("errors:{}", self.slo_ns),
+            SamplePolicy::Head(n) => format!("head:{n}"),
+        }
+    }
+
+    /// Parse the wire form (inverse of [`TraceSampler::to_wire`]);
+    /// `None` on anything malformed — the worker then ships all spans
+    /// and the front door's verdict still governs.
+    pub fn from_wire(wire: &str) -> Option<TraceSampler> {
+        if wire == "all" {
+            return Some(TraceSampler::all());
+        }
+        let (kind, value) = wire.split_once(':')?;
+        let value: u64 = value.parse().ok()?;
+        match kind {
+            "slow" => Some(TraceSampler { policy: SamplePolicy::Slow(value), slo_ns: 0 }),
+            "errors" => Some(TraceSampler { policy: SamplePolicy::Errors, slo_ns: value }),
+            "head" if value > 0 => {
+                Some(TraceSampler { policy: SamplePolicy::Head(value), slo_ns: 0 })
+            }
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_parse_and_reject() {
+        assert_eq!(TraceSampler::from_spec("all", 0).unwrap().policy(), SamplePolicy::All);
+        assert_eq!(TraceSampler::from_spec("", 0).unwrap().policy(), SamplePolicy::All);
+        assert_eq!(
+            TraceSampler::from_spec("slow:2.5", 0).unwrap().policy(),
+            SamplePolicy::Slow(2_500_000)
+        );
+        assert_eq!(
+            TraceSampler::from_spec("errors", 7).unwrap().policy(),
+            SamplePolicy::Errors
+        );
+        assert_eq!(
+            TraceSampler::from_spec("head:10", 0).unwrap().policy(),
+            SamplePolicy::Head(10)
+        );
+        for bad in ["slowest", "slow:", "slow:-1", "head:0", "head:x", "tail:3"] {
+            assert!(TraceSampler::from_spec(bad, 0).is_err(), "`{bad}` should be rejected");
+        }
+    }
+
+    #[test]
+    fn verdicts_follow_the_policy() {
+        let slow = TraceSampler::from_spec("slow:1", 0).unwrap();
+        assert!(slow.keep(1_000_000, 0));
+        assert!(slow.keep(2_000_000, 0));
+        assert!(!slow.keep(999_999, 0));
+        let errors = TraceSampler::from_spec("errors", 50_000_000).unwrap();
+        assert!(errors.keep(50_000_001, 0));
+        assert!(!errors.keep(50_000_000, 0));
+        // No SLO target: `errors` keeps nothing rather than everything.
+        assert!(!TraceSampler::from_spec("errors", 0).unwrap().keep(u64::MAX, 0));
+        let head = TraceSampler::from_spec("head:3", 0).unwrap();
+        let kept: Vec<u64> = (0..9).filter(|&s| head.keep(0, s)).collect();
+        assert_eq!(kept, vec![0, 3, 6]);
+        assert!(TraceSampler::all().keeps_all());
+        assert!(TraceSampler::from_spec("slow:0", 0).unwrap().keeps_all());
+        assert!(!slow.keeps_all());
+    }
+
+    #[test]
+    fn wire_form_round_trips_with_resolved_ns() {
+        for spec in ["all", "slow:2.5", "errors", "head:10"] {
+            let s = TraceSampler::from_spec(spec, 50_000_000).unwrap();
+            let back = TraceSampler::from_wire(&s.to_wire()).unwrap();
+            assert_eq!(back.policy(), s.policy(), "{spec}");
+            // The verdict function survives the wire (errors carries
+            // its resolved SLO target along).
+            for (lat, seq) in [(0, 0), (2_500_000, 1), (60_000_000, 3), (100, 10)] {
+                assert_eq!(back.keep(lat, seq), s.keep(lat, seq), "{spec} @ {lat}/{seq}");
+            }
+        }
+        assert_eq!(TraceSampler::from_spec("slow:2.5", 0).unwrap().to_wire(), "slow:2500000");
+        assert!(TraceSampler::from_wire("slow:x").is_none());
+        assert!(TraceSampler::from_wire("nope").is_none());
+    }
+
+    #[test]
+    fn remote_verdicts_are_conservative_under_wall_clocks() {
+        let slow = TraceSampler::from_spec("slow:1", 0).unwrap();
+        // Virtual: both ends share the modeled latency — decidable.
+        assert_eq!(slow.remote_verdict(true, 2_000_000, 0), Some(true));
+        assert_eq!(slow.remote_verdict(false, 2_000_000, 0), None);
+        // Latency-blind policies decide anywhere.
+        let head = TraceSampler::from_spec("head:2", 0).unwrap();
+        assert_eq!(head.remote_verdict(false, 0, 1), Some(false));
+        assert_eq!(TraceSampler::all().remote_verdict(false, 0, 9), Some(true));
+    }
+}

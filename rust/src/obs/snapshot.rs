@@ -30,6 +30,7 @@ use std::time::Duration;
 
 use crate::cache::CacheSnapshot;
 use crate::error::{Error, Result};
+use crate::obs::anomaly::AnomalyMonitor;
 use crate::obs::endpoint::ObsEndpoint;
 use crate::obs::health::{Health, HealthTracker, DEFAULT_STALL_AFTER_NS};
 use crate::obs::registry::Telemetry;
@@ -86,6 +87,10 @@ pub struct SnapshotEngine {
     /// published as the endpoint's current line, independent of whether
     /// a JSONL sink is attached.
     endpoint: Option<Arc<ObsEndpoint>>,
+    /// Streaming anomaly detection (`--anomaly-sigma`): every built
+    /// line is fed to the EWMA monitor; raised alerts go through the
+    /// tracker's sink (and its `last_line`, which the endpoint serves).
+    monitor: Option<AnomalyMonitor>,
 }
 
 impl SnapshotEngine {
@@ -103,6 +108,7 @@ impl SnapshotEngine {
             lines: 0,
             tracker: HealthTracker::off(),
             endpoint: None,
+            monitor: None,
         }
     }
 
@@ -125,6 +131,7 @@ impl SnapshotEngine {
             lines: 0,
             tracker: HealthTracker::off(),
             endpoint: None,
+            monitor: None,
         })
     }
 
@@ -162,6 +169,22 @@ impl SnapshotEngine {
         self
     }
 
+    /// Attach (or leave detached, with `None`) a streaming anomaly
+    /// monitor (`--anomaly-sigma`): every built line is fed to the
+    /// EWMA detectors, and raised alerts are emitted through the
+    /// attached alert tracker (or just remembered for the endpoint's
+    /// alert line when no `--alert-log` sink is configured).
+    pub fn with_anomaly(mut self, monitor: Option<AnomalyMonitor>) -> SnapshotEngine {
+        self.monitor = monitor;
+        self
+    }
+
+    /// Is anomaly detection attached? (Like alerting, a monitor keeps
+    /// the tick grid live without a JSONL sink.)
+    pub fn anomaly_active(&self) -> bool {
+        self.monitor.is_some()
+    }
+
     /// Is a live snapshot endpoint attached? (Like alerting, an
     /// endpoint keeps the tick grid live without a JSONL sink.)
     pub fn endpoint_active(&self) -> bool {
@@ -196,7 +219,11 @@ impl SnapshotEngine {
     /// The first tick fires at one interval, not at zero — a t=0 line
     /// would only ever hold zeros.
     pub fn next_tick_ns(&self) -> u64 {
-        if !self.enabled() && !self.tracker.active() && self.endpoint.is_none() {
+        if !self.enabled()
+            && !self.tracker.active()
+            && self.endpoint.is_none()
+            && self.monitor.is_none()
+        {
             return u64::MAX;
         }
         (self.ticks + 1).saturating_mul(self.interval_ns)
@@ -226,12 +253,21 @@ impl SnapshotEngine {
     /// a tracker/endpoint, the line is built and published but not
     /// written.
     pub fn emit(&mut self, inputs: TickInputs) -> Result<()> {
-        if self.out.is_none() && !self.tracker.active() && self.endpoint.is_none() {
+        if self.out.is_none()
+            && !self.tracker.active()
+            && self.endpoint.is_none()
+            && self.monitor.is_none()
+        {
             return Ok(());
         }
-        let rendered = self.build_line(&inputs).dump();
+        let line = self.build_line(&inputs);
+        self.scan_anomalies(&line, inputs.telemetry);
+        let rendered = line.dump();
         if let Some(ep) = &self.endpoint {
             ep.publish(&rendered);
+            if let Some(alert) = self.tracker.last_line() {
+                ep.publish_alert(alert);
+            }
         }
         if let Some(out) = self.out.as_mut() {
             out.write_all(rendered.as_bytes())?;
@@ -240,6 +276,21 @@ impl SnapshotEngine {
         }
         self.seq += 1;
         Ok(())
+    }
+
+    /// Feed one built line to the anomaly monitor (when attached),
+    /// routing raised alerts through the tracker's sink and counting
+    /// them into the registry. The line under scan is already built,
+    /// so anomaly alerts surface on the *next* line's `alerts` counter
+    /// — deterministic either way.
+    fn scan_anomalies(&mut self, line: &Json, telemetry: &Telemetry) {
+        let Some(monitor) = self.monitor.as_mut() else {
+            return;
+        };
+        for alert in monitor.observe_line(line) {
+            self.tracker.raise(alert.line());
+            telemetry.alerts.inc();
+        }
     }
 
     /// Flush and close, returning the number of lines written.
@@ -289,6 +340,21 @@ impl SnapshotEngine {
         }
 
         let lat = tel.latency.snapshot();
+        // Exemplar-linked buckets: each latency bucket that has one
+        // cites the trace id + value of its worst sampled observation.
+        // Bucket keys (the bucket's inclusive upper bound, stringified)
+        // are dynamic; the section shape is documented in
+        // [`crate::obs`].
+        let mut ex_latency = BTreeMap::new();
+        for (hi, (trace, value_ns)) in &lat.exemplars {
+            let mut e = BTreeMap::new();
+            e.insert("trace".into(), Json::Str(trace.clone()));
+            e.insert("value_ns".into(), num(*value_ns));
+            ex_latency.insert(hi.to_string(), Json::Obj(e));
+        }
+        let mut exemplars = BTreeMap::new();
+        exemplars.insert("latency".into(), Json::Obj(ex_latency));
+
         let mut latency = BTreeMap::new();
         latency.insert("count".into(), num(lat.count));
         latency.insert("max".into(), num(lat.max_ns));
@@ -334,6 +400,7 @@ impl SnapshotEngine {
         let mut line = BTreeMap::new();
         line.insert("alerts".into(), num(tel.alerts.get()));
         line.insert("cache".into(), inputs.cache.to_json());
+        line.insert("exemplars".into(), Json::Obj(exemplars));
         line.insert("gate".into(), Json::Obj(gate));
         line.insert("health".into(), Json::Str(tier_health.name().into()));
         line.insert("lanes".into(), Json::Arr(lanes));
@@ -360,8 +427,12 @@ impl SnapshotEngine {
     /// a meaningful dense sequence number.
     pub fn render_line(&mut self, inputs: &TickInputs) -> Json {
         let line = self.build_line(inputs);
+        self.scan_anomalies(&line, inputs.telemetry);
         if let Some(ep) = &self.endpoint {
             ep.publish(&line.dump());
+            if let Some(alert) = self.tracker.last_line() {
+                ep.publish_alert(alert);
+            }
         }
         self.seq += 1;
         line
@@ -370,9 +441,10 @@ impl SnapshotEngine {
 
 /// Keys every telemetry line carries (the CI schema check asserts
 /// these; `utilization` is additionally present under wall clocks).
-pub const REQUIRED_LINE_KEYS: [&str; 13] = [
+pub const REQUIRED_LINE_KEYS: [&str; 14] = [
     "alerts",
     "cache",
+    "exemplars",
     "gate",
     "health",
     "lanes",
@@ -427,9 +499,13 @@ impl WallSnapshotter {
         let period_ns = engine.interval_ns();
         let cores: usize = pools.iter().map(|p| p.n_workers()).sum();
         // Spawn when any output is live: the JSONL sink, alert
-        // evaluation, or the `--obs-port` endpoint (each works with no
-        // `--telemetry-log`).
-        if !engine.enabled() && !engine.alerts_active() && !engine.endpoint_active() {
+        // evaluation, the `--obs-port` endpoint, or anomaly detection
+        // (each works with no `--telemetry-log`).
+        if !engine.enabled()
+            && !engine.alerts_active()
+            && !engine.endpoint_active()
+            && !engine.anomaly_active()
+        {
             return WallSnapshotter {
                 stop: Arc::new(AtomicBool::new(true)),
                 handle: None,
@@ -724,6 +800,70 @@ mod tests {
         // lane0 and the tier both transitioned on this tick.
         assert_eq!(j.get("alerts").unwrap().as_usize(), Some(2));
         assert_eq!(j.get("health").unwrap().as_str(), Some("degraded"));
+    }
+
+    #[test]
+    fn exemplars_ride_the_line() {
+        let path = tmp("exemplars.jsonl");
+        let mut e = SnapshotEngine::create(&path, 100, "none").unwrap();
+        let tel = Telemetry::new("serve", 1);
+        tel.latency.record(1000);
+        tel.latency.note_exemplar(1000, "00000000000000010000000a");
+        e.emit(TickInputs {
+            t_ns: 100,
+            telemetry: &tel,
+            cache: CacheSnapshot::default(),
+            slo: slo_stub("met"),
+            slo_missed: false,
+            shedding_possible: false,
+            utilization: None,
+        })
+        .unwrap();
+        e.close().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = Json::parse(text.lines().next().unwrap()).unwrap();
+        let buckets = j.get("exemplars").unwrap().get("latency").unwrap().as_obj().unwrap();
+        assert_eq!(buckets.len(), 1);
+        let (hi, ex) = buckets.iter().next().unwrap();
+        assert_eq!(hi, "1023");
+        assert_eq!(ex.get("trace").unwrap().as_str(), Some("00000000000000010000000a"));
+        assert_eq!(ex.get("value_ns").unwrap().as_usize(), Some(1000));
+    }
+
+    #[test]
+    fn anomaly_monitor_keeps_ticks_live_and_raises_through_the_engine() {
+        use crate::obs::anomaly::AnomalyMonitor;
+        let alert_path = tmp("anomaly_engine.log");
+        let mut e = SnapshotEngine::from_options(None, 100, "none")
+            .unwrap()
+            .with_alerts(HealthTracker::to_file(&alert_path).unwrap())
+            .with_anomaly(AnomalyMonitor::from_sigma(3.0));
+        assert!(e.anomaly_active());
+        assert_eq!(e.next_tick_ns(), 100, "a monitor keeps the tick grid live");
+        let tel = Telemetry::new("serve", 1);
+        let inputs = |t_ns| TickInputs {
+            t_ns,
+            telemetry: &tel,
+            cache: CacheSnapshot::default(),
+            slo: slo_stub("met"),
+            slo_missed: false,
+            shedding_possible: false,
+            utilization: None,
+        };
+        // Warm the queue-depth detector flat, then spike it.
+        for t in 1..=10u64 {
+            e.emit(inputs(t * 100)).unwrap();
+        }
+        tel.queue_depth.set(10_000);
+        e.emit(inputs(1100)).unwrap();
+        let text = std::fs::read_to_string(&alert_path).unwrap();
+        assert!(
+            text.contains("scope=anomaly:queue_depth"),
+            "expected an anomaly alert, got: {text:?}"
+        );
+        assert!(text.contains("exemplar=none"), "no traces sampled -> no exemplar: {text:?}");
+        // The raised alert is counted into the registry for the next line.
+        assert!(tel.alerts.get() >= 1);
     }
 
     #[test]

@@ -71,9 +71,9 @@ use crate::error::{Error, Result};
 use crate::image::synth::generate;
 use crate::image::ImageF32;
 use crate::obs::{
-    content_digest, modeled_stage_durs, request_spans, FaultManager, HealthTracker, ObsEndpoint,
-    OverloadPolicy, ShedDecision, SnapshotEngine, Telemetry, TickInputs, TraceCollector, TraceId,
-    WallSnapshotter,
+    content_digest, modeled_stage_durs, request_spans, AnomalyMonitor, FaultManager,
+    HealthTracker, ObsEndpoint, OverloadPolicy, ShedDecision, SnapshotEngine, Telemetry,
+    TickInputs, TraceCollector, TraceId, TraceSampler, WallSnapshotter,
 };
 use crate::scheduler::PoolStats;
 use crate::service::batcher::{Batcher, FormedBatch};
@@ -196,6 +196,16 @@ pub struct ServeOptions {
     /// and a span tree (root / coalesce / queue / service / cache /
     /// stages) written at the end of the run.
     pub trace: Option<Arc<TraceCollector>>,
+    /// Tail-based sampling policy (`--trace-sample`): decided per
+    /// request *after* completion, when the end-to-end latency is
+    /// known, it gates both the span tree entering the trace sink and
+    /// the exemplar entering the latency histogram — so every exported
+    /// exemplar resolves to a retained trace. The default keeps
+    /// everything.
+    pub sampler: TraceSampler,
+    /// Streaming anomaly detection over the telemetry tick grid
+    /// (`--anomaly-sigma`, standard deviations; 0 disables).
+    pub anomaly_sigma: f64,
     /// Live snapshot endpoint (`--obs-port`), attached by the CLI so
     /// the run's snapshot engine publishes every line it renders.
     pub obs_endpoint: Option<Arc<ObsEndpoint>>,
@@ -203,12 +213,13 @@ pub struct ServeOptions {
 
 impl ServeOptions {
     pub fn from_config(cfg: &RunConfig) -> ServeOptions {
+        let slo_p99_ns = (cfg.slo_p99_ms.max(0.0) * 1e6) as u64;
         ServeOptions {
             lanes: cfg.lanes.max(1),
             queue_depth: cfg.queue_depth.max(1),
             batch_window_ns: cfg.batch_window_us.saturating_mul(1_000),
             max_batch: cfg.batch_max.max(1),
-            slo_p99_ns: (cfg.slo_p99_ms.max(0.0) * 1e6) as u64,
+            slo_p99_ns,
             max_pixels: cfg.max_pixels,
             execute: true,
             batch_overhead_ns: DEFAULT_BATCH_OVERHEAD_NS,
@@ -231,6 +242,11 @@ impl ServeOptions {
             slo_window: cfg.slo_window.max(1),
             alert_log: cfg.alert_log.clone(),
             trace: TraceCollector::from_spec(&cfg.trace_log),
+            // `RunConfig::validate` rejects malformed specs; the
+            // keep-everything fallback only covers unvalidated configs.
+            sampler: TraceSampler::from_spec(&cfg.trace_sample, slo_p99_ns)
+                .unwrap_or_else(|_| TraceSampler::all()),
+            anomaly_sigma: cfg.anomaly_sigma,
             obs_endpoint: None,
         }
     }
@@ -678,9 +694,18 @@ fn push_stages(
 /// stage walls; otherwise stage durations are modeled as an even split
 /// of the service span minus the cache consult, so virtual replays
 /// trace byte-identically.
+///
+/// This is also where the tail-sampling verdict lands: the request is
+/// complete, so its end-to-end latency is known, and
+/// [`ServeOptions::sampler`] decides whether the span tree is kept.
+/// Kept requests additionally pin their trace id + latency as the
+/// exemplar of the latency histogram bucket they land in — dropped
+/// ones never do, so every exemplar a snapshot exports resolves to a
+/// retained trace.
 #[allow(clippy::too_many_arguments)]
 fn record_batch_spans(
     opts: &ServeOptions,
+    telemetry: &Telemetry,
     lane: usize,
     batch: &FormedBatch,
     dispatch_ns: u64,
@@ -692,8 +717,13 @@ fn record_batch_spans(
         return;
     };
     for (i, req) in batch.requests.iter().enumerate() {
+        let latency_ns = complete_ns.saturating_sub(req.arrival_ns);
+        if !opts.sampler.keep(latency_ns, req.id) {
+            continue;
+        }
         let digest = content_digest(&req.scene.spec(), req.width, req.height);
         let id = TraceId::derive(digest, req.id);
+        telemetry.latency.note_exemplar(latency_ns, id.as_str());
         let rec = recs.get(i);
         let cache = match rec.map(|r| r.cache) {
             Some(Some(outcome)) => Some((outcome, opts.cache_lookup_ns(req.pixels()))),
@@ -970,6 +1000,7 @@ fn serve_virtual(label: &str, trace: &Trace, opts: &ServeOptions) -> Result<Serv
         opts.overload_policy.name(),
     )?
     .with_alerts(HealthTracker::from_spec(&opts.alert_log)?)
+    .with_anomaly(AnomalyMonitor::from_sigma(opts.anomaly_sigma))
     .with_endpoint(opts.obs_endpoint.clone());
     let mut completions: BinaryHeap<Reverse<Completion>> = BinaryHeap::new();
 
@@ -1015,7 +1046,7 @@ fn serve_virtual(label: &str, trace: &Trace, opts: &ServeOptions) -> Result<Serv
                 Some(&telemetry),
                 false,
             )?;
-            record_batch_spans(opts, idx, &batch, now, complete_ns, &recs, false);
+            record_batch_spans(opts, &telemetry, idx, &batch, now, complete_ns, &recs, false);
         }
 
         // Next event: arrival, batch-window deadline, or (if work is
@@ -1084,7 +1115,7 @@ fn serve_virtual(label: &str, trace: &Trace, opts: &ServeOptions) -> Result<Serv
         fault.active(),
     )?;
     debug_assert!(completions.is_empty());
-    if snap.enabled() || snap.alerts_active() || snap.endpoint_active() {
+    if snap.enabled() || snap.alerts_active() || snap.endpoint_active() || snap.anomaly_active() {
         snap.emit(TickInputs {
             t_ns: end_ns,
             telemetry: &telemetry,
@@ -1180,7 +1211,16 @@ fn wall_lane(
         };
         let complete_ns = clock.now_ns();
         stats.record_batch(&batch, dispatch_ns, complete_ns);
-        record_batch_spans(opts, lane_id, &batch, dispatch_ns, complete_ns, &recs, opts.execute);
+        record_batch_spans(
+            opts,
+            telemetry,
+            lane_id,
+            &batch,
+            dispatch_ns,
+            complete_ns,
+            &recs,
+            opts.execute,
+        );
         tl.busy_ns.add(complete_ns.saturating_sub(dispatch_ns));
         tl.completed.add(n);
         tl.inflight.sub(n);
@@ -1229,6 +1269,7 @@ fn serve_wall(label: &str, trace: &Trace, opts: &ServeOptions) -> Result<ServeRe
         opts.overload_policy.name(),
     )?
     .with_alerts(HealthTracker::from_spec(&opts.alert_log)?)
+    .with_anomaly(AnomalyMonitor::from_sigma(opts.anomaly_sigma))
     .with_endpoint(opts.obs_endpoint.clone());
     let clock = WallClock::start();
     let snapshotter = {

@@ -20,7 +20,9 @@ use crate::config::RunConfig;
 use crate::coordinator::Detector;
 use crate::error::{Error, Result};
 use crate::image::EdgeMap;
-use crate::obs::{ObsEndpoint, SnapshotEngine, Telemetry, WallSnapshotter};
+use crate::obs::{
+    AnomalyMonitor, HealthTracker, ObsEndpoint, SnapshotEngine, Telemetry, WallSnapshotter,
+};
 use crate::patterns::pipeline::{pipeline_stages, DynStage};
 use crate::service::{LatencyStats, SloWindow, DEFAULT_SLO_WINDOW};
 use crate::stream::delta::{DeltaGate, DeltaMode};
@@ -108,6 +110,12 @@ pub struct StreamOptions {
     /// Rolling frame-SLO window size (`--slo-window`): the last N
     /// emitted frames' latencies vs. the frame budget.
     pub slo_window: usize,
+    /// Health/anomaly alert sink spec (`--alert-log`): "" disables,
+    /// `stderr` streams, anything else is a file path.
+    pub alert_log: String,
+    /// Streaming anomaly detection over the telemetry tick grid
+    /// (`--anomaly-sigma`, standard deviations; 0 disables).
+    pub anomaly_sigma: f64,
     /// Live snapshot endpoint (`--obs-port`): every telemetry line the
     /// stream run builds is published as the endpoint's current line.
     /// `None` (the default — the CLI attaches it) leaves the tier
@@ -139,6 +147,8 @@ impl StreamOptions {
             },
             telemetry_interval_ns: (cfg.telemetry_interval_ms.max(0.0) * 1e6) as u64,
             slo_window: cfg.slo_window.max(1),
+            alert_log: cfg.alert_log.clone(),
+            anomaly_sigma: cfg.anomaly_sigma,
             obs_endpoint: None,
         }
     }
@@ -157,6 +167,8 @@ impl Default for StreamOptions {
             telemetry_log: None,
             telemetry_interval_ns: 100_000_000,
             slo_window: DEFAULT_SLO_WINDOW,
+            alert_log: String::new(),
+            anomaly_sigma: 0.0,
             obs_endpoint: None,
         }
     }
@@ -258,6 +270,8 @@ pub fn run_stream(
         opts.telemetry_interval_ns,
         opts.drop_policy.name(),
     )?
+    .with_alerts(HealthTracker::from_spec(&opts.alert_log)?)
+    .with_anomaly(AnomalyMonitor::from_sigma(opts.anomaly_sigma))
     .with_endpoint(opts.obs_endpoint.clone());
     // Late frames can only be shed (dropped/degraded) under a real-time
     // budget with a policy that acts on them.
@@ -697,6 +711,13 @@ mod tests {
         assert!(opts.telemetry_log.is_none(), "telemetry log is opt-in");
         assert_eq!(opts.telemetry_interval_ns, 2_000_000);
         assert_eq!(opts.slo_window, 16);
+        assert!(opts.alert_log.is_empty(), "alerting is opt-in");
+        assert_eq!(opts.anomaly_sigma, 0.0, "anomaly detection is opt-in");
+        cfg.set("anomaly-sigma", "4").unwrap();
+        cfg.set("alert-log", "stderr").unwrap();
+        let obs = StreamOptions::from_config(&cfg);
+        assert_eq!(obs.anomaly_sigma, 4.0);
+        assert_eq!(obs.alert_log, "stderr");
         cfg.set("telemetry-log", "/tmp/stream_t.jsonl").unwrap();
         assert_eq!(
             StreamOptions::from_config(&cfg).telemetry_log.as_deref(),

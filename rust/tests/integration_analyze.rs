@@ -1,0 +1,368 @@
+//! Integration: the trace-analytics plane.
+//!
+//! Covers PR 10's guarantees end to end: tail-based sampling
+//! (`--trace-sample slow:<ms>`) keeps exactly the traces whose
+//! virtual-clock latency clears the bar, and two replays write
+//! byte-identical sampled logs — for the in-process serve tier and a
+//! real 2-worker cluster alike. Every histogram exemplar the
+//! telemetry stream exports resolves to a trace retained in the
+//! sampled log, the `cannyd analyze` subcommand aggregates span logs
+//! and the committed bench baselines (`--against` deltas included),
+//! and an injected latency excursion raises an anomaly alert naming a
+//! retained exemplar.
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use canny_par::cluster::{run_cluster, ClusterOptions, WORKER_EXE_ENV};
+use canny_par::config::RunConfig;
+use canny_par::image::synth::Scene;
+use canny_par::obs::AnomalyMonitor;
+use canny_par::service::{serve, Request, RequestKind, ServeOptions, Trace};
+use canny_par::util::json::Json;
+
+/// Point the supervisor at the freshly built `cannyd` binary (the test
+/// process is the libtest harness, not `cannyd`).
+fn use_test_binary() {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| std::env::set_var(WORKER_EXE_ENV, env!("CARGO_BIN_EXE_cannyd")));
+}
+
+fn tmp_path(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("canny_analyze_itests");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("{}_{name}", std::process::id()))
+}
+
+/// A mixed-kind trace (full / front-only / re-threshold per content),
+/// so latencies spread across kinds and sampling is non-trivial.
+fn mixed_trace(contents: u64) -> Trace {
+    let mut requests = Vec::new();
+    let mut id = 0u64;
+    let mut push = |scene: Scene, kind: RequestKind| {
+        requests.push(Request {
+            id,
+            arrival_ns: id * 50_000,
+            scene,
+            width: 96,
+            height: 64,
+            kind,
+        });
+        id += 1;
+    };
+    for seed in 0..contents {
+        push(Scene::Shapes { seed }, RequestKind::Full);
+        push(Scene::Shapes { seed }, RequestKind::FrontOnly);
+        push(Scene::Shapes { seed }, RequestKind::ReThreshold { lo: 0.03, hi: 0.25 });
+    }
+    Trace { requests }
+}
+
+fn read_lines(path: &PathBuf) -> Vec<Json> {
+    let text = std::fs::read_to_string(path).unwrap();
+    text.lines().map(|l| Json::parse(l).unwrap()).collect()
+}
+
+/// `(trace id, root dur_ns)` per trace in a span log — the root span's
+/// duration is exactly the end-to-end latency the sampler judged.
+fn root_latencies(spans: &[Json]) -> Vec<(String, u64)> {
+    spans
+        .iter()
+        .filter(|s| s.get("id").unwrap().as_f64().unwrap() as u64 == 1)
+        .map(|s| {
+            (
+                s.get("trace").unwrap().as_str().unwrap().to_string(),
+                s.get("dur_ns").unwrap().as_f64().unwrap() as u64,
+            )
+        })
+        .collect()
+}
+
+/// All exemplar trace ids on a telemetry line — the top-level
+/// `exemplars` section plus any per-worker sections of a merged line.
+fn exemplar_ids(line: &Json) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut scoop = |j: &Json| {
+        let Some(sections) = j.get("exemplars").and_then(Json::as_obj) else { return };
+        for buckets in sections.values() {
+            let Some(buckets) = buckets.as_obj() else { continue };
+            for ex in buckets.values() {
+                if let Some(t) = ex.get("trace").and_then(Json::as_str) {
+                    out.push(t.to_string());
+                }
+            }
+        }
+    };
+    scoop(line);
+    if let Some(workers) = line.get("workers").and_then(Json::as_arr) {
+        for w in workers {
+            scoop(w);
+        }
+    }
+    out
+}
+
+fn serve_cfg(trace_log: &str, telemetry_log: Option<&str>, sample: &str) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.set("engine", "serial").unwrap();
+    cfg.set("workers", "1").unwrap();
+    cfg.set("lanes", "2").unwrap();
+    cfg.set("cache-mb", "8").unwrap();
+    cfg.set("trace-log", trace_log).unwrap();
+    cfg.set("trace-sample", sample).unwrap();
+    if let Some(t) = telemetry_log {
+        cfg.set("telemetry-log", t).unwrap();
+    }
+    cfg.validate().unwrap();
+    cfg
+}
+
+fn run_serve(trace_log: &PathBuf, telemetry_log: Option<&PathBuf>, sample: &str) {
+    let cfg = serve_cfg(
+        &trace_log.display().to_string(),
+        telemetry_log.map(|p| p.display().to_string()).as_deref(),
+        sample,
+    );
+    serve("itest-analyze", &mixed_trace(4), &ServeOptions::from_config(&cfg)).unwrap();
+}
+
+/// Pick a `slow:<ms>` bar from a keep-everything reference run: the
+/// maximum observed latency, converted exactly the way
+/// `TraceSampler::from_spec` converts it back, so the expected kept
+/// set is computed with bit-identical arithmetic.
+fn slow_bar(latencies: &[(String, u64)]) -> (String, BTreeSet<String>) {
+    let max = latencies.iter().map(|(_, d)| *d).max().unwrap();
+    let ms = format!("{}", max as f64 / 1e6);
+    let bar_ns = (ms.parse::<f64>().unwrap() * 1e6) as u64;
+    let kept: BTreeSet<String> =
+        latencies.iter().filter(|(_, d)| *d >= bar_ns).map(|(t, _)| t.clone()).collect();
+    (ms, kept)
+}
+
+#[test]
+fn sampled_serve_replays_are_byte_identical_and_exemplars_resolve() {
+    // Reference run: keep everything, learn the latency distribution.
+    let all_log = tmp_path("serve_all.jsonl");
+    run_serve(&all_log, None, "all");
+    let latencies = root_latencies(&read_lines(&all_log));
+    assert_eq!(latencies.len(), 12, "one root span per request");
+    let spread: BTreeSet<u64> = latencies.iter().map(|(_, d)| *d).collect();
+    assert!(spread.len() > 1, "mixed kinds must spread latencies: {spread:?}");
+    let (ms, expected) = slow_bar(&latencies);
+    assert!(!expected.is_empty());
+    assert!(expected.len() < latencies.len(), "the bar must actually drop traces");
+
+    // Two sampled replays: byte-identical trace AND telemetry logs.
+    let (log_a, tel_a) = (tmp_path("serve_slow_a.jsonl"), tmp_path("serve_slow_a_tel.jsonl"));
+    let (log_b, tel_b) = (tmp_path("serve_slow_b.jsonl"), tmp_path("serve_slow_b_tel.jsonl"));
+    let sample = format!("slow:{ms}");
+    run_serve(&log_a, Some(&tel_a), &sample);
+    run_serve(&log_b, Some(&tel_b), &sample);
+    let bytes_a = std::fs::read(&log_a).unwrap();
+    assert!(!bytes_a.is_empty());
+    assert_eq!(bytes_a, std::fs::read(&log_b).unwrap(), "sampled trace replays must match");
+    assert_eq!(
+        std::fs::read(&tel_a).unwrap(),
+        std::fs::read(&tel_b).unwrap(),
+        "sampled telemetry replays must match"
+    );
+
+    // The sampler kept exactly the traces above the bar, whole trees.
+    let spans = read_lines(&log_a);
+    let kept: BTreeSet<String> = spans
+        .iter()
+        .map(|s| s.get("trace").unwrap().as_str().unwrap().to_string())
+        .collect();
+    assert_eq!(kept, expected, "slow:{ms} must keep exactly the traces above the bar");
+    assert_eq!(root_latencies(&spans).len(), expected.len(), "kept trees keep their roots");
+
+    // Every exported exemplar resolves to a retained trace.
+    let tel_lines = read_lines(&tel_a);
+    let exemplars: Vec<String> =
+        tel_lines.iter().flat_map(|l| exemplar_ids(l)).collect();
+    assert!(!exemplars.is_empty(), "kept traces must surface as exemplars");
+    for id in &exemplars {
+        assert!(kept.contains(id), "exemplar {id} does not resolve to a retained trace");
+    }
+    for f in [&all_log, &log_a, &log_b, &tel_a, &tel_b] {
+        std::fs::remove_file(f).ok();
+    }
+}
+
+fn cluster_cfg(trace_log: &PathBuf, telemetry_log: &PathBuf, sample: &str) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.set("engine", "serial").unwrap();
+    cfg.set("workers", "2").unwrap();
+    cfg.set("cache-mb", "8").unwrap();
+    cfg.set("trace-log", &trace_log.display().to_string()).unwrap();
+    cfg.set("telemetry-log", &telemetry_log.display().to_string()).unwrap();
+    cfg.set("trace-sample", sample).unwrap();
+    cfg.set("worker-telemetry-ms", "0.2").unwrap();
+    cfg.validate().unwrap();
+    cfg
+}
+
+fn run_cluster_sampled(trace_log: &PathBuf, telemetry_log: &PathBuf, sample: &str) {
+    let cfg = cluster_cfg(trace_log, telemetry_log, sample);
+    let out =
+        run_cluster("itest-analyze-cluster", &mixed_trace(4), &ClusterOptions::from_config(&cfg))
+            .unwrap();
+    assert_eq!(out.report.completed, 12);
+}
+
+#[test]
+fn sampled_cluster_replays_are_byte_identical_and_exemplars_resolve() {
+    use_test_binary();
+    // Reference run for the bar, as in the serve test.
+    let (all_log, all_tel) = (tmp_path("cl_all.jsonl"), tmp_path("cl_all_tel.jsonl"));
+    run_cluster_sampled(&all_log, &all_tel, "all");
+    let latencies = root_latencies(&read_lines(&all_log));
+    assert_eq!(latencies.len(), 12);
+    let (ms, expected) = slow_bar(&latencies);
+    assert!(!expected.is_empty() && expected.len() < latencies.len());
+
+    let (ta, sa) = (tmp_path("cl_slow_a.jsonl"), tmp_path("cl_slow_a_tel.jsonl"));
+    let (tb, sb) = (tmp_path("cl_slow_b.jsonl"), tmp_path("cl_slow_b_tel.jsonl"));
+    let sample = format!("slow:{ms}");
+    run_cluster_sampled(&ta, &sa, &sample);
+    run_cluster_sampled(&tb, &sb, &sample);
+    let trace_bytes = std::fs::read(&ta).unwrap();
+    assert!(!trace_bytes.is_empty());
+    assert_eq!(
+        trace_bytes,
+        std::fs::read(&tb).unwrap(),
+        "sampled cluster trace replays must match"
+    );
+    assert_eq!(
+        std::fs::read(&sa).unwrap(),
+        std::fs::read(&sb).unwrap(),
+        "sampled merged telemetry replays must match"
+    );
+
+    // The front door's verdict governed whole trees: kept traces carry
+    // their worker service subtree (id 4 under the wire span), dropped
+    // ones vanish entirely — never a torn tree.
+    let spans = read_lines(&ta);
+    let trace_of = |s: &Json| s.get("trace").unwrap().as_str().unwrap().to_string();
+    let id_of = |s: &Json| s.get("id").unwrap().as_f64().unwrap() as u64;
+    let kept: BTreeSet<String> = spans.iter().map(|s| trace_of(s)).collect();
+    assert_eq!(kept, expected, "slow:{ms} must keep exactly the traces above the bar");
+    for t in &kept {
+        let tree: Vec<&Json> = spans.iter().filter(|s| trace_of(s) == *t).collect();
+        assert!(tree.iter().any(|s| id_of(s) == 1), "kept trace {t} lost its root");
+        let service = tree.iter().find(|s| id_of(s) == 4).expect("worker service span");
+        assert_eq!(service.get("parent").unwrap().as_f64().unwrap() as u64, 3);
+    }
+
+    // Exemplars — front door and worker sections alike — resolve to
+    // retained traces (workers note them only on guaranteed-keep
+    // verdicts).
+    let exemplars: Vec<String> =
+        read_lines(&sa).iter().flat_map(exemplar_ids).collect();
+    assert!(!exemplars.is_empty(), "kept traces must surface as worker exemplars");
+    for id in &exemplars {
+        assert!(kept.contains(id), "cluster exemplar {id} not in the retained trace set");
+    }
+    for f in [&all_log, &all_tel, &ta, &sa, &tb, &sb] {
+        std::fs::remove_file(f).ok();
+    }
+}
+
+fn cannyd_analyze(args: &[&str]) -> Json {
+    let out = Command::new(env!("CARGO_BIN_EXE_cannyd"))
+        .arg("analyze")
+        .args(args)
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "analyze {args:?} failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    Json::parse(&String::from_utf8(out.stdout).unwrap()).unwrap()
+}
+
+#[test]
+fn analyze_cli_aggregates_span_logs_and_diffs_baselines() {
+    let log = tmp_path("analyze_serve.jsonl");
+    run_serve(&log, None, "all");
+    let log_s = log.display().to_string();
+    let report = cannyd_analyze(&[&log_s]);
+    assert_eq!(report.get("kind").unwrap().as_str(), Some("spans"));
+    assert_eq!(report.get("traces").unwrap().as_usize(), Some(12));
+    let agg = report.get("aggregates").unwrap().as_obj().unwrap();
+    for name in ["request", "service", "queue_wait"] {
+        let a = agg.get(name).unwrap_or_else(|| panic!("aggregates missing `{name}`"));
+        assert!(a.get("count").unwrap().as_usize().unwrap() >= 12);
+        assert!(a.get("p99_ns").unwrap().as_f64().unwrap() >= a.get("p50_ns").unwrap().as_f64().unwrap());
+    }
+    assert!(agg.keys().any(|k| k.starts_with("stage:")), "stage spans must aggregate");
+    let paths = report.get("critical_paths").unwrap().as_obj().unwrap();
+    assert!(!paths.is_empty());
+    let shared: usize = paths.values().map(|n| n.as_usize().unwrap()).sum();
+    assert_eq!(shared, 12, "every trace contributes one critical path");
+    assert!(paths.keys().all(|p| p.starts_with("request>")), "{paths:?}");
+
+    // A self-diff is all-zero deltas — the determinism statement again,
+    // through the analyzer this time.
+    let diff = cannyd_analyze(&[&log_s, "--against", &log_s]);
+    let deltas = diff.get("deltas").unwrap().as_obj().unwrap();
+    assert!(!deltas.is_empty());
+    for (name, d) in deltas {
+        assert_eq!(d.get("delta_p50_pct").unwrap().as_f64(), Some(0.0), "{name}");
+        assert_eq!(d.get("delta_p99_pct").unwrap().as_f64(), Some(0.0), "{name}");
+    }
+
+    // The committed bench baselines analyze too, so fresh runs can be
+    // diffed against the seed numbers with the same subcommand.
+    let bench = Path::new(env!("CARGO_MANIFEST_DIR")).join("benches/baselines/BENCH_serve.json");
+    let bench_s = bench.display().to_string();
+    let base = cannyd_analyze(&[&bench_s, "--against", &bench_s]);
+    assert_eq!(base.get("kind").unwrap().as_str(), Some("bench"));
+    let d = base.get("deltas").unwrap().get("serve").expect("serve delta");
+    assert_eq!(d.get("delta_p99_pct").unwrap().as_f64(), Some(0.0));
+    assert!(d.get("base_p99_ns").unwrap().as_f64().unwrap() > 0.0);
+    std::fs::remove_file(&log).ok();
+}
+
+#[test]
+fn injected_latency_excursion_alerts_with_a_retained_exemplar() {
+    // A real sampled run provides the steady-state line and the
+    // retained trace set.
+    let (log, tel) = (tmp_path("anomaly.jsonl"), tmp_path("anomaly_tel.jsonl"));
+    run_serve(&log, Some(&tel), "slow:0");
+    let kept: BTreeSet<String> = read_lines(&log)
+        .iter()
+        .map(|s| s.get("trace").unwrap().as_str().unwrap().to_string())
+        .collect();
+    let line = read_lines(&tel).into_iter().last().unwrap();
+    assert!(!exemplar_ids(&line).is_empty(), "the final line must export exemplars");
+
+    // Feed the same line until every detector is warm (flat series stay
+    // quiet), then inject a 50x latency excursion.
+    let mut monitor = AnomalyMonitor::from_sigma(3.0).unwrap();
+    for _ in 0..12 {
+        assert!(monitor.observe_line(&line).is_empty(), "steady state must stay quiet");
+    }
+    let mean = line.get("latency_ns").unwrap().get("mean").unwrap().as_f64().unwrap();
+    assert!(mean > 0.0);
+    let mut obj = line.as_obj().unwrap().clone();
+    let mut lat = obj.get("latency_ns").unwrap().as_obj().unwrap().clone();
+    lat.insert("mean".to_string(), Json::Num(mean * 50.0));
+    obj.insert("latency_ns".to_string(), Json::Obj(lat));
+    let alerts = monitor.observe_line(&Json::Obj(obj));
+    let alert = alerts
+        .iter()
+        .find(|a| a.series == "latency_mean")
+        .expect("the excursion must raise a latency_mean anomaly");
+    assert!(alert.z >= 3.0);
+    assert!(
+        kept.contains(&alert.exemplar),
+        "alert exemplar {} must resolve to a retained trace",
+        alert.exemplar
+    );
+    assert!(alert.line().contains("scope=anomaly:latency_mean"));
+    std::fs::remove_file(&log).ok();
+    std::fs::remove_file(&tel).ok();
+}

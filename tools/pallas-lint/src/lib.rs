@@ -47,7 +47,7 @@ pub const LOCK_SCOPED_FILES: &[&str] = &["cache/shard.rs", "service/server.rs"];
 /// (module-doc file, report/snapshot builder files) pairs: keys the
 /// builders emit must be documented in the module doc's `json` blocks.
 pub const SCHEMA_PAIRS: &[(&str, &[&str])] = &[
-    ("obs/mod.rs", &["obs/snapshot.rs", "obs/trace.rs", "obs/merge.rs"]),
+    ("obs/mod.rs", &["obs/snapshot.rs", "obs/trace.rs", "obs/merge.rs", "obs/analyze.rs"]),
     ("service/mod.rs", &["service/slo.rs", "service/calibrate.rs", "cache/stats.rs"]),
     ("stream/mod.rs", &["stream/report.rs"]),
     ("cluster/mod.rs", &["cluster/proto.rs", "cluster/report.rs"]),
